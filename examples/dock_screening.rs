@@ -1,0 +1,263 @@
+//! End-to-end driver: the full three-layer stack on a real (small)
+//! docking screen.
+//!
+//! All layers compose here:
+//!   L1/L2 — the Pallas docking kernel inside the JAX model, AOT-lowered
+//!           to `artifacts/dock_score.hlo.txt` by `make artifacts`;
+//!   runtime — Rust loads the HLO via PJRT and scores every compound
+//!           batch (Python is never invoked);
+//!   L3   — the collective-IO machinery moves real bytes: the receptor
+//!           grid is broadcast to the IFS replicas over a spanning tree,
+//!           per-batch ligand files are staged, task outputs are committed
+//!           LFS→IFS staging, the threaded collector archives them into
+//!           indexed archives on the GFS directory, and stage 2 re-reads
+//!           the archives with parallel random access to select the best
+//!           compounds.
+//!
+//! The PJRT executable lives on a dedicated scorer thread (the xla crate's
+//! client is not Send) fed through a request channel — the same
+//! leader/worker shape the simulated dispatcher models.
+//!
+//! A baseline pass writes one file per task straight into a single GFS
+//! directory (the paper's GPFS pattern) for the headline comparison:
+//! file-count reduction and wall-clock. Results are recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `make artifacts && cargo run --release --example dock_screening`
+//! (env: DOCK_TASKS=256 DOCK_NODES=16 to rescale)
+
+use cio::cio::archive::{Compression, Reader};
+use cio::cio::collector::Policy;
+use cio::cio::distributor::TreeShape;
+use cio::cio::local::{commit_output, distribute_to_ifs, LocalCollector, LocalLayout};
+use cio::runtime::{artifacts_dir, score_reference, ArtifactMeta, ScoreModel};
+use cio::util::rng::Rng;
+use cio::util::table::Table;
+use cio::util::units::SimTime;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A scoring request: ligand batch in, scores out through the reply
+/// channel. The scorer thread owns the (non-Send) PJRT executable.
+struct ScoreRequest {
+    ligands: Vec<f32>,
+    grid: Vec<f32>,
+    weights: Vec<f32>,
+    reply: mpsc::Sender<anyhow::Result<Vec<f32>>>,
+}
+
+fn spawn_scorer() -> (mpsc::Sender<ScoreRequest>, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let (tx, rx) = mpsc::channel::<ScoreRequest>();
+    let handle = std::thread::spawn(move || -> anyhow::Result<()> {
+        let model = ScoreModel::load_default()?; // created on this thread
+        for req in rx {
+            let result = model.score_batch(&req.ligands, &req.grid, &req.weights);
+            let _ = req.reply.send(result);
+        }
+        Ok(())
+    });
+    (tx, handle)
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    cio::util::logging::init();
+    let tasks = env_usize("DOCK_TASKS", 192);
+    let nodes = env_usize("DOCK_NODES", 16) as u32;
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+
+    // Shape metadata (the artifact itself loads on the scorer thread).
+    let meta = ArtifactMeta::load(&artifacts_dir().join("dock_score.meta"))
+        .map_err(|e| anyhow::anyhow!("{e}\nrun `make artifacts` first"))?;
+    println!("artifact shapes: batch={} atoms={} features={}", meta.batch, meta.atoms, meta.features);
+    let (scorer, scorer_handle) = spawn_scorer();
+
+    // --- Build the storage hierarchy and the compound library on "GFS".
+    let root = std::env::temp_dir().join(format!("cio-dock-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let layout = LocalLayout::create(&root, nodes, 8)?;
+    let mut rng = Rng::new(42);
+
+    // Receptor grid + weights: the read-many dataset (broadcast).
+    let grid: Vec<f32> =
+        (0..meta.atoms * meta.features).map(|_| rng.f64_range(-1.0, 1.0) as f32).collect();
+    let weights: Vec<f32> = (0..meta.features).map(|_| rng.f64_range(-1.0, 1.0) as f32).collect();
+    write_f32s(&layout.gfs().join("receptor.grid"), &grid)?;
+    write_f32s(&layout.gfs().join("receptor.weights"), &weights)?;
+
+    // Ligand batches: read-few, one file per task.
+    for t in 0..tasks {
+        let lig: Vec<f32> = (0..meta.batch * meta.atoms * 4)
+            .map(|_| rng.f64_range(-3.0, 3.0) as f32)
+            .collect();
+        write_f32s(&layout.gfs().join(format!("ligands-{t:04}.bin")), &lig)?;
+    }
+
+    // --- Input distribution: broadcast the read-many grid to every IFS
+    // over the spanning tree (Chirp-replicate style).
+    let copies = distribute_to_ifs(&layout, "receptor.grid", TreeShape::Binomial)?;
+    distribute_to_ifs(&layout, "receptor.weights", TreeShape::Binomial)?;
+    println!("broadcast receptor grid to {} IFS replicas ({copies} copies)", layout.ifs_groups());
+
+    // --- CIO pass: score + commit + collector archives.
+    let policy =
+        Policy { max_delay: SimTime::from_secs(2), max_data: 8 * 1024, min_free_space: 0 };
+    let collector = LocalCollector::start(&layout, policy, Compression::Deflate);
+    let t0 = Instant::now();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let layout = &layout;
+            let next = &next;
+            let weights = &weights;
+            let meta = &meta;
+            let scorer = scorer.clone();
+            scope.spawn(move || {
+                loop {
+                    let t = next.fetch_add(1, Ordering::Relaxed);
+                    if t >= tasks {
+                        return;
+                    }
+                    let node = (t % nodes as usize) as u32;
+                    // Read staged inputs: grid from the node's IFS
+                    // replica, ligands from GFS (read-few).
+                    let g = layout.ifs_data(layout.group_of(node)).join("receptor.grid");
+                    let grid_local = read_f32s(&g).expect("staged grid");
+                    let lig = read_f32s(&layout.gfs().join(format!("ligands-{t:04}.bin")))
+                        .expect("ligand batch");
+                    // L1/L2 compute via the PJRT scorer thread.
+                    let (reply_tx, reply_rx) = mpsc::channel();
+                    scorer
+                        .send(ScoreRequest {
+                            ligands: lig.clone(),
+                            grid: grid_local.clone(),
+                            weights: weights.clone(),
+                            reply: reply_tx,
+                        })
+                        .expect("scorer alive");
+                    let scores = reply_rx.recv().expect("scorer reply").expect("pjrt");
+                    // Spot-check against the pure-Rust oracle.
+                    if w == 0 && t < 4 {
+                        let want = score_reference(meta, &lig, &grid_local, weights);
+                        for (a, b) in scores.iter().zip(&want) {
+                            assert!((a - b).abs() < 1e-3 * b.abs().max(1.0), "{a} vs {b}");
+                        }
+                    }
+                    // Write output to LFS, then commit LFS -> IFS staging.
+                    let name = format!("scores-{t:04}.bin");
+                    write_f32s(&layout.lfs(node).join(&name), &scores).expect("lfs write");
+                    commit_output(layout, node, &name).expect("commit");
+                }
+            });
+        }
+    });
+    let compute_elapsed = t0.elapsed();
+    let stats = collector.finish()?;
+    let cio_elapsed = t0.elapsed();
+    assert_eq!(stats.files, tasks as u64, "all outputs archived");
+
+    // --- Stage 2: parallel random-access re-read of the archives, select
+    // the globally best pose.
+    let t2 = Instant::now();
+    let best = Mutex::new((f32::INFINITY, String::new()));
+    let mut archives = Vec::new();
+    for entry in std::fs::read_dir(layout.gfs())? {
+        let p = entry?.path();
+        if p.extension().is_some_and(|e| e == "cioar") {
+            archives.push(p);
+        }
+    }
+    let mut members_seen = 0usize;
+    for a in &archives {
+        let r = Reader::open(a)?;
+        members_seen += r.len();
+        r.extract_parallel(workers, |name, bytes| {
+            let scores = bytes_to_f32s(bytes);
+            let (min_idx, min_val) = scores
+                .iter()
+                .enumerate()
+                .fold((0usize, f32::INFINITY), |acc, (i, &v)| if v < acc.1 { (i, v) } else { acc });
+            let mut b = best.lock().unwrap();
+            if min_val < b.0 {
+                *b = (min_val, format!("{name}#pose{min_idx}"));
+            }
+        })?;
+    }
+    let stage2_elapsed = t2.elapsed();
+    let best = best.into_inner().unwrap();
+    assert_eq!(members_seen, tasks);
+
+    // --- Baseline pass: per-task files straight into one GFS directory.
+    let t3 = Instant::now();
+    let base_dir = layout.gfs().join("baseline-outputs");
+    std::fs::create_dir_all(&base_dir)?;
+    for t in 0..tasks {
+        let lig = read_f32s(&layout.gfs().join(format!("ligands-{t:04}.bin")))?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        scorer.send(ScoreRequest {
+            ligands: lig,
+            grid: grid.clone(),
+            weights: weights.clone(),
+            reply: reply_tx,
+        })?;
+        let scores = reply_rx.recv()??;
+        write_f32s(&base_dir.join(format!("scores-{t:04}.bin")), &scores)?;
+    }
+    let baseline_elapsed = t3.elapsed();
+    let baseline_files = std::fs::read_dir(&base_dir)?.count();
+    drop(scorer);
+    scorer_handle.join().expect("scorer thread")?;
+
+    // --- Report.
+    let mut t = Table::new(vec!["metric", "value"]).title(format!(
+        "end-to-end dock screen: {} tasks x {} poses on {} virtual nodes ({} workers)",
+        tasks, meta.batch, nodes, workers
+    ));
+    let total_poses = tasks * meta.batch;
+    t.row(vec!["poses scored".into(), format!("{total_poses}")]);
+    t.row(vec![
+        "PJRT scoring throughput".into(),
+        format!("{:.0} poses/s", total_poses as f64 / compute_elapsed.as_secs_f64()),
+    ]);
+    t.row(vec!["CIO wall-clock (score+collect)".into(), format!("{cio_elapsed:.2?}")]);
+    t.row(vec!["stage-2 parallel re-read".into(), format!("{stage2_elapsed:.2?}")]);
+    t.row(vec!["baseline wall-clock".into(), format!("{baseline_elapsed:.2?}")]);
+    t.row(vec!["GFS files (CIO)".into(), format!("{} archives", archives.len())]);
+    t.row(vec!["GFS files (baseline)".into(), format!("{baseline_files}")]);
+    t.row(vec![
+        "file-count reduction".into(),
+        format!("{:.0}x", baseline_files as f64 / archives.len().max(1) as f64),
+    ]);
+    t.row(vec!["best pose".into(), format!("{} (score {:.4})", best.1, best.0)]);
+    t.row(vec![
+        "collector reasons [delay,data,free,shutdown]".into(),
+        format!("{:?}", stats.reasons),
+    ]);
+    print!("{}", t.render());
+    println!("(workspace: {})", root.display());
+    Ok(())
+}
+
+fn write_f32s(path: &PathBuf, xs: &[f32]) -> anyhow::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for x in xs {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+fn read_f32s(path: &PathBuf) -> anyhow::Result<Vec<f32>> {
+    Ok(bytes_to_f32s(&std::fs::read(path)?))
+}
+
+fn bytes_to_f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}

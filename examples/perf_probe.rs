@@ -1,0 +1,28 @@
+//! §Perf probe: the three 96K-processor × 295K-task simulations used as
+//! the whole-stack optimization workload (EXPERIMENTS.md §Perf). Prints
+//! build/run wall time, event counts and event rate per IO mode.
+//!
+//! Run: `cargo run --release --example perf_probe`
+
+use cio::config::ClusterConfig;
+use cio::sim::cluster::{IoMode, SimCluster};
+use cio::util::units::mib;
+use std::time::Instant;
+
+fn main() {
+    for (procs, mode) in [(98_304u32, IoMode::Cio), (98_304, IoMode::Gpfs), (98_304, IoMode::RamOnly)] {
+        let cfg = ClusterConfig::bgp(procs);
+        let tasks = procs as u64 * 3;
+        let t0 = Instant::now();
+        let mut c = SimCluster::new(&cfg);
+        let built = t0.elapsed();
+        let t1 = Instant::now();
+        let r = c.run_mtc(tasks, 32.0, mib(1), mode);
+        let ran = t1.elapsed();
+        println!(
+            "{procs} procs {:?}: build {:.3}s run {:.3}s, {} events, {:.2} Mev/s, tasks {}",
+            mode, built.as_secs_f64(), ran.as_secs_f64(),
+            c.engine.processed(), c.engine.processed() as f64 / ran.as_secs_f64() / 1e6, r.tasks
+        );
+    }
+}

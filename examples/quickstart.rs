@@ -1,0 +1,54 @@
+//! Quickstart: simulate a loosely coupled MTC workload on a BG/P-style
+//! partition and compare collective IO against direct GPFS writes.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use cio::config::ClusterConfig;
+use cio::sim::cluster::IoMode;
+use cio::util::table::Table;
+use cio::util::units::{fmt_bw, mib};
+use cio::workload::synthetic::SyntheticWorkload;
+
+fn main() {
+    // A 4096-processor partition with the Argonne defaults: 64 compute
+    // nodes per ION, RAM-based LFS, GPFS-like GFS.
+    let cfg = ClusterConfig::bgp(4096);
+    // Three waves of 4-second tasks, each writing a 1 MiB output file —
+    // the paper's Figure 14 shape.
+    let wl = SyntheticWorkload::waves(&cfg, 3, 4.0, mib(1));
+
+    let ideal = wl.run(&cfg, IoMode::RamOnly);
+    let gpfs = wl.run(&cfg, IoMode::Gpfs);
+    let cio = wl.run(&cfg, IoMode::Cio);
+
+    let mut t = Table::new(vec!["metric", "GPFS", "CIO", "ideal (RAM)"])
+        .title(format!("{} tasks x 4s x 1MiB on {} processors", wl.tasks, cfg.procs));
+    t.row(vec![
+        "efficiency".to_string(),
+        format!("{:.1}%", gpfs.efficiency_vs(&ideal) * 100.0),
+        format!("{:.1}%", cio.efficiency_vs(&ideal) * 100.0),
+        "100%".to_string(),
+    ]);
+    t.row(vec![
+        "write throughput".to_string(),
+        fmt_bw(gpfs.write_throughput(mib(1))),
+        fmt_bw(cio.write_throughput(mib(1))),
+        fmt_bw(ideal.write_throughput(mib(1))),
+    ]);
+    t.row(vec![
+        "GFS files created".to_string(),
+        format!("{}", gpfs.gfs_files),
+        format!("{}", cio.gfs_files),
+        "0".to_string(),
+    ]);
+    t.row(vec![
+        "file-count reduction".to_string(),
+        "1x".to_string(),
+        format!("{:.0}x", cio.collector.reduction_factor()),
+        "-".to_string(),
+    ]);
+    print!("{}", t.render());
+    println!("Collector flush reasons [maxDelay, maxData, minFree, shutdown]: {:?}", cio.collector.reasons);
+    println!("\nNext: `cargo bench --bench fig14` regenerates the full figure;");
+    println!("      `cargo run --release --example dock_screening` runs the real-compute pipeline.");
+}

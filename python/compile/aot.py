@@ -1,0 +1,103 @@
+"""AOT lowering: JAX model (L2, calling the Pallas L1 kernel) → HLO text.
+
+Run once at build time (`make artifacts`); the Rust coordinator loads the
+result via `HloModuleProto::from_text_file` + PJRT and Python never runs
+on the request path.
+
+HLO **text** is the interchange format, not `.serialize()`: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which the pinned
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    cd python && python -m compile.aot --out ../artifacts/dock_score.hlo.txt \
+        [--batch 64 --atoms 32 --features 8]
+
+Writes `<out>` plus a sibling `<out minus .hlo.txt>.meta` with the shape
+metadata the Rust side validates against.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_score_batch(batch: int, atoms: int, features: int) -> str:
+    """Lower model.score_batch for the given static shapes."""
+    lig = jax.ShapeDtypeStruct((batch, atoms, 4), jax.numpy.float32)
+    grid = jax.ShapeDtypeStruct((atoms, features), jax.numpy.float32)
+    weights = jax.ShapeDtypeStruct((features,), jax.numpy.float32)
+    lowered = jax.jit(model.score_batch).lower(lig, grid, weights)
+    return to_hlo_text(lowered)
+
+
+def lower_screen(batch: int, atoms: int, features: int, top_k: int) -> str:
+    """Lower model.screen (scores + fused top-k selection) for static
+    shapes — the stage-2 'select' step as a single compiled graph."""
+    lig = jax.ShapeDtypeStruct((batch, atoms, 4), jax.numpy.float32)
+    grid = jax.ShapeDtypeStruct((atoms, features), jax.numpy.float32)
+    weights = jax.ShapeDtypeStruct((features,), jax.numpy.float32)
+    lowered = jax.jit(lambda l, g, w: model.screen(l, g, w, top_k=top_k)).lower(
+        lig, grid, weights
+    )
+    return to_hlo_text(lowered)
+
+
+def meta_text(batch: int, atoms: int, features: int, top_k=None) -> str:
+    text = (
+        "# shapes baked into the sibling .hlo.txt artifact\n"
+        f"batch = {batch}\n"
+        f"atoms = {atoms}\n"
+        f"features = {features}\n"
+    )
+    if top_k is not None:
+        text += f"top_k = {top_k}\n"
+    return text
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts/dock_score.hlo.txt")
+    p.add_argument("--model", choices=["score", "screen"], default="score")
+    p.add_argument("--batch", type=int, default=64)
+    p.add_argument("--atoms", type=int, default=32)
+    p.add_argument("--features", type=int, default=8)
+    p.add_argument("--top-k", type=int, default=16)
+    args = p.parse_args(argv)
+
+    if args.model == "screen":
+        text = lower_screen(args.batch, args.atoms, args.features, args.top_k)
+        meta = meta_text(args.batch, args.atoms, args.features, args.top_k)
+    else:
+        text = lower_score_batch(args.batch, args.atoms, args.features)
+        meta = meta_text(args.batch, args.atoms, args.features)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+    meta_path = args.out
+    if meta_path.endswith(".hlo.txt"):
+        meta_path = meta_path[: -len(".hlo.txt")] + ".meta"
+    else:
+        meta_path += ".meta"
+    with open(meta_path, "w") as f:
+        f.write(meta)
+    print(f"wrote {len(text)} chars to {args.out} (+ {os.path.basename(meta_path)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,119 @@
+"""Pallas docking-score kernel (Layer 1).
+
+Computes the pose-by-feature score matrix
+
+    S[b, f] = sum_a interact(lig[b, a]) * grid[a, f]
+
+as a *fused* blocked contraction: the interaction strengths are computed
+on the fly from the ligand coordinates inside the kernel (never
+materialized in HBM) and immediately contracted against the receptor grid
+on the MXU.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+hierarchy is GFS→IFS→LFS data staging; the kernel mirrors it as
+HBM→VMEM tiles. The BlockSpec index maps stage one [Bt, A, 4] ligand tile
+and one [A, Ft] grid tile into VMEM per grid step — the grid tile is the
+"read-many broadcast" operand (every pose block re-reads it), the ligand
+tile is the "read-few" operand. Tile sizes keep the working set
+(Bt*A*4 + A*Ft + Bt*Ft floats) far under the ~16 MiB VMEM of a TPU core.
+
+interpret=True ALWAYS: the CPU PJRT client cannot execute Mosaic
+custom-calls; real-TPU performance is estimated analytically in
+DESIGN.md. Correctness is pinned to `ref.py` by pytest + hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM-friendly tile sizes (float32):
+#   128*A*4 + A*128 + 128*128 floats; for A=1024 that is ~1.2 MiB.
+DEFAULT_BLOCK_B = 128
+DEFAULT_BLOCK_F = 128
+
+
+def _score_kernel(lig_ref, grid_ref, out_ref):
+    """One (pose-block, feature-block) tile of S = interact(lig) @ grid."""
+    lig = lig_ref[...]          # [Bt, A, 4] in VMEM
+    x = lig[..., 0]
+    y = lig[..., 1]
+    z = lig[..., 2]
+    q = lig[..., 3]
+    inter = q / (1.0 + x * x + y * y + z * z)      # [Bt, A], VPU
+    # MXU contraction; accumulate in f32 regardless of input dtype.
+    out_ref[...] = jnp.dot(inter, grid_ref[...],
+                           preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_f"))
+def score_matrix(ligands, grid, *, block_b=DEFAULT_BLOCK_B,
+                 block_f=DEFAULT_BLOCK_F):
+    """Blocked Pallas version of `ref.score_matrix`.
+
+    Args:
+      ligands: f32[B, A, 4].
+      grid:    f32[A, F].
+      block_b / block_f: tile sizes; shapes that do not divide are padded
+        to the next multiple and the result is sliced back (padded poses
+        have zero charge and padded features zero grid, so they contribute
+        exact zeros).
+
+    Returns:
+      f32[B, F].
+    """
+    b, a, four = ligands.shape
+    assert four == 4, f"ligands last dim must be 4, got {four}"
+    a2, f = grid.shape
+    assert a == a2, f"atom dims disagree: {a} vs {a2}"
+
+    bb = min(block_b, _next_multiple(b, 1))
+    bf = min(block_f, _next_multiple(f, 1))
+    bp = _next_multiple(b, bb)
+    fp = _next_multiple(f, bf)
+    lig_p = jnp.pad(ligands, ((0, bp - b), (0, 0), (0, 0)))
+    grid_p = jnp.pad(grid, ((0, 0), (0, fp - f)))
+
+    out = pl.pallas_call(
+        _score_kernel,
+        grid=(bp // bb, fp // bf),
+        in_specs=[
+            # Ligand tile varies with the pose-block index only.
+            pl.BlockSpec((bb, a, 4), lambda i, j: (i, 0, 0)),
+            # Grid tile varies with the feature-block index only — the
+            # broadcast operand of the contraction.
+            pl.BlockSpec((a, bf), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bf), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, fp), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(lig_p, grid_p)
+    return out[:b, :f]
+
+
+def score(ligands, grid, weights, *, block_b=DEFAULT_BLOCK_B,
+          block_f=DEFAULT_BLOCK_F):
+    """Per-pose scores via the Pallas kernel: `score_matrix(...) @ w`."""
+    s = score_matrix(ligands, grid, block_b=block_b, block_f=block_f)
+    return jnp.dot(s, weights, preferred_element_type=jnp.float32)
+
+
+def _next_multiple(n, k):
+    return ((n + k - 1) // k) * k
+
+
+def vmem_bytes(block_b, atoms, block_f, dtype_bytes=4):
+    """Analytic VMEM working-set estimate for one kernel invocation
+    (ligand tile + grid tile + output tile), used by the DESIGN.md
+    roofline discussion and checked in tests to stay under a TPU core's
+    ~16 MiB VMEM."""
+    lig = block_b * atoms * 4 * dtype_bytes
+    grd = atoms * block_f * dtype_bytes
+    out = block_b * block_f * dtype_bytes
+    return lig + grd + out
+
+
+def mxu_flops(batch, atoms, features):
+    """FLOPs of the contraction (the MXU part): 2*B*A*F."""
+    return 2 * batch * atoms * features

@@ -1,0 +1,92 @@
+"""Pallas pose-transform kernel (Layer 1, second kernel).
+
+DOCK6 samples *orientations*: a compound's base conformation is rotated
+and translated into many candidate poses before scoring. This kernel
+applies a batch of rigid transforms to one base ligand on the fly —
+fused with charge passthrough so the transformed pose tensor feeds the
+scoring kernel directly:
+
+    pose[b, a, :3] = R[b] @ lig[a, :3] + t[b]
+    pose[b, a,  3] = lig[a, 3]
+
+Inputs:  lig f32[A, 4]  (x, y, z, charge),
+         rot f32[B, 3, 3], trans f32[B, 3].
+Output:  f32[B, A, 4].
+
+Tiled over the pose batch: each grid step stages one [Bt, 3, 3] rotation
+tile, the whole (small) base ligand, and writes one [Bt, A, 4] pose tile
+— an HBM→VMEM schedule mirroring the broadcast (read-many base ligand)
+vs scatter (per-pose transforms) split of the paper's storage model.
+
+interpret=True always (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+
+
+def _transform_kernel(lig_ref, rot_ref, trans_ref, out_ref):
+    """One pose-block tile: rigid transform + charge passthrough."""
+    lig = lig_ref[...]                 # [A, 4]
+    xyz = lig[:, :3]                   # [A, 3]
+    q = lig[:, 3:4]                    # [A, 1]
+    rot = rot_ref[...]                 # [Bt, 3, 3]
+    trans = trans_ref[...]             # [Bt, 3]
+    # new_xyz[b, a, i] = sum_j rot[b, i, j] * xyz[a, j] + trans[b, i]
+    moved = jnp.einsum("bij,aj->bai", rot, xyz,
+                       preferred_element_type=jnp.float32)
+    moved = moved + trans[:, None, :]
+    bt = rot.shape[0]
+    a = lig.shape[0]
+    charge = jnp.broadcast_to(q[None, :, :], (bt, a, 1))
+    out_ref[...] = jnp.concatenate([moved, charge], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def transform(lig, rot, trans, *, block_b=DEFAULT_BLOCK_B):
+    """Apply `B` rigid transforms to a base ligand. Returns f32[B, A, 4]."""
+    a, four = lig.shape
+    assert four == 4, f"ligand last dim must be 4, got {four}"
+    b, three, three2 = rot.shape
+    assert (three, three2) == (3, 3), "rot must be [B, 3, 3]"
+    assert trans.shape == (b, 3), "trans must be [B, 3]"
+
+    bb = min(block_b, b)
+    bp = ((b + bb - 1) // bb) * bb
+    rot_p = jnp.pad(rot, ((0, bp - b), (0, 0), (0, 0)))
+    trans_p = jnp.pad(trans, ((0, bp - b), (0, 0)))
+
+    out = pl.pallas_call(
+        _transform_kernel,
+        grid=(bp // bb,),
+        in_specs=[
+            # Base ligand: the broadcast (read-many) operand.
+            pl.BlockSpec((a, 4), lambda i: (0, 0)),
+            # Per-pose transforms: scattered across pose blocks.
+            pl.BlockSpec((bb, 3, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, 3), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, a, 4), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, a, 4), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(lig, rot_p, trans_p)
+    return out[:b]
+
+
+def transform_ref(lig, rot, trans):
+    """Pure-jnp oracle for `transform`."""
+    moved = jnp.einsum("bij,aj->bai", rot, lig[:, :3],
+                       preferred_element_type=jnp.float32) + trans[:, None, :]
+    q = jnp.broadcast_to(lig[None, :, 3:4], (rot.shape[0], lig.shape[0], 1))
+    return jnp.concatenate([moved, q], axis=-1)
+
+
+def rotation_z(theta):
+    """Rotation matrix about z (test helper)."""
+    c, s = jnp.cos(theta), jnp.sin(theta)
+    return jnp.array([[c, -s, 0.0], [s, c, 0.0], [0.0, 0.0, 1.0]], jnp.float32)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the docking-score kernel.
+
+The DOCK6-like compute payload of the paper's §6.3 application study: each
+ligand pose (a set of atoms with coordinates and partial charges) is scored
+against a receptor energy grid.
+
+    interact[b, a] = q[b, a] / (1 + x^2 + y^2 + z^2)        # [B, A]
+    S[b, f]        = sum_a interact[b, a] * grid[a, f]      # [B, F]
+    score[b]       = sum_f S[b, f] * weights[f]             # [B]
+
+This module is the CORRECTNESS REFERENCE: the Pallas kernel
+(`docking.py`), the AOT-lowered model executed from Rust via PJRT, and the
+pure-Rust mirror (`rust/src/runtime/mod.rs::score_reference`) must all
+agree with it to float tolerance. Keep it boring and obviously right.
+"""
+
+import jax.numpy as jnp
+
+
+def interactions(ligands):
+    """Per-atom interaction strengths.
+
+    Args:
+      ligands: f32[B, A, 4] — (x, y, z, charge) per atom per pose.
+
+    Returns:
+      f32[B, A].
+    """
+    x = ligands[..., 0]
+    y = ligands[..., 1]
+    z = ligands[..., 2]
+    q = ligands[..., 3]
+    return q / (1.0 + x * x + y * y + z * z)
+
+
+def score_matrix(ligands, grid):
+    """Pose-by-feature score matrix S = interact @ grid.
+
+    Args:
+      ligands: f32[B, A, 4].
+      grid:    f32[A, F] — receptor grid features per atom site.
+
+    Returns:
+      f32[B, F].
+    """
+    inter = interactions(ligands)
+    return jnp.dot(inter, grid, preferred_element_type=jnp.float32)
+
+
+def score(ligands, grid, weights):
+    """Final per-pose docking scores.
+
+    Args:
+      ligands: f32[B, A, 4].
+      grid:    f32[A, F].
+      weights: f32[F].
+
+    Returns:
+      f32[B].
+    """
+    return jnp.dot(score_matrix(ligands, grid), weights,
+                   preferred_element_type=jnp.float32)
+
+
+def best_pose(ligands, grid, weights):
+    """Index and value of the best (lowest-energy = most negative) pose.
+
+    Returns:
+      (i32[], f32[]) — argmin and min of the scores.
+    """
+    s = score(ligands, grid, weights)
+    return jnp.argmin(s), jnp.min(s)

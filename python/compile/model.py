@@ -1,0 +1,43 @@
+"""Layer-2 JAX docking model.
+
+The compute graph executed per docking task batch from the Rust request
+path: the Pallas score kernel (L1), followed by the per-pose weighted
+reduction. This is the function `aot.py` lowers to HLO text; its
+signature must stay in lock-step with
+`rust/src/runtime/mod.rs::ScoreModel::score_batch`:
+
+    score_batch(ligands f32[B, A, 4], grid f32[A, F], weights f32[F])
+        -> (f32[B],)
+
+(1-tuple because the AOT path lowers with return_tuple=True.)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import docking, poses
+
+
+def score_batch(ligands, grid, weights):
+    """Score a batch of ligand poses. Returns f32[B]."""
+    s = docking.score_matrix(ligands, grid)       # Pallas L1 kernel
+    return jnp.dot(s, weights, preferred_element_type=jnp.float32)
+
+
+def score_poses(base_ligand, rot, trans, grid, weights):
+    """Full docking pipeline: generate poses from a base conformation via
+    the pose-transform kernel, then score them — two Pallas kernels fused
+    into one jittable graph (what DOCK6 does per compound)."""
+    pose_tensor = poses.transform(base_ligand, rot, trans)
+    return score_batch(pose_tensor, grid, weights)
+
+
+def screen(ligands, grid, weights, top_k=16):
+    """Extended entry point: scores plus the best-k pose indices — the
+    stage-2 'select' step of the §6.3 workflow, fused into one compiled
+    graph for consumers that want it."""
+    scores = score_batch(ligands, grid, weights)
+    # Lowest energy = best.
+    k = min(top_k, scores.shape[0])
+    neg, idx = jax.lax.top_k(-scores, k)
+    return scores, idx, -neg

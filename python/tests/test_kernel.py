@@ -1,0 +1,151 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (including non-multiple-of-block sizes, the
+padding path) and dtypes; fixed cases pin exact values.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import docking, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _random_case(rng, b, a, f, dtype=np.float32):
+    ligands = rng.uniform(-3.0, 3.0, size=(b, a, 4)).astype(dtype)
+    grid = rng.uniform(-1.0, 1.0, size=(a, f)).astype(dtype)
+    weights = rng.uniform(-1.0, 1.0, size=(f,)).astype(dtype)
+    return ligands, grid, weights
+
+
+class TestFixedCases:
+    def test_single_atom_at_origin(self):
+        # interact = q/1 = 2; S = 2 * grid row.
+        lig = np.zeros((1, 1, 4), np.float32)
+        lig[0, 0, 3] = 2.0
+        grid = np.array([[0.5, 1.5]], np.float32)
+        s = docking.score_matrix(jnp.asarray(lig), jnp.asarray(grid))
+        np.testing.assert_allclose(np.asarray(s), [[1.0, 3.0]], rtol=1e-6)
+
+    def test_matches_rust_reference_comment(self):
+        # Mirrors rust/src/runtime/mod.rs::reference_scorer_simple_case.
+        lig = np.array(
+            [[[0.0, 0.0, 0.0, 2.0]], [[1.0, 0.0, 0.0, 2.0]]], np.float32
+        )
+        grid = np.array([[0.5, 1.5]], np.float32)
+        w = np.array([1.0, 2.0], np.float32)
+        scores = docking.score(jnp.asarray(lig), jnp.asarray(grid), jnp.asarray(w))
+        np.testing.assert_allclose(np.asarray(scores), [7.0, 3.5], rtol=1e-6)
+
+    def test_zero_charge_scores_zero(self):
+        rng = np.random.default_rng(0)
+        lig, grid, w = _random_case(rng, 8, 16, 4)
+        lig[..., 3] = 0.0
+        s = docking.score(jnp.asarray(lig), jnp.asarray(grid), jnp.asarray(w))
+        np.testing.assert_allclose(np.asarray(s), np.zeros(8), atol=1e-6)
+
+    def test_kernel_matches_ref_block_multiple(self):
+        rng = np.random.default_rng(1)
+        lig, grid, w = _random_case(rng, 256, 32, 128)
+        got = docking.score_matrix(jnp.asarray(lig), jnp.asarray(grid))
+        want = ref.score_matrix(jnp.asarray(lig), jnp.asarray(grid))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=1e-5)
+
+    def test_kernel_matches_ref_padding_path(self):
+        # 130 poses / 70 features: forces the pad-and-slice path.
+        rng = np.random.default_rng(2)
+        lig, grid, w = _random_case(rng, 130, 17, 70)
+        got = docking.score_matrix(jnp.asarray(lig), jnp.asarray(grid))
+        want = ref.score_matrix(jnp.asarray(lig), jnp.asarray(grid))
+        assert got.shape == (130, 70)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=1e-5)
+
+    def test_custom_block_sizes(self):
+        rng = np.random.default_rng(3)
+        lig, grid, w = _random_case(rng, 64, 8, 32)
+        for bb, bf in [(16, 8), (64, 32), (128, 128)]:
+            got = docking.score_matrix(
+                jnp.asarray(lig), jnp.asarray(grid), block_b=bb, block_f=bf
+            )
+            want = ref.score_matrix(jnp.asarray(lig), jnp.asarray(grid))
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=2e-5, atol=1e-5,
+                err_msg=f"blocks ({bb},{bf})",
+            )
+
+    def test_shape_validation(self):
+        with pytest.raises(AssertionError):
+            docking.score_matrix(jnp.zeros((2, 3, 5)), jnp.zeros((3, 4)))
+        with pytest.raises(AssertionError):
+            docking.score_matrix(jnp.zeros((2, 3, 4)), jnp.zeros((9, 4)))
+
+
+class TestHypothesisSweep:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 200),
+        a=st.integers(1, 48),
+        f=st.integers(1, 150),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_over_shapes(self, b, a, f, seed):
+        rng = np.random.default_rng(seed)
+        lig, grid, w = _random_case(rng, b, a, f)
+        got = docking.score(jnp.asarray(lig), jnp.asarray(grid), jnp.asarray(w))
+        want = ref.score(jnp.asarray(lig), jnp.asarray(grid), jnp.asarray(w))
+        assert got.shape == (b,)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        b=st.integers(1, 64),
+        a=st.integers(1, 16),
+        f=st.integers(1, 32),
+        seed=st.integers(0, 2**31 - 1),
+        dtype=st.sampled_from([np.float32, jnp.bfloat16]),
+    )
+    def test_dtypes(self, b, a, f, seed, dtype):
+        rng = np.random.default_rng(seed)
+        lig, grid, w = _random_case(rng, b, a, f, np.float32)
+        ligd = jnp.asarray(lig).astype(dtype)
+        gridd = jnp.asarray(grid).astype(dtype)
+        got = docking.score_matrix(ligd, gridd)
+        want = ref.score_matrix(ligd, gridd)
+        assert got.dtype == jnp.float32, "accumulation must stay f32"
+        tol = 1e-4 if dtype == np.float32 else 8e-2
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=tol, atol=tol,
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.integers(1, 100),
+        a=st.integers(1, 32),
+        f=st.integers(1, 64),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_linearity_in_charge(self, b, a, f, seed):
+        # score is linear in charges: doubling q doubles the score.
+        rng = np.random.default_rng(seed)
+        lig, grid, w = _random_case(rng, b, a, f)
+        lig2 = lig.copy()
+        lig2[..., 3] *= 2.0
+        s1 = np.asarray(docking.score(jnp.asarray(lig), jnp.asarray(grid), jnp.asarray(w)))
+        s2 = np.asarray(docking.score(jnp.asarray(lig2), jnp.asarray(grid), jnp.asarray(w)))
+        np.testing.assert_allclose(s2, 2.0 * s1, rtol=1e-3, atol=1e-4)
+
+
+class TestAnalytics:
+    def test_vmem_estimate_fits_tpu_core(self):
+        # Default tiles with the biggest atoms count we ship must stay
+        # far under a ~16 MiB VMEM.
+        bytes_ = docking.vmem_bytes(docking.DEFAULT_BLOCK_B, 1024, docking.DEFAULT_BLOCK_F)
+        assert bytes_ < 4 * 1024 * 1024, bytes_
+
+    def test_flops_model(self):
+        assert docking.mxu_flops(64, 32, 8) == 2 * 64 * 32 * 8

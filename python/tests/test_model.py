@@ -1,0 +1,75 @@
+"""L2 model tests: shapes, the fused screen head, and jit stability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def _case(b=32, a=16, f=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return (
+        jnp.asarray(rng.uniform(-2, 2, (b, a, 4)).astype(np.float32)),
+        jnp.asarray(rng.uniform(-1, 1, (a, f)).astype(np.float32)),
+        jnp.asarray(rng.uniform(-1, 1, (f,)).astype(np.float32)),
+    )
+
+
+def test_score_batch_matches_ref():
+    lig, grid, w = _case()
+    got = model.score_batch(lig, grid, w)
+    want = ref.score(lig, grid, w)
+    assert got.shape == (32,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=1e-5)
+
+
+def test_score_batch_jits():
+    lig, grid, w = _case()
+    jitted = jax.jit(model.score_batch)
+    np.testing.assert_allclose(
+        np.asarray(jitted(lig, grid, w)),
+        np.asarray(model.score_batch(lig, grid, w)),
+        rtol=1e-6,
+    )
+
+
+def test_screen_returns_topk_lowest():
+    lig, grid, w = _case(b=64)
+    scores, idx, best = model.screen(lig, grid, w, top_k=8)
+    s = np.asarray(scores)
+    assert idx.shape == (8,)
+    # The returned indices must be the 8 smallest scores, ascending.
+    expect = np.argsort(s)[:8]
+    np.testing.assert_array_equal(np.sort(np.asarray(idx)), np.sort(expect))
+    np.testing.assert_allclose(np.asarray(best), np.sort(s)[:8], rtol=1e-6)
+
+
+def test_screen_topk_clamps_to_batch():
+    lig, grid, w = _case(b=4)
+    _, idx, _ = model.screen(lig, grid, w, top_k=100)
+    assert idx.shape == (4,)
+
+
+def test_batch_independence():
+    # Scoring poses individually equals scoring them in one batch.
+    lig, grid, w = _case(b=8)
+    batched = np.asarray(model.score_batch(lig, grid, w))
+    single = np.array(
+        [np.asarray(model.score_batch(lig[i : i + 1], grid, w))[0] for i in range(8)]
+    )
+    np.testing.assert_allclose(batched, single, rtol=2e-5, atol=1e-5)
+
+
+def test_score_poses_pipeline():
+    rng = np.random.default_rng(5)
+    base = jnp.asarray(rng.uniform(-2, 2, (16, 4)).astype(np.float32))
+    rot = jnp.asarray(np.broadcast_to(np.eye(3, dtype=np.float32), (8, 3, 3)).copy())
+    trans = jnp.asarray(np.zeros((8, 3), np.float32))
+    grid = jnp.asarray(rng.uniform(-1, 1, (16, 8)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(-1, 1, (8,)).astype(np.float32))
+    scores = model.score_poses(base, rot, trans, grid, w)
+    # Identity transforms: every pose scores like the base conformation.
+    want = ref.score(jnp.broadcast_to(base[None], (8, 16, 4)), grid, w)
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(want), rtol=1e-5)

@@ -1,0 +1,86 @@
+"""Pose-transform kernel vs oracle, plus the fused pose→score pipeline."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import docking, poses, ref
+
+
+def _random_rigid(rng, b):
+    # Random rotations via QR of gaussian matrices (proper orthogonal).
+    m = rng.normal(size=(b, 3, 3)).astype(np.float32)
+    q, r = np.linalg.qr(m)
+    # Fix determinant to +1.
+    det = np.linalg.det(q)
+    q[:, :, 0] *= np.sign(det)[:, None]
+    t = rng.uniform(-2, 2, size=(b, 3)).astype(np.float32)
+    return q.astype(np.float32), t
+
+
+def test_identity_transform_is_noop():
+    rng = np.random.default_rng(0)
+    lig = rng.uniform(-2, 2, (16, 4)).astype(np.float32)
+    rot = np.broadcast_to(np.eye(3, dtype=np.float32), (8, 3, 3)).copy()
+    trans = np.zeros((8, 3), np.float32)
+    out = poses.transform(jnp.asarray(lig), jnp.asarray(rot), jnp.asarray(trans))
+    for b in range(8):
+        np.testing.assert_allclose(np.asarray(out)[b], lig, rtol=1e-6)
+
+
+def test_translation_moves_coordinates_not_charge():
+    lig = np.array([[1.0, 2.0, 3.0, 9.0]], np.float32)
+    rot = np.eye(3, dtype=np.float32)[None]
+    trans = np.array([[10.0, 20.0, 30.0]], np.float32)
+    out = np.asarray(poses.transform(jnp.asarray(lig), jnp.asarray(rot), jnp.asarray(trans)))
+    np.testing.assert_allclose(out[0, 0], [11.0, 22.0, 33.0, 9.0], rtol=1e-6)
+
+
+def test_rotation_z_quarter_turn():
+    lig = np.array([[1.0, 0.0, 0.0, 1.0]], np.float32)
+    rot = np.asarray(poses.rotation_z(jnp.float32(np.pi / 2)))[None]
+    trans = np.zeros((1, 3), np.float32)
+    out = np.asarray(poses.transform(jnp.asarray(lig), jnp.asarray(rot), jnp.asarray(trans)))
+    np.testing.assert_allclose(out[0, 0], [0.0, 1.0, 0.0, 1.0], atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 200), a=st.integers(1, 32), seed=st.integers(0, 2**31 - 1))
+def test_matches_oracle_over_shapes(b, a, seed):
+    rng = np.random.default_rng(seed)
+    lig = rng.uniform(-2, 2, (a, 4)).astype(np.float32)
+    rot, trans = _random_rigid(rng, b)
+    got = poses.transform(jnp.asarray(lig), jnp.asarray(rot), jnp.asarray(trans))
+    want = poses.transform_ref(jnp.asarray(lig), jnp.asarray(rot), jnp.asarray(trans))
+    assert got.shape == (b, a, 4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_rigid_transform_preserves_interactions_under_pure_rotation():
+    # interact = q / (1 + |x|^2) is rotation-invariant about the origin,
+    # so scores of rotated (untranslated) poses are identical.
+    rng = np.random.default_rng(3)
+    lig = rng.uniform(-2, 2, (8, 4)).astype(np.float32)
+    rot, _ = _random_rigid(rng, 16)
+    trans = np.zeros((16, 3), np.float32)
+    grid = rng.uniform(-1, 1, (8, 4)).astype(np.float32)
+    w = rng.uniform(-1, 1, (4,)).astype(np.float32)
+    pose_tensor = poses.transform(jnp.asarray(lig), jnp.asarray(rot), jnp.asarray(trans))
+    scores = np.asarray(docking.score(pose_tensor, jnp.asarray(grid), jnp.asarray(w)))
+    np.testing.assert_allclose(scores, np.full(16, scores[0]), rtol=1e-4)
+
+
+def test_fused_pipeline_pose_then_score_matches_ref():
+    rng = np.random.default_rng(4)
+    lig = rng.uniform(-2, 2, (12, 4)).astype(np.float32)
+    rot, trans = _random_rigid(rng, 32)
+    grid = rng.uniform(-1, 1, (12, 6)).astype(np.float32)
+    w = rng.uniform(-1, 1, (6,)).astype(np.float32)
+    pose_tensor = poses.transform(jnp.asarray(lig), jnp.asarray(rot), jnp.asarray(trans))
+    got = docking.score(pose_tensor, jnp.asarray(grid), jnp.asarray(w))
+    want = ref.score(
+        poses.transform_ref(jnp.asarray(lig), jnp.asarray(rot), jnp.asarray(trans)),
+        jnp.asarray(grid),
+        jnp.asarray(w),
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,82 @@
+//! Ablation: indexed (xar-like) vs sequential (tar-like) archives for
+//! downstream re-processing (§5.3).
+//!
+//! The paper's design argument for xar: a member directory with byte
+//! offsets lets later stages extract *randomly and in parallel*; tar must
+//! scan. This bench measures, on a real archive on disk:
+//!   * extracting k random members (seek vs scan);
+//!   * full extraction with 1..8 threads (parallel scaling).
+//!
+//! Regenerate: `cargo bench --bench ablation_archive`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use cio::cio::archive::{read_sequential, Compression, Reader, Writer};
+use cio::util::rng::Rng;
+use cio::util::table::{num, Table};
+use std::time::Instant;
+
+fn main() {
+    let args = common::args();
+    let members = if common::fast() { 256 } else { 2048 };
+    let member_size = 16 * 1024;
+
+    // Build the archive once.
+    let dir = std::env::temp_dir().join(format!("cio-ablate-ar-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bench.cioar");
+    let mut rng = Rng::new(99);
+    let mut w = Writer::create(&path).unwrap();
+    for i in 0..members {
+        let data: Vec<u8> = (0..member_size).map(|_| rng.below(256) as u8).collect();
+        w.add(&format!("m{i:05}"), &data, Compression::None).unwrap();
+    }
+    w.finish().unwrap();
+    let r = Reader::open(&path).unwrap();
+
+    // --- Random access of k members: indexed seek vs sequential scan.
+    let mut table = Table::new(vec!["k members", "indexed (ms)", "sequential scan (ms)", "speedup"])
+        .title(format!("random extraction from a {members}-member archive"));
+    for &k in &[1usize, 16, 64] {
+        let picks: Vec<String> =
+            (0..k).map(|_| format!("m{:05}", rng.below(members as u64))).collect();
+        let t0 = Instant::now();
+        for name in &picks {
+            let _ = r.extract(name).unwrap();
+        }
+        let indexed = t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = Instant::now();
+        // tar-like: scan until all k found (worst case: full scan).
+        let mut found = 0;
+        read_sequential(&path, |name, _| {
+            if picks.iter().any(|p| p == name) {
+                found += 1;
+            }
+        })
+        .unwrap();
+        assert!(found >= 1);
+        let seq = t1.elapsed().as_secs_f64() * 1e3;
+        table.row(vec![format!("{k}"), num(indexed), num(seq), format!("{:.1}x", seq / indexed)]);
+    }
+    print!("{}", table.render());
+
+    // --- Parallel full extraction scaling.
+    let mut t2 = Table::new(vec!["threads", "full extract (ms)", "MB/s"])
+        .title("parallel extraction scaling (indexed archives only)");
+    let total_mb = (members * member_size) as f64 / (1 << 20) as f64;
+    for &threads in &[1usize, 2, 4, 8] {
+        let t0 = Instant::now();
+        let count = std::sync::atomic::AtomicUsize::new(0);
+        r.extract_parallel(threads, |_, _| {
+            count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        })
+        .unwrap();
+        assert_eq!(count.into_inner(), members);
+        let dt = t0.elapsed().as_secs_f64();
+        t2.row(vec![format!("{threads}"), num(dt * 1e3), num(total_mb / dt)]);
+    }
+    print!("{}", t2.render());
+    common::maybe_write_csv(&args, &table.to_csv());
+    println!("Reading: the index turns k-member extraction from O(archive) into O(k);\nparallel extraction is why stage 2 of Figure 17 parallelizes at all.");
+}

@@ -1,0 +1,55 @@
+//! Ablation: the §5.2 collector policy knobs (`maxData`, `maxDelay`).
+//!
+//! DESIGN.md §6 asks how sensitive the CIO win is to the policy: too-small
+//! `maxData` burns GFS creates on many small archives; too-large delays
+//! data landing (and risks `minFreeSpace` pressure). This bench sweeps
+//! both knobs at a fixed Figure-14-style workload.
+//!
+//! Regenerate: `cargo bench --bench ablation_collector`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use cio::config::ClusterConfig;
+use cio::sim::cluster::IoMode;
+use cio::util::table::{num, Table};
+use cio::util::units::{fmt_bytes, mib};
+use cio::workload::synthetic::SyntheticWorkload;
+
+fn main() {
+    let args = common::args();
+    let procs = if common::fast() { 1024 } else { 4096 };
+    let base = ClusterConfig::bgp(procs);
+    let wl = SyntheticWorkload::waves(&base, 3, 4.0, mib(1));
+    let ideal = wl.run(&base, IoMode::RamOnly);
+
+    let mut table = Table::new(vec![
+        "maxData",
+        "maxDelay",
+        "eff %",
+        "archives",
+        "files/archive",
+        "data makespan (s)",
+    ])
+    .title(format!("collector policy ablation: {} tasks x 4s x 1MiB on {procs} procs", wl.tasks));
+
+    for &max_data in &[mib(16), mib(64), mib(256), mib(1024)] {
+        for &max_delay in &[5.0f64, 30.0, 120.0] {
+            let mut cfg = base.clone();
+            cfg.collector.max_data = max_data;
+            cfg.collector.max_delay_s = max_delay;
+            let r = wl.run(&cfg, IoMode::Cio);
+            table.row(vec![
+                fmt_bytes(max_data),
+                format!("{max_delay}s"),
+                format!("{:.1}", r.efficiency_vs(&ideal) * 100.0),
+                format!("{}", r.collector.archives),
+                num(r.collector.reduction_factor()),
+                num(r.makespan_data_s),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    common::maybe_write_csv(&args, &table.to_csv());
+    println!("Reading: efficiency is flat (writes are async) but archive count and data\nlatency trade off — the paper's defaults (256 MiB / 30 s) sit on the knee.");
+}

@@ -1,0 +1,44 @@
+//! Shared helpers for the figure-reproduction benches.
+//!
+//! Every bench prints (a) the series table shaped like the paper's plot
+//! and (b) a paper-vs-measured [`cio::metrics::Report`] for the anchor
+//! points the paper quotes numerically. `CIO_BENCH_FAST=1` shrinks sweep
+//! axes for CI smoke runs; `--csv <path>` (or `CIO_BENCH_CSV=<path>`)
+//! additionally writes the series as CSV.
+
+use cio::util::cli::Args;
+
+/// True when the fast (CI) profile is requested.
+pub fn fast() -> bool {
+    std::env::var_os("CIO_BENCH_FAST").is_some()
+}
+
+/// Parse bench args (cargo bench passes `--bench`; ignore it).
+pub fn args() -> Args {
+    Args::parse(false)
+}
+
+/// Optional CSV output path from `--csv` or `CIO_BENCH_CSV`.
+pub fn csv_path(args: &Args) -> Option<String> {
+    args.get("csv").map(str::to_string).or_else(|| std::env::var("CIO_BENCH_CSV").ok())
+}
+
+/// Write CSV if requested.
+pub fn maybe_write_csv(args: &Args, csv: &str) {
+    if let Some(path) = csv_path(args) {
+        std::fs::write(&path, csv).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("(series written to {path})");
+    }
+}
+
+/// Print the standard bench footer: worst paper-vs-measured deviation.
+pub fn footer(report: &cio::metrics::Report) {
+    print!("{}", report.render());
+    if let Some(worst) = report.worst() {
+        println!(
+            "worst deviation: {} at {:.2}x of paper value\n",
+            worst.label,
+            worst.ratio()
+        );
+    }
+}

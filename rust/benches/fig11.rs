@@ -1,0 +1,78 @@
+//! Figure 11: IFS read performance over the torus, varying the file size
+//! and the LFS:IFS (client:server) ratio from 64:1 to 512:1.
+//!
+//! Paper anchors: best aggregate 162 MB/s at 100 MB files / 256:1;
+//! per-node 2.3 MB/s at 64:1 vs 0.6 MB/s at 256:1; the 512:1 / 100 MB
+//! configuration FAILS with chirp-server memory exhaustion.
+//!
+//! Regenerate: `cargo bench --bench fig11`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use cio::config::ClusterConfig;
+use cio::metrics::Report;
+use cio::sim::cluster::SimCluster;
+use cio::util::table::{num, Table};
+use cio::util::units::{fmt_bytes, kib, mib};
+
+fn main() {
+    let args = common::args();
+    let ratios: &[u32] = &[64, 128, 256, 512];
+    let sizes: &[u64] = if common::fast() {
+        &[mib(1), mib(100)]
+    } else {
+        &[kib(100), mib(1), mib(10), mib(100)]
+    };
+
+    let mut table = Table::new(vec!["file size", "ratio", "aggregate MB/s", "per-node MB/s"])
+        .title("Figure 11: IFS (chirp) read bandwidth over torus");
+    let mut report = Report::new("Figure 11 anchors");
+    let mut fail_seen = false;
+
+    for &size in sizes {
+        for &ratio in ratios {
+            // A partition whose IFS group is exactly `ratio` clients.
+            let cfg = ClusterConfig::bgp(ratio * 4).with_ifs_ratio(ratio);
+            let mut cluster = SimCluster::new(&cfg);
+            match cluster.chirp_read_benchmark(ratio, size) {
+                Ok(agg) => {
+                    let agg_mb = agg / mib(1) as f64;
+                    let per_node = agg_mb / ratio as f64;
+                    table.row(vec![
+                        fmt_bytes(size),
+                        format!("{ratio}:1"),
+                        num(agg_mb),
+                        format!("{per_node:.2}"),
+                    ]);
+                    if size == mib(100) && ratio == 256 {
+                        report.push("aggregate @100MB,256:1", 162.0, agg_mb, "MB/s");
+                        report.push("per-node @100MB,256:1", 0.6, per_node, "MB/s");
+                    }
+                    if size == mib(100) && ratio == 64 {
+                        report.push("per-node @100MB,64:1", 2.3, per_node, "MB/s");
+                    }
+                }
+                Err(e) => {
+                    table.row(vec![
+                        fmt_bytes(size),
+                        format!("{ratio}:1"),
+                        "FAILED".to_string(),
+                        format!("{e}").chars().take(28).collect(),
+                    ]);
+                    if size == mib(100) && ratio == 512 {
+                        fail_seen = true;
+                    }
+                }
+            }
+        }
+    }
+    print!("{}", table.render());
+    common::maybe_write_csv(&args, &table.to_csv());
+    println!(
+        "512:1 @ 100MB memory-exhaustion failure reproduced: {}",
+        if fail_seen { "YES (paper: benchmarks failed due to memory exhaustion)" } else { "NO" }
+    );
+    common::footer(&report);
+    assert!(fail_seen || common::fast(), "the paper's OOM failure must reproduce");
+}

@@ -1,0 +1,48 @@
+//! Figure 12: aggregate IFS read performance as the stripe degree grows
+//! from 1 to 32 LFSs (MosaStore-style striping over the torus).
+//!
+//! Paper anchors: 158 MB/s at degree 1 → 831 MB/s at degree 32; the
+//! 32 × 2 GB configuration also yields a 64 GB IFS (capacity check).
+//!
+//! Regenerate: `cargo bench --bench fig12`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use cio::config::ClusterConfig;
+use cio::metrics::Report;
+use cio::sim::cluster::SimCluster;
+use cio::sim::ifs::StripeSet;
+use cio::util::table::{num, Table};
+use cio::util::units::{gib, mib};
+
+fn main() {
+    let args = common::args();
+    let degrees: &[u32] = &[1, 2, 4, 8, 16, 32];
+    let clients = 64u32;
+    let size = mib(100);
+
+    let mut table = Table::new(vec!["stripe degree", "aggregate MB/s", "IFS capacity"])
+        .title("Figure 12: striped IFS read bandwidth (64 clients x 100 MB)");
+    let mut report = Report::new("Figure 12 anchors");
+
+    for &k in degrees {
+        let cfg = ClusterConfig::bgp(1024).with_stripe(k);
+        let mut cluster = SimCluster::new(&cfg);
+        let agg = cluster.chirp_read_benchmark(clients, size).expect("no OOM at 64 clients")
+            / mib(1) as f64;
+        let capacity = StripeSet::new(k, cfg.ifs.member_capacity).capacity();
+        table.row(vec![format!("{k}"), num(agg), cio::util::units::fmt_bytes(capacity)]);
+        match k {
+            1 => report.push("degree 1", 158.0, agg, "MB/s"),
+            32 => report.push("degree 32", 831.0, agg, "MB/s"),
+            _ => {}
+        }
+    }
+    print!("{}", table.render());
+    common::maybe_write_csv(&args, &table.to_csv());
+    // Capacity anchor: 32 x 2 GB = 64 GB.
+    let cap = StripeSet::new(32, gib(2)).capacity();
+    println!("32-way stripe capacity: {} (paper: 64 GB)\n", cio::util::units::fmt_bytes(cap));
+    common::footer(&report);
+}

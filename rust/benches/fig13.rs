@@ -1,0 +1,66 @@
+//! Figure 13: collective input distribution via spanning tree over the
+//! torus vs naive per-node GPFS reads, on 256–4096 processors.
+//!
+//! Paper anchors: naive GPFS staging tops out at its 2.4 GB/s rated peak
+//! (2.4 MB/s per node at 4K processors); the spanning tree achieves an
+//! *equivalent* 12.5 GB/s at 4K processors (equivalent = n*size/time, the
+//! paper's deliberately conservative comparison).
+//!
+//! Regenerate: `cargo bench --bench fig13`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use cio::cio::distributor::TreeShape;
+use cio::config::ClusterConfig;
+use cio::metrics::Report;
+use cio::sim::cluster::SimCluster;
+use cio::util::table::{num, Table};
+use cio::util::units::mib;
+
+fn main() {
+    let args = common::args();
+    let procs_list: &[u32] =
+        if common::fast() { &[256, 4096] } else { &[256, 512, 1024, 2048, 4096] };
+    let size = mib(100);
+
+    let mut table = Table::new(vec![
+        "procs",
+        "nodes",
+        "GPFS time (s)",
+        "GPFS GB/s",
+        "tree time (s)",
+        "tree equiv GB/s",
+        "speedup",
+    ])
+    .title("Figure 13: input distribution, 100 MB to all nodes");
+    let mut report = Report::new("Figure 13 anchors");
+
+    for &procs in procs_list {
+        let cfg = ClusterConfig::bgp(procs);
+        let nodes = cfg.nodes();
+        let mut naive = SimCluster::new(&cfg);
+        let (tn, aggn) = naive.distribute_naive(nodes, size);
+        let mut tree = SimCluster::new(&cfg);
+        let (tt, aggt) = tree.distribute_tree(nodes, size, TreeShape::Binomial);
+        let gn = aggn / mib(1024) as f64;
+        let gt = aggt / mib(1024) as f64;
+        table.row(vec![
+            format!("{procs}"),
+            format!("{nodes}"),
+            num(tn),
+            num(gn),
+            num(tt),
+            num(gt),
+            format!("{:.1}x", tn / tt),
+        ]);
+        if procs == 4096 {
+            report.push("GPFS aggregate @4K procs", 2.4, gn, "GB/s");
+            report.push("tree equivalent @4K procs", 12.5, gt, "GB/s");
+            report.push("per-node GPFS @4K", 2.4, aggn / nodes as f64 / mib(1) as f64, "MB/s");
+        }
+    }
+    print!("{}", table.render());
+    common::maybe_write_csv(&args, &table.to_csv());
+    common::footer(&report);
+}

@@ -1,0 +1,65 @@
+//! Figure 15: CIO vs GPFS efficiency for 32-second tasks, 1 KB – 1 MB
+//! outputs, on 256 – 96K processors.
+//!
+//! Paper anchors: CIO ≈ 90% throughout; GPFS starts near 90% at 256
+//! processors and collapses below 10% at 96K.
+//!
+//! Regenerate: `cargo bench --bench fig15`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use cio::config::ClusterConfig;
+use cio::metrics::Report;
+use cio::sim::cluster::IoMode;
+use cio::util::table::Table;
+use cio::util::units::{fmt_bytes, kib, mib};
+use cio::workload::synthetic::SyntheticWorkload;
+
+fn main() {
+    let args = common::args();
+    let procs_list: &[u32] = if common::fast() {
+        &[256, 4096]
+    } else {
+        &[256, 1024, 4096, 16_384, 32_768, 98_304]
+    };
+    let sizes: &[u64] = if common::fast() { &[mib(1)] } else { &[kib(1), kib(128), mib(1)] };
+    let dur = 32.0;
+    let waves = 3;
+
+    let mut table =
+        Table::new(vec!["procs", "out size", "CIO eff %", "GPFS eff %", "GPFS files"])
+            .title("Figure 15: efficiency, 32 s tasks, up to 96K processors");
+    let mut report = Report::new("Figure 15 anchors");
+
+    for &procs in procs_list {
+        let cfg = ClusterConfig::bgp(procs);
+        for &size in sizes {
+            let wl = SyntheticWorkload::waves(&cfg, waves, dur, size);
+            let ideal = wl.run(&cfg, IoMode::RamOnly);
+            let cio_r = wl.run(&cfg, IoMode::Cio);
+            let gpfs_r = wl.run(&cfg, IoMode::Gpfs);
+            let cio_eff = cio_r.efficiency_vs(&ideal) * 100.0;
+            let gpfs_eff = gpfs_r.efficiency_vs(&ideal) * 100.0;
+            table.row(vec![
+                format!("{procs}"),
+                fmt_bytes(size),
+                format!("{cio_eff:.1}"),
+                format!("{gpfs_eff:.1}"),
+                format!("{}", gpfs_r.gfs_files),
+            ]);
+            if size == mib(1) {
+                if procs == 256 {
+                    report.push("GPFS eff @256,1MB", 88.0, gpfs_eff, "%");
+                }
+                if procs == 98_304 {
+                    report.push("CIO eff @96K,1MB", 90.0, cio_eff, "%");
+                    report.push("GPFS eff @96K,1MB", 10.0, gpfs_eff, "%");
+                }
+            }
+        }
+    }
+    print!("{}", table.render());
+    common::maybe_write_csv(&args, &table.to_csv());
+    common::footer(&report);
+}

@@ -1,0 +1,71 @@
+//! Figure 16: aggregate write throughput (1 MB outputs) — CIO collection
+//! vs direct GPFS writes vs the RAM-only ideal, on 256 – 96K processors.
+//!
+//! Paper anchors: GPFS peaks at only 250 MB/s; CIO peaks at 2100 MB/s —
+//! nearly an order of magnitude higher and within a few percent of the
+//! ideal (4sec+RAM / 32sec+RAM) series.
+//!
+//! Regenerate: `cargo bench --bench fig16`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use cio::config::ClusterConfig;
+use cio::metrics::Report;
+use cio::sim::cluster::IoMode;
+use cio::util::table::{num, Table};
+use cio::util::units::mib;
+use cio::workload::synthetic::SyntheticWorkload;
+
+fn main() {
+    let args = common::args();
+    let procs_list: &[u32] = if common::fast() {
+        &[256, 4096]
+    } else {
+        &[256, 1024, 4096, 16_384, 32_768, 98_304]
+    };
+    let size = mib(1);
+    let waves = 3;
+
+    let mut table = Table::new(vec![
+        "procs",
+        "task len",
+        "GPFS MB/s",
+        "CIO MB/s",
+        "ideal (RAM) MB/s",
+        "CIO/GPFS",
+    ])
+    .title("Figure 16: aggregate write throughput, 1 MB outputs");
+    let mut report = Report::new("Figure 16 anchors");
+    let mut gpfs_peak = 0f64;
+    let mut cio_peak = 0f64;
+
+    for &dur in &[4.0f64, 32.0] {
+        for &procs in procs_list {
+            let cfg = ClusterConfig::bgp(procs);
+            let wl = SyntheticWorkload::waves(&cfg, waves, dur, size);
+            let gpfs_r = wl.run(&cfg, IoMode::Gpfs);
+            let cio_r = wl.run(&cfg, IoMode::Cio);
+            let ideal_r = wl.run(&cfg, IoMode::RamOnly);
+            let g = gpfs_r.write_throughput(size) / mib(1) as f64;
+            let c = cio_r.write_throughput(size) / mib(1) as f64;
+            let i = ideal_r.write_throughput(size) / mib(1) as f64;
+            gpfs_peak = gpfs_peak.max(g);
+            cio_peak = cio_peak.max(c);
+            table.row(vec![
+                format!("{procs}"),
+                format!("{dur}s"),
+                num(g),
+                num(c),
+                num(i),
+                format!("{:.1}x", c / g),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    common::maybe_write_csv(&args, &table.to_csv());
+    report.push("GPFS peak", 250.0, gpfs_peak, "MB/s");
+    report.push("CIO peak", 2100.0, cio_peak, "MB/s");
+    report.push("CIO/GPFS peak ratio", 8.4, cio_peak / gpfs_peak, "x");
+    common::footer(&report);
+}

@@ -1,0 +1,38 @@
+//! Figure 17 (+ §6.3 text): the DOCK6 molecular-docking workflow.
+//!
+//! Paper anchors, 15K tasks on 8K processors:
+//!   total 2140 s (GPFS) vs 1412 s (CIO);
+//!   stage 1 ≈ 1.06×, stage 2 = 11.7× (694 s → 59 s), stage 3 ≈ 1.5×.
+//! Large run (pass `-- --large`), 135K tasks on 96K processors, stage 1
+//! only: 1981 s (GPFS) vs 1772 s (CIO) = 1.12× — compute-bound, as the
+//! paper expects.
+//!
+//! Regenerate: `cargo bench --bench fig17` (add `-- --large` for §6.3's
+//! 96K-processor run).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use cio::config::ClusterConfig;
+use cio::sim::cluster::IoMode;
+use cio::workload::dock::{run_comparison, DockWorkflow};
+
+fn main() {
+    let args = common::args();
+    let cfg = ClusterConfig::bgp(8192);
+    let report = run_comparison(&cfg, 15_360).expect("dock comparison");
+    common::footer(&report);
+
+    if args.has("large") && !common::fast() {
+        println!("--- §6.3 large run: 135K tasks on 96K processors (stage 1 only) ---");
+        let cfg = ClusterConfig::bgp(98_304);
+        let wf = DockWorkflow { tasks: 135_168, ..Default::default() };
+        let gpfs = wf.run(&cfg, IoMode::Gpfs);
+        let cio = wf.run(&cfg, IoMode::Cio);
+        let mut large = cio::metrics::Report::new("§6.3 large run (stage 1)");
+        large.push("GPFS stage1", 1981.0, gpfs.stage1_s, "s");
+        large.push("CIO stage1", 1772.0, cio.stage1_s, "s");
+        large.push("speedup", 1.12, gpfs.stage1_s / cio.stage1_s, "x");
+        common::footer(&large);
+    }
+}

@@ -1,0 +1,129 @@
+//! Performance micro-benchmarks for the L3 hot paths (the §Perf inputs in
+//! EXPERIMENTS.md): event-engine throughput, fluid-flow churn, collector
+//! policy evaluation, archive writer/reader throughput, and PJRT scoring
+//! latency (skipped when `make artifacts` has not run).
+//!
+//! Regenerate: `cargo bench --bench perf_micro`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use cio::cio::archive::{Compression, Reader, Writer};
+use cio::cio::collector::Policy;
+use cio::config::ClusterConfig;
+use cio::sim::cluster::{IoMode, SimCluster};
+use cio::sim::engine::Engine;
+use cio::sim::flow::{FlowNet, HasFlowNet};
+use cio::util::bench::{black_box, Bencher};
+use cio::util::units::{mib, SimTime};
+use std::time::Instant;
+
+struct W {
+    net: FlowNet<W>,
+}
+impl HasFlowNet for W {
+    fn flownet(&mut self) -> &mut FlowNet<W> {
+        &mut self.net
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // --- DES engine: schedule+fire throughput.
+    b.iter("engine: schedule+fire 1k events", || {
+        let mut eng: Engine<u64> = Engine::new();
+        let mut world = 0u64;
+        for i in 0..1000u64 {
+            eng.schedule(SimTime(i), |_, w| *w += 1);
+        }
+        eng.run(&mut world);
+        black_box(world);
+    });
+
+    // --- Fluid flow network: 512-flow churn on a shared link.
+    b.iter("flownet: 512 symmetric flows", || {
+        let mut w = W { net: FlowNet::new() };
+        let mut eng: Engine<W> = Engine::new();
+        let link = w.net.add_resource("l", mib(1000) as f64);
+        for _ in 0..512 {
+            FlowNet::start(&mut eng, &mut w, &[link], mib(1), |_, _| {});
+        }
+        eng.run(&mut w);
+        black_box(w.net.flows_completed());
+    });
+
+    // --- Collector policy evaluation (the per-commit hot call).
+    let policy = Policy {
+        max_delay: SimTime::from_secs(30),
+        max_data: mib(256),
+        min_free_space: mib(128),
+    };
+    let mut i = 0u64;
+    b.iter("collector: policy should_flush", || {
+        i = i.wrapping_add(7);
+        black_box(policy.should_flush(SimTime(i % 60_000_000_000), i % mib(300), mib(500)));
+    });
+
+    // --- Whole-sim end-to-end rate: Figure-14 point as a macro bench.
+    let cfg = ClusterConfig::bgp(4096);
+    let events = {
+        let t0 = Instant::now();
+        let mut c = SimCluster::new(&cfg);
+        let r = c.run_mtc(8192, 4.0, mib(1), IoMode::Cio);
+        let dt = t0.elapsed();
+        println!(
+            "sim macro: 8192-task CIO run on 4096 procs: {:.3}s wall, {} events, {:.2} Mev/s",
+            dt.as_secs_f64(),
+            c.engine.processed(),
+            c.engine.processed() as f64 / dt.as_secs_f64() / 1e6
+        );
+        assert_eq!(r.tasks, 8192);
+        c.engine.processed()
+    };
+    black_box(events);
+
+    // --- Archive writer / reader throughput (real IO).
+    let dir = std::env::temp_dir().join(format!("cio-perf-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let payload = vec![0xABu8; 64 * 1024];
+    let mut seq = 0u32;
+    b.iter("archive: write 64 x 64KiB members", || {
+        seq += 1;
+        let path = dir.join(format!("w{seq}.cioar"));
+        let mut w = Writer::create(&path).unwrap();
+        for i in 0..64 {
+            w.add(&format!("m{i}"), &payload, Compression::None).unwrap();
+        }
+        w.finish().unwrap();
+        std::fs::remove_file(&path).unwrap();
+    });
+    let path = dir.join("read.cioar");
+    let mut w = Writer::create(&path).unwrap();
+    for i in 0..256 {
+        w.add(&format!("m{i}"), &payload, Compression::None).unwrap();
+    }
+    w.finish().unwrap();
+    let reader = Reader::open(&path).unwrap();
+    b.iter("archive: random extract 1 of 256", || {
+        let x = reader.extract("m128").unwrap();
+        black_box(x.len());
+    });
+
+    // --- PJRT scoring latency (needs artifacts).
+    match cio::runtime::ScoreModel::load_default() {
+        Ok(model) => {
+            let m = &model.meta;
+            let lig = vec![0.5f32; m.batch * m.atoms * 4];
+            let grid = vec![0.25f32; m.atoms * m.features];
+            let wts = vec![1.0f32; m.features];
+            b.iter("pjrt: score_batch (64 poses)", || {
+                let s = model.score_batch(&lig, &grid, &wts).unwrap();
+                black_box(s[0]);
+            });
+        }
+        Err(e) => println!("pjrt bench skipped: {e}"),
+    }
+
+    b.report();
+}

@@ -1,0 +1,579 @@
+//! Archive formats for collective output (§5.3).
+//!
+//! The prototype in the paper used `tar`; the design calls for `xar`,
+//! whose updateable member directory records each member's byte offset so
+//! later workflow stages can extract members **randomly and in parallel**.
+//! We implement both as real on-disk formats:
+//!
+//! * [`Writer`] streams members and finishes with a footer-located member
+//!   index (offset, size, CRC32, optional deflate) — functionally the
+//!   xar idea with a zip-style trailer so archives remain append-friendly
+//!   while being written;
+//! * [`Reader`] opens the index and extracts members by name via `seek` —
+//!   O(1) random access — including from multiple threads
+//!   ([`Reader::extract_parallel`]);
+//! * [`read_sequential`] is the tar-like fallback: scan the member stream
+//!   in order, ignoring the index — used by the `ablation_archive` bench
+//!   to quantify what xar buys over tar for stage-2 re-processing.
+//!
+//! Layout:
+//!
+//! ```text
+//! [member]* [index] [trailer]
+//! member : MAGIC_MEMBER u32 | name_len u16 | name | flags u8 |
+//!          raw_len u64 | stored_len u64 | crc32(raw) u32 | data
+//! index  : MAGIC_INDEX u32 | count u32 | entry*
+//! entry  : name_len u16 | name | offset u64 | raw_len u64 |
+//!          stored_len u64 | crc32 u32 | flags u8
+//! trailer: index_offset u64 | archive_crc? (reserved u32 = 0) | MAGIC_TRAILER u32
+//! ```
+//!
+//! All integers little-endian.
+
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Seek, SeekFrom, Write as IoWrite};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const MAGIC_MEMBER: u32 = 0xC10A_0001;
+const MAGIC_INDEX: u32 = 0xC10A_011D;
+const MAGIC_TRAILER: u32 = 0xC10A_0E4D;
+
+/// Per-member compression flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Compression {
+    /// Store raw bytes.
+    None,
+    /// Deflate (flate2) — the §7 "what role should compression play"
+    /// question; benched in `ablation_compress`.
+    Deflate,
+}
+
+impl Compression {
+    fn flag(self) -> u8 {
+        match self {
+            Compression::None => 0,
+            Compression::Deflate => 1,
+        }
+    }
+
+    fn from_flag(f: u8) -> Result<Self> {
+        match f {
+            0 => Ok(Compression::None),
+            1 => Ok(Compression::Deflate),
+            other => bail!("unknown compression flag {other}"),
+        }
+    }
+}
+
+/// One member's index entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Entry {
+    /// Member name (task output file name).
+    pub name: String,
+    /// Byte offset of the member header in the archive.
+    pub offset: u64,
+    /// Uncompressed size.
+    pub raw_len: u64,
+    /// Stored (possibly compressed) size.
+    pub stored_len: u64,
+    /// CRC32 of the raw bytes.
+    pub crc32: u32,
+    /// Compression used.
+    pub compression: Compression,
+}
+
+/// Streaming archive writer.
+pub struct Writer<F: IoWrite + Seek> {
+    file: F,
+    entries: Vec<Entry>,
+    names: BTreeMap<String, ()>,
+    offset: u64,
+    finished: bool,
+}
+
+impl Writer<std::io::BufWriter<std::fs::File>> {
+    /// Create an archive at `path`.
+    pub fn create(path: &Path) -> Result<Self> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating archive {}", path.display()))?;
+        Writer::new(std::io::BufWriter::new(f))
+    }
+}
+
+impl<F: IoWrite + Seek> Writer<F> {
+    /// Wrap any seekable sink.
+    pub fn new(file: F) -> Result<Self> {
+        Ok(Writer { file, entries: Vec::new(), names: BTreeMap::new(), offset: 0, finished: false })
+    }
+
+    /// Append one member.
+    pub fn add(&mut self, name: &str, data: &[u8], compression: Compression) -> Result<()> {
+        ensure!(!self.finished, "archive already finished");
+        ensure!(!name.is_empty() && name.len() <= u16::MAX as usize, "bad member name");
+        ensure!(
+            self.names.insert(name.to_string(), ()).is_none(),
+            "duplicate member name {name:?}"
+        );
+        let crc = crc32fast::hash(data);
+        let stored: std::borrow::Cow<[u8]> = match compression {
+            Compression::None => data.into(),
+            Compression::Deflate => {
+                let mut enc =
+                    flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::fast());
+                enc.write_all(data)?;
+                enc.finish()?.into()
+            }
+        };
+        let mut header = Vec::with_capacity(32 + name.len());
+        header.extend_from_slice(&MAGIC_MEMBER.to_le_bytes());
+        header.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        header.extend_from_slice(name.as_bytes());
+        header.push(compression.flag());
+        header.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        header.extend_from_slice(&(stored.len() as u64).to_le_bytes());
+        header.extend_from_slice(&crc.to_le_bytes());
+        self.file.write_all(&header)?;
+        self.file.write_all(&stored)?;
+        self.entries.push(Entry {
+            name: name.to_string(),
+            offset: self.offset,
+            raw_len: data.len() as u64,
+            stored_len: stored.len() as u64,
+            crc32: crc,
+            compression,
+        });
+        self.offset += header.len() as u64 + stored.len() as u64;
+        Ok(())
+    }
+
+    /// Add a member by reading a file from disk.
+    pub fn add_path(&mut self, name: &str, path: &Path, compression: Compression) -> Result<()> {
+        let data =
+            std::fs::read(path).with_context(|| format!("reading member {}", path.display()))?;
+        self.add(name, &data, compression)
+    }
+
+    /// Members written so far.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no members were added yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Bytes written so far (members only; index not included).
+    pub fn bytes_written(&self) -> u64 {
+        self.offset
+    }
+
+    /// Write the index + trailer and flush. Returns the entry table.
+    pub fn finish(mut self) -> Result<Vec<Entry>> {
+        ensure!(!self.finished, "archive already finished");
+        self.finished = true;
+        let index_offset = self.offset;
+        let mut idx = Vec::new();
+        idx.extend_from_slice(&MAGIC_INDEX.to_le_bytes());
+        idx.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for e in &self.entries {
+            idx.extend_from_slice(&(e.name.len() as u16).to_le_bytes());
+            idx.extend_from_slice(e.name.as_bytes());
+            idx.extend_from_slice(&e.offset.to_le_bytes());
+            idx.extend_from_slice(&e.raw_len.to_le_bytes());
+            idx.extend_from_slice(&e.stored_len.to_le_bytes());
+            idx.extend_from_slice(&e.crc32.to_le_bytes());
+            idx.push(e.compression.flag());
+        }
+        idx.extend_from_slice(&index_offset.to_le_bytes());
+        idx.extend_from_slice(&0u32.to_le_bytes()); // reserved
+        idx.extend_from_slice(&MAGIC_TRAILER.to_le_bytes());
+        self.file.write_all(&idx)?;
+        self.file.flush()?;
+        Ok(self.entries)
+    }
+}
+
+/// Random-access archive reader.
+pub struct Reader {
+    path: PathBuf,
+    entries: Vec<Entry>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl Reader {
+    /// Open an archive and parse its index from the trailer.
+    pub fn open(path: &Path) -> Result<Reader> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening archive {}", path.display()))?;
+        let len = f.metadata()?.len();
+        ensure!(len >= 16, "archive too short ({len} bytes)");
+        f.seek(SeekFrom::End(-16))?;
+        let mut trailer = [0u8; 16];
+        f.read_exact(&mut trailer)?;
+        let index_offset = u64::from_le_bytes(trailer[0..8].try_into().unwrap());
+        let magic = u32::from_le_bytes(trailer[12..16].try_into().unwrap());
+        ensure!(magic == MAGIC_TRAILER, "bad trailer magic {magic:#x}");
+        ensure!(index_offset < len, "index offset {index_offset} beyond EOF {len}");
+        f.seek(SeekFrom::Start(index_offset))?;
+        let mut index_bytes = vec![0u8; (len - 16 - index_offset) as usize];
+        f.read_exact(&mut index_bytes)?;
+        let mut cur = &index_bytes[..];
+        let magic = read_u32(&mut cur)?;
+        ensure!(magic == MAGIC_INDEX, "bad index magic {magic:#x}");
+        let count = read_u32(&mut cur)? as usize;
+        let mut entries = Vec::with_capacity(count);
+        let mut by_name = BTreeMap::new();
+        for i in 0..count {
+            let name_len = read_u16(&mut cur)? as usize;
+            ensure!(cur.len() >= name_len, "truncated index entry {i}");
+            let name = std::str::from_utf8(&cur[..name_len])
+                .context("non-utf8 member name")?
+                .to_string();
+            cur = &cur[name_len..];
+            let offset = read_u64(&mut cur)?;
+            let raw_len = read_u64(&mut cur)?;
+            let stored_len = read_u64(&mut cur)?;
+            let crc32 = read_u32(&mut cur)?;
+            let flags = read_u8(&mut cur)?;
+            by_name.insert(name.clone(), i);
+            entries.push(Entry {
+                name,
+                offset,
+                raw_len,
+                stored_len,
+                crc32,
+                compression: Compression::from_flag(flags)?,
+            });
+        }
+        Ok(Reader { path: path.to_path_buf(), entries, by_name })
+    }
+
+    /// Member entries in archive order.
+    pub fn entries(&self) -> &[Entry] {
+        &self.entries
+    }
+
+    /// Number of members.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the archive holds no members.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Look up a member by name.
+    pub fn entry(&self, name: &str) -> Option<&Entry> {
+        self.by_name.get(name).map(|&i| &self.entries[i])
+    }
+
+    /// Extract one member by name (random access: one seek + one read).
+    pub fn extract(&self, name: &str) -> Result<Vec<u8>> {
+        let entry = self.entry(name).with_context(|| format!("no member {name:?}"))?;
+        let mut f = std::fs::File::open(&self.path)?;
+        Self::extract_from(&mut f, entry)
+    }
+
+    /// Extract a member given an already-open handle (thread-local handles
+    /// for parallel extraction).
+    fn extract_from(f: &mut std::fs::File, entry: &Entry) -> Result<Vec<u8>> {
+        // Skip the member header: magic(4) name_len(2) name flags(1)
+        // raw(8) stored(8) crc(4).
+        let header_len = 4 + 2 + entry.name.len() as u64 + 1 + 8 + 8 + 4;
+        f.seek(SeekFrom::Start(entry.offset))?;
+        let mut head = vec![0u8; header_len as usize];
+        f.read_exact(&mut head)?;
+        let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+        ensure!(magic == MAGIC_MEMBER, "bad member magic at {}", entry.offset);
+        let mut stored = vec![0u8; entry.stored_len as usize];
+        f.read_exact(&mut stored)?;
+        let raw = match entry.compression {
+            Compression::None => stored,
+            Compression::Deflate => {
+                let mut out = Vec::with_capacity(entry.raw_len as usize);
+                flate2::read::DeflateDecoder::new(&stored[..]).read_to_end(&mut out)?;
+                out
+            }
+        };
+        ensure!(raw.len() as u64 == entry.raw_len, "length mismatch for {}", entry.name);
+        let crc = crc32fast::hash(&raw);
+        ensure!(crc == entry.crc32, "CRC mismatch for {} (corrupt archive)", entry.name);
+        Ok(raw)
+    }
+
+    /// Extract every member with `threads` workers; `visit` is called with
+    /// `(name, bytes)` from worker threads. This is the §5.3 parallel
+    /// re-processing path that the indexed format enables.
+    pub fn extract_parallel(
+        &self,
+        threads: usize,
+        visit: impl Fn(&str, &[u8]) + Send + Sync,
+    ) -> Result<()> {
+        let threads = threads.max(1).min(self.entries.len().max(1));
+        let next = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let errors = std::sync::Mutex::new(Vec::<anyhow::Error>::new());
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                let next = next.clone();
+                let errors = &errors;
+                let visit = &visit;
+                let entries = &self.entries;
+                let path = &self.path;
+                scope.spawn(move || {
+                    let mut f = match std::fs::File::open(path) {
+                        Ok(f) => f,
+                        Err(e) => {
+                            errors.lock().unwrap().push(e.into());
+                            return;
+                        }
+                    };
+                    loop {
+                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= entries.len() {
+                            break;
+                        }
+                        match Self::extract_from(&mut f, &entries[i]) {
+                            Ok(bytes) => visit(&entries[i].name, &bytes),
+                            Err(e) => {
+                                errors.lock().unwrap().push(e);
+                                break;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let errs = errors.into_inner().unwrap();
+        if let Some(e) = errs.into_iter().next() {
+            return Err(e);
+        }
+        Ok(())
+    }
+}
+
+/// Tar-like sequential scan: read members in order without the index
+/// (what stage 2 must do when the collector used a tar-style archive).
+/// Visits `(name, raw bytes)`; verifies CRCs.
+pub fn read_sequential(path: &Path, mut visit: impl FnMut(&str, &[u8])) -> Result<usize> {
+    let data = std::fs::read(path)?;
+    let mut cur = &data[..];
+    let mut count = 0;
+    loop {
+        if cur.len() < 4 {
+            bail!("truncated archive: no trailer found");
+        }
+        let magic = u32::from_le_bytes(cur[0..4].try_into().unwrap());
+        if magic == MAGIC_INDEX {
+            return Ok(count); // reached the index: done
+        }
+        ensure!(magic == MAGIC_MEMBER, "bad member magic {magic:#x}");
+        cur = &cur[4..];
+        let name_len = read_u16(&mut cur)? as usize;
+        let name = std::str::from_utf8(&cur[..name_len])?.to_string();
+        cur = &cur[name_len..];
+        let flags = read_u8(&mut cur)?;
+        let raw_len = read_u64(&mut cur)? as usize;
+        let stored_len = read_u64(&mut cur)? as usize;
+        let crc = read_u32(&mut cur)?;
+        ensure!(cur.len() >= stored_len, "truncated member {name}");
+        let stored = &cur[..stored_len];
+        cur = &cur[stored_len..];
+        let raw: Vec<u8> = match Compression::from_flag(flags)? {
+            Compression::None => stored.to_vec(),
+            Compression::Deflate => {
+                let mut out = Vec::with_capacity(raw_len);
+                flate2::read::DeflateDecoder::new(stored).read_to_end(&mut out)?;
+                out
+            }
+        };
+        ensure!(crc32fast::hash(&raw) == crc, "CRC mismatch for {name}");
+        visit(&name, &raw);
+        count += 1;
+    }
+}
+
+fn read_u8(cur: &mut &[u8]) -> Result<u8> {
+    ensure!(!cur.is_empty(), "truncated");
+    let v = cur[0];
+    *cur = &cur[1..];
+    Ok(v)
+}
+
+fn read_u16(cur: &mut &[u8]) -> Result<u16> {
+    ensure!(cur.len() >= 2, "truncated");
+    let v = u16::from_le_bytes(cur[0..2].try_into().unwrap());
+    *cur = &cur[2..];
+    Ok(v)
+}
+
+fn read_u32(cur: &mut &[u8]) -> Result<u32> {
+    ensure!(cur.len() >= 4, "truncated");
+    let v = u32::from_le_bytes(cur[0..4].try_into().unwrap());
+    *cur = &cur[4..];
+    Ok(v)
+}
+
+fn read_u64(cur: &mut &[u8]) -> Result<u64> {
+    ensure!(cur.len() >= 8, "truncated");
+    let v = u64::from_le_bytes(cur[0..8].try_into().unwrap());
+    *cur = &cur[8..];
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cio-archive-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_members(n: usize) -> Vec<(String, Vec<u8>)> {
+        (0..n)
+            .map(|i| {
+                let name = format!("task-{i:04}.out");
+                let data: Vec<u8> = (0..(i * 37 + 11)).map(|j| ((i * 131 + j * 7) % 251) as u8).collect();
+                (name, data)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_random_access() {
+        let dir = tmpdir("rt");
+        let path = dir.join("a.cioar");
+        let members = sample_members(20);
+        let mut w = Writer::create(&path).unwrap();
+        for (name, data) in &members {
+            w.add(name, data, Compression::None).unwrap();
+        }
+        assert_eq!(w.len(), 20);
+        w.finish().unwrap();
+
+        let r = Reader::open(&path).unwrap();
+        assert_eq!(r.len(), 20);
+        // Random access in arbitrary order.
+        for (name, data) in members.iter().rev() {
+            assert_eq!(&r.extract(name).unwrap(), data);
+        }
+        assert!(r.extract("missing").is_err());
+    }
+
+    #[test]
+    fn deflate_members_roundtrip_and_shrink() {
+        let dir = tmpdir("z");
+        let path = dir.join("z.cioar");
+        let compressible = vec![b'x'; 100_000];
+        let mut w = Writer::create(&path).unwrap();
+        w.add("big.txt", &compressible, Compression::Deflate).unwrap();
+        let entries = w.finish().unwrap();
+        assert!(entries[0].stored_len < 10_000, "deflate should crush runs");
+        let r = Reader::open(&path).unwrap();
+        assert_eq!(r.extract("big.txt").unwrap(), compressible);
+    }
+
+    #[test]
+    fn sequential_scan_matches() {
+        let dir = tmpdir("seq");
+        let path = dir.join("s.cioar");
+        let members = sample_members(10);
+        let mut w = Writer::create(&path).unwrap();
+        for (name, data) in &members {
+            w.add(name, data, Compression::None).unwrap();
+        }
+        w.finish().unwrap();
+        let mut seen = Vec::new();
+        let n = read_sequential(&path, |name, data| seen.push((name.to_string(), data.to_vec())))
+            .unwrap();
+        assert_eq!(n, 10);
+        assert_eq!(seen, members);
+    }
+
+    #[test]
+    fn parallel_extraction_sees_all_members() {
+        let dir = tmpdir("par");
+        let path = dir.join("p.cioar");
+        let members = sample_members(64);
+        let mut w = Writer::create(&path).unwrap();
+        for (name, data) in &members {
+            w.add(name, data, Compression::Deflate).unwrap();
+        }
+        w.finish().unwrap();
+        let r = Reader::open(&path).unwrap();
+        let seen = Mutex::new(std::collections::BTreeMap::new());
+        r.extract_parallel(8, |name, data| {
+            seen.lock().unwrap().insert(name.to_string(), data.to_vec());
+        })
+        .unwrap();
+        let seen = seen.into_inner().unwrap();
+        assert_eq!(seen.len(), 64);
+        for (name, data) in &members {
+            assert_eq!(&seen[name], data);
+        }
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let dir = tmpdir("dup");
+        let mut w = Writer::create(&dir.join("d.cioar")).unwrap();
+        w.add("x", b"1", Compression::None).unwrap();
+        assert!(w.add("x", b"2", Compression::None).is_err());
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let dir = tmpdir("corrupt");
+        let path = dir.join("c.cioar");
+        let mut w = Writer::create(&path).unwrap();
+        w.add("victim", &vec![7u8; 4096], Compression::None).unwrap();
+        w.finish().unwrap();
+        // Flip a data byte mid-member.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = 200;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let r = Reader::open(&path).unwrap();
+        let err = r.extract("victim").unwrap_err();
+        assert!(err.to_string().contains("CRC mismatch"), "{err}");
+    }
+
+    #[test]
+    fn truncated_archive_rejected() {
+        let dir = tmpdir("trunc");
+        let path = dir.join("t.cioar");
+        std::fs::write(&path, b"short").unwrap();
+        assert!(Reader::open(&path).is_err());
+    }
+
+    #[test]
+    fn empty_archive_roundtrips() {
+        let dir = tmpdir("empty");
+        let path = dir.join("e.cioar");
+        let w = Writer::create(&path).unwrap();
+        assert!(w.is_empty());
+        w.finish().unwrap();
+        let r = Reader::open(&path).unwrap();
+        assert!(r.is_empty());
+        assert_eq!(read_sequential(&path, |_, _| {}).unwrap(), 0);
+    }
+
+    #[test]
+    fn add_path_reads_from_disk() {
+        let dir = tmpdir("frompath");
+        let member = dir.join("input.bin");
+        std::fs::write(&member, b"file contents").unwrap();
+        let path = dir.join("f.cioar");
+        let mut w = Writer::create(&path).unwrap();
+        w.add_path("input.bin", &member, Compression::None).unwrap();
+        w.finish().unwrap();
+        let r = Reader::open(&path).unwrap();
+        assert_eq!(r.extract("input.bin").unwrap(), b"file contents");
+    }
+}

@@ -1,0 +1,239 @@
+//! First-class file-domain collective operations (§2's abstract model).
+//!
+//! The paper frames its mechanisms as the file analogues of MPI
+//! collectives: *broadcast* (one GFS object → every IFS/LFS), *scatter*
+//! (partition one object's members across IFS groups), and *gather*
+//! (assemble per-group outputs into one GFS archive). The distributor and
+//! collector implement broadcast and gather operationally; this module
+//! exposes all three as a coherent API over the real-bytes runtime
+//! ([`crate::cio::local`]) so applications can program against collective
+//! verbs instead of wiring staging by hand.
+//!
+//! All three operate on [`crate::cio::archive`] containers, because the
+//! member table is what makes scatter/gather well-defined for files:
+//! scatter splits *members*, gather merges *members*, and both preserve
+//! names and bytes exactly (checked by CRC on every read).
+
+use crate::cio::archive::{Compression, Reader, Writer};
+use crate::cio::distributor::TreeShape;
+use crate::cio::local::{distribute_to_ifs, LocalLayout};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Outcome of a collective operation (bytes and object counts moved).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CollectiveStats {
+    /// Objects (files / archive members) moved.
+    pub objects: u64,
+    /// Total payload bytes moved.
+    pub bytes: u64,
+    /// Physical copies performed (broadcast: n-1 tree copies).
+    pub copies: u64,
+}
+
+/// Broadcast one GFS file to every IFS data directory over a spanning
+/// tree. Returns stats; replicas are byte-identical (delegates to the
+/// distributor).
+pub fn broadcast(layout: &LocalLayout, gfs_file: &str, shape: TreeShape) -> Result<CollectiveStats> {
+    let size = std::fs::metadata(layout.gfs().join(gfs_file))
+        .with_context(|| format!("broadcast source {gfs_file}"))?
+        .len();
+    let copies = distribute_to_ifs(layout, gfs_file, shape)? as u64;
+    Ok(CollectiveStats { objects: 1, bytes: size * copies, copies })
+}
+
+/// Scatter: partition the members of a GFS archive across IFS groups
+/// (round-robin by member index — the read-few placement: each member is
+/// consumed by tasks of one group). Each group receives
+/// `<stem>-part<g>.cioar` in its data directory.
+pub fn scatter(layout: &LocalLayout, gfs_archive: &str, compression: Compression) -> Result<CollectiveStats> {
+    let src_path = layout.gfs().join(gfs_archive);
+    let reader = Reader::open(&src_path)?;
+    let groups = layout.ifs_groups();
+    let stem = gfs_archive.trim_end_matches(".cioar");
+    let mut writers: Vec<Writer<_>> = (0..groups)
+        .map(|g| {
+            let p = layout.ifs_data(g).join(format!("{stem}-part{g}.cioar"));
+            Writer::create(&p)
+        })
+        .collect::<Result<_>>()?;
+    let mut stats = CollectiveStats::default();
+    for (i, entry) in reader.entries().iter().enumerate() {
+        let g = (i as u32) % groups;
+        let data = reader.extract(&entry.name)?;
+        stats.objects += 1;
+        stats.bytes += data.len() as u64;
+        stats.copies += 1;
+        writers[g as usize].add(&entry.name, &data, compression)?;
+    }
+    for w in writers {
+        w.finish()?;
+    }
+    Ok(stats)
+}
+
+/// Gather: merge every IFS group's `<stem>-part<g>.cioar` (or any archive
+/// matching the stem) back into one archive on GFS. The inverse of
+/// [`scatter`]; member order is (group, original order), names must be
+/// globally unique (guaranteed by scatter; enforced by the writer).
+pub fn gather(
+    layout: &LocalLayout,
+    stem: &str,
+    gfs_out: &str,
+    compression: Compression,
+) -> Result<CollectiveStats> {
+    let mut out = Writer::create(&layout.gfs().join(gfs_out))?;
+    let mut stats = CollectiveStats::default();
+    for g in 0..layout.ifs_groups() {
+        let part = layout.ifs_data(g).join(format!("{stem}-part{g}.cioar"));
+        if !part.is_file() {
+            continue;
+        }
+        let reader = Reader::open(&part)?;
+        for entry in reader.entries() {
+            let data = reader.extract(&entry.name)?;
+            stats.objects += 1;
+            stats.bytes += data.len() as u64;
+            stats.copies += 1;
+            out.add(&entry.name, &data, compression)?;
+        }
+    }
+    out.finish()?;
+    Ok(stats)
+}
+
+/// Scatter a plain directory of files (not yet archived) on GFS into
+/// per-group archives — the common first step when a previous stage left
+/// loose files. Files are assigned round-robin in sorted-name order.
+pub fn scatter_dir(layout: &LocalLayout, gfs_dir: &Path, stem: &str) -> Result<CollectiveStats> {
+    let mut files: Vec<_> = std::fs::read_dir(gfs_dir)?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.metadata().map(|m| m.is_file()).unwrap_or(false))
+        .map(|e| e.path())
+        .collect();
+    files.sort();
+    let groups = layout.ifs_groups();
+    let mut writers: Vec<Writer<_>> = (0..groups)
+        .map(|g| Writer::create(&layout.ifs_data(g).join(format!("{stem}-part{g}.cioar"))))
+        .collect::<Result<_>>()?;
+    let mut stats = CollectiveStats::default();
+    for (i, path) in files.iter().enumerate() {
+        let g = (i as u32 % groups) as usize;
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        let data = std::fs::read(path)?;
+        stats.objects += 1;
+        stats.bytes += data.len() as u64;
+        stats.copies += 1;
+        writers[g].add(&name, &data, Compression::None)?;
+    }
+    for w in writers {
+        w.finish()?;
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    fn workspace(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cio-coll-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn make_archive(layout: &LocalLayout, name: &str, members: usize) -> BTreeMap<String, Vec<u8>> {
+        let mut w = Writer::create(&layout.gfs().join(name)).unwrap();
+        let mut expect = BTreeMap::new();
+        for i in 0..members {
+            let mname = format!("obj-{i:03}");
+            let data: Vec<u8> = (0..100 + i).map(|j| ((i * 31 + j) % 251) as u8).collect();
+            w.add(&mname, &data, Compression::None).unwrap();
+            expect.insert(mname, data);
+        }
+        w.finish().unwrap();
+        expect
+    }
+
+    #[test]
+    fn broadcast_replicates_everywhere() {
+        let layout = LocalLayout::create(&workspace("bc"), 16, 4).unwrap(); // 4 groups
+        std::fs::write(layout.gfs().join("db.bin"), vec![9u8; 5000]).unwrap();
+        let stats = broadcast(&layout, "db.bin", TreeShape::Binomial).unwrap();
+        assert_eq!(stats.objects, 1);
+        assert_eq!(stats.copies, 4);
+        assert_eq!(stats.bytes, 20_000);
+        for g in 0..4 {
+            assert_eq!(std::fs::read(layout.ifs_data(g).join("db.bin")).unwrap().len(), 5000);
+        }
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let layout = LocalLayout::create(&workspace("sg"), 12, 4).unwrap(); // 3 groups
+        let expect = make_archive(&layout, "input.cioar", 20);
+        let s = scatter(&layout, "input.cioar", Compression::None).unwrap();
+        assert_eq!(s.objects, 20);
+        // Each group got a part with ~1/3 of the members.
+        for g in 0..3 {
+            let r = Reader::open(&layout.ifs_data(g).join(format!("input-part{g}.cioar"))).unwrap();
+            assert!((6..=7).contains(&r.len()), "group {g}: {}", r.len());
+        }
+        // Gather back and compare every member byte-for-byte.
+        let g = gather(&layout, "input", "output.cioar", Compression::None).unwrap();
+        assert_eq!(g.objects, 20);
+        let r = Reader::open(&layout.gfs().join("output.cioar")).unwrap();
+        assert_eq!(r.len(), 20);
+        for (name, data) in &expect {
+            assert_eq!(&r.extract(name).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn scatter_preserves_bytes_with_compression() {
+        let layout = LocalLayout::create(&workspace("sgz"), 8, 4).unwrap();
+        let expect = make_archive(&layout, "in.cioar", 9);
+        scatter(&layout, "in.cioar", Compression::Deflate).unwrap();
+        gather(&layout, "in", "back.cioar", Compression::Deflate).unwrap();
+        let r = Reader::open(&layout.gfs().join("back.cioar")).unwrap();
+        for (name, data) in &expect {
+            assert_eq!(&r.extract(name).unwrap(), data, "{name}");
+        }
+    }
+
+    #[test]
+    fn scatter_dir_archives_loose_files() {
+        let layout = LocalLayout::create(&workspace("sd"), 8, 4).unwrap(); // 2 groups
+        let loose = layout.gfs().join("stage1-out");
+        std::fs::create_dir_all(&loose).unwrap();
+        for i in 0..10 {
+            std::fs::write(loose.join(format!("f{i}.dat")), vec![i as u8; 64]).unwrap();
+        }
+        let stats = scatter_dir(&layout, &loose, "stage1").unwrap();
+        assert_eq!(stats.objects, 10);
+        let r0 = Reader::open(&layout.ifs_data(0).join("stage1-part0.cioar")).unwrap();
+        let r1 = Reader::open(&layout.ifs_data(1).join("stage1-part1.cioar")).unwrap();
+        assert_eq!(r0.len() + r1.len(), 10);
+    }
+
+    #[test]
+    fn broadcast_missing_source_errors() {
+        let layout = LocalLayout::create(&workspace("err"), 4, 4).unwrap();
+        assert!(broadcast(&layout, "ghost.bin", TreeShape::Binomial).is_err());
+    }
+
+    #[test]
+    fn gather_skips_absent_parts() {
+        // A group that produced nothing must not break the gather.
+        let layout = LocalLayout::create(&workspace("skip"), 12, 4).unwrap(); // 3 groups
+        let mut w = Writer::create(&layout.ifs_data(1).join("x-part1.cioar")).unwrap();
+        w.add("only", b"data", Compression::None).unwrap();
+        w.finish().unwrap();
+        let stats = gather(&layout, "x", "merged.cioar", Compression::None).unwrap();
+        assert_eq!(stats.objects, 1);
+        let r = Reader::open(&layout.gfs().join("merged.cioar")).unwrap();
+        assert_eq!(r.extract("only").unwrap(), b"data");
+    }
+}

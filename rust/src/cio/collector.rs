@@ -1,0 +1,234 @@
+//! Output collector policy (§5.2).
+//!
+//! The paper's pseudocode, verbatim:
+//!
+//! ```text
+//! while workload is running
+//!   if time since last write > maxDelay
+//!   or data buffered > maxData
+//!   or free space on IFS < minFreeSpace
+//!   then write archive to GFS from staging dir
+//! ```
+//!
+//! [`Policy`] is that loop's decision function, pure and unit-testable; it
+//! is evaluated event-driven (on every staging add and on a timer) by both
+//! the simulator ([`crate::sim::cluster`]) and the real-bytes local
+//! runtime ([`crate::cio::local`]).
+
+use crate::config::CollectorConfig;
+use crate::util::units::SimTime;
+
+/// Why a flush fired (recorded per archive for the ablation bench).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FlushReason {
+    /// `time since last write > maxDelay`.
+    MaxDelay,
+    /// `data buffered > maxData`.
+    MaxData,
+    /// `free space on IFS < minFreeSpace`.
+    MinFreeSpace,
+    /// Workload ended; final drain.
+    Shutdown,
+}
+
+/// The §5.2 policy knobs plus the decision function.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Policy {
+    /// Flush when this much time has passed since the last archive write.
+    pub max_delay: SimTime,
+    /// Flush when at least this many bytes are buffered.
+    pub max_data: u64,
+    /// Flush when staging free space falls below this.
+    pub min_free_space: u64,
+}
+
+impl From<&CollectorConfig> for Policy {
+    fn from(c: &CollectorConfig) -> Self {
+        Policy {
+            max_delay: SimTime::from_secs_f64(c.max_delay_s),
+            max_data: c.max_data,
+            min_free_space: c.min_free_space,
+        }
+    }
+}
+
+impl Policy {
+    /// Evaluate the §5.2 conditions. `since_last_write` is the time since
+    /// the last archive write (or since collector start), `buffered` the
+    /// bytes in the staging dir, `free` the staging free space. Returns
+    /// the *first* matching reason in the paper's order, or `None`.
+    ///
+    /// A flush with zero buffered bytes is never requested: an empty
+    /// archive write would only burn a GFS create.
+    pub fn should_flush(&self, since_last_write: SimTime, buffered: u64, free: u64) -> Option<FlushReason> {
+        if buffered == 0 {
+            return None;
+        }
+        if since_last_write > self.max_delay {
+            return Some(FlushReason::MaxDelay);
+        }
+        if buffered > self.max_data {
+            return Some(FlushReason::MaxData);
+        }
+        if free < self.min_free_space {
+            return Some(FlushReason::MinFreeSpace);
+        }
+        None
+    }
+
+    /// The latest instant by which a timer must re-evaluate the policy,
+    /// given the last write happened at `last_write`: the `maxDelay` edge.
+    pub fn next_deadline(&self, last_write: SimTime) -> SimTime {
+        last_write + self.max_delay + SimTime(1)
+    }
+}
+
+/// Per-collector flush statistics (one collector per IFS/ION).
+#[derive(Debug, Clone, Default)]
+pub struct CollectorStats {
+    /// Archives written to GFS.
+    pub archives: u64,
+    /// Task-output files absorbed into those archives.
+    pub files: u64,
+    /// Bytes shipped to GFS.
+    pub bytes: u64,
+    /// Flush-reason histogram: [MaxDelay, MaxData, MinFreeSpace, Shutdown].
+    pub reasons: [u64; 4],
+}
+
+impl CollectorStats {
+    /// Record one archive write.
+    pub fn record(&mut self, reason: FlushReason, files: u64, bytes: u64) {
+        self.archives += 1;
+        self.files += files;
+        self.bytes += bytes;
+        let idx = match reason {
+            FlushReason::MaxDelay => 0,
+            FlushReason::MaxData => 1,
+            FlushReason::MinFreeSpace => 2,
+            FlushReason::Shutdown => 3,
+        };
+        self.reasons[idx] += 1;
+    }
+
+    /// Fold another collector's stats into this one (cluster-wide totals).
+    pub fn merge(&mut self, other: &CollectorStats) {
+        self.archives += other.archives;
+        self.files += other.files;
+        self.bytes += other.bytes;
+        for i in 0..4 {
+            self.reasons[i] += other.reasons[i];
+        }
+    }
+
+    /// GFS file-create reduction factor: task files per archive file.
+    /// The headline mechanism — thousands of small creates collapse into
+    /// one create per archive.
+    pub fn reduction_factor(&self) -> f64 {
+        if self.archives == 0 {
+            return 1.0;
+        }
+        self.files as f64 / self.archives as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::mib;
+
+    fn policy() -> Policy {
+        Policy {
+            max_delay: SimTime::from_secs(30),
+            max_data: mib(256),
+            min_free_space: mib(128),
+        }
+    }
+
+    #[test]
+    fn no_flush_when_quiet() {
+        let p = policy();
+        assert_eq!(p.should_flush(SimTime::from_secs(5), mib(10), mib(500)), None);
+    }
+
+    #[test]
+    fn empty_buffer_never_flushes() {
+        let p = policy();
+        assert_eq!(p.should_flush(SimTime::from_secs(100), 0, 0), None);
+    }
+
+    #[test]
+    fn max_delay_trips() {
+        let p = policy();
+        assert_eq!(
+            p.should_flush(SimTime::from_secs(31), 1, mib(500)),
+            Some(FlushReason::MaxDelay)
+        );
+        // Boundary: exactly maxDelay is NOT `>` maxDelay.
+        assert_eq!(p.should_flush(SimTime::from_secs(30), 1, mib(500)), None);
+    }
+
+    #[test]
+    fn max_data_trips() {
+        let p = policy();
+        assert_eq!(
+            p.should_flush(SimTime::from_secs(1), mib(256) + 1, mib(500)),
+            Some(FlushReason::MaxData)
+        );
+        assert_eq!(p.should_flush(SimTime::from_secs(1), mib(256), mib(500)), None);
+    }
+
+    #[test]
+    fn min_free_trips() {
+        let p = policy();
+        assert_eq!(
+            p.should_flush(SimTime::from_secs(1), mib(10), mib(127)),
+            Some(FlushReason::MinFreeSpace)
+        );
+        assert_eq!(p.should_flush(SimTime::from_secs(1), mib(10), mib(128)), None);
+    }
+
+    #[test]
+    fn reason_priority_follows_paper_order() {
+        let p = policy();
+        // All three conditions true -> maxDelay wins (first in pseudocode).
+        assert_eq!(
+            p.should_flush(SimTime::from_secs(100), mib(300), mib(1)),
+            Some(FlushReason::MaxDelay)
+        );
+        // Data + free true -> maxData wins.
+        assert_eq!(
+            p.should_flush(SimTime::from_secs(1), mib(300), mib(1)),
+            Some(FlushReason::MaxData)
+        );
+    }
+
+    #[test]
+    fn deadline_is_just_past_max_delay() {
+        let p = policy();
+        let d = p.next_deadline(SimTime::from_secs(10));
+        assert_eq!(d, SimTime::from_secs(40) + SimTime(1));
+        assert!(p.should_flush(d - SimTime::from_secs(10), 1, mib(500)).is_some());
+    }
+
+    #[test]
+    fn stats_accumulate_and_reduce() {
+        let mut s = CollectorStats::default();
+        s.record(FlushReason::MaxData, 1000, mib(100));
+        s.record(FlushReason::MaxDelay, 24, mib(1));
+        let mut total = CollectorStats::default();
+        total.merge(&s);
+        total.merge(&s);
+        assert_eq!(total.archives, 4);
+        assert_eq!(total.files, 2048);
+        assert_eq!(total.reasons, [2, 2, 0, 0]);
+        assert!((total.reduction_factor() - 512.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_config() {
+        let p = Policy::from(&CollectorConfig::default());
+        assert_eq!(p.max_delay, SimTime::from_secs(30));
+        assert_eq!(p.max_data, mib(256));
+    }
+}

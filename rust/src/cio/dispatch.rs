@@ -1,0 +1,133 @@
+//! Falkon-like task dispatch (§5, §6.2).
+//!
+//! The paper executes all tasks under the Falkon lightweight dispatcher.
+//! Two properties matter for reproducing the figures:
+//!
+//! * a sustained **dispatch-rate ceiling** (a few thousand tasks/s on the
+//!   BG/P) — the suspected cause of the Figure 14 efficiency anomaly at
+//!   32K processors;
+//! * a small per-task dispatch **latency**.
+//!
+//! [`Pacer`] is the pure pacing model shared by the simulator and the
+//! local thread-pool executor ([`crate::cio::local`]).
+
+use crate::config::DispatchConfig;
+use crate::util::units::SimTime;
+
+/// Rate-ceiling pacer: hands out dispatch instants no faster than the
+/// configured sustained rate, plus a fixed dispatch latency.
+#[derive(Debug, Clone)]
+pub struct Pacer {
+    /// Minimum spacing between consecutive dispatches.
+    interval: SimTime,
+    /// Fixed submission→start latency.
+    latency: SimTime,
+    /// Next instant a dispatch slot is free.
+    next_slot: SimTime,
+    /// Total dispatches paced.
+    dispatched: u64,
+    /// Dispatches that had to wait for a slot (rate-limited).
+    throttled: u64,
+}
+
+impl Pacer {
+    /// Pacer from the dispatcher configuration.
+    pub fn new(cfg: &DispatchConfig) -> Self {
+        assert!(cfg.rate_ceiling > 0.0);
+        Pacer {
+            interval: SimTime::from_secs_f64(1.0 / cfg.rate_ceiling),
+            latency: SimTime::from_secs_f64(cfg.latency_s),
+            next_slot: SimTime::ZERO,
+            dispatched: 0,
+            throttled: 0,
+        }
+    }
+
+    /// Reserve the next dispatch slot at or after `now`; returns the
+    /// instant the task actually starts.
+    pub fn dispatch_at(&mut self, now: SimTime) -> SimTime {
+        let slot = if self.next_slot > now {
+            self.throttled += 1;
+            self.next_slot
+        } else {
+            now
+        };
+        self.next_slot = slot + self.interval;
+        self.dispatched += 1;
+        slot + self.latency
+    }
+
+    /// Tasks dispatched.
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched
+    }
+
+    /// Dispatches delayed by the rate ceiling.
+    pub fn throttled(&self) -> u64 {
+        self.throttled
+    }
+
+    /// Fraction of dispatches that hit the ceiling — the Figure 14
+    /// anomaly detector.
+    pub fn throttle_fraction(&self) -> f64 {
+        if self.dispatched == 0 {
+            0.0
+        } else {
+            self.throttled as f64 / self.dispatched as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pacer(rate: f64, latency_s: f64) -> Pacer {
+        Pacer::new(&DispatchConfig { rate_ceiling: rate, latency_s })
+    }
+
+    #[test]
+    fn unconstrained_when_slow() {
+        let mut p = pacer(1000.0, 0.0);
+        // One dispatch per 10ms demand, 1ms capacity: never throttled.
+        for i in 0..100u64 {
+            let now = SimTime::from_millis(i * 10);
+            assert_eq!(p.dispatch_at(now), now);
+        }
+        assert_eq!(p.throttled(), 0);
+        assert_eq!(p.dispatched(), 100);
+    }
+
+    #[test]
+    fn burst_is_paced_at_ceiling() {
+        let mut p = pacer(1000.0, 0.0);
+        // 100 tasks submitted at t=0 must spread at 1ms intervals.
+        let starts: Vec<SimTime> = (0..100).map(|_| p.dispatch_at(SimTime::ZERO)).collect();
+        assert_eq!(starts[0], SimTime::ZERO);
+        assert_eq!(starts[1], SimTime::from_millis(1));
+        assert_eq!(starts[99], SimTime::from_millis(99));
+        assert_eq!(p.throttled(), 99);
+        assert!((p.throttle_fraction() - 0.99).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_added_after_pacing() {
+        let mut p = pacer(1000.0, 0.005);
+        let s0 = p.dispatch_at(SimTime::ZERO);
+        assert_eq!(s0, SimTime::from_millis(5));
+        let s1 = p.dispatch_at(SimTime::ZERO);
+        assert_eq!(s1, SimTime::from_millis(6), "slot at 1ms + 5ms latency");
+    }
+
+    #[test]
+    fn ceiling_throughput_converges() {
+        let mut p = pacer(3000.0, 0.0);
+        let mut last = SimTime::ZERO;
+        for _ in 0..30_000 {
+            last = p.dispatch_at(SimTime::ZERO);
+        }
+        // 30K tasks at 3000/s -> last at ~10s.
+        let t = last.as_secs_f64();
+        assert!((t - 10.0).abs() < 0.05, "last dispatch at {t}");
+    }
+}

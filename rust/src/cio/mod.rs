@@ -1,0 +1,35 @@
+//! The paper's contribution: collective IO for file-based many-task
+//! computing.
+//!
+//! * [`placement`] — §5.1's tiering policy: which storage tier (LFS / IFS
+//!   / replicated IFS / GFS) each dataset belongs on, the CN↔IFS mapping
+//!   (Figure 8), and the future-work auto-ratio / learned-placement
+//!   extensions (§7).
+//! * [`distributor`] — §5.1's input distributor: broadcast read-many data
+//!   over a spanning tree of copies (Chirp `replicate`-style), stage
+//!   read-few data to LFS/IFS.
+//! * [`collector`] — §5.2's output collector: batch task outputs in an IFS
+//!   staging area and archive them to GFS asynchronously under the
+//!   `maxDelay / maxData / minFreeSpace` policy.
+//! * [`archive`] — §5.3's archive formats: a sequential (tar-like) format
+//!   and an indexed (xar-like) format whose member table supports random
+//!   access and parallel extraction by downstream workflow stages. Real
+//!   on-disk formats with CRC checking, used by the local runtime.
+//! * [`dispatch`] — Falkon-like task dispatch policy (batched, rate-
+//!   limited) shared by the simulator and the local thread-pool executor.
+//! * [`stage`] — multi-stage dataflow plumbing (§2's writer→reader
+//!   synchronization and §5.3's IFS caching between stages).
+//! * [`local`] — the real-bytes runtime: the same distributor/collector
+//!   machinery operating on actual directories with threads, so the
+//!   archive and policy code paths are exercised with real data in tests
+//!   and examples.
+
+pub mod archive;
+pub mod collective;
+pub mod collector;
+pub mod dispatch;
+pub mod distributor;
+pub mod local;
+pub mod placement;
+pub mod stage;
+pub mod swift;

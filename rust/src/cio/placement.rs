@@ -1,0 +1,271 @@
+//! Data placement policy (§5.1) and the CN↔IFS mapping (Figure 8).
+//!
+//! The paper's staging rules:
+//!
+//! * small input datasets → the LFS of the compute nodes that read them;
+//! * datasets read by one task but too large for an LFS → an IFS of
+//!   sufficient size;
+//! * large datasets read by many tasks → **replicated to all IFSs**
+//!   serving the computation.
+//!
+//! The prototype hard-coded these decisions; here they are a first-class
+//! policy ([`PlacementPolicy::decide`]). The §7 future-work items are also
+//! implemented: [`auto_ratio`] searches for the CN:IFS ratio that
+//! maximizes modeled per-node read bandwidth for a workload, and
+//! [`LearnedPlacement`] replays a previous run's IO trace to pre-place
+//! files (the "learn from the IO patterns of previous runs" item).
+
+use crate::config::ClusterConfig;
+use std::collections::HashMap;
+
+/// Storage tier assignment for a dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tier {
+    /// Stage to each reading node's local RAM disk.
+    Lfs,
+    /// Stage to one intermediate file system.
+    Ifs,
+    /// Replicate to every IFS serving the computation (read-many).
+    IfsReplicated,
+    /// Leave on the global file system (too large for any intermediate
+    /// tier; read directly).
+    Gfs,
+}
+
+/// A dataset the distributor must place.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Dataset {
+    /// Name (key for learned placement).
+    pub name: String,
+    /// Size in bytes.
+    pub bytes: u64,
+    /// Number of distinct tasks that read it (the read-many / read-few
+    /// distinction; the paper assumes this is known from dependency info).
+    pub readers: u32,
+}
+
+/// §5.1 placement policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementPolicy {
+    /// A dataset at or below this fits an LFS stage (leave headroom for
+    /// outputs; default: half the LFS).
+    pub lfs_limit: u64,
+    /// A dataset at or below this fits an IFS (stripe-set capacity).
+    pub ifs_limit: u64,
+    /// Readers strictly above this count as read-many.
+    pub read_many_threshold: u32,
+}
+
+impl PlacementPolicy {
+    /// Policy derived from the cluster configuration.
+    pub fn from_config(cfg: &ClusterConfig) -> Self {
+        PlacementPolicy {
+            lfs_limit: cfg.node.lfs_capacity / 2,
+            ifs_limit: cfg.ifs_stripe as u64 * cfg.ifs.member_capacity,
+            read_many_threshold: 1,
+        }
+    }
+
+    /// Decide the tier for one dataset, per the paper's three rules.
+    pub fn decide(&self, ds: &Dataset) -> Tier {
+        let read_many = ds.readers > self.read_many_threshold;
+        if read_many {
+            if ds.bytes <= self.lfs_limit {
+                // Small and read-many: broadcast all the way to each LFS.
+                return Tier::Lfs;
+            }
+            if ds.bytes <= self.ifs_limit {
+                return Tier::IfsReplicated;
+            }
+            return Tier::Gfs;
+        }
+        // Read-few (typically one reader).
+        if ds.bytes <= self.lfs_limit {
+            return Tier::Lfs;
+        }
+        if ds.bytes <= self.ifs_limit {
+            return Tier::Ifs;
+        }
+        Tier::Gfs
+    }
+}
+
+/// Modeled per-node IFS read bandwidth at a given CN:IFS ratio — the
+/// quantity Figure 11 sweeps ("a 64:1 ratio is good when trying to
+/// maximize the bandwidth per node"). Derived from the chirp model: the
+/// server NIC is shared by `ratio` clients and each transfer pays the
+/// per-request overhead.
+pub fn per_node_bw(cfg: &ClusterConfig, ratio: u32, file_bytes: u64) -> f64 {
+    assert!(ratio >= 1);
+    let serve_bw = cfg.ifs_striped_bw(cfg.ifs_stripe);
+    let t_transfer = ratio as f64 * file_bytes as f64 / serve_bw;
+    let t = cfg.net.chirp_request_overhead_s + t_transfer;
+    (file_bytes as f64 / t).min(cfg.net.fuse_read_bw)
+}
+
+/// §7 future work: search the CN:IFS ratio (over powers of two in
+/// `[lo, hi]`) that maximizes per-node bandwidth for the given file size,
+/// subject to the chirp server's connection-memory limit (ratios that
+/// would OOM, like 512:1 at 100 MB, are rejected).
+pub fn auto_ratio(cfg: &ClusterConfig, file_bytes: u64, lo: u32, hi: u32) -> u32 {
+    let buf = (file_bytes / cfg.node.server_buf_divisor).min(cfg.node.server_buf_max).max(4096);
+    let mut best = lo;
+    let mut best_bw = f64::MIN;
+    let mut r = lo;
+    while r <= hi {
+        let fits = (r as u64) * buf <= cfg.node.server_mem;
+        if fits {
+            let bw = per_node_bw(cfg, r, file_bytes);
+            // Prefer the *largest* ratio within 5% of the best per-node
+            // bandwidth: fewer IFSs to manage (the paper's stated
+            // trade-off) at negligible bandwidth cost.
+            if bw > best_bw * 1.05 || (bw > best_bw * 0.95 && r > best) {
+                best = r;
+                best_bw = best_bw.max(bw);
+            }
+        }
+        r *= 2;
+    }
+    best
+}
+
+/// §7 future work: learn placement from the IO trace of a previous run.
+/// Records per-file read counts and sizes; [`LearnedPlacement::decide`]
+/// then overrides the static policy using observed reader counts instead
+/// of declared ones.
+#[derive(Debug, Clone, Default)]
+pub struct LearnedPlacement {
+    observed: HashMap<String, Dataset>,
+}
+
+impl LearnedPlacement {
+    /// Empty (no history).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one observed read of `name` with the given size.
+    pub fn record_read(&mut self, name: &str, bytes: u64) {
+        let e = self.observed.entry(name.to_string()).or_insert_with(|| Dataset {
+            name: name.to_string(),
+            bytes,
+            readers: 0,
+        });
+        e.bytes = e.bytes.max(bytes);
+        e.readers += 1;
+    }
+
+    /// Number of files with history.
+    pub fn len(&self) -> usize {
+        self.observed.len()
+    }
+
+    /// True when no history has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.observed.is_empty()
+    }
+
+    /// Decide using history when available, falling back to the declared
+    /// dataset otherwise.
+    pub fn decide(&self, policy: &PlacementPolicy, ds: &Dataset) -> Tier {
+        match self.observed.get(&ds.name) {
+            Some(seen) => policy.decide(seen),
+            None => policy.decide(ds),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{gib, mib};
+
+    fn policy() -> PlacementPolicy {
+        PlacementPolicy {
+            lfs_limit: mib(512),
+            ifs_limit: gib(64),
+            read_many_threshold: 1,
+        }
+    }
+
+    fn ds(bytes: u64, readers: u32) -> Dataset {
+        Dataset { name: "d".into(), bytes, readers }
+    }
+
+    #[test]
+    fn paper_rules() {
+        let p = policy();
+        // Small input -> LFS regardless of reader count.
+        assert_eq!(p.decide(&ds(mib(10), 1)), Tier::Lfs);
+        assert_eq!(p.decide(&ds(mib(10), 1000)), Tier::Lfs);
+        // Read by one task, too big for LFS -> one IFS.
+        assert_eq!(p.decide(&ds(gib(10), 1)), Tier::Ifs);
+        // Large and read-many -> replicated to all IFSs.
+        assert_eq!(p.decide(&ds(gib(10), 64)), Tier::IfsReplicated);
+        // Too large for any IFS -> stays on GFS.
+        assert_eq!(p.decide(&ds(gib(100), 64)), Tier::Gfs);
+        assert_eq!(p.decide(&ds(gib(100), 1)), Tier::Gfs);
+    }
+
+    #[test]
+    fn boundaries_are_inclusive() {
+        let p = policy();
+        assert_eq!(p.decide(&ds(mib(512), 1)), Tier::Lfs);
+        assert_eq!(p.decide(&ds(mib(512) + 1, 1)), Tier::Ifs);
+        assert_eq!(p.decide(&ds(gib(64), 2)), Tier::IfsReplicated);
+    }
+
+    #[test]
+    fn from_config_derives_limits() {
+        let cfg = ClusterConfig::bgp(4096).with_stripe(32);
+        let p = PlacementPolicy::from_config(&cfg);
+        assert_eq!(p.lfs_limit, cfg.node.lfs_capacity / 2);
+        assert_eq!(p.ifs_limit, gib(64), "32 x 2GB stripes");
+    }
+
+    #[test]
+    fn per_node_bw_matches_fig11_shape() {
+        let cfg = ClusterConfig::bgp(4096);
+        // Paper: ~2.3 MB/s per node at 64:1 with 100 MB files, ~0.6 at 256:1.
+        let bw64 = per_node_bw(&cfg, 64, mib(100)) / mib(1) as f64;
+        let bw256 = per_node_bw(&cfg, 256, mib(100)) / mib(1) as f64;
+        assert!((1.8..3.0).contains(&bw64), "64:1 -> {bw64} MB/s");
+        assert!((0.4..0.9).contains(&bw256), "256:1 -> {bw256} MB/s");
+        assert!(bw64 > bw256, "lower ratio gives more per-node bandwidth");
+    }
+
+    #[test]
+    fn auto_ratio_rejects_oom_and_prefers_manageable() {
+        let cfg = ClusterConfig::bgp(4096);
+        // 100 MB files: 512:1 would OOM the chirp server (the §6.1
+        // failure); the search must never pick it.
+        let r = auto_ratio(&cfg, mib(100), 64, 512);
+        assert!(r < 512, "512:1 OOMs at 100MB, got {r}");
+        // Tiny files: memory never binds; larger ratios are preferred when
+        // per-node bandwidth is overhead-dominated anyway.
+        let r_small = auto_ratio(&cfg, 1024, 64, 512);
+        assert!(r_small >= 64);
+    }
+
+    #[test]
+    fn learned_placement_overrides_declared() {
+        let p = policy();
+        let mut learned = LearnedPlacement::new();
+        assert!(learned.is_empty());
+        // Declared as read-once, observed as read-many.
+        for _ in 0..100 {
+            learned.record_read("hot.db", gib(2));
+        }
+        assert_eq!(learned.len(), 1);
+        let declared = Dataset { name: "hot.db".into(), bytes: gib(2), readers: 1 };
+        assert_eq!(p.decide(&declared), Tier::Ifs, "static policy sees read-few");
+        assert_eq!(
+            learned.decide(&p, &declared),
+            Tier::IfsReplicated,
+            "learned policy promotes to replicated"
+        );
+        // Unknown files fall back to the declared metadata.
+        let unknown = Dataset { name: "cold".into(), bytes: mib(1), readers: 1 };
+        assert_eq!(learned.decide(&p, &unknown), Tier::Lfs);
+    }
+}

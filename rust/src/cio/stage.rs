@@ -1,0 +1,313 @@
+//! Multi-stage workflow plumbing (§2, §5.3).
+//!
+//! The abstract model's rule 3: when one task writes an object another
+//! reads, the reader runs only after the writer completes — dataflow
+//! synchronization. [`StageGraph`] tracks that readiness over a DAG of
+//! stages (the molecular-docking workflow of §6.3 is a 3-stage chain).
+//!
+//! §5.3's second capability: output collected on LFS/IFS can be *retained*
+//! so the next stage re-processes it from fast storage instead of GFS.
+//! [`IfsCache`] is that retention policy — bounded capacity, LRU eviction,
+//! hit/miss accounting — the input to the Figure 17 stage-2 speedup
+//! (11.7× in the paper: data local to IFS instead of centralized GFS).
+
+use std::collections::{HashMap, VecDeque};
+
+/// A stage in a workflow DAG.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSpec {
+    /// Stage name ("dock", "summarize", "archive"...).
+    pub name: String,
+    /// Indices of stages that must complete first.
+    pub deps: Vec<usize>,
+}
+
+/// Dataflow-synchronized stage readiness tracking.
+#[derive(Debug, Clone)]
+pub struct StageGraph {
+    stages: Vec<StageSpec>,
+    done: Vec<bool>,
+}
+
+impl StageGraph {
+    /// Build a graph; validates that deps are acyclic (indices must point
+    /// to earlier stages — workflows are authored in topological order,
+    /// like the paper's stage 1→2→3).
+    pub fn new(stages: Vec<StageSpec>) -> anyhow::Result<Self> {
+        for (i, s) in stages.iter().enumerate() {
+            for &d in &s.deps {
+                anyhow::ensure!(
+                    d < i,
+                    "stage {i} ({}) depends on stage {d} which is not earlier",
+                    s.name
+                );
+            }
+        }
+        let done = vec![false; stages.len()];
+        Ok(StageGraph { stages, done })
+    }
+
+    /// Simple chain `a -> b -> c` (the docking workflow shape).
+    pub fn chain(names: &[&str]) -> Self {
+        let stages = names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| StageSpec {
+                name: n.to_string(),
+                deps: if i == 0 { vec![] } else { vec![i - 1] },
+            })
+            .collect();
+        StageGraph::new(stages).expect("chain is trivially acyclic")
+    }
+
+    /// Number of stages.
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// True for an empty workflow.
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// Stage spec by index.
+    pub fn stage(&self, i: usize) -> &StageSpec {
+        &self.stages[i]
+    }
+
+    /// Is stage `i` ready to run (all writers it reads from completed)?
+    pub fn ready(&self, i: usize) -> bool {
+        !self.done[i] && self.stages[i].deps.iter().all(|&d| self.done[d])
+    }
+
+    /// Mark stage `i` complete; panics if its dependencies were not done
+    /// (that would be a dataflow-synchronization violation).
+    pub fn complete(&mut self, i: usize) {
+        assert!(self.ready(i), "completing stage {i} out of order");
+        self.done[i] = true;
+    }
+
+    /// All stages currently ready, in index order.
+    pub fn ready_stages(&self) -> Vec<usize> {
+        (0..self.stages.len()).filter(|&i| self.ready(i)).collect()
+    }
+
+    /// Has the whole workflow completed?
+    pub fn all_done(&self) -> bool {
+        self.done.iter().all(|&d| d)
+    }
+}
+
+/// Where a stage's input was found (Figure 17's stage-2 difference).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Retained on the IFS from a previous stage: fast, distributed.
+    IfsHit,
+    /// Fell back to GFS (evicted or never cached): slow, centralized.
+    GfsMiss,
+}
+
+/// Bounded retention cache for inter-stage data on an IFS (§5.3 / §7
+/// "algorithms for automating output data caching ... for re-processing
+/// by subsequent workflow stages" and "determining when data on
+/// IFSs/LFSs can be removed").
+#[derive(Debug, Clone)]
+pub struct IfsCache {
+    capacity: u64,
+    used: u64,
+    /// name -> bytes; `lru` front = oldest.
+    entries: HashMap<String, u64>,
+    lru: VecDeque<String>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl IfsCache {
+    /// Cache bounded by `capacity` bytes.
+    pub fn new(capacity: u64) -> Self {
+        IfsCache {
+            capacity,
+            used: 0,
+            entries: HashMap::new(),
+            lru: VecDeque::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Retain a stage output. Evicts LRU entries to make room; objects
+    /// larger than the whole cache are not retained (they go to GFS).
+    pub fn put(&mut self, name: &str, bytes: u64) -> bool {
+        if bytes > self.capacity {
+            return false;
+        }
+        if let Some(old) = self.entries.remove(name) {
+            self.used -= old;
+            self.lru.retain(|n| n != name);
+        }
+        while self.used + bytes > self.capacity {
+            let victim = self.lru.pop_front().expect("used>0 implies lru nonempty");
+            let vb = self.entries.remove(&victim).unwrap();
+            self.used -= vb;
+            self.evictions += 1;
+        }
+        self.entries.insert(name.to_string(), bytes);
+        self.lru.push_back(name.to_string());
+        self.used += bytes;
+        true
+    }
+
+    /// Look up a retained object for the next stage; refreshes recency.
+    pub fn get(&mut self, name: &str) -> CacheOutcome {
+        if self.entries.contains_key(name) {
+            self.lru.retain(|n| n != name);
+            self.lru.push_back(name.to_string());
+            self.hits += 1;
+            CacheOutcome::IfsHit
+        } else {
+            self.misses += 1;
+            CacheOutcome::GfsMiss
+        }
+    }
+
+    /// Explicitly drop an object (stage output no longer needed — the §7
+    /// "when can data be removed" answer: when no downstream stage reads
+    /// it).
+    pub fn remove(&mut self, name: &str) -> bool {
+        if let Some(b) = self.entries.remove(name) {
+            self.used -= b;
+            self.lru.retain(|n| n != name);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Bytes retained.
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    /// Hit count.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Miss count.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Eviction count.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Hit rate in [0,1].
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::mib;
+
+    #[test]
+    fn chain_readiness() {
+        let mut g = StageGraph::chain(&["dock", "summarize", "archive"]);
+        assert_eq!(g.ready_stages(), vec![0]);
+        assert!(!g.ready(1));
+        g.complete(0);
+        assert_eq!(g.ready_stages(), vec![1]);
+        g.complete(1);
+        g.complete(2);
+        assert!(g.all_done());
+    }
+
+    #[test]
+    fn diamond_dag() {
+        //    0
+        //   / \
+        //  1   2
+        //   \ /
+        //    3
+        let mut g = StageGraph::new(vec![
+            StageSpec { name: "src".into(), deps: vec![] },
+            StageSpec { name: "left".into(), deps: vec![0] },
+            StageSpec { name: "right".into(), deps: vec![0] },
+            StageSpec { name: "join".into(), deps: vec![1, 2] },
+        ])
+        .unwrap();
+        g.complete(0);
+        assert_eq!(g.ready_stages(), vec![1, 2]);
+        g.complete(1);
+        assert!(!g.ready(3), "join waits for both writers");
+        g.complete(2);
+        assert!(g.ready(3));
+    }
+
+    #[test]
+    fn forward_deps_rejected() {
+        let err = StageGraph::new(vec![StageSpec { name: "bad".into(), deps: vec![0] }]);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of order")]
+    fn out_of_order_completion_panics() {
+        let mut g = StageGraph::chain(&["a", "b"]);
+        g.complete(1);
+    }
+
+    #[test]
+    fn cache_hit_miss_and_eviction() {
+        let mut c = IfsCache::new(mib(10));
+        assert!(c.put("a", mib(4)));
+        assert!(c.put("b", mib(4)));
+        assert_eq!(c.get("a"), CacheOutcome::IfsHit);
+        // c (4 MiB) forces eviction of LRU = "b" ("a" was refreshed).
+        assert!(c.put("c", mib(4)));
+        assert_eq!(c.get("b"), CacheOutcome::GfsMiss);
+        assert_eq!(c.get("a"), CacheOutcome::IfsHit);
+        assert_eq!(c.evictions(), 1);
+        assert_eq!(c.hits(), 2);
+        assert_eq!(c.misses(), 1);
+        assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn oversized_object_not_cached() {
+        let mut c = IfsCache::new(mib(1));
+        assert!(!c.put("huge", mib(2)));
+        assert_eq!(c.get("huge"), CacheOutcome::GfsMiss);
+        assert_eq!(c.used(), 0);
+    }
+
+    #[test]
+    fn replace_updates_size() {
+        let mut c = IfsCache::new(mib(10));
+        c.put("x", mib(8));
+        c.put("x", mib(2));
+        assert_eq!(c.used(), mib(2));
+        assert!(c.put("y", mib(8)), "shrunk entry leaves room");
+    }
+
+    #[test]
+    fn explicit_removal() {
+        let mut c = IfsCache::new(mib(10));
+        c.put("x", mib(5));
+        assert!(c.remove("x"));
+        assert!(!c.remove("x"));
+        assert_eq!(c.used(), 0);
+        assert_eq!(c.get("x"), CacheOutcome::GfsMiss);
+    }
+}

@@ -1,0 +1,439 @@
+//! A Swift-like declarative workflow frontend (§7 future work:
+//! "integrate the model into the Swift parallel programming environment,
+//! so that users can benefit from this higher-level programming model
+//! without explicitly programming the collective IO operations").
+//!
+//! Users describe *what* the workflow reads, computes and writes; the
+//! planner derives every collective-IO decision — input tiering
+//! ([`crate::cio::placement`]), broadcast scheduling
+//! ([`crate::cio::distributor`]) and stage sequencing
+//! ([`crate::cio::stage`]) — and the executor runs it on the simulated
+//! cluster, reporting per-stage CIO-vs-GPFS times.
+//!
+//! Grammar (line-oriented; `#` comments):
+//!
+//! ```text
+//! cluster procs=8192 [ratio=64] [stripe=1]
+//! input  NAME size=SIZE readers=N|all
+//! stage  NAME tasks=N dur=SECONDS out=SIZE [sigma=F] [after A,B] [reads X,Y]
+//! ```
+//!
+//! `SIZE` accepts `4KB`, `10MB`, `2GiB`, …; `readers=all` marks the
+//! dataset read-many regardless of task count. Example:
+//!
+//! ```text
+//! # DOCK6-like screen
+//! cluster procs=8192
+//! input grid    size=50MB readers=all
+//! input ligands size=100KB readers=1
+//! stage dock      tasks=15360 dur=550 out=10KB sigma=0.1 reads grid,ligands
+//! stage summarize tasks=128   dur=2   out=64KB after dock reads dock
+//! stage archive   tasks=1     dur=5   out=150MB after summarize reads summarize
+//! ```
+
+use crate::cio::distributor::{plan, StagingAction, TreeShape};
+use crate::cio::placement::{Dataset, PlacementPolicy};
+use crate::cio::stage::{StageGraph, StageSpec};
+use crate::config::ClusterConfig;
+use crate::sim::cluster::{DurationModel, IoMode, SimCluster, TaskSpec};
+use crate::util::units::parse_bytes;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+
+/// A parsed `input` declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputDecl {
+    /// Dataset name.
+    pub name: String,
+    /// Size in bytes.
+    pub size: u64,
+    /// Declared reader count (`u32::MAX` for `all`).
+    pub readers: u32,
+}
+
+/// A parsed `stage` declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageDecl {
+    /// Stage name.
+    pub name: String,
+    /// Task count.
+    pub tasks: u64,
+    /// Mean task duration (s).
+    pub dur_s: f64,
+    /// Duration spread (0 = fixed).
+    pub sigma: f64,
+    /// Output bytes per task.
+    pub out_bytes: u64,
+    /// Names of stages that must complete first.
+    pub after: Vec<String>,
+    /// Names of inputs (or upstream stages) each task reads.
+    pub reads: Vec<String>,
+}
+
+/// A parsed workflow program.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Program {
+    /// Cluster configuration (from the `cluster` line, default 4096).
+    pub cluster: ClusterConfig,
+    /// Input datasets.
+    pub inputs: Vec<InputDecl>,
+    /// Stages in declaration order (must be topologically ordered).
+    pub stages: Vec<StageDecl>,
+}
+
+/// Parse a workflow script.
+pub fn parse(text: &str) -> Result<Program> {
+    let mut cluster = ClusterConfig::bgp(4096);
+    let mut inputs: Vec<InputDecl> = Vec::new();
+    let mut stages: Vec<StageDecl> = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        let keyword = toks.next().unwrap();
+        let rest: Vec<&str> = toks.collect();
+        let parsed = (|| -> Result<()> {
+            match keyword {
+                "cluster" => {
+                    let kv = keyvals(&rest, &[])?;
+                    if let Some(p) = kv.get("procs") {
+                        cluster = ClusterConfig::bgp(p.parse().context("procs")?);
+                    }
+                    if let Some(r) = kv.get("ratio") {
+                        cluster.cn_per_ifs = r.parse().context("ratio")?;
+                    }
+                    if let Some(s) = kv.get("stripe") {
+                        cluster.ifs_stripe = s.parse().context("stripe")?;
+                    }
+                    Ok(())
+                }
+                "input" => {
+                    ensure!(!rest.is_empty(), "input needs a name");
+                    let name = rest[0].to_string();
+                    let kv = keyvals(&rest[1..], &[])?;
+                    let size = kv.get("size").context("input needs size=")?;
+                    let size = parse_bytes(size).with_context(|| format!("bad size {size:?}"))?;
+                    let readers = match kv.get("readers").map(String::as_str) {
+                        Some("all") => u32::MAX,
+                        Some(n) => n.parse().context("readers")?,
+                        None => 1,
+                    };
+                    ensure!(
+                        !inputs.iter().any(|i| i.name == name),
+                        "duplicate input {name:?}"
+                    );
+                    inputs.push(InputDecl { name, size, readers });
+                    Ok(())
+                }
+                "stage" => {
+                    ensure!(!rest.is_empty(), "stage needs a name");
+                    let name = rest[0].to_string();
+                    let kv = keyvals(&rest[1..], &["after", "reads"])?;
+                    let tasks = kv.get("tasks").context("stage needs tasks=")?.parse()?;
+                    let dur_s = kv.get("dur").context("stage needs dur=")?.parse()?;
+                    let sigma = kv.get("sigma").map(|s| s.parse()).transpose()?.unwrap_or(0.0);
+                    let out = kv.get("out").context("stage needs out=")?;
+                    let out_bytes =
+                        parse_bytes(out).with_context(|| format!("bad out= {out:?}"))?;
+                    let after = list(kv.get("after"));
+                    let reads = list(kv.get("reads"));
+                    ensure!(
+                        !stages.iter().any(|s| s.name == name),
+                        "duplicate stage {name:?}"
+                    );
+                    stages.push(StageDecl { name, tasks, dur_s, sigma, out_bytes, after, reads });
+                    Ok(())
+                }
+                other => bail!("unknown keyword {other:?}"),
+            }
+        })();
+        parsed.with_context(|| format!("line {lineno}: {line}"))?;
+    }
+    ensure!(!stages.is_empty(), "workflow has no stages");
+    validate(&inputs, &stages)?;
+    Ok(Program { cluster, inputs, stages })
+}
+
+fn keyvals(toks: &[&str], list_keys: &[&str]) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    for t in toks {
+        let (k, v) = t.split_once('=').with_context(|| format!("expected key=value, got {t:?}"))?;
+        ensure!(
+            !v.is_empty() || list_keys.contains(&k),
+            "empty value for {k:?}"
+        );
+        out.insert(k.to_string(), v.to_string());
+    }
+    Ok(out)
+}
+
+fn list(v: Option<&String>) -> Vec<String> {
+    v.map(|s| s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect())
+        .unwrap_or_default()
+}
+
+fn validate(inputs: &[InputDecl], stages: &[StageDecl]) -> Result<()> {
+    let mut known: Vec<&str> = inputs.iter().map(|i| i.name.as_str()).collect();
+    let mut seen_stages: Vec<&str> = Vec::new();
+    for s in stages {
+        for a in &s.after {
+            ensure!(
+                seen_stages.contains(&a.as_str()),
+                "stage {:?}: after={a:?} is not an earlier stage",
+                s.name
+            );
+        }
+        for r in &s.reads {
+            ensure!(
+                known.contains(&r.as_str()),
+                "stage {:?}: reads {r:?} which is neither an input nor an earlier stage",
+                s.name
+            );
+        }
+        seen_stages.push(&s.name);
+        known.push(&s.name);
+        ensure!(s.tasks > 0 && s.dur_s > 0.0, "stage {:?}: tasks/dur must be positive", s.name);
+    }
+    Ok(())
+}
+
+/// Per-stage execution result.
+#[derive(Debug, Clone)]
+pub struct StageRun {
+    /// Stage name.
+    pub name: String,
+    /// Wall-clock seconds under GPFS.
+    pub gpfs_s: f64,
+    /// Wall-clock seconds under CIO.
+    pub cio_s: f64,
+}
+
+/// Full workflow execution result.
+#[derive(Debug, Clone)]
+pub struct WorkflowRun {
+    /// The staging plan the planner derived for the inputs.
+    pub staging: Vec<StagingAction>,
+    /// Input-distribution time under CIO (spanning tree), seconds.
+    pub distribution_s: f64,
+    /// Per-stage times.
+    pub stages: Vec<StageRun>,
+}
+
+impl WorkflowRun {
+    /// Total CIO time (distribution + stages).
+    pub fn cio_total_s(&self) -> f64 {
+        self.distribution_s + self.stages.iter().map(|s| s.cio_s).sum::<f64>()
+    }
+
+    /// Total GPFS time (no distribution step; tasks read GFS directly).
+    pub fn gpfs_total_s(&self) -> f64 {
+        self.stages.iter().map(|s| s.gpfs_s).sum::<f64>()
+    }
+
+    /// Headline speedup.
+    pub fn speedup(&self) -> f64 {
+        self.gpfs_total_s() / self.cio_total_s()
+    }
+}
+
+/// Plan and execute a program on the simulated cluster: the planner makes
+/// every collective-IO decision; per stage, both CIO and GPFS modes run
+/// for the comparison the paper's Figure 17 makes.
+pub fn run(program: &Program) -> Result<WorkflowRun> {
+    let cfg = &program.cluster;
+    // --- Plan input staging (placement + broadcast schedule).
+    let policy = PlacementPolicy::from_config(cfg);
+    let datasets: Vec<Dataset> = program
+        .inputs
+        .iter()
+        .map(|i| Dataset {
+            name: i.name.clone(),
+            bytes: i.size,
+            readers: if i.readers == u32::MAX { cfg.procs } else { i.readers },
+        })
+        .collect();
+    let staging = plan(&policy, &datasets, TreeShape::Binomial);
+
+    // --- Simulate the distribution step (broadcast actions only; staged
+    // read-few inputs overlap with it and are cheaper).
+    let mut distribution_s: f64 = 0.0;
+    for action in &staging {
+        match action {
+            StagingAction::BroadcastToIfs { dataset, shape }
+            | StagingAction::BroadcastToLfs { dataset, shape } => {
+                let replicas = match action {
+                    StagingAction::BroadcastToLfs { .. } => cfg.nodes(),
+                    _ => cfg.ifs_groups(),
+                };
+                let mut sim = SimCluster::new(cfg);
+                let (t, _) = sim.distribute_tree(replicas.max(2), dataset.bytes, *shape);
+                distribution_s = distribution_s.max(t); // broadcasts overlap
+            }
+            _ => {}
+        }
+    }
+
+    // --- Sequence stages through the dataflow graph.
+    let name_to_idx: HashMap<&str, usize> =
+        program.stages.iter().enumerate().map(|(i, s)| (s.name.as_str(), i)).collect();
+    let specs: Vec<StageSpec> = program
+        .stages
+        .iter()
+        .map(|s| StageSpec {
+            name: s.name.clone(),
+            deps: s.after.iter().map(|a| name_to_idx[a.as_str()]).collect(),
+        })
+        .collect();
+    let mut graph = StageGraph::new(specs)?;
+
+    let input_sizes: HashMap<&str, u64> =
+        program.inputs.iter().map(|i| (i.name.as_str(), i.size)).collect();
+    let mut runs = Vec::new();
+    while !graph.all_done() {
+        let ready = graph.ready_stages();
+        ensure!(!ready.is_empty(), "dataflow deadlock (cycle?)");
+        for idx in ready {
+            let decl = &program.stages[idx];
+            // Per-task input bytes: sum of read inputs (upstream stage
+            // outputs are read from IFS under CIO, GFS under GPFS — the
+            // simulator's TaskSpec handles the mode split).
+            let in_bytes: u64 = decl
+                .reads
+                .iter()
+                .map(|r| {
+                    input_sizes.get(r.as_str()).copied().unwrap_or_else(|| {
+                        // Upstream stage: each task reads its share of the
+                        // stage's total output.
+                        let up = &program.stages[name_to_idx[r.as_str()]];
+                        (up.tasks * up.out_bytes) / decl.tasks.max(1)
+                    })
+                })
+                .sum();
+            let spec = TaskSpec {
+                dur: if decl.sigma > 0.0 {
+                    DurationModel::LogNormal { mean_s: decl.dur_s, sigma: decl.sigma }
+                } else {
+                    DurationModel::Fixed(decl.dur_s)
+                },
+                out_bytes: decl.out_bytes,
+                in_bytes,
+                in_from_ifs: false,
+            };
+            let mut gpfs = SimCluster::new(cfg);
+            let g = gpfs.run_mtc_spec(decl.tasks, &spec, IoMode::Gpfs);
+            let mut cio = SimCluster::new(cfg);
+            let c = cio.run_mtc_spec(decl.tasks, &spec, IoMode::Cio);
+            runs.push(StageRun {
+                name: decl.name.clone(),
+                gpfs_s: g.makespan_tasks_s,
+                cio_s: c.makespan_tasks_s,
+            });
+            graph.complete(idx);
+        }
+    }
+    Ok(WorkflowRun { staging, distribution_s, stages: runs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{kib, mib};
+
+    const DOCK_SCRIPT: &str = r#"
+        # DOCK6-like screen
+        cluster procs=1024
+        input grid    size=50MB readers=all
+        input ligands size=100KB readers=1
+        stage dock      tasks=2048 dur=20 out=10KB sigma=0.1 reads=grid,ligands
+        stage summarize tasks=64   dur=2  out=64KB after=dock reads=dock
+        stage archive   tasks=1    dur=5  out=20MB after=summarize reads=summarize
+    "#;
+
+    #[test]
+    fn parses_full_script() {
+        let p = parse(DOCK_SCRIPT).unwrap();
+        assert_eq!(p.cluster.procs, 1024);
+        assert_eq!(p.inputs.len(), 2);
+        assert_eq!(p.inputs[0].readers, u32::MAX);
+        assert_eq!(p.inputs[0].size, mib(50));
+        assert_eq!(p.inputs[1].readers, 1);
+        assert_eq!(p.stages.len(), 3);
+        assert_eq!(p.stages[0].out_bytes, kib(10));
+        assert_eq!(p.stages[0].sigma, 0.1);
+        assert_eq!(p.stages[1].after, vec!["dock"]);
+        assert_eq!(p.stages[0].reads, vec!["grid", "ligands"]);
+    }
+
+    #[test]
+    fn rejects_bad_scripts() {
+        // Unknown keyword with line number.
+        let e = parse("bogus x=1\nstage s tasks=1 dur=1 out=1KB").unwrap_err();
+        assert!(e.to_string().contains("line 1"), "{e}");
+        // Forward reference.
+        let e = parse("stage b tasks=1 dur=1 out=1KB after=c").unwrap_err();
+        assert!(e.to_string().contains("not an earlier stage"), "{e}");
+        // Unknown read.
+        let e = parse("stage a tasks=1 dur=1 out=1KB reads=nope").unwrap_err();
+        assert!(e.to_string().contains("neither an input"), "{e}");
+        // Missing required key.
+        assert!(parse("stage a tasks=1 dur=1").is_err());
+        // Duplicate names.
+        assert!(parse("input x size=1KB\ninput x size=2KB\nstage s tasks=1 dur=1 out=1KB").is_err());
+        // No stages at all.
+        assert!(parse("input x size=1KB").is_err());
+        // Bad size.
+        assert!(parse("input x size=banana\nstage s tasks=1 dur=1 out=1KB").is_err());
+    }
+
+    #[test]
+    fn planner_broadcasts_read_many_inputs() {
+        let p = parse(DOCK_SCRIPT).unwrap();
+        let run = run(&p).unwrap();
+        // grid (50 MB, read-many, fits an LFS) must be broadcast all the
+        // way to the LFSs; ligands staged read-few.
+        assert!(run.staging.iter().any(|a| matches!(
+            a,
+            StagingAction::BroadcastToLfs { dataset, .. } | StagingAction::BroadcastToIfs { dataset, .. }
+                if dataset.name == "grid"
+        )));
+        assert!(run.distribution_s > 0.0);
+        assert_eq!(run.stages.len(), 3);
+    }
+
+    #[test]
+    fn workflow_cio_beats_gpfs() {
+        // Short-task variant where IO dominates: CIO must win end to end.
+        let script = r#"
+            cluster procs=1024
+            input db size=10MB readers=all
+            stage work tasks=3072 dur=4 out=512KB reads=db
+        "#;
+        let p = parse(script).unwrap();
+        let r = run(&p).unwrap();
+        assert!(
+            r.speedup() > 1.5,
+            "CIO should win decisively: gpfs={:.1}s cio={:.1}s",
+            r.gpfs_total_s(),
+            r.cio_total_s()
+        );
+    }
+
+    #[test]
+    fn diamond_dependencies_execute() {
+        let script = r#"
+            cluster procs=256
+            stage a tasks=256 dur=1 out=1KB
+            stage b tasks=128 dur=1 out=1KB after=a reads=a
+            stage c tasks=128 dur=1 out=1KB after=a reads=a
+            stage d tasks=64  dur=1 out=1KB after=b,c reads=b,c
+        "#;
+        let r = run(&parse(script).unwrap()).unwrap();
+        assert_eq!(r.stages.len(), 4);
+        let names: Vec<&str> = r.stages.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names[0], "a");
+        assert_eq!(names[3], "d");
+    }
+}

@@ -1,0 +1,516 @@
+//! Typed configuration for the simulated cluster and the collective-IO
+//! policies, loadable from `configs/*.toml` via the in-crate TOML-subset
+//! parser ([`crate::util::toml`]).
+//!
+//! Defaults are calibrated from the paper's §3 measurements of the Argonne
+//! BG/P (Intrepid/Surveyor) under ZeptoOS — every number here is either
+//! quoted directly from the paper or derived in DESIGN.md §2.
+
+use crate::util::toml::Document;
+use crate::util::units::{gbps, gib, mbps, mib};
+use std::path::Path;
+
+/// Network calibration (paper §3.2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetConfig {
+    /// Collective ("tree") network raw link bandwidth CN↔ION: 850 MB/s.
+    pub tree_link_bw: f64,
+    /// Max ZOID throughput over the tree network after protocol overhead:
+    /// ~760 MB/s (per ION, shared by its compute nodes).
+    pub ion_ingest_bw: f64,
+    /// FUSE read ceiling on a compute node (64 KiB pages): 230 MB/s raw,
+    /// 180 MB/s with file-system overhead. We use the file-system figure.
+    pub fuse_read_bw: f64,
+    /// FUSE write ceiling: 180 MB/s raw, 130 MB/s with FS overhead.
+    pub fuse_write_bw: f64,
+    /// Torus point-to-point effective bandwidth under ZeptoOS (IP-over-MPI
+    /// via TUN, 64 KiB MTU): ~140 MB/s.
+    pub torus_pp_bw: f64,
+    /// Per-request overhead of a chirp/FUSE file open+transfer setup over
+    /// the torus (connection + FUSE round trips). Calibrated so Figure 11's
+    /// small-file aggregate collapses the way the paper measured.
+    pub chirp_request_overhead_s: f64,
+    /// Effective per-hop bandwidth of `chirp replicate` spanning-tree copies
+    /// (CN→CN over the torus, including protocol + disk staging overhead).
+    pub tree_copy_bw: f64,
+    /// Per-hop setup latency of a spanning-tree copy.
+    pub tree_copy_setup_s: f64,
+    /// ION external (10 GbE toward storage) bandwidth: 1.25 GB/s.
+    pub ion_ext_bw: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            tree_link_bw: mbps(850),
+            ion_ingest_bw: mbps(760),
+            fuse_read_bw: mbps(180),
+            fuse_write_bw: mbps(130),
+            torus_pp_bw: mbps(140),
+            chirp_request_overhead_s: 0.30,
+            tree_copy_bw: mbps(140),
+            tree_copy_setup_s: 0.10,
+            ion_ext_bw: mbps(1250),
+        }
+    }
+}
+
+/// GPFS (the GFS) calibration (paper §3.1 and §6 measurements).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GfsConfig {
+    /// Aggregate sequential read bandwidth of the `/home` file system the
+    /// paper tested: 2.4 GB/s peak rated.
+    pub read_agg_bw: f64,
+    /// Aggregate sequential write bandwidth for large blocks (the `dd`
+    /// large-blocksize path the collector uses). The paper's CIO peaked at
+    /// 2.1 GB/s, within a few percent of this cap.
+    pub write_agg_bw: f64,
+    /// Aggregate bandwidth available to *small-file* writes (buffered,
+    /// lock-heavy): GPFS peaked at 250 MB/s in Figure 16.
+    pub small_write_agg_bw: f64,
+    /// Per-client stream bandwidth cap (one compute node's GPFS traffic
+    /// forwarded through its ION).
+    pub per_client_bw: f64,
+    /// Base service time of a file create when the system is idle.
+    pub create_base_s: f64,
+    /// Contention scaling: create service time is
+    /// `create_base * (1 + (D / create_k) ^ create_p)` with `D` =
+    /// concurrent metadata operations. Calibrated (DESIGN.md §2) so the
+    /// Figure 14/15 GPFS efficiency curves match (≈50% @256 → ≈10% @32K
+    /// for 4 s tasks).
+    pub create_k: f64,
+    /// Contention exponent (sub-linear, lock-convoy-like).
+    pub create_p: f64,
+}
+
+impl Default for GfsConfig {
+    fn default() -> Self {
+        GfsConfig {
+            read_agg_bw: gbps(2.4),
+            write_agg_bw: gbps(2.4),
+            small_write_agg_bw: mbps(250),
+            per_client_bw: mbps(60),
+            create_base_s: 0.33,
+            create_k: 1.0,
+            create_p: 0.45,
+        }
+    }
+}
+
+/// Compute-node / LFS calibration (paper §5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeConfig {
+    /// Cores per compute node (BG/P: 4).
+    pub cores_per_node: u32,
+    /// Free space on the RAM-based LFS (paper: ~1 GB on Intrepid CNs;
+    /// 2 GB quoted for the striping-experiment nodes).
+    pub lfs_capacity: u64,
+    /// LFS (RAM disk) bandwidth as seen by a task (local read/write).
+    pub lfs_bw: f64,
+    /// RAM available to a chirp server process for connection buffers when
+    /// a CN is repurposed as an IFS data server.
+    pub server_mem: u64,
+    /// Per-connection buffer memory for a transfer of `s` bytes:
+    /// `min(s / server_buf_divisor, server_buf_max)`. Calibrated so the
+    /// 512-client × 100 MB case exhausts memory exactly as in §6.1.
+    pub server_buf_divisor: u64,
+    /// Upper bound of a single connection buffer.
+    pub server_buf_max: u64,
+}
+
+impl Default for NodeConfig {
+    fn default() -> Self {
+        NodeConfig {
+            cores_per_node: 4,
+            lfs_capacity: gib(1),
+            lfs_bw: mbps(400),
+            server_mem: gib(2) - mib(200), // 2 GB minus kernel + chirp resident
+            server_buf_divisor: 8,
+            server_buf_max: mib(4),
+        }
+    }
+}
+
+/// IFS (MosaStore-like striping) calibration (paper §6.1, Figure 12).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IfsConfig {
+    /// Single-server IFS serving bandwidth (chirp over torus): Figure 12's
+    /// degree-1 point, 158 MB/s.
+    pub server_bw: f64,
+    /// Striping coordination loss: aggregate over `k` stripes is
+    /// `server_bw * k / (1 + stripe_alpha * (k - 1))`. Calibrated so
+    /// degree 32 yields the paper's 831 MB/s.
+    pub stripe_alpha: f64,
+    /// Capacity contributed by each member LFS (paper: 2 GB nodes in the
+    /// striping experiment; 32 × 2 GB = 64 GB IFS).
+    pub member_capacity: u64,
+}
+
+impl Default for IfsConfig {
+    fn default() -> Self {
+        IfsConfig { server_bw: mbps(158), stripe_alpha: 0.164, member_capacity: gib(2) }
+    }
+}
+
+/// Falkon-like dispatcher calibration (paper §5, §6.2 anomaly).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DispatchConfig {
+    /// Sustained dispatch throughput ceiling (tasks/second). Falkon on the
+    /// BG/P sustained a few thousand tasks/s; the Figure 14 efficiency
+    /// anomaly at 32K processors is attributed to this ceiling.
+    pub rate_ceiling: f64,
+    /// Per-task dispatch latency (submission → start on an idle core).
+    pub latency_s: f64,
+}
+
+impl Default for DispatchConfig {
+    fn default() -> Self {
+        DispatchConfig { rate_ceiling: 3000.0, latency_s: 0.005 }
+    }
+}
+
+/// Output-collector policy (the §5.2 pseudocode knobs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CollectorConfig {
+    /// Flush if this much time passed since the last archive write (s).
+    pub max_delay_s: f64,
+    /// Flush if this much output data is buffered on the IFS staging dir.
+    pub max_data: u64,
+    /// Flush if IFS free space drops below this.
+    pub min_free_space: u64,
+    /// Target archive block size for GFS writes (the `dd` blocksize).
+    pub gfs_block: u64,
+}
+
+impl Default for CollectorConfig {
+    fn default() -> Self {
+        CollectorConfig {
+            max_delay_s: 30.0,
+            max_data: mib(256),
+            min_free_space: mib(128),
+            gfs_block: mib(64),
+        }
+    }
+}
+
+/// Complete cluster + policy configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Human-readable name.
+    pub name: String,
+    /// Total processor cores in the partition (the paper's x-axes count
+    /// processors, i.e. cores).
+    pub procs: u32,
+    /// Compute nodes per ION (Argonne machines: fixed 64:1).
+    pub cn_per_ion: u32,
+    /// Compute nodes per IFS server for input staging (per-workload knob,
+    /// Figure 8; 64:1 unless an experiment varies it).
+    pub cn_per_ifs: u32,
+    /// Stripe degree of each IFS (1 = single chirp server).
+    pub ifs_stripe: u32,
+    /// Network calibration.
+    pub net: NetConfig,
+    /// GPFS calibration.
+    pub gfs: GfsConfig,
+    /// Node/LFS calibration.
+    pub node: NodeConfig,
+    /// IFS calibration.
+    pub ifs: IfsConfig,
+    /// Dispatcher calibration.
+    pub dispatch: DispatchConfig,
+    /// Collector policy.
+    pub collector: CollectorConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig::bgp(1024)
+    }
+}
+
+impl ClusterConfig {
+    /// BG/P-shaped partition with `procs` processor cores and the Argonne
+    /// defaults everywhere else.
+    pub fn bgp(procs: u32) -> Self {
+        ClusterConfig {
+            name: format!("bgp-{procs}"),
+            procs,
+            cn_per_ion: 64,
+            cn_per_ifs: 64,
+            ifs_stripe: 1,
+            net: NetConfig::default(),
+            gfs: GfsConfig::default(),
+            node: NodeConfig::default(),
+            ifs: IfsConfig::default(),
+            dispatch: DispatchConfig::default(),
+            collector: CollectorConfig::default(),
+        }
+    }
+
+    /// Builder-style override of the CN:IFS ratio.
+    pub fn with_ifs_ratio(mut self, ratio: u32) -> Self {
+        self.cn_per_ifs = ratio;
+        self
+    }
+
+    /// Builder-style override of the IFS stripe degree.
+    pub fn with_stripe(mut self, k: u32) -> Self {
+        self.ifs_stripe = k;
+        self
+    }
+
+    /// Number of compute nodes.
+    pub fn nodes(&self) -> u32 {
+        self.procs.div_ceil(self.node.cores_per_node)
+    }
+
+    /// Number of IO nodes.
+    pub fn ions(&self) -> u32 {
+        self.nodes().div_ceil(self.cn_per_ion)
+    }
+
+    /// Number of IFS groups for input staging.
+    pub fn ifs_groups(&self) -> u32 {
+        self.nodes().div_ceil(self.cn_per_ifs)
+    }
+
+    /// Aggregate IFS serving bandwidth for a stripe set of degree `k`
+    /// (Figure 12's model: coordination loss `alpha`).
+    pub fn ifs_striped_bw(&self, k: u32) -> f64 {
+        let k = k.max(1) as f64;
+        self.ifs.server_bw * k / (1.0 + self.ifs.stripe_alpha * (k - 1.0))
+    }
+
+    /// Load a config from TOML, starting from the defaults and overriding
+    /// any key present. Unknown keys are rejected (typo protection).
+    pub fn from_toml(doc: &Document) -> anyhow::Result<Self> {
+        let mut cfg = ClusterConfig::bgp(1024);
+        for key in doc_keys(doc) {
+            if !KNOWN_KEYS.contains(&key.as_str()) {
+                anyhow::bail!("unknown config key: {key}");
+            }
+        }
+        if let Some(v) = doc.str("name") {
+            cfg.name = v.to_string();
+        }
+        if let Some(v) = doc.int("procs") {
+            cfg.procs = v as u32;
+        }
+        if let Some(v) = doc.int("cn_per_ion") {
+            cfg.cn_per_ion = v as u32;
+        }
+        if let Some(v) = doc.int("cn_per_ifs") {
+            cfg.cn_per_ifs = v as u32;
+        }
+        if let Some(v) = doc.int("ifs_stripe") {
+            cfg.ifs_stripe = v as u32;
+        }
+        // Bandwidths in the file are MB/s; sizes are MiB — the file stays
+        // human-readable, the struct stays in bytes/sec and bytes.
+        let net = &mut cfg.net;
+        set_bw(doc, "net.tree_link_mbps", &mut net.tree_link_bw);
+        set_bw(doc, "net.ion_ingest_mbps", &mut net.ion_ingest_bw);
+        set_bw(doc, "net.fuse_read_mbps", &mut net.fuse_read_bw);
+        set_bw(doc, "net.fuse_write_mbps", &mut net.fuse_write_bw);
+        set_bw(doc, "net.torus_pp_mbps", &mut net.torus_pp_bw);
+        set_f64(doc, "net.chirp_request_overhead_s", &mut net.chirp_request_overhead_s);
+        set_bw(doc, "net.tree_copy_mbps", &mut net.tree_copy_bw);
+        set_f64(doc, "net.tree_copy_setup_s", &mut net.tree_copy_setup_s);
+        set_bw(doc, "net.ion_ext_mbps", &mut net.ion_ext_bw);
+        let gfs = &mut cfg.gfs;
+        set_bw(doc, "gfs.read_agg_mbps", &mut gfs.read_agg_bw);
+        set_bw(doc, "gfs.write_agg_mbps", &mut gfs.write_agg_bw);
+        set_bw(doc, "gfs.small_write_agg_mbps", &mut gfs.small_write_agg_bw);
+        set_bw(doc, "gfs.per_client_mbps", &mut gfs.per_client_bw);
+        set_f64(doc, "gfs.create_base_s", &mut gfs.create_base_s);
+        set_f64(doc, "gfs.create_k", &mut gfs.create_k);
+        set_f64(doc, "gfs.create_p", &mut gfs.create_p);
+        let node = &mut cfg.node;
+        if let Some(v) = doc.int("node.cores_per_node") {
+            node.cores_per_node = v as u32;
+        }
+        set_size(doc, "node.lfs_capacity_mib", &mut node.lfs_capacity);
+        set_bw(doc, "node.lfs_mbps", &mut node.lfs_bw);
+        set_size(doc, "node.server_mem_mib", &mut node.server_mem);
+        if let Some(v) = doc.int("node.server_buf_divisor") {
+            node.server_buf_divisor = v as u64;
+        }
+        set_size(doc, "node.server_buf_max_mib", &mut node.server_buf_max);
+        let ifs = &mut cfg.ifs;
+        set_bw(doc, "ifs.server_mbps", &mut ifs.server_bw);
+        set_f64(doc, "ifs.stripe_alpha", &mut ifs.stripe_alpha);
+        set_size(doc, "ifs.member_capacity_mib", &mut ifs.member_capacity);
+        let d = &mut cfg.dispatch;
+        set_f64(doc, "dispatch.rate_ceiling", &mut d.rate_ceiling);
+        set_f64(doc, "dispatch.latency_s", &mut d.latency_s);
+        let c = &mut cfg.collector;
+        set_f64(doc, "collector.max_delay_s", &mut c.max_delay_s);
+        set_size(doc, "collector.max_data_mib", &mut c.max_data);
+        set_size(doc, "collector.min_free_space_mib", &mut c.min_free_space);
+        set_size(doc, "collector.gfs_block_mib", &mut c.gfs_block);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        Self::from_toml(&Document::load(path)?)
+    }
+
+    /// Sanity checks shared by all constructors.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.procs > 0, "procs must be positive");
+        anyhow::ensure!(self.node.cores_per_node > 0, "cores_per_node must be positive");
+        anyhow::ensure!(self.cn_per_ion > 0, "cn_per_ion must be positive");
+        anyhow::ensure!(self.cn_per_ifs > 0, "cn_per_ifs must be positive");
+        anyhow::ensure!(self.ifs_stripe >= 1, "ifs_stripe must be >= 1");
+        anyhow::ensure!(
+            self.collector.max_data > 0 && self.collector.max_delay_s > 0.0,
+            "collector policy must have positive thresholds"
+        );
+        Ok(())
+    }
+}
+
+const KNOWN_KEYS: &[&str] = &[
+    "name",
+    "procs",
+    "cn_per_ion",
+    "cn_per_ifs",
+    "ifs_stripe",
+    "net.tree_link_mbps",
+    "net.ion_ingest_mbps",
+    "net.fuse_read_mbps",
+    "net.fuse_write_mbps",
+    "net.torus_pp_mbps",
+    "net.chirp_request_overhead_s",
+    "net.tree_copy_mbps",
+    "net.tree_copy_setup_s",
+    "net.ion_ext_mbps",
+    "gfs.read_agg_mbps",
+    "gfs.write_agg_mbps",
+    "gfs.small_write_agg_mbps",
+    "gfs.per_client_mbps",
+    "gfs.create_base_s",
+    "gfs.create_k",
+    "gfs.create_p",
+    "node.cores_per_node",
+    "node.lfs_capacity_mib",
+    "node.lfs_mbps",
+    "node.server_mem_mib",
+    "node.server_buf_divisor",
+    "node.server_buf_max_mib",
+    "ifs.server_mbps",
+    "ifs.stripe_alpha",
+    "ifs.member_capacity_mib",
+    "dispatch.rate_ceiling",
+    "dispatch.latency_s",
+    "collector.max_delay_s",
+    "collector.max_data_mib",
+    "collector.min_free_space_mib",
+    "collector.gfs_block_mib",
+];
+
+fn doc_keys(doc: &Document) -> Vec<String> {
+    doc.to_string()
+        .lines()
+        .filter_map(|l| l.split(" = ").next().map(str::to_string))
+        .collect()
+}
+
+fn set_f64(doc: &Document, key: &str, slot: &mut f64) {
+    if let Some(v) = doc.float(key) {
+        *slot = v;
+    }
+}
+
+fn set_bw(doc: &Document, key: &str, slot: &mut f64) {
+    if let Some(v) = doc.float(key) {
+        *slot = v * mib(1) as f64;
+    }
+}
+
+fn set_size(doc: &Document, key: &str, slot: &mut u64) {
+    if let Some(v) = doc.float(key) {
+        *slot = (v * mib(1) as f64) as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bgp_derived_counts() {
+        let cfg = ClusterConfig::bgp(163_840);
+        assert_eq!(cfg.nodes(), 40_960);
+        assert_eq!(cfg.ions(), 640);
+        assert_eq!(cfg.ifs_groups(), 640);
+        let small = ClusterConfig::bgp(256);
+        assert_eq!(small.nodes(), 64);
+        assert_eq!(small.ions(), 1);
+    }
+
+    #[test]
+    fn striping_model_matches_fig12_endpoints() {
+        let cfg = ClusterConfig::bgp(4096);
+        let k1 = cfg.ifs_striped_bw(1);
+        let k32 = cfg.ifs_striped_bw(32);
+        assert!((k1 / mbps(1) - 158.0).abs() < 1.0, "degree 1: {}", k1 / mbps(1));
+        assert!((k32 / mbps(1) - 831.0).abs() < 15.0, "degree 32: {}", k32 / mbps(1));
+        for k in 1..32 {
+            assert!(cfg.ifs_striped_bw(k + 1) > cfg.ifs_striped_bw(k), "monotone at k={k}");
+        }
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let doc = Document::parse(
+            r#"
+            name = "test"
+            procs = 8192
+            cn_per_ifs = 256
+            [net]
+            torus_pp_mbps = 100
+            [gfs]
+            create_base_s = 0.5
+            [collector]
+            max_data_mib = 512
+            "#,
+        )
+        .unwrap();
+        let cfg = ClusterConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.name, "test");
+        assert_eq!(cfg.procs, 8192);
+        assert_eq!(cfg.cn_per_ifs, 256);
+        assert_eq!(cfg.net.torus_pp_bw, mbps(100));
+        assert_eq!(cfg.gfs.create_base_s, 0.5);
+        assert_eq!(cfg.collector.max_data, mib(512));
+        // Untouched keys keep defaults.
+        assert_eq!(cfg.net.tree_link_bw, mbps(850));
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let doc = Document::parse("procz = 8192\n").unwrap();
+        let err = ClusterConfig::from_toml(&doc).unwrap_err();
+        assert!(err.to_string().contains("unknown config key: procz"));
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let mut cfg = ClusterConfig::bgp(1024);
+        cfg.procs = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ClusterConfig::bgp(1024);
+        cfg.collector.max_delay_s = 0.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn builders() {
+        let cfg = ClusterConfig::bgp(1024).with_ifs_ratio(256).with_stripe(8);
+        assert_eq!(cfg.cn_per_ifs, 256);
+        assert_eq!(cfg.ifs_stripe, 8);
+    }
+}

@@ -1,0 +1,53 @@
+//! # cio — a collective IO model for loosely coupled petascale programming
+//!
+//! Reproduction of Zhang et al., *Design and Evaluation of a Collective IO
+//! Model for Loosely Coupled Petascale Programming* (MTAGS 2008).
+//!
+//! Loosely coupled (many-task) applications exchange data between program
+//! invocations as ordinary files. At petascale, tens of thousands of compute
+//! nodes contending on one shared parallel file system (GPFS on the Blue
+//! Gene/P in the paper) turn file creation, small writes, and same-directory
+//! metadata traffic into the dominant cost. This crate implements the
+//! paper's remedy — file-domain *collective IO*:
+//!
+//! * a three-tier storage hierarchy: **GFS** (global persistent), **IFS**
+//!   (intermediate file systems striped over node RAM disks), **LFS**
+//!   (per-node RAM disk) — see [`sim`] for the simulated cluster and
+//!   [`cio::placement`] for the tiering policy;
+//! * an **input distributor** that broadcasts read-many input data from GFS
+//!   to the IFSs over a spanning tree ([`cio::distributor`]);
+//! * an **output collector** that batches task outputs on LFS/IFS and
+//!   asynchronously archives them to GFS in large sequential units governed
+//!   by a `maxDelay / maxData / minFreeSpace` policy ([`cio::collector`]);
+//! * randomly accessible (xar-like) **archives** so downstream workflow
+//!   stages can re-read collected outputs in parallel ([`cio::archive`]);
+//! * a Falkon-like **task dispatcher** ([`cio::dispatch`]) and multi-stage
+//!   dataflow plumbing ([`cio::stage`]).
+//!
+//! The original testbed (a 163,840-processor BG/P, GPFS, the torus and
+//! collective-tree networks) is replaced by a deterministic discrete-event
+//! cluster simulator ([`sim`]) calibrated to the paper's published
+//! parameters; the collective-IO machinery itself also runs against real
+//! directories and threads ([`cio::local`]) so the archive/collector code
+//! paths are exercised with real bytes in tests and examples.
+//!
+//! Task compute payloads (the DOCK6-like docking screen of §6.3) execute a
+//! JAX/Pallas-authored scoring model ahead-of-time lowered to HLO and run
+//! from Rust via PJRT ([`runtime`]); Python is never on the request path.
+//!
+//! See `examples/` for runnable end-to-end drivers and `rust/benches/` for
+//! the per-figure reproduction harnesses (Figures 11–17 of the paper).
+
+pub mod cio;
+pub mod config;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Version string reported by the CLI and the bench harnesses.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,229 @@
+//! `cio` — CLI for the collective-IO reproduction.
+//!
+//! Subcommands:
+//!   run        run a synthetic MTC workload on the simulated cluster
+//!   dock       run the DOCK6-like 3-stage workflow (Figure 17)
+//!   distribute compare naive vs spanning-tree input distribution (Fig 13)
+//!   inspect    list / extract members of a collective archive
+//!   config     print the effective cluster configuration
+//!
+//! Figure benches live under `cargo bench --bench figNN`.
+
+use cio::cio::archive::Reader;
+use cio::config::ClusterConfig;
+use cio::sim::cluster::{IoMode, SimCluster};
+use cio::util::cli::{Args, Help};
+use cio::util::table::{num, Table};
+use cio::util::units::{fmt_bw, mib, parse_bytes};
+use cio::workload::synthetic::SyntheticWorkload;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    cio::util::logging::init();
+    let args = Args::parse(true);
+    let help = Help::new("cio", "collective IO for loosely coupled petascale programming")
+        .opt("run --procs N --tasks N --dur S --out SIZE --mode gpfs|cio|ram", "synthetic MTC run")
+        .opt("dock --procs N --tasks N", "DOCK6-like 3-stage workflow, CIO vs GPFS")
+        .opt("workflow SCRIPT.cioflow", "plan + simulate a Swift-like workflow script")
+        .opt("distribute --procs N --size SIZE", "Fig 13 distribution comparison")
+        .opt("inspect ARCHIVE [--extract NAME]", "read a .cioar archive")
+        .opt("config [--config FILE]", "print the effective configuration")
+        .opt("--config FILE", "load a configs/*.toml cluster config")
+        .opt("--trace [--trace-csv FILE]", "record + print utilization timelines (run cmd)")
+        .opt("--help", "this help");
+    help.maybe_exit(&args);
+
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("dock") => cmd_dock(&args),
+        Some("workflow") => cmd_workflow(&args),
+        Some("distribute") => cmd_distribute(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("config") => cmd_config(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o:?}\n");
+            }
+            print!("{}", help.render());
+            Ok(())
+        }
+    }
+}
+
+fn load_config(args: &Args) -> anyhow::Result<ClusterConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ClusterConfig::load(Path::new(path))?,
+        None => ClusterConfig::bgp(1024),
+    };
+    if let Some(procs) = args.get_parse::<u32>("procs") {
+        cfg.procs = procs;
+        cfg.name = format!("bgp-{procs}");
+    }
+    Ok(cfg)
+}
+
+fn parse_mode(s: &str) -> anyhow::Result<IoMode> {
+    match s {
+        "gpfs" => Ok(IoMode::Gpfs),
+        "cio" => Ok(IoMode::Cio),
+        "ram" => Ok(IoMode::RamOnly),
+        other => anyhow::bail!("unknown mode {other:?} (gpfs|cio|ram)"),
+    }
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let tasks = args.get_parse_or("tasks", cfg.procs as u64 * 2);
+    let dur = args.get_parse_or("dur", 4.0f64);
+    let out = parse_bytes(args.get_or("out", "1MB")).context_bytes("--out")?;
+    let mode = parse_mode(args.get_or("mode", "cio"))?;
+    let wl = SyntheticWorkload::new(tasks, dur, out);
+    let trace = args.has("trace");
+    let (report, eff) = if trace {
+        let ideal = wl.run(&cfg, IoMode::RamOnly);
+        let mut cluster = SimCluster::new(&cfg);
+        cluster.enable_trace();
+        let report = cluster.run_mtc(tasks, dur, out, mode);
+        let eff = report.efficiency_vs(&ideal);
+        if let Some(tl) = cluster.timeline() {
+            for series in ["tasks_done", "gfs_bytes", "staging_buffered"] {
+                if let Some(spark) = tl.sparkline(series, 60) {
+                    println!("{series:>18} {spark}");
+                }
+            }
+            if let Some(path) = args.get("trace-csv") {
+                std::fs::write(path, tl.to_csv())?;
+                println!("(timeline written to {path})");
+            }
+        }
+        (report, eff)
+    } else {
+        wl.run_with_efficiency(&cfg, mode)
+    };
+    let mut t = Table::new(vec!["metric", "value"]).title(format!(
+        "{} on {} procs — {} tasks x {}s x {}",
+        report.mode.label(),
+        cfg.procs,
+        tasks,
+        dur,
+        args.get_or("out", "1MB")
+    ));
+    t.row(vec!["efficiency vs ideal".to_string(), format!("{:.1}%", eff * 100.0)]);
+    t.row(vec!["makespan (tasks)".to_string(), format!("{:.1}s", report.makespan_tasks_s)]);
+    t.row(vec!["makespan (data on GFS)".to_string(), format!("{:.1}s", report.makespan_data_s)]);
+    t.row(vec!["write throughput".to_string(), fmt_bw(report.write_throughput(out))]);
+    t.row(vec!["GFS files created".to_string(), format!("{}", report.gfs_files)]);
+    t.row(vec![
+        "file reduction".to_string(),
+        format!("{:.0}x", report.collector.reduction_factor()),
+    ]);
+    t.row(vec!["dispatch throttling".to_string(), format!("{:.1}%", report.throttle_fraction * 100.0)]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_dock(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let tasks = args.get_parse_or("tasks", 15_360u64);
+    let report = cio::workload::dock::run_comparison(&cfg, tasks)?;
+    print!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_workflow(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: cio workflow SCRIPT.cioflow"))?;
+    let text = std::fs::read_to_string(path)?;
+    let program = cio::cio::swift::parse(&text)?;
+    let run = cio::cio::swift::run(&program)?;
+    let mut t = Table::new(vec!["stage", "GPFS (s)", "CIO (s)", "speedup"])
+        .title(format!("workflow {} on {} procs", path, program.cluster.procs));
+    t.row(vec![
+        "input distribution".to_string(),
+        "-".to_string(),
+        num(run.distribution_s),
+        "-".to_string(),
+    ]);
+    for s in &run.stages {
+        t.row(vec![s.name.clone(), num(s.gpfs_s), num(s.cio_s), format!("{:.2}x", s.gpfs_s / s.cio_s)]);
+    }
+    t.row(vec![
+        "total".to_string(),
+        num(run.gpfs_total_s()),
+        num(run.cio_total_s()),
+        format!("{:.2}x", run.speedup()),
+    ]);
+    print!("{}", t.render());
+    println!("staging plan:");
+    for a in &run.staging {
+        println!("  {a:?}");
+    }
+    Ok(())
+}
+
+fn cmd_distribute(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let size = parse_bytes(args.get_or("size", "100MB")).context_bytes("--size")?;
+    let nodes = cfg.nodes();
+    let mut naive = SimCluster::new(&cfg);
+    let (tn, aggn) = naive.distribute_naive(nodes, size);
+    let mut tree = SimCluster::new(&cfg);
+    let (tt, aggt) =
+        tree.distribute_tree(nodes, size, cio::cio::distributor::TreeShape::Binomial);
+    let mut t = Table::new(vec!["method", "time (s)", "equiv throughput"])
+        .title(format!("distribute {} to {} nodes", args.get_or("size", "100MB"), nodes));
+    t.row(vec!["naive GPFS".to_string(), num(tn), fmt_bw(aggn)]);
+    t.row(vec!["spanning tree".to_string(), num(tt), fmt_bw(aggt)]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: cio inspect ARCHIVE [--extract NAME]"))?;
+    let r = Reader::open(Path::new(path))?;
+    if let Some(name) = args.get("extract") {
+        let data = r.extract(name)?;
+        std::io::Write::write_all(&mut std::io::stdout().lock(), &data)?;
+        return Ok(());
+    }
+    let mut t = Table::new(vec!["member", "raw", "stored", "crc32"]).title(format!(
+        "{} — {} members",
+        path,
+        r.len()
+    ));
+    for e in r.entries() {
+        t.row(vec![
+            e.name.clone(),
+            format!("{}", e.raw_len),
+            format!("{}", e.stored_len),
+            format!("{:08x}", e.crc32),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    println!("{cfg:#?}");
+    println!("nodes = {}, ions = {}, ifs groups = {}", cfg.nodes(), cfg.ions(), cfg.ifs_groups());
+    println!("striped IFS bw (k={}): {}", cfg.ifs_stripe, fmt_bw(cfg.ifs_striped_bw(cfg.ifs_stripe)));
+    println!("1 MiB is {} bytes; default archive block {}", mib(1), cfg.collector.gfs_block);
+    Ok(())
+}
+
+/// Small helper so size parse failures read well.
+trait BytesContext {
+    fn context_bytes(self, flag: &str) -> anyhow::Result<u64>;
+}
+
+impl BytesContext for Option<u64> {
+    fn context_bytes(self, flag: &str) -> anyhow::Result<u64> {
+        self.ok_or_else(|| anyhow::anyhow!("{flag}: cannot parse size (try 4KB, 1MB, 2GiB)"))
+    }
+}

@@ -1,0 +1,151 @@
+//! Metric computation and report emission shared by the figure benches
+//! and the CLI: the paper's efficiency definition, aggregate-throughput
+//! accounting, and paper-vs-measured comparison rows.
+
+use crate::util::table::{num, Table};
+use crate::util::units::mib;
+
+pub mod timeline;
+
+/// The paper's efficiency metric: ratio of an ideal (no-IO) makespan to
+/// the measured makespan, clamped to [0, 1].
+pub fn efficiency(ideal_makespan_s: f64, measured_makespan_s: f64) -> f64 {
+    assert!(ideal_makespan_s > 0.0 && measured_makespan_s > 0.0);
+    (ideal_makespan_s / measured_makespan_s).clamp(0.0, 1.0)
+}
+
+/// Aggregate throughput in MB/s given total bytes and elapsed seconds.
+pub fn throughput_mbps(total_bytes: u64, elapsed_s: f64) -> f64 {
+    assert!(elapsed_s > 0.0);
+    total_bytes as f64 / elapsed_s / mib(1) as f64
+}
+
+/// One paper-vs-measured comparison row for EXPERIMENTS.md.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    /// Series / condition label ("CIO 32K procs, 1MB").
+    pub label: String,
+    /// The paper's reported value.
+    pub paper: f64,
+    /// Our measured value.
+    pub measured: f64,
+    /// Unit for display.
+    pub unit: &'static str,
+}
+
+impl Comparison {
+    /// measured / paper.
+    pub fn ratio(&self) -> f64 {
+        self.measured / self.paper
+    }
+}
+
+/// Collects comparisons and renders the table every figure bench prints.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    rows: Vec<Comparison>,
+    title: String,
+}
+
+impl Report {
+    /// Report titled after the figure it reproduces.
+    pub fn new(title: &str) -> Self {
+        Report { rows: Vec::new(), title: title.to_string() }
+    }
+
+    /// Add one comparison row.
+    pub fn push(&mut self, label: impl Into<String>, paper: f64, measured: f64, unit: &'static str) {
+        self.rows.push(Comparison { label: label.into(), paper, measured, unit });
+    }
+
+    /// All rows.
+    pub fn rows(&self) -> &[Comparison] {
+        &self.rows
+    }
+
+    /// Do all rows fall within `tol` relative deviation of the paper's
+    /// value? (Loose by design: we match *shape*, not testbed absolutes.)
+    pub fn within(&self, tol: f64) -> bool {
+        self.rows.iter().all(|r| (r.ratio() - 1.0).abs() <= tol)
+    }
+
+    /// Worst-offending row (largest |ratio - 1|), if any.
+    pub fn worst(&self) -> Option<&Comparison> {
+        self.rows.iter().max_by(|a, b| {
+            (a.ratio() - 1.0)
+                .abs()
+                .partial_cmp(&(b.ratio() - 1.0).abs())
+                .unwrap()
+        })
+    }
+
+    /// Render the paper-vs-measured table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec!["condition", "paper", "measured", "ratio", "unit"])
+            .title(self.title.clone());
+        for r in &self.rows {
+            t.row(vec![
+                r.label.clone(),
+                num(r.paper),
+                num(r.measured),
+                format!("{:.2}x", r.ratio()),
+                r.unit.to_string(),
+            ]);
+        }
+        t.render()
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let mut t = Table::new(vec!["condition", "paper", "measured", "ratio", "unit"]);
+        for r in &self.rows {
+            t.row(vec![
+                r.label.clone(),
+                format!("{}", r.paper),
+                format!("{}", r.measured),
+                format!("{}", r.ratio()),
+                r.unit.to_string(),
+            ]);
+        }
+        t.to_csv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficiency_clamps() {
+        assert_eq!(efficiency(4.0, 8.0), 0.5);
+        assert_eq!(efficiency(8.0, 4.0), 1.0, "faster than ideal clamps to 1");
+    }
+
+    #[test]
+    fn throughput_units() {
+        assert!((throughput_mbps(mib(100), 1.0) - 100.0).abs() < 1e-9);
+        assert!((throughput_mbps(mib(100), 4.0) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_roundtrip() {
+        let mut r = Report::new("Fig 16");
+        r.push("GPFS peak", 250.0, 240.0, "MB/s");
+        r.push("CIO peak", 2100.0, 2300.0, "MB/s");
+        assert!(r.within(0.15));
+        assert!(!r.within(0.05));
+        assert_eq!(r.worst().unwrap().label, "CIO peak");
+        let text = r.render();
+        assert!(text.contains("Fig 16"));
+        assert!(text.contains("GPFS peak"));
+        let csv = r.to_csv();
+        assert!(csv.starts_with("condition,paper,measured"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_time_rejected() {
+        throughput_mbps(1, 0.0);
+    }
+}

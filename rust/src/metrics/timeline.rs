@@ -1,0 +1,165 @@
+//! Time-series sampling of simulation state (utilization timelines).
+//!
+//! The figure benches report end-of-run aggregates; for debugging and for
+//! the `cio run --trace` CLI flag we also want *when* things happened:
+//! GFS bytes landed, staging occupancy, tasks completed. [`Timeline`]
+//! collects (t, value) points per named series and renders them as CSV or
+//! a coarse ASCII sparkline.
+
+use crate::util::units::SimTime;
+use std::collections::BTreeMap;
+
+/// A set of named time series.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    series: BTreeMap<String, Vec<(SimTime, f64)>>,
+}
+
+impl Timeline {
+    /// Empty timeline.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one observation.
+    pub fn push(&mut self, series: &str, t: SimTime, value: f64) {
+        let s = self.series.entry(series.to_string()).or_default();
+        debug_assert!(s.last().map(|&(lt, _)| lt <= t).unwrap_or(true), "time went backwards");
+        s.push((t, value));
+    }
+
+    /// Number of series.
+    pub fn len(&self) -> usize {
+        self.series.len()
+    }
+
+    /// True when nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.series.is_empty()
+    }
+
+    /// Points of one series.
+    pub fn points(&self, series: &str) -> Option<&[(SimTime, f64)]> {
+        self.series.get(series).map(Vec::as_slice)
+    }
+
+    /// Resample a series onto `buckets` uniform time bins (last value
+    /// wins per bin; empty bins carry the previous value forward).
+    pub fn resample(&self, series: &str, buckets: usize) -> Option<Vec<f64>> {
+        let pts = self.series.get(series)?;
+        if pts.is_empty() || buckets == 0 {
+            return Some(vec![]);
+        }
+        let end = pts.last().unwrap().0;
+        let span = end.0.max(1) as f64;
+        let mut out = vec![f64::NAN; buckets];
+        for &(t, v) in pts {
+            let idx = ((t.0 as f64 / span) * (buckets - 1) as f64).round() as usize;
+            out[idx.min(buckets - 1)] = v;
+        }
+        // Forward-fill.
+        let mut last = pts[0].1;
+        for slot in out.iter_mut() {
+            if slot.is_nan() {
+                *slot = last;
+            } else {
+                last = *slot;
+            }
+        }
+        Some(out)
+    }
+
+    /// ASCII sparkline of a series (resampled to `width` columns).
+    pub fn sparkline(&self, series: &str, width: usize) -> Option<String> {
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let vals = self.resample(series, width)?;
+        if vals.is_empty() {
+            return Some(String::new());
+        }
+        let (min, max) = vals.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &v| {
+            (lo.min(v), hi.max(v))
+        });
+        let range = (max - min).max(1e-12);
+        Some(
+            vals.iter()
+                .map(|&v| BARS[(((v - min) / range) * 7.0).round() as usize])
+                .collect(),
+        )
+    }
+
+    /// CSV export: `series,t_seconds,value` rows.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("series,t_seconds,value\n");
+        for (name, pts) in &self.series {
+            for &(t, v) in pts {
+                out.push_str(&format!("{name},{},{v}\n", t.as_secs_f64()));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: u64) -> SimTime {
+        SimTime::from_secs(s)
+    }
+
+    #[test]
+    fn push_and_read_back() {
+        let mut tl = Timeline::new();
+        assert!(tl.is_empty());
+        tl.push("gfs_bytes", t(1), 100.0);
+        tl.push("gfs_bytes", t(2), 250.0);
+        tl.push("staging", t(1), 10.0);
+        assert_eq!(tl.len(), 2);
+        assert_eq!(tl.points("gfs_bytes").unwrap().len(), 2);
+        assert!(tl.points("missing").is_none());
+    }
+
+    #[test]
+    fn resample_forward_fills() {
+        let mut tl = Timeline::new();
+        tl.push("x", t(0), 1.0);
+        tl.push("x", t(10), 5.0);
+        let r = tl.resample("x", 11).unwrap();
+        assert_eq!(r.len(), 11);
+        assert_eq!(r[0], 1.0);
+        assert_eq!(r[10], 5.0);
+        // Middle bins carry 1.0 forward.
+        assert_eq!(r[5], 1.0);
+    }
+
+    #[test]
+    fn sparkline_shape() {
+        let mut tl = Timeline::new();
+        for i in 0..20u64 {
+            tl.push("ramp", t(i), i as f64);
+        }
+        let s = tl.sparkline("ramp", 10).unwrap();
+        assert_eq!(s.chars().count(), 10);
+        let chars: Vec<char> = s.chars().collect();
+        assert_eq!(*chars.first().unwrap(), '▁');
+        assert_eq!(*chars.last().unwrap(), '█');
+    }
+
+    #[test]
+    fn csv_export() {
+        let mut tl = Timeline::new();
+        tl.push("a", t(1), 2.5);
+        let csv = tl.to_csv();
+        assert!(csv.starts_with("series,t_seconds,value\n"));
+        assert!(csv.contains("a,1,2.5"));
+    }
+
+    #[test]
+    fn constant_series_sparkline_is_flat() {
+        let mut tl = Timeline::new();
+        tl.push("c", t(0), 4.0);
+        tl.push("c", t(5), 4.0);
+        let s = tl.sparkline("c", 5).unwrap();
+        assert!(s.chars().all(|c| c == '▁'), "{s}");
+    }
+}

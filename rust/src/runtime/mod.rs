@@ -1,0 +1,282 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
+//! the Rust request path.
+//!
+//! The build-time Python side (`python/compile/aot.py`) lowers the JAX
+//! docking-score model (which calls the Pallas kernel) to **HLO text**
+//! and writes `artifacts/*.hlo.txt`. This module loads that text with
+//! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU client,
+//! and executes it with concrete buffers — Python never runs at request
+//! time. (Text, not `.serialize()`: jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids. See DESIGN.md and /opt/xla-example.)
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Metadata describing a compiled artifact's expected shapes, parsed from
+/// the sibling `<name>.meta` file that `aot.py` writes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    /// Poses per batch (leading dimension).
+    pub batch: usize,
+    /// Atoms per ligand pose.
+    pub atoms: usize,
+    /// Features per receptor-grid channel.
+    pub features: usize,
+    /// Fused top-k width (screen artifacts only; 0 = score-only).
+    pub top_k: usize,
+}
+
+impl ArtifactMeta {
+    /// Parse `key=value` lines.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut batch = None;
+        let mut atoms = None;
+        let mut features = None;
+        let mut top_k = 0usize;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("bad meta line {line:?}"))?;
+            let v: usize = v.trim().parse().with_context(|| format!("bad meta value {line:?}"))?;
+            match k.trim() {
+                "batch" => batch = Some(v),
+                "atoms" => atoms = Some(v),
+                "features" => features = Some(v),
+                "top_k" => top_k = v,
+                other => anyhow::bail!("unknown meta key {other:?}"),
+            }
+        }
+        Ok(ArtifactMeta {
+            batch: batch.context("meta missing batch")?,
+            atoms: atoms.context("meta missing atoms")?,
+            features: features.context("meta missing features")?,
+            top_k,
+        })
+    }
+
+    /// Load from `<artifact>.meta`.
+    pub fn load(meta_path: &Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?)
+    }
+}
+
+/// A loaded, compiled docking-score executable.
+pub struct ScoreModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Shape metadata.
+    pub meta: ArtifactMeta,
+    /// Artifact path (diagnostics).
+    pub path: PathBuf,
+}
+
+/// Locate the artifacts directory: `$CIO_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("CIO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+impl ScoreModel {
+    /// Load and compile `artifacts/dock_score.hlo.txt` (plus its `.meta`).
+    pub fn load_default() -> Result<ScoreModel> {
+        let dir = artifacts_dir();
+        Self::load(&dir.join("dock_score.hlo.txt"))
+    }
+
+    /// Load and compile a specific artifact.
+    pub fn load(hlo_path: &Path) -> Result<ScoreModel> {
+        anyhow::ensure!(
+            hlo_path.is_file(),
+            "artifact {} not found — run `make artifacts` first",
+            hlo_path.display()
+        );
+        // `dock_score.hlo.txt` -> `dock_score.meta` (aot.py's convention).
+        let meta_path = match hlo_path.to_string_lossy().strip_suffix(".hlo.txt") {
+            Some(stem) => PathBuf::from(format!("{stem}.meta")),
+            None => hlo_path.with_extension("meta"),
+        };
+        let meta = ArtifactMeta::load(&meta_path)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 artifact path")?,
+        )
+        .context("parsing HLO text")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling HLO")?;
+        Ok(ScoreModel { exe, meta, path: hlo_path.to_path_buf() })
+    }
+
+    /// Score a batch: `ligands` is `[batch, atoms, 4]` (x, y, z, charge)
+    /// flattened row-major; `grid` is `[atoms, features]` flattened;
+    /// `weights` is `[features]`. Returns `batch` scores (one per pose).
+    pub fn score_batch(&self, ligands: &[f32], grid: &[f32], weights: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.meta;
+        anyhow::ensure!(
+            ligands.len() == m.batch * m.atoms * 4,
+            "ligands length {} != batch {} x atoms {} x 4",
+            ligands.len(),
+            m.batch,
+            m.atoms
+        );
+        anyhow::ensure!(grid.len() == m.atoms * m.features, "grid length mismatch");
+        anyhow::ensure!(weights.len() == m.features, "weights length mismatch");
+        let lig = xla::Literal::vec1(ligands).reshape(&[
+            m.batch as i64,
+            m.atoms as i64,
+            4,
+        ])?;
+        let grd = xla::Literal::vec1(grid).reshape(&[m.atoms as i64, m.features as i64])?;
+        let wts = xla::Literal::vec1(weights);
+        let result = self.exe.execute::<xla::Literal>(&[lig, grd, wts])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let scores = result.to_tuple1()?;
+        Ok(scores.to_vec::<f32>()?)
+    }
+}
+
+/// A loaded screen executable: scores + fused top-k selection (the
+/// stage-2 "select" step compiled into the same graph; §5.3 downstream
+/// processing without touching Python).
+pub struct ScreenModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Shape metadata (`top_k` > 0).
+    pub meta: ArtifactMeta,
+}
+
+/// Result of one screen execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScreenResult {
+    /// All per-pose scores.
+    pub scores: Vec<f32>,
+    /// Indices of the k best (lowest-energy) poses, best first.
+    pub best_idx: Vec<i32>,
+    /// Their scores, ascending.
+    pub best_scores: Vec<f32>,
+}
+
+impl ScreenModel {
+    /// Load and compile `artifacts/dock_screen.hlo.txt`.
+    pub fn load_default() -> Result<ScreenModel> {
+        Self::load(&artifacts_dir().join("dock_screen.hlo.txt"))
+    }
+
+    /// Load and compile a specific screen artifact.
+    pub fn load(hlo_path: &Path) -> Result<ScreenModel> {
+        anyhow::ensure!(
+            hlo_path.is_file(),
+            "artifact {} not found — run `make artifacts` first",
+            hlo_path.display()
+        );
+        let meta_path = match hlo_path.to_string_lossy().strip_suffix(".hlo.txt") {
+            Some(stem) => PathBuf::from(format!("{stem}.meta")),
+            None => hlo_path.with_extension("meta"),
+        };
+        let meta = ArtifactMeta::load(&meta_path)?;
+        anyhow::ensure!(meta.top_k > 0, "screen artifact must declare top_k");
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 artifact path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling HLO")?;
+        Ok(ScreenModel { exe, meta })
+    }
+
+    /// Run the screen: scores + top-k best poses in one PJRT execution.
+    pub fn screen(&self, ligands: &[f32], grid: &[f32], weights: &[f32]) -> Result<ScreenResult> {
+        let m = &self.meta;
+        anyhow::ensure!(ligands.len() == m.batch * m.atoms * 4, "ligands length mismatch");
+        anyhow::ensure!(grid.len() == m.atoms * m.features, "grid length mismatch");
+        anyhow::ensure!(weights.len() == m.features, "weights length mismatch");
+        let lig =
+            xla::Literal::vec1(ligands).reshape(&[m.batch as i64, m.atoms as i64, 4])?;
+        let grd = xla::Literal::vec1(grid).reshape(&[m.atoms as i64, m.features as i64])?;
+        let wts = xla::Literal::vec1(weights);
+        let result =
+            self.exe.execute::<xla::Literal>(&[lig, grd, wts])?[0][0].to_literal_sync()?;
+        let (scores, idx, best) = result.to_tuple3()?;
+        Ok(ScreenResult {
+            scores: scores.to_vec::<f32>()?,
+            best_idx: idx.to_vec::<i32>()?,
+            best_scores: best.to_vec::<f32>()?,
+        })
+    }
+}
+
+/// Pure-Rust reference scorer mirroring `python/compile/kernels/ref.py`,
+/// used to validate the PJRT path end-to-end (same formula, f32).
+///
+/// score[b] = sum_a sum_f interact(lig[b,a]) * grid[a,f] * weights[f]
+/// where interact(x,y,z,q) = q / (1 + x^2 + y^2 + z^2).
+pub fn score_reference(
+    meta: &ArtifactMeta,
+    ligands: &[f32],
+    grid: &[f32],
+    weights: &[f32],
+) -> Vec<f32> {
+    let (b, a, f) = (meta.batch, meta.atoms, meta.features);
+    let mut out = vec![0f32; b];
+    for bi in 0..b {
+        let mut acc = 0f32;
+        for ai in 0..a {
+            let base = (bi * a + ai) * 4;
+            let (x, y, z, q) =
+                (ligands[base], ligands[base + 1], ligands[base + 2], ligands[base + 3]);
+            let inter = q / (1.0 + x * x + y * y + z * z);
+            for fi in 0..f {
+                acc += inter * grid[ai * f + fi] * weights[fi];
+            }
+        }
+        out[bi] = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses() {
+        let m = ArtifactMeta::parse("# comment\nbatch = 64\natoms=32\nfeatures = 8\n").unwrap();
+        assert_eq!(m, ArtifactMeta { batch: 64, atoms: 32, features: 8, top_k: 0 });
+        let m = ArtifactMeta::parse("batch=4\natoms=2\nfeatures=2\ntop_k = 8\n").unwrap();
+        assert_eq!(m.top_k, 8);
+    }
+
+    #[test]
+    fn meta_rejects_garbage() {
+        assert!(ArtifactMeta::parse("batch = x\n").is_err());
+        assert!(ArtifactMeta::parse("batch = 1\natoms = 1\n").is_err(), "missing features");
+        assert!(ArtifactMeta::parse("batch=1\natoms=1\nfeatures=1\nbogus=2\n").is_err());
+    }
+
+    #[test]
+    fn reference_scorer_simple_case() {
+        let meta = ArtifactMeta { batch: 2, atoms: 1, features: 2, top_k: 0 };
+        // Atom at origin with charge 2: interact = 2 / 1 = 2.
+        let ligands = [0.0, 0.0, 0.0, 2.0, /* pose 2: */ 1.0, 0.0, 0.0, 2.0];
+        let grid = [0.5, 1.5]; // one atom row, two features
+        let weights = [1.0, 2.0];
+        let scores = score_reference(&meta, &ligands, &grid, &weights);
+        // pose 1: 2 * (0.5*1 + 1.5*2) = 7; pose 2: interact = 2/2 = 1 -> 3.5
+        assert!((scores[0] - 7.0).abs() < 1e-6);
+        assert!((scores[1] - 3.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn missing_artifact_gives_actionable_error() {
+        let err = ScoreModel::load(Path::new("/nonexistent/x.hlo.txt")).err().unwrap();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    // PJRT execution tests live in rust/tests/runtime_pjrt.rs (they need
+    // `make artifacts` to have run).
+}

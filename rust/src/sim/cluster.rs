@@ -1,0 +1,932 @@
+//! The assembled simulated BG/P partition and the MTC run loops that
+//! regenerate the paper's figures.
+//!
+//! [`SimCluster`] wires the flow network resources (GFS aggregates,
+//! per-ION tree links, per-IFS-group chirp/stripe servers), the GPFS
+//! metadata model, node states and per-ION output staging, then exposes:
+//!
+//! * [`SimCluster::chirp_read_benchmark`] — Figure 11/12 (IFS reads over
+//!   the torus at varying ratios / stripe degrees, including the 512:1
+//!   OOM failure);
+//! * [`SimCluster::distribute_naive`] / [`SimCluster::distribute_tree`] —
+//!   Figure 13 (spanning tree vs naive GFS staging, as simulated flows);
+//! * [`SimCluster::run_mtc`] — Figures 14/15/16 (synthetic tasks writing
+//!   outputs under [`IoMode::Gpfs`] / [`IoMode::Cio`] / [`IoMode::RamOnly`])
+//!   — the §5.2 collector runs event-driven inside the simulation;
+//! * enough public state for the DOCK6 workflow driver
+//!   ([`crate::workload::dock`]) to compose stage-level runs (Figure 17).
+//!
+//! Efficiency follows the paper's definition: measured against *compute
+//! tasks of the same length with no IO* — i.e. the `RamOnly` makespan on
+//! the same partition, which also absorbs dispatcher ramp effects (and
+//! reproduces the Figure 14 anomaly at 32K processors, where the Falkon
+//! dispatch ceiling inflates both numerator and denominator).
+
+use crate::cio::collector::{CollectorStats, FlushReason, Policy};
+use crate::cio::dispatch::Pacer;
+use crate::cio::distributor::TreeShape;
+use crate::config::ClusterConfig;
+use crate::sim::engine::Engine;
+use crate::sim::flow::{FlowNet, HasFlowNet, ResourceId};
+use crate::sim::gfs::{MetaModel, MetaParams};
+use crate::sim::ifs::{ChirpServer, Staging};
+use crate::sim::node::NodeState;
+use crate::metrics::timeline::Timeline;
+use crate::sim::topology::{ifs_group_of, ion_of, rounds};
+use crate::util::rng::Rng;
+use crate::util::units::SimTime;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Task compute-duration model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DurationModel {
+    /// Every task takes exactly this many seconds (§6.2's 4 s / 32 s).
+    Fixed(f64),
+    /// Log-normal with the given mean and underlying sigma — the DOCK6
+    /// profile (§6.3: invocations *averaged* 550 s with a long tail).
+    LogNormal {
+        /// Target mean in seconds.
+        mean_s: f64,
+        /// Sigma of the underlying normal.
+        sigma: f64,
+    },
+}
+
+impl DurationModel {
+    /// Draw one duration.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            DurationModel::Fixed(s) => s,
+            DurationModel::LogNormal { mean_s, sigma } => rng.lognormal_mean(mean_s, sigma),
+        }
+    }
+}
+
+/// Full task profile for a simulated MTC run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSpec {
+    /// Compute-duration model.
+    pub dur: DurationModel,
+    /// Output bytes written per task.
+    pub out_bytes: u64,
+    /// Input bytes read per task before computing (0 = no input phase).
+    /// GPFS mode reads them from GFS; CIO/RamOnly read from the
+    /// already-staged LFS copy (the distributor ran beforehand).
+    pub in_bytes: u64,
+    /// CIO/RamOnly staged input is served by the node's IFS group (a
+    /// shared striped server) instead of its private LFS — the BLAST
+    /// shape, where the dataset exceeds the LFS (§7).
+    pub in_from_ifs: bool,
+}
+
+impl TaskSpec {
+    /// Fixed-duration output-only spec (the §6.2 synthetic shape).
+    pub fn fixed(dur_s: f64, out_bytes: u64) -> Self {
+        TaskSpec { dur: DurationModel::Fixed(dur_s), out_bytes, in_bytes: 0, in_from_ifs: false }
+    }
+}
+
+/// Output-path selection for a simulated MTC run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoMode {
+    /// Baseline: each task synchronously creates + writes its output file
+    /// on GPFS (through its ION).
+    Gpfs,
+    /// Collective IO: write to LFS, copy to the ION staging dir at task
+    /// exit, collector archives asynchronously to GFS.
+    Cio,
+    /// Ideal: output stays on the RAM LFS (the paper's `+RAM` series and
+    /// the efficiency denominator).
+    RamOnly,
+}
+
+impl IoMode {
+    /// Display label matching the paper's series names.
+    pub fn label(&self) -> &'static str {
+        match self {
+            IoMode::Gpfs => "GPFS",
+            IoMode::Cio => "CIO",
+            IoMode::RamOnly => "RAM (ideal)",
+        }
+    }
+}
+
+/// Flow-network resource handles.
+#[derive(Debug, Clone)]
+pub struct Resources {
+    /// GFS aggregate sequential-read capacity.
+    pub gfs_read: ResourceId,
+    /// GFS aggregate large-block write capacity (collector path).
+    pub gfs_write: ResourceId,
+    /// GFS aggregate small-file write capacity (baseline path).
+    pub gfs_small: ResourceId,
+    /// Effectively-unconstrained resource for LFS-local / per-copy-capped
+    /// flows (their real limit is the per-flow rate cap).
+    pub local: ResourceId,
+    /// Per-ION tree-network ingest (index = ION id).
+    pub ion_ingest: Vec<ResourceId>,
+    /// Per-ION external link toward storage (index = ION id).
+    pub ion_ext: Vec<ResourceId>,
+    /// Per-IFS-group serving capacity (chirp server NIC or stripe set).
+    pub ifs_serve: Vec<ResourceId>,
+}
+
+/// The simulation world: all mutable state the events touch.
+pub struct World {
+    /// Configuration snapshot.
+    pub cfg: ClusterConfig,
+    /// Fluid flow network.
+    pub net: FlowNet<World>,
+    /// Resource handles.
+    pub res: Resources,
+    /// GPFS metadata-contention model.
+    pub meta: MetaModel,
+    /// Per-node state.
+    pub nodes: Vec<NodeState>,
+    /// Per-ION output staging areas (collector state).
+    pub staging: Vec<Staging>,
+    /// Per-IFS-group chirp servers (input distribution state).
+    pub chirp: Vec<ChirpServer>,
+    /// Per-ION collector bookkeeping.
+    pub collectors: Vec<CollectorState>,
+    /// Collector policy in force.
+    pub policy: Policy,
+    /// Falkon-like dispatch pacer.
+    pub pacer: Pacer,
+    /// Deterministic randomness for duration draws.
+    pub rng: Rng,
+    /// Optional utilization timeline (enable with
+    /// [`SimCluster::enable_trace`]); sampled at flush and completion
+    /// events.
+    pub timeline: Option<Timeline>,
+    /// Run counters.
+    pub counters: Counters,
+}
+
+/// Per-ION collector bookkeeping.
+#[derive(Debug, Clone)]
+pub struct CollectorState {
+    /// Last archive-write completion (policy clock).
+    pub last_write: SimTime,
+    /// An archive write is in flight (serialized per ION, like the
+    /// prototype's single collector process).
+    pub writing: bool,
+    /// Stats for this collector.
+    pub stats: CollectorStats,
+}
+
+impl CollectorState {
+    fn new() -> Self {
+        CollectorState { last_write: SimTime::ZERO, writing: false, stats: CollectorStats::default() }
+    }
+}
+
+/// Aggregated run counters.
+#[derive(Debug, Clone, Default)]
+pub struct Counters {
+    /// Tasks completed (compute + output committed for the task's mode).
+    pub tasks_done: u64,
+    /// Total compute seconds across tasks.
+    pub compute_s: f64,
+    /// Bytes landed on GFS.
+    pub gfs_bytes: u64,
+    /// Files created on GFS (individual outputs or archives).
+    pub gfs_files: u64,
+    /// Completion time of the last task.
+    pub last_task_done: SimTime,
+    /// Completion time of the last byte landing on GFS.
+    pub last_gfs_write: SimTime,
+    /// OOM failures observed (chirp connection admissions).
+    pub oom_failures: u64,
+    /// CIO outputs that had to spill synchronously because staging was
+    /// full (backpressure indicator).
+    pub staging_spills: u64,
+    /// Total tasks in the current run (drain trigger).
+    pub total_tasks: u64,
+    /// Workload has ended; collectors drain unconditionally.
+    pub draining: bool,
+}
+
+impl HasFlowNet for World {
+    fn flownet(&mut self) -> &mut FlowNet<World> {
+        &mut self.net
+    }
+}
+
+/// A simulated partition: engine + world.
+pub struct SimCluster {
+    /// Discrete-event engine.
+    pub engine: Engine<World>,
+    /// All simulated state.
+    pub world: World,
+}
+
+/// Schedule a constant-rate local (LFS) transfer as a plain delay: the
+/// `local` pseudo-resource never binds (capacity ~1e302 vs per-flow caps
+/// of a few hundred MB/s), so the flow machinery would compute exactly
+/// `bytes / rate_cap` anyway — §Perf: this removes one flow insert +
+/// wakeup per task.
+fn local_transfer(
+    e: &mut Engine<World>,
+    bytes: u64,
+    rate: f64,
+    cb: impl FnOnce(&mut Engine<World>, &mut World) + 'static,
+) {
+    e.schedule(SimTime::transfer(bytes.max(1), rate), cb);
+}
+
+impl SimCluster {
+    /// Build a partition from a configuration.
+    pub fn new(cfg: &ClusterConfig) -> SimCluster {
+        let mut net = FlowNet::new();
+        let gfs_read = net.add_resource("gfs.read", cfg.gfs.read_agg_bw);
+        let gfs_write = net.add_resource("gfs.write", cfg.gfs.write_agg_bw);
+        let gfs_small = net.add_resource("gfs.small", cfg.gfs.small_write_agg_bw);
+        let local = net.add_resource("local", f64::MAX / 1e6);
+        let nions = cfg.ions() as usize;
+        let ion_ingest = (0..nions)
+            .map(|i| net.add_resource(format!("ion{i}.tree"), cfg.net.ion_ingest_bw))
+            .collect();
+        let ion_ext = (0..nions)
+            .map(|i| net.add_resource(format!("ion{i}.ext"), cfg.net.ion_ext_bw))
+            .collect();
+        let ngroups = cfg.ifs_groups() as usize;
+        let serve_bw = cfg.ifs_striped_bw(cfg.ifs_stripe);
+        let ifs_serve = (0..ngroups)
+            .map(|g| net.add_resource(format!("ifs{g}.serve"), serve_bw))
+            .collect();
+        let nodes = (0..cfg.nodes())
+            .map(|id| {
+                NodeState::new(
+                    id,
+                    ion_of(id, cfg.cn_per_ion),
+                    ifs_group_of(id, cfg.cn_per_ifs),
+                    cfg.node.cores_per_node,
+                    cfg.node.lfs_capacity,
+                )
+            })
+            .collect();
+        // ION staging capacity: the ION's RAM file system, ~= server_mem.
+        let staging = (0..nions).map(|_| Staging::new(cfg.node.server_mem)).collect();
+        let chirp = (0..ngroups)
+            .map(|_| {
+                ChirpServer::new(
+                    cfg.node.server_mem,
+                    cfg.node.server_buf_divisor,
+                    cfg.node.server_buf_max,
+                )
+            })
+            .collect();
+        let world = World {
+            policy: Policy::from(&cfg.collector),
+            pacer: Pacer::new(&cfg.dispatch),
+            cfg: cfg.clone(),
+            net,
+            res: Resources { gfs_read, gfs_write, gfs_small, local, ion_ingest, ion_ext, ifs_serve },
+            meta: MetaModel::new(MetaParams::from(&cfg.gfs)),
+            nodes,
+            staging,
+            chirp,
+            collectors: (0..nions).map(|_| CollectorState::new()).collect(),
+            rng: Rng::new(0xD0C_C10),
+            timeline: None,
+            counters: Counters::default(),
+        };
+        SimCluster { engine: Engine::new(), world }
+    }
+
+    /// Override the duration-draw seed (defaults are deterministic too).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.world.rng = Rng::new(seed);
+        self
+    }
+
+    /// Enable utilization tracing; retrieve with [`SimCluster::timeline`].
+    pub fn enable_trace(&mut self) {
+        self.world.timeline = Some(Timeline::new());
+    }
+
+    /// The recorded timeline (empty if tracing was never enabled).
+    pub fn timeline(&self) -> Option<&Timeline> {
+        self.world.timeline.as_ref()
+    }
+
+    /// Current simulated time.
+    pub fn now(&self) -> SimTime {
+        self.engine.now()
+    }
+
+    // ------------------------------------------------------------------
+    // Figure 11/12: IFS (chirp / striped) read benchmark
+    // ------------------------------------------------------------------
+
+    /// `clients` nodes each read one `bytes`-sized file from IFS group 0's
+    /// server set over the torus. Returns the aggregate read bandwidth in
+    /// bytes/sec, or the §6.1 OOM error.
+    pub fn chirp_read_benchmark(&mut self, clients: u32, bytes: u64) -> anyhow::Result<f64> {
+        let overhead = SimTime::from_secs_f64(self.world.cfg.net.chirp_request_overhead_s);
+        let fuse_read = self.world.cfg.net.fuse_read_bw;
+        let serve = self.world.res.ifs_serve[0];
+        let done = Rc::new(RefCell::new(0u32));
+        for _ in 0..clients {
+            // Admit the connection (memory) up front; transfer begins
+            // after the request overhead.
+            match self.world.chirp[0].connect(bytes) {
+                Ok(buf) => {
+                    let done = done.clone();
+                    self.engine.schedule(overhead, move |e, w| {
+                        let done = done.clone();
+                        FlowNet::start_capped(e, w, &[serve], bytes, fuse_read, move |_, w| {
+                            w.chirp[0].disconnect(buf);
+                            *done.borrow_mut() += 1;
+                        });
+                    });
+                }
+                Err(err) => {
+                    self.world.counters.oom_failures += 1;
+                    anyhow::bail!("chirp read benchmark failed: {err}");
+                }
+            }
+        }
+        self.engine.run(&mut self.world);
+        assert_eq!(*done.borrow(), clients, "all reads must complete");
+        let t = self.engine.now().as_secs_f64();
+        Ok(clients as f64 * bytes as f64 / t)
+    }
+
+    // ------------------------------------------------------------------
+    // Figure 13: input distribution
+    // ------------------------------------------------------------------
+
+    /// Naive staging: `nodes` compute nodes read `bytes` each directly
+    /// from GFS. Returns (workload seconds, aggregate bytes/sec).
+    pub fn distribute_naive(&mut self, nodes: u32, bytes: u64) -> (f64, f64) {
+        let per_client = self.world.cfg.gfs.per_client_bw.min(self.world.cfg.net.fuse_read_bw);
+        let gfs_read = self.world.res.gfs_read;
+        let start = self.engine.now();
+        for n in 0..nodes {
+            let ion = self.world.res.ion_ingest[self.world.nodes[n as usize].ion as usize];
+            FlowNet::start_capped(
+                &mut self.engine,
+                &mut self.world,
+                &[ion, gfs_read],
+                bytes,
+                per_client,
+                |_, _| {},
+            );
+        }
+        self.engine.run(&mut self.world);
+        let t = (self.engine.now() - start).as_secs_f64();
+        (t, nodes as f64 * bytes as f64 / t)
+    }
+
+    /// Spanning-tree distribution of one `bytes`-sized dataset to
+    /// `replicas` holders (IFS servers or nodes) over the torus. Copies in
+    /// the same round run concurrently, each capped at the effective
+    /// tree-copy bandwidth (torus links between distinct pairs are
+    /// disjoint). Returns (workload seconds, *equivalent* aggregate
+    /// bytes/sec per the paper's conservative §6.1 formula).
+    pub fn distribute_tree(&mut self, replicas: u32, bytes: u64, shape: TreeShape) -> (f64, f64) {
+        let cfg = &self.world.cfg;
+        let copy_bw = cfg.net.tree_copy_bw;
+        let setup = SimTime::from_secs_f64(cfg.net.tree_copy_setup_s);
+        let pull_bw = cfg.gfs.per_client_bw.min(cfg.gfs.read_agg_bw);
+        let torus = self.world.res.local;
+        let gfs_read = self.world.res.gfs_read;
+        let start = self.engine.now();
+
+        let schedule = shape.schedule(replicas);
+        let nrounds = rounds(&schedule);
+        let mut per_round = vec![0u32; nrounds as usize];
+        for c in &schedule {
+            per_round[c.round as usize] += 1;
+        }
+        let per_round = Rc::new(per_round);
+
+        // Root pulls from GFS, then rounds proceed with a barrier between
+        // them (chirp `replicate` synchronizes rounds).
+        fn run_round(
+            e: &mut Engine<World>,
+            round: usize,
+            per_round: Rc<Vec<u32>>,
+            bytes: u64,
+            copy_bw: f64,
+            setup: SimTime,
+            torus: ResourceId,
+        ) {
+            if round >= per_round.len() {
+                return;
+            }
+            let copies = per_round[round];
+            let remaining = Rc::new(RefCell::new(copies));
+            for _ in 0..copies {
+                let remaining = remaining.clone();
+                let per_round = per_round.clone();
+                e.schedule(setup, move |e, w| {
+                    let remaining = remaining.clone();
+                    let per_round = per_round.clone();
+                    let _ = w;
+                    FlowNet::start_capped(e, w, &[torus], bytes, copy_bw, move |e, _w| {
+                        *remaining.borrow_mut() -= 1;
+                        if *remaining.borrow() == 0 {
+                            run_round(e, round + 1, per_round, bytes, copy_bw, setup, torus);
+                        }
+                    });
+                });
+            }
+        }
+
+        let per_round2 = per_round.clone();
+        FlowNet::start_capped(
+            &mut self.engine,
+            &mut self.world,
+            &[gfs_read],
+            bytes,
+            pull_bw,
+            move |e, _w| {
+                run_round(e, 0, per_round2, bytes, copy_bw, setup, torus);
+            },
+        );
+        self.engine.run(&mut self.world);
+        let t = (self.engine.now() - start).as_secs_f64();
+        (t, replicas as f64 * bytes as f64 / t)
+    }
+
+    // ------------------------------------------------------------------
+    // Figures 14/15/16: synthetic MTC run
+    // ------------------------------------------------------------------
+
+    /// Run `tasks` identical tasks of `dur_s` compute seconds each
+    /// producing `out_bytes` of output, under the given IO mode. Tasks
+    /// flow through the Falkon-like pacer onto idle cores.
+    pub fn run_mtc(&mut self, tasks: u64, dur_s: f64, out_bytes: u64, mode: IoMode) -> RunReport {
+        self.run_mtc_spec(tasks, &TaskSpec::fixed(dur_s, out_bytes), mode)
+    }
+
+    /// Like [`SimCluster::run_mtc_spec`] but staged inputs are read from
+    /// the node's (possibly striped) IFS group rather than its LFS.
+    pub fn run_mtc_ifs_input(&mut self, tasks: u64, spec: &TaskSpec, mode: IoMode) -> RunReport {
+        let spec = TaskSpec { in_from_ifs: true, ..spec.clone() };
+        self.run_mtc_spec(tasks, &spec, mode)
+    }
+
+    /// Run `tasks` tasks drawn from `spec` under the given IO mode.
+    pub fn run_mtc_spec(&mut self, tasks: u64, spec: &TaskSpec, mode: IoMode) -> RunReport {
+        assert!(self.engine.now() == SimTime::ZERO, "run_mtc wants a fresh cluster");
+        self.world.counters.total_tasks = tasks;
+        let spec = Rc::new(spec.clone());
+        let queue = Rc::new(RefCell::new(tasks));
+        // Initial fill: claim cores round-robin, paced by the dispatcher.
+        let total_cores: u64 = self.world.nodes.iter().map(|n| n.idle_cores() as u64).sum();
+        let initial = total_cores.min(tasks);
+        let mut launched = 0u64;
+        let mut node_iter = 0u32;
+        let nnodes = self.world.nodes.len() as u32;
+        while launched < initial {
+            let node = node_iter % nnodes;
+            node_iter += 1;
+            if self.world.nodes[node as usize].idle_cores() == 0 {
+                continue;
+            }
+            self.world.nodes[node as usize].claim_core();
+            let at = self.world.pacer.dispatch_at(self.engine.now());
+            let queue = queue.clone();
+            let spec = spec.clone();
+            self.engine.schedule_at(at, move |e, w| {
+                Self::task_body(e, w, node, spec, mode, queue);
+            });
+            launched += 1;
+        }
+        *queue.borrow_mut() = tasks - launched;
+        self.engine.run(&mut self.world);
+
+        // Final collector drain for CIO: leftover staged bytes.
+        if mode == IoMode::Cio {
+            Self::final_drain(&mut self.engine, &mut self.world);
+            self.engine.run(&mut self.world);
+        }
+        let c = &self.world.counters;
+        RunReport {
+            mode,
+            procs: self.world.cfg.procs,
+            tasks: c.tasks_done,
+            compute_s: c.compute_s,
+            makespan_tasks_s: c.last_task_done.as_secs_f64(),
+            makespan_data_s: c.last_gfs_write.max(c.last_task_done).as_secs_f64(),
+            gfs_bytes: c.gfs_bytes,
+            gfs_files: c.gfs_files,
+            collector: self.world.collectors.iter().fold(CollectorStats::default(), |mut a, cs| {
+                a.merge(&cs.stats);
+                a
+            }),
+            throttle_fraction: self.world.pacer.throttle_fraction(),
+            staging_spills: c.staging_spills,
+        }
+    }
+
+    /// One task: input read, compute, the mode's output path, then core
+    /// release + next dispatch.
+    fn task_body(
+        e: &mut Engine<World>,
+        w: &mut World,
+        node: u32,
+        spec: Rc<TaskSpec>,
+        mode: IoMode,
+        queue: Rc<RefCell<u64>>,
+    ) {
+        let dur_s = spec.dur.sample(&mut w.rng);
+        let out_bytes = spec.out_bytes;
+        let in_bytes = spec.in_bytes;
+        let in_from_ifs = spec.in_from_ifs;
+        let compute = move |e: &mut Engine<World>, _w: &mut World| {
+            e.schedule(SimTime::from_secs_f64(dur_s), move |e, w| {
+                let queue = queue.clone();
+                let spec = spec.clone();
+                let finish = move |e: &mut Engine<World>, w: &mut World| {
+                    w.counters.tasks_done += 1;
+                    w.counters.compute_s += dur_s;
+                    w.counters.last_task_done = e.now();
+                    w.nodes[node as usize].release_core();
+                    if w.counters.tasks_done % 64 == 0 {
+                        let (t, done) = (e.now(), w.counters.tasks_done as f64);
+                        if let Some(tl) = w.timeline.as_mut() {
+                            tl.push("tasks_done", t, done);
+                        }
+                    }
+                    if w.counters.tasks_done == w.counters.total_tasks {
+                        // "while workload is running" has ended: drain.
+                        Self::final_drain(e, w);
+                    }
+                    // Dispatch the next queued task onto this core.
+                    let next = {
+                        let mut q = queue.borrow_mut();
+                        if *q > 0 {
+                            *q -= 1;
+                            true
+                        } else {
+                            false
+                        }
+                    };
+                    if next {
+                        w.nodes[node as usize].claim_core();
+                        let at = w.pacer.dispatch_at(e.now());
+                        let queue = queue.clone();
+                        let spec = spec.clone();
+                        e.schedule_at(at.max(e.now() + SimTime(1)), move |e, w| {
+                            Self::task_body(e, w, node, spec, mode, queue);
+                        });
+                    }
+                };
+                match mode {
+                    IoMode::RamOnly => {
+                        let lfs_bw = w.cfg.node.lfs_bw;
+                        local_transfer(e, out_bytes, lfs_bw, finish);
+                    }
+                    IoMode::Gpfs => Self::gpfs_output(e, w, node, out_bytes, Box::new(finish)),
+                    IoMode::Cio => Self::cio_output(e, w, node, out_bytes, Box::new(finish)),
+                }
+            });
+        };
+        // Input phase (0 bytes = skip).
+        if in_bytes == 0 {
+            compute(e, w);
+        } else if mode == IoMode::Gpfs {
+            // Read input from GFS through the ION.
+            let ion = w.nodes[node as usize].ion as usize;
+            let path = [w.res.ion_ingest[ion], w.res.gfs_read];
+            let cap = w.cfg.net.fuse_read_bw.min(w.cfg.gfs.per_client_bw);
+            FlowNet::start_capped(e, w, &path, in_bytes, cap, compute);
+        } else if in_from_ifs {
+            // Input served by the node's IFS group (striped chirp set).
+            let grp = w.nodes[node as usize].ifs_group as usize;
+            let serve = w.res.ifs_serve[grp];
+            let cap = w.cfg.net.fuse_read_bw;
+            FlowNet::start_capped(e, w, &[serve], in_bytes, cap, compute);
+        } else {
+            // Input was staged to the LFS by the distributor.
+            let lfs_bw = w.cfg.node.lfs_bw;
+            local_transfer(e, in_bytes, lfs_bw, compute);
+        }
+    }
+
+    /// Baseline output path: create on GFS (metadata contention), then
+    /// write through the ION at the small-file aggregate.
+    ///
+    /// Perf (§Perf in EXPERIMENTS.md): the per-ION tree link is *elided*
+    /// from this path when `ion_ingest_bw >= small_write_agg_bw` — every
+    /// flow here crosses both resources and the ION load is a subset of
+    /// the GFS load, so `ion_cap/ion_load >= gfs_cap/gfs_load` always:
+    /// the ION link provably never binds, and dropping it collapses
+    /// thousands of path groups into one.
+    fn gpfs_output(
+        e: &mut Engine<World>,
+        w: &mut World,
+        node: u32,
+        out_bytes: u64,
+        done: Box<dyn FnOnce(&mut Engine<World>, &mut World)>,
+    ) {
+        let service = w.meta.issue();
+        e.schedule(SimTime::from_secs_f64(service), move |e, w| {
+            w.meta.complete();
+            w.counters.gfs_files += 1;
+            let ion = w.nodes[node as usize].ion as usize;
+            let cap = w.cfg.net.fuse_write_bw.min(w.cfg.gfs.per_client_bw);
+            let elide = w.cfg.net.ion_ingest_bw >= w.cfg.gfs.small_write_agg_bw;
+            let finish = move |e: &mut Engine<World>, w: &mut World| {
+                w.counters.gfs_bytes += out_bytes;
+                w.counters.last_gfs_write = e.now();
+                done(e, w);
+            };
+            if elide {
+                let path = [w.res.gfs_small];
+                FlowNet::start_capped(e, w, &path, out_bytes, cap, finish);
+            } else {
+                let path = [w.res.ion_ingest[ion], w.res.gfs_small];
+                FlowNet::start_capped(e, w, &path, out_bytes, cap, finish);
+            }
+        });
+    }
+
+    /// CIO output path: write to LFS (RAM speed), copy LFS→ION staging
+    /// over the tree network at task exit (the task waits — Figure 10's
+    /// step 3), then the asynchronous collector handles IFS→GFS.
+    fn cio_output(
+        e: &mut Engine<World>,
+        w: &mut World,
+        node: u32,
+        out_bytes: u64,
+        done: Box<dyn FnOnce(&mut Engine<World>, &mut World)>,
+    ) {
+        let lfs_bw = w.cfg.node.lfs_bw;
+        local_transfer(e, out_bytes, lfs_bw, move |e, w| {
+            let ion = w.nodes[node as usize].ion as usize;
+            let path = [w.res.ion_ingest[ion]];
+            let cap = w.cfg.net.fuse_write_bw;
+            FlowNet::start_capped(e, w, &path, out_bytes, cap, move |e, w| {
+                // Landed in the ION staging dir.
+                if w.staging[ion].add(out_bytes).is_err() {
+                    // Staging full: spill synchronously to GFS
+                    // (backpressure; rare under the default policy).
+                    w.counters.staging_spills += 1;
+                    let path = [w.res.ion_ext[ion], w.res.gfs_write];
+                    FlowNet::start_capped(e, w, &path, out_bytes, f64::INFINITY, move |e, w| {
+                        w.counters.gfs_bytes += out_bytes;
+                        w.counters.gfs_files += 1;
+                        w.counters.last_gfs_write = e.now();
+                        done(e, w);
+                    });
+                    return;
+                }
+                Self::collector_check(e, w, ion, false);
+                done(e, w);
+            });
+        });
+    }
+
+    /// Evaluate the §5.2 policy for one ION's collector; if it trips,
+    /// archive the staged data to GFS as one large sequential write.
+    fn collector_check(e: &mut Engine<World>, w: &mut World, ion: usize, timer: bool) {
+        if w.collectors[ion].writing {
+            return;
+        }
+        let since = e.now().saturating_sub(w.collectors[ion].last_write);
+        let buffered = w.staging[ion].buffered();
+        let free = w.staging[ion].free();
+        let decision = if w.counters.draining && buffered > 0 {
+            Some(FlushReason::Shutdown)
+        } else {
+            w.policy.should_flush(since, buffered, free)
+        };
+        let Some(reason) = decision else {
+            if timer && buffered > 0 && !w.counters.draining {
+                // Re-arm the maxDelay timer.
+                let at = w.policy.next_deadline(w.collectors[ion].last_write);
+                let at = at.max(e.now() + SimTime(1));
+                e.schedule_at(at, move |e, w| Self::collector_check(e, w, ion, true));
+            }
+            return;
+        };
+        Self::flush(e, w, ion, reason);
+    }
+
+    fn flush(e: &mut Engine<World>, w: &mut World, ion: usize, reason: FlushReason) {
+        let (bytes, files) = w.staging[ion].drain();
+        if bytes == 0 {
+            return;
+        }
+        w.collectors[ion].writing = true;
+        // One archive = one GFS create (cheap relative to thousands).
+        let service = w.meta.issue();
+        e.schedule(SimTime::from_secs_f64(service), move |e, w| {
+            w.meta.complete();
+            w.counters.gfs_files += 1;
+            let path = [w.res.ion_ext[ion], w.res.gfs_write];
+            FlowNet::start_capped(e, w, &path, bytes, f64::INFINITY, move |e, w| {
+                w.counters.gfs_bytes += bytes;
+                w.counters.last_gfs_write = e.now();
+                let (t, total) = (e.now(), w.counters.gfs_bytes as f64);
+                if let Some(tl) = w.timeline.as_mut() {
+                    tl.push("gfs_bytes", t, total);
+                    let staged: u64 = w.staging.iter().map(|s| s.buffered()).sum();
+                    tl.push("staging_buffered", t, staged as f64);
+                }
+                w.collectors[ion].stats.record(reason, files, bytes);
+                w.collectors[ion].last_write = e.now();
+                w.collectors[ion].writing = false;
+                // Staging may have refilled during the write.
+                Self::collector_check(e, w, ion, true);
+            });
+        });
+    }
+
+    /// Shutdown drain: mark the workload ended and flush every idle
+    /// collector; busy collectors re-check (and see `draining`) when
+    /// their in-flight write completes.
+    fn final_drain(e: &mut Engine<World>, w: &mut World) {
+        w.counters.draining = true;
+        for ion in 0..w.staging.len() {
+            if !w.collectors[ion].writing && w.staging[ion].buffered() > 0 {
+                Self::flush(e, w, ion, FlushReason::Shutdown);
+            }
+        }
+    }
+}
+
+/// Result of a synthetic MTC run (one Figure 14/15/16 data point).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// IO mode used.
+    pub mode: IoMode,
+    /// Processor count.
+    pub procs: u32,
+    /// Tasks completed.
+    pub tasks: u64,
+    /// Total compute seconds.
+    pub compute_s: f64,
+    /// Makespan to the last *task* completion (efficiency base).
+    pub makespan_tasks_s: f64,
+    /// Makespan to the last byte landing on GFS (throughput base).
+    pub makespan_data_s: f64,
+    /// Bytes landed on GFS.
+    pub gfs_bytes: u64,
+    /// Files created on GFS.
+    pub gfs_files: u64,
+    /// Merged collector stats (CIO runs).
+    pub collector: CollectorStats,
+    /// Fraction of dispatches delayed by the rate ceiling.
+    pub throttle_fraction: f64,
+    /// CIO outputs that spilled synchronously due to full staging.
+    pub staging_spills: u64,
+}
+
+impl RunReport {
+    /// Paper-style efficiency against an ideal ([`IoMode::RamOnly`]) run
+    /// of the same workload: `ideal_makespan / this_makespan`.
+    pub fn efficiency_vs(&self, ideal: &RunReport) -> f64 {
+        assert_eq!(ideal.tasks, self.tasks, "efficiency needs identical workloads");
+        (ideal.makespan_tasks_s / self.makespan_tasks_s).min(1.0)
+    }
+
+    /// Aggregate write throughput, bytes/sec (Figure 16's metric: data
+    /// volume over the data makespan; for RamOnly the volume lands on LFS
+    /// and the task makespan applies — the "ideal" series).
+    pub fn write_throughput(&self, out_bytes_per_task: u64) -> f64 {
+        let total = self.tasks as f64 * out_bytes_per_task as f64;
+        total / self.makespan_data_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{kib, mbps, mib};
+
+    fn small_cfg(procs: u32) -> ClusterConfig {
+        ClusterConfig::bgp(procs)
+    }
+
+    #[test]
+    fn chirp_benchmark_large_files_near_server_bw() {
+        // 64 clients reading 100 MB each from one chirp server: aggregate
+        // should approach the server bandwidth (paper: ~147-162 MB/s).
+        let mut c = SimCluster::new(&small_cfg(256).with_ifs_ratio(64));
+        let agg = c.chirp_read_benchmark(64, mib(100)).unwrap() / mib(1) as f64;
+        assert!((140.0..165.0).contains(&agg), "aggregate {agg} MB/s");
+    }
+
+    #[test]
+    fn chirp_benchmark_small_files_overhead_bound() {
+        let mut c = SimCluster::new(&small_cfg(256).with_ifs_ratio(64));
+        let agg = c.chirp_read_benchmark(64, kib(100)).unwrap() / mib(1) as f64;
+        assert!(agg < 25.0, "small files must be overhead-bound, got {agg} MB/s");
+    }
+
+    #[test]
+    fn chirp_512_100mb_ooms_like_the_paper() {
+        let cfg = small_cfg(2048).with_ifs_ratio(512);
+        let mut c = SimCluster::new(&cfg);
+        let err = c.chirp_read_benchmark(512, mib(100)).unwrap_err();
+        assert!(err.to_string().contains("out of memory"), "{err}");
+        assert!(c.world.counters.oom_failures > 0);
+    }
+
+    #[test]
+    fn naive_distribution_caps_at_gfs() {
+        let mut c = SimCluster::new(&small_cfg(4096));
+        let (_, agg) = c.distribute_naive(1024, mib(100));
+        let gbs = agg / mib(1024) as f64;
+        assert!((2.0..2.5).contains(&gbs), "naive {gbs} GB/s (GPFS peak 2.4)");
+    }
+
+    #[test]
+    fn tree_distribution_order_of_magnitude_faster() {
+        let mut naive = SimCluster::new(&small_cfg(4096));
+        let (tn, _) = naive.distribute_naive(1024, mib(100));
+        let mut tree = SimCluster::new(&small_cfg(4096));
+        let (tt, equiv) = tree.distribute_tree(1024, mib(100), TreeShape::Binomial);
+        assert!(tt < tn / 4.0, "tree {tt}s vs naive {tn}s");
+        let gbs = equiv / mib(1024) as f64;
+        assert!((8.0..16.0).contains(&gbs), "tree equivalent {gbs} GB/s (paper: 12.5)");
+    }
+
+    #[test]
+    fn ramonly_efficiency_is_by_definition_one() {
+        let mut c = SimCluster::new(&small_cfg(256));
+        let r = c.run_mtc(512, 4.0, mib(1), IoMode::RamOnly);
+        assert_eq!(r.tasks, 512);
+        assert!((r.efficiency_vs(&r) - 1.0).abs() < 1e-9);
+        // 512 tasks on 256 cores = 2 waves of 4s + small dispatch overhead.
+        assert!((8.0..9.5).contains(&r.makespan_tasks_s), "{}", r.makespan_tasks_s);
+    }
+
+    #[test]
+    fn gpfs_small_files_collapse_at_scale() {
+        let mut ideal = SimCluster::new(&small_cfg(1024));
+        let ideal_r = ideal.run_mtc(2048, 4.0, kib(1), IoMode::RamOnly);
+        let mut gpfs = SimCluster::new(&small_cfg(1024));
+        let gpfs_r = gpfs.run_mtc(2048, 4.0, kib(1), IoMode::Gpfs);
+        let eff = gpfs_r.efficiency_vs(&ideal_r);
+        // Paper Figure 14: GPFS well under 60% already at ~1K processors.
+        assert!(eff < 0.60, "GPFS efficiency {eff}");
+        assert_eq!(gpfs_r.gfs_files, 2048, "one create per task");
+    }
+
+    #[test]
+    fn cio_efficiency_stays_high() {
+        let mut ideal = SimCluster::new(&small_cfg(1024));
+        let ideal_r = ideal.run_mtc(2048, 4.0, mib(1), IoMode::RamOnly);
+        let mut cio = SimCluster::new(&small_cfg(1024));
+        let cio_r = cio.run_mtc(2048, 4.0, mib(1), IoMode::Cio);
+        let eff = cio_r.efficiency_vs(&ideal_r);
+        assert!(eff > 0.85, "CIO efficiency {eff} (paper: >90% typical)");
+        // Massive file-count reduction on GFS.
+        assert!(cio_r.gfs_files < 200, "archives, not per-task files: {}", cio_r.gfs_files);
+        assert_eq!(cio_r.collector.files + cio_r.staging_spills, 2048, "every output accounted");
+        assert_eq!(cio_r.gfs_bytes, 2048 * mib(1), "no bytes lost");
+    }
+
+    #[test]
+    fn cio_beats_gpfs_throughput_by_a_wide_margin() {
+        let procs = 4096;
+        let mut gpfs = SimCluster::new(&small_cfg(procs));
+        let g = gpfs.run_mtc(8192, 4.0, mib(1), IoMode::Gpfs);
+        let mut cio = SimCluster::new(&small_cfg(procs));
+        let c = cio.run_mtc(8192, 4.0, mib(1), IoMode::Cio);
+        let g_tp = g.write_throughput(mib(1)) / mib(1) as f64;
+        let c_tp = c.write_throughput(mib(1)) / mib(1) as f64;
+        // At 4K procs the offered load (~940 MB/s) caps CIO well below its
+        // 2.1 GB/s ceiling; the full order-of-magnitude gap appears at 32K+
+        // (bench fig16). Here: a solid multiple.
+        assert!(c_tp > 3.0 * g_tp, "CIO {c_tp} MB/s vs GPFS {g_tp} MB/s");
+        assert!(g_tp <= 260.0, "GPFS must stay under its small-write cap, got {g_tp}");
+    }
+
+    #[test]
+    fn collector_respects_policy_knobs() {
+        let mut cfg = small_cfg(256);
+        cfg.collector.max_data = mib(4);
+        cfg.collector.max_delay_s = 2.0;
+        let mut c = SimCluster::new(&cfg);
+        let r = c.run_mtc(512, 4.0, mib(1), IoMode::Cio);
+        // maxData = 4 MiB with 1 MiB outputs: each flush batches whatever
+        // accumulated while the previous archive write was in flight, so
+        // the exact count varies — but there must be several, all outputs
+        // must be absorbed, and maxData must be the dominant trigger.
+        assert!(r.collector.archives >= 4, "archives {}", r.collector.archives);
+        assert_eq!(r.collector.files + r.staging_spills, 512);
+        assert!(r.collector.reasons[1] > 0, "maxData must fire: {:?}", r.collector.reasons);
+    }
+
+    #[test]
+    fn capacity_degradation_mid_run_is_safe() {
+        // Failure injection: degrade the GFS small-write path mid-run.
+        let mut c = SimCluster::new(&small_cfg(256));
+        c.engine.schedule(SimTime::from_secs(3), |e, w| {
+            let id = w.res.gfs_small;
+            FlowNet::set_capacity(e, w, id, mbps(25));
+        });
+        let r = c.run_mtc(512, 4.0, mib(1), IoMode::Gpfs);
+        assert_eq!(r.tasks, 512, "run completes despite degradation");
+    }
+}

@@ -1,0 +1,253 @@
+//! Deterministic discrete-event engine.
+//!
+//! Events are boxed `FnOnce(&mut Engine<W>, &mut W)` actions ordered by
+//! `(time, sequence)`; the sequence number makes simultaneous events fire
+//! in schedule order, so runs are bit-reproducible. The engine owns only
+//! the clock and the heap — all simulated state lives in the world `W`,
+//! which events mutate directly.
+//!
+//! The borrow dance: `run` pops the next entry (taking ownership of the
+//! boxed action out of the heap) *before* invoking it, so the action can
+//! freely take `&mut Engine` to schedule more events.
+
+use crate::util::units::SimTime;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Boxed event action.
+pub type Action<W> = Box<dyn FnOnce(&mut Engine<W>, &mut W)>;
+
+struct Entry<W> {
+    time: SimTime,
+    seq: u64,
+    action: Action<W>,
+}
+
+impl<W> PartialEq for Entry<W> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<W> Eq for Entry<W> {}
+impl<W> PartialOrd for Entry<W> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<W> Ord for Entry<W> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+/// The discrete-event engine: virtual clock + event heap.
+pub struct Engine<W> {
+    now: SimTime,
+    heap: BinaryHeap<Reverse<Entry<W>>>,
+    seq: u64,
+    processed: u64,
+    /// Hard event budget; `run` panics if exceeded (guards against
+    /// accidentally non-terminating simulations in tests/benches).
+    limit: u64,
+}
+
+impl<W> Default for Engine<W> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<W> Engine<W> {
+    /// Fresh engine at t=0 with a generous default event budget.
+    pub fn new() -> Self {
+        Engine { now: SimTime::ZERO, heap: BinaryHeap::new(), seq: 0, processed: 0, limit: u64::MAX }
+    }
+
+    /// Set the event budget (for tests that must terminate).
+    pub fn with_limit(mut self, limit: u64) -> Self {
+        self.limit = limit;
+        self
+    }
+
+    /// Current simulated time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Events executed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Events still pending.
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule an action at an absolute time (must not be in the past).
+    pub fn schedule_at(&mut self, at: SimTime, action: impl FnOnce(&mut Engine<W>, &mut W) + 'static) {
+        assert!(at >= self.now, "scheduling into the past: {at:?} < {:?}", self.now);
+        self.seq += 1;
+        self.heap.push(Reverse(Entry { time: at, seq: self.seq, action: Box::new(action) }));
+    }
+
+    /// Schedule an action after a delay.
+    pub fn schedule(&mut self, delay: SimTime, action: impl FnOnce(&mut Engine<W>, &mut W) + 'static) {
+        self.schedule_at(self.now + delay, action);
+    }
+
+    /// Run one event; returns false when the heap is empty.
+    pub fn step(&mut self, world: &mut W) -> bool {
+        match self.heap.pop() {
+            Some(Reverse(entry)) => {
+                debug_assert!(entry.time >= self.now, "event heap time went backwards");
+                self.now = entry.time;
+                self.processed += 1;
+                assert!(
+                    self.processed <= self.limit,
+                    "event budget exhausted after {} events at t={}",
+                    self.processed,
+                    self.now
+                );
+                (entry.action)(self, world);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Run until no events remain.
+    pub fn run(&mut self, world: &mut W) {
+        while self.step(world) {}
+    }
+
+    /// Run until the clock would pass `until` (events at exactly `until`
+    /// are executed). Returns true if events remain afterwards.
+    pub fn run_until(&mut self, world: &mut W, until: SimTime) -> bool {
+        while let Some(Reverse(head)) = self.heap.peek() {
+            if head.time > until {
+                self.now = until;
+                return true;
+            }
+            self.step(world);
+        }
+        self.now = self.now.max(until);
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[derive(Default)]
+    struct World {
+        log: Vec<(u64, &'static str)>,
+    }
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        eng.schedule(SimTime::from_secs(3), |e, w| w.log.push((e.now().0, "c")));
+        eng.schedule(SimTime::from_secs(1), |e, w| w.log.push((e.now().0, "a")));
+        eng.schedule(SimTime::from_secs(2), |e, w| w.log.push((e.now().0, "b")));
+        eng.run(&mut w);
+        let names: Vec<_> = w.log.iter().map(|(_, n)| *n).collect();
+        assert_eq!(names, vec!["a", "b", "c"]);
+        assert_eq!(eng.now(), SimTime::from_secs(3));
+        assert_eq!(eng.processed(), 3);
+    }
+
+    #[test]
+    fn simultaneous_events_fire_in_schedule_order() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        for (i, name) in ["first", "second", "third"].iter().enumerate() {
+            let name: &'static str = name;
+            let _ = i;
+            eng.schedule(SimTime::from_secs(5), move |e, w| w.log.push((e.now().0, name)));
+        }
+        eng.run(&mut w);
+        let names: Vec<_> = w.log.iter().map(|(_, n)| *n).collect();
+        assert_eq!(names, vec!["first", "second", "third"]);
+    }
+
+    #[test]
+    fn events_can_schedule_events() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        eng.schedule(SimTime::from_secs(1), |e, _| {
+            e.schedule(SimTime::from_secs(1), |e, w| w.log.push((e.now().0, "chained")));
+        });
+        eng.run(&mut w);
+        assert_eq!(w.log, vec![(2_000_000_000, "chained")]);
+    }
+
+    #[test]
+    fn run_until_stops_at_boundary() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        eng.schedule(SimTime::from_secs(1), |e, w| w.log.push((e.now().0, "in")));
+        eng.schedule(SimTime::from_secs(10), |e, w| w.log.push((e.now().0, "out")));
+        let remaining = eng.run_until(&mut w, SimTime::from_secs(5));
+        assert!(remaining);
+        assert_eq!(w.log.len(), 1);
+        assert_eq!(eng.now(), SimTime::from_secs(5));
+        eng.run(&mut w);
+        assert_eq!(w.log.len(), 2);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            let mut eng: Engine<World> = Engine::new();
+            let mut w = World::default();
+            let counter = Rc::new(RefCell::new(0u64));
+            for i in 0..100u64 {
+                let c = counter.clone();
+                eng.schedule(SimTime::from_millis(i % 7), move |_, w| {
+                    *c.borrow_mut() += i;
+                    w.log.push((i, "x"));
+                });
+            }
+            eng.run(&mut w);
+            let total = *counter.borrow();
+            (w.log.clone(), total)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling into the past")]
+    fn past_scheduling_panics() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        eng.schedule(SimTime::from_secs(5), |e, _| {
+            e.schedule_at(SimTime::from_secs(1), |_, _| {});
+        });
+        eng.run(&mut w);
+    }
+
+    #[test]
+    #[should_panic(expected = "event budget")]
+    fn event_budget_guards_runaway() {
+        let mut eng: Engine<World> = Engine::new().with_limit(10);
+        let mut w = World::default();
+        fn reschedule(e: &mut Engine<World>, _: &mut World) {
+            e.schedule(SimTime::from_millis(1), reschedule);
+        }
+        eng.schedule(SimTime::ZERO + SimTime::from_millis(1), reschedule);
+        eng.run(&mut w);
+    }
+
+    #[test]
+    fn max_time_helper() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        assert!(!eng.run_until(&mut w, SimTime::from_secs(42)));
+        assert_eq!(eng.now(), SimTime::from_secs(42));
+    }
+}

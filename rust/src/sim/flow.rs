@@ -1,0 +1,760 @@
+//! Fluid flow-level network model with processor-sharing bandwidth
+//! allocation.
+//!
+//! A *flow* moves `bytes` across a *path* of shared [`Resource`]s (NICs,
+//! tree links, file-system servers, aggregate bisection caps). At any
+//! instant a flow's rate is `min over r in path (capacity_r / load_r)`
+//! where `load_r` is the number of flows currently crossing `r` — the
+//! classic max-min-ish fluid approximation used by flow-level simulators.
+//! Rates change only when a flow starts or completes, so the simulation
+//! advances analytically between those events; no per-packet work.
+//!
+//! ## Scaling: path groups + incremental repricing
+//!
+//! The paper's workloads are highly symmetric (64 clients per IFS server,
+//! thousands of nodes writing to one GFS), so flows are grouped by their
+//! path signature; all members of a group share one rate, and each group
+//! keeps its members in a BTree ordered by *virtual finish work*
+//! (remaining bytes at insert + the group's attained service at insert).
+//!
+//! The first implementation recomputed every group's rate on every event
+//! — profiled at >50% of a 96K-processor sweep's wall time (EXPERIMENTS.md
+//! §Perf). This version is **incremental**:
+//!
+//! * groups live in stable slots (slab + free list), each with its own
+//!   `last_update` so attained service integrates lazily per group;
+//! * each resource keeps the list of group slots crossing it; a load
+//!   change reprices only those groups;
+//! * per-group completion estimates live in a lazy priority heap with
+//!   generation counters — stale entries are discarded on pop;
+//! * one pending engine wakeup (epoch-checked) tracks the heap top.
+//!
+//! Events that only touch a single-ION path now cost O(groups on that
+//! ION's resources), not O(all groups).
+
+use crate::sim::engine::Engine;
+use crate::util::units::SimTime;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
+
+/// Index of a registered resource.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ResourceId(pub u32);
+
+/// Identifier of an in-flight flow (for cancellation / failure injection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FlowId(pub u64);
+
+/// A shared capacity: a link, a server NIC, or an aggregate cap.
+#[derive(Debug, Clone)]
+pub struct Resource {
+    /// Human-readable name (diagnostics).
+    pub name: String,
+    /// Capacity in bytes/second.
+    pub cap: f64,
+    /// Current load = number of flows crossing this resource.
+    load: u64,
+}
+
+/// Completion callback invoked when a flow finishes.
+pub type Callback<W> = Box<dyn FnOnce(&mut Engine<W>, &mut W)>;
+
+/// World types that embed a [`FlowNet`] implement this so the net can
+/// reschedule itself from event context.
+pub trait HasFlowNet: Sized + 'static {
+    /// Access the embedded flow network.
+    fn flownet(&mut self) -> &mut FlowNet<Self>;
+}
+
+/// Completion-tolerance in bytes: absorbs f64 accumulation error so a
+/// flow scheduled to finish "now" actually pops.
+const EPS_BYTES: f64 = 0.5;
+
+struct Member<W> {
+    id: FlowId,
+    bytes: f64,
+    cb: Callback<W>,
+}
+
+/// Ordered key: virtual finish work (bit-cast non-negative f64) + flow id
+/// for tie-breaking. Bit-casting preserves order for non-negative floats.
+type FinishKey = (u64, u64);
+
+fn finish_key(virtual_finish: f64, id: FlowId) -> FinishKey {
+    debug_assert!(virtual_finish >= 0.0);
+    (virtual_finish.to_bits(), id.0)
+}
+
+struct Group<W> {
+    path: Box<[ResourceId]>,
+    /// Per-flow rate ceiling independent of resource shares (models e.g.
+    /// a FUSE per-client cap without one resource per node).
+    rate_cap: f64,
+    /// Per-flow rate, bytes/sec (valid since `last_update`).
+    rate: f64,
+    /// Attained service per flow since group creation, bytes, integrated
+    /// up to `last_update`.
+    attained: f64,
+    /// Instant `attained`/`rate` were last reconciled.
+    last_update: SimTime,
+    /// Slot-reuse generation (matches `FlowNet::slot_gen[slot]`).
+    gen: u64,
+    /// Earliest live heap entry registered for this group
+    /// ([`SimTime::NEVER`] = none); estimates later than this are not
+    /// pushed — the registered entry fires early and self-corrects.
+    registered: SimTime,
+    members: BTreeMap<FinishKey, Member<W>>,
+}
+
+impl<W> Group<W> {
+    fn first_finish(&self) -> Option<f64> {
+        self.members.keys().next().map(|&(bits, _)| f64::from_bits(bits))
+    }
+
+    /// Integrate attained service up to `now`.
+    fn touch(&mut self, now: SimTime) {
+        debug_assert!(now >= self.last_update);
+        let dt = (now - self.last_update).as_secs_f64();
+        if dt > 0.0 {
+            if !self.members.is_empty() && self.rate.is_finite() {
+                self.attained += self.rate * dt;
+            }
+            self.last_update = now;
+        }
+    }
+
+    /// Projected completion instant of the earliest member (post-touch).
+    fn next_completion(&self, now: SimTime) -> Option<SimTime> {
+        let first = self.first_finish()?;
+        let need = (first - self.attained).max(0.0);
+        let dt = if self.rate.is_infinite() { 0.0 } else { need / self.rate };
+        Some(now + SimTime::from_secs_f64(dt).max(SimTime(1)))
+    }
+}
+
+/// The fluid flow network. Embed one in your simulation world and
+/// implement [`HasFlowNet`].
+pub struct FlowNet<W> {
+    resources: Vec<Resource>,
+    /// Per-resource list of group slots crossing it (stale entries are
+    /// pruned lazily during repricing).
+    resource_groups: Vec<Vec<usize>>,
+    /// Stable group slots.
+    groups: Vec<Option<Group<W>>>,
+    free_slots: Vec<usize>,
+    /// (path signature, rate-cap bits) -> slot.
+    group_index: HashMap<(Box<[ResourceId]>, u64), usize>,
+    /// flow id -> (slot, finish key) for cancellation.
+    flow_index: HashMap<u64, (usize, FinishKey)>,
+    /// Lazy completion heap: (time, slot, slot-gen); stale entries are
+    /// skipped on pop. Entries may fire *early* (a rate drop moved the
+    /// real completion later); the wakeup then reprices just that group.
+    completions: BinaryHeap<Reverse<(SimTime, usize, u64)>>,
+    /// Slot-reuse generations.
+    slot_gen: Vec<u64>,
+    next_flow: u64,
+    /// Wakeup token: stale engine events are ignored.
+    epoch: u64,
+    /// Instant of the currently scheduled wakeup (None = none pending).
+    scheduled_at: Option<SimTime>,
+    // --- counters ---
+    bytes_completed: f64,
+    flows_completed: u64,
+    flows_cancelled: u64,
+    active: usize,
+}
+
+impl<W: HasFlowNet> Default for FlowNet<W> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<W: HasFlowNet> FlowNet<W> {
+    /// Empty network.
+    pub fn new() -> Self {
+        FlowNet {
+            resources: Vec::new(),
+            resource_groups: Vec::new(),
+            groups: Vec::new(),
+            free_slots: Vec::new(),
+            slot_gen: Vec::new(),
+            group_index: HashMap::new(),
+            flow_index: HashMap::new(),
+            completions: BinaryHeap::new(),
+            next_flow: 0,
+            epoch: 0,
+            scheduled_at: None,
+            bytes_completed: 0.0,
+            flows_completed: 0,
+            flows_cancelled: 0,
+            active: 0,
+        }
+    }
+
+    /// Register a shared resource with capacity in bytes/sec.
+    pub fn add_resource(&mut self, name: impl Into<String>, cap: f64) -> ResourceId {
+        assert!(cap > 0.0, "resource capacity must be positive");
+        let id = ResourceId(self.resources.len() as u32);
+        self.resources.push(Resource { name: name.into(), cap, load: 0 });
+        self.resource_groups.push(Vec::new());
+        id
+    }
+
+    /// Look at a resource (diagnostics / tests).
+    pub fn resource(&self, id: ResourceId) -> &Resource {
+        &self.resources[id.0 as usize]
+    }
+
+    /// Change a capacity mid-simulation (degradation / failure injection).
+    pub fn set_capacity(engine: &mut Engine<W>, world: &mut W, id: ResourceId, cap: f64) {
+        assert!(cap > 0.0);
+        let now = engine.now();
+        let net = world.flownet();
+        net.resources[id.0 as usize].cap = cap;
+        net.reprice_resource(id, now);
+        net.ensure_wakeup(engine);
+    }
+
+    /// Number of flows currently in flight.
+    pub fn active_flows(&self) -> usize {
+        self.active
+    }
+
+    /// Completed-flow counter.
+    pub fn flows_completed(&self) -> u64 {
+        self.flows_completed
+    }
+
+    /// Cancelled-flow counter.
+    pub fn flows_cancelled(&self) -> u64 {
+        self.flows_cancelled
+    }
+
+    /// Total bytes moved by completed flows.
+    pub fn bytes_completed(&self) -> f64 {
+        self.bytes_completed
+    }
+
+    /// Start a flow of `bytes` over `path`; `cb` fires on completion.
+    pub fn start(
+        engine: &mut Engine<W>,
+        world: &mut W,
+        path: &[ResourceId],
+        bytes: u64,
+        cb: impl FnOnce(&mut Engine<W>, &mut W) + 'static,
+    ) -> FlowId {
+        Self::start_capped(engine, world, path, bytes, f64::INFINITY, cb)
+    }
+
+    /// Start a flow whose rate is additionally capped at `rate_cap`
+    /// bytes/sec regardless of resource shares (per-client NIC / FUSE
+    /// ceilings without per-node resources).
+    pub fn start_capped(
+        engine: &mut Engine<W>,
+        world: &mut W,
+        path: &[ResourceId],
+        bytes: u64,
+        rate_cap: f64,
+        cb: impl FnOnce(&mut Engine<W>, &mut W) + 'static,
+    ) -> FlowId {
+        assert!(!path.is_empty(), "flow needs at least one resource");
+        assert!(rate_cap > 0.0, "rate cap must be positive");
+        let now = engine.now();
+        let net = world.flownet();
+        let id = net.insert(path, bytes.max(1) as f64, rate_cap, Box::new(cb), now);
+        net.ensure_wakeup(engine);
+        id
+    }
+
+    /// Cancel an in-flight flow (its callback is dropped, not invoked).
+    /// Returns false if the flow already completed.
+    pub fn cancel(engine: &mut Engine<W>, world: &mut W, id: FlowId) -> bool {
+        let now = engine.now();
+        let net = world.flownet();
+        let Some((slot, key)) = net.flow_index.remove(&id.0) else {
+            return false;
+        };
+        let group = net.groups[slot].as_mut().expect("flow_index points at live group");
+        group.touch(now);
+        let removed = group.members.remove(&key).is_some();
+        debug_assert!(removed, "flow_index out of sync");
+        net.active -= 1;
+        net.flows_cancelled += 1;
+        let path: Box<[ResourceId]> = group.path.clone();
+        net.release_load_and_maybe_gc(slot, &path, now);
+        net.ensure_wakeup(engine);
+        true
+    }
+
+    // ---- internals ----
+
+    fn insert(
+        &mut self,
+        path: &[ResourceId],
+        bytes: f64,
+        rate_cap: f64,
+        cb: Callback<W>,
+        now: SimTime,
+    ) -> FlowId {
+        let id = FlowId(self.next_flow);
+        self.next_flow += 1;
+        let key = (Box::<[ResourceId]>::from(path), rate_cap.to_bits());
+        let slot = match self.group_index.get(&key) {
+            Some(&s) => s,
+            None => {
+                let slot = match self.free_slots.pop() {
+                    Some(s) => s,
+                    None => {
+                        self.groups.push(None);
+                        self.slot_gen.push(0);
+                        self.groups.len() - 1
+                    }
+                };
+                self.slot_gen[slot] += 1;
+                self.groups[slot] = Some(Group {
+                    path: key.0.clone(),
+                    rate_cap,
+                    rate: rate_cap,
+                    attained: 0.0,
+                    last_update: now,
+                    gen: self.slot_gen[slot],
+                    registered: SimTime::NEVER,
+                    members: BTreeMap::new(),
+                });
+                for &r in path {
+                    self.resource_groups[r.0 as usize].push(slot);
+                }
+                self.group_index.insert(key, slot);
+                slot
+            }
+        };
+        {
+            let group = self.groups[slot].as_mut().unwrap();
+            group.touch(now);
+            let fkey = finish_key(group.attained + bytes, id);
+            group.members.insert(fkey, Member { id, bytes, cb });
+            self.flow_index.insert(id.0, (slot, fkey));
+        }
+        self.active += 1;
+        // Load rises on every path resource; reprice all groups they touch
+        // (including this one).
+        for &r in path {
+            self.resources[r.0 as usize].load += 1;
+        }
+        for &r in path {
+            self.reprice_resource(r, now);
+        }
+        id
+    }
+
+    /// Reprice every live group crossing `r` (pruning stale slot entries):
+    /// integrate attained service at the old rate, recompute the rate from
+    /// current loads, bump the generation, push a fresh completion
+    /// estimate.
+    fn reprice_resource(&mut self, r: ResourceId, now: SimTime) {
+        let mut list = std::mem::take(&mut self.resource_groups[r.0 as usize]);
+        list.retain(|&slot| {
+            let Some(group) = self.groups[slot].as_mut() else {
+                return false; // group gone; prune
+            };
+            if !group.path.contains(&r) {
+                return false; // slot was reused by a different group
+            }
+            group.touch(now);
+            let mut rate = group.rate_cap;
+            for &pr in group.path.iter() {
+                let res = &self.resources[pr.0 as usize];
+                debug_assert!(res.load > 0 || group.members.is_empty());
+                if res.load > 0 {
+                    rate = rate.min(res.cap / res.load as f64);
+                }
+            }
+            group.rate = rate;
+            // Push only ESTIMATES THAT MOVED EARLIER: a later real
+            // completion is covered by the already-registered entry
+            // firing early and self-correcting. This bounds heap growth
+            // to O(rate-increase events) instead of O(reprices) — the
+            // §Perf fix for global-resource workloads.
+            if let Some(at) = group.next_completion(now) {
+                if at < group.registered {
+                    group.registered = at;
+                    self.completions.push(Reverse((at, slot, group.gen)));
+                }
+            }
+            true
+        });
+        self.resource_groups[r.0 as usize] = list;
+    }
+
+    /// Drop loads for a departing flow and GC its group if empty.
+    fn release_load_and_maybe_gc(&mut self, slot: usize, path: &[ResourceId], now: SimTime) {
+        for &r in path {
+            self.resources[r.0 as usize].load -= 1;
+        }
+        let empty = self.groups[slot].as_ref().map(|g| g.members.is_empty()).unwrap_or(false);
+        if empty {
+            let g = self.groups[slot].take().unwrap();
+            self.group_index.remove(&(g.path.clone(), g.rate_cap.to_bits()));
+            self.free_slots.push(slot);
+        }
+        for &r in path {
+            self.reprice_resource(r, now);
+        }
+    }
+
+    /// Earliest *valid* completion estimate, discarding entries whose
+    /// group slot was freed or reused.
+    fn peek_next(&mut self) -> Option<SimTime> {
+        while let Some(&Reverse((at, slot, gen))) = self.completions.peek() {
+            match self.groups[slot].as_ref() {
+                Some(g) if g.gen == gen && !g.members.is_empty() => return Some(at),
+                _ => {
+                    self.completions.pop();
+                }
+            }
+        }
+        None
+    }
+
+    /// Make sure an engine wakeup is pending at (or before) the earliest
+    /// completion.
+    fn ensure_wakeup(&mut self, engine: &mut Engine<W>) {
+        let Some(at) = self.peek_next() else {
+            return;
+        };
+        let at = at.max(engine.now() + SimTime(1));
+        if let Some(t) = self.scheduled_at {
+            if t <= at {
+                return; // an early-enough wakeup is already pending
+            }
+        }
+        self.epoch += 1;
+        self.scheduled_at = Some(at);
+        let epoch = self.epoch;
+        engine.schedule_at(at, move |e, w| Self::wakeup(e, w, epoch));
+    }
+
+    fn wakeup(engine: &mut Engine<W>, world: &mut W, epoch: u64) {
+        let now = engine.now();
+        {
+            let net = world.flownet();
+            if epoch != net.epoch {
+                return; // superseded by a newer wakeup
+            }
+            net.scheduled_at = None;
+        }
+        // Pop every flow due by `now` (bounded borrow), then run the
+        // callbacks (which may start new flows / touch the world freely).
+        let mut done: Vec<Callback<W>> = Vec::new();
+        {
+            let net = world.flownet();
+            loop {
+                let Some(at) = net.peek_next() else { break };
+                if at > now {
+                    break;
+                }
+                let Reverse((entry_at, slot, _)) = net.completions.pop().unwrap();
+                // Pop all members of this group that are due.
+                let path: Box<[ResourceId]> = {
+                    let g = net.groups[slot].as_mut().unwrap();
+                    if g.registered == entry_at {
+                        g.registered = SimTime::NEVER;
+                    }
+                    g.path.clone()
+                };
+                let mut departures = 0u32;
+                {
+                    let g = net.groups[slot].as_mut().unwrap();
+                    g.touch(now);
+                    while let Some(first) = g.first_finish() {
+                        if first <= g.attained + EPS_BYTES {
+                            let (&key, _) = g.members.iter().next().unwrap();
+                            let member = g.members.remove(&key).unwrap();
+                            net.flow_index.remove(&member.id.0);
+                            net.flows_completed += 1;
+                            net.bytes_completed += member.bytes;
+                            done.push(member.cb);
+                            departures += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                }
+                if departures > 0 {
+                    net.active -= departures as usize;
+                    for _ in 1..departures {
+                        // release_load handles one departure's load; the
+                        // first is handled below. Decrement the extras.
+                        for &r in path.iter() {
+                            net.resources[r.0 as usize].load -= 1;
+                        }
+                    }
+                    net.release_load_and_maybe_gc(slot, &path, now);
+                } else {
+                    // Early fire (the rate dropped after this estimate
+                    // was registered): push the corrected estimate.
+                    let g = net.groups[slot].as_mut().unwrap();
+                    if let Some(at) = g.next_completion(now) {
+                        if at < g.registered {
+                            g.registered = at;
+                            let gen = g.gen;
+                            net.completions.push(Reverse((at, slot, gen)));
+                        }
+                    }
+                }
+            }
+        }
+        for cb in done {
+            cb(engine, world);
+        }
+        let net = world.flownet();
+        net.ensure_wakeup(engine);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{mbps, mib, SimTime};
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    struct World {
+        net: FlowNet<World>,
+        done: Rc<RefCell<Vec<(f64, &'static str)>>>,
+    }
+
+    impl HasFlowNet for World {
+        fn flownet(&mut self) -> &mut FlowNet<World> {
+            &mut self.net
+        }
+    }
+
+    fn world() -> (Engine<World>, World) {
+        (
+            Engine::new().with_limit(1_000_000),
+            World { net: FlowNet::new(), done: Rc::new(RefCell::new(Vec::new())) },
+        )
+    }
+
+    fn mark(
+        done: &Rc<RefCell<Vec<(f64, &'static str)>>>,
+        name: &'static str,
+    ) -> impl FnOnce(&mut Engine<World>, &mut World) {
+        let done = done.clone();
+        move |e, _| done.borrow_mut().push((e.now().as_secs_f64(), name))
+    }
+
+    #[test]
+    fn single_flow_takes_bytes_over_cap() {
+        let (mut eng, mut w) = world();
+        let link = w.net.add_resource("link", mbps(100));
+        let done = w.done.clone();
+        FlowNet::start(&mut eng, &mut w, &[link], mib(100), mark(&done, "a"));
+        eng.run(&mut w);
+        let log = done.borrow();
+        assert_eq!(log.len(), 1);
+        assert!((log[0].0 - 1.0).abs() < 1e-6, "100MiB @ 100MiB/s should take 1s, took {}", log[0].0);
+    }
+
+    #[test]
+    fn two_flows_share_fairly() {
+        let (mut eng, mut w) = world();
+        let link = w.net.add_resource("link", mbps(100));
+        let done = w.done.clone();
+        FlowNet::start(&mut eng, &mut w, &[link], mib(100), mark(&done, "a"));
+        FlowNet::start(&mut eng, &mut w, &[link], mib(100), mark(&done, "b"));
+        eng.run(&mut w);
+        let log = done.borrow();
+        // Both share 100 MiB/s -> 50 each -> both complete at t=2.
+        assert_eq!(log.len(), 2);
+        assert!((log[0].0 - 2.0).abs() < 1e-6, "{log:?}");
+        assert!((log[1].0 - 2.0).abs() < 1e-6, "{log:?}");
+    }
+
+    #[test]
+    fn late_joiner_slows_first_flow() {
+        let (mut eng, mut w) = world();
+        let link = w.net.add_resource("link", mbps(100));
+        let done = w.done.clone();
+        FlowNet::start(&mut eng, &mut w, &[link], mib(100), mark(&done, "first"));
+        let d2 = done.clone();
+        eng.schedule(SimTime::from_secs_f64(0.5), move |e, w| {
+            let cb = mark(&d2, "second");
+            FlowNet::start(e, w, &[ResourceId(0)], mib(100), cb);
+        });
+        eng.run(&mut w);
+        let log = done.borrow();
+        // first: 50MiB by 0.5s, then shares -> 1s more at 50 -> done 1.5;
+        // second: 50MiB by 1.5 at 50, then 50 at 100 -> 2.0.
+        assert!((log[0].0 - 1.5).abs() < 1e-6, "{log:?}");
+        assert_eq!(log[0].1, "first");
+        assert!((log[1].0 - 2.0).abs() < 1e-6, "{log:?}");
+    }
+
+    #[test]
+    fn bottleneck_is_min_over_path() {
+        let (mut eng, mut w) = world();
+        let fast = w.net.add_resource("fast", mbps(1000));
+        let slow = w.net.add_resource("slow", mbps(10));
+        let done = w.done.clone();
+        FlowNet::start(&mut eng, &mut w, &[fast, slow], mib(100), mark(&done, "a"));
+        eng.run(&mut w);
+        assert!((done.borrow()[0].0 - 10.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn disjoint_paths_do_not_interfere() {
+        let (mut eng, mut w) = world();
+        let l1 = w.net.add_resource("l1", mbps(100));
+        let l2 = w.net.add_resource("l2", mbps(100));
+        let done = w.done.clone();
+        FlowNet::start(&mut eng, &mut w, &[l1], mib(100), mark(&done, "a"));
+        FlowNet::start(&mut eng, &mut w, &[l2], mib(100), mark(&done, "b"));
+        eng.run(&mut w);
+        for (t, _) in done.borrow().iter() {
+            assert!((t - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn many_flows_different_sizes_complete_in_size_order() {
+        let (mut eng, mut w) = world();
+        let link = w.net.add_resource("link", mbps(100));
+        let order = Rc::new(RefCell::new(Vec::new()));
+        for (i, size) in [3u64, 1, 2].into_iter().enumerate() {
+            let order = order.clone();
+            FlowNet::start(&mut eng, &mut w, &[link], mib(size), move |_, _| {
+                order.borrow_mut().push(i);
+            });
+        }
+        eng.run(&mut w);
+        assert_eq!(*order.borrow(), vec![1, 2, 0]);
+        assert_eq!(w.net.flows_completed(), 3);
+        assert_eq!(w.net.active_flows(), 0);
+    }
+
+    #[test]
+    fn cancel_prevents_callback_and_frees_capacity() {
+        let (mut eng, mut w) = world();
+        let link = w.net.add_resource("link", mbps(100));
+        let done = w.done.clone();
+        let victim = FlowNet::start(&mut eng, &mut w, &[link], mib(100), mark(&done, "victim"));
+        FlowNet::start(&mut eng, &mut w, &[link], mib(100), mark(&done, "kept"));
+        eng.schedule(SimTime::from_millis(1), move |e, w| {
+            assert!(FlowNet::cancel(e, w, victim));
+        });
+        eng.run(&mut w);
+        let log = done.borrow();
+        assert_eq!(log.len(), 1);
+        assert_eq!(log[0].1, "kept");
+        assert!(log[0].0 < 1.01, "{log:?}");
+        assert_eq!(w.net.flows_cancelled(), 1);
+    }
+
+    #[test]
+    fn cancel_after_completion_returns_false() {
+        let (mut eng, mut w) = world();
+        let link = w.net.add_resource("link", mbps(100));
+        let id = FlowNet::start(&mut eng, &mut w, &[link], mib(1), |_, _| {});
+        eng.run(&mut w);
+        assert!(!FlowNet::cancel(&mut eng, &mut w, id));
+    }
+
+    #[test]
+    fn chained_flows_from_callbacks() {
+        let (mut eng, mut w) = world();
+        let link = w.net.add_resource("link", mbps(100));
+        let done = w.done.clone();
+        let d = done.clone();
+        FlowNet::start(&mut eng, &mut w, &[link], mib(50), move |e, w| {
+            let cb = mark(&d, "second");
+            FlowNet::start(e, w, &[ResourceId(0)], mib(50), cb);
+        });
+        eng.run(&mut w);
+        let log = done.borrow();
+        assert_eq!(log.len(), 1);
+        assert!((log[0].0 - 1.0).abs() < 1e-5, "{log:?}");
+    }
+
+    #[test]
+    fn capacity_change_reshapes_completion() {
+        let (mut eng, mut w) = world();
+        let link = w.net.add_resource("link", mbps(100));
+        let done = w.done.clone();
+        FlowNet::start(&mut eng, &mut w, &[link], mib(100), mark(&done, "a"));
+        eng.schedule(SimTime::from_secs_f64(0.5), move |e, w| {
+            FlowNet::set_capacity(e, w, ResourceId(0), mbps(50));
+        });
+        eng.run(&mut w);
+        // 50MiB in first 0.5s, remaining 50MiB at 50MiB/s = 1s -> t=1.5.
+        assert!((done.borrow()[0].0 - 1.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn group_scaling_many_symmetric_flows() {
+        let (mut eng, mut w) = world();
+        let link = w.net.add_resource("link", mbps(1000));
+        let count = Rc::new(RefCell::new(0));
+        for _ in 0..1000 {
+            let c = count.clone();
+            FlowNet::start(&mut eng, &mut w, &[link], mib(1), move |_, _| {
+                *c.borrow_mut() += 1;
+            });
+        }
+        eng.run(&mut w);
+        assert_eq!(*count.borrow(), 1000);
+        // 1000 MiB total at 1000MiB/s -> all finish at t=1.
+        assert!((eng.now().as_secs_f64() - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn slot_reuse_after_gc_is_safe() {
+        // Create a group, drain it (slot freed), then create a different
+        // group that reuses the slot while the old resource list still
+        // mentions it — the stale entry must be pruned, not repriced.
+        let (mut eng, mut w) = world();
+        let a = w.net.add_resource("a", mbps(100));
+        let b = w.net.add_resource("b", mbps(100));
+        let done = w.done.clone();
+        FlowNet::start(&mut eng, &mut w, &[a], mib(50), mark(&done, "on-a"));
+        eng.run(&mut w);
+        assert_eq!(w.net.active_flows(), 0);
+        // New group on b likely reuses the freed slot.
+        FlowNet::start(&mut eng, &mut w, &[b], mib(50), mark(&done, "on-b"));
+        // And another flow on a again (fresh group on a).
+        FlowNet::start(&mut eng, &mut w, &[a], mib(50), mark(&done, "on-a2"));
+        eng.run(&mut w);
+        let log = done.borrow();
+        assert_eq!(log.len(), 3);
+        // b and a2 ran concurrently on disjoint links: both ~0.5s after
+        // their start (which was at t=0.5).
+        assert!((log[1].0 - 1.0).abs() < 1e-5, "{log:?}");
+        assert!((log[2].0 - 1.0).abs() < 1e-5, "{log:?}");
+    }
+
+    #[test]
+    fn interleaved_sizes_and_joins_converge() {
+        // Stress determinism + accounting under heavy churn.
+        let (mut eng, mut w) = world();
+        let link = w.net.add_resource("link", mbps(100));
+        let count = Rc::new(RefCell::new(0u32));
+        for i in 0..200u64 {
+            let c = count.clone();
+            let delay = SimTime::from_millis(i * 7 % 50);
+            eng.schedule(delay, move |e, w| {
+                let c = c.clone();
+                FlowNet::start_capped(e, w, &[ResourceId(0)], mib(1 + i % 5), mbps(30) , move |_, _| {
+                    *c.borrow_mut() += 1;
+                });
+            });
+        }
+        eng.run(&mut w);
+        let _ = link;
+        assert_eq!(*count.borrow(), 200);
+        assert_eq!(w.net.active_flows(), 0);
+        let total: u64 = (0..200u64).map(|i| mib(1 + i % 5)).sum();
+        assert!((w.net.bytes_completed() - total as f64).abs() < 1.0);
+    }
+}

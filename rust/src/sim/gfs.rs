@@ -1,0 +1,157 @@
+//! GPFS (the GFS) model: aggregate bandwidth plus the metadata weaknesses
+//! the paper's §3.1 identifies — slow file creation and poor behaviour when
+//! many clients create files concurrently.
+//!
+//! Bandwidth is modelled with shared [`crate::sim::flow`] resources (wired
+//! up in [`crate::sim::cluster`]); this module owns the *metadata* model:
+//! a create's service time grows with the number of concurrent metadata
+//! operations,
+//!
+//! ```text
+//! service(D) = create_base * (1 + (D / create_k) ^ create_p)
+//! ```
+//!
+//! a sub-linear lock-convoy curve calibrated in DESIGN.md §2 against the
+//! paper's Figure 14/15 GPFS efficiency series (≈50% at 256 processors
+//! falling to ≈10% at 32K for 4-second tasks). The model is intentionally
+//! queue-free: each create samples the in-flight count at issue time. At
+//! the scales we simulate, creates overlap heavily and the sampled count
+//! tracks the true queue closely, while keeping the simulation O(1) per
+//! create.
+
+use crate::config::GfsConfig;
+use crate::util::stats::Welford;
+
+/// Metadata-contention model state.
+#[derive(Debug, Clone)]
+pub struct MetaModel {
+    /// Creates currently in flight.
+    inflight: u64,
+    /// Completed creates.
+    completed: u64,
+    /// Observed service-time distribution (diagnostics).
+    service: Welford,
+    cfg: MetaParams,
+}
+
+/// The three knobs of the contention curve (copied out of
+/// [`GfsConfig`] so the model is self-contained and unit-testable).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetaParams {
+    /// Idle service time (s).
+    pub base_s: f64,
+    /// Contention scale.
+    pub k: f64,
+    /// Contention exponent.
+    pub p: f64,
+}
+
+impl From<&GfsConfig> for MetaParams {
+    fn from(g: &GfsConfig) -> Self {
+        MetaParams { base_s: g.create_base_s, k: g.create_k, p: g.create_p }
+    }
+}
+
+impl MetaModel {
+    /// Fresh model.
+    pub fn new(params: MetaParams) -> Self {
+        MetaModel { inflight: 0, completed: 0, service: Welford::new(), cfg: params }
+    }
+
+    /// Service time for a create issued when `inflight` other metadata
+    /// operations are outstanding.
+    pub fn service_time(params: &MetaParams, inflight: u64) -> f64 {
+        params.base_s * (1.0 + (inflight as f64 / params.k).powf(params.p))
+    }
+
+    /// Issue a create: returns its service time in seconds. The caller
+    /// must pair this with [`MetaModel::complete`] when the delay elapses.
+    pub fn issue(&mut self) -> f64 {
+        let t = Self::service_time(&self.cfg, self.inflight);
+        self.inflight += 1;
+        self.service.push(t);
+        t
+    }
+
+    /// Mark one create complete.
+    pub fn complete(&mut self) {
+        assert!(self.inflight > 0, "MetaModel::complete without issue");
+        self.inflight -= 1;
+        self.completed += 1;
+    }
+
+    /// Creates currently in flight.
+    pub fn inflight(&self) -> u64 {
+        self.inflight
+    }
+
+    /// Completed create count.
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// Mean observed service time (s).
+    pub fn mean_service_s(&self) -> f64 {
+        self.service.mean()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> MetaParams {
+        MetaParams { base_s: 0.33, k: 1.0, p: 0.45 }
+    }
+
+    #[test]
+    fn idle_create_costs_base() {
+        assert!((MetaModel::service_time(&params(), 0) - 0.33).abs() < 1e-12);
+    }
+
+    #[test]
+    fn contention_curve_matches_calibration() {
+        // DESIGN.md §2: ~4 s overhead at 256 concurrent creators, ~35 s at
+        // 32K — the figures the GPFS efficiency series hinge on.
+        let s256 = MetaModel::service_time(&params(), 256);
+        let s32k = MetaModel::service_time(&params(), 32_768);
+        assert!((3.0..5.5).contains(&s256), "s(256) = {s256}");
+        assert!((30.0..42.0).contains(&s32k), "s(32768) = {s32k}");
+    }
+
+    #[test]
+    fn curve_is_monotone_and_sublinear() {
+        let p = params();
+        let mut prev = 0.0;
+        for d in [0u64, 1, 10, 100, 1000, 10_000, 100_000] {
+            let s = MetaModel::service_time(&p, d);
+            assert!(s > prev, "monotone at D={d}");
+            prev = s;
+        }
+        // Sub-linear: doubling D must less-than-double the *contention*
+        // part of the service time.
+        let c1 = MetaModel::service_time(&p, 1000) - p.base_s;
+        let c2 = MetaModel::service_time(&p, 2000) - p.base_s;
+        assert!(c2 < 2.0 * c1);
+    }
+
+    #[test]
+    fn issue_complete_bookkeeping() {
+        let mut m = MetaModel::new(params());
+        let t0 = m.issue();
+        let t1 = m.issue();
+        assert!(t1 > t0, "second create sees contention");
+        assert_eq!(m.inflight(), 2);
+        m.complete();
+        m.complete();
+        assert_eq!(m.inflight(), 0);
+        assert_eq!(m.completed(), 2);
+        assert!(m.mean_service_s() > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "without issue")]
+    fn unmatched_complete_panics() {
+        MetaModel::new(params()).complete();
+    }
+}

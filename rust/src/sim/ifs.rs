@@ -1,0 +1,323 @@
+//! Intermediate file system (IFS) models.
+//!
+//! Two variants from the paper's §5:
+//!
+//! * **chirp-server mode** (Figure 11): one compute node's RAM disk is
+//!   dedicated as a file server for a set of client CNs, accessed via
+//!   FUSE over the torus. The critical non-bandwidth behaviour is
+//!   *connection memory*: each concurrent transfer pins a buffer on the
+//!   server, and at a 512:1 ratio with 100 MB files the server runs out of
+//!   memory — the paper's benchmarks "failed due to memory exhaustion".
+//!   [`ChirpServer`] reproduces that failure mode with explicit
+//!   accounting.
+//! * **striped mode** (Figure 12, MosaStore-like): several member LFSs are
+//!   aggregated into one larger IFS; aggregate bandwidth scales with the
+//!   stripe degree minus a coordination loss (model in
+//!   [`crate::config::ClusterConfig::ifs_striped_bw`]); capacity is the sum
+//!   of the members ([`StripeSet`]).
+//!
+//! Staging-space accounting for the output collector (§5.2) also lives
+//! here: [`Staging`] tracks buffered output bytes and free space, the
+//! inputs of the `maxData` / `minFreeSpace` policy conditions.
+
+use crate::util::units::fmt_bytes;
+
+/// Error from chirp connection admission.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum IfsError {
+    /// The server cannot pin another connection buffer — the §6.1 512:1
+    /// failure mode.
+    #[error("chirp server out of memory: need {need}, free {free} ({conns} connections)")]
+    ServerOom {
+        /// Buffer bytes needed for the new connection.
+        need: u64,
+        /// Server memory remaining.
+        free: u64,
+        /// Connections currently open.
+        conns: u64,
+    },
+    /// Striped IFS capacity exhausted.
+    #[error("IFS full: requested {requested}, free {free}")]
+    Full {
+        /// Bytes requested.
+        requested: u64,
+        /// Bytes free.
+        free: u64,
+    },
+}
+
+/// Connection-memory accounting for a single chirp file server.
+#[derive(Debug, Clone)]
+pub struct ChirpServer {
+    mem_total: u64,
+    mem_used: u64,
+    conns: u64,
+    /// Per-connection buffer sizing: `min(bytes / divisor, max)` (see
+    /// [`crate::config::NodeConfig`]; calibrated to the paper's OOM point).
+    buf_divisor: u64,
+    buf_max: u64,
+    peak_conns: u64,
+}
+
+impl ChirpServer {
+    /// New server with `mem_total` bytes available for buffers.
+    pub fn new(mem_total: u64, buf_divisor: u64, buf_max: u64) -> Self {
+        assert!(buf_divisor > 0);
+        ChirpServer { mem_total, mem_used: 0, conns: 0, buf_divisor, buf_max, peak_conns: 0 }
+    }
+
+    /// Buffer bytes a transfer of `bytes` pins on the server.
+    pub fn buffer_for(&self, bytes: u64) -> u64 {
+        (bytes / self.buf_divisor).min(self.buf_max).max(4096)
+    }
+
+    /// Admit a connection transferring `bytes`; returns the pinned buffer
+    /// size (pass it back to [`ChirpServer::disconnect`]).
+    pub fn connect(&mut self, bytes: u64) -> Result<u64, IfsError> {
+        let need = self.buffer_for(bytes);
+        let free = self.mem_total - self.mem_used;
+        if need > free {
+            return Err(IfsError::ServerOom { need, free, conns: self.conns });
+        }
+        self.mem_used += need;
+        self.conns += 1;
+        self.peak_conns = self.peak_conns.max(self.conns);
+        Ok(need)
+    }
+
+    /// Release a connection's buffer.
+    pub fn disconnect(&mut self, buffer: u64) {
+        assert!(
+            buffer <= self.mem_used && self.conns > 0,
+            "chirp disconnect of {} with used {} / {} conns",
+            fmt_bytes(buffer),
+            fmt_bytes(self.mem_used),
+            self.conns
+        );
+        self.mem_used -= buffer;
+        self.conns -= 1;
+    }
+
+    /// Open connections.
+    pub fn connections(&self) -> u64 {
+        self.conns
+    }
+
+    /// Peak simultaneous connections (diagnostics).
+    pub fn peak_connections(&self) -> u64 {
+        self.peak_conns
+    }
+
+    /// Free buffer memory.
+    pub fn mem_free(&self) -> u64 {
+        self.mem_total - self.mem_used
+    }
+}
+
+/// A striped IFS: capacity aggregated over member LFSs.
+#[derive(Debug, Clone)]
+pub struct StripeSet {
+    members: u32,
+    member_capacity: u64,
+    used: u64,
+}
+
+impl StripeSet {
+    /// Stripe set over `members` nodes each contributing `member_capacity`.
+    pub fn new(members: u32, member_capacity: u64) -> Self {
+        assert!(members >= 1);
+        StripeSet { members, member_capacity, used: 0 }
+    }
+
+    /// Stripe degree.
+    pub fn members(&self) -> u32 {
+        self.members
+    }
+
+    /// Total capacity (paper: 32 × 2 GB = 64 GB).
+    pub fn capacity(&self) -> u64 {
+        self.members as u64 * self.member_capacity
+    }
+
+    /// Bytes free.
+    pub fn free(&self) -> u64 {
+        self.capacity() - self.used
+    }
+
+    /// Reserve space across the stripes.
+    pub fn reserve(&mut self, bytes: u64) -> Result<(), IfsError> {
+        if bytes > self.free() {
+            return Err(IfsError::Full { requested: bytes, free: self.free() });
+        }
+        self.used += bytes;
+        Ok(())
+    }
+
+    /// Release previously reserved space.
+    pub fn release(&mut self, bytes: u64) {
+        assert!(bytes <= self.used, "stripe release exceeds used");
+        self.used -= bytes;
+    }
+}
+
+/// Output-collector staging area state on an IFS (the §5.2 policy inputs).
+#[derive(Debug, Clone)]
+pub struct Staging {
+    /// Bytes buffered in the staging directory awaiting archive to GFS.
+    buffered: u64,
+    /// Files buffered (the paper's win is file-count reduction).
+    files: u64,
+    /// Capacity of the staging space.
+    capacity: u64,
+    /// Lifetime totals.
+    total_bytes: u64,
+    total_files: u64,
+}
+
+impl Staging {
+    /// Staging area with the given capacity.
+    pub fn new(capacity: u64) -> Self {
+        Staging { buffered: 0, files: 0, capacity, total_bytes: 0, total_files: 0 }
+    }
+
+    /// Account one task-output file landing in staging.
+    pub fn add(&mut self, bytes: u64) -> Result<(), IfsError> {
+        if self.buffered + bytes > self.capacity {
+            return Err(IfsError::Full { requested: bytes, free: self.capacity - self.buffered });
+        }
+        self.buffered += bytes;
+        self.files += 1;
+        self.total_bytes += bytes;
+        self.total_files += 1;
+        Ok(())
+    }
+
+    /// Drain everything for an archive write; returns (bytes, files).
+    pub fn drain(&mut self) -> (u64, u64) {
+        let out = (self.buffered, self.files);
+        self.buffered = 0;
+        self.files = 0;
+        out
+    }
+
+    /// Buffered bytes (the `maxData` input).
+    pub fn buffered(&self) -> u64 {
+        self.buffered
+    }
+
+    /// Buffered file count.
+    pub fn files(&self) -> u64 {
+        self.files
+    }
+
+    /// Free space (the `minFreeSpace` input).
+    pub fn free(&self) -> u64 {
+        self.capacity - self.buffered
+    }
+
+    /// Lifetime bytes through this staging area.
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+
+    /// Lifetime files through this staging area.
+    pub fn total_files(&self) -> u64 {
+        self.total_files
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{gib, mib};
+
+    fn paper_server() -> ChirpServer {
+        // NodeConfig defaults: 2 GB - 200 MB, divisor 8, max 4 MiB.
+        ChirpServer::new(gib(2) - mib(200), 8, mib(4))
+    }
+
+    #[test]
+    fn oom_at_512_clients_100mb_but_not_256() {
+        // The §6.1 failure: 512 clients × 100 MB transfers exhaust server
+        // memory; 256 clients do not.
+        let mut s = paper_server();
+        for i in 0..512u64 {
+            let r = s.connect(mib(100));
+            if i < 256 {
+                assert!(r.is_ok(), "connection {i} should fit");
+            }
+            if r.is_err() {
+                assert!(i >= 256, "OOM too early at connection {i}");
+                return; // reproduced the failure
+            }
+        }
+        panic!("512 x 100MB connections should have exhausted memory");
+    }
+
+    #[test]
+    fn small_files_never_oom_at_512() {
+        let mut s = paper_server();
+        for _ in 0..512 {
+            s.connect(mib(1)).expect("1 MB transfers must fit at 512:1");
+        }
+        assert_eq!(s.connections(), 512);
+    }
+
+    #[test]
+    fn buffer_sizing_min_and_cap() {
+        let s = paper_server();
+        assert_eq!(s.buffer_for(mib(100)), mib(4), "large transfers hit the cap");
+        assert_eq!(s.buffer_for(mib(8)), mib(1));
+        assert_eq!(s.buffer_for(100), 4096, "floor at one page-ish");
+    }
+
+    #[test]
+    fn connect_disconnect_balance() {
+        let mut s = paper_server();
+        let b = s.connect(mib(100)).unwrap();
+        assert_eq!(s.connections(), 1);
+        s.disconnect(b);
+        assert_eq!(s.connections(), 0);
+        assert_eq!(s.mem_free(), gib(2) - mib(200));
+        assert_eq!(s.peak_connections(), 1);
+    }
+
+    #[test]
+    fn stripe_capacity_matches_paper() {
+        let set = StripeSet::new(32, gib(2));
+        assert_eq!(set.capacity(), gib(64), "32 x 2GB = 64GB IFS");
+    }
+
+    #[test]
+    fn stripe_reserve_release() {
+        let mut set = StripeSet::new(4, gib(2));
+        set.reserve(gib(7)).unwrap();
+        assert_eq!(set.free(), gib(1));
+        assert!(matches!(set.reserve(gib(2)), Err(IfsError::Full { .. })));
+        set.release(gib(7));
+        assert_eq!(set.free(), gib(8));
+    }
+
+    #[test]
+    fn staging_policy_inputs() {
+        let mut st = Staging::new(mib(100));
+        st.add(mib(10)).unwrap();
+        st.add(mib(5)).unwrap();
+        assert_eq!(st.buffered(), mib(15));
+        assert_eq!(st.files(), 2);
+        assert_eq!(st.free(), mib(85));
+        let (bytes, files) = st.drain();
+        assert_eq!((bytes, files), (mib(15), 2));
+        assert_eq!(st.buffered(), 0);
+        assert_eq!(st.total_files(), 2);
+        assert_eq!(st.total_bytes(), mib(15));
+    }
+
+    #[test]
+    fn staging_overflow_rejected() {
+        let mut st = Staging::new(mib(10));
+        st.add(mib(9)).unwrap();
+        assert!(matches!(st.add(mib(2)), Err(IfsError::Full { .. })));
+        assert_eq!(st.files(), 1, "failed add must not count");
+    }
+}

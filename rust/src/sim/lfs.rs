@@ -1,0 +1,141 @@
+//! Local file system (LFS) model: the per-compute-node RAM disk.
+//!
+//! On the BG/P under ZeptoOS the LFS is a RAM-based file system with about
+//! 1 GB free (2 GB on the striping-experiment nodes). The model tracks
+//! capacity — the property every placement decision in §5.1 hinges on —
+//! and exposes reserve/release with explicit failure on overflow, which the
+//! collector uses for its `minFreeSpace` policy input.
+
+use crate::util::units::fmt_bytes;
+
+/// Errors from LFS capacity operations.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum LfsError {
+    /// Not enough free space for a reservation.
+    #[error("LFS full: requested {requested}, free {free} of {capacity}")]
+    Full {
+        /// Bytes requested.
+        requested: u64,
+        /// Bytes free at the time of the request.
+        free: u64,
+        /// Total capacity.
+        capacity: u64,
+    },
+}
+
+/// A RAM-disk with capacity accounting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Lfs {
+    capacity: u64,
+    used: u64,
+    /// High-water mark (diagnostics / DESIGN.md sizing).
+    peak: u64,
+}
+
+impl Lfs {
+    /// New LFS with the given capacity in bytes.
+    pub fn new(capacity: u64) -> Self {
+        Lfs { capacity, used: 0, peak: 0 }
+    }
+
+    /// Total capacity.
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Bytes in use.
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    /// Bytes free.
+    pub fn free(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    /// High-water mark of usage.
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    /// Reserve `bytes`; fails without partial effect when it doesn't fit.
+    pub fn reserve(&mut self, bytes: u64) -> Result<(), LfsError> {
+        if bytes > self.free() {
+            return Err(LfsError::Full { requested: bytes, free: self.free(), capacity: self.capacity });
+        }
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        Ok(())
+    }
+
+    /// Release a previous reservation (panics on under-release — that is
+    /// always an accounting bug, not an environmental condition).
+    pub fn release(&mut self, bytes: u64) {
+        assert!(
+            bytes <= self.used,
+            "LFS release of {} exceeds used {}",
+            fmt_bytes(bytes),
+            fmt_bytes(self.used)
+        );
+        self.used -= bytes;
+    }
+
+    /// Would a reservation of `bytes` succeed?
+    pub fn fits(&self, bytes: u64) -> bool {
+        bytes <= self.free()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{gib, mib};
+
+    #[test]
+    fn reserve_release_roundtrip() {
+        let mut lfs = Lfs::new(gib(1));
+        lfs.reserve(mib(100)).unwrap();
+        assert_eq!(lfs.used(), mib(100));
+        assert_eq!(lfs.free(), gib(1) - mib(100));
+        lfs.release(mib(100));
+        assert_eq!(lfs.used(), 0);
+        assert_eq!(lfs.peak(), mib(100));
+    }
+
+    #[test]
+    fn overflow_fails_without_effect() {
+        let mut lfs = Lfs::new(mib(10));
+        lfs.reserve(mib(8)).unwrap();
+        let err = lfs.reserve(mib(4)).unwrap_err();
+        assert_eq!(
+            err,
+            LfsError::Full { requested: mib(4), free: mib(2), capacity: mib(10) }
+        );
+        assert_eq!(lfs.used(), mib(8), "failed reserve must not change state");
+    }
+
+    #[test]
+    fn exact_fit_succeeds() {
+        let mut lfs = Lfs::new(mib(10));
+        assert!(lfs.fits(mib(10)));
+        lfs.reserve(mib(10)).unwrap();
+        assert_eq!(lfs.free(), 0);
+        assert!(!lfs.fits(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds used")]
+    fn over_release_panics() {
+        let mut lfs = Lfs::new(mib(10));
+        lfs.release(1);
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut lfs = Lfs::new(mib(100));
+        lfs.reserve(mib(60)).unwrap();
+        lfs.release(mib(50));
+        lfs.reserve(mib(20)).unwrap();
+        assert_eq!(lfs.peak(), mib(60));
+    }
+}

@@ -1,0 +1,37 @@
+//! Discrete-event cluster simulator — the substrate that replaces the
+//! paper's Blue Gene/P testbed (repro band 0/5: no BG/P, no GPFS, no
+//! 96K processors available).
+//!
+//! Two layers:
+//!
+//! * a generic deterministic discrete-event [`engine`] (virtual clock +
+//!   ordered event heap of boxed actions), and a fluid [`flow`] network on
+//!   top of it: transfers are *flows* over shared [`flow::Resource`]s
+//!   (NICs, tree links, file-system servers) with processor-sharing
+//!   bandwidth allocation — the contention mechanics that produce every
+//!   curve in the paper's Figures 11–16;
+//! * BG/P-shaped components calibrated from the paper's §3 numbers:
+//!   [`gfs`] (GPFS: aggregate bandwidth, slow file creation,
+//!   same-directory metadata lock contention), [`lfs`] (per-node RAM
+//!   disk), [`ifs`] (striped MosaStore-like intermediate FS and the
+//!   chirp-like single-server mode with connection-memory accounting),
+//!   [`topology`] (torus / collective-tree / ethernet paths), [`node`]
+//!   (compute-node bookkeeping) and [`cluster`] (the assembled machine the
+//!   benches and examples drive).
+//!
+//! Determinism: engine event order is a total order on (time, sequence
+//! number) and all randomness flows from seeded [`crate::util::rng::Rng`]
+//! streams, so every figure bench replays bit-identically.
+
+pub mod cluster;
+pub mod engine;
+pub mod flow;
+pub mod gfs;
+pub mod ifs;
+pub mod lfs;
+pub mod node;
+pub mod topology;
+
+pub use crate::util::units::SimTime;
+pub use engine::Engine;
+pub use flow::{FlowNet, HasFlowNet, ResourceId};

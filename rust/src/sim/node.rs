@@ -1,0 +1,116 @@
+//! Compute-node bookkeeping: role, core occupancy, and the node's LFS.
+//!
+//! The paper's §5 partitions compute nodes per workload into
+//! application-executing nodes and data-serving (IFS) nodes — Figure 8's
+//! "allocation and mapping of compute nodes to IFS servers". [`NodeState`]
+//! carries that role plus the per-node RAM disk and busy-core count the
+//! dispatcher uses.
+
+use crate::sim::lfs::Lfs;
+
+/// What a compute node is provisioned to do for the current workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Runs application tasks.
+    Compute,
+    /// Dedicated chirp/MosaStore data server (its cores run no tasks).
+    IfsServer,
+}
+
+/// Per-node simulation state.
+#[derive(Debug, Clone)]
+pub struct NodeState {
+    /// Node id (dense, 0-based).
+    pub id: u32,
+    /// Provisioned role.
+    pub role: Role,
+    /// ION this node forwards IO through.
+    pub ion: u32,
+    /// IFS group serving this node's staged input data.
+    pub ifs_group: u32,
+    /// The node's RAM-disk LFS.
+    pub lfs: Lfs,
+    /// Cores currently running a task.
+    pub busy_cores: u32,
+    /// Total cores.
+    pub cores: u32,
+    /// Tasks completed on this node (diagnostics).
+    pub tasks_done: u64,
+}
+
+impl NodeState {
+    /// Fresh compute node.
+    pub fn new(id: u32, ion: u32, ifs_group: u32, cores: u32, lfs_capacity: u64) -> Self {
+        NodeState {
+            id,
+            role: Role::Compute,
+            ion,
+            ifs_group,
+            lfs: Lfs::new(lfs_capacity),
+            busy_cores: 0,
+            cores,
+            tasks_done: 0,
+        }
+    }
+
+    /// Idle cores available for dispatch.
+    pub fn idle_cores(&self) -> u32 {
+        if self.role == Role::IfsServer {
+            return 0;
+        }
+        self.cores - self.busy_cores
+    }
+
+    /// Claim one core for a task.
+    pub fn claim_core(&mut self) {
+        assert!(self.idle_cores() > 0, "node {} has no idle core", self.id);
+        self.busy_cores += 1;
+    }
+
+    /// Release a core at task completion.
+    pub fn release_core(&mut self) {
+        assert!(self.busy_cores > 0, "node {} releasing idle core", self.id);
+        self.busy_cores -= 1;
+        self.tasks_done += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::gib;
+
+    #[test]
+    fn core_accounting() {
+        let mut n = NodeState::new(7, 0, 0, 4, gib(1));
+        assert_eq!(n.idle_cores(), 4);
+        n.claim_core();
+        n.claim_core();
+        assert_eq!(n.idle_cores(), 2);
+        n.release_core();
+        assert_eq!(n.idle_cores(), 3);
+        assert_eq!(n.tasks_done, 1);
+    }
+
+    #[test]
+    fn ifs_server_runs_no_tasks() {
+        let mut n = NodeState::new(0, 0, 0, 4, gib(1));
+        n.role = Role::IfsServer;
+        assert_eq!(n.idle_cores(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "no idle core")]
+    fn overclaim_panics() {
+        let mut n = NodeState::new(0, 0, 0, 1, gib(1));
+        n.claim_core();
+        n.claim_core();
+    }
+
+    #[test]
+    #[should_panic(expected = "releasing idle core")]
+    fn overrelease_panics() {
+        let mut n = NodeState::new(0, 0, 0, 1, gib(1));
+        n.release_core();
+    }
+}

@@ -1,0 +1,231 @@
+//! Cluster topology: 3-D torus coordinates, CN→ION and CN→IFS mappings
+//! (Figure 8's allocation), and the binomial spanning-tree schedule used
+//! by the input distributor (Figure 13).
+//!
+//! Everything here is pure arithmetic — the bandwidth consequences are
+//! applied by [`crate::sim::cluster`] through the flow network.
+
+/// 3-D torus shape (BG/P midplane-style dimensions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Torus {
+    /// Dimension sizes.
+    pub dims: [u32; 3],
+}
+
+impl Torus {
+    /// Choose a roughly cubic torus that fits `nodes` nodes.
+    pub fn fitting(nodes: u32) -> Torus {
+        let mut dims = [1u32; 3];
+        let mut i = 0;
+        while dims[0] * dims[1] * dims[2] < nodes {
+            dims[i] *= 2;
+            i = (i + 1) % 3;
+        }
+        Torus { dims }
+    }
+
+    /// Total node slots.
+    pub fn capacity(&self) -> u32 {
+        self.dims[0] * self.dims[1] * self.dims[2]
+    }
+
+    /// Coordinates of node `id` (row-major).
+    pub fn coords(&self, id: u32) -> [u32; 3] {
+        assert!(id < self.capacity());
+        let x = id % self.dims[0];
+        let y = (id / self.dims[0]) % self.dims[1];
+        let z = id / (self.dims[0] * self.dims[1]);
+        [x, y, z]
+    }
+
+    /// Minimal hop distance between two nodes over the torus (per-axis
+    /// wraparound Manhattan distance).
+    pub fn hops(&self, a: u32, b: u32) -> u32 {
+        let ca = self.coords(a);
+        let cb = self.coords(b);
+        (0..3)
+            .map(|i| {
+                let d = ca[i].abs_diff(cb[i]);
+                d.min(self.dims[i] - d)
+            })
+            .sum()
+    }
+}
+
+/// Static CN→ION assignment: contiguous blocks of `cn_per_ion`.
+pub fn ion_of(node: u32, cn_per_ion: u32) -> u32 {
+    node / cn_per_ion
+}
+
+/// Static CN→IFS-group assignment: contiguous blocks of `cn_per_ifs`
+/// (Figure 8: each IFS serves a fixed slice of compute nodes).
+pub fn ifs_group_of(node: u32, cn_per_ifs: u32) -> u32 {
+    node / cn_per_ifs
+}
+
+/// One copy operation in a spanning-tree broadcast schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TreeCopy {
+    /// Round (level) in which this copy runs; copies in the same round are
+    /// concurrent.
+    pub round: u32,
+    /// Index (into the target list) of the node that already has the data.
+    pub src: u32,
+    /// Index of the node receiving the data.
+    pub dst: u32,
+}
+
+/// Binomial spanning-tree broadcast schedule over `n` destinations
+/// (destination 0 is the root and is assumed to already hold the data —
+/// on the BG/P the root is the first IFS server which pulled the file
+/// from GFS).
+///
+/// Round r doubles the number of holders: ceil(log2(n)) rounds and
+/// exactly n-1 copies — the `log(n) instead of n` transfer count the
+/// paper credits Chirp's `replicate` with.
+pub fn binomial_broadcast(n: u32) -> Vec<TreeCopy> {
+    let mut copies = Vec::new();
+    let mut holders = 1u32;
+    let mut round = 0u32;
+    while holders < n {
+        let senders = holders.min(n - holders);
+        for s in 0..senders {
+            copies.push(TreeCopy { round, src: s, dst: holders + s });
+        }
+        holders += senders;
+        round += 1;
+    }
+    copies
+}
+
+/// Flat (sequential-from-root) broadcast schedule: n-1 copies all from
+/// node 0, used as an ablation baseline against the binomial tree.
+pub fn flat_broadcast(n: u32) -> Vec<TreeCopy> {
+    (1..n).map(|dst| TreeCopy { round: dst - 1, src: 0, dst }).collect()
+}
+
+/// k-ary tree broadcast: each holder forwards to up to `k` new nodes per
+/// round (binomial is the k→doubling special case; ablation knob).
+pub fn kary_broadcast(n: u32, k: u32) -> Vec<TreeCopy> {
+    assert!(k >= 1);
+    let mut copies = Vec::new();
+    let mut holders = 1u32;
+    let mut round = 0u32;
+    while holders < n {
+        let new = (holders * k).min(n - holders);
+        for i in 0..new {
+            copies.push(TreeCopy { round, src: i % holders, dst: holders + i });
+        }
+        holders += new;
+        round += 1;
+    }
+    copies
+}
+
+/// Number of rounds in a schedule.
+pub fn rounds(copies: &[TreeCopy]) -> u32 {
+    copies.iter().map(|c| c.round + 1).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn torus_fits_and_coords_roundtrip() {
+        let t = Torus::fitting(40_960);
+        assert!(t.capacity() >= 40_960);
+        for id in [0u32, 1, 1000, 40_959] {
+            let c = t.coords(id);
+            let back = c[0] + c[1] * t.dims[0] + c[2] * t.dims[0] * t.dims[1];
+            assert_eq!(back, id);
+        }
+    }
+
+    #[test]
+    fn torus_distance_wraps() {
+        let t = Torus { dims: [8, 8, 8] };
+        assert_eq!(t.hops(0, 0), 0);
+        assert_eq!(t.hops(0, 7), 1, "wraparound along x");
+        assert_eq!(t.hops(0, 1), 1);
+        assert_eq!(t.hops(0, 4), 4, "opposite side of an 8-ring");
+        // Symmetric.
+        assert_eq!(t.hops(3, 100), t.hops(100, 3));
+    }
+
+    #[test]
+    fn static_mappings() {
+        assert_eq!(ion_of(0, 64), 0);
+        assert_eq!(ion_of(63, 64), 0);
+        assert_eq!(ion_of(64, 64), 1);
+        assert_eq!(ifs_group_of(511, 256), 1);
+    }
+
+    fn validate_schedule(n: u32, copies: &[TreeCopy]) {
+        // Exactly n-1 copies, every node except the root receives exactly
+        // once, and every sender already holds the data when it sends.
+        assert_eq!(copies.len() as u32, n.saturating_sub(1));
+        let mut holders: HashSet<u32> = HashSet::from([0]);
+        let mut last_round = 0;
+        for c in copies {
+            assert!(c.round >= last_round, "rounds must be non-decreasing");
+            last_round = c.round;
+        }
+        let nrounds = rounds(copies);
+        for r in 0..nrounds {
+            let this_round: Vec<_> = copies.iter().filter(|c| c.round == r).collect();
+            let mut busy: HashSet<u32> = HashSet::new();
+            for c in &this_round {
+                assert!(holders.contains(&c.src), "round {r}: src {} has no data", c.src);
+                assert!(!holders.contains(&c.dst), "round {r}: dst {} already has data", c.dst);
+                assert!(busy.insert(c.src), "round {r}: src {} sends twice", c.src);
+                assert!(busy.insert(c.dst), "round {r}: dst {} receives twice", c.dst);
+            }
+            for c in this_round {
+                holders.insert(c.dst);
+            }
+        }
+        assert_eq!(holders.len() as u32, n, "all nodes covered");
+    }
+
+    #[test]
+    fn binomial_is_valid_and_logarithmic() {
+        for n in [1u32, 2, 3, 7, 8, 64, 100, 4096] {
+            let s = binomial_broadcast(n);
+            validate_schedule(n, &s);
+            if n > 1 {
+                let expect = (n as f64).log2().ceil() as u32;
+                assert_eq!(rounds(&s), expect, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn flat_is_valid_but_linear() {
+        let s = flat_broadcast(64);
+        assert_eq!(s.len(), 63);
+        assert_eq!(rounds(&s), 63);
+        // Every copy originates at the root.
+        assert!(s.iter().all(|c| c.src == 0));
+    }
+
+    #[test]
+    fn kary_interpolates() {
+        for n in [2u32, 17, 64, 1000] {
+            for k in [1u32, 2, 4] {
+                let s = kary_broadcast(n, k);
+                assert_eq!(s.len() as u32, n - 1, "n={n} k={k}");
+            }
+        }
+        // k=1 is binomial (doubling): same round count.
+        assert_eq!(rounds(&kary_broadcast(4096, 1)), rounds(&binomial_broadcast(4096)));
+        // Larger k needs fewer or equal rounds.
+        assert!(rounds(&kary_broadcast(4096, 4)) <= rounds(&kary_broadcast(4096, 2)));
+    }
+
+    #[test]
+    fn binomial_beats_flat_in_rounds() {
+        assert!(rounds(&binomial_broadcast(4096)) < rounds(&flat_broadcast(4096)));
+    }
+}

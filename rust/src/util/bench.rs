@@ -1,0 +1,212 @@
+//! Criterion-like micro/macro benchmark harness (no `criterion` offline).
+//!
+//! The `rust/benches/*.rs` targets are `harness = false` binaries that use
+//! this module. Two kinds of measurement coexist:
+//!
+//! * **wall-clock benches** ([`Bencher::iter`]) for real hot paths (archive
+//!   writer, event queue, PJRT execute) — warmup, fixed-duration sampling,
+//!   mean/p50/p95 in ns/iter;
+//! * **figure benches** (the `figNN` targets) which *run the simulator* and
+//!   print paper-vs-measured tables; those use [`crate::util::table`]
+//!   directly and only use [`Bencher`] for their own runtime accounting.
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Configuration for a wall-clock measurement.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Warmup duration before sampling.
+    pub warmup: Duration,
+    /// Target sampling duration.
+    pub measure: Duration,
+    /// Maximum number of samples (batches).
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            max_samples: 200,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick config for CI / smoke runs (`CIO_BENCH_FAST=1`).
+    pub fn fast() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(100),
+            max_samples: 30,
+        }
+    }
+
+    /// Pick the default or the fast profile from the environment.
+    pub fn from_env() -> Self {
+        if std::env::var_os("CIO_BENCH_FAST").is_some() {
+            BenchConfig::fast()
+        } else {
+            BenchConfig::default()
+        }
+    }
+}
+
+/// One benchmark's result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark id.
+    pub name: String,
+    /// Per-iteration statistics, nanoseconds.
+    pub ns_per_iter: Summary,
+    /// Total iterations executed while sampling.
+    pub iters: u64,
+}
+
+impl BenchResult {
+    /// Throughput in iterations/second based on the mean.
+    pub fn iters_per_sec(&self) -> f64 {
+        1e9 / self.ns_per_iter.mean
+    }
+
+    /// Render a one-line report, criterion-style.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} {:>12.1} ns/iter (p50 {:>10.1}, p95 {:>10.1}, n={})",
+            self.name, self.ns_per_iter.mean, self.ns_per_iter.p50, self.ns_per_iter.p95, self.ns_per_iter.n
+        )
+    }
+}
+
+/// The harness: collects results, prints a summary.
+#[derive(Debug, Default)]
+pub struct Bencher {
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    /// Harness with config from the environment.
+    pub fn new() -> Self {
+        Bencher { config: BenchConfig::from_env(), results: Vec::new() }
+    }
+
+    /// Harness with an explicit config.
+    pub fn with_config(config: BenchConfig) -> Self {
+        Bencher { config, results: Vec::new() }
+    }
+
+    /// Measure `f`, batching iterations adaptively so that timer overhead
+    /// is amortized for nanosecond-scale bodies. Returns the result and
+    /// records it for [`Bencher::report`].
+    pub fn iter<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Estimate cost with a single call, choose batch size ~100us.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(1));
+        let batch = ((Duration::from_micros(100).as_nanos() / once.as_nanos()).max(1)) as u64;
+
+        // Warmup.
+        let warm_until = Instant::now() + self.config.warmup;
+        while Instant::now() < warm_until {
+            for _ in 0..batch {
+                f();
+            }
+        }
+
+        // Sample.
+        let mut samples = Vec::new();
+        let mut iters = 0u64;
+        let sample_until = Instant::now() + self.config.measure;
+        while Instant::now() < sample_until && samples.len() < self.config.max_samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let dt = t.elapsed();
+            samples.push(dt.as_nanos() as f64 / batch as f64);
+            iters += batch;
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            ns_per_iter: Summary::of(&samples).expect("at least one sample"),
+            iters,
+        };
+        println!("{}", result.line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Time a single long-running body (figure sims): one warmless sample.
+    pub fn once<T, F: FnOnce() -> T>(&mut self, name: &str, f: F) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed();
+        let result = BenchResult {
+            name: name.to_string(),
+            ns_per_iter: Summary::of(&[dt.as_nanos() as f64]).unwrap(),
+            iters: 1,
+        };
+        println!("{:<40} {:>10.3} s (single run)", name, dt.as_secs_f64());
+        self.results.push(result);
+        out
+    }
+
+    /// All recorded results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the final summary block.
+    pub fn report(&self) {
+        println!("\n--- bench summary ({} benchmarks) ---", self.results.len());
+        for r in &self.results {
+            println!("{}", r.line());
+        }
+    }
+}
+
+/// Prevent the optimizer from eliding a value (stable-rust black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_cheap_body() {
+        let mut b = Bencher::with_config(BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(20),
+            max_samples: 10,
+        });
+        let mut acc = 0u64;
+        let r = b.iter("noop-add", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.ns_per_iter.mean > 0.0);
+        assert!(r.iters > 0);
+        assert!(r.iters_per_sec() > 1000.0);
+    }
+
+    #[test]
+    fn once_returns_value() {
+        let mut b = Bencher::with_config(BenchConfig::fast());
+        let v = b.once("compute", || 21 * 2);
+        assert_eq!(v, 42);
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].iters, 1);
+    }
+
+    #[test]
+    fn fast_profile_from_env_flag() {
+        let cfg = BenchConfig::fast();
+        assert!(cfg.measure < BenchConfig::default().measure);
+    }
+}

@@ -1,0 +1,189 @@
+//! Minimal command-line parsing (the offline crate set has no `clap`).
+//!
+//! Supports the subset the `cio` binary and the bench harnesses need:
+//! subcommands, `--flag`, `--key value`, `--key=value`, positional
+//! arguments, and `--help` text generation.
+
+use std::collections::BTreeMap;
+
+/// A parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Binary name (argv[0]).
+    pub program: String,
+    /// First non-flag token, if the caller asked for subcommand parsing.
+    pub subcommand: Option<String>,
+    /// `--key value` / `--key=value` options (last occurrence wins).
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+    /// Positional arguments (after the subcommand).
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token = program name).
+    /// `with_subcommand` treats the first positional as a subcommand.
+    pub fn parse_from<I, S>(tokens: I, with_subcommand: bool) -> Args
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut it = tokens.into_iter().map(Into::into);
+        let program = it.next().unwrap_or_default();
+        let mut args = Args { program, ..Default::default() };
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let tok = &rest[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    args.options.insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    args.options.insert(body.to_string(), rest[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else if with_subcommand && args.subcommand.is_none() {
+                args.subcommand = Some(tok.clone());
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Parse the real process arguments.
+    pub fn parse(with_subcommand: bool) -> Args {
+        Args::parse_from(std::env::args(), with_subcommand)
+    }
+
+    /// Is `--name` present (as a flag or an option)?
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+
+    /// String option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    /// String option with default.
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option; panics with a readable message on a malformed value
+    /// (CLI surface — failing fast with context beats error plumbing).
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Option<T> {
+        self.get(name).map(|v| {
+            v.parse().unwrap_or_else(|_| panic!("--{name}: cannot parse {v:?} as {}", std::any::type_name::<T>()))
+        })
+    }
+
+    /// Typed option with default.
+    pub fn get_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.get_parse(name).unwrap_or(default)
+    }
+}
+
+/// Help-text builder so every binary prints consistent usage.
+pub struct Help {
+    name: &'static str,
+    about: &'static str,
+    lines: Vec<(String, &'static str)>,
+}
+
+impl Help {
+    /// Start a help description for `name`.
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Help { name, about, lines: Vec::new() }
+    }
+
+    /// Document one option/flag.
+    pub fn opt(mut self, spec: &str, desc: &'static str) -> Self {
+        self.lines.push((spec.to_string(), desc));
+        self
+    }
+
+    /// Render the help text.
+    pub fn render(&self) -> String {
+        let mut out = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        let width = self.lines.iter().map(|(s, _)| s.len()).max().unwrap_or(0);
+        for (spec, desc) in &self.lines {
+            out.push_str(&format!("  {spec:<width$}  {desc}\n"));
+        }
+        out
+    }
+
+    /// Print help and exit(0) if `--help` was passed.
+    pub fn maybe_exit(&self, args: &Args) {
+        if args.has("help") {
+            print!("{}", self.render());
+            std::process::exit(0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(line: &[&str], sub: bool) -> Args {
+        Args::parse_from(line.iter().copied(), sub)
+    }
+
+    #[test]
+    fn basic_options_and_flags() {
+        let a = parse(&["cio", "--nodes", "4096", "--verbose", "--ratio=64"], false);
+        assert_eq!(a.get("nodes"), Some("4096"));
+        assert_eq!(a.get("ratio"), Some("64"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse(&["cio", "bench", "fig14", "--procs", "32768"], true);
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.positional, vec!["fig14"]);
+        assert_eq!(a.get_parse::<u32>("procs"), Some(32768));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&["x"], false);
+        assert_eq!(a.get_parse_or("seed", 7u64), 7);
+        assert_eq!(a.get_or("out", "report.csv"), "report.csv");
+    }
+
+    #[test]
+    fn last_option_wins() {
+        let a = parse(&["x", "--n", "1", "--n", "2"], false);
+        assert_eq!(a.get("n"), Some("2"));
+    }
+
+    #[test]
+    fn flag_before_end() {
+        let a = parse(&["x", "--dry-run", "--n", "5"], false);
+        assert!(a.has("dry-run"));
+        assert_eq!(a.get("n"), Some("5"));
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn malformed_typed_value_panics() {
+        let a = parse(&["x", "--n", "abc"], false);
+        let _: Option<u32> = a.get_parse("n");
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = Help::new("cio", "collective IO").opt("--nodes N", "processor count");
+        let text = h.render();
+        assert!(text.contains("cio — collective IO"));
+        assert!(text.contains("--nodes N"));
+    }
+}

@@ -1,0 +1,95 @@
+//! Minimal `log`-facade backend (env-filtered stderr logger).
+//!
+//! `CIO_LOG=debug` (or `error|warn|info|debug|trace`) selects the level;
+//! default is `info`. Kept deliberately tiny — structured logging is not
+//! needed, but the facade lets library modules use `log::debug!` without
+//! caring who listens.
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger;
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let tag = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(err, "[{tag}] {}: {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {
+        let _ = std::io::stderr().flush();
+    }
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+/// Parse a level name; `None` for unknown names.
+pub fn parse_level(s: &str) -> Option<LevelFilter> {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => Some(LevelFilter::Off),
+        "error" => Some(LevelFilter::Error),
+        "warn" | "warning" => Some(LevelFilter::Warn),
+        "info" => Some(LevelFilter::Info),
+        "debug" => Some(LevelFilter::Debug),
+        "trace" => Some(LevelFilter::Trace),
+        _ => None,
+    }
+}
+
+/// Install the logger once; later calls only adjust the level.
+pub fn init() {
+    let level = std::env::var("CIO_LOG")
+        .ok()
+        .and_then(|v| parse_level(&v))
+        .unwrap_or(LevelFilter::Info);
+    init_with(level);
+}
+
+/// Install with an explicit level (used by tests and the CLI `--verbose`).
+pub fn init_with(level: LevelFilter) {
+    if !INSTALLED.swap(true, Ordering::SeqCst) {
+        // set_logger can only fail if a logger is already set; INSTALLED
+        // guards that, but a race with an external logger is harmless.
+        let _ = log::set_logger(&LOGGER);
+    }
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(parse_level("debug"), Some(LevelFilter::Debug));
+        assert_eq!(parse_level("WARN"), Some(LevelFilter::Warn));
+        assert_eq!(parse_level("warning"), Some(LevelFilter::Warn));
+        assert_eq!(parse_level("off"), Some(LevelFilter::Off));
+        assert_eq!(parse_level("nope"), None);
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        init_with(LevelFilter::Info);
+        init_with(LevelFilter::Debug);
+        assert_eq!(log::max_level(), LevelFilter::Debug);
+        log::debug!("logger smoke test");
+    }
+}

@@ -1,0 +1,17 @@
+//! Substrate utilities built in-crate because the build is fully offline:
+//! deterministic PRNG ([`rng`]), size/bandwidth/time units ([`units`]),
+//! descriptive statistics ([`stats`]), a TOML-subset parser ([`toml`]), a
+//! command-line parser ([`cli`]), a criterion-like bench harness
+//! ([`bench`]), a proptest-like property testing mini-framework
+//! ([`quick`]), a `log`-facade backend ([`logging`]), and ASCII table
+//! rendering ([`table`]).
+
+pub mod bench;
+pub mod cli;
+pub mod logging;
+pub mod quick;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod toml;
+pub mod units;

@@ -1,0 +1,313 @@
+//! Property-based testing mini-framework (no `proptest` offline).
+//!
+//! Usage shape mirrors quickcheck: a generator produces random inputs from
+//! a seeded [`Rng`], the property runs for `cases` iterations, and on
+//! failure the framework greedily *shrinks* the input (via
+//! [`Shrink::shrink`]) and reports the minimal counterexample together
+//! with the seed so the run can be replayed (`CIO_QUICK_SEED=<n>`).
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries miss the xla_extension rpath that
+//! # // normal test binaries get from .cargo/config rustflags.
+//! use cio::util::quick::{forall, Gen};
+//! forall("reverse twice is identity", 200, Gen::vec(Gen::u64(0..1000), 0..50), |xs| {
+//!     let mut twice = xs.clone();
+//!     twice.reverse();
+//!     twice.reverse();
+//!     twice == *xs
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+use std::fmt::Debug;
+use std::ops::Range;
+
+/// A generator of values of type `T` plus its shrinking strategy.
+pub struct Gen<T> {
+    gen: Box<dyn Fn(&mut Rng) -> T>,
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: 'static> Gen<T> {
+    /// Build a generator from closures.
+    pub fn new(
+        gen: impl Fn(&mut Rng) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Gen<T> {
+        Gen { gen: Box::new(gen), shrink: Box::new(shrink) }
+    }
+
+    /// Generate one value.
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.gen)(rng)
+    }
+
+    /// Candidate shrinks of a value (smaller-first).
+    pub fn shrinks(&self, v: &T) -> Vec<T> {
+        (self.shrink)(v)
+    }
+
+    /// Map a generator through a bijection-ish function (no shrinking
+    /// through the map; shrink candidates are regenerated via `unmap`).
+    pub fn map<U: 'static>(
+        self,
+        f: impl Fn(T) -> U + Clone + 'static,
+        unf: impl Fn(&U) -> T + 'static,
+    ) -> Gen<U> {
+        let f2 = f.clone();
+        Gen::new(
+            move |rng| f((self.gen)(rng)),
+            move |u| (self.shrink)(&unf(u)).into_iter().map(&f2).collect(),
+        )
+    }
+}
+
+impl Gen<u64> {
+    /// Uniform u64 in a half-open range, shrinking toward the low bound.
+    pub fn u64(range: Range<u64>) -> Gen<u64> {
+        let lo = range.start;
+        let hi = range.end;
+        Gen::new(
+            move |rng| rng.range(lo, hi),
+            move |&v| {
+                let mut out = Vec::new();
+                if v > lo {
+                    out.push(lo);
+                    let mid = lo + (v - lo) / 2;
+                    if mid != lo && mid != v {
+                        out.push(mid);
+                    }
+                    if v - 1 != lo {
+                        out.push(v - 1);
+                    }
+                }
+                out
+            },
+        )
+    }
+}
+
+impl Gen<usize> {
+    /// Uniform usize, shrinking toward the low bound.
+    pub fn usize(range: Range<usize>) -> Gen<usize> {
+        Gen::<u64>::u64(range.start as u64..range.end as u64)
+            .map(|v| v as usize, |u| *u as u64)
+    }
+}
+
+impl Gen<f64> {
+    /// Uniform f64 in a range, shrinking toward the low bound / zero.
+    pub fn f64(range: Range<f64>) -> Gen<f64> {
+        let lo = range.start;
+        let hi = range.end;
+        Gen::new(
+            move |rng| rng.f64_range(lo, hi),
+            move |&v| {
+                let mut out = Vec::new();
+                if v != lo {
+                    out.push(lo);
+                    out.push(lo + (v - lo) / 2.0);
+                }
+                out
+            },
+        )
+    }
+}
+
+impl Gen<bool> {
+    /// Fair coin; shrinks toward `false`.
+    pub fn bool() -> Gen<bool> {
+        Gen::new(|rng| rng.chance(0.5), |&v| if v { vec![false] } else { vec![] })
+    }
+}
+
+impl<T: Clone + 'static> Gen<Vec<T>> {
+    /// Vector with length drawn from `len` and elements from `elem`.
+    /// Shrinks by halving the vector, dropping one element, and shrinking
+    /// a single element.
+    pub fn vec(elem: Gen<T>, len: Range<usize>) -> Gen<Vec<T>> {
+        let elem = std::rc::Rc::new(elem);
+        let e1 = elem.clone();
+        let lo = len.start;
+        let hi = len.end;
+        Gen::new(
+            move |rng| {
+                let n = rng.range(lo as u64, hi.max(lo + 1) as u64) as usize;
+                (0..n).map(|_| e1.sample(rng)).collect()
+            },
+            move |v: &Vec<T>| {
+                let mut out = Vec::new();
+                if v.len() > lo {
+                    // Halve.
+                    out.push(v[..lo.max(v.len() / 2)].to_vec());
+                    // Drop last.
+                    out.push(v[..v.len() - 1].to_vec());
+                }
+                // Shrink each element in place (first few positions only, to
+                // bound the candidate count).
+                for i in 0..v.len().min(8) {
+                    for cand in elem.shrinks(&v[i]) {
+                        let mut w = v.clone();
+                        w[i] = cand;
+                        out.push(w);
+                    }
+                }
+                out
+            },
+        )
+    }
+}
+
+/// Pair generator.
+pub fn pair<A: Clone + 'static, B: Clone + 'static>(a: Gen<A>, b: Gen<B>) -> Gen<(A, B)> {
+    let a = std::rc::Rc::new(a);
+    let b = std::rc::Rc::new(b);
+    let (a2, b2) = (a.clone(), b.clone());
+    Gen::new(
+        move |rng| (a.sample(rng), b.sample(rng)),
+        move |(x, y)| {
+            let mut out: Vec<(A, B)> =
+                a2.shrinks(x).into_iter().map(|x2| (x2, y.clone())).collect();
+            out.extend(b2.shrinks(y).into_iter().map(|y2| (x.clone(), y2)));
+            out
+        },
+    )
+}
+
+/// Result of a property run (returned for inspection; panics on failure by
+/// default via [`forall`]).
+#[derive(Debug)]
+pub enum Outcome<T> {
+    /// All cases passed.
+    Pass {
+        /// Number of cases executed.
+        cases: usize,
+    },
+    /// A counterexample was found (after shrinking).
+    Fail {
+        /// Minimal failing input found.
+        minimal: T,
+        /// Number of shrink steps applied.
+        shrunk_steps: usize,
+        /// Seed to replay.
+        seed: u64,
+    },
+}
+
+/// Run a property; panic with the minimal counterexample on failure.
+pub fn forall<T: Clone + Debug + 'static>(
+    name: &str,
+    cases: usize,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    match check(cases, &gen, &prop) {
+        Outcome::Pass { .. } => {}
+        Outcome::Fail { minimal, shrunk_steps, seed } => {
+            panic!(
+                "property {name:?} failed.\n  minimal counterexample (after {shrunk_steps} shrinks): {minimal:?}\n  replay with CIO_QUICK_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Run a property and return the outcome (no panic).
+pub fn check<T: Clone + Debug + 'static>(
+    cases: usize,
+    gen: &Gen<T>,
+    prop: &impl Fn(&T) -> bool,
+) -> Outcome<T> {
+    let seed = std::env::var("CIO_QUICK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC10_5EED);
+    let mut rng = Rng::new(seed);
+    for _ in 0..cases {
+        let input = gen.sample(&mut rng);
+        if !prop(&input) {
+            let (minimal, steps) = shrink_loop(gen, input, prop);
+            return Outcome::Fail { minimal, shrunk_steps: steps, seed };
+        }
+    }
+    Outcome::Pass { cases }
+}
+
+/// Greedy shrink: repeatedly take the first failing shrink candidate.
+fn shrink_loop<T: Clone + Debug + 'static>(
+    gen: &Gen<T>,
+    mut failing: T,
+    prop: &impl Fn(&T) -> bool,
+) -> (T, usize) {
+    let mut steps = 0;
+    'outer: for _ in 0..1000 {
+        for cand in gen.shrinks(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                steps += 1;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (failing, steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("addition commutes", 100, pair(Gen::u64(0..1000), Gen::u64(0..1000)), |(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        // Fails for v >= 50; minimal counterexample should be exactly 50.
+        let out = check(500, &Gen::u64(0..1000), &|&v| v < 50);
+        match out {
+            Outcome::Fail { minimal, .. } => assert_eq!(minimal, 50),
+            Outcome::Pass { .. } => panic!("property should have failed"),
+        }
+    }
+
+    #[test]
+    fn vec_shrinks_toward_small() {
+        // Fails when the vec contains an element >= 10; the minimal failing
+        // vector should be short with a minimal offending element.
+        let gen = Gen::vec(Gen::u64(0..100), 0..20);
+        let out = check(500, &gen, &|xs: &Vec<u64>| xs.iter().all(|&x| x < 10));
+        match out {
+            Outcome::Fail { minimal, .. } => {
+                assert!(!minimal.is_empty());
+                assert!(minimal.len() <= 2, "minimal vec too long: {minimal:?}");
+                assert!(minimal.iter().any(|&x| x >= 10));
+            }
+            Outcome::Pass { .. } => panic!("property should have failed"),
+        }
+    }
+
+    #[test]
+    fn bool_shrinks_to_false() {
+        assert_eq!(Gen::bool().shrinks(&true), vec![false]);
+        assert!(Gen::bool().shrinks(&false).is_empty());
+    }
+
+    #[test]
+    fn f64_generator_in_range() {
+        let gen = Gen::f64(1.0..2.0);
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let v = gen.sample(&mut rng);
+            assert!((1.0..2.0).contains(&v));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn forall_panics_with_context() {
+        forall("always fails", 10, Gen::u64(0..10), |_| false);
+    }
+}

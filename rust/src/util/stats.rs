@@ -1,0 +1,245 @@
+//! Descriptive statistics for bench reporting and metric aggregation.
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    /// Number of observations.
+    pub n: usize,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Sample standard deviation (n-1 denominator; 0 for n < 2).
+    pub stddev: f64,
+    /// Minimum.
+    pub min: f64,
+    /// Maximum.
+    pub max: f64,
+    /// Median (p50).
+    pub p50: f64,
+    /// 95th percentile.
+    pub p95: f64,
+    /// 99th percentile.
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns `None` on an empty sample.
+    pub fn of(xs: &[f64]) -> Option<Summary> {
+        if xs.is_empty() {
+            return None;
+        }
+        let mut sorted: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+        if sorted.is_empty() {
+            return None;
+        }
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            sorted.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Some(Summary {
+            n,
+            mean,
+            stddev: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p95: percentile_sorted(&sorted, 0.95),
+            p99: percentile_sorted(&sorted, 0.99),
+        })
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted sample, `q` in `[0,1]`.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Online mean/variance accumulator (Welford). Used by the simulator's
+/// metric counters where storing every observation would be wasteful.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    /// Fresh accumulator.
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Fold in one observation.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Count of observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Running mean (0 if empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.mean }
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { (self.m2 / (self.n - 1) as f64).sqrt() }
+    }
+
+    /// Minimum (NaN if empty).
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.min }
+    }
+
+    /// Maximum (NaN if empty).
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.max }
+    }
+
+    /// Sum of all observations.
+    pub fn sum(&self) -> f64 {
+        self.mean() * self.n as f64
+    }
+}
+
+/// Fixed-bucket histogram on a log2 scale; used for latency distributions
+/// in the collector and dispatcher metrics.
+#[derive(Debug, Clone)]
+pub struct Log2Histogram {
+    buckets: Vec<u64>,
+    /// Value (in the same unit as `push`) of the first bucket's upper edge.
+    base: f64,
+}
+
+impl Log2Histogram {
+    /// `base` is the upper edge of bucket 0; bucket i covers
+    /// `(base * 2^(i-1), base * 2^i]`.
+    pub fn new(base: f64, nbuckets: usize) -> Self {
+        assert!(base > 0.0 && nbuckets > 0);
+        Self { buckets: vec![0; nbuckets], base }
+    }
+
+    /// Record one value.
+    pub fn push(&mut self, x: f64) {
+        let idx = if x <= self.base {
+            0
+        } else {
+            ((x / self.base).log2().ceil() as usize).min(self.buckets.len() - 1)
+        };
+        self.buckets[idx] += 1;
+    }
+
+    /// Bucket counts.
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Total observations.
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Approximate quantile from the histogram (upper edge of the bucket
+    /// containing the q-th observation).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.base * 2f64.powi(i as i32);
+            }
+        }
+        self.base * 2f64.powi(self.buckets.len() as i32 - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.stddev - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn summary_empty_and_nan() {
+        assert!(Summary::of(&[]).is_none());
+        assert!(Summary::of(&[f64::NAN]).is_none());
+        // NaNs filtered, finite values kept.
+        let s = Summary::of(&[f64::NAN, 2.0]).unwrap();
+        assert_eq!(s.n, 1);
+        assert_eq!(s.mean, 2.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile_sorted(&xs, 0.0), 10.0);
+        assert_eq!(percentile_sorted(&xs, 1.0), 40.0);
+        assert!((percentile_sorted(&xs, 0.5) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64 * 0.7).collect();
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let s = Summary::of(&xs).unwrap();
+        assert!((w.mean() - s.mean).abs() < 1e-9);
+        assert!((w.stddev() - s.stddev).abs() < 1e-9);
+        assert_eq!(w.min(), s.min);
+        assert_eq!(w.max(), s.max);
+        assert_eq!(w.count(), 100);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantile() {
+        let mut h = Log2Histogram::new(1.0, 10);
+        for x in [0.5, 1.0, 2.0, 3.0, 4.0, 100.0] {
+            h.push(x);
+        }
+        assert_eq!(h.total(), 6);
+        assert_eq!(h.buckets()[0], 2); // 0.5, 1.0
+        assert_eq!(h.buckets()[1], 1); // 2.0
+        assert_eq!(h.buckets()[2], 2); // 3.0, 4.0
+        assert_eq!(h.buckets()[7], 1); // 100 -> 128
+        assert!(h.quantile(0.5) <= 4.0);
+        assert!(h.quantile(1.0) >= 100.0);
+    }
+}

@@ -1,0 +1,205 @@
+//! ASCII table rendering for bench output and CLI reports.
+//!
+//! Every figure bench prints a table shaped like the paper's plot series so
+//! EXPERIMENTS.md can record paper-vs-measured line by line.
+
+use std::fmt::Write as _;
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    /// Left-justify (labels).
+    Left,
+    /// Right-justify (numbers).
+    Right,
+}
+
+/// A simple table builder.
+#[derive(Debug, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    align: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    /// New table with the given column headers; numeric-looking columns can
+    /// have their alignment set with [`Table::aligns`].
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        let header: Vec<String> = header.into_iter().map(Into::into).collect();
+        let align = std::iter::once(Align::Left)
+            .chain(std::iter::repeat(Align::Right))
+            .take(header.len())
+            .collect();
+        Table { header, align, rows: Vec::new(), title: None }
+    }
+
+    /// Set a title printed above the table.
+    pub fn title<S: Into<String>>(mut self, t: S) -> Self {
+        self.title = Some(t.into());
+        self
+    }
+
+    /// Override per-column alignment.
+    pub fn aligns(mut self, align: Vec<Align>) -> Self {
+        assert_eq!(align.len(), self.header.len());
+        self.align = align;
+        self
+    }
+
+    /// Append one row (must match the header width).
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if no rows were added.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            let _ = writeln!(out, "== {t} ==");
+        }
+        let rule: String = {
+            let mut r = String::from("+");
+            for w in &widths {
+                r.push_str(&"-".repeat(w + 2));
+                r.push('+');
+            }
+            r
+        };
+        let fmt_row = |cells: &[String], out: &mut String| {
+            out.push('|');
+            for i in 0..ncols {
+                let cell = &cells[i];
+                match self.align[i] {
+                    Align::Left => {
+                        let _ = write!(out, " {cell:<w$} |", w = widths[i]);
+                    }
+                    Align::Right => {
+                        let _ = write!(out, " {cell:>w$} |", w = widths[i]);
+                    }
+                }
+            }
+            out.push('\n');
+        };
+        let _ = writeln!(out, "{rule}");
+        fmt_row(&self.header, &mut out);
+        let _ = writeln!(out, "{rule}");
+        for row in &self.rows {
+            fmt_row(row, &mut out);
+        }
+        let _ = writeln!(out, "{rule}");
+        out
+    }
+
+    /// Render as CSV (header + rows); used by `--csv` bench flags so the
+    /// figure series can be diffed / plotted outside.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format an f64 with engineering-friendly precision for table cells.
+pub fn num(x: f64) -> String {
+    if !x.is_finite() {
+        return format!("{x}");
+    }
+    let a = x.abs();
+    if a >= 1000.0 {
+        format!("{x:.0}")
+    } else if a >= 10.0 {
+        format!("{x:.1}")
+    } else if a >= 0.01 || a == 0.0 {
+        format!("{x:.3}")
+    } else {
+        format!("{x:.2e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(vec!["series", "MB/s"]);
+        t.row(vec!["GPFS", "250"]);
+        t.row(vec!["CIO", "2100"]);
+        let s = t.render();
+        assert!(s.contains("| series | MB/s |"));
+        assert!(s.contains("| GPFS   |  250 |"));
+        assert!(s.contains("| CIO    | 2100 |"));
+    }
+
+    #[test]
+    fn title_and_counts() {
+        let mut t = Table::new(vec!["a"]).title("Fig 16");
+        assert!(t.is_empty());
+        t.row(vec!["1"]);
+        assert_eq!(t.len(), 1);
+        assert!(t.render().starts_with("== Fig 16 =="));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn mismatched_row_panics() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new(vec!["k", "v"]);
+        t.row(vec!["a,b", "say \"hi\""]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "k,v\n\"a,b\",\"say \"\"hi\"\"\"\n");
+    }
+
+    #[test]
+    fn num_formats() {
+        assert_eq!(num(2100.4), "2100");
+        assert_eq!(num(83.25), "83.2");
+        assert_eq!(num(2.5), "2.500");
+        assert_eq!(num(0.00042), "4.20e-4");
+        assert_eq!(num(0.0), "0.000");
+    }
+}

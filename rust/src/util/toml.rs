@@ -1,0 +1,396 @@
+//! TOML-subset parser for the `configs/` files (no `serde`/`toml` crates
+//! offline).
+//!
+//! Supported: `[table]` and `[table.sub]` headers, `key = value` with
+//! string / integer / float / boolean / homogeneous-array values, `#`
+//! comments, and bare or quoted keys. Unsupported (and rejected loudly):
+//! inline tables, arrays of tables, multi-line strings, datetimes — the
+//! config schema in [`crate::config`] needs none of them.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Integer (i64).
+    Int(i64),
+    /// Float (f64).
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Homogeneous array.
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// As string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    /// As integer (floats with zero fraction are not coerced).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// As float (integers coerce).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    /// As array slice.
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line context.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct ParseError {
+    /// 1-based line number.
+    pub line: usize,
+    /// Description.
+    pub msg: String,
+}
+
+/// A parsed document: dotted-path key → value.
+///
+/// Keys are flattened: `[net]` + `torus_mbps = 425` becomes
+/// `"net.torus_mbps"`. This keeps lookup trivial for the typed config
+/// layer.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Document {
+    map: BTreeMap<String, Value>,
+}
+
+impl Document {
+    /// Parse a document from text.
+    pub fn parse(text: &str) -> Result<Document, ParseError> {
+        let mut doc = Document::default();
+        let mut prefix = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(body) = line.strip_prefix('[') {
+                if line.starts_with("[[") {
+                    return Err(err(lineno, "arrays of tables are not supported"));
+                }
+                let body = body
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated table header"))?
+                    .trim();
+                if body.is_empty() {
+                    return Err(err(lineno, "empty table header"));
+                }
+                prefix = body.to_string();
+            } else if let Some(eq) = find_top_level_eq(line) {
+                let key = line[..eq].trim();
+                let valtext = line[eq + 1..].trim();
+                if key.is_empty() {
+                    return Err(err(lineno, "empty key"));
+                }
+                let key = unquote_key(key);
+                let value = parse_value(valtext, lineno)?;
+                let full = if prefix.is_empty() { key } else { format!("{prefix}.{key}") };
+                if doc.map.insert(full.clone(), value).is_some() {
+                    return Err(err(lineno, &format!("duplicate key {full:?}")));
+                }
+            } else {
+                return Err(err(lineno, &format!("expected `key = value`, got {line:?}")));
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Document> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Ok(Document::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?)
+    }
+
+    /// Raw lookup by dotted path.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    /// Typed lookups (None if missing; Err-free by design — the config
+    /// layer validates types with context).
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+    /// Integer lookup.
+    pub fn int(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(Value::as_int)
+    }
+    /// Float lookup (coerces ints).
+    pub fn float(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_float)
+    }
+    /// Bool lookup.
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+    /// Array lookup.
+    pub fn array(&self, key: &str) -> Option<&[Value]> {
+        self.get(key).and_then(Value::as_array)
+    }
+
+    /// All keys under a dotted prefix (for table iteration).
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let want = format!("{prefix}.");
+        self.map.keys().filter_map(move |k| k.strip_prefix(&want))
+    }
+
+    /// Number of keys.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when no keys were parsed.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+impl fmt::Display for Document {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (k, v) in &self.map {
+            writeln!(f, "{k} = {v:?}")?;
+        }
+        Ok(())
+    }
+}
+
+fn err(line: usize, msg: &str) -> ParseError {
+    ParseError { line, msg: msg.to_string() }
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Find the `=` separating key from value, respecting quoted keys.
+fn find_top_level_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn unquote_key(key: &str) -> String {
+    key.trim_matches('"').to_string()
+}
+
+fn parse_value(text: &str, line: usize) -> Result<Value, ParseError> {
+    let t = text.trim();
+    if t.is_empty() {
+        return Err(err(line, "missing value"));
+    }
+    if let Some(body) = t.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or_else(|| err(line, "unterminated string"))?;
+        return Ok(Value::Str(unescape(body, line)?));
+    }
+    if t.starts_with('[') {
+        let inner = t
+            .strip_prefix('[')
+            .and_then(|s| s.strip_suffix(']'))
+            .ok_or_else(|| err(line, "unterminated array"))?;
+        let mut items = Vec::new();
+        for part in split_array(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part, line)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if t.starts_with('{') {
+        return Err(err(line, "inline tables are not supported"));
+    }
+    match t {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let clean = t.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(line, &format!("cannot parse value {t:?}")))
+}
+
+fn unescape(s: &str, line: usize) -> Result<String, ParseError> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('\\') => out.push('\\'),
+                Some('"') => out.push('"'),
+                other => return Err(err(line, &format!("bad escape \\{other:?}"))),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Ok(out)
+}
+
+/// Split a (single-line) array body on commas outside quotes/brackets.
+fn split_array(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_typical_config() {
+        let doc = Document::parse(
+            r#"
+            # BG/P Intrepid
+            name = "bgp"
+            [net]
+            torus_mbps = 425
+            tree_mbps = 850.0
+            use_torus = true
+            [gfs]
+            servers = 24
+            rates = [1, 2, 3]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str("name"), Some("bgp"));
+        assert_eq!(doc.int("net.torus_mbps"), Some(425));
+        assert_eq!(doc.float("net.tree_mbps"), Some(850.0));
+        assert_eq!(doc.float("net.torus_mbps"), Some(425.0), "int coerces to float");
+        assert_eq!(doc.bool("net.use_torus"), Some(true));
+        assert_eq!(doc.int("gfs.servers"), Some(24));
+        let arr = doc.array("gfs.rates").unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_int(), Some(3));
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let doc = Document::parse("key = \"a#b\" # trailing\n").unwrap();
+        assert_eq!(doc.str("key"), Some("a#b"));
+    }
+
+    #[test]
+    fn escapes() {
+        let doc = Document::parse(r#"k = "a\nb\t\"q\"""#).unwrap();
+        assert_eq!(doc.str("k"), Some("a\nb\t\"q\""));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = Document::parse("n = 163_840").unwrap();
+        assert_eq!(doc.int("n"), Some(163_840));
+    }
+
+    #[test]
+    fn nested_tables_flatten() {
+        let doc = Document::parse("[a.b]\nc = 1\n").unwrap();
+        assert_eq!(doc.int("a.b.c"), Some(1));
+        assert_eq!(doc.keys_under("a.b").collect::<Vec<_>>(), vec!["c"]);
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        let e = Document::parse("a = 1\na = 2\n").unwrap_err();
+        assert!(e.msg.contains("duplicate"));
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn unsupported_constructs_rejected() {
+        assert!(Document::parse("[[t]]\n").is_err());
+        assert!(Document::parse("a = {x = 1}\n").is_err());
+        assert!(Document::parse("a = 1992-01-01\n").is_err());
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(Document::parse("just words\n").is_err());
+        assert!(Document::parse("a = \"unterminated\n").is_err());
+        assert!(Document::parse("[unclosed\n").is_err());
+        assert!(Document::parse("a =\n").is_err());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = Document::parse("a = [[1, 2], [3]]").unwrap();
+        let outer = doc.array("a").unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[0].as_array().unwrap()[1].as_int(), Some(2));
+    }
+
+    #[test]
+    fn empty_doc() {
+        let doc = Document::parse("\n# only a comment\n").unwrap();
+        assert!(doc.is_empty());
+    }
+}

@@ -1,0 +1,238 @@
+//! Size, bandwidth and simulated-time units.
+//!
+//! The simulator works in integer nanoseconds and integer bytes; bandwidths
+//! are f64 bytes/second. Helpers here keep unit conversions explicit (the
+//! paper mixes MB/s, Gb/s and GB/s, which is exactly how unit bugs happen).
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// Bytes, with constructors for the paper's units.
+pub const KIB: u64 = 1 << 10;
+/// 2^20 bytes.
+pub const MIB: u64 = 1 << 20;
+/// 2^30 bytes.
+pub const GIB: u64 = 1 << 30;
+
+/// Construct a byte count from KiB.
+pub const fn kib(n: u64) -> u64 {
+    n * KIB
+}
+/// Construct a byte count from MiB.
+pub const fn mib(n: u64) -> u64 {
+    n * MIB
+}
+/// Construct a byte count from GiB.
+pub const fn gib(n: u64) -> u64 {
+    n * GIB
+}
+
+/// Bandwidth in bytes/second from MB/s (decimal-ish; the paper quotes
+/// MB/s = 2^20 B/s for file systems, we follow MiB/s consistently).
+pub const fn mbps(n: u64) -> f64 {
+    (n * MIB) as f64
+}
+
+/// Bandwidth in bytes/second from GB/s.
+pub const fn gbps(n: f64) -> f64 {
+    n * GIB as f64
+}
+
+/// Simulated time: integer nanoseconds since simulation start.
+///
+/// A newtype (not `std::time::Duration`) because simulated instants are
+/// ordered keys in the event queue and arithmetic must be explicit,
+/// overflow-checked, and `Copy`.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    /// t = 0, the simulation epoch.
+    pub const ZERO: SimTime = SimTime(0);
+    /// Sentinel for "never".
+    pub const NEVER: SimTime = SimTime(u64::MAX);
+
+    /// From whole seconds.
+    pub fn from_secs(s: u64) -> Self {
+        SimTime(s * 1_000_000_000)
+    }
+
+    /// From fractional seconds (rounds to the nearest nanosecond).
+    pub fn from_secs_f64(s: f64) -> Self {
+        assert!(s >= 0.0 && s.is_finite(), "negative or non-finite SimTime: {s}");
+        SimTime((s * 1e9).round() as u64)
+    }
+
+    /// From milliseconds.
+    pub fn from_millis(ms: u64) -> Self {
+        SimTime(ms * 1_000_000)
+    }
+
+    /// From microseconds.
+    pub fn from_micros(us: u64) -> Self {
+        SimTime(us * 1_000)
+    }
+
+    /// As fractional seconds.
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    /// Saturating difference.
+    pub fn saturating_sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+
+    /// Time to move `bytes` at `bw` bytes/sec (rounds up to ≥1 ns so a
+    /// transfer never completes at the instant it starts).
+    pub fn transfer(bytes: u64, bw: f64) -> SimTime {
+        assert!(bw > 0.0, "transfer at non-positive bandwidth");
+        SimTime(((bytes as f64 / bw) * 1e9).ceil().max(1.0) as u64)
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.checked_add(rhs.0).expect("SimTime overflow"))
+    }
+}
+
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        *self = *self + rhs;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.checked_sub(rhs.0).expect("SimTime underflow"))
+    }
+}
+
+impl fmt::Debug for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}s", self.as_secs_f64())
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.as_secs_f64();
+        if s < 1e-6 {
+            write!(f, "{:.0}ns", self.0)
+        } else if s < 1e-3 {
+            write!(f, "{:.1}us", self.0 as f64 / 1e3)
+        } else if s < 1.0 {
+            write!(f, "{:.1}ms", self.0 as f64 / 1e6)
+        } else {
+            write!(f, "{s:.2}s")
+        }
+    }
+}
+
+/// Human-readable byte count ("1.5 MiB").
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= GIB {
+        format!("{:.1} GiB", b as f64 / GIB as f64)
+    } else if b >= MIB {
+        format!("{:.1} MiB", b as f64 / MIB as f64)
+    } else if b >= KIB {
+        format!("{:.1} KiB", b as f64 / KIB as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Human-readable bandwidth ("831.0 MB/s").
+pub fn fmt_bw(bytes_per_sec: f64) -> String {
+    let m = bytes_per_sec / MIB as f64;
+    if m >= 1024.0 {
+        format!("{:.2} GB/s", m / 1024.0)
+    } else if m >= 1.0 {
+        format!("{m:.1} MB/s")
+    } else {
+        format!("{:.1} KB/s", bytes_per_sec / KIB as f64)
+    }
+}
+
+/// Parse a size string like "100MB", "4KB", "2GiB", "512" (bytes).
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let split = s.find(|c: char| !c.is_ascii_digit() && c != '.')?;
+    let (num, unit) = s.split_at(split);
+    let num: f64 = num.parse().ok()?;
+    let mult = match unit.trim().to_ascii_lowercase().as_str() {
+        "b" => 1,
+        "k" | "kb" | "kib" => KIB,
+        "m" | "mb" | "mib" => MIB,
+        "g" | "gb" | "gib" => GIB,
+        "t" | "tb" | "tib" => GIB * 1024,
+        _ => return None,
+    };
+    Some((num * mult as f64).round() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        assert_eq!(kib(4), 4096);
+        assert_eq!(mib(1), 1 << 20);
+        assert_eq!(gib(2), 2 << 30);
+        assert_eq!(mbps(100), 100.0 * (1 << 20) as f64);
+    }
+
+    #[test]
+    fn simtime_roundtrip() {
+        let t = SimTime::from_secs_f64(1.5);
+        assert_eq!(t.0, 1_500_000_000);
+        assert!((t.as_secs_f64() - 1.5).abs() < 1e-12);
+        assert_eq!(SimTime::from_millis(2500), SimTime::from_secs_f64(2.5));
+    }
+
+    #[test]
+    fn simtime_arithmetic() {
+        let a = SimTime::from_secs(2);
+        let b = SimTime::from_secs(3);
+        assert_eq!(a + b, SimTime::from_secs(5));
+        assert_eq!(b - a, SimTime::from_secs(1));
+        assert_eq!(a.saturating_sub(b), SimTime::ZERO);
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn simtime_underflow_panics() {
+        let _ = SimTime::from_secs(1) - SimTime::from_secs(2);
+    }
+
+    #[test]
+    fn transfer_time() {
+        // 100 MiB at 100 MiB/s = 1 s.
+        let t = SimTime::transfer(mib(100), mbps(100));
+        assert_eq!(t, SimTime::from_secs(1));
+        // Zero bytes still takes 1 ns (events must advance time).
+        assert_eq!(SimTime::transfer(0, mbps(1)).0, 1);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(mib(100)), "100.0 MiB");
+        assert_eq!(fmt_bw(mbps(831)), "831.0 MB/s");
+        assert_eq!(fmt_bw(gbps(2.4)), "2.40 GB/s");
+        assert_eq!(format!("{}", SimTime::from_secs_f64(0.25)), "250.0ms");
+    }
+
+    #[test]
+    fn parse_sizes() {
+        assert_eq!(parse_bytes("100MB"), Some(mib(100)));
+        assert_eq!(parse_bytes("4kb"), Some(kib(4)));
+        assert_eq!(parse_bytes("2GiB"), Some(gib(2)));
+        assert_eq!(parse_bytes("1.5MB"), Some(mib(3) / 2));
+        assert_eq!(parse_bytes("nonsense"), None);
+    }
+}

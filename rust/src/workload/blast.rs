@@ -1,0 +1,154 @@
+//! BLAST-like workload (§7: "applications (such as BLAST runs on large
+//! databases) that will benefit greatly from striped IFS capabilities").
+//!
+//! Shape: a multi-GB sequence database is read by *every* task (the
+//! read-many pattern at its most extreme), tasks are short relative to
+//! their input volume, outputs are small hit lists. The database exceeds
+//! a single LFS, so the placement policy sends it to replicated IFSs —
+//! and the stripe degree determines whether the IFS can feed the readers.
+//!
+//! This module sweeps the stripe degree and reports per-stage times, the
+//! `ablation_blast` bench prints the curve.
+
+use crate::cio::distributor::TreeShape;
+use crate::cio::placement::{Dataset, PlacementPolicy, Tier};
+use crate::config::ClusterConfig;
+use crate::sim::cluster::{IoMode, SimCluster, TaskSpec};
+use crate::util::units::{gib, kib};
+
+/// BLAST-like workload parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlastWorkload {
+    /// Database size (must exceed one LFS to exercise striping).
+    pub db_bytes: u64,
+    /// Number of query tasks.
+    pub tasks: u64,
+    /// Compute seconds per task (scan + align, after IO).
+    pub dur_s: f64,
+    /// Fraction of the database each task actually reads (index-guided
+    /// scans touch a slice, not the whole DB).
+    pub read_fraction: f64,
+    /// Output (hit list) bytes per task.
+    pub out_bytes: u64,
+}
+
+impl Default for BlastWorkload {
+    fn default() -> Self {
+        BlastWorkload {
+            db_bytes: gib(8),
+            tasks: 4096,
+            dur_s: 30.0,
+            read_fraction: 0.02,
+            out_bytes: kib(64),
+        }
+    }
+}
+
+/// Result of one BLAST run.
+#[derive(Debug, Clone)]
+pub struct BlastResult {
+    /// Stripe degree used.
+    pub stripe: u32,
+    /// Where the placement policy put the database.
+    pub db_tier: Tier,
+    /// Seconds to distribute the database to the IFSs (CIO only).
+    pub distribution_s: f64,
+    /// Query-phase makespan, CIO.
+    pub cio_s: f64,
+    /// Query-phase makespan, GPFS baseline (reads hit the GFS).
+    pub gpfs_s: f64,
+}
+
+impl BlastResult {
+    /// End-to-end speedup including the distribution cost.
+    pub fn speedup(&self) -> f64 {
+        self.gpfs_s / (self.distribution_s + self.cio_s)
+    }
+}
+
+impl BlastWorkload {
+    /// Per-task input bytes.
+    pub fn in_bytes(&self) -> u64 {
+        (self.db_bytes as f64 * self.read_fraction) as u64
+    }
+
+    /// Run with the given stripe degree.
+    pub fn run(&self, cfg: &ClusterConfig, stripe: u32) -> BlastResult {
+        let cfg = cfg.clone().with_stripe(stripe);
+        // Placement: the DB is read by every task.
+        let policy = PlacementPolicy::from_config(&cfg);
+        let db = Dataset { name: "blast.db".into(), bytes: self.db_bytes, readers: cfg.procs };
+        let db_tier = policy.decide(&db);
+
+        // Distribution: broadcast to the IFS groups over the tree.
+        let mut sim = SimCluster::new(&cfg);
+        let (distribution_s, _) = sim.distribute_tree(
+            cfg.ifs_groups().max(2),
+            self.db_bytes,
+            TreeShape::Binomial,
+        );
+
+        let spec = TaskSpec {
+            dur: crate::sim::cluster::DurationModel::Fixed(self.dur_s),
+            out_bytes: self.out_bytes,
+            in_bytes: self.in_bytes(),
+            in_from_ifs: false, // overridden by run_mtc_ifs_input below
+        };
+        // CIO: reads come from the striped IFS (modelled by the per-group
+        // serve resource inside run_mtc_spec's staged-input path — which
+        // uses the LFS path; for BLAST the slice is re-read from IFS, so
+        // point the input at the IFS serve bandwidth instead).
+        let mut cio = SimCluster::new(&cfg);
+        let cio_r = cio.run_mtc_ifs_input(self.tasks, &spec, IoMode::Cio);
+        let mut gpfs = SimCluster::new(&cfg);
+        let gpfs_r = gpfs.run_mtc_spec(self.tasks, &spec, IoMode::Gpfs);
+        BlastResult {
+            stripe,
+            db_tier,
+            distribution_s,
+            cio_s: cio_r.makespan_tasks_s,
+            gpfs_s: gpfs_r.makespan_tasks_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn db_goes_to_replicated_ifs() {
+        let cfg = ClusterConfig::bgp(4096).with_stripe(8);
+        let wl = BlastWorkload::default();
+        let r = wl.run(&cfg, 8);
+        assert_eq!(r.db_tier, Tier::IfsReplicated, "8 GB read-many DB belongs on IFSs");
+    }
+
+    #[test]
+    fn striping_helps_read_heavy_queries() {
+        let cfg = ClusterConfig::bgp(1024);
+        let wl = BlastWorkload { tasks: 1024, ..Default::default() };
+        let r1 = wl.run(&cfg, 1);
+        let r16 = wl.run(&cfg, 16);
+        assert!(
+            r16.cio_s < r1.cio_s * 0.7,
+            "16-way striping should cut the query phase: {} vs {}",
+            r16.cio_s,
+            r1.cio_s
+        );
+    }
+
+    #[test]
+    fn cio_beats_gpfs_baseline_at_scale() {
+        // The striped-IFS win is a *scale* effect: at 4096 processors the
+        // 16 IFS groups aggregate ~11 GB/s of serving bandwidth against
+        // GPFS's fixed 2.4 GB/s, which amortizes the one-time broadcast.
+        // (At small scale GFS aggregate ≈ IFS aggregate and the broadcast
+        // cost makes CIO *lose* — the crossover the ablation bench plots.)
+        // 8 query waves amortize the one-time 8 GB broadcast.
+        let cfg = ClusterConfig::bgp(4096);
+        let wl = BlastWorkload { tasks: 32_768, ..Default::default() };
+        let r = wl.run(&cfg, 16);
+        assert!(r.speedup() > 1.8, "speedup {}", r.speedup());
+    }
+}

@@ -1,0 +1,252 @@
+//! The DOCK6-like molecular-docking workflow (§6.3, Figure 17).
+//!
+//! A database of ~15K candidate compounds is screened against receptor
+//! proteins; each docking invocation averages 550 s and writes ~10 KB of
+//! scores. The workflow has three stages:
+//!
+//! 1. **dock** — one task per compound: read input, compute, write output
+//!    (parallel across all processors);
+//! 2. **summarize** — summarize / sort / select the results. GPFS: a
+//!    single process on a login node reading 15K small files from GFS.
+//!    CIO: parallelized across processors, data local to the IFSs
+//!    (the paper's 11.7× stage win: 694 s → 59 s);
+//! 3. **archive** — pack results and store them on GFS (1.5× with CIO).
+//!
+//! Stage 1 runs through the full simulator (metadata contention, staging,
+//! collector). Stages 2 and 3 use calibrated analytic models on top of
+//! the same configuration constants — the paper gives their end-to-end
+//! times, and their structure (per-file GFS scan vs parallel IFS scan +
+//! serial merge) is what we model; see DESIGN.md §2.
+//!
+//! The compound *compute* payload in the end-to-end example
+//! (`examples/dock_screening.rs`) is the real PJRT-executed docking-score
+//! model from `python/compile/`; in the simulator the payload is the
+//! measured duration profile.
+
+use crate::config::ClusterConfig;
+use crate::metrics::Report;
+use crate::sim::cluster::{DurationModel, IoMode, SimCluster, TaskSpec};
+use crate::util::table::{num, Table};
+use crate::util::units::kib;
+
+/// Per-file processing costs for the analytic stage-2/3 models.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageCosts {
+    /// Seconds to open+read one small output file from GFS on the login
+    /// node (metadata + small read under ambient load).
+    pub gfs_per_file_s: f64,
+    /// Seconds to read one member from an IFS-resident archive
+    /// (random-access indexed read over the tree network).
+    pub ifs_per_file_s: f64,
+    /// Seconds for the login-node merge of one collector partial
+    /// (sort/select of its summary).
+    pub merge_per_partial_s: f64,
+    /// Per-archive fixed cost in stage 3 (tar/xar packing + create).
+    pub archive_fixed_s: f64,
+}
+
+impl Default for StageCosts {
+    fn default() -> Self {
+        StageCosts {
+            gfs_per_file_s: 0.045,
+            ifs_per_file_s: 0.003,
+            merge_per_partial_s: 1.70,
+            archive_fixed_s: 1.50,
+        }
+    }
+}
+
+/// The workflow parameters (§6.3's run: 15,351 compounds, 9 receptors,
+/// 8K processors; outputs ~10 KB every ~550 s).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DockWorkflow {
+    /// Number of docking tasks (compounds × receptors partitions).
+    pub tasks: u64,
+    /// Mean docking duration (s).
+    pub mean_dur_s: f64,
+    /// Duration spread (sigma of the underlying normal).
+    pub sigma: f64,
+    /// Output bytes per task.
+    pub out_bytes: u64,
+    /// Input bytes per task (compound description + grid slice).
+    pub in_bytes: u64,
+    /// Analytic stage-2/3 cost constants.
+    pub costs: StageCosts,
+}
+
+impl Default for DockWorkflow {
+    fn default() -> Self {
+        DockWorkflow {
+            tasks: 15_360,
+            mean_dur_s: 550.0,
+            sigma: 0.10,
+            out_bytes: kib(10),
+            in_bytes: kib(100),
+            costs: StageCosts::default(),
+        }
+    }
+}
+
+/// Stage-by-stage timing for one mode.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DockResult {
+    /// Mode label.
+    pub mode: IoMode,
+    /// Stage 1 (dock) wall-clock seconds.
+    pub stage1_s: f64,
+    /// Stage 2 (summarize/sort/select) seconds.
+    pub stage2_s: f64,
+    /// Stage 3 (archive) seconds.
+    pub stage3_s: f64,
+}
+
+impl DockResult {
+    /// Total workflow time.
+    pub fn total_s(&self) -> f64 {
+        self.stage1_s + self.stage2_s + self.stage3_s
+    }
+}
+
+impl DockWorkflow {
+    /// Task spec for stage 1.
+    pub fn stage1_spec(&self) -> TaskSpec {
+        TaskSpec {
+            dur: DurationModel::LogNormal { mean_s: self.mean_dur_s, sigma: self.sigma },
+            out_bytes: self.out_bytes,
+            in_bytes: self.in_bytes,
+            in_from_ifs: false,
+        }
+    }
+
+    /// Run the full workflow in one mode on a fresh simulated partition.
+    pub fn run(&self, cfg: &ClusterConfig, mode: IoMode) -> DockResult {
+        // --- Stage 1: full simulation ---
+        let mut cluster = SimCluster::new(cfg);
+        let report = cluster.run_mtc_spec(self.tasks, &self.stage1_spec(), mode);
+        // GPFS stage 1 ends when outputs are synchronously on GFS (that IS
+        // task completion); CIO stage-1 tasks end at LFS→IFS commit, and
+        // stage 2 can start then — data is already on the IFSs.
+        let stage1_s = report.makespan_tasks_s;
+
+        // --- Stage 2: summarize / sort / select ---
+        let c = &self.costs;
+        let stage2_s = match mode {
+            IoMode::Gpfs => {
+                // Single login-node process scanning every small file on
+                // GFS (the paper's original implementation).
+                self.tasks as f64 * c.gfs_per_file_s
+            }
+            IoMode::Cio | IoMode::RamOnly => {
+                // Parallel scan: each collector's archive is processed on
+                // its IFS (random-access reads), partials merged serially.
+                let partials = cfg.ions().max(1) as f64;
+                let files_per_partial = self.tasks as f64 / partials;
+                files_per_partial * c.ifs_per_file_s + partials * c.merge_per_partial_s
+            }
+        };
+
+        // --- Stage 3: archive results to GFS ---
+        let total_bytes = self.tasks * self.out_bytes;
+        let big_block_s = total_bytes as f64 / cfg.gfs.write_agg_bw;
+        let stage3_s = match mode {
+            IoMode::Gpfs => {
+                // tar reads each small file back from GFS, then writes the
+                // archive.
+                self.tasks as f64 * c.gfs_per_file_s / 5.0 + big_block_s + c.archive_fixed_s
+            }
+            IoMode::Cio | IoMode::RamOnly => {
+                // Re-read members from the IFS-resident archives (random
+                // access), repack per ION, stream to GFS.
+                self.tasks as f64 * c.ifs_per_file_s
+                    + cfg.ions().max(1) as f64 * c.archive_fixed_s
+                    + big_block_s
+            }
+        };
+
+        DockResult { mode, stage1_s, stage2_s, stage3_s }
+    }
+}
+
+/// Run CIO vs GPFS and produce the Figure 17 comparison report.
+pub fn run_comparison(cfg: &ClusterConfig, tasks: u64) -> anyhow::Result<Report> {
+    let wf = DockWorkflow { tasks, ..Default::default() };
+    let gpfs = wf.run(cfg, IoMode::Gpfs);
+    let cio = wf.run(cfg, IoMode::Cio);
+
+    let mut table = Table::new(vec!["stage", "GPFS (s)", "CIO (s)", "speedup"])
+        .title(format!("DOCK6 workflow, {} tasks on {} procs", tasks, cfg.procs));
+    for (name, g, c) in [
+        ("1: dock", gpfs.stage1_s, cio.stage1_s),
+        ("2: summarize", gpfs.stage2_s, cio.stage2_s),
+        ("3: archive", gpfs.stage3_s, cio.stage3_s),
+        ("total", gpfs.total_s(), cio.total_s()),
+    ] {
+        table.row(vec![name.to_string(), num(g), num(c), format!("{:.2}x", g / c)]);
+    }
+    println!("{}", table.render());
+
+    let mut report = Report::new("Figure 17: DOCK6 15K tasks on 8K processors");
+    report.push("GPFS total", 2140.0, gpfs.total_s(), "s");
+    report.push("CIO total", 1412.0, cio.total_s(), "s");
+    report.push("stage2 GPFS", 694.0, gpfs.stage2_s, "s");
+    report.push("stage2 CIO", 59.0, cio.stage2_s, "s");
+    report.push("stage2 speedup", 11.7, gpfs.stage2_s / cio.stage2_s, "x");
+    report.push("stage3 speedup", 1.5, gpfs.stage3_s / cio.stage3_s, "x");
+    report.push("stage1 speedup", 1.06, gpfs.stage1_s / cio.stage1_s, "x");
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg8k() -> ClusterConfig {
+        ClusterConfig::bgp(8192)
+    }
+
+    #[test]
+    fn stage2_speedup_near_paper() {
+        let wf = DockWorkflow::default();
+        let cfg = cfg8k();
+        let gpfs = wf.run(&cfg, IoMode::Gpfs);
+        let cio = wf.run(&cfg, IoMode::Cio);
+        let speedup = gpfs.stage2_s / cio.stage2_s;
+        // Paper: 694 s -> 59 s = 11.7x. Shape check with slack.
+        assert!((8.0..16.0).contains(&speedup), "stage2 speedup {speedup}");
+        assert!((600.0..800.0).contains(&gpfs.stage2_s), "gpfs stage2 {}", gpfs.stage2_s);
+        assert!((40.0..90.0).contains(&cio.stage2_s), "cio stage2 {}", cio.stage2_s);
+    }
+
+    #[test]
+    fn stage3_modest_speedup() {
+        let wf = DockWorkflow::default();
+        let cfg = cfg8k();
+        let gpfs = wf.run(&cfg, IoMode::Gpfs);
+        let cio = wf.run(&cfg, IoMode::Cio);
+        let speedup = gpfs.stage3_s / cio.stage3_s;
+        assert!((1.1..2.5).contains(&speedup), "stage3 speedup {speedup}");
+    }
+
+    #[test]
+    fn stage1_nearly_identical_compute_bound() {
+        // 550 s tasks dwarf the IO: CIO stage-1 advantage should be small
+        // (paper: 1.06x at 8K, 1.12x at 96K).
+        let wf = DockWorkflow { tasks: 4096, ..Default::default() };
+        let cfg = ClusterConfig::bgp(2048);
+        let gpfs = wf.run(&cfg, IoMode::Gpfs);
+        let cio = wf.run(&cfg, IoMode::Cio);
+        let speedup = gpfs.stage1_s / cio.stage1_s;
+        assert!((1.0..1.35).contains(&speedup), "stage1 speedup {speedup}");
+    }
+
+    #[test]
+    fn totals_favor_cio() {
+        let wf = DockWorkflow::default();
+        let cfg = cfg8k();
+        let gpfs = wf.run(&cfg, IoMode::Gpfs);
+        let cio = wf.run(&cfg, IoMode::Cio);
+        let speedup = gpfs.total_s() / cio.total_s();
+        // Paper: 2140/1412 = 1.52x.
+        assert!((1.2..2.0).contains(&speedup), "total speedup {speedup}");
+    }
+}

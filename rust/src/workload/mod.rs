@@ -1,0 +1,6 @@
+//! Workload generators: the synthetic IO benchmarks of §6.1/§6.2 and the
+//! DOCK6-like molecular-docking screen of §6.3.
+
+pub mod blast;
+pub mod dock;
+pub mod synthetic;

@@ -1,0 +1,65 @@
+//! Synthetic MTC workloads (§6.2): fixed-length tasks producing
+//! fixed-size outputs — the sweep axes of Figures 14/15/16.
+
+use crate::sim::cluster::{IoMode, RunReport, SimCluster};
+use crate::config::ClusterConfig;
+
+/// A synthetic workload specification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyntheticWorkload {
+    /// Number of tasks.
+    pub tasks: u64,
+    /// Per-task compute duration (s). The paper uses 4 s and 32 s.
+    pub dur_s: f64,
+    /// Per-task output size (bytes). The paper sweeps 1 KB – 1 MB.
+    pub out_bytes: u64,
+}
+
+impl SyntheticWorkload {
+    /// New workload spec.
+    pub fn new(tasks: u64, dur_s: f64, out_bytes: u64) -> Self {
+        assert!(tasks > 0 && dur_s > 0.0);
+        SyntheticWorkload { tasks, dur_s, out_bytes }
+    }
+
+    /// The paper-style sizing: `waves` full waves across the partition.
+    pub fn waves(cfg: &ClusterConfig, waves: u32, dur_s: f64, out_bytes: u64) -> Self {
+        Self::new(cfg.procs as u64 * waves as u64, dur_s, out_bytes)
+    }
+
+    /// Run on a fresh simulated partition.
+    pub fn run(&self, cfg: &ClusterConfig, mode: IoMode) -> RunReport {
+        let mut cluster = SimCluster::new(cfg);
+        cluster.run_mtc(self.tasks, self.dur_s, self.out_bytes, mode)
+    }
+
+    /// Run mode + the RamOnly ideal and return (report, efficiency).
+    pub fn run_with_efficiency(&self, cfg: &ClusterConfig, mode: IoMode) -> (RunReport, f64) {
+        let ideal = self.run(cfg, IoMode::RamOnly);
+        let report = self.run(cfg, mode);
+        let eff = report.efficiency_vs(&ideal);
+        (report, eff)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::kib;
+
+    #[test]
+    fn waves_scale_with_procs() {
+        let cfg = ClusterConfig::bgp(256);
+        let w = SyntheticWorkload::waves(&cfg, 3, 4.0, kib(1));
+        assert_eq!(w.tasks, 768);
+    }
+
+    #[test]
+    fn efficiency_helper_consistent() {
+        let cfg = ClusterConfig::bgp(256);
+        let w = SyntheticWorkload::waves(&cfg, 2, 4.0, kib(64));
+        let (report, eff) = w.run_with_efficiency(&cfg, IoMode::Cio);
+        assert_eq!(report.tasks, w.tasks);
+        assert!(eff > 0.5 && eff <= 1.0, "eff {eff}");
+    }
+}

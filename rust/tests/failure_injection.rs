@@ -1,0 +1,121 @@
+//! Failure injection: degraded resources, overloaded staging, chirp OOM,
+//! and cancelled transfers must leave the system consistent (every task
+//! accounted, no byte lost or double-counted, no hangs).
+
+use cio::config::ClusterConfig;
+use cio::sim::cluster::{IoMode, SimCluster};
+use cio::sim::flow::{FlowNet, HasFlowNet};
+use cio::util::units::{mbps, mib, SimTime};
+
+#[test]
+fn gfs_brownout_mid_run_slows_but_completes() {
+    // Drop the small-write aggregate to 10% for 20 simulated seconds,
+    // then restore — a GPFS brownout.
+    let cfg = ClusterConfig::bgp(1024);
+    let healthy = {
+        let mut c = SimCluster::new(&cfg);
+        c.run_mtc(2048, 4.0, mib(1), IoMode::Gpfs)
+    };
+    let mut c = SimCluster::new(&cfg);
+    c.engine.schedule(SimTime::from_secs(5), |e, w| {
+        let id = w.res.gfs_small;
+        FlowNet::set_capacity(e, w, id, mbps(25));
+        e.schedule(SimTime::from_secs(20), move |e, w| {
+            FlowNet::set_capacity(e, w, id, mbps(250));
+        });
+    });
+    let degraded = c.run_mtc(2048, 4.0, mib(1), IoMode::Gpfs);
+    assert_eq!(degraded.tasks, 2048);
+    assert_eq!(degraded.gfs_bytes, 2048 * mib(1));
+    assert!(
+        degraded.makespan_tasks_s > healthy.makespan_tasks_s,
+        "brownout must cost time: {} vs {}",
+        degraded.makespan_tasks_s,
+        healthy.makespan_tasks_s
+    );
+}
+
+#[test]
+fn tiny_staging_forces_spills_but_loses_nothing() {
+    // Shrink the ION staging area so hard that the collector cannot keep
+    // up — outputs must spill synchronously to GFS, not vanish.
+    let mut cfg = ClusterConfig::bgp(512);
+    cfg.node.server_mem = mib(8); // absurdly small staging
+    cfg.collector.min_free_space = mib(2);
+    cfg.collector.max_data = mib(4);
+    let mut c = SimCluster::new(&cfg);
+    let r = c.run_mtc(1024, 2.0, mib(1), IoMode::Cio);
+    assert_eq!(r.tasks, 1024);
+    assert!(r.staging_spills > 0, "staging this small must spill");
+    assert_eq!(r.collector.files + r.staging_spills, 1024, "all outputs accounted");
+    assert_eq!(r.gfs_bytes, 1024 * mib(1), "no bytes lost");
+}
+
+#[test]
+fn chirp_oom_is_isolated_per_benchmark() {
+    // An OOM on one benchmark run must not poison a following run on a
+    // fresh cluster (state isolation).
+    let cfg = ClusterConfig::bgp(2048).with_ifs_ratio(512);
+    let mut c = SimCluster::new(&cfg);
+    assert!(c.chirp_read_benchmark(512, mib(100)).is_err());
+    let cfg2 = ClusterConfig::bgp(2048).with_ifs_ratio(64);
+    let mut c2 = SimCluster::new(&cfg2);
+    let agg = c2.chirp_read_benchmark(64, mib(100)).unwrap();
+    assert!(agg > 0.0);
+}
+
+#[test]
+fn cancelled_transfers_release_capacity() {
+    // Cancel half the flows mid-flight; the survivors should finish
+    // roughly twice as fast as if all had stayed.
+    struct W {
+        net: FlowNet<W>,
+    }
+    impl HasFlowNet for W {
+        fn flownet(&mut self) -> &mut FlowNet<W> {
+            &mut self.net
+        }
+    }
+    let mut w = W { net: FlowNet::new() };
+    let mut eng: cio::sim::Engine<W> = cio::sim::Engine::new();
+    let link = w.net.add_resource("link", mbps(100));
+    let mut victims = Vec::new();
+    let last_done = std::rc::Rc::new(std::cell::RefCell::new(0.0f64));
+    for i in 0..10 {
+        let last_done = last_done.clone();
+        let id = FlowNet::start(&mut eng, &mut w, &[link], mib(100), move |e, _| {
+            *last_done.borrow_mut() = e.now().as_secs_f64();
+        });
+        if i % 2 == 0 {
+            victims.push(id);
+        }
+    }
+    eng.schedule(SimTime::from_millis(10), move |e, w| {
+        for v in victims.clone() {
+            assert!(FlowNet::cancel(e, w, v));
+        }
+    });
+    eng.run(&mut w);
+    // 10 flows of 100MiB on 100MiB/s = 10s each if all stayed (PS); with
+    // half cancelled at t≈0, survivors share 5 ways -> ~5s. (Note: the
+    // superseded wakeup event still advances the *engine* clock to 10s —
+    // completion must be read from the callbacks.)
+    let t = *last_done.borrow();
+    assert!((4.5..6.0).contains(&t), "completion at {t}s");
+    assert_eq!(w.net.flows_completed(), 5);
+    assert_eq!(w.net.flows_cancelled(), 5);
+}
+
+#[test]
+fn dispatcher_outage_window() {
+    // Freeze dispatch for a window by brute force: run with a tiny rate
+    // ceiling and verify the run still completes with heavy throttling.
+    let mut cfg = ClusterConfig::bgp(256);
+    cfg.dispatch.rate_ceiling = 50.0; // 50 tasks/s for 256 cores
+    let mut c = SimCluster::new(&cfg);
+    let r = c.run_mtc(512, 1.0, mib(1), IoMode::Cio);
+    assert_eq!(r.tasks, 512);
+    assert!(r.throttle_fraction > 0.9, "throttle {}", r.throttle_fraction);
+    // 512 tasks at 50/s floor ≈ 10.2s minimum.
+    assert!(r.makespan_tasks_s >= 10.0);
+}

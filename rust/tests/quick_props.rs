@@ -1,0 +1,249 @@
+//! Property-based tests on coordinator invariants, using the in-crate
+//! quickcheck-style framework (`cio::util::quick`). These are the
+//! "routing, batching, state" invariants DESIGN.md calls out.
+
+use cio::cio::collector::{CollectorStats, FlushReason, Policy};
+use cio::cio::dispatch::Pacer;
+use cio::cio::placement::{Dataset, PlacementPolicy, Tier};
+use cio::cio::stage::IfsCache;
+use cio::config::{ClusterConfig, DispatchConfig};
+use cio::sim::cluster::{IoMode, SimCluster};
+use cio::sim::flow::{FlowNet, HasFlowNet};
+use cio::sim::topology::{binomial_broadcast, ifs_group_of, ion_of, kary_broadcast, rounds};
+use cio::util::quick::{check, forall, pair, Gen, Outcome};
+use cio::util::units::{mib, SimTime};
+
+#[test]
+fn prop_broadcast_schedules_cover_everyone_once() {
+    forall("broadcast coverage", 150, Gen::u64(1..5000), |&n| {
+        let n = n as u32;
+        let s = binomial_broadcast(n);
+        if s.len() as u32 != n.saturating_sub(1) {
+            return false;
+        }
+        let mut holders = vec![false; n as usize];
+        holders[0] = true;
+        for c in &s {
+            if !holders[c.src as usize] || holders[c.dst as usize] {
+                return false; // sender without data / double receive
+            }
+            holders[c.dst as usize] = true;
+        }
+        holders.iter().all(|&h| h)
+    });
+}
+
+#[test]
+fn prop_broadcast_rounds_logarithmic() {
+    forall("broadcast depth", 100, Gen::u64(2..100_000), |&n| {
+        let expect = (n as f64).log2().ceil() as u32;
+        rounds(&binomial_broadcast(n as u32)) == expect
+    });
+}
+
+#[test]
+fn prop_kary_copy_count_invariant() {
+    forall(
+        "kary copies",
+        100,
+        pair(Gen::u64(1..2000), Gen::u64(1..8)),
+        |&(n, k)| kary_broadcast(n as u32, k as u32).len() as u64 == n - 1,
+    );
+}
+
+#[test]
+fn prop_routing_is_total_and_contiguous() {
+    // Every node maps to exactly one ION and one IFS group; blocks are
+    // contiguous and sized by the ratio.
+    forall(
+        "cn routing",
+        200,
+        pair(Gen::u64(1..100_000), Gen::u64(1..1024)),
+        |&(node, ratio)| {
+            let (node, ratio) = (node as u32, ratio as u32);
+            let ion = ion_of(node, ratio);
+            let grp = ifs_group_of(node, ratio);
+            ion == node / ratio && grp == ion && ion_of(ion * ratio, ratio) == ion
+        },
+    );
+}
+
+#[test]
+fn prop_placement_is_total_and_monotone_in_size() {
+    // decide() never panics, and growing a dataset never moves it to a
+    // *faster* tier.
+    let rank = |t: Tier| match t {
+        Tier::Lfs => 0,
+        Tier::Ifs | Tier::IfsReplicated => 1,
+        Tier::Gfs => 2,
+    };
+    forall(
+        "placement monotone",
+        300,
+        pair(Gen::u64(1..1 << 40), Gen::u64(1..100_000)),
+        |&(bytes, readers)| {
+            let p = PlacementPolicy { lfs_limit: mib(512), ifs_limit: mib(64) * 1024, read_many_threshold: 1 };
+            let d1 = Dataset { name: "d".into(), bytes, readers: readers as u32 };
+            let d2 = Dataset { name: "d".into(), bytes: bytes.saturating_mul(2), readers: readers as u32 };
+            rank(p.decide(&d1)) <= rank(p.decide(&d2))
+        },
+    );
+}
+
+#[test]
+fn prop_pacer_never_exceeds_rate() {
+    // For any burst pattern, consecutive dispatch instants are at least
+    // 1/rate apart.
+    let gen = Gen::vec(Gen::u64(0..10_000), 2..200);
+    forall("pacer spacing", 100, gen, |submits: &Vec<u64>| {
+        let rate = 1000.0;
+        let mut pacer = Pacer::new(&DispatchConfig { rate_ceiling: rate, latency_s: 0.0 });
+        let mut submits = submits.clone();
+        submits.sort_unstable();
+        let mut last: Option<SimTime> = None;
+        for &ms in &submits {
+            let start = pacer.dispatch_at(SimTime::from_millis(ms));
+            if let Some(prev) = last {
+                if start.0 < prev.0 + 1_000_000 {
+                    return false; // closer than 1ms = rate violated
+                }
+            }
+            last = Some(start);
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_collector_policy_flushes_iff_condition() {
+    let gen = pair(pair(Gen::u64(0..120), Gen::u64(0..600)), Gen::u64(0..600));
+    forall("collector policy", 300, gen, |&((since_s, buffered_mb), free_mb)| {
+        let p = Policy {
+            max_delay: SimTime::from_secs(30),
+            max_data: mib(256),
+            min_free_space: mib(128),
+        };
+        let since = SimTime::from_secs(since_s);
+        let buffered = mib(buffered_mb);
+        let free = mib(free_mb);
+        let got = p.should_flush(since, buffered, free);
+        let expect = if buffered == 0 {
+            None
+        } else if since > p.max_delay {
+            Some(FlushReason::MaxDelay)
+        } else if buffered > p.max_data {
+            Some(FlushReason::MaxData)
+        } else if free < p.min_free_space {
+            Some(FlushReason::MinFreeSpace)
+        } else {
+            None
+        };
+        got == expect
+    });
+}
+
+#[test]
+fn prop_collector_stats_conserve_files_and_bytes() {
+    let gen = Gen::vec(pair(Gen::u64(1..1000), Gen::u64(1..1 << 20)), 0..50);
+    forall("stats conservation", 150, gen, |batches: &Vec<(u64, u64)>| {
+        let mut s = CollectorStats::default();
+        for &(files, bytes) in batches {
+            s.record(FlushReason::MaxData, files, bytes);
+        }
+        s.archives == batches.len() as u64
+            && s.files == batches.iter().map(|b| b.0).sum::<u64>()
+            && s.bytes == batches.iter().map(|b| b.1).sum::<u64>()
+    });
+}
+
+#[test]
+fn prop_ifs_cache_never_exceeds_capacity() {
+    let gen = Gen::vec(pair(Gen::u64(0..40), Gen::u64(1..mib(8))), 1..80);
+    forall("cache capacity", 150, gen, |ops: &Vec<(u64, u64)>| {
+        let cap = mib(16);
+        let mut cache = IfsCache::new(cap);
+        for &(key, bytes) in ops {
+            cache.put(&format!("k{key}"), bytes);
+            if cache.used() > cap {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_fluid_flows_conserve_bytes() {
+    // Whatever mix of flow sizes we start, completed bytes equal the sum
+    // of the requested sizes (no loss, no duplication).
+    struct W {
+        net: FlowNet<W>,
+    }
+    impl HasFlowNet for W {
+        fn flownet(&mut self) -> &mut FlowNet<W> {
+            &mut self.net
+        }
+    }
+    let gen = Gen::vec(Gen::u64(1..mib(50)), 1..60);
+    forall("flow conservation", 60, gen, |sizes: &Vec<u64>| {
+        let mut w = W { net: FlowNet::new() };
+        let mut eng = cio::sim::Engine::new().with_limit(1_000_000);
+        let link = w.net.add_resource("link", mib(100) as f64);
+        for &s in sizes {
+            FlowNet::start(&mut eng, &mut w, &[link], s, |_, _| {});
+        }
+        eng.run(&mut w);
+        let total: u64 = sizes.iter().sum();
+        w.net.flows_completed() == sizes.len() as u64
+            && (w.net.bytes_completed() - total as f64).abs() < 1.0
+            && w.net.active_flows() == 0
+    });
+}
+
+#[test]
+fn prop_mtc_accounting_balances_across_modes() {
+    // For any (procs, tasks, size) in a bounded envelope, every task
+    // completes and every byte lands on GFS in GPFS and CIO modes.
+    let gen = pair(pair(Gen::u64(1..6), Gen::u64(1..5)), Gen::u64(1..512));
+    forall("mtc balance", 12, gen, |&((procs_x, waves), size_kb)| {
+        let procs = 256 * procs_x as u32;
+        let cfg = ClusterConfig::bgp(procs);
+        let tasks = procs as u64 * waves;
+        let size = size_kb * 1024;
+        for mode in [IoMode::Gpfs, IoMode::Cio] {
+            let mut c = SimCluster::new(&cfg);
+            let r = c.run_mtc(tasks, 2.0, size, mode);
+            if r.tasks != tasks {
+                return false;
+            }
+            if r.gfs_bytes != tasks * size {
+                return false;
+            }
+            if mode == IoMode::Cio && r.collector.files + r.staging_spills != tasks {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_cio_never_slower_than_gpfs_for_small_outputs() {
+    // Over the calibrated envelope, CIO's makespan is never worse than
+    // GPFS's for metadata-bound workloads.
+    let gen = pair(Gen::u64(1..4), Gen::u64(1..128));
+    let outcome = check(8, &gen, &|&(procs_x, size_kb)| {
+        let procs = 256 * procs_x as u32;
+        let cfg = ClusterConfig::bgp(procs);
+        let tasks = procs as u64 * 2;
+        let mut g = SimCluster::new(&cfg);
+        let gr = g.run_mtc(tasks, 4.0, size_kb * 1024, IoMode::Gpfs);
+        let mut c = SimCluster::new(&cfg);
+        let cr = c.run_mtc(tasks, 4.0, size_kb * 1024, IoMode::Cio);
+        cr.makespan_tasks_s <= gr.makespan_tasks_s * 1.001
+    });
+    match outcome {
+        Outcome::Pass { .. } => {}
+        Outcome::Fail { minimal, .. } => panic!("CIO slower than GPFS at {minimal:?}"),
+    }
+}

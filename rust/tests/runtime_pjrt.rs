@@ -1,0 +1,122 @@
+//! End-to-end PJRT integration: load the AOT artifact produced by
+//! `make artifacts` (python/compile/aot.py), compile it on the PJRT CPU
+//! client, execute batches from Rust, and check the numerics against the
+//! pure-Rust mirror of the jnp oracle.
+//!
+//! Requires `artifacts/dock_score.hlo.txt`; tests skip (with a loud
+//! message) when it is missing so `cargo test` works pre-`make artifacts`.
+
+use cio::runtime::{score_reference, ArtifactMeta, ScoreModel};
+use cio::util::rng::Rng;
+
+fn try_load() -> Option<ScoreModel> {
+    match ScoreModel::load_default() {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP runtime_pjrt tests: {e}");
+            None
+        }
+    }
+}
+
+fn random_inputs(meta: &ArtifactMeta, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let ligands: Vec<f32> = (0..meta.batch * meta.atoms * 4)
+        .map(|_| rng.f64_range(-3.0, 3.0) as f32)
+        .collect();
+    let grid: Vec<f32> =
+        (0..meta.atoms * meta.features).map(|_| rng.f64_range(-1.0, 1.0) as f32).collect();
+    let weights: Vec<f32> = (0..meta.features).map(|_| rng.f64_range(-1.0, 1.0) as f32).collect();
+    (ligands, grid, weights)
+}
+
+#[test]
+fn artifact_loads_and_reports_shapes() {
+    let Some(model) = try_load() else { return };
+    assert!(model.meta.batch > 0 && model.meta.atoms > 0 && model.meta.features > 0);
+    assert!(model.path.ends_with("dock_score.hlo.txt"), "{:?}", model.path);
+}
+
+#[test]
+fn pjrt_scores_match_rust_reference() {
+    let Some(model) = try_load() else { return };
+    for seed in [1u64, 2, 3] {
+        let (lig, grid, w) = random_inputs(&model.meta, seed);
+        let got = model.score_batch(&lig, &grid, &w).expect("PJRT execution");
+        let want = score_reference(&model.meta, &lig, &grid, &w);
+        assert_eq!(got.len(), model.meta.batch);
+        for (i, (g, r)) in got.iter().zip(&want).enumerate() {
+            let tol = 1e-3 * r.abs().max(1.0);
+            assert!(
+                (g - r).abs() < tol,
+                "seed {seed} pose {i}: pjrt {g} vs reference {r}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_zero_charge_scores_zero() {
+    let Some(model) = try_load() else { return };
+    let (mut lig, grid, w) = random_inputs(&model.meta, 9);
+    // Zero every charge channel.
+    for pose_atom in lig.chunks_mut(4) {
+        pose_atom[3] = 0.0;
+    }
+    let got = model.score_batch(&lig, &grid, &w).unwrap();
+    for (i, g) in got.iter().enumerate() {
+        assert!(g.abs() < 1e-5, "pose {i}: {g}");
+    }
+}
+
+#[test]
+fn pjrt_rejects_wrong_shapes() {
+    let Some(model) = try_load() else { return };
+    let (lig, grid, w) = random_inputs(&model.meta, 4);
+    assert!(model.score_batch(&lig[..10], &grid, &w).is_err());
+    assert!(model.score_batch(&lig, &grid[..1], &w).is_err());
+    assert!(model.score_batch(&lig, &grid, &w[..1]).is_err());
+}
+
+#[test]
+fn pjrt_execution_is_deterministic() {
+    let Some(model) = try_load() else { return };
+    let (lig, grid, w) = random_inputs(&model.meta, 5);
+    let a = model.score_batch(&lig, &grid, &w).unwrap();
+    let b = model.score_batch(&lig, &grid, &w).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn screen_model_selects_topk() {
+    let model = match cio::runtime::ScreenModel::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP screen test: {e}");
+            return;
+        }
+    };
+    let meta = model.meta.clone();
+    assert!(meta.top_k > 0);
+    let (lig, grid, w) = random_inputs(&meta, 11);
+    let result = model.screen(&lig, &grid, &w).expect("screen execution");
+    assert_eq!(result.scores.len(), meta.batch);
+    assert_eq!(result.best_idx.len(), meta.top_k);
+    assert_eq!(result.best_scores.len(), meta.top_k);
+    // The fused selection must agree with sorting the scores ourselves.
+    let mut sorted: Vec<f32> = result.scores.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for (i, &s) in result.best_scores.iter().enumerate() {
+        assert!((s - sorted[i]).abs() < 1e-5, "rank {i}: {s} vs {}", sorted[i]);
+    }
+    // Indices point at the right scores, ascending.
+    for (rank, &idx) in result.best_idx.iter().enumerate() {
+        let s = result.scores[idx as usize];
+        assert!((s - result.best_scores[rank]).abs() < 1e-5);
+    }
+    // And the scores themselves match the score-only artifact's oracle.
+    let want = score_reference(&meta, &lig, &grid, &w);
+    for (a, b) in result.scores.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-3 * b.abs().max(1.0));
+    }
+}
