@@ -29,7 +29,7 @@
 use cio::cio::archive::{Compression, Reader};
 use cio::cio::collector::Policy;
 use cio::cio::distributor::TreeShape;
-use cio::cio::local::{commit_output, distribute_to_ifs, LocalCollector, LocalLayout};
+use cio::cio::local::{distribute_to_ifs, LocalCollector, LocalLayout};
 use cio::runtime::{artifacts_dir, score_reference, ArtifactMeta, ScoreModel};
 use cio::util::rng::Rng;
 use cio::util::table::Table;
@@ -115,6 +115,7 @@ fn main() -> anyhow::Result<()> {
     std::thread::scope(|scope| {
         for w in 0..workers {
             let layout = &layout;
+            let collector = &collector;
             let next = &next;
             let weights = &weights;
             let meta = &meta;
@@ -150,10 +151,11 @@ fn main() -> anyhow::Result<()> {
                             assert!((a - b).abs() < 1e-3 * b.abs().max(1.0), "{a} vs {b}");
                         }
                     }
-                    // Write output to LFS, then commit LFS -> IFS staging.
+                    // Write output to LFS, then commit LFS -> IFS staging
+                    // (waking the group's collector via its condvar).
                     let name = format!("scores-{t:04}.bin");
                     write_f32s(&layout.lfs(node).join(&name), &scores).expect("lfs write");
-                    commit_output(layout, node, &name).expect("commit");
+                    collector.commit(layout, node, &name).expect("commit");
                 }
             });
         }

@@ -11,7 +11,7 @@
 
 use cio::cio::archive::{Compression, Reader};
 use cio::cio::collector::Policy;
-use cio::cio::local::{commit_output, LocalCollector, LocalLayout};
+use cio::cio::local::{LocalCollector, LocalLayout};
 use cio::cio::stage::{CacheOutcome, IfsCache, StageGraph};
 use cio::util::units::{mib, SimTime};
 use std::io::Write as _;
@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         let name = format!("part-{t:03}.dat");
         // Payload: `t` repeated; stage 2 will checksum it.
         std::fs::write(layout.lfs(node).join(&name), vec![t as u8; 1024])?;
-        commit_output(&layout, node, &name)?;
+        collector.commit(&layout, node, &name)?;
     }
     let stats = collector.finish()?;
     assert_eq!(stats.files, tasks as u64);

@@ -1,21 +1,28 @@
 //! Performance micro-benchmarks for the L3 hot paths (the §Perf inputs in
 //! EXPERIMENTS.md): event-engine throughput, fluid-flow churn, collector
-//! policy evaluation, archive writer/reader throughput, and PJRT scoring
-//! latency (skipped when `make artifacts` has not run).
+//! policy evaluation, archive writer/reader throughput, the PR-1
+//! archive-pipeline and collector-latency cases, and PJRT scoring latency
+//! (skipped when `make artifacts` has not run).
 //!
 //! Regenerate: `cargo bench --bench perf_micro`
+//! Machine-readable output: `-- --json BENCH.json` (or `CIO_BENCH_JSON`),
+//! one JSON object per line — see `BENCH_PR1.json` for the baseline.
 
 #[path = "common/mod.rs"]
 mod common;
 
-use cio::cio::archive::{Compression, Reader, Writer};
+use cio::cio::archive::{read_sequential, Compression, Reader, Writer};
 use cio::cio::collector::Policy;
+use cio::cio::local::{LocalCollector, LocalLayout};
 use cio::config::ClusterConfig;
 use cio::sim::cluster::{IoMode, SimCluster};
 use cio::sim::engine::Engine;
 use cio::sim::flow::{FlowNet, HasFlowNet};
 use cio::util::bench::{black_box, Bencher};
+use cio::util::rng::Rng;
+use cio::util::stats::Summary;
 use cio::util::units::{mib, SimTime};
+use std::path::PathBuf;
 use std::time::Instant;
 
 struct W {
@@ -110,6 +117,109 @@ fn main() {
         black_box(x.len());
     });
 
+    // --- Archive pipeline: ≥64 MiB deflate workload, 1 thread (streamed
+    // add_path) vs the parallel-compression pipeline. The PR-1 headline.
+    let fast = common::fast();
+    let member_bytes = 1usize << 20;
+    let members_n = if fast { 16 } else { 64 };
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+    let mdir = dir.join("pipeline-members");
+    std::fs::create_dir_all(&mdir).unwrap();
+    let mut rng = Rng::new(7);
+    // Semi-compressible: ~60% runs, ~40% noise, so deflate does real work
+    // at a realistic ratio.
+    let template: Vec<u8> = (0..member_bytes)
+        .map(|i| if i % 5 < 3 { 0x41 } else { rng.below(256) as u8 })
+        .collect();
+    let mut specs: Vec<(String, PathBuf)> = Vec::new();
+    for m in 0..members_n {
+        let mut data = template.clone();
+        for byte in data.iter_mut().step_by(97) {
+            *byte ^= m as u8;
+        }
+        let p = mdir.join(format!("member-{m:03}.bin"));
+        std::fs::write(&p, &data).unwrap();
+        specs.push((format!("member-{m:03}.bin"), p));
+    }
+    let total_mib = (members_n * member_bytes) as f64 / (1 << 20) as f64;
+    // Stable metric names (no size/thread interpolation) so baselines in
+    // BENCH_PR*.json match by name across machines and the fast profile;
+    // the workload shape is emitted as metrics of its own.
+    b.metric("archive: pipeline workload", total_mib, "MiB");
+    b.metric("archive: pipeline threads", threads as f64, "threads");
+
+    let seq_path = dir.join("pipe-seq.cioar");
+    let t0 = Instant::now();
+    let mut w = Writer::create(&seq_path).unwrap();
+    for (name, p) in &specs {
+        w.add_path(name, p, Compression::Deflate).unwrap();
+    }
+    w.finish().unwrap();
+    let seq_s = t0.elapsed().as_secs_f64();
+    b.metric("archive: deflate write throughput, 1 thread", total_mib / seq_s, "MiB/s");
+
+    let par_path = dir.join("pipe-par.cioar");
+    let t0 = Instant::now();
+    let mut w = Writer::create(&par_path).unwrap();
+    w.add_paths_parallel(&specs, Compression::Deflate, threads).unwrap();
+    w.finish().unwrap();
+    let par_s = t0.elapsed().as_secs_f64();
+    b.metric("archive: deflate write throughput, parallel", total_mib / par_s, "MiB/s");
+    b.metric("archive: parallel write speedup", seq_s / par_s, "x");
+
+    // Reads over the same workload: streamed tar-like scan + indexed
+    // parallel extraction.
+    let t0 = Instant::now();
+    let mut scanned = 0usize;
+    read_sequential(&par_path, |_, d| scanned += d.len()).unwrap();
+    assert_eq!(scanned, members_n * member_bytes);
+    b.metric(
+        "archive: sequential scan throughput (streamed)",
+        total_mib / t0.elapsed().as_secs_f64(),
+        "MiB/s",
+    );
+    let reader = Reader::open(&par_path).unwrap();
+    let t0 = Instant::now();
+    reader.extract_parallel(threads, |_, d| {
+        black_box(d.len());
+    })
+    .unwrap();
+    b.metric(
+        "archive: parallel extract throughput",
+        total_mib / t0.elapsed().as_secs_f64(),
+        "MiB/s",
+    );
+    let _ = std::fs::remove_file(&seq_path);
+    let _ = std::fs::remove_file(&par_path);
+    let _ = std::fs::remove_dir_all(&mdir);
+
+    // --- Collector flush latency: commit -> archive visible over the
+    // condvar path (the old poll loop quantized this at ≥5 ms).
+    let lroot = dir.join("collector-latency");
+    let _ = std::fs::remove_dir_all(&lroot);
+    let layout = LocalLayout::create(&lroot, 1, 1).unwrap();
+    let policy =
+        Policy { max_delay: SimTime::from_secs(3600), max_data: 1, min_free_space: 0 };
+    let collector = LocalCollector::start(&layout, policy, Compression::None);
+    let rounds = if fast { 20u64 } else { 100 };
+    let mut latencies_us = Vec::new();
+    for i in 0..rounds {
+        let name = format!("lat-{i:03}.out");
+        std::fs::write(layout.lfs(0).join(&name), [0x5Au8; 256]).unwrap();
+        let t0 = Instant::now();
+        collector.commit(&layout, 0, &name).unwrap();
+        while collector.archives_written() <= i {
+            assert!(t0.elapsed().as_secs() < 10, "collector stalled on round {i}");
+            std::thread::yield_now();
+        }
+        latencies_us.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    collector.finish().unwrap();
+    let lat = Summary::of(&latencies_us).unwrap();
+    b.metric("collector: commit->flush latency p50", lat.p50, "us");
+    b.metric("collector: commit->flush latency p95", lat.p95, "us");
+    let _ = std::fs::remove_dir_all(&lroot);
+
     // --- PJRT scoring latency (needs artifacts).
     match cio::runtime::ScoreModel::load_default() {
         Ok(model) => {
@@ -126,4 +236,14 @@ fn main() {
     }
 
     b.report();
+
+    // Machine-readable output for perf-trajectory tracking across PRs.
+    let args = common::args();
+    let json_path =
+        args.get("json").map(str::to_string).or_else(|| std::env::var("CIO_BENCH_JSON").ok());
+    if let Some(path) = json_path {
+        b.write_json(std::path::Path::new(&path))
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("(json written to {path})");
+    }
 }

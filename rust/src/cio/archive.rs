@@ -16,6 +16,20 @@
 //!   in order, ignoring the index — used by the `ablation_archive` bench
 //!   to quantify what xar buys over tar for stage-2 re-processing.
 //!
+//! Ingestion is pipelined and pooled (the PR-1 hot-path rework):
+//!
+//! * [`Writer::add_path`] / [`Writer::add_reader`] stream members in
+//!   fixed-size chunks drawn from a shared [`BufferPool`], computing the
+//!   CRC incrementally and deflating straight into the file — a multi-GiB
+//!   member never materializes in memory. The header's
+//!   length/CRC fields are back-patched with one seek once the member's
+//!   true extent is known.
+//! * [`Writer::add_paths_parallel`] is the parallel-compression pipeline:
+//!   N workers read + deflate members concurrently
+//!   ([`crate::util::pool::ordered_pipeline`]) while the single appender
+//!   thread writes blobs strictly in submission order, so the on-disk
+//!   member order (and therefore the index) is deterministic.
+//!
 //! Layout:
 //!
 //! ```text
@@ -30,15 +44,25 @@
 //!
 //! All integers little-endian.
 
+use crate::util::pool::{ordered_pipeline, BufferPool, PooledBuf};
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
-use std::io::{Read, Seek, SeekFrom, Write as IoWrite};
+use std::io::{BufReader, Read, Seek, SeekFrom, Write as IoWrite};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
 use std::sync::Arc;
 
 const MAGIC_MEMBER: u32 = 0xC10A_0001;
 const MAGIC_INDEX: u32 = 0xC10A_011D;
 const MAGIC_TRAILER: u32 = 0xC10A_0E4D;
+
+/// Chunk size for streamed member ingestion (and the pool's buffer size).
+const CHUNK: usize = 256 * 1024;
+
+/// Cap on speculative pre-allocation from header-declared sizes. Actual
+/// data may exceed this (buffers grow on demand); a corrupt header cannot
+/// force a huge up-front allocation.
+const PREALLOC_CAP: usize = 64 * 1024 * 1024;
 
 /// Per-member compression flag.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -84,6 +108,42 @@ pub struct Entry {
     pub compression: Compression,
 }
 
+/// Member-header length on disk for a given name length:
+/// magic(4) name_len(2) name flags(1) raw_len(8) stored_len(8) crc(4).
+fn member_header_len(name_len: usize) -> u64 {
+    4 + 2 + name_len as u64 + 1 + 8 + 8 + 4
+}
+
+/// A compressed member produced by a pipeline worker, ready to append.
+struct Blob {
+    name: String,
+    raw_len: u64,
+    crc32: u32,
+    compression: Compression,
+    /// Stored (possibly compressed) bytes; the pooled buffer returns to
+    /// the pool once the appender has written it out.
+    data: PooledBuf,
+}
+
+/// Counts bytes flowing through an inner writer (measures the deflate
+/// stream's stored length while it streams straight into the file).
+struct CountingWriter<W> {
+    inner: W,
+    written: u64,
+}
+
+impl<W: IoWrite> IoWrite for CountingWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.written += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
 /// Streaming archive writer.
 pub struct Writer<F: IoWrite + Seek> {
     file: F,
@@ -91,6 +151,11 @@ pub struct Writer<F: IoWrite + Seek> {
     names: BTreeMap<String, ()>,
     offset: u64,
     finished: bool,
+    /// Set when an IO error left partial member bytes in the file that
+    /// `offset` does not account for; all further writes (and `finish`)
+    /// are refused so a corrupt index can never be emitted.
+    poisoned: bool,
+    pool: Arc<BufferPool>,
 }
 
 impl Writer<std::io::BufWriter<std::fs::File>> {
@@ -105,17 +170,68 @@ impl Writer<std::io::BufWriter<std::fs::File>> {
 impl<F: IoWrite + Seek> Writer<F> {
     /// Wrap any seekable sink.
     pub fn new(file: F) -> Result<Self> {
-        Ok(Writer { file, entries: Vec::new(), names: BTreeMap::new(), offset: 0, finished: false })
+        Ok(Writer {
+            file,
+            entries: Vec::new(),
+            names: BTreeMap::new(),
+            offset: 0,
+            finished: false,
+            poisoned: false,
+            pool: BufferPool::new(CHUNK, 16),
+        })
     }
 
-    /// Append one member.
-    pub fn add(&mut self, name: &str, data: &[u8], compression: Compression) -> Result<()> {
+    /// Validate + reserve a member name.
+    fn register(&mut self, name: &str) -> Result<()> {
         ensure!(!self.finished, "archive already finished");
+        ensure!(!self.poisoned, "archive writer poisoned by an earlier IO error");
         ensure!(!name.is_empty() && name.len() <= u16::MAX as usize, "bad member name");
         ensure!(
             self.names.insert(name.to_string(), ()).is_none(),
             "duplicate member name {name:?}"
         );
+        Ok(())
+    }
+
+    /// Poison the writer when a member write failed partway (the file may
+    /// hold bytes `offset` does not account for) and pass the error on.
+    fn poison_on_err<T>(&mut self, result: Result<T>) -> Result<T> {
+        if result.is_err() {
+            self.poisoned = true;
+        }
+        result
+    }
+
+    /// Write a complete member header. Placeholder lengths/CRC may be
+    /// patched later by [`Writer::add_reader`].
+    fn write_header(
+        &mut self,
+        name: &str,
+        compression: Compression,
+        raw_len: u64,
+        stored_len: u64,
+        crc: u32,
+    ) -> Result<()> {
+        let mut header = Vec::with_capacity(32 + name.len());
+        header.extend_from_slice(&MAGIC_MEMBER.to_le_bytes());
+        header.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        header.extend_from_slice(name.as_bytes());
+        header.push(compression.flag());
+        header.extend_from_slice(&raw_len.to_le_bytes());
+        header.extend_from_slice(&stored_len.to_le_bytes());
+        header.extend_from_slice(&crc.to_le_bytes());
+        self.file.write_all(&header)?;
+        Ok(())
+    }
+
+    /// Append one member from an in-memory slice.
+    pub fn add(&mut self, name: &str, data: &[u8], compression: Compression) -> Result<()> {
+        self.register(name)?;
+        let result = self.add_slice_inner(name, data, compression);
+        self.poison_on_err(result)
+    }
+
+    fn add_slice_inner(&mut self, name: &str, data: &[u8], compression: Compression) -> Result<()> {
         let crc = crc32fast::hash(data);
         let stored: std::borrow::Cow<[u8]> = match compression {
             Compression::None => data.into(),
@@ -126,33 +242,157 @@ impl<F: IoWrite + Seek> Writer<F> {
                 enc.finish()?.into()
             }
         };
-        let mut header = Vec::with_capacity(32 + name.len());
-        header.extend_from_slice(&MAGIC_MEMBER.to_le_bytes());
-        header.extend_from_slice(&(name.len() as u16).to_le_bytes());
-        header.extend_from_slice(name.as_bytes());
-        header.push(compression.flag());
-        header.extend_from_slice(&(data.len() as u64).to_le_bytes());
-        header.extend_from_slice(&(stored.len() as u64).to_le_bytes());
-        header.extend_from_slice(&crc.to_le_bytes());
-        self.file.write_all(&header)?;
+        let offset = self.offset;
+        self.write_header(name, compression, data.len() as u64, stored.len() as u64, crc)?;
         self.file.write_all(&stored)?;
         self.entries.push(Entry {
             name: name.to_string(),
-            offset: self.offset,
+            offset,
             raw_len: data.len() as u64,
             stored_len: stored.len() as u64,
             crc32: crc,
             compression,
         });
-        self.offset += header.len() as u64 + stored.len() as u64;
+        self.offset += member_header_len(name.len()) + stored.len() as u64;
         Ok(())
     }
 
-    /// Add a member by reading a file from disk.
+    /// Append one member by streaming from any reader: fixed-size chunks
+    /// through a pooled buffer, CRC computed incrementally, deflate output
+    /// flowing straight into the archive. Memory use is O(chunk), not
+    /// O(member) — the header's length/CRC fields are back-patched once
+    /// the stream ends.
+    pub fn add_reader(
+        &mut self,
+        name: &str,
+        reader: &mut dyn Read,
+        compression: Compression,
+    ) -> Result<()> {
+        self.register(name)?;
+        let result = self.add_reader_inner(name, reader, compression);
+        self.poison_on_err(result)
+    }
+
+    fn add_reader_inner(
+        &mut self,
+        name: &str,
+        reader: &mut dyn Read,
+        compression: Compression,
+    ) -> Result<()> {
+        let member_offset = self.offset;
+        // Placeholder lengths + CRC, patched below.
+        self.write_header(name, compression, 0, 0, 0)?;
+
+        let mut chunk = BufferPool::get(&self.pool);
+        chunk.resize(self.pool.chunk_size(), 0);
+        let mut counter = CountingWriter { inner: &mut self.file, written: 0 };
+        let (raw_len, crc) = stream_into(reader, &mut chunk, compression, &mut counter)?;
+        let stored_len = counter.written;
+        drop(chunk);
+
+        // Patch raw_len / stored_len / crc now that they are known, then
+        // return to the end of the member.
+        let patch_offset = member_offset + 4 + 2 + name.len() as u64 + 1;
+        let mut patch = [0u8; 20];
+        patch[0..8].copy_from_slice(&raw_len.to_le_bytes());
+        patch[8..16].copy_from_slice(&stored_len.to_le_bytes());
+        patch[16..20].copy_from_slice(&crc.to_le_bytes());
+        self.file.seek(SeekFrom::Start(patch_offset))?;
+        self.file.write_all(&patch)?;
+        let end = member_offset + member_header_len(name.len()) + stored_len;
+        self.file.seek(SeekFrom::Start(end))?;
+
+        self.entries.push(Entry {
+            name: name.to_string(),
+            offset: member_offset,
+            raw_len,
+            stored_len,
+            crc32: crc,
+            compression,
+        });
+        self.offset = end;
+        Ok(())
+    }
+
+    /// Add a member by streaming a file from disk (never slurps it).
     pub fn add_path(&mut self, name: &str, path: &Path, compression: Compression) -> Result<()> {
-        let data =
-            std::fs::read(path).with_context(|| format!("reading member {}", path.display()))?;
-        self.add(name, &data, compression)
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("reading member {}", path.display()))?;
+        let mut reader = BufReader::with_capacity(CHUNK, f);
+        self.add_reader(name, &mut reader, compression)
+    }
+
+    /// Append many file members through the parallel-compression
+    /// pipeline: up to `threads` workers read + compress concurrently,
+    /// while this thread appends the finished blobs **in `members`
+    /// order** — the archive layout is identical to a sequential
+    /// [`Writer::add_path`] loop, only faster. On the first error no
+    /// further member is appended or claimed by a worker (compressions
+    /// already in flight drain), and that first error is returned.
+    pub fn add_paths_parallel(
+        &mut self,
+        members: &[(String, PathBuf)],
+        compression: Compression,
+        threads: usize,
+    ) -> Result<()> {
+        if threads <= 1 || members.len() <= 1 {
+            for (name, path) in members {
+                self.add_path(name, path, compression)?;
+            }
+            return Ok(());
+        }
+        let pool = self.pool.clone();
+        let jobs: Vec<&(String, PathBuf)> = members.iter().collect();
+        let abort = AtomicBool::new(false);
+        let mut result: Result<()> = Ok(());
+        ordered_pipeline(
+            jobs,
+            threads,
+            |(name, path)| {
+                if abort.load(AtomicOrdering::Relaxed) {
+                    bail!("member {name:?} skipped after an earlier failure");
+                }
+                compress_member(&pool, name, path, compression)
+            },
+            |blob: Result<Blob>| {
+                if result.is_ok() {
+                    result = blob.and_then(|b| self.append_blob(b));
+                    if result.is_err() {
+                        abort.store(true, AtomicOrdering::Relaxed);
+                    }
+                }
+            },
+        );
+        result
+    }
+
+    /// Append a worker-compressed blob (single appender: preserves order).
+    fn append_blob(&mut self, blob: Blob) -> Result<()> {
+        self.register(&blob.name)?;
+        let result = self.append_blob_inner(blob);
+        self.poison_on_err(result)
+    }
+
+    fn append_blob_inner(&mut self, blob: Blob) -> Result<()> {
+        let offset = self.offset;
+        self.write_header(
+            &blob.name,
+            blob.compression,
+            blob.raw_len,
+            blob.data.len() as u64,
+            blob.crc32,
+        )?;
+        self.file.write_all(&blob.data)?;
+        self.offset += member_header_len(blob.name.len()) + blob.data.len() as u64;
+        self.entries.push(Entry {
+            name: blob.name,
+            offset,
+            raw_len: blob.raw_len,
+            stored_len: blob.data.len() as u64,
+            crc32: blob.crc32,
+            compression: blob.compression,
+        });
+        Ok(())
     }
 
     /// Members written so far.
@@ -173,6 +413,11 @@ impl<F: IoWrite + Seek> Writer<F> {
     /// Write the index + trailer and flush. Returns the entry table.
     pub fn finish(mut self) -> Result<Vec<Entry>> {
         ensure!(!self.finished, "archive already finished");
+        ensure!(
+            !self.poisoned,
+            "archive writer poisoned by an earlier IO error; refusing to write an index \
+             over partial member bytes"
+        );
         self.finished = true;
         let index_offset = self.offset;
         let mut idx = Vec::new();
@@ -196,6 +441,63 @@ impl<F: IoWrite + Seek> Writer<F> {
     }
 }
 
+/// The single chunked-ingestion loop every write path shares: stream
+/// `reader` through `chunk`-sized reads into `sink` (deflating when
+/// asked), hashing the raw bytes incrementally. Returns
+/// `(raw_len, crc32)`; the caller measures stored bytes at the sink.
+fn stream_into(
+    reader: &mut dyn Read,
+    chunk: &mut [u8],
+    compression: Compression,
+    sink: &mut dyn IoWrite,
+) -> Result<(u64, u32)> {
+    let mut hasher = crc32fast::Hasher::new();
+    let mut raw_len = 0u64;
+    match compression {
+        Compression::None => loop {
+            let n = reader.read(chunk)?;
+            if n == 0 {
+                break;
+            }
+            hasher.update(&chunk[..n]);
+            sink.write_all(&chunk[..n])?;
+            raw_len += n as u64;
+        },
+        Compression::Deflate => {
+            let mut enc = flate2::write::DeflateEncoder::new(sink, flate2::Compression::fast());
+            loop {
+                let n = reader.read(chunk)?;
+                if n == 0 {
+                    break;
+                }
+                hasher.update(&chunk[..n]);
+                enc.write_all(&chunk[..n])?;
+                raw_len += n as u64;
+            }
+            enc.finish()?;
+        }
+    }
+    Ok((raw_len, hasher.finalize()))
+}
+
+/// Pipeline worker: read `path` in pooled chunks, CRC incrementally,
+/// compress into a pooled output buffer.
+fn compress_member(
+    pool: &Arc<BufferPool>,
+    name: &str,
+    path: &Path,
+    compression: Compression,
+) -> Result<Blob> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("reading member {}", path.display()))?;
+    let mut reader = BufReader::with_capacity(pool.chunk_size(), f);
+    let mut chunk = BufferPool::get(pool);
+    chunk.resize(pool.chunk_size(), 0);
+    let mut out = BufferPool::get(pool);
+    let (raw_len, crc32) = stream_into(&mut reader, &mut chunk, compression, &mut *out)?;
+    Ok(Blob { name: name.to_string(), raw_len, crc32, compression, data: out })
+}
+
 /// Random-access archive reader.
 pub struct Reader {
     path: PathBuf,
@@ -204,7 +506,9 @@ pub struct Reader {
 }
 
 impl Reader {
-    /// Open an archive and parse its index from the trailer.
+    /// Open an archive, parse its index from the trailer, and validate
+    /// that every entry's extent lies inside the member region (a corrupt
+    /// index cannot direct reads past EOF or demand absurd allocations).
     pub fn open(path: &Path) -> Result<Reader> {
         let mut f = std::fs::File::open(path)
             .with_context(|| format!("opening archive {}", path.display()))?;
@@ -224,7 +528,7 @@ impl Reader {
         let magic = read_u32(&mut cur)?;
         ensure!(magic == MAGIC_INDEX, "bad index magic {magic:#x}");
         let count = read_u32(&mut cur)? as usize;
-        let mut entries = Vec::with_capacity(count);
+        let mut entries = Vec::with_capacity(count.min(PREALLOC_CAP / 64));
         let mut by_name = BTreeMap::new();
         for i in 0..count {
             let name_len = read_u16(&mut cur)? as usize;
@@ -238,6 +542,16 @@ impl Reader {
             let stored_len = read_u64(&mut cur)?;
             let crc32 = read_u32(&mut cur)?;
             let flags = read_u8(&mut cur)?;
+            // Validate the extent against the member region
+            // [0, index_offset) before trusting it.
+            let end = offset
+                .checked_add(member_header_len(name_len))
+                .and_then(|v| v.checked_add(stored_len))
+                .with_context(|| format!("member {name:?}: extent overflows"))?;
+            ensure!(
+                end <= index_offset,
+                "member {name:?} extends beyond the member region (corrupt index)"
+            );
             by_name.insert(name.clone(), i);
             entries.push(Entry {
                 name,
@@ -275,39 +589,55 @@ impl Reader {
     pub fn extract(&self, name: &str) -> Result<Vec<u8>> {
         let entry = self.entry(name).with_context(|| format!("no member {name:?}"))?;
         let mut f = std::fs::File::open(&self.path)?;
-        Self::extract_from(&mut f, entry)
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        Self::read_member(&mut f, entry, &mut scratch, &mut out)?;
+        Ok(out)
     }
 
-    /// Extract a member given an already-open handle (thread-local handles
-    /// for parallel extraction).
-    fn extract_from(f: &mut std::fs::File, entry: &Entry) -> Result<Vec<u8>> {
-        // Skip the member header: magic(4) name_len(2) name flags(1)
-        // raw(8) stored(8) crc(4).
-        let header_len = 4 + 2 + entry.name.len() as u64 + 1 + 8 + 8 + 4;
+    /// Read one member into `out` given an already-open handle. `scratch`
+    /// and `out` are caller-owned so parallel extraction reuses one pair
+    /// per worker thread instead of allocating per member.
+    fn read_member(
+        f: &mut std::fs::File,
+        entry: &Entry,
+        scratch: &mut Vec<u8>,
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
+        let header_len = member_header_len(entry.name.len()) as usize;
         f.seek(SeekFrom::Start(entry.offset))?;
-        let mut head = vec![0u8; header_len as usize];
-        f.read_exact(&mut head)?;
-        let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+        scratch.clear();
+        scratch.resize(header_len, 0);
+        f.read_exact(&mut scratch[..])?;
+        let magic = u32::from_le_bytes(scratch[0..4].try_into().unwrap());
         ensure!(magic == MAGIC_MEMBER, "bad member magic at {}", entry.offset);
-        let mut stored = vec![0u8; entry.stored_len as usize];
-        f.read_exact(&mut stored)?;
-        let raw = match entry.compression {
-            Compression::None => stored,
-            Compression::Deflate => {
-                let mut out = Vec::with_capacity(entry.raw_len as usize);
-                flate2::read::DeflateDecoder::new(&stored[..]).read_to_end(&mut out)?;
-                out
+        match entry.compression {
+            Compression::None => {
+                out.clear();
+                out.resize(entry.stored_len as usize, 0);
+                f.read_exact(&mut out[..])?;
             }
-        };
-        ensure!(raw.len() as u64 == entry.raw_len, "length mismatch for {}", entry.name);
-        let crc = crc32fast::hash(&raw);
+            Compression::Deflate => {
+                scratch.clear();
+                scratch.resize(entry.stored_len as usize, 0);
+                f.read_exact(&mut scratch[..])?;
+                out.clear();
+                out.reserve((entry.raw_len as usize).min(PREALLOC_CAP));
+                flate2::read::DeflateDecoder::new(&scratch[..])
+                    .read_to_end(out)
+                    .with_context(|| format!("inflating member {}", entry.name))?;
+            }
+        }
+        ensure!(out.len() as u64 == entry.raw_len, "length mismatch for {}", entry.name);
+        let crc = crc32fast::hash(out);
         ensure!(crc == entry.crc32, "CRC mismatch for {} (corrupt archive)", entry.name);
-        Ok(raw)
+        Ok(())
     }
 
     /// Extract every member with `threads` workers; `visit` is called with
     /// `(name, bytes)` from worker threads. This is the §5.3 parallel
-    /// re-processing path that the indexed format enables.
+    /// re-processing path that the indexed format enables. Each worker
+    /// keeps one file handle and one reused buffer pair for its whole run.
     pub fn extract_parallel(
         &self,
         threads: usize,
@@ -331,13 +661,15 @@ impl Reader {
                             return;
                         }
                     };
+                    let mut scratch = Vec::new();
+                    let mut out = Vec::new();
                     loop {
                         let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                         if i >= entries.len() {
                             break;
                         }
-                        match Self::extract_from(&mut f, &entries[i]) {
-                            Ok(bytes) => visit(&entries[i].name, &bytes),
+                        match Self::read_member(&mut f, &entries[i], &mut scratch, &mut out) {
+                            Ok(()) => visit(&entries[i].name, &out),
                             Err(e) => {
                                 errors.lock().unwrap().push(e);
                                 break;
@@ -357,43 +689,62 @@ impl Reader {
 
 /// Tar-like sequential scan: read members in order without the index
 /// (what stage 2 must do when the collector used a tar-style archive).
-/// Visits `(name, raw bytes)`; verifies CRCs.
+/// Visits `(name, raw bytes)`; verifies CRCs. Streams through a
+/// [`BufReader`] — memory use is O(largest member), never O(archive), so
+/// multi-GiB archives scan without slurping.
 pub fn read_sequential(path: &Path, mut visit: impl FnMut(&str, &[u8])) -> Result<usize> {
-    let data = std::fs::read(path)?;
-    let mut cur = &data[..];
-    let mut count = 0;
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::with_capacity(CHUNK, f);
+    let mut count = 0usize;
+    let mut stored = Vec::new();
+    let mut raw = Vec::new();
     loop {
-        if cur.len() < 4 {
-            bail!("truncated archive: no trailer found");
-        }
-        let magic = u32::from_le_bytes(cur[0..4].try_into().unwrap());
+        let magic = match read_arr::<4>(&mut r) {
+            Ok(b) => u32::from_le_bytes(b),
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                bail!("truncated archive: no trailer found")
+            }
+            Err(e) => return Err(e.into()),
+        };
         if magic == MAGIC_INDEX {
             return Ok(count); // reached the index: done
         }
         ensure!(magic == MAGIC_MEMBER, "bad member magic {magic:#x}");
-        cur = &cur[4..];
-        let name_len = read_u16(&mut cur)? as usize;
-        let name = std::str::from_utf8(&cur[..name_len])?.to_string();
-        cur = &cur[name_len..];
-        let flags = read_u8(&mut cur)?;
-        let raw_len = read_u64(&mut cur)? as usize;
-        let stored_len = read_u64(&mut cur)? as usize;
-        let crc = read_u32(&mut cur)?;
-        ensure!(cur.len() >= stored_len, "truncated member {name}");
-        let stored = &cur[..stored_len];
-        cur = &cur[stored_len..];
-        let raw: Vec<u8> = match Compression::from_flag(flags)? {
-            Compression::None => stored.to_vec(),
+        let name_len = u16::from_le_bytes(read_arr::<2>(&mut r)?) as usize;
+        let mut name_buf = vec![0u8; name_len];
+        r.read_exact(&mut name_buf).context("truncated member name")?;
+        let name = String::from_utf8(name_buf).context("non-utf8 member name")?;
+        let flags = read_arr::<1>(&mut r)?[0];
+        let raw_len = u64::from_le_bytes(read_arr::<8>(&mut r)?) as usize;
+        let stored_len = u64::from_le_bytes(read_arr::<8>(&mut r)?) as usize;
+        let crc = u32::from_le_bytes(read_arr::<4>(&mut r)?);
+        // `take` + `read_to_end` grows with the bytes actually present, so
+        // a corrupt stored_len cannot force a giant allocation.
+        stored.clear();
+        let got = (&mut r).take(stored_len as u64).read_to_end(&mut stored)?;
+        ensure!(got == stored_len, "truncated member {name}");
+        let data: &[u8] = match Compression::from_flag(flags)? {
+            Compression::None => &stored,
             Compression::Deflate => {
-                let mut out = Vec::with_capacity(raw_len);
-                flate2::read::DeflateDecoder::new(stored).read_to_end(&mut out)?;
-                out
+                raw.clear();
+                raw.reserve(raw_len.min(PREALLOC_CAP));
+                flate2::read::DeflateDecoder::new(&stored[..])
+                    .read_to_end(&mut raw)
+                    .with_context(|| format!("inflating member {name}"))?;
+                &raw
             }
         };
-        ensure!(crc32fast::hash(&raw) == crc, "CRC mismatch for {name}");
-        visit(&name, &raw);
+        ensure!(data.len() == raw_len, "length mismatch for {name}");
+        ensure!(crc32fast::hash(data) == crc, "CRC mismatch for {name}");
+        visit(&name, data);
         count += 1;
     }
+}
+
+fn read_arr<const N: usize>(r: &mut impl Read) -> std::io::Result<[u8; N]> {
+    let mut b = [0u8; N];
+    r.read_exact(&mut b)?;
+    Ok(b)
 }
 
 fn read_u8(cur: &mut &[u8]) -> Result<u8> {
@@ -575,5 +926,174 @@ mod tests {
         w.finish().unwrap();
         let r = Reader::open(&path).unwrap();
         assert_eq!(r.extract("input.bin").unwrap(), b"file contents");
+    }
+
+    #[test]
+    fn streamed_add_path_spans_many_chunks() {
+        // A member several times the chunk size must stream through the
+        // pool, land with a correct back-patched header, and round-trip
+        // under both compressions.
+        let dir = tmpdir("stream");
+        let big: Vec<u8> = (0..3 * CHUNK + 12345).map(|i| (i % 253) as u8).collect();
+        let member = dir.join("big.bin");
+        std::fs::write(&member, &big).unwrap();
+        for (tag, compression) in [("none", Compression::None), ("z", Compression::Deflate)] {
+            let path = dir.join(format!("big-{tag}.cioar"));
+            let mut w = Writer::create(&path).unwrap();
+            w.add_path("big.bin", &member, compression).unwrap();
+            w.add("after", b"still fine", Compression::None).unwrap();
+            let entries = w.finish().unwrap();
+            assert_eq!(entries[0].raw_len, big.len() as u64, "{tag}");
+            assert_eq!(entries[0].crc32, crc32fast::hash(&big), "{tag}");
+            let r = Reader::open(&path).unwrap();
+            assert_eq!(r.extract("big.bin").unwrap(), big, "{tag}");
+            assert_eq!(r.extract("after").unwrap(), b"still fine", "{tag}");
+            // The sequential scan must agree with the patched headers too.
+            let mut names = Vec::new();
+            read_sequential(&path, |n, _| names.push(n.to_string())).unwrap();
+            assert_eq!(names, ["big.bin", "after"], "{tag}");
+        }
+    }
+
+    #[test]
+    fn zero_length_member_roundtrips() {
+        let dir = tmpdir("zero");
+        let path = dir.join("zero.cioar");
+        let empty = dir.join("empty.bin");
+        std::fs::write(&empty, b"").unwrap();
+        let mut w = Writer::create(&path).unwrap();
+        w.add_path("empty-z", &empty, Compression::Deflate).unwrap();
+        w.add_path("empty-n", &empty, Compression::None).unwrap();
+        w.finish().unwrap();
+        let r = Reader::open(&path).unwrap();
+        assert_eq!(r.extract("empty-z").unwrap(), b"");
+        assert_eq!(r.extract("empty-n").unwrap(), b"");
+        assert_eq!(read_sequential(&path, |_, _| {}).unwrap(), 2);
+    }
+
+    #[test]
+    fn parallel_writer_matches_sequential_layout() {
+        let dir = tmpdir("pw");
+        let members = sample_members(40);
+        let mut specs = Vec::new();
+        for (name, data) in &members {
+            let p = dir.join(name);
+            std::fs::write(&p, data).unwrap();
+            specs.push((name.clone(), p));
+        }
+        let seq_path = dir.join("seq.cioar");
+        let mut w = Writer::create(&seq_path).unwrap();
+        for (name, p) in &specs {
+            w.add_path(name, p, Compression::Deflate).unwrap();
+        }
+        let seq_entries = w.finish().unwrap();
+
+        let par_path = dir.join("par.cioar");
+        let mut w = Writer::create(&par_path).unwrap();
+        w.add_paths_parallel(&specs, Compression::Deflate, 4).unwrap();
+        let par_entries = w.finish().unwrap();
+
+        // Same member order, sizes, and checksums; identical bytes back.
+        assert_eq!(seq_entries.len(), par_entries.len());
+        for (a, b) in seq_entries.iter().zip(&par_entries) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.raw_len, b.raw_len);
+            assert_eq!(a.crc32, b.crc32);
+        }
+        let r = Reader::open(&par_path).unwrap();
+        for (name, data) in &members {
+            assert_eq!(&r.extract(name).unwrap(), data, "{name}");
+        }
+        // Sequential scan order matches submission order.
+        let mut order = Vec::new();
+        read_sequential(&par_path, |n, _| order.push(n.to_string())).unwrap();
+        let want: Vec<String> = members.iter().map(|(n, _)| n.clone()).collect();
+        assert_eq!(order, want);
+    }
+
+    #[test]
+    fn parallel_writer_surfaces_missing_file() {
+        let dir = tmpdir("pw-err");
+        let ok = dir.join("ok.bin");
+        std::fs::write(&ok, b"fine").unwrap();
+        let specs = vec![
+            ("ok".to_string(), ok),
+            ("ghost".to_string(), dir.join("does-not-exist.bin")),
+        ];
+        let mut w = Writer::create(&dir.join("e.cioar")).unwrap();
+        let err = w.add_paths_parallel(&specs, Compression::None, 4).unwrap_err();
+        assert!(err.to_string().contains("does-not-exist"), "{err}");
+    }
+
+    #[test]
+    fn failed_stream_poisons_writer() {
+        // A reader that dies mid-member leaves orphaned bytes in the
+        // file; the writer must refuse further members and refuse to
+        // finish, so no index is ever written over the partial member.
+        struct FailingReader {
+            fed: bool,
+        }
+        impl std::io::Read for FailingReader {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                if self.fed {
+                    Err(std::io::Error::other("disk on fire"))
+                } else {
+                    self.fed = true;
+                    buf[..7].copy_from_slice(b"partial");
+                    Ok(7)
+                }
+            }
+        }
+        let dir = tmpdir("poison");
+        let path = dir.join("poison.cioar");
+        let mut w = Writer::create(&path).unwrap();
+        w.add("ok", b"fine", Compression::None).unwrap();
+        let err = w
+            .add_reader("victim", &mut FailingReader { fed: false }, Compression::None)
+            .unwrap_err();
+        assert!(err.to_string().contains("disk on fire"), "{err}");
+        let err = w.add("after", b"x", Compression::None).unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+        let err = w.finish().unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+        // The unfinished file must not parse as an archive.
+        assert!(Reader::open(&path).is_err());
+    }
+
+    #[test]
+    fn duplicate_name_error_does_not_poison() {
+        let dir = tmpdir("dup-ok");
+        let path = dir.join("d2.cioar");
+        let mut w = Writer::create(&path).unwrap();
+        w.add("x", b"1", Compression::None).unwrap();
+        assert!(w.add("x", b"2", Compression::None).is_err());
+        // The file is still consistent: keep writing and finish cleanly.
+        w.add("y", b"3", Compression::None).unwrap();
+        w.finish().unwrap();
+        let r = Reader::open(&path).unwrap();
+        assert_eq!(r.extract("y").unwrap(), b"3");
+    }
+
+    #[test]
+    fn corrupt_index_extent_rejected_at_open() {
+        let dir = tmpdir("extent");
+        let path = dir.join("x.cioar");
+        let mut w = Writer::create(&path).unwrap();
+        w.add("m", &vec![1u8; 512], Compression::None).unwrap();
+        w.finish().unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // The index entry's stored_len lives after the trailer-relative
+        // layout: corrupt it by blasting the index region with 0xFF (but
+        // keep the trailer intact) — open must fail, not allocate wildly.
+        let index_offset = {
+            let t = &bytes[bytes.len() - 16..];
+            u64::from_le_bytes(t[0..8].try_into().unwrap()) as usize
+        };
+        let end = bytes.len() - 16;
+        for b in &mut bytes[index_offset + 8..end] {
+            *b = 0xFF;
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Reader::open(&path).is_err());
     }
 }

@@ -81,6 +81,18 @@ impl Policy {
     pub fn next_deadline(&self, last_write: SimTime) -> SimTime {
         last_write + self.max_delay + SimTime(1)
     }
+
+    /// Real-time wait budget until the `maxDelay` edge would trip, given
+    /// the time already elapsed since the last archive write. The
+    /// condvar-driven local collector sleeps exactly this long (absent
+    /// commit wakeups) instead of poll-spinning: 1 ms past the edge so the
+    /// strict `>` comparison in [`Policy::should_flush`] is satisfied on
+    /// wake.
+    pub fn until_deadline(&self, since_last_write: SimTime) -> std::time::Duration {
+        let remaining_ns =
+            self.max_delay.0.saturating_sub(since_last_write.0).saturating_add(1_000_000);
+        std::time::Duration::from_nanos(remaining_ns)
+    }
 }
 
 /// Per-collector flush statistics (one collector per IFS/ION).
@@ -209,6 +221,20 @@ mod tests {
         let d = p.next_deadline(SimTime::from_secs(10));
         assert_eq!(d, SimTime::from_secs(40) + SimTime(1));
         assert!(p.should_flush(d - SimTime::from_secs(10), 1, mib(500)).is_some());
+    }
+
+    #[test]
+    fn until_deadline_wait_trips_the_policy() {
+        let p = policy();
+        // 10 s into a 30 s maxDelay: wait ~20 s + 1 ms.
+        let wait = p.until_deadline(SimTime::from_secs(10));
+        assert!(wait > std::time::Duration::from_secs(20));
+        assert!(wait < std::time::Duration::from_secs(21));
+        // Sleeping that long guarantees the `>` edge is crossed.
+        let woken = SimTime::from_secs(10) + SimTime::from_secs_f64(wait.as_secs_f64());
+        assert_eq!(p.should_flush(woken, 1, mib(500)), Some(FlushReason::MaxDelay));
+        // Already past the edge: wake immediately (1 ms grace only).
+        assert!(p.until_deadline(SimTime::from_secs(31)) <= std::time::Duration::from_millis(1));
     }
 
     #[test]

@@ -143,6 +143,48 @@ pub fn estimate_tree(cfg: &ClusterConfig, n: u32, bytes: u64, shape: TreeShape) 
     }
 }
 
+/// Estimate **pipelined** (barrier-free) spanning-tree distribution — the
+/// model behind [`crate::cio::local::distribute_to_ifs`] after the PR-1
+/// rework: a copy starts the moment its source replica is complete and
+/// the source is free to send, not when its round opens.
+///
+/// This is also the *faithful* serialization model: [`estimate_tree`]
+/// charges one `per_copy` per round regardless of how many children a
+/// holder feeds that round, while this walk tracks per-holder busy time —
+/// so for k-ary trees (k > 1 children fed back-to-back) the pipelined
+/// estimate can exceed the barrier formula rather than undercut it.
+pub fn estimate_tree_pipelined(
+    cfg: &ClusterConfig,
+    n: u32,
+    bytes: u64,
+    shape: TreeShape,
+) -> DistEstimate {
+    let schedule = shape.schedule(n);
+    let gfs_pull = bytes as f64 / cfg.gfs.per_client_bw.min(cfg.gfs.read_agg_bw);
+    let per_copy = bytes as f64 / cfg.net.tree_copy_bw + cfg.net.tree_copy_setup_s;
+    // done[h]: when holder h's replica is complete; busy[h]: when holder h
+    // finishes its latest send. Schedules list copies in round order, so a
+    // copy's source always precedes it.
+    let mut done = vec![0.0f64; n as usize];
+    let mut busy = vec![0.0f64; n as usize];
+    done[0] = gfs_pull;
+    busy[0] = gfs_pull;
+    for c in &schedule {
+        let start = done[c.src as usize].max(busy[c.src as usize]);
+        let fin = start + per_copy;
+        busy[c.src as usize] = fin;
+        done[c.dst as usize] = fin;
+        busy[c.dst as usize] = fin;
+    }
+    let time_s = done.iter().cloned().fold(0.0f64, f64::max);
+    let demand = n as f64 * bytes as f64;
+    DistEstimate {
+        time_s,
+        equiv_throughput: demand / time_s,
+        bytes_moved: (schedule.len() as u64 + 1) * bytes,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,6 +254,53 @@ mod tests {
         assert_eq!(bin.len(), k4.len());
         assert!(rounds(&bin) <= rounds(&flat));
         assert!(rounds(&k4) <= rounds(&bin));
+    }
+
+    #[test]
+    fn pipelined_matches_barrier_for_binomial() {
+        // In a binomial tree every holder sends at most one copy per
+        // round, so with uniform link speeds removing the barrier changes
+        // nothing: both models must agree exactly.
+        let cfg = ClusterConfig::bgp(4096);
+        for n in [2u32, 8, 64, 1024] {
+            let barrier = estimate_tree(&cfg, n, mib(100), TreeShape::Binomial);
+            let pipelined = estimate_tree_pipelined(&cfg, n, mib(100), TreeShape::Binomial);
+            assert!(
+                (barrier.time_s - pipelined.time_s).abs() < 1e-9,
+                "n={n}: {} vs {}",
+                barrier.time_s,
+                pipelined.time_s
+            );
+            assert_eq!(barrier.bytes_moved, pipelined.bytes_moved);
+        }
+    }
+
+    #[test]
+    fn pipelined_flat_serializes_at_root() {
+        // Flat broadcast: the root feeds every holder back-to-back, so
+        // completion is pull + (n-1) sequential copies in both models.
+        let cfg = ClusterConfig::bgp(1024);
+        let n = 16u32;
+        let e = estimate_tree_pipelined(&cfg, n, mib(10), TreeShape::Flat);
+        let pull = mib(10) as f64 / cfg.gfs.per_client_bw.min(cfg.gfs.read_agg_bw);
+        let per_copy = mib(10) as f64 / cfg.net.tree_copy_bw + cfg.net.tree_copy_setup_s;
+        let want = pull + (n - 1) as f64 * per_copy;
+        assert!((e.time_s - want).abs() < 1e-9, "{} vs {want}", e.time_s);
+    }
+
+    #[test]
+    fn pipelined_kary_accounts_for_serialized_child_feeds() {
+        // A holder feeding k children does so sequentially; the barrier
+        // formula hides that inside "one round". The pipelined walk must
+        // therefore never report *less* time than the barrier formula for
+        // k-ary shapes, and must still beat flat.
+        let cfg = ClusterConfig::bgp(4096);
+        let n = 256u32;
+        let barrier = estimate_tree(&cfg, n, mib(100), TreeShape::Kary(4));
+        let pipelined = estimate_tree_pipelined(&cfg, n, mib(100), TreeShape::Kary(4));
+        assert!(pipelined.time_s >= barrier.time_s - 1e-9);
+        let flat = estimate_tree_pipelined(&cfg, n, mib(100), TreeShape::Flat);
+        assert!(pipelined.time_s < flat.time_s, "tree must beat root-serialized flat");
     }
 
     #[test]

@@ -8,6 +8,23 @@
 //! files and real [`crate::cio::archive`] archives, and a spanning-tree
 //! distributor that materializes replicas by copying files in tree order.
 //! Integration tests and the `dock_screening` example run on this.
+//!
+//! Concurrency shape (the PR-1 hot-path rework):
+//!
+//! * the collector is **condvar-driven**: [`LocalCollector::commit`]
+//!   moves the file and wakes the owning group's collector thread, which
+//!   does one batched `read_dir` scan and evaluates [`Policy`] — no
+//!   sleep-poll loop, so flush latency tracks the commit, not a poll
+//!   quantum. A coarse rescan backstop (and the `maxDelay` deadline)
+//!   still picks up files committed by the notification-free
+//!   [`commit_output`] free function.
+//! * each IFS group's collector builds its archives independently, and
+//!   within a flush the members are deflated by the
+//!   [`crate::cio::archive`] parallel-compression pipeline;
+//! * [`distribute_to_ifs`] executes the broadcast schedule **pipelined**:
+//!   a replica that lands early immediately starts feeding its children
+//!   instead of waiting for the slowest copy of its round (the old
+//!   per-round barrier).
 
 use crate::cio::archive::{Compression, Writer};
 use crate::cio::collector::{CollectorStats, FlushReason, Policy};
@@ -15,9 +32,14 @@ use crate::cio::distributor::TreeShape;
 use crate::util::units::SimTime;
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// How often an idle collector rescans for files committed without a
+/// wakeup (the [`commit_output`] free-function path). Notified commits
+/// never wait on this.
+const UNNOTIFIED_RESCAN: Duration = Duration::from_millis(250);
 
 /// Directory layout for a local run.
 #[derive(Debug, Clone)]
@@ -77,10 +99,25 @@ impl LocalLayout {
     }
 }
 
+/// State of one replica holder during a pipelined broadcast.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReplicaState {
+    /// Not yet copied.
+    Pending,
+    /// Copy complete; children may pull.
+    Ready,
+    /// Copy failed; children abort instead of waiting forever.
+    Failed,
+}
+
 /// Distribute (replicate) a GFS file to every IFS group's data directory
-/// following a spanning-tree schedule: round r copies run concurrently on
-/// threads, sources being replicas created in earlier rounds — the local
-/// equivalent of Chirp `replicate`. Returns the number of copies made.
+/// following a spanning-tree schedule — the local equivalent of Chirp
+/// `replicate`. Execution is **pipelined**: every scheduled copy runs on
+/// its own thread and starts the moment its source replica is ready
+/// (condvar handoff), so an early-landing replica feeds its children
+/// without waiting for its round's stragglers. The schedule's `round`
+/// numbers remain a dependency-order witness, not a barrier. Returns the
+/// number of copies made.
 pub fn distribute_to_ifs(layout: &LocalLayout, gfs_file: &str, shape: TreeShape) -> Result<u32> {
     let groups = layout.ifs_groups();
     let src = layout.gfs().join(gfs_file);
@@ -92,38 +129,69 @@ pub fn distribute_to_ifs(layout: &LocalLayout, gfs_file: &str, shape: TreeShape)
         return Ok(1);
     }
     let schedule = shape.schedule(groups);
-    let nrounds = crate::sim::topology::rounds(&schedule);
-    let mut copies = 1u32;
-    for round in 0..nrounds {
-        let this_round: Vec<_> = schedule.iter().filter(|c| c.round == round).collect();
-        let errors: Mutex<Vec<anyhow::Error>> = Mutex::new(Vec::new());
-        std::thread::scope(|scope| {
-            for copy in &this_round {
-                let src_path = layout.ifs_data(copy.src).join(gfs_file);
-                let dst_path = layout.ifs_data(copy.dst).join(gfs_file);
-                let errors = &errors;
-                scope.spawn(move || {
-                    if let Err(e) = std::fs::copy(&src_path, &dst_path) {
-                        errors.lock().unwrap().push(
-                            anyhow::Error::from(e)
-                                .context(format!("tree copy {:?}", dst_path)),
-                        );
+    let replicas: Vec<(Mutex<ReplicaState>, Condvar)> = (0..groups)
+        .map(|g| {
+            let state = if g == 0 { ReplicaState::Ready } else { ReplicaState::Pending };
+            (Mutex::new(state), Condvar::new())
+        })
+        .collect();
+    let errors: Mutex<Vec<anyhow::Error>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for copy in &schedule {
+            let src_path = layout.ifs_data(copy.src).join(gfs_file);
+            let dst_path = layout.ifs_data(copy.dst).join(gfs_file);
+            let (src_idx, dst_idx) = (copy.src as usize, copy.dst as usize);
+            let replicas = &replicas;
+            let errors = &errors;
+            scope.spawn(move || {
+                // Wait for the source replica to materialize.
+                let src_ok = {
+                    let (lock, cv) = &replicas[src_idx];
+                    let mut state = lock.lock().unwrap();
+                    while *state == ReplicaState::Pending {
+                        state = cv.wait(state).unwrap();
                     }
-                });
-            }
-        });
-        let errs = errors.into_inner().unwrap();
-        if let Some(e) = errs.into_iter().next() {
-            return Err(e);
+                    *state == ReplicaState::Ready
+                };
+                let result = if src_ok {
+                    std::fs::copy(&src_path, &dst_path).map(|_| ()).map_err(|e| {
+                        anyhow::Error::from(e)
+                            .context(format!("tree copy {}", dst_path.display()))
+                    })
+                } else {
+                    Err(anyhow::anyhow!(
+                        "replica {src_idx} failed upstream; copy to {dst_idx} skipped"
+                    ))
+                };
+                // Record the root-cause error BEFORE publishing Failed:
+                // children wake on the notify and push their synthetic
+                // "skipped" errors, which must never shadow the real one
+                // at the front of the list.
+                let ok = result.is_ok();
+                if let Err(e) = result {
+                    errors.lock().unwrap().push(e);
+                }
+                let (lock, cv) = &replicas[dst_idx];
+                let mut state = lock.lock().unwrap();
+                *state = if ok { ReplicaState::Ready } else { ReplicaState::Failed };
+                cv.notify_all();
+            });
         }
-        copies += this_round.len() as u32;
+    });
+    let errs = errors.into_inner().unwrap();
+    if let Some(e) = errs.into_iter().next() {
+        return Err(e);
     }
-    Ok(copies)
+    Ok(1 + schedule.len() as u32)
 }
 
 /// A task commits its output: the file moves from the node's LFS into its
 /// IFS group's staging directory (the paper moves completed output
 /// LFS→IFS, relying on rename atomicity within the staging FS).
+///
+/// This free function does **not** wake a running [`LocalCollector`];
+/// prefer [`LocalCollector::commit`], which does. Files committed through
+/// here are still picked up by the deadline / rescan backstop.
 pub fn commit_output(layout: &LocalLayout, node: u32, name: &str) -> Result<u64> {
     let src = layout.lfs(node).join(name);
     let dst = layout.ifs_staging(layout.group_of(node)).join(name);
@@ -139,32 +207,95 @@ pub fn commit_output(layout: &LocalLayout, node: u32, name: &str) -> Result<u64>
     Ok(bytes)
 }
 
+/// Commit-side wakeup channel for one IFS group's collector thread.
+#[derive(Default)]
+struct GroupSignal {
+    state: Mutex<GroupState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct GroupState {
+    /// Commits observed since the collector's last scan claim.
+    pending: u64,
+    /// Shutdown requested.
+    stop: bool,
+}
+
+impl GroupSignal {
+    fn notify_commit(&self) {
+        self.state.lock().unwrap().pending += 1;
+        self.cv.notify_one();
+    }
+
+    fn notify_stop(&self) {
+        self.state.lock().unwrap().stop = true;
+        self.cv.notify_all();
+    }
+}
+
 /// Handle to a running threaded collector (one thread per IFS group).
 pub struct LocalCollector {
-    stop: Arc<AtomicBool>,
+    signals: Arc<Vec<GroupSignal>>,
     handles: Vec<std::thread::JoinHandle<Result<CollectorStats>>>,
     archives_written: Arc<AtomicU64>,
 }
 
 impl LocalCollector {
     /// Start collector threads over every IFS group. Each thread runs the
-    /// §5.2 loop: poll the staging dir, evaluate [`Policy`], and on a
-    /// flush archive all staged files into one indexed archive in `gfs/`.
+    /// §5.2 loop event-driven: sleep on the group's condvar, wake on
+    /// commit (or at the `maxDelay` deadline), scan the staging dir once
+    /// (batched `read_dir`), evaluate [`Policy`], and on a flush archive
+    /// all staged files into one indexed archive in `gfs/` using the
+    /// parallel-compression pipeline.
     pub fn start(layout: &LocalLayout, policy: Policy, compression: Compression) -> LocalCollector {
-        let stop = Arc::new(AtomicBool::new(false));
+        let groups = layout.ifs_groups();
+        let signals: Arc<Vec<GroupSignal>> =
+            Arc::new((0..groups).map(|_| GroupSignal::default()).collect());
         let archives_written = Arc::new(AtomicU64::new(0));
+        // Split the machine's parallelism across the per-group flush
+        // pipelines so concurrent flushes do not oversubscribe.
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let flush_threads = (avail / groups.max(1) as usize).clamp(1, 8);
         let mut handles = Vec::new();
-        for g in 0..layout.ifs_groups() {
+        for g in 0..groups {
             let staging = layout.ifs_staging(g);
             let gfs = layout.gfs();
             let policy = policy.clone();
-            let stop = stop.clone();
+            let signals = signals.clone();
             let counter = archives_written.clone();
             handles.push(std::thread::spawn(move || {
-                collector_loop(g, &staging, &gfs, &policy, compression, &stop, &counter)
+                collector_loop(
+                    g,
+                    &staging,
+                    &gfs,
+                    &policy,
+                    compression,
+                    &signals[g as usize],
+                    &counter,
+                    flush_threads,
+                )
             }));
         }
-        LocalCollector { stop, handles, archives_written }
+        LocalCollector { signals, handles, archives_written }
+    }
+
+    /// Commit a task's output and wake the owning group's collector — the
+    /// condvar fast path. Flush latency is then bounded by the policy
+    /// evaluation plus archive IO, not a poll interval. `layout` must be
+    /// the one this collector was started over (checked, since a
+    /// mismatched layout would stage the file and then wake nobody).
+    pub fn commit(&self, layout: &LocalLayout, node: u32, name: &str) -> Result<u64> {
+        let group = layout.group_of(node) as usize;
+        anyhow::ensure!(
+            group < self.signals.len(),
+            "node {node} is in IFS group {group}, but this collector serves {} group(s) — \
+             commit called with a different layout than start()?",
+            self.signals.len()
+        );
+        let bytes = commit_output(layout, node, name)?;
+        self.signals[group].notify_commit();
+        Ok(bytes)
     }
 
     /// Archives written so far (all groups).
@@ -175,7 +306,9 @@ impl LocalCollector {
     /// Signal shutdown, final-drain every staging dir, and return merged
     /// stats.
     pub fn finish(self) -> Result<CollectorStats> {
-        self.stop.store(true, Ordering::SeqCst);
+        for signal in self.signals.iter() {
+            signal.notify_stop();
+        }
         let mut total = CollectorStats::default();
         for h in self.handles {
             let stats = h.join().map_err(|_| anyhow::anyhow!("collector thread panicked"))??;
@@ -206,15 +339,22 @@ fn collector_loop(
     gfs: &Path,
     policy: &Policy,
     compression: Compression,
-    stop: &AtomicBool,
+    signal: &GroupSignal,
     counter: &AtomicU64,
+    flush_threads: usize,
 ) -> Result<CollectorStats> {
     let mut stats = CollectorStats::default();
     let started = Instant::now();
     let mut last_write = Duration::ZERO;
     let mut seq = 0u64;
     loop {
-        let stopping = stop.load(Ordering::SeqCst);
+        // Claim every wakeup observed so far: a commit arriving after this
+        // point re-arms the condvar instead of being lost to the scan.
+        let stopping = {
+            let mut state = signal.state.lock().unwrap();
+            state.pending = 0;
+            state.stop
+        };
         let files = staged_files(staging)?;
         let buffered: u64 = files.iter().map(|(_, b)| b).sum();
         let since = SimTime::from_secs_f64((started.elapsed() - last_write).as_secs_f64());
@@ -229,11 +369,14 @@ fn collector_loop(
         if let Some(reason) = reason {
             let archive_name = format!("out-g{group}-{seq:05}.cioar");
             seq += 1;
+            let members: Vec<(String, PathBuf)> = files
+                .iter()
+                .map(|(path, _)| {
+                    (path.file_name().unwrap().to_string_lossy().to_string(), path.clone())
+                })
+                .collect();
             let mut w = Writer::create(&gfs.join(&archive_name))?;
-            for (path, _) in &files {
-                let name = path.file_name().unwrap().to_string_lossy().to_string();
-                w.add_path(&name, path, compression)?;
-            }
+            w.add_paths_parallel(&members, compression, flush_threads)?;
             w.finish()?;
             for (path, _) in &files {
                 std::fs::remove_file(path)?;
@@ -245,7 +388,21 @@ fn collector_loop(
         if stopping {
             return Ok(stats);
         }
-        std::thread::sleep(Duration::from_millis(5));
+        // Sleep until a commit wakes us, the maxDelay edge passes (only
+        // meaningful while data is buffered — an empty staging dir never
+        // deadline-flushes), or the unnotified-commit backstop expires.
+        let has_backlog = reason.is_none() && buffered > 0;
+        let wait = if has_backlog {
+            let since_now =
+                SimTime::from_secs_f64((started.elapsed() - last_write).as_secs_f64());
+            policy.until_deadline(since_now).min(UNNOTIFIED_RESCAN)
+        } else {
+            UNNOTIFIED_RESCAN
+        };
+        let state = signal.state.lock().unwrap();
+        if state.pending == 0 && !state.stop {
+            let _unused = signal.cv.wait_timeout(state, wait).unwrap();
+        }
     }
 }
 
@@ -313,7 +470,7 @@ mod tests {
             let node = t % 8;
             let name = format!("task-{t:03}.out");
             std::fs::write(l.lfs(node).join(&name), vec![t as u8; 256]).unwrap();
-            commit_output(&l, node, &name).unwrap();
+            collector.commit(&l, node, &name).unwrap();
         }
         // Wait for at least one policy-triggered flush, then stop.
         let deadline = Instant::now() + Duration::from_secs(5);
@@ -353,9 +510,67 @@ mod tests {
         };
         let collector = LocalCollector::start(&l, policy, Compression::Deflate);
         std::fs::write(l.lfs(0).join("late.out"), b"late data").unwrap();
-        commit_output(&l, 0, "late.out").unwrap();
+        collector.commit(&l, 0, "late.out").unwrap();
         let stats = collector.finish().unwrap();
         assert_eq!(stats.files, 1);
         assert_eq!(stats.reasons[3], 1, "shutdown drain: {:?}", stats.reasons);
+    }
+
+    #[test]
+    fn unnotified_commits_still_collected() {
+        // The free-function path (no condvar wakeup) must be drained by
+        // the rescan backstop / shutdown, not lost.
+        let root = tmp("unnotified");
+        let l = LocalLayout::create(&root, 2, 2).unwrap();
+        let policy = Policy {
+            max_delay: SimTime::from_secs(3600),
+            max_data: 64, // any commit exceeds this
+            min_free_space: 0,
+        };
+        let collector = LocalCollector::start(&l, policy, Compression::None);
+        std::fs::write(l.lfs(0).join("quiet.out"), vec![9u8; 512]).unwrap();
+        commit_output(&l, 0, "quiet.out").unwrap(); // deliberately no notify
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while collector.archives_written() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(collector.archives_written() >= 1, "backstop rescan must find the file");
+        let stats = collector.finish().unwrap();
+        assert_eq!(stats.files, 1);
+    }
+
+    #[test]
+    fn notified_flush_latency_is_not_poll_quantized() {
+        // With maxData=1 every commit triggers a flush; the condvar path
+        // must complete a *typical* round trip well under the old 5 ms
+        // poll floor. Assert on the median so one scheduler stall on a
+        // loaded CI runner cannot flake the test.
+        let root = tmp("latency");
+        let l = LocalLayout::create(&root, 1, 1).unwrap();
+        let policy =
+            Policy { max_delay: SimTime::from_secs(3600), max_data: 1, min_free_space: 0 };
+        let collector = LocalCollector::start(&l, policy, Compression::None);
+        let rounds = 20u64;
+        let mut latencies = Vec::new();
+        for i in 0..rounds {
+            let name = format!("r{i:02}.out");
+            std::fs::write(l.lfs(0).join(&name), vec![1u8; 128]).unwrap();
+            let t0 = Instant::now();
+            collector.commit(&l, 0, &name).unwrap();
+            let deadline = Instant::now() + Duration::from_secs(5);
+            while collector.archives_written() <= i && Instant::now() < deadline {
+                std::thread::yield_now();
+            }
+            latencies.push(t0.elapsed());
+        }
+        let stats = collector.finish().unwrap();
+        assert_eq!(stats.files, rounds);
+        latencies.sort();
+        let median = latencies[latencies.len() / 2];
+        assert!(
+            median < Duration::from_millis(5),
+            "median commit->flush latency {median:?}; condvar path should beat the \
+             old 5 ms poll quantum"
+        );
     }
 }

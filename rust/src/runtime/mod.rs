@@ -9,6 +9,13 @@
 //! time. (Text, not `.serialize()`: jax ≥ 0.5 emits protos with 64-bit
 //! instruction ids which xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids. See DESIGN.md and /opt/xla-example.)
+//!
+//! The `xla` bindings are not vendored in this tree, so PJRT execution is
+//! gated behind the `pjrt` cargo feature. Without it, [`ScoreModel`] and
+//! [`ScreenModel`] still load and validate artifacts but execute via the
+//! pure-Rust [`score_reference`] interpreter — numerically identical (it
+//! mirrors the jnp oracle), just not JIT-compiled — so every example,
+//! test, and bench runs on a bare toolchain.
 
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -66,8 +73,10 @@ impl ArtifactMeta {
     }
 }
 
-/// A loaded, compiled docking-score executable.
+/// A loaded docking-score executable (PJRT-compiled with the `pjrt`
+/// feature, reference-interpreted without).
 pub struct ScoreModel {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
     /// Shape metadata.
     pub meta: ArtifactMeta,
@@ -102,14 +111,19 @@ impl ScoreModel {
             None => hlo_path.with_extension("meta"),
         };
         let meta = ArtifactMeta::load(&meta_path)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path.to_str().context("non-utf8 artifact path")?,
-        )
-        .context("parsing HLO text")?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).context("compiling HLO")?;
-        Ok(ScoreModel { exe, meta, path: hlo_path.to_path_buf() })
+        #[cfg(feature = "pjrt")]
+        {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path.to_str().context("non-utf8 artifact path")?,
+            )
+            .context("parsing HLO text")?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).context("compiling HLO")?;
+            Ok(ScoreModel { exe, meta, path: hlo_path.to_path_buf() })
+        }
+        #[cfg(not(feature = "pjrt"))]
+        Ok(ScoreModel { meta, path: hlo_path.to_path_buf() })
     }
 
     /// Score a batch: `ligands` is `[batch, atoms, 4]` (x, y, z, charge)
@@ -126,18 +140,23 @@ impl ScoreModel {
         );
         anyhow::ensure!(grid.len() == m.atoms * m.features, "grid length mismatch");
         anyhow::ensure!(weights.len() == m.features, "weights length mismatch");
-        let lig = xla::Literal::vec1(ligands).reshape(&[
-            m.batch as i64,
-            m.atoms as i64,
-            4,
-        ])?;
-        let grd = xla::Literal::vec1(grid).reshape(&[m.atoms as i64, m.features as i64])?;
-        let wts = xla::Literal::vec1(weights);
-        let result = self.exe.execute::<xla::Literal>(&[lig, grd, wts])?[0][0]
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let scores = result.to_tuple1()?;
-        Ok(scores.to_vec::<f32>()?)
+        #[cfg(feature = "pjrt")]
+        {
+            let lig = xla::Literal::vec1(ligands).reshape(&[
+                m.batch as i64,
+                m.atoms as i64,
+                4,
+            ])?;
+            let grd = xla::Literal::vec1(grid).reshape(&[m.atoms as i64, m.features as i64])?;
+            let wts = xla::Literal::vec1(weights);
+            let result = self.exe.execute::<xla::Literal>(&[lig, grd, wts])?[0][0]
+                .to_literal_sync()?;
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let scores = result.to_tuple1()?;
+            Ok(scores.to_vec::<f32>()?)
+        }
+        #[cfg(not(feature = "pjrt"))]
+        Ok(score_reference(m, ligands, grid, weights))
     }
 }
 
@@ -145,6 +164,7 @@ impl ScoreModel {
 /// stage-2 "select" step compiled into the same graph; §5.3 downstream
 /// processing without touching Python).
 pub struct ScreenModel {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
     /// Shape metadata (`top_k` > 0).
     pub meta: ArtifactMeta,
@@ -180,13 +200,18 @@ impl ScreenModel {
         };
         let meta = ArtifactMeta::load(&meta_path)?;
         anyhow::ensure!(meta.top_k > 0, "screen artifact must declare top_k");
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path.to_str().context("non-utf8 artifact path")?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).context("compiling HLO")?;
-        Ok(ScreenModel { exe, meta })
+        #[cfg(feature = "pjrt")]
+        {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path.to_str().context("non-utf8 artifact path")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).context("compiling HLO")?;
+            Ok(ScreenModel { exe, meta })
+        }
+        #[cfg(not(feature = "pjrt"))]
+        Ok(ScreenModel { meta })
     }
 
     /// Run the screen: scores + top-k best poses in one PJRT execution.
@@ -195,18 +220,34 @@ impl ScreenModel {
         anyhow::ensure!(ligands.len() == m.batch * m.atoms * 4, "ligands length mismatch");
         anyhow::ensure!(grid.len() == m.atoms * m.features, "grid length mismatch");
         anyhow::ensure!(weights.len() == m.features, "weights length mismatch");
-        let lig =
-            xla::Literal::vec1(ligands).reshape(&[m.batch as i64, m.atoms as i64, 4])?;
-        let grd = xla::Literal::vec1(grid).reshape(&[m.atoms as i64, m.features as i64])?;
-        let wts = xla::Literal::vec1(weights);
-        let result =
-            self.exe.execute::<xla::Literal>(&[lig, grd, wts])?[0][0].to_literal_sync()?;
-        let (scores, idx, best) = result.to_tuple3()?;
-        Ok(ScreenResult {
-            scores: scores.to_vec::<f32>()?,
-            best_idx: idx.to_vec::<i32>()?,
-            best_scores: best.to_vec::<f32>()?,
-        })
+        #[cfg(feature = "pjrt")]
+        {
+            let lig =
+                xla::Literal::vec1(ligands).reshape(&[m.batch as i64, m.atoms as i64, 4])?;
+            let grd = xla::Literal::vec1(grid).reshape(&[m.atoms as i64, m.features as i64])?;
+            let wts = xla::Literal::vec1(weights);
+            let result =
+                self.exe.execute::<xla::Literal>(&[lig, grd, wts])?[0][0].to_literal_sync()?;
+            let (scores, idx, best) = result.to_tuple3()?;
+            Ok(ScreenResult {
+                scores: scores.to_vec::<f32>()?,
+                best_idx: idx.to_vec::<i32>()?,
+                best_scores: best.to_vec::<f32>()?,
+            })
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            // Reference path: score, then select top-k by ascending energy
+            // (the fused selection the screen artifact performs on-device).
+            let scores = score_reference(m, ligands, grid, weights);
+            let mut order: Vec<i32> = (0..m.batch as i32).collect();
+            order.sort_by(|&a, &b| {
+                scores[a as usize].partial_cmp(&scores[b as usize]).expect("finite scores")
+            });
+            order.truncate(m.top_k);
+            let best_scores = order.iter().map(|&i| scores[i as usize]).collect();
+            Ok(ScreenResult { scores, best_idx: order, best_scores })
+        }
     }
 }
 

@@ -78,6 +78,61 @@ impl BenchResult {
             self.name, self.ns_per_iter.mean, self.ns_per_iter.p50, self.ns_per_iter.p95, self.ns_per_iter.n
         )
     }
+
+    /// One-line machine-readable JSON record.
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"kind\":\"bench\",\"name\":{},\"ns_per_iter_mean\":{:.1},\"ns_p50\":{:.1},\"ns_p95\":{:.1},\"iters\":{}}}",
+            json_str(&self.name),
+            self.ns_per_iter.mean,
+            self.ns_per_iter.p50,
+            self.ns_per_iter.p95,
+            self.iters
+        )
+    }
+}
+
+/// A named scalar recorded alongside bench results (throughputs,
+/// latencies derived outside [`Bencher::iter`]'s ns/iter framing).
+#[derive(Debug, Clone)]
+pub struct Metric {
+    /// Metric id.
+    pub name: String,
+    /// Value in `unit`.
+    pub value: f64,
+    /// Unit label (e.g. `"MiB/s"`, `"us"`).
+    pub unit: String,
+}
+
+impl Metric {
+    /// One-line machine-readable JSON record.
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"kind\":\"metric\",\"name\":{},\"value\":{:.3},\"unit\":{}}}",
+            json_str(&self.name),
+            self.value,
+            json_str(&self.unit)
+        )
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 /// The harness: collects results, prints a summary.
@@ -85,17 +140,18 @@ impl BenchResult {
 pub struct Bencher {
     config: BenchConfig,
     results: Vec<BenchResult>,
+    metrics: Vec<Metric>,
 }
 
 impl Bencher {
     /// Harness with config from the environment.
     pub fn new() -> Self {
-        Bencher { config: BenchConfig::from_env(), results: Vec::new() }
+        Bencher { config: BenchConfig::from_env(), results: Vec::new(), metrics: Vec::new() }
     }
 
     /// Harness with an explicit config.
     pub fn with_config(config: BenchConfig) -> Self {
-        Bencher { config, results: Vec::new() }
+        Bencher { config, results: Vec::new(), metrics: Vec::new() }
     }
 
     /// Measure `f`, batching iterations adaptively so that timer overhead
@@ -154,9 +210,45 @@ impl Bencher {
         out
     }
 
+    /// Record a derived scalar (throughput, latency percentile, …) so it
+    /// lands in the JSON output next to the ns/iter results.
+    pub fn metric(&mut self, name: &str, value: f64, unit: &str) {
+        println!("{:<40} {:>12.3} {}", name, value, unit);
+        self.metrics.push(Metric {
+            name: name.to_string(),
+            value,
+            unit: unit.to_string(),
+        });
+    }
+
     /// All recorded results.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
+    }
+
+    /// All recorded metrics.
+    pub fn metrics(&self) -> &[Metric] {
+        &self.metrics
+    }
+
+    /// Machine-readable output: one JSON object per line (benches then
+    /// metrics) — the format `BENCH_PR*.json` baselines are stored in.
+    pub fn to_json_lines(&self) -> String {
+        let mut out = String::new();
+        for r in &self.results {
+            out.push_str(&r.json());
+            out.push('\n');
+        }
+        for m in &self.metrics {
+            out.push_str(&m.json());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write [`Bencher::to_json_lines`] to `path`.
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json_lines())
     }
 
     /// Print the final summary block.
@@ -164,6 +256,9 @@ impl Bencher {
         println!("\n--- bench summary ({} benchmarks) ---", self.results.len());
         for r in &self.results {
             println!("{}", r.line());
+        }
+        for m in &self.metrics {
+            println!("{:<40} {:>12.3} {}", m.name, m.value, m.unit);
         }
     }
 }
@@ -208,5 +303,25 @@ mod tests {
     fn fast_profile_from_env_flag() {
         let cfg = BenchConfig::fast();
         assert!(cfg.measure < BenchConfig::default().measure);
+    }
+
+    #[test]
+    fn json_lines_cover_results_and_metrics() {
+        let mut b = Bencher::with_config(BenchConfig::fast());
+        b.once("unit \"quoted\"", || 1);
+        b.metric("archive: write MiB/s", 123.456, "MiB/s");
+        let json = b.to_json_lines();
+        let lines: Vec<&str> = json.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("{\"kind\":\"bench\""), "{}", lines[0]);
+        assert!(lines[0].contains("\\\"quoted\\\""), "escaping: {}", lines[0]);
+        assert!(lines[1].contains("\"value\":123.456"), "{}", lines[1]);
+        assert!(lines[1].contains("\"unit\":\"MiB/s\""), "{}", lines[1]);
+    }
+
+    #[test]
+    fn json_escapes_control_chars() {
+        assert_eq!(json_str("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(json_str("\u{1}"), "\"\\u0001\"");
     }
 }

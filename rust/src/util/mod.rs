@@ -3,12 +3,14 @@
 //! descriptive statistics ([`stats`]), a TOML-subset parser ([`toml`]), a
 //! command-line parser ([`cli`]), a criterion-like bench harness
 //! ([`bench`]), a proptest-like property testing mini-framework
-//! ([`quick`]), a `log`-facade backend ([`logging`]), and ASCII table
-//! rendering ([`table`]).
+//! ([`quick`]), a `log`-facade backend ([`logging`]), ASCII table
+//! rendering ([`table`]), and the buffer pool + ordered worker pipeline
+//! backing the parallel archive/collector hot paths ([`pool`]).
 
 pub mod bench;
 pub mod cli;
 pub mod logging;
+pub mod pool;
 pub mod quick;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,257 @@
+//! Buffer pool + scoped worker pipeline shared by the collective-IO hot
+//! paths (archive compression, member extraction, collector flushes).
+//!
+//! Two pieces:
+//!
+//! * [`BufferPool`] — a lock-protected free list of `Vec<u8>` buffers.
+//!   Hot loops that would otherwise allocate a fresh chunk per member
+//!   ([`crate::cio::archive`]) instead check one out ([`BufferPool::get`])
+//!   and return it automatically on drop, so steady-state archiving does
+//!   no allocation at all.
+//! * [`ordered_pipeline`] — a scoped fan-out/fan-in worker pool: `jobs`
+//!   run on up to `threads` workers concurrently, and each result is
+//!   handed to `sink` **in submission order**. This is the shape of the
+//!   parallel-compression pipeline: N workers deflate archive members
+//!   concurrently while a single appender preserves on-disk member order.
+
+use std::collections::BTreeMap;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// A shared free list of reusable byte buffers.
+///
+/// `chunk` is the capacity new buffers are created with (and the natural
+/// IO granularity for users); `max_pooled` bounds how many idle buffers
+/// are retained so a burst does not pin memory forever.
+pub struct BufferPool {
+    bufs: Mutex<Vec<Vec<u8>>>,
+    chunk: usize,
+    max_pooled: usize,
+}
+
+impl BufferPool {
+    /// Create a pool handing out buffers of `chunk` bytes capacity,
+    /// retaining at most `max_pooled` idle buffers.
+    pub fn new(chunk: usize, max_pooled: usize) -> Arc<BufferPool> {
+        Arc::new(BufferPool { bufs: Mutex::new(Vec::new()), chunk, max_pooled })
+    }
+
+    /// Check out a cleared buffer (reused if one is idle, fresh
+    /// otherwise). The buffer returns to the pool when the handle drops.
+    /// (Associated fn, not a method: the handle must clone the `Arc`, and
+    /// `self: &Arc<Self>` receivers are not stable Rust.)
+    pub fn get(pool: &Arc<BufferPool>) -> PooledBuf {
+        let buf = pool
+            .bufs
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| Vec::with_capacity(pool.chunk));
+        PooledBuf { buf, pool: Arc::clone(pool) }
+    }
+
+    /// The capacity new buffers are created with.
+    pub fn chunk_size(&self) -> usize {
+        self.chunk
+    }
+
+    /// Idle buffers currently pooled (diagnostics / tests).
+    pub fn pooled(&self) -> usize {
+        self.bufs.lock().unwrap().len()
+    }
+}
+
+/// A checked-out buffer; derefs to `Vec<u8>` and returns to its pool on
+/// drop.
+pub struct PooledBuf {
+    buf: Vec<u8>,
+    pool: Arc<BufferPool>,
+}
+
+impl PooledBuf {
+    /// Detach the underlying vector from the pool (it will not be
+    /// returned on drop).
+    pub fn take(mut self) -> Vec<u8> {
+        std::mem::take(&mut self.buf)
+    }
+}
+
+impl Deref for PooledBuf {
+    type Target = Vec<u8>;
+    fn deref(&self) -> &Vec<u8> {
+        &self.buf
+    }
+}
+
+impl DerefMut for PooledBuf {
+    fn deref_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        let mut buf = std::mem::take(&mut self.buf);
+        if buf.capacity() == 0 {
+            return; // taken, or never grown — nothing worth pooling
+        }
+        buf.clear();
+        let mut pool = self.pool.bufs.lock().unwrap();
+        if pool.len() < self.pool.max_pooled {
+            pool.push(buf);
+        }
+    }
+}
+
+/// Run every job through `work` on up to `threads` scoped workers,
+/// delivering each result to `sink` in **submission order**.
+///
+/// Results flow through a bounded channel so workers see backpressure
+/// from a slow sink; the reorder buffer is unbounded only in the
+/// pathological case where the very first job is the slowest (memory then
+/// peaks at one result per remaining job). With `threads <= 1` (or a
+/// single job) everything runs inline on the caller's thread.
+pub fn ordered_pipeline<J, R, W, S>(jobs: Vec<J>, threads: usize, work: W, mut sink: S)
+where
+    J: Send,
+    R: Send,
+    W: Fn(J) -> R + Sync,
+    S: FnMut(R),
+{
+    let n = jobs.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        for job in jobs {
+            sink(work(job));
+        }
+        return;
+    }
+    // Each slot is claimed exactly once via the shared counter.
+    let slots: Vec<Mutex<Option<J>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::sync_channel::<(usize, R)>(threads * 2);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let slots = &slots;
+            let next = &next;
+            let work = &work;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    return;
+                }
+                let job = slots[i].lock().unwrap().take().expect("slot claimed once");
+                if tx.send((i, work(job))).is_err() {
+                    return; // receiver gone: caller is unwinding
+                }
+            });
+        }
+        drop(tx);
+        // Fan-in: reorder to submission order.
+        let mut pending: BTreeMap<usize, R> = BTreeMap::new();
+        let mut want = 0usize;
+        for (i, result) in rx {
+            pending.insert(i, result);
+            while let Some(result) = pending.remove(&want) {
+                sink(result);
+                want += 1;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_reuses_buffers() {
+        let pool = BufferPool::new(4096, 4);
+        {
+            let mut b = BufferPool::get(&pool);
+            b.extend_from_slice(&[1, 2, 3]);
+            assert!(b.capacity() >= 4096);
+        }
+        assert_eq!(pool.pooled(), 1);
+        let b = BufferPool::get(&pool);
+        assert!(b.is_empty(), "returned buffers are cleared");
+        assert!(b.capacity() >= 4096, "capacity survives the round trip");
+        assert_eq!(pool.pooled(), 0);
+    }
+
+    #[test]
+    fn pool_bounds_idle_buffers() {
+        let pool = BufferPool::new(16, 2);
+        let bufs: Vec<_> = (0..5).map(|_| BufferPool::get(&pool)).collect();
+        drop(bufs);
+        assert_eq!(pool.pooled(), 2, "max_pooled caps retention");
+    }
+
+    #[test]
+    fn take_detaches_from_pool() {
+        let pool = BufferPool::new(16, 8);
+        let mut b = BufferPool::get(&pool);
+        b.push(7);
+        let v = b.take();
+        assert_eq!(v, vec![7]);
+        assert_eq!(pool.pooled(), 0, "taken buffers are not pooled");
+    }
+
+    #[test]
+    fn pipeline_preserves_submission_order() {
+        let jobs: Vec<u64> = (0..200).collect();
+        let mut out = Vec::new();
+        ordered_pipeline(
+            jobs,
+            8,
+            |j| {
+                // Jitter completion order: even jobs finish late.
+                if j % 2 == 0 {
+                    std::thread::sleep(std::time::Duration::from_micros(50));
+                }
+                j * 10
+            },
+            |r| out.push(r),
+        );
+        let want: Vec<u64> = (0..200).map(|j| j * 10).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn pipeline_runs_inline_single_threaded() {
+        let mut out = Vec::new();
+        ordered_pipeline(vec![1, 2, 3], 1, |j| j + 1, |r| out.push(r));
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn pipeline_handles_empty_and_fewer_jobs_than_threads() {
+        let mut out: Vec<i32> = Vec::new();
+        ordered_pipeline(Vec::<i32>::new(), 4, |j| j, |r| out.push(r));
+        assert!(out.is_empty());
+        ordered_pipeline(vec![9], 16, |j| j, |r| out.push(r));
+        assert_eq!(out, vec![9]);
+    }
+
+    #[test]
+    fn pipeline_propagates_results_not_panics() {
+        // Errors travel as values (Result), the idiom archive.rs uses.
+        let jobs: Vec<u32> = (0..50).collect();
+        let mut first_err = None;
+        ordered_pipeline(
+            jobs,
+            4,
+            |j| if j == 13 { Err(j) } else { Ok(j) },
+            |r: Result<u32, u32>| {
+                if first_err.is_none() {
+                    if let Err(e) = r {
+                        first_err = Some(e);
+                    }
+                }
+            },
+        );
+        assert_eq!(first_err, Some(13));
+    }
+}

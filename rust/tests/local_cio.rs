@@ -47,7 +47,7 @@ fn full_pipeline_roundtrip() {
         let out: Vec<u8> = input.iter().take(512).map(|&b| b ^ (t as u8)).collect();
         let name = format!("out-{t:03}.bin");
         std::fs::write(layout.lfs(node).join(&name), &out).unwrap();
-        commit_output(&layout, node, &name).unwrap();
+        collector.commit(&layout, node, &name).unwrap();
         expected.insert(name, out);
     }
     let stats = collector.finish().unwrap();
@@ -118,12 +118,13 @@ fn collector_survives_concurrent_commits() {
     std::thread::scope(|scope| {
         for w in 0..8u32 {
             let layout = &layout;
+            let collector = &collector;
             scope.spawn(move || {
                 for i in 0..25u32 {
                     let node = w % nodes;
                     let name = format!("w{w}-i{i:02}.out");
                     std::fs::write(layout.lfs(node).join(&name), vec![w as u8; 300]).unwrap();
-                    commit_output(layout, node, &name).unwrap();
+                    collector.commit(layout, node, &name).unwrap();
                     std::thread::sleep(std::time::Duration::from_millis(1));
                 }
             });
