@@ -595,6 +595,42 @@ impl Reader {
         Ok(out)
     }
 
+    /// Read `len` bytes at `offset` within member `name` — the member-
+    /// range random access a stage task uses to pick records out of a
+    /// cached (IFS-retained) archive without extracting the whole member.
+    /// The range is clamped to the member's length, so a read at EOF
+    /// returns an empty vec.
+    ///
+    /// For `Compression::None` members this is one seek + one read of
+    /// exactly the requested extent; note that a partial read cannot be
+    /// CRC-verified (the checksum covers the whole member — use
+    /// [`Reader::extract`] when integrity matters more than IO). Deflate
+    /// members have no random-access substructure, so the member is
+    /// inflated (and CRC-checked) and the range sliced out.
+    pub fn extract_range(&self, name: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let entry = self.entry(name).with_context(|| format!("no member {name:?}"))?;
+        let start = offset.min(entry.raw_len);
+        let take = (len as u64).min(entry.raw_len - start) as usize;
+        if take == 0 {
+            return Ok(Vec::new());
+        }
+        match entry.compression {
+            Compression::None => {
+                let mut f = std::fs::File::open(&self.path)?;
+                let data_start = entry.offset + member_header_len(entry.name.len());
+                f.seek(SeekFrom::Start(data_start + start))?;
+                let mut out = vec![0u8; take];
+                f.read_exact(&mut out)
+                    .with_context(|| format!("range read of member {name:?}"))?;
+                Ok(out)
+            }
+            Compression::Deflate => {
+                let whole = self.extract(name)?;
+                Ok(whole[start as usize..start as usize + take].to_vec())
+            }
+        }
+    }
+
     /// Read one member into `out` given an already-open handle. `scratch`
     /// and `out` are caller-owned so parallel extraction reuses one pair
     /// per worker thread instead of allocating per member.
@@ -868,6 +904,32 @@ mod tests {
         for (name, data) in &members {
             assert_eq!(&seen[name], data);
         }
+    }
+
+    #[test]
+    fn range_reads_match_full_extraction() {
+        let dir = tmpdir("range");
+        let path = dir.join("r.cioar");
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        let mut w = Writer::create(&path).unwrap();
+        w.add("plain", &data, Compression::None).unwrap();
+        w.add("packed", &data, Compression::Deflate).unwrap();
+        w.add("tiny", b"ab", Compression::None).unwrap();
+        w.finish().unwrap();
+        let r = Reader::open(&path).unwrap();
+        for name in ["plain", "packed"] {
+            assert_eq!(r.extract_range(name, 0, 10_000).unwrap(), data, "{name}: whole");
+            assert_eq!(r.extract_range(name, 100, 32).unwrap(), data[100..132], "{name}: mid");
+            assert_eq!(
+                r.extract_range(name, 9_990, 100).unwrap(),
+                data[9_990..],
+                "{name}: clamped tail"
+            );
+            assert!(r.extract_range(name, 20_000, 8).unwrap().is_empty(), "{name}: past EOF");
+            assert!(r.extract_range(name, 5, 0).unwrap().is_empty(), "{name}: zero len");
+        }
+        assert_eq!(r.extract_range("tiny", 1, 10).unwrap(), b"b");
+        assert!(r.extract_range("ghost", 0, 1).is_err());
     }
 
     #[test]

@@ -106,6 +106,20 @@ pub struct CollectorStats {
     pub bytes: u64,
     /// Flush-reason histogram: [MaxDelay, MaxData, MinFreeSpace, Shutdown].
     pub reasons: [u64; 4],
+    /// Flush attempts that failed and were retried on a later wakeup
+    /// (staged files vanishing mid-flush, transient IO errors). A nonzero
+    /// count with all files eventually archived means the collector
+    /// recovered; the local runtime only fails hard when the *final*
+    /// shutdown drain cannot complete.
+    pub flush_errors: u64,
+    /// Archives additionally retained in the group's IFS data directory
+    /// for the next workflow stage (§5.3 retention feeding the
+    /// [`crate::cio::stage::IfsCache`]).
+    pub retained: u64,
+    /// Retention copies that failed. Distinct from `flush_errors`: the
+    /// archive is safe on GFS and the copy is *not* retried, so the next
+    /// stage pays a GFS miss for it instead of a hit.
+    pub retention_errors: u64,
 }
 
 impl CollectorStats {
@@ -131,6 +145,9 @@ impl CollectorStats {
         for i in 0..4 {
             self.reasons[i] += other.reasons[i];
         }
+        self.flush_errors += other.flush_errors;
+        self.retained += other.retained;
+        self.retention_errors += other.retention_errors;
     }
 
     /// GFS file-create reduction factor: task files per archive file.
@@ -242,12 +259,18 @@ mod tests {
         let mut s = CollectorStats::default();
         s.record(FlushReason::MaxData, 1000, mib(100));
         s.record(FlushReason::MaxDelay, 24, mib(1));
+        s.flush_errors = 3;
+        s.retained = 2;
+        s.retention_errors = 1;
         let mut total = CollectorStats::default();
         total.merge(&s);
         total.merge(&s);
         assert_eq!(total.archives, 4);
         assert_eq!(total.files, 2048);
         assert_eq!(total.reasons, [2, 2, 0, 0]);
+        assert_eq!(total.flush_errors, 6);
+        assert_eq!(total.retained, 4);
+        assert_eq!(total.retention_errors, 2);
         assert!((total.reduction_factor() - 512.0).abs() < 1e-9);
     }
 

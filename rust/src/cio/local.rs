@@ -24,11 +24,28 @@
 //! * [`distribute_to_ifs`] executes the broadcast schedule **pipelined**:
 //!   a replica that lands early immediately starts feeding its children
 //!   instead of waiting for the slowest copy of its round (the old
-//!   per-round barrier).
+//!   per-round barrier);
+//! * every multi-step publish (copy-fallback commit, broadcast replicas,
+//!   LFS scatter, archive retention) lands **atomically**: bytes stream
+//!   into a `.tmp-`-prefixed sibling and a `rename` flips the final name
+//!   into place, so a concurrent `read_dir` scan can never observe a
+//!   half-copied file ([`publish_copy`] / [`staged_files`] skipping
+//!   temp entries);
+//! * a failed flush no longer kills the group's collector thread: the
+//!   partial archive is deleted, the error is counted in
+//!   [`CollectorStats::flush_errors`], and the staged files are retried
+//!   on the next wakeup — only a failed *final shutdown drain* makes
+//!   [`LocalCollector::finish`] return the error;
+//! * [`LocalCollector::start_with`] can retain a copy of every flushed
+//!   archive in the group's `ifs/<group>/data/` directory under
+//!   [`crate::cio::local_stage::GroupCache`] LRU control — the §5.3
+//!   inter-stage retention that [`crate::cio::local_stage::StageRunner`]
+//!   reads back as archive-as-input.
 
 use crate::cio::archive::{Compression, Writer};
 use crate::cio::collector::{CollectorStats, FlushReason, Policy};
 use crate::cio::distributor::TreeShape;
+use crate::cio::local_stage::GroupCache;
 use crate::util::units::SimTime;
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -40,6 +57,40 @@ use std::time::{Duration, Instant};
 /// wakeup (the [`commit_output`] free-function path). Notified commits
 /// never wait on this.
 const UNNOTIFIED_RESCAN: Duration = Duration::from_millis(250);
+
+/// Prefix for in-flight publishes. Directory scans ([`staged_files`],
+/// retention lookups) skip entries carrying it; the final name only ever
+/// appears via `rename`, which is atomic within a filesystem.
+pub(crate) const TMP_PREFIX: &str = ".tmp-";
+
+/// Process-wide uniquifier for temp publish names so concurrent publishes
+/// into one directory never collide.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Copy `src` to `dst` atomically: stream into a `.tmp-`-prefixed sibling
+/// of `dst` (same directory, hence same filesystem) and `rename` into
+/// place. A reader listing `dst`'s directory sees either nothing or the
+/// complete file — never a truncated prefix. Returns the bytes copied.
+pub fn publish_copy(src: &Path, dst: &Path) -> Result<u64> {
+    let dir = dst.parent().context("publish destination has no parent")?;
+    let name = dst
+        .file_name()
+        .and_then(|n| n.to_str())
+        .context("publish destination has no utf8 file name")?;
+    let tmp = dir.join(format!(
+        "{TMP_PREFIX}{}-{}-{name}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let bytes = std::fs::copy(src, &tmp)
+        .with_context(|| format!("copying {} to {}", src.display(), tmp.display()))?;
+    if let Err(e) = std::fs::rename(&tmp, dst) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(anyhow::Error::from(e)
+            .context(format!("publishing {} into place", dst.display())));
+    }
+    Ok(bytes)
+}
 
 /// Directory layout for a local run.
 #[derive(Debug, Clone)]
@@ -97,6 +148,12 @@ impl LocalLayout {
     pub fn lfs(&self, node: u32) -> PathBuf {
         self.root.join(format!("lfs/{node}"))
     }
+
+    /// The member nodes of an IFS group (the last group may be short).
+    pub fn group_nodes(&self, group: u32) -> std::ops::Range<u32> {
+        let lo = group * self.cn_per_ifs;
+        lo..((group + 1) * self.cn_per_ifs).min(self.nodes)
+    }
 }
 
 /// State of one replica holder during a pipelined broadcast.
@@ -122,8 +179,10 @@ pub fn distribute_to_ifs(layout: &LocalLayout, gfs_file: &str, shape: TreeShape)
     let groups = layout.ifs_groups();
     let src = layout.gfs().join(gfs_file);
     anyhow::ensure!(src.is_file(), "no such GFS file: {}", src.display());
-    // Replica holder i = IFS group i; holder 0 pulls from GFS.
-    std::fs::copy(&src, layout.ifs_data(0).join(gfs_file))
+    // Replica holder i = IFS group i; holder 0 pulls from GFS. Published
+    // atomically: concurrent readers of the data dir (tasks of an earlier
+    // stage, retention scans) must never see a partial replica.
+    publish_copy(&src, &layout.ifs_data(0).join(gfs_file))
         .with_context(|| "root pull from GFS")?;
     if groups == 1 {
         return Ok(1);
@@ -154,9 +213,8 @@ pub fn distribute_to_ifs(layout: &LocalLayout, gfs_file: &str, shape: TreeShape)
                     *state == ReplicaState::Ready
                 };
                 let result = if src_ok {
-                    std::fs::copy(&src_path, &dst_path).map(|_| ()).map_err(|e| {
-                        anyhow::Error::from(e)
-                            .context(format!("tree copy {}", dst_path.display()))
+                    publish_copy(&src_path, &dst_path).map(|_| ()).map_err(|e| {
+                        e.context(format!("tree copy {}", dst_path.display()))
                     })
                 } else {
                     Err(anyhow::anyhow!(
@@ -185,6 +243,70 @@ pub fn distribute_to_ifs(layout: &LocalLayout, gfs_file: &str, shape: TreeShape)
     Ok(1 + schedule.len() as u32)
 }
 
+/// The §5.1 last hop for read-few per-task inputs: scatter a file already
+/// replicated on an IFS group the final step down to each member node's
+/// `lfs/<node>/` so tasks read it locally. Copies run on one thread per
+/// member (the paper's IFS serves its CNs concurrently) and publish
+/// atomically. Returns the number of LFS copies made.
+pub fn scatter_group_to_lfs(layout: &LocalLayout, group: u32, file: &str) -> Result<u32> {
+    let src = layout.ifs_data(group).join(file);
+    anyhow::ensure!(
+        src.is_file(),
+        "no replica {} on IFS group {group}; distribute to IFS first",
+        src.display()
+    );
+    let nodes: Vec<u32> = layout.group_nodes(group).collect();
+    let errors: Mutex<Vec<anyhow::Error>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for &node in &nodes {
+            let src = &src;
+            let errors = &errors;
+            let dst = layout.lfs(node).join(file);
+            scope.spawn(move || {
+                if let Err(e) = publish_copy(src, &dst) {
+                    errors
+                        .lock()
+                        .unwrap()
+                        .push(e.context(format!("LFS scatter to node {node}")));
+                }
+            });
+        }
+    });
+    let errs = errors.into_inner().unwrap();
+    if let Some(e) = errs.into_iter().next() {
+        return Err(e);
+    }
+    Ok(nodes.len() as u32)
+}
+
+/// Distribute a GFS file all the way to every node's LFS: the spanning-
+/// tree IFS broadcast of [`distribute_to_ifs`] followed by the per-group
+/// LFS scatter of [`scatter_group_to_lfs`] — the full §5.1 path for small
+/// read-many inputs (`BroadcastToLfs` in the distributor's plan). Returns
+/// total copies made (IFS replicas + LFS copies).
+pub fn distribute_to_lfs(layout: &LocalLayout, gfs_file: &str, shape: TreeShape) -> Result<u32> {
+    let ifs_copies = distribute_to_ifs(layout, gfs_file, shape)?;
+    let errors: Mutex<Vec<anyhow::Error>> = Mutex::new(Vec::new());
+    let lfs_copies = AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        for g in 0..layout.ifs_groups() {
+            let errors = &errors;
+            let lfs_copies = &lfs_copies;
+            scope.spawn(move || match scatter_group_to_lfs(layout, g, gfs_file) {
+                Ok(n) => {
+                    lfs_copies.fetch_add(n as u64, Ordering::Relaxed);
+                }
+                Err(e) => errors.lock().unwrap().push(e),
+            });
+        }
+    });
+    let errs = errors.into_inner().unwrap();
+    if let Some(e) = errs.into_iter().next() {
+        return Err(e);
+    }
+    Ok(ifs_copies + lfs_copies.load(Ordering::Relaxed) as u32)
+}
+
 /// A task commits its output: the file moves from the node's LFS into its
 /// IFS group's staging directory (the paper moves completed output
 /// LFS→IFS, relying on rename atomicity within the staging FS).
@@ -193,15 +315,24 @@ pub fn distribute_to_ifs(layout: &LocalLayout, gfs_file: &str, shape: TreeShape)
 /// prefer [`LocalCollector::commit`], which does. Files committed through
 /// here are still picked up by the deadline / rescan backstop.
 pub fn commit_output(layout: &LocalLayout, node: u32, name: &str) -> Result<u64> {
+    // A name carrying the in-flight publish prefix would be skipped by
+    // every staging scan forever — refuse it instead of losing the data.
+    anyhow::ensure!(
+        !name.starts_with(TMP_PREFIX),
+        "output name {name:?} collides with the in-flight publish prefix {TMP_PREFIX:?}"
+    );
     let src = layout.lfs(node).join(name);
     let dst = layout.ifs_staging(layout.group_of(node)).join(name);
     let bytes = std::fs::metadata(&src)
         .with_context(|| format!("missing task output {}", src.display()))?
         .len();
     // Cross-filesystem rename can fail; fall back to copy+remove like the
-    // paper's tar-based move.
+    // paper's tar-based move — but the copy must land under a temp name
+    // and rename into place, or a concurrent collector scan could archive
+    // a half-copied file and then delete it ([`staged_files`] also skips
+    // temp-prefixed entries as a second line of defense).
     if std::fs::rename(&src, &dst).is_err() {
-        std::fs::copy(&src, &dst)?;
+        publish_copy(&src, &dst)?;
         std::fs::remove_file(&src)?;
     }
     Ok(bytes)
@@ -241,15 +372,69 @@ pub struct LocalCollector {
     archives_written: Arc<AtomicU64>,
 }
 
+/// Options for [`LocalCollector::start_with`].
+#[derive(Clone, Default)]
+pub struct CollectorOptions {
+    /// Archive file-name prefix: archives land as
+    /// `<prefix>-g<group>-<seq>.cioar`. Defaults to `"out"`. Multi-stage
+    /// runs use a per-stage prefix so stage N+1's archives can never
+    /// collide with (and truncate) stage N's on GFS.
+    pub archive_prefix: Option<String>,
+    /// §5.3 inter-stage retention: after a flush lands on GFS, also retain
+    /// a copy of the archive in the owning group's `ifs/<group>/data/`
+    /// directory under the [`GroupCache`]'s bounded-LRU control, so the
+    /// next workflow stage re-reads it from the IFS instead of GFS. Must
+    /// hold exactly one cache per IFS group.
+    pub retention: Option<Arc<Vec<GroupCache>>>,
+}
+
+/// Everything one group's collector thread needs, bundled for the spawn.
+struct GroupCollectorCtx {
+    group: u32,
+    staging: PathBuf,
+    gfs: PathBuf,
+    policy: Policy,
+    compression: Compression,
+    prefix: String,
+    flush_threads: usize,
+    retention: Option<Arc<Vec<GroupCache>>>,
+}
+
 impl LocalCollector {
-    /// Start collector threads over every IFS group. Each thread runs the
-    /// §5.2 loop event-driven: sleep on the group's condvar, wake on
-    /// commit (or at the `maxDelay` deadline), scan the staging dir once
-    /// (batched `read_dir`), evaluate [`Policy`], and on a flush archive
-    /// all staged files into one indexed archive in `gfs/` using the
-    /// parallel-compression pipeline.
+    /// Start collector threads over every IFS group with default options.
+    /// Each thread runs the §5.2 loop event-driven: sleep on the group's
+    /// condvar, wake on commit (or at the `maxDelay` deadline), scan the
+    /// staging dir once (batched `read_dir`), evaluate [`Policy`], and on
+    /// a flush archive all staged files into one indexed archive in
+    /// `gfs/` using the parallel-compression pipeline.
     pub fn start(layout: &LocalLayout, policy: Policy, compression: Compression) -> LocalCollector {
+        Self::start_with(layout, policy, compression, CollectorOptions::default())
+            .expect("default collector options are always valid")
+    }
+
+    /// [`LocalCollector::start`] with explicit [`CollectorOptions`]
+    /// (per-stage archive prefix, §5.3 IFS retention).
+    pub fn start_with(
+        layout: &LocalLayout,
+        policy: Policy,
+        compression: Compression,
+        options: CollectorOptions,
+    ) -> Result<LocalCollector> {
         let groups = layout.ifs_groups();
+        if let Some(caches) = &options.retention {
+            anyhow::ensure!(
+                caches.len() == groups as usize,
+                "retention holds {} cache(s) but the layout has {groups} IFS group(s)",
+                caches.len()
+            );
+        }
+        let prefix = options.archive_prefix.unwrap_or_else(|| "out".to_string());
+        anyhow::ensure!(
+            !prefix.is_empty()
+                && !prefix.contains(['/', '\\'])
+                && !prefix.starts_with(TMP_PREFIX),
+            "bad archive prefix {prefix:?}"
+        );
         let signals: Arc<Vec<GroupSignal>> =
             Arc::new((0..groups).map(|_| GroupSignal::default()).collect());
         let archives_written = Arc::new(AtomicU64::new(0));
@@ -259,25 +444,23 @@ impl LocalCollector {
         let flush_threads = (avail / groups.max(1) as usize).clamp(1, 8);
         let mut handles = Vec::new();
         for g in 0..groups {
-            let staging = layout.ifs_staging(g);
-            let gfs = layout.gfs();
-            let policy = policy.clone();
+            let ctx = GroupCollectorCtx {
+                group: g,
+                staging: layout.ifs_staging(g),
+                gfs: layout.gfs(),
+                policy: policy.clone(),
+                compression,
+                prefix: prefix.clone(),
+                flush_threads,
+                retention: options.retention.clone(),
+            };
             let signals = signals.clone();
             let counter = archives_written.clone();
             handles.push(std::thread::spawn(move || {
-                collector_loop(
-                    g,
-                    &staging,
-                    &gfs,
-                    &policy,
-                    compression,
-                    &signals[g as usize],
-                    &counter,
-                    flush_threads,
-                )
+                collector_loop(ctx, &signals[g as usize], &counter)
             }));
         }
-        LocalCollector { signals, handles, archives_written }
+        Ok(LocalCollector { signals, handles, archives_written })
     }
 
     /// Commit a task's output and wake the owning group's collector — the
@@ -322,6 +505,11 @@ fn staged_files(staging: &Path) -> Result<Vec<(PathBuf, u64)>> {
     let mut out = Vec::new();
     for entry in std::fs::read_dir(staging)? {
         let entry = entry?;
+        // Skip in-flight publishes: a `.tmp-` entry is a copy still
+        // streaming; the complete file appears atomically via rename.
+        if entry.file_name().to_string_lossy().starts_with(TMP_PREFIX) {
+            continue;
+        }
         let meta = entry.metadata()?;
         if meta.is_file() {
             out.push((entry.path(), meta.len()));
@@ -332,17 +520,79 @@ fn staged_files(staging: &Path) -> Result<Vec<(PathBuf, u64)>> {
     Ok(out)
 }
 
-#[allow(clippy::too_many_arguments)]
-fn collector_loop(
-    group: u32,
-    staging: &Path,
-    gfs: &Path,
-    policy: &Policy,
+/// Create + fill + finish one archive (separated so [`flush_group`] can
+/// delete the partial file on any error without a try-block).
+fn write_archive_file(
+    archive_path: &Path,
+    members: &[(String, PathBuf)],
     compression: Compression,
+    threads: usize,
+) -> Result<()> {
+    let mut w = Writer::create(archive_path)?;
+    w.add_paths_parallel(members, compression, threads)?;
+    w.finish()?;
+    Ok(())
+}
+
+/// Archive `files` into `gfs/<archive_name>`. Staged files that vanished
+/// between the caller's scan and this call are skipped, and the archive
+/// is only created when at least one member survives. On error the
+/// partial archive is deleted (GFS never holds an unfinished file) and
+/// every staged file is left in place for the next attempt. On success
+/// the archived staged files are removed. Returns
+/// `(files_archived, bytes_archived)` — `(0, 0)` means every candidate
+/// vanished and no archive was created.
+fn flush_group(
+    gfs: &Path,
+    archive_name: &str,
+    files: &[(PathBuf, u64)],
+    compression: Compression,
+    threads: usize,
+) -> Result<(u64, u64)> {
+    let live: Vec<(String, PathBuf, u64)> = files
+        .iter()
+        .filter(|(path, _)| path.is_file())
+        .map(|(path, bytes)| {
+            (path.file_name().unwrap().to_string_lossy().to_string(), path.clone(), *bytes)
+        })
+        .collect();
+    if live.is_empty() {
+        return Ok((0, 0));
+    }
+    let members: Vec<(String, PathBuf)> =
+        live.iter().map(|(name, path, _)| (name.clone(), path.clone())).collect();
+    let archive_path = gfs.join(archive_name);
+    if let Err(e) = write_archive_file(&archive_path, &members, compression, threads) {
+        let _ = std::fs::remove_file(&archive_path);
+        return Err(e);
+    }
+    let mut bytes = 0u64;
+    for (_, path, b) in &live {
+        bytes += b;
+        // The member is safely archived; nothing else deletes staged
+        // files, so a remove failure is not data loss (worst case the
+        // file is re-archived into a *later* archive) — don't let it
+        // kill the loop.
+        let _ = std::fs::remove_file(path);
+    }
+    Ok((live.len() as u64, bytes))
+}
+
+fn collector_loop(
+    ctx: GroupCollectorCtx,
     signal: &GroupSignal,
     counter: &AtomicU64,
-    flush_threads: usize,
 ) -> Result<CollectorStats> {
+    let GroupCollectorCtx {
+        group,
+        staging,
+        gfs,
+        policy,
+        compression,
+        prefix,
+        flush_threads,
+        retention,
+    } = ctx;
     let mut stats = CollectorStats::default();
     let started = Instant::now();
     let mut last_write = Duration::ZERO;
@@ -355,7 +605,7 @@ fn collector_loop(
             state.pending = 0;
             state.stop
         };
-        let files = staged_files(staging)?;
+        let files = staged_files(&staging)?;
         let buffered: u64 = files.iter().map(|(_, b)| b).sum();
         let since = SimTime::from_secs_f64((started.elapsed() - last_write).as_secs_f64());
         // Local staging is a real disk; free space is effectively
@@ -367,23 +617,45 @@ fn collector_loop(
             policy.should_flush(since, buffered, u64::MAX)
         };
         if let Some(reason) = reason {
-            let archive_name = format!("out-g{group}-{seq:05}.cioar");
+            let archive_name = format!("{prefix}-g{group}-{seq:05}.cioar");
             seq += 1;
-            let members: Vec<(String, PathBuf)> = files
-                .iter()
-                .map(|(path, _)| {
-                    (path.file_name().unwrap().to_string_lossy().to_string(), path.clone())
-                })
-                .collect();
-            let mut w = Writer::create(&gfs.join(&archive_name))?;
-            w.add_paths_parallel(&members, compression, flush_threads)?;
-            w.finish()?;
-            for (path, _) in &files {
-                std::fs::remove_file(path)?;
+            match flush_group(&gfs, &archive_name, &files, compression, flush_threads) {
+                Ok((0, _)) => {
+                    // Every candidate vanished between scan and flush;
+                    // nothing archived, nothing to record.
+                    last_write = started.elapsed();
+                }
+                Ok((nfiles, nbytes)) => {
+                    stats.record(reason, nfiles, nbytes);
+                    counter.fetch_add(1, Ordering::Relaxed);
+                    last_write = started.elapsed();
+                    if let Some(caches) = &retention {
+                        // §5.3: keep a copy on the IFS for the next stage.
+                        // The archive is already safe on GFS, so retention
+                        // failure is counted but never fatal.
+                        match caches[group as usize]
+                            .retain(&gfs.join(&archive_name), &archive_name)
+                        {
+                            Ok(true) => stats.retained += 1,
+                            Ok(false) => {} // oversized for the cache: GFS-only
+                            Err(_) => stats.retention_errors += 1,
+                        }
+                    }
+                }
+                Err(e) => {
+                    // The staged files are intact; the rescan backstop
+                    // guarantees a retry. Only a failed FINAL drain may
+                    // abandon data, so only then does the error propagate
+                    // (out of finish()); a mid-run error must not kill
+                    // the thread while commit() keeps succeeding.
+                    stats.flush_errors += 1;
+                    if stopping {
+                        return Err(e.context(format!(
+                            "group {group}: final shutdown drain failed"
+                        )));
+                    }
+                }
             }
-            stats.record(reason, files.len() as u64, buffered);
-            counter.fetch_add(1, Ordering::Relaxed);
-            last_write = started.elapsed();
         }
         if stopping {
             return Ok(stats);
@@ -444,6 +716,144 @@ mod tests {
     }
 
     #[test]
+    fn publish_copy_is_atomic_and_leaves_no_temp() {
+        let root = tmp("publish");
+        std::fs::create_dir_all(&root).unwrap();
+        let src = root.join("src.bin");
+        std::fs::write(&src, vec![3u8; 5000]).unwrap();
+        let dst = root.join("dst.bin");
+        assert_eq!(publish_copy(&src, &dst).unwrap(), 5000);
+        assert_eq!(std::fs::read(&dst).unwrap(), vec![3u8; 5000]);
+        // No .tmp- residue and the source is untouched.
+        let names: Vec<String> = std::fs::read_dir(&root)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+            .collect();
+        assert!(
+            names.iter().all(|n| !n.starts_with(TMP_PREFIX)),
+            "temp residue in {names:?}"
+        );
+        assert!(src.is_file());
+        // Missing source is a clean error, not a partial dst.
+        let err = publish_copy(&root.join("ghost"), &root.join("out")).unwrap_err();
+        assert!(err.to_string().contains("copying"), "{err}");
+        assert!(!root.join("out").exists());
+    }
+
+    #[test]
+    fn staged_files_skip_inflight_temp_entries() {
+        let root = tmp("skiptmp");
+        let l = LocalLayout::create(&root, 1, 1).unwrap();
+        let staging = l.ifs_staging(0);
+        std::fs::write(staging.join("real.out"), b"done").unwrap();
+        std::fs::write(staging.join(format!("{TMP_PREFIX}123-0-half.out")), b"par").unwrap();
+        let files = staged_files(&staging).unwrap();
+        assert_eq!(files.len(), 1);
+        assert!(files[0].0.ends_with("real.out"));
+    }
+
+    #[test]
+    fn flush_skips_vanished_members() {
+        // A staged file that vanishes between the scan and the flush is
+        // skipped; the survivors are archived and removed.
+        let root = tmp("vanish");
+        let l = LocalLayout::create(&root, 1, 1).unwrap();
+        let staging = l.ifs_staging(0);
+        std::fs::write(staging.join("keep-a.out"), vec![1u8; 64]).unwrap();
+        std::fs::write(staging.join("keep-b.out"), vec![2u8; 64]).unwrap();
+        // Fabricate a stale scan that still lists a vanished file.
+        let mut files = staged_files(&staging).unwrap();
+        files.push((staging.join("gone.out"), 64));
+        files.sort();
+        let (n, bytes) =
+            flush_group(&l.gfs(), "out-g0-00000.cioar", &files, Compression::None, 1).unwrap();
+        assert_eq!((n, bytes), (2, 128));
+        let r = crate::cio::archive::Reader::open(&l.gfs().join("out-g0-00000.cioar")).unwrap();
+        assert_eq!(r.len(), 2);
+        assert!(r.entry("gone.out").is_none());
+        assert!(staged_files(&staging).unwrap().is_empty(), "survivors drained");
+        // All candidates vanished: no archive is created at all.
+        let stale = vec![(staging.join("gone2.out"), 9)];
+        let (n, _) =
+            flush_group(&l.gfs(), "out-g0-00001.cioar", &stale, Compression::None, 1).unwrap();
+        assert_eq!(n, 0);
+        assert!(!l.gfs().join("out-g0-00001.cioar").exists());
+    }
+
+    #[test]
+    fn failed_flush_deletes_partial_archive_and_keeps_staged_files() {
+        // Force add_paths_parallel to fail mid-flush by pointing one
+        // member at a directory (opens fail); the staged files must
+        // survive for the retry and GFS must not keep a partial archive.
+        let root = tmp("flushfail");
+        let l = LocalLayout::create(&root, 1, 1).unwrap();
+        let staging = l.ifs_staging(0);
+        std::fs::write(staging.join("ok.out"), vec![1u8; 32]).unwrap();
+        let dir_member = staging.join("imposter.out");
+        std::fs::create_dir(&dir_member).unwrap();
+        let files =
+            vec![(staging.join("imposter.out"), 0), (staging.join("ok.out"), 32)];
+        // `is_file` filters directories out, so this flush SUCCEEDS with
+        // just the real file — directories never poison a flush.
+        let (n, _) =
+            flush_group(&l.gfs(), "out-g0-00000.cioar", &files, Compression::None, 1).unwrap();
+        assert_eq!(n, 1);
+        // Now a genuine IO failure: unreadable member (simulate with a
+        // path that exists as file at scan, vanishes before the writer
+        // opens it — covered above) or an unwritable GFS dir.
+        std::fs::write(staging.join("next.out"), vec![2u8; 32]).unwrap();
+        let files = staged_files(&staging).unwrap();
+        let bogus_gfs = l.root.join("gfs-missing");
+        let err = flush_group(&bogus_gfs, "x.cioar", &files, Compression::None, 1).unwrap_err();
+        assert!(!bogus_gfs.join("x.cioar").exists(), "no partial archive: {err}");
+        assert!(staging.join("next.out").is_file(), "staged file kept for retry");
+    }
+
+    #[test]
+    fn collector_recovers_from_vanished_staged_file() {
+        // End to end: a file is staged (no wakeup), vanishes, and later
+        // commits must still flush fine; finish() drains and reports the
+        // survivors without error.
+        let root = tmp("recover");
+        let l = LocalLayout::create(&root, 2, 2).unwrap();
+        let policy = Policy {
+            max_delay: SimTime::from_secs(3600),
+            max_data: mib(100), // only the shutdown drain flushes
+            min_free_space: 0,
+        };
+        let collector = LocalCollector::start(&l, policy, Compression::None);
+        std::fs::write(l.lfs(0).join("doomed.out"), vec![1u8; 64]).unwrap();
+        commit_output(&l, 0, "doomed.out").unwrap(); // free function: no wakeup
+        std::fs::remove_file(l.ifs_staging(0).join("doomed.out")).unwrap(); // vanish
+        std::fs::write(l.lfs(1).join("fine.out"), vec![2u8; 64]).unwrap();
+        collector.commit(&l, 1, "fine.out").unwrap();
+        let stats = collector.finish().unwrap();
+        assert_eq!(stats.files, 1, "only the surviving file is archived");
+    }
+
+    #[test]
+    fn scatter_puts_replica_on_every_member_lfs() {
+        let root = tmp("scatter");
+        let l = LocalLayout::create(&root, 10, 4).unwrap(); // groups of 4,4,2
+        std::fs::write(l.gfs().join("params.bin"), vec![9u8; 2048]).unwrap();
+        let copies = distribute_to_lfs(&l, "params.bin", TreeShape::Binomial).unwrap();
+        // 3 IFS replicas + 10 LFS copies.
+        assert_eq!(copies, 13);
+        for node in 0..10 {
+            assert_eq!(
+                std::fs::read(l.lfs(node).join("params.bin")).unwrap(),
+                vec![9u8; 2048],
+                "node {node}"
+            );
+        }
+        // Short last group got exactly its members.
+        assert_eq!(l.group_nodes(2), 8..10);
+        // Scatter without a replica is a clean error.
+        let err = scatter_group_to_lfs(&l, 1, "nope.bin").unwrap_err();
+        assert!(err.to_string().contains("no replica"), "{err}");
+    }
+
+    #[test]
     fn commit_moves_output_to_staging() {
         let root = tmp("commit");
         let l = LocalLayout::create(&root, 4, 4).unwrap();
@@ -452,6 +862,11 @@ mod tests {
         assert_eq!(bytes, 6);
         assert!(!l.lfs(2).join("t0.out").exists());
         assert!(l.ifs_staging(0).join("t0.out").is_file());
+        // A temp-prefixed name would be invisible to every staging scan;
+        // committing one must be refused, not silently lost.
+        std::fs::write(l.lfs(2).join(".tmp-evil.out"), b"x").unwrap();
+        let err = commit_output(&l, 2, ".tmp-evil.out").unwrap_err();
+        assert!(err.to_string().contains("publish prefix"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,714 @@
+//! Real-bytes multi-stage runtime (§5.3 / Figure 17): execute a workflow
+//! DAG over a [`LocalLayout`] directory tree with inter-stage IFS
+//! retention.
+//!
+//! The accounting structs in [`crate::cio::stage`] ([`StageGraph`],
+//! [`IfsCache`]) model the paper's dataflow synchronization and retention
+//! policy; this module wires them into the real-bytes runtime:
+//!
+//! * [`StageRunner`] runs each stage's tasks on worker threads. Task
+//!   outputs commit through a per-stage [`LocalCollector`] whose flushes
+//!   land on `gfs/` **and are retained** in the owning group's
+//!   `ifs/<group>/data/` directory under [`GroupCache`] bounded-LRU
+//!   control (eviction unlinks the retained file).
+//! * Stage N+1's tasks open stage N's output archives via
+//!   [`crate::cio::archive::Reader`] random access — archive-as-input —
+//!   resolving each archive through the task's group cache: an
+//!   [`CacheOutcome::IfsHit`] reads the retained copy in place; a
+//!   [`CacheOutcome::GfsMiss`] pays the full GFS round trip (the archive
+//!   is re-staged from `gfs/` into the group's data dir, read-through,
+//!   exactly the §5.3 fallback) before the read proceeds.
+//!
+//! Figure 17's stage-2 ablation is this hit/miss difference on real
+//! bytes: a hit reads the archive once from fast local storage, a miss
+//! pays an extra full-archive copy from the central store first. The
+//! `stage2_ifs_hit` / `stage2_gfs_miss` cases in `perf_micro` measure it;
+//! `examples/multistage_workflow.rs` runs the whole 3-stage chain.
+
+use crate::cio::archive::{Compression, Reader};
+use crate::cio::collector::{CollectorStats, Policy};
+use crate::cio::local::{publish_copy, CollectorOptions, LocalCollector, LocalLayout};
+use crate::cio::placement::PlacementPolicy;
+use crate::cio::stage::{CacheOutcome, IfsCache, StageGraph};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Point-in-time counters of one group's retention cache.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheSnapshot {
+    /// Lookups served from the IFS retained copy.
+    pub hits: u64,
+    /// Lookups that fell back to GFS.
+    pub misses: u64,
+    /// Retained archives evicted (files unlinked) to bound capacity.
+    pub evictions: u64,
+    /// Bytes currently retained.
+    pub used: u64,
+}
+
+/// One IFS group's on-disk retention: the [`IfsCache`] accounting plus the
+/// real archive files it governs in `ifs/<group>/data/`. All mutation
+/// (retain, read-through fill, eviction unlink) happens under one lock,
+/// so a hit can never observe a half-evicted or half-published file.
+/// Correctness over concurrency: a miss's read-through copy runs under
+/// the lock, serializing that group's fills (which also dedupes
+/// concurrent misses of the same archive into one copy plus hits);
+/// moving the copy outside the lock behind an in-flight map is a known
+/// follow-up (see ROADMAP).
+pub struct GroupCache {
+    data_dir: PathBuf,
+    inner: Mutex<IfsCache>,
+}
+
+impl GroupCache {
+    /// Retention for `group` of `layout`, bounded by `capacity` bytes.
+    pub fn new(layout: &LocalLayout, group: u32, capacity: u64) -> GroupCache {
+        GroupCache { data_dir: layout.ifs_data(group), inner: Mutex::new(IfsCache::new(capacity)) }
+    }
+
+    /// One cache per IFS group of `layout`, ready for
+    /// [`CollectorOptions::retention`].
+    pub fn per_group(layout: &LocalLayout, capacity: u64) -> Arc<Vec<GroupCache>> {
+        Arc::new((0..layout.ifs_groups()).map(|g| GroupCache::new(layout, g, capacity)).collect())
+    }
+
+    /// Retain a copy of `src` (an archive just flushed to GFS) as `name`
+    /// in this group's data dir, evicting LRU retained files to make
+    /// room. Returns `Ok(false)` when the archive is larger than the
+    /// whole cache and was not retained (it stays GFS-only, per §5.3).
+    pub fn retain(&self, src: &std::path::Path, name: &str) -> Result<bool> {
+        let bytes = std::fs::metadata(src)
+            .with_context(|| format!("retaining {}", src.display()))?
+            .len();
+        let mut cache = self.inner.lock().unwrap();
+        let Some(victims) = cache.put_evicting(name, bytes) else {
+            return Ok(false);
+        };
+        for victim in &victims {
+            let _ = std::fs::remove_file(self.data_dir.join(victim));
+        }
+        if let Err(e) = publish_copy(src, &self.data_dir.join(name)) {
+            // Keep accounting honest: the copy never landed.
+            cache.remove(name);
+            return Err(e.context(format!("retaining archive {name} on IFS")));
+        }
+        Ok(true)
+    }
+
+    /// Open archive `name` for a stage task: the retained copy on a hit;
+    /// on a miss, pull the archive from `gfs_dir` into the data dir
+    /// (read-through — the §5.3 re-stage from central storage, and the
+    /// cost a miss pays), retain it, then open. Oversized archives are
+    /// read from GFS directly without retention.
+    pub fn open_archive(
+        &self,
+        gfs_dir: &std::path::Path,
+        name: &str,
+    ) -> Result<(Reader, CacheOutcome)> {
+        let mut cache = self.inner.lock().unwrap();
+        match cache.get(name) {
+            CacheOutcome::IfsHit => {
+                let reader = Reader::open(&self.data_dir.join(name))
+                    .with_context(|| format!("opening retained archive {name}"))?;
+                Ok((reader, CacheOutcome::IfsHit))
+            }
+            CacheOutcome::GfsMiss => {
+                let gfs_path = gfs_dir.join(name);
+                let bytes = std::fs::metadata(&gfs_path)
+                    .with_context(|| format!("no archive {name} on GFS"))?
+                    .len();
+                match cache.put_evicting(name, bytes) {
+                    Some(victims) => {
+                        for victim in &victims {
+                            let _ = std::fs::remove_file(self.data_dir.join(victim));
+                        }
+                        let retained = self.data_dir.join(name);
+                        if let Err(e) = publish_copy(&gfs_path, &retained) {
+                            cache.remove(name);
+                            return Err(e.context(format!("re-staging archive {name} to IFS")));
+                        }
+                        Ok((Reader::open(&retained)?, CacheOutcome::GfsMiss))
+                    }
+                    // Larger than the whole cache: read from GFS in place.
+                    None => Ok((Reader::open(&gfs_path)?, CacheOutcome::GfsMiss)),
+                }
+            }
+        }
+    }
+
+    /// Current counters.
+    pub fn snapshot(&self) -> CacheSnapshot {
+        let cache = self.inner.lock().unwrap();
+        CacheSnapshot {
+            hits: cache.hits(),
+            misses: cache.misses(),
+            evictions: cache.evictions(),
+            used: cache.used(),
+        }
+    }
+
+    /// Is `name` currently retained (no recency/counter side effects)?
+    pub fn contains(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().contains(name)
+    }
+}
+
+/// Delete every `<prefix>-g*.cioar` in `dir` (stale stage artifacts from
+/// a previous run on the same layout). Other files — staged inputs,
+/// other stages' archives — are untouched.
+fn clear_matching(dir: &std::path::Path, prefix: &str) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().to_string();
+        if name.starts_with(&format!("{prefix}-g")) && name.ends_with(".cioar") {
+            std::fs::remove_file(entry.path())
+                .with_context(|| format!("clearing stale stage archive {name}"))?;
+        }
+    }
+    Ok(())
+}
+
+/// Parse the owning IFS group out of a collector archive name
+/// (`<prefix>-g<group>-<seq>.cioar`).
+pub fn archive_group(name: &str) -> Option<u32> {
+    let stem = name.strip_suffix(".cioar")?;
+    let mut parts = stem.rsplitn(3, '-');
+    let _seq = parts.next()?;
+    parts.next()?.strip_prefix('g')?.parse().ok()
+}
+
+/// Canonical output member name for task `task` of stage `stage_idx`
+/// named `stage_name` — what [`StageRunner`] commits, and therefore the
+/// member name a downstream stage asks [`StageInput::read_member`] for.
+pub fn task_output_name(stage_idx: usize, stage_name: &str, task: u32) -> String {
+    format!("s{stage_idx}-{stage_name}-{task:05}.out")
+}
+
+/// Configuration for a [`StageRunner`].
+#[derive(Clone)]
+pub struct StageRunnerConfig {
+    /// §5.2 flush policy for every stage's collector.
+    pub policy: Policy,
+    /// Archive compression.
+    pub compression: Compression,
+    /// Per-group retention capacity in bytes (bounds each [`GroupCache`]).
+    pub cache_capacity: u64,
+    /// Worker threads per stage (tasks are pulled off a shared counter).
+    pub threads: usize,
+}
+
+impl StageRunnerConfig {
+    /// Derive the retention capacity from the placement policy's IFS
+    /// sizing ([`PlacementPolicy::retention_capacity`]).
+    pub fn with_placement(
+        policy: Policy,
+        compression: Compression,
+        placement: &PlacementPolicy,
+        threads: usize,
+    ) -> StageRunnerConfig {
+        StageRunnerConfig {
+            policy,
+            compression,
+            cache_capacity: placement.retention_capacity(),
+            threads,
+        }
+    }
+}
+
+/// One stage's executable body: `tasks` tasks, each mapping
+/// `(task_index, upstream input)` to its output bytes. Bodies run on
+/// worker threads, hence `Sync`.
+pub struct StageExec<'a> {
+    /// Number of tasks in this stage.
+    pub tasks: u32,
+    /// The task body.
+    pub run: &'a (dyn Fn(u32, &StageInput<'_>) -> Result<Vec<u8>> + Sync),
+}
+
+/// Read access to the upstream stages' output archives for one task.
+/// Every archive resolve goes through the task's group cache:
+/// hit → retained IFS copy, miss → GFS round trip (re-staged locally).
+pub struct StageInput<'a> {
+    gfs: PathBuf,
+    caches: &'a [GroupCache],
+    /// The reading task's IFS group.
+    group: u32,
+    /// member name → (archive name, producing group).
+    members: &'a BTreeMap<String, (String, u32)>,
+    /// upstream (archive name, producing group), sorted by name.
+    archives: &'a [(String, u32)],
+}
+
+impl StageInput<'_> {
+    /// Upstream archives as `(name, producing group)`.
+    pub fn archives(&self) -> &[(String, u32)] {
+        self.archives
+    }
+
+    /// All upstream member names (sorted).
+    pub fn members(&self) -> impl Iterator<Item = &str> {
+        self.members.keys().map(|s| s.as_str())
+    }
+
+    /// The archive holding `member`, if any upstream stage produced it.
+    pub fn member_archive(&self, member: &str) -> Option<&str> {
+        self.members.get(member).map(|(a, _)| a.as_str())
+    }
+
+    /// The reading task's IFS group.
+    pub fn group(&self) -> u32 {
+        self.group
+    }
+
+    /// Open an upstream archive through this task's group cache.
+    pub fn open_archive(&self, name: &str) -> Result<(Reader, CacheOutcome)> {
+        self.caches[self.group as usize].open_archive(&self.gfs, name)
+    }
+
+    /// Read one upstream member: find its archive, open it (IFS hit or
+    /// GFS miss), extract the member by random access.
+    ///
+    /// A retained copy can be evicted (its file unlinked) between the
+    /// open and the extract — e.g. this stage's own collector retaining a
+    /// new archive under a tight cache. The GFS copy is canonical and
+    /// never evicted, so a failed hit-read falls back to a direct GFS
+    /// read and reports the honest [`CacheOutcome::GfsMiss`].
+    pub fn read_member(&self, member: &str) -> Result<(Vec<u8>, CacheOutcome)> {
+        let (archive, _owner) = self
+            .members
+            .get(member)
+            .with_context(|| format!("no upstream stage produced member {member:?}"))?;
+        let (reader, outcome) = self.open_archive(archive)?;
+        match reader.extract(member) {
+            Ok(bytes) => Ok((bytes, outcome)),
+            Err(_) if outcome == CacheOutcome::IfsHit => {
+                let reader = Reader::open(&self.gfs.join(archive))?;
+                Ok((reader.extract(member)?, CacheOutcome::GfsMiss))
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// Per-stage outcome in a [`WorkflowReport`].
+#[derive(Debug, Clone, Default)]
+pub struct StageStats {
+    /// Stage name (from the [`StageGraph`]).
+    pub name: String,
+    /// Tasks executed.
+    pub tasks: u32,
+    /// The stage collector's flush statistics.
+    pub collector: CollectorStats,
+    /// Archives this stage produced on GFS, sorted.
+    pub archives: Vec<String>,
+    /// Upstream archive resolves served from IFS retention, as accounted
+    /// by the group caches. A read that loses the eviction race after a
+    /// hit-open is served from GFS (and its task sees
+    /// [`CacheOutcome::GfsMiss`]) but still counts as a hit here — the
+    /// per-read outcome is the effective source of truth.
+    pub ifs_hits: u64,
+    /// Upstream archive resolves that paid the GFS round trip.
+    pub gfs_misses: u64,
+    /// Wall-clock seconds for the stage (tasks + final drain).
+    pub elapsed_s: f64,
+}
+
+/// Whole-workflow outcome.
+#[derive(Debug, Clone, Default)]
+pub struct WorkflowReport {
+    /// Per-stage stats in completion order.
+    pub stages: Vec<StageStats>,
+}
+
+impl WorkflowReport {
+    /// Total IFS hits across stages.
+    pub fn ifs_hits(&self) -> u64 {
+        self.stages.iter().map(|s| s.ifs_hits).sum()
+    }
+
+    /// Total GFS misses across stages.
+    pub fn gfs_misses(&self) -> u64 {
+        self.stages.iter().map(|s| s.gfs_misses).sum()
+    }
+
+    /// Workflow-wide retention hit rate in [0,1] (0 when nothing read).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.ifs_hits() + self.gfs_misses();
+        if total == 0 {
+            0.0
+        } else {
+            self.ifs_hits() as f64 / total as f64
+        }
+    }
+}
+
+/// Executes a [`StageGraph`] workflow over a [`LocalLayout`] with §5.3
+/// inter-stage IFS retention. See the module docs for the data flow.
+pub struct StageRunner {
+    layout: LocalLayout,
+    graph: StageGraph,
+    caches: Arc<Vec<GroupCache>>,
+    config: StageRunnerConfig,
+}
+
+/// What the runner remembers about a completed stage's outputs.
+struct ProducedArchives {
+    /// (archive name, producing group), sorted by name.
+    archives: Vec<(String, u32)>,
+    /// member name → (archive name, producing group).
+    members: BTreeMap<String, (String, u32)>,
+}
+
+impl StageRunner {
+    /// Build a runner; one [`GroupCache`] per IFS group, each bounded by
+    /// `config.cache_capacity`.
+    pub fn new(layout: LocalLayout, graph: StageGraph, config: StageRunnerConfig) -> StageRunner {
+        let caches = GroupCache::per_group(&layout, config.cache_capacity);
+        StageRunner { layout, graph, caches, config }
+    }
+
+    /// The directory layout this runner executes over.
+    pub fn layout(&self) -> &LocalLayout {
+        &self.layout
+    }
+
+    /// The per-group retention caches (inspection / warmup).
+    pub fn caches(&self) -> &[GroupCache] {
+        &self.caches
+    }
+
+    /// Execute the whole workflow: stages run as the [`StageGraph`] makes
+    /// them ready (dataflow synchronization — a stage runs only after
+    /// every stage it reads from completed), each over `execs[i].tasks`
+    /// tasks. `execs` must have one entry per graph stage.
+    pub fn run(&mut self, execs: &[StageExec<'_>]) -> Result<WorkflowReport> {
+        anyhow::ensure!(
+            execs.len() == self.graph.len(),
+            "{} stage bodies for a {}-stage graph",
+            execs.len(),
+            self.graph.len()
+        );
+        let mut produced: Vec<Option<ProducedArchives>> = Vec::new();
+        produced.resize_with(self.graph.len(), || None);
+        let mut report = WorkflowReport::default();
+        while !self.graph.all_done() {
+            let ready = self.graph.ready_stages();
+            anyhow::ensure!(!ready.is_empty(), "workflow stalled (graph bug)");
+            for i in ready {
+                // Upstream input = the union of every dependency's output
+                // archives (rule 3: those writers have all completed).
+                let mut archives: Vec<(String, u32)> = Vec::new();
+                let mut members: BTreeMap<String, (String, u32)> = BTreeMap::new();
+                let deps = self.graph.stage(i).deps.clone();
+                for &dep in &deps {
+                    let p = produced[dep].as_ref().expect("dep completed before reader");
+                    archives.extend(p.archives.iter().cloned());
+                    for (m, loc) in &p.members {
+                        members.insert(m.clone(), loc.clone());
+                    }
+                }
+                archives.sort();
+                let (stats, out) = self.run_stage(i, &execs[i], &archives, &members)?;
+                report.stages.push(stats);
+                produced[i] = Some(out);
+                self.graph.complete(i);
+            }
+        }
+        Ok(report)
+    }
+
+    /// Run one stage: collector up (per-stage archive prefix, retention
+    /// into the group caches), tasks over worker threads, final drain,
+    /// then index this stage's archives for downstream readers.
+    fn run_stage(
+        &self,
+        stage_idx: usize,
+        exec: &StageExec<'_>,
+        upstream_archives: &[(String, u32)],
+        upstream_members: &BTreeMap<String, (String, u32)>,
+    ) -> Result<(StageStats, ProducedArchives)> {
+        let stage_name = self.graph.stage(stage_idx).name.clone();
+        let t0 = Instant::now();
+        let before: Vec<CacheSnapshot> = self.caches.iter().map(|c| c.snapshot()).collect();
+        let prefix = format!("s{stage_idx}");
+        let gfs = self.layout.gfs();
+        // Fresh-run semantics: stage archives are derived artifacts. A
+        // previous (possibly failed) run on this layout may have left
+        // `s<i>-g*` archives behind with other sequence numbers; the
+        // post-stage index scan must never serve those stale bytes as
+        // this run's output, so clear them before the collector starts.
+        // The same goes for stale *retained* copies in the IFS data dirs:
+        // this run's (empty-accounted) caches would never evict them, so
+        // left in place they would leak past the cache_capacity bound.
+        clear_matching(&gfs, &prefix)?;
+        for g in 0..self.layout.ifs_groups() {
+            clear_matching(&self.layout.ifs_data(g), &prefix)?;
+        }
+        let collector = LocalCollector::start_with(
+            &self.layout,
+            self.config.policy.clone(),
+            self.config.compression,
+            CollectorOptions {
+                archive_prefix: Some(prefix.clone()),
+                retention: Some(self.caches.clone()),
+            },
+        )?;
+
+        let next = AtomicU32::new(0);
+        let abort = AtomicBool::new(false);
+        let errors: Mutex<Vec<anyhow::Error>> = Mutex::new(Vec::new());
+        let workers = self.config.threads.max(1).min(exec.tasks.max(1) as usize);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let next = &next;
+                let abort = &abort;
+                let errors = &errors;
+                let collector = &collector;
+                let gfs = &gfs;
+                let stage_name = &stage_name;
+                scope.spawn(move || {
+                    loop {
+                        let t = next.fetch_add(1, Ordering::Relaxed);
+                        if t >= exec.tasks || abort.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        let node = t % self.layout.nodes;
+                        let input = StageInput {
+                            gfs: gfs.clone(),
+                            caches: &self.caches,
+                            group: self.layout.group_of(node),
+                            members: upstream_members,
+                            archives: upstream_archives,
+                        };
+                        let result = (exec.run)(t, &input).and_then(|bytes| {
+                            let name = task_output_name(stage_idx, stage_name, t);
+                            std::fs::write(self.layout.lfs(node).join(&name), &bytes)
+                                .with_context(|| format!("writing task output {name}"))?;
+                            collector.commit(&self.layout, node, &name)?;
+                            Ok(())
+                        });
+                        if let Err(e) = result {
+                            abort.store(true, Ordering::Relaxed);
+                            errors
+                                .lock()
+                                .unwrap()
+                                .push(e.context(format!("stage {stage_name}, task {t}")));
+                            return;
+                        }
+                    }
+                });
+            }
+        });
+        // Always drain the collector, even on task failure, so staged
+        // outputs of the successful tasks are not abandoned.
+        let collector_stats = collector.finish()?;
+        if let Some(e) = errors.into_inner().unwrap().into_iter().next() {
+            return Err(e);
+        }
+
+        // Index what this stage produced for downstream stages. The GFS
+        // copy is canonical; only the index (a footer read) is touched.
+        let mut archives: Vec<(String, u32)> = Vec::new();
+        let mut members: BTreeMap<String, (String, u32)> = BTreeMap::new();
+        for entry in std::fs::read_dir(&gfs)? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().to_string();
+            if !name.starts_with(&format!("{prefix}-g")) || !name.ends_with(".cioar") {
+                continue;
+            }
+            let group = archive_group(&name)
+                .with_context(|| format!("unparseable archive name {name:?}"))?;
+            let reader = Reader::open(&entry.path())?;
+            for e in reader.entries() {
+                members.insert(e.name.clone(), (name.clone(), group));
+            }
+            archives.push((name, group));
+        }
+        archives.sort();
+
+        let after: Vec<CacheSnapshot> = self.caches.iter().map(|c| c.snapshot()).collect();
+        let ifs_hits: u64 = before.iter().zip(&after).map(|(b, a)| a.hits - b.hits).sum();
+        let gfs_misses: u64 = before.iter().zip(&after).map(|(b, a)| a.misses - b.misses).sum();
+        let stats = StageStats {
+            name: stage_name,
+            tasks: exec.tasks,
+            collector: collector_stats,
+            archives: archives.iter().map(|(n, _)| n.clone()).collect(),
+            ifs_hits,
+            gfs_misses,
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        };
+        Ok((stats, ProducedArchives { archives, members }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{mib, SimTime};
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cio-stage-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn write_archive(dir: &std::path::Path, name: &str, members: &[(&str, &[u8])]) {
+        let mut w = crate::cio::archive::Writer::create(&dir.join(name)).unwrap();
+        for (m, data) in members {
+            w.add(m, data, Compression::None).unwrap();
+        }
+        w.finish().unwrap();
+    }
+
+    #[test]
+    fn archive_group_parses_collector_names() {
+        assert_eq!(archive_group("out-g3-00017.cioar"), Some(3));
+        assert_eq!(archive_group("s1-g0-00000.cioar"), Some(0));
+        assert_eq!(archive_group("s1-extra-g12-00001.cioar"), Some(12));
+        assert_eq!(archive_group("random.cioar"), None);
+        assert_eq!(archive_group("out-g3-00017.tar"), None);
+    }
+
+    #[test]
+    fn group_cache_retain_hit_and_readthrough_miss() {
+        let root = tmp("gc");
+        let layout = LocalLayout::create(&root, 2, 2).unwrap();
+        write_archive(&layout.gfs(), "a.cioar", &[("m0", b"alpha")]);
+        write_archive(&layout.gfs(), "b.cioar", &[("m1", b"beta")]);
+        let cache = GroupCache::new(&layout, 0, mib(16));
+
+        // Explicit retention (the collector path) -> hit.
+        assert!(cache.retain(&layout.gfs().join("a.cioar"), "a.cioar").unwrap());
+        let (r, outcome) = cache.open_archive(&layout.gfs(), "a.cioar").unwrap();
+        assert_eq!(outcome, CacheOutcome::IfsHit);
+        assert_eq!(r.extract("m0").unwrap(), b"alpha");
+
+        // Never retained -> miss, read-through fill, then hit.
+        let (r, outcome) = cache.open_archive(&layout.gfs(), "b.cioar").unwrap();
+        assert_eq!(outcome, CacheOutcome::GfsMiss);
+        assert_eq!(r.extract("m1").unwrap(), b"beta");
+        assert!(layout.ifs_data(0).join("b.cioar").is_file(), "read-through must fill");
+        let (_, outcome) = cache.open_archive(&layout.gfs(), "b.cioar").unwrap();
+        assert_eq!(outcome, CacheOutcome::IfsHit);
+
+        let snap = cache.snapshot();
+        assert_eq!((snap.hits, snap.misses), (2, 1));
+    }
+
+    #[test]
+    fn group_cache_eviction_unlinks_files() {
+        let root = tmp("gc-evict");
+        let layout = LocalLayout::create(&root, 1, 1).unwrap();
+        let payload = vec![7u8; 4096];
+        write_archive(&layout.gfs(), "x.cioar", &[("m", &payload)]);
+        write_archive(&layout.gfs(), "y.cioar", &[("m", &payload)]);
+        let x_bytes = std::fs::metadata(layout.gfs().join("x.cioar")).unwrap().len();
+        // Capacity fits exactly one archive.
+        let cache = GroupCache::new(&layout, 0, x_bytes + 16);
+        assert!(cache.retain(&layout.gfs().join("x.cioar"), "x.cioar").unwrap());
+        assert!(layout.ifs_data(0).join("x.cioar").is_file());
+        assert!(cache.retain(&layout.gfs().join("y.cioar"), "y.cioar").unwrap());
+        assert!(!layout.ifs_data(0).join("x.cioar").exists(), "evicted file must be unlinked");
+        assert!(cache.contains("y.cioar") && !cache.contains("x.cioar"));
+        assert_eq!(cache.snapshot().evictions, 1);
+    }
+
+    #[test]
+    fn oversized_archive_read_from_gfs_without_retention() {
+        let root = tmp("gc-big");
+        let layout = LocalLayout::create(&root, 1, 1).unwrap();
+        write_archive(&layout.gfs(), "big.cioar", &[("m", &vec![1u8; 8192])]);
+        let cache = GroupCache::new(&layout, 0, 64); // tiny
+        assert!(!cache.retain(&layout.gfs().join("big.cioar"), "big.cioar").unwrap());
+        let (r, outcome) = cache.open_archive(&layout.gfs(), "big.cioar").unwrap();
+        assert_eq!(outcome, CacheOutcome::GfsMiss);
+        assert_eq!(r.extract("m").unwrap().len(), 8192);
+        assert!(!layout.ifs_data(0).join("big.cioar").exists(), "oversized: no fill");
+    }
+
+    #[test]
+    fn three_stage_chain_runs_with_retention_hits() {
+        let root = tmp("runner");
+        let layout = LocalLayout::create(&root, 4, 2).unwrap(); // 2 groups
+        let graph = StageGraph::chain(&["produce", "transform", "reduce"]);
+        let config = StageRunnerConfig {
+            policy: Policy {
+                max_delay: SimTime::from_secs(3600),
+                max_data: 2048,
+                min_free_space: 0,
+            },
+            compression: Compression::None,
+            cache_capacity: mib(64),
+            threads: 4,
+        };
+        let mut runner = StageRunner::new(layout, graph, config);
+        let tasks = 16u32;
+        let produce = |t: u32, _input: &StageInput<'_>| -> Result<Vec<u8>> {
+            Ok(vec![t as u8; 512])
+        };
+        let transform = |t: u32, input: &StageInput<'_>| -> Result<Vec<u8>> {
+            let upstream = task_output_name(0, "produce", t);
+            let (bytes, _outcome) = input.read_member(&upstream)?;
+            anyhow::ensure!(bytes == vec![t as u8; 512], "stage-1 bytes corrupt for task {t}");
+            let sum: u64 = bytes.iter().map(|&b| b as u64).sum();
+            Ok(sum.to_le_bytes().to_vec())
+        };
+        let reduce = |_t: u32, input: &StageInput<'_>| -> Result<Vec<u8>> {
+            let mut total = 0u64;
+            for t in 0..tasks {
+                let (bytes, _) = input.read_member(&task_output_name(1, "transform", t))?;
+                total += u64::from_le_bytes(bytes.as_slice().try_into()?);
+            }
+            Ok(total.to_le_bytes().to_vec())
+        };
+        let report = runner
+            .run(&[
+                StageExec { tasks, run: &produce },
+                StageExec { tasks, run: &transform },
+                StageExec { tasks: 1, run: &reduce },
+            ])
+            .unwrap();
+        assert_eq!(report.stages.len(), 3);
+        assert_eq!(report.stages[0].collector.files, tasks as u64);
+        assert!(report.stages[0].collector.retained >= 1, "stage-1 archives must be retained");
+        assert!(report.stages[1].ifs_hits > 0, "stage 2 must hit the IFS cache");
+        assert!(report.ifs_hits() > 0 && report.hit_rate() > 0.0);
+        // The final reduce output exists and holds the expected total:
+        // sum over t of t*512.
+        let expected: u64 = (0..tasks as u64).map(|t| t * 512).sum();
+        let final_archives = &report.stages[2].archives;
+        assert_eq!(final_archives.len(), 1, "one reduce task -> one archive");
+        let r = Reader::open(&runner.layout().gfs().join(&final_archives[0])).unwrap();
+        let bytes = r.extract(&task_output_name(2, "reduce", 0)).unwrap();
+        assert_eq!(u64::from_le_bytes(bytes.as_slice().try_into().unwrap()), expected);
+    }
+
+    #[test]
+    fn task_error_aborts_stage_but_drains_collector() {
+        let root = tmp("runner-err");
+        let layout = LocalLayout::create(&root, 2, 2).unwrap();
+        let graph = StageGraph::chain(&["only"]);
+        let config = StageRunnerConfig {
+            policy: Policy {
+                max_delay: SimTime::from_secs(3600),
+                max_data: mib(100),
+                min_free_space: 0,
+            },
+            compression: Compression::None,
+            cache_capacity: mib(4),
+            threads: 1,
+        };
+        let mut runner = StageRunner::new(layout, graph, config);
+        let body = |t: u32, _input: &StageInput<'_>| -> Result<Vec<u8>> {
+            anyhow::ensure!(t != 3, "task 3 exploded");
+            Ok(vec![0u8; 16])
+        };
+        let err = runner.run(&[StageExec { tasks: 8, run: &body }]).unwrap_err();
+        assert!(format!("{err:#}").contains("task 3 exploded"), "{err:#}");
+    }
+}

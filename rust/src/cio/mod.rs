@@ -28,7 +28,9 @@
 //! * [`dispatch`] — Falkon-like task dispatch policy (batched, rate-
 //!   limited) shared by the simulator and the local thread-pool executor.
 //! * [`stage`] — multi-stage dataflow plumbing (§2's writer→reader
-//!   synchronization and §5.3's IFS caching between stages).
+//!   synchronization and §5.3's IFS caching between stages): pure
+//!   accounting ([`stage::StageGraph`], [`stage::IfsCache`]) shared by
+//!   the simulator and the real-bytes stage runner.
 //! * [`local`] — the real-bytes runtime: the same distributor/collector
 //!   machinery operating on actual directories with threads. The
 //!   collector is condvar-driven ([`local::LocalCollector::commit`] wakes
@@ -36,7 +38,21 @@
 //!   collectors flush independently through the parallel-compression
 //!   pipeline, and [`local::distribute_to_ifs`] runs the broadcast
 //!   schedule pipelined — a replica feeds its children the moment it
-//!   lands rather than at a round barrier.
+//!   lands rather than at a round barrier. Every multi-step publish
+//!   (copy-fallback commit, broadcast replica, LFS scatter, retention)
+//!   is atomic — temp name + rename ([`local::publish_copy`]) — so
+//!   concurrent scans never see partial files, and a failed flush is
+//!   retried instead of killing the group's collector thread.
+//!   [`local::distribute_to_lfs`] adds the §5.1 last hop: after the IFS
+//!   broadcast, scatter the replica to each member node's `lfs/<node>/`.
+//! * [`local_stage`] — the PR-2 tentpole: [`local_stage::StageRunner`]
+//!   executes a [`stage::StageGraph`] workflow on real bytes with §5.3
+//!   inter-stage retention. Each stage's collector retains flushed
+//!   archives in the group's `ifs/<group>/data/` under
+//!   [`local_stage::GroupCache`] bounded-LRU control; the next stage
+//!   opens them via [`archive::Reader`] random access (archive-as-input),
+//!   falling back to a GFS round trip + read-through re-stage on a miss —
+//!   the Figure 17 stage-2 ablation, measurable on real data.
 //!
 //! The shared concurrency substrate (buffer pool + ordered worker
 //! pipeline) lives in [`crate::util::pool`].
@@ -52,6 +68,12 @@
 //! 64 MiB parallel extract (8 threads)       —             ~2.4 GiB/s
 //! collector commit→flush latency p50        ≥5 ms (poll)  ~0.45 ms (condvar)
 //! ```
+//!
+//! PR-2 adds the Figure 17 stage-2 cases (`BENCH_PR2.json`; CI
+//! regenerates measured numbers and uploads them as the `bench-json`
+//! artifact): `stage2_ifs_hit` reads a retained archive in place,
+//! `stage2_gfs_miss` first pays the full archive round trip from `gfs/`
+//! — the hit must win (gate checked in CI).
 
 pub mod archive;
 pub mod collective;
@@ -59,6 +81,7 @@ pub mod collector;
 pub mod dispatch;
 pub mod distributor;
 pub mod local;
+pub mod local_stage;
 pub mod placement;
 pub mod stage;
 pub mod swift;

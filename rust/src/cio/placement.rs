@@ -88,6 +88,14 @@ impl PlacementPolicy {
         }
         Tier::Gfs
     }
+
+    /// §5.3 retention sizing: how much of an IFS a stage-output retention
+    /// cache ([`crate::cio::local_stage::GroupCache`]) may occupy. Half
+    /// the IFS capacity — the other half stays free for staged inputs and
+    /// the output staging area, mirroring the LFS headroom rule above.
+    pub fn retention_capacity(&self) -> u64 {
+        self.ifs_limit / 2
+    }
 }
 
 /// Modeled per-node IFS read bandwidth at a given CN:IFS ratio — the
@@ -221,6 +229,7 @@ mod tests {
         let p = PlacementPolicy::from_config(&cfg);
         assert_eq!(p.lfs_limit, cfg.node.lfs_capacity / 2);
         assert_eq!(p.ifs_limit, gib(64), "32 x 2GB stripes");
+        assert_eq!(p.retention_capacity(), gib(32), "retention takes half the IFS");
     }
 
     #[test]

@@ -140,23 +140,40 @@ impl IfsCache {
     /// Retain a stage output. Evicts LRU entries to make room; objects
     /// larger than the whole cache are not retained (they go to GFS).
     pub fn put(&mut self, name: &str, bytes: u64) -> bool {
+        self.put_evicting(name, bytes).is_some()
+    }
+
+    /// Like [`IfsCache::put`], but reports *which* entries were evicted so
+    /// a caller holding real retained files (the local runtime's
+    /// `ifs/<group>/data/` copies) can unlink them. Returns `None` when
+    /// the object is larger than the whole cache and was not retained;
+    /// otherwise `Some(victims)` in eviction order.
+    pub fn put_evicting(&mut self, name: &str, bytes: u64) -> Option<Vec<String>> {
         if bytes > self.capacity {
-            return false;
+            return None;
         }
         if let Some(old) = self.entries.remove(name) {
             self.used -= old;
             self.lru.retain(|n| n != name);
         }
+        let mut victims = Vec::new();
         while self.used + bytes > self.capacity {
             let victim = self.lru.pop_front().expect("used>0 implies lru nonempty");
             let vb = self.entries.remove(&victim).unwrap();
             self.used -= vb;
             self.evictions += 1;
+            victims.push(victim);
         }
         self.entries.insert(name.to_string(), bytes);
         self.lru.push_back(name.to_string());
         self.used += bytes;
-        true
+        Some(victims)
+    }
+
+    /// Is `name` currently retained? Unlike [`IfsCache::get`] this does
+    /// not touch recency or the hit/miss counters (probe, don't decide).
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
     }
 
     /// Look up a retained object for the next stage; refreshes recency.
@@ -282,6 +299,24 @@ mod tests {
         assert_eq!(c.hits(), 2);
         assert_eq!(c.misses(), 1);
         assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn put_evicting_reports_victims_in_lru_order() {
+        let mut c = IfsCache::new(mib(10));
+        assert_eq!(c.put_evicting("a", mib(4)), Some(vec![]));
+        assert_eq!(c.put_evicting("b", mib(4)), Some(vec![]));
+        assert!(c.contains("a") && c.contains("b"));
+        // 9 MiB forces both out, oldest first.
+        assert_eq!(
+            c.put_evicting("c", mib(9)),
+            Some(vec!["a".to_string(), "b".to_string()])
+        );
+        assert!(!c.contains("a") && !c.contains("b") && c.contains("c"));
+        // Oversized: not retained, nothing evicted.
+        assert_eq!(c.put_evicting("huge", mib(11)), None);
+        assert!(c.contains("c"), "failed put must not evict");
+        assert_eq!(c.evictions(), 2);
     }
 
     #[test]

@@ -22,7 +22,9 @@
 //! * randomly accessible (xar-like) **archives** so downstream workflow
 //!   stages can re-read collected outputs in parallel ([`cio::archive`]);
 //! * a Falkon-like **task dispatcher** ([`cio::dispatch`]) and multi-stage
-//!   dataflow plumbing ([`cio::stage`]).
+//!   dataflow plumbing ([`cio::stage`]), executed on real bytes by the
+//!   stage runner with §5.3 inter-stage IFS retention
+//!   ([`cio::local_stage`]).
 //!
 //! The original testbed (a 163,840-processor BG/P, GPFS, the torus and
 //! collective-tree networks) is replaced by a deterministic discrete-event

@@ -251,6 +251,48 @@ impl ScreenModel {
     }
 }
 
+/// Decode a raw archive-member payload into f32s (little-endian, the
+/// layout stage-1 tasks commit) — the archive-as-input bridge between
+/// the collective-IO runtime and the scoring models: stage 2 pulls a
+/// member out of a retained archive and feeds it straight to
+/// [`score_reference`] / [`ScoreModel::score_batch`] without an
+/// intermediate file.
+pub fn member_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    anyhow::ensure!(
+        bytes.len() % 4 == 0,
+        "member payload of {} bytes is not a whole number of f32s",
+        bytes.len()
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Score a ligand batch read out of an archive member: decode the
+/// little-endian f32 payload, validate it against `meta`'s shape, and run
+/// the reference scorer (PJRT execution goes through
+/// [`ScoreModel::score_batch`] after the same decode). This is the §5.3
+/// stage-2 re-processing step on real bytes.
+pub fn score_member_bytes(
+    meta: &ArtifactMeta,
+    bytes: &[u8],
+    grid: &[f32],
+    weights: &[f32],
+) -> Result<Vec<f32>> {
+    let ligands = member_to_f32s(bytes)?;
+    anyhow::ensure!(
+        ligands.len() == meta.batch * meta.atoms * 4,
+        "member holds {} f32s, expected batch {} x atoms {} x 4",
+        ligands.len(),
+        meta.batch,
+        meta.atoms
+    );
+    anyhow::ensure!(grid.len() == meta.atoms * meta.features, "grid length mismatch");
+    anyhow::ensure!(weights.len() == meta.features, "weights length mismatch");
+    Ok(score_reference(meta, &ligands, grid, weights))
+}
+
 /// Pure-Rust reference scorer mirroring `python/compile/kernels/ref.py`,
 /// used to validate the PJRT path end-to-end (same formula, f32).
 ///
@@ -310,6 +352,21 @@ mod tests {
         // pose 1: 2 * (0.5*1 + 1.5*2) = 7; pose 2: interact = 2/2 = 1 -> 3.5
         assert!((scores[0] - 7.0).abs() < 1e-6);
         assert!((scores[1] - 3.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn member_bytes_roundtrip_through_scorer() {
+        let meta = ArtifactMeta { batch: 2, atoms: 1, features: 2, top_k: 0 };
+        let ligands = [0.0f32, 0.0, 0.0, 2.0, 1.0, 0.0, 0.0, 2.0];
+        let bytes: Vec<u8> = ligands.iter().flat_map(|f| f.to_le_bytes()).collect();
+        let grid = [0.5, 1.5];
+        let weights = [1.0, 2.0];
+        let scores = score_member_bytes(&meta, &bytes, &grid, &weights).unwrap();
+        let direct = score_reference(&meta, &ligands, &grid, &weights);
+        assert_eq!(scores, direct);
+        // Shape violations are rejected, not mis-scored.
+        assert!(score_member_bytes(&meta, &bytes[..7], &grid, &weights).is_err());
+        assert!(score_member_bytes(&meta, &bytes[..4], &grid, &weights).is_err());
     }
 
     #[test]
