@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
         },
         compression: Compression::Deflate,
         cache_capacity: mib(64),
+        neighbor_limit: mib(64),
         threads: 8,
     };
     let mut runner = StageRunner::new(layout, graph, config);
@@ -102,7 +103,7 @@ fn main() -> anyhow::Result<()> {
     for s in &report.stages {
         println!(
             "stage {:<9} {:>3} tasks -> {} archive(s), {:>5} files ({:.0}x file reduction), \
-             {} retained, cache {}/{} hits, {:.2?}",
+             {} retained, reads {} hit / {} neighbor / {} gfs, {:.2?}",
             s.name,
             s.tasks,
             s.collector.archives,
@@ -110,7 +111,8 @@ fn main() -> anyhow::Result<()> {
             s.collector.reduction_factor(),
             s.collector.retained,
             s.ifs_hits,
-            s.ifs_hits + s.gfs_misses,
+            s.neighbor_transfers,
+            s.gfs_misses,
             std::time::Duration::from_secs_f64(s.elapsed_s),
         );
     }

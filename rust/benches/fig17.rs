@@ -13,15 +13,88 @@
 #[path = "common/mod.rs"]
 mod common;
 
+use cio::cio::archive::Compression;
+use cio::cio::collector::Policy;
+use cio::cio::local::LocalLayout;
+use cio::cio::local_stage::{
+    task_output_name, StageExec, StageInput, StageRunner, StageRunnerConfig,
+};
+use cio::cio::stage::StageGraph;
 use cio::config::ClusterConfig;
 use cio::sim::cluster::IoMode;
+use cio::util::units::{mib, SimTime};
 use cio::workload::dock::{run_comparison, DockWorkflow};
+
+/// Real-bytes three-tier read-mix sweep: with many small IFS groups most
+/// stage-2 reads cross group boundaries and are served by torus-neighbor
+/// transfers (plus follow-up hits on the pulled copy); with one big
+/// group every read is an IFS hit. GFS round trips appear only when no
+/// group retains the archive — with ample retention the central store
+/// drops out of the steady state entirely, the paper's §5.3 point.
+fn read_mix_sweep() {
+    let nodes = 8u32;
+    let tasks = 16u32;
+    println!("--- stage-2 read-tier mix vs cn_per_ifs (real bytes, {nodes} nodes) ---");
+    println!(
+        "{:>10} {:>6} {:>8} {:>9} {:>8} {:>6}",
+        "cn_per_ifs", "groups", "ifs_hit", "neighbor", "gfs", "hit%"
+    );
+    for cn in [1u32, 2, 4, 8] {
+        let root =
+            std::env::temp_dir().join(format!("cio-fig17-mix-{}-{cn}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let layout = LocalLayout::create(&root, nodes, cn).unwrap();
+        let graph = StageGraph::chain(&["produce", "gather"]);
+        let config = StageRunnerConfig {
+            policy: Policy {
+                max_delay: SimTime::from_secs(3600),
+                max_data: 2048,
+                min_free_space: 0,
+            },
+            compression: Compression::None,
+            cache_capacity: mib(64),
+            neighbor_limit: mib(64),
+            threads: 4,
+        };
+        let mut runner = StageRunner::new(layout, graph, config);
+        let produce =
+            |t: u32, _in: &StageInput<'_>| -> anyhow::Result<Vec<u8>> { Ok(vec![t as u8; 4096]) };
+        let gather = move |_t: u32, input: &StageInput<'_>| -> anyhow::Result<Vec<u8>> {
+            // Every gather task reads every produce output: the all-to-all
+            // that makes cross-group traffic unavoidable.
+            let mut sum = 0u64;
+            for t in 0..tasks {
+                let (bytes, _) = input.read_member(&task_output_name(0, "produce", t))?;
+                anyhow::ensure!(bytes == vec![t as u8; 4096], "task {t} bytes corrupt");
+                sum += bytes.len() as u64;
+            }
+            Ok(sum.to_le_bytes().to_vec())
+        };
+        let report = runner
+            .run(&[StageExec { tasks, run: &produce }, StageExec { tasks, run: &gather }])
+            .expect("read-mix workflow");
+        let s = &report.stages[1];
+        let total = (s.ifs_hits + s.neighbor_transfers + s.gfs_misses).max(1);
+        println!(
+            "{:>10} {:>6} {:>8} {:>9} {:>8} {:>5.0}%",
+            cn,
+            runner.layout().ifs_groups(),
+            s.ifs_hits,
+            s.neighbor_transfers,
+            s.gfs_misses,
+            100.0 * s.ifs_hits as f64 / total as f64
+        );
+        drop(runner);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}
 
 fn main() {
     let args = common::args();
     let cfg = ClusterConfig::bgp(8192);
     let report = run_comparison(&cfg, 15_360).expect("dock comparison");
     common::footer(&report);
+    read_mix_sweep();
 
     if args.has("large") && !common::fast() {
         println!("--- §6.3 large run: 135K tasks on 96K processors (stage 1 only) ---");

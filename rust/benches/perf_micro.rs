@@ -278,6 +278,143 @@ fn main() {
     b.metric("stage2: ifs-hit speedup over gfs-miss", miss_best / hit_best, "x");
     let _ = std::fs::remove_dir_all(&sroot);
 
+    // --- Stage-2 record-granular reads over the three-tier resolve
+    // (§5.3 + torus neighbor): each read resolves an archive through the
+    // group cache and pulls ONE 64 KiB record out of it, so the read
+    // volume is the record, while the tier decides what a cold resolve
+    // moves: nothing extra (hit), one group-to-group link (neighbor), or
+    // the whole archive from the central store (miss).
+    let rroot = dir.join("stage2-tiers");
+    let _ = std::fs::remove_dir_all(&rroot);
+    let rlayout = LocalLayout::create(&rroot, 2, 1).unwrap(); // groups 0 (producer), 1 (reader)
+    let r_arch = if fast { 12usize } else { 32 };
+    let arch_bytes = if fast { mib(1) } else { mib(4) } as usize;
+    let record_bytes = 64 * 1024usize;
+    let mut r_names: Vec<String> = Vec::new();
+    for i in 0..r_arch {
+        let name = format!("s1-g0-{i:05}.cioar");
+        let mut w = Writer::create(&rlayout.gfs().join(&name)).unwrap();
+        let mut data = vec![0u8; arch_bytes];
+        for (j, byte) in data.iter_mut().enumerate() {
+            *byte = (i * 31 + j) as u8;
+        }
+        w.add("records.bin", &data, Compression::None).unwrap();
+        w.finish().unwrap();
+        r_names.push(name);
+    }
+    let producer = GroupCache::new(&rlayout, 0, mib(1024));
+    for name in &r_names {
+        producer.retain(&rlayout.gfs().join(name), name).unwrap();
+    }
+    let records_per_arch = arch_bytes / record_bytes;
+    let read_all = |cache: &GroupCache, siblings: &[GroupCache], expect: CacheOutcome| -> f64 {
+        let t0 = Instant::now();
+        for (i, name) in r_names.iter().enumerate() {
+            let (r, outcome) = cache.open_archive_via(&rlayout.gfs(), name, siblings).unwrap();
+            assert_eq!(outcome, expect, "{name}");
+            let off = ((i * 7919) % records_per_arch * record_bytes) as u64;
+            let rec = r.extract_range("records.bin", off, record_bytes).unwrap();
+            assert_eq!(rec.len(), record_bytes);
+            black_box(rec.len());
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    let tier_reps = 3;
+    // IFS hit: the producer reads its own warm retention.
+    let mut tier_hit = f64::INFINITY;
+    for _ in 0..tier_reps {
+        tier_hit = tier_hit.min(read_all(&producer, &[], CacheOutcome::IfsHit));
+    }
+    // Neighbor: a cold sibling group pulls group-to-group from the
+    // producer (fresh cold cache every rep so each read pays a fill).
+    let mut tier_neighbor = f64::INFINITY;
+    for _ in 0..tier_reps {
+        let reader = GroupCache::new(&rlayout, 1, mib(1024));
+        let t = read_all(&reader, std::slice::from_ref(&producer), CacheOutcome::NeighborTransfer);
+        tier_neighbor = tier_neighbor.min(t);
+    }
+    // GFS miss: the same cold group with no sibling in reach round-trips
+    // every archive through the central store.
+    let mut tier_gfs = f64::INFINITY;
+    for _ in 0..tier_reps {
+        let reader = GroupCache::new(&rlayout, 1, mib(1024));
+        tier_gfs = tier_gfs.min(read_all(&reader, &[], CacheOutcome::GfsMiss));
+    }
+    let reads = r_arch as f64;
+    b.metric("stage2_record_ifs_hit throughput", reads / tier_hit, "reads/s");
+    b.metric("stage2_record_neighbor throughput", reads / tier_neighbor, "reads/s");
+    b.metric("stage2_record_gfs_miss throughput", reads / tier_gfs, "reads/s");
+    b.metric(
+        "stage2: record read byte volume reduction",
+        arch_bytes as f64 / record_bytes as f64,
+        "x",
+    );
+    let _ = std::fs::remove_dir_all(&rroot);
+
+    // --- Concurrent cold-group fills (the PR-3 singleflight headline):
+    // N threads drive a cold group on distinct archives. The serialized
+    // baseline emulates the old discipline — every fill under one group
+    // lock — with an external mutex around the resolve; the concurrent
+    // case is the shipped path, where distinct-archive fills copy in
+    // parallel and only the metadata LRU is locked.
+    let croot = dir.join("stage2-coldfill");
+    let _ = std::fs::remove_dir_all(&croot);
+    let clayout = LocalLayout::create(&croot, 1, 1).unwrap();
+    let fill_threads = threads.max(2);
+    let c_arch = fill_threads * 2;
+    let fill_bytes = if fast { mib(1) } else { mib(2) } as usize;
+    let mut c_names: Vec<String> = Vec::new();
+    for i in 0..c_arch {
+        let name = format!("s1-g0-{i:05}.cioar");
+        let mut w = Writer::create(&clayout.gfs().join(&name)).unwrap();
+        let mut data = vec![0u8; fill_bytes];
+        for (j, byte) in data.iter_mut().enumerate() {
+            *byte = (i * 131 + j * 7) as u8;
+        }
+        w.add("m", &data, Compression::None).unwrap();
+        w.finish().unwrap();
+        c_names.push(name);
+    }
+    let run_cold = |serialize: bool| -> f64 {
+        let cache = GroupCache::new(&clayout, 0, mib(4096));
+        let lock: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for t in 0..fill_threads {
+                let cache = &cache;
+                let lock = &lock;
+                let clayout = &clayout;
+                let c_names = &c_names;
+                scope.spawn(move || {
+                    let mut i = t;
+                    while i < c_arch {
+                        let name = &c_names[i];
+                        let guard = serialize.then(|| lock.lock().unwrap());
+                        let (r, outcome) =
+                            cache.open_archive(&clayout.gfs(), name).unwrap();
+                        assert_eq!(outcome, CacheOutcome::GfsMiss, "{name}");
+                        black_box(r.len());
+                        drop(guard);
+                        i += fill_threads;
+                    }
+                });
+            }
+        });
+        t0.elapsed().as_secs_f64()
+    };
+    let cold_mib = (c_arch * fill_bytes) as f64 / (1 << 20) as f64;
+    let mut serial_best = f64::INFINITY;
+    let mut conc_best = f64::INFINITY;
+    for _ in 0..tier_reps {
+        serial_best = serial_best.min(run_cold(true));
+        conc_best = conc_best.min(run_cold(false));
+    }
+    b.metric("stage2_cold_group_serialized throughput", cold_mib / serial_best, "MiB/s");
+    b.metric("stage2_cold_group_concurrent throughput", cold_mib / conc_best, "MiB/s");
+    b.metric("stage2: concurrent fill speedup", serial_best / conc_best, "x");
+    b.metric("stage2: concurrent fill threads", fill_threads as f64, "threads");
+    let _ = std::fs::remove_dir_all(&croot);
+
     // --- PJRT scoring latency (needs artifacts).
     match cio::runtime::ScoreModel::load_default() {
         Ok(model) => {

@@ -120,6 +120,14 @@ pub struct CollectorStats {
     /// archive is safe on GFS and the copy is *not* retried, so the next
     /// stage pays a GFS miss for it instead of a hit.
     pub retention_errors: u64,
+    /// Text of the *first* failed flush (`None` while `flush_errors` is
+    /// 0). Counts alone cannot distinguish "disk briefly hiccuped" from
+    /// "GFS path misconfigured, retrying forever"; the first error's
+    /// message usually can.
+    pub first_flush_error: Option<String>,
+    /// Text of the first failed retention copy (`None` while
+    /// `retention_errors` is 0).
+    pub first_retention_error: Option<String>,
 }
 
 impl CollectorStats {
@@ -137,6 +145,20 @@ impl CollectorStats {
         self.reasons[idx] += 1;
     }
 
+    /// Record the text of a failed flush; only the first is kept.
+    pub fn note_flush_error(&mut self, msg: &str) {
+        if self.first_flush_error.is_none() {
+            self.first_flush_error = Some(msg.to_string());
+        }
+    }
+
+    /// Record the text of a failed retention copy; only the first is kept.
+    pub fn note_retention_error(&mut self, msg: &str) {
+        if self.first_retention_error.is_none() {
+            self.first_retention_error = Some(msg.to_string());
+        }
+    }
+
     /// Fold another collector's stats into this one (cluster-wide totals).
     pub fn merge(&mut self, other: &CollectorStats) {
         self.archives += other.archives;
@@ -148,6 +170,12 @@ impl CollectorStats {
         self.flush_errors += other.flush_errors;
         self.retained += other.retained;
         self.retention_errors += other.retention_errors;
+        if let (None, Some(e)) = (&self.first_flush_error, &other.first_flush_error) {
+            self.first_flush_error = Some(e.clone());
+        }
+        if let (None, Some(e)) = (&self.first_retention_error, &other.first_retention_error) {
+            self.first_retention_error = Some(e.clone());
+        }
     }
 
     /// GFS file-create reduction factor: task files per archive file.
@@ -262,6 +290,9 @@ mod tests {
         s.flush_errors = 3;
         s.retained = 2;
         s.retention_errors = 1;
+        s.note_flush_error("disk full");
+        s.note_flush_error("later error must not displace the first");
+        s.note_retention_error("cache dir vanished");
         let mut total = CollectorStats::default();
         total.merge(&s);
         total.merge(&s);
@@ -271,6 +302,8 @@ mod tests {
         assert_eq!(total.flush_errors, 6);
         assert_eq!(total.retained, 4);
         assert_eq!(total.retention_errors, 2);
+        assert_eq!(total.first_flush_error.as_deref(), Some("disk full"));
+        assert_eq!(total.first_retention_error.as_deref(), Some("cache dir vanished"));
         assert!((total.reduction_factor() - 512.0).abs() < 1e-9);
     }
 

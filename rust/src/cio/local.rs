@@ -92,6 +92,47 @@ pub fn publish_copy(src: &Path, dst: &Path) -> Result<u64> {
     Ok(bytes)
 }
 
+/// Publish `src` as `dst` by **hard link** where possible: link into a
+/// `.tmp-`-prefixed sibling and `rename` into place — the same atomic
+/// visibility contract as [`publish_copy`] but without moving any data.
+///
+/// This is the local stand-in for a Chirp-style group-to-group
+/// (torus-neighbor) transfer: the bytes already live on the "near" side
+/// of the hierarchy, so no central-store round trip is paid. It is only
+/// sound for **immutable** published files (retained archives are
+/// write-once; eviction unlinks a directory entry, which leaves other
+/// links to the inode intact). Falls back to a full [`publish_copy`] when
+/// linking is impossible (cross-device, unsupported filesystem). Returns
+/// the published file's size in bytes.
+pub fn publish_link(src: &Path, dst: &Path) -> Result<u64> {
+    let dir = dst.parent().context("publish destination has no parent")?;
+    let name = dst
+        .file_name()
+        .and_then(|n| n.to_str())
+        .context("publish destination has no utf8 file name")?;
+    let tmp = dir.join(format!(
+        "{TMP_PREFIX}{}-{}-{name}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    if std::fs::hard_link(src, &tmp).is_err() {
+        return publish_copy(src, dst);
+    }
+    let bytes = match std::fs::metadata(&tmp) {
+        Ok(m) => m.len(),
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(anyhow::Error::from(e).context("stat of linked temp"));
+        }
+    };
+    if let Err(e) = std::fs::rename(&tmp, dst) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(anyhow::Error::from(e)
+            .context(format!("publishing link {} into place", dst.display())));
+    }
+    Ok(bytes)
+}
+
 /// Directory layout for a local run.
 #[derive(Debug, Clone)]
 pub struct LocalLayout {
@@ -142,6 +183,14 @@ impl LocalLayout {
     /// An IFS group's output staging directory (§5.2).
     pub fn ifs_staging(&self, group: u32) -> PathBuf {
         self.root.join(format!("ifs/{group}/staging"))
+    }
+
+    /// An IFS group's retention-manifest file (the
+    /// [`crate::cio::local_stage::GroupCache`] warm-start state, §7
+    /// "learn from previous runs"). Lives beside `data/` and `staging/`,
+    /// not inside them, so directory scans never see it.
+    pub fn ifs_manifest(&self, group: u32) -> PathBuf {
+        self.root.join(format!("ifs/{group}/cache.manifest"))
     }
 
     /// A node's LFS directory.
@@ -638,7 +687,10 @@ fn collector_loop(
                         {
                             Ok(true) => stats.retained += 1,
                             Ok(false) => {} // oversized for the cache: GFS-only
-                            Err(_) => stats.retention_errors += 1,
+                            Err(e) => {
+                                stats.retention_errors += 1;
+                                stats.note_retention_error(&format!("group {group}: {e:#}"));
+                            }
                         }
                     }
                 }
@@ -647,8 +699,11 @@ fn collector_loop(
                     // guarantees a retry. Only a failed FINAL drain may
                     // abandon data, so only then does the error propagate
                     // (out of finish()); a mid-run error must not kill
-                    // the thread while commit() keeps succeeding.
+                    // the thread while commit() keeps succeeding. The
+                    // first error's text is kept so a flush that retries
+                    // forever is diagnosable from the stats snapshot.
                     stats.flush_errors += 1;
+                    stats.note_flush_error(&format!("group {group}: {e:#}"));
                     if stopping {
                         return Err(e.context(format!(
                             "group {group}: final shutdown drain failed"
@@ -738,6 +793,31 @@ mod tests {
         let err = publish_copy(&root.join("ghost"), &root.join("out")).unwrap_err();
         assert!(err.to_string().contains("copying"), "{err}");
         assert!(!root.join("out").exists());
+    }
+
+    #[test]
+    fn publish_link_shares_bytes_and_survives_source_unlink() {
+        let root = tmp("publink");
+        std::fs::create_dir_all(root.join("a")).unwrap();
+        std::fs::create_dir_all(root.join("b")).unwrap();
+        let src = root.join("a/archive.bin");
+        std::fs::write(&src, vec![0x5Au8; 3000]).unwrap();
+        let dst = root.join("b/archive.bin");
+        assert_eq!(publish_link(&src, &dst).unwrap(), 3000);
+        assert_eq!(std::fs::read(&dst).unwrap(), vec![0x5Au8; 3000]);
+        // No temp residue in the destination directory.
+        let names: Vec<String> = std::fs::read_dir(root.join("b"))
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+            .collect();
+        assert!(names.iter().all(|n| !n.starts_with(TMP_PREFIX)), "residue: {names:?}");
+        // Eviction on the source side (unlink) must not disturb the
+        // published link — the inode lives while any link does.
+        std::fs::remove_file(&src).unwrap();
+        assert_eq!(std::fs::read(&dst).unwrap(), vec![0x5Au8; 3000]);
+        // A missing source is a clean error either way.
+        assert!(publish_link(&root.join("a/ghost"), &root.join("b/out")).is_err());
+        assert!(!root.join("b/out").exists());
     }
 
     #[test]

@@ -13,28 +13,61 @@
 //!   control (eviction unlinks the retained file).
 //! * Stage N+1's tasks open stage N's output archives via
 //!   [`crate::cio::archive::Reader`] random access — archive-as-input —
-//!   resolving each archive through the task's group cache: an
-//!   [`CacheOutcome::IfsHit`] reads the retained copy in place; a
-//!   [`CacheOutcome::GfsMiss`] pays the full GFS round trip (the archive
-//!   is re-staged from `gfs/` into the group's data dir, read-through,
-//!   exactly the §5.3 fallback) before the read proceeds.
+//!   resolving each archive through a **three-tier read path**:
 //!
-//! Figure 17's stage-2 ablation is this hit/miss difference on real
-//! bytes: a hit reads the archive once from fast local storage, a miss
-//! pays an extra full-archive copy from the central store first. The
-//! `stage2_ifs_hit` / `stage2_gfs_miss` cases in `perf_micro` measure it;
-//! `examples/multistage_workflow.rs` runs the whole 3-stage chain.
+//!   1. **IFS hit** ([`CacheOutcome::IfsHit`]): the reading task's own
+//!      group retains the archive; the retained copy is read in place.
+//!   2. **Neighbor transfer** ([`CacheOutcome::NeighborTransfer`]): the
+//!      group that *produced* the archive (parsed from its name by
+//!      [`archive_group`]) still retains it, so the archive is pulled
+//!      group-to-group — a Chirp-style torus-neighbor copy, published
+//!      atomically by [`crate::cio::local::publish_link`] — and retained
+//!      locally, without ever touching the central store.
+//!   3. **GFS miss** ([`CacheOutcome::GfsMiss`]): nobody retains it; the
+//!      full GFS round trip is paid (the archive is re-staged from
+//!      `gfs/` into the group's data dir, read-through, exactly the
+//!      §5.3 fallback) before the read proceeds.
+//!
+//! Cache *fills* (tiers 2 and 3) are **singleflight**: the metadata LRU
+//! lives under one short-held mutex, while each miss's data movement runs
+//! outside it behind a per-archive in-flight latch. Concurrent misses on
+//! the same archive dedupe onto one fill (waiters block on the latch and
+//! share the filler's outcome — or its error), and misses on distinct
+//! archives fill in parallel, so a cold group's warm-up is bounded by one
+//! copy, not the sum of all of them.
+//!
+//! Tasks can read **records, not whole members**: for record-structured
+//! members, [`StageInput::read_member_range`] (and the
+//! [`crate::workload::blast`] record layer over it) extracts just the
+//! requested byte range from the resolved archive via
+//! [`Reader::extract_range`], cutting the read volume from the member
+//! size to the record size.
+//!
+//! Retention also survives the runner: each group's accounting is written
+//! to `ifs/<group>/cache.manifest` when the [`StageRunner`] drops, and a
+//! newly constructed [`GroupCache`] warm-starts from that manifest after
+//! reconciling it against the files actually on disk — the §7 "learn
+//! from previous runs" behaviour for outputs.
+//!
+//! Figure 17's stage-2 ablation is the tier difference on real bytes: a
+//! hit reads the archive in place, a neighbor transfer links/copies it
+//! from a sibling group first, a miss pays a full-archive copy from the
+//! central store. The `stage2_ifs_hit` / `stage2_gfs_miss` /
+//! `stage2_record_*` / `stage2_cold_group_*` cases in `perf_micro`
+//! measure it; `examples/multistage_workflow.rs` runs the whole 3-stage
+//! chain, and the `fig17` bench sweeps the hit/neighbor/miss mix over
+//! `cn_per_ifs`.
 
 use crate::cio::archive::{Compression, Reader};
 use crate::cio::collector::{CollectorStats, Policy};
-use crate::cio::local::{publish_copy, CollectorOptions, LocalCollector, LocalLayout};
+use crate::cio::local::{publish_copy, publish_link, CollectorOptions, LocalCollector, LocalLayout};
 use crate::cio::placement::PlacementPolicy;
 use crate::cio::stage::{CacheOutcome, IfsCache, StageGraph};
 use anyhow::{Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 /// Point-in-time counters of one group's retention cache.
@@ -42,38 +75,156 @@ use std::time::Instant;
 pub struct CacheSnapshot {
     /// Lookups served from the IFS retained copy.
     pub hits: u64,
-    /// Lookups that fell back to GFS.
+    /// Lookups that missed this group's retention accounting. Each is
+    /// resolved by a unique fill (`neighbor_transfers` or `gfs_copies`),
+    /// an oversized in-place GFS read (`gfs_direct`), or by joining
+    /// another thread's in-flight fill (the remainder — deduped waiters,
+    /// ultimately served from the shared retained copy).
     pub misses: u64,
+    /// Misses filled group-to-group from the producing sibling's
+    /// retention instead of GFS (unique fills, not deduped waiters).
+    pub neighbor_transfers: u64,
+    /// Misses that paid the full GFS round-trip copy (unique fills — the
+    /// probe the concurrent-miss tests count).
+    pub gfs_copies: u64,
+    /// Misses read from GFS in place without retention (archives larger
+    /// than the whole cache).
+    pub gfs_direct: u64,
     /// Retained archives evicted (files unlinked) to bound capacity.
     pub evictions: u64,
     /// Bytes currently retained.
     pub used: u64,
 }
 
+/// State of one in-flight cache fill (the singleflight latch).
+enum FillState {
+    /// The filler is copying; waiters block on the condvar.
+    Pending,
+    /// Fill landed; the retained copy is accounted and readable. Carries
+    /// the tier the *filler* paid so deduped waiters report it honestly.
+    Done(CacheOutcome),
+    /// Fill failed; waiters get the error instead of a deadlock.
+    Failed(String),
+}
+
+/// Per-archive in-flight fill latch: one filler copies, every concurrent
+/// miss of the same archive waits here instead of starting its own copy.
+struct Fill {
+    state: Mutex<FillState>,
+    cv: Condvar,
+}
+
+impl Fill {
+    fn new() -> Fill {
+        Fill { state: Mutex::new(FillState::Pending), cv: Condvar::new() }
+    }
+
+    /// Publish the fill's outcome and wake every waiter.
+    fn publish(&self, state: FillState) {
+        *self.state.lock().unwrap() = state;
+        self.cv.notify_all();
+    }
+
+    /// Block until the filler publishes; `Err` carries the fill error.
+    fn wait(&self) -> std::result::Result<CacheOutcome, String> {
+        let mut state = self.state.lock().unwrap();
+        loop {
+            match &*state {
+                FillState::Pending => state = self.cv.wait(state).unwrap(),
+                FillState::Done(outcome) => return Ok(*outcome),
+                FillState::Failed(msg) => return Err(msg.clone()),
+            }
+        }
+    }
+}
+
 /// One IFS group's on-disk retention: the [`IfsCache`] accounting plus the
-/// real archive files it governs in `ifs/<group>/data/`. All mutation
-/// (retain, read-through fill, eviction unlink) happens under one lock,
-/// so a hit can never observe a half-evicted or half-published file.
-/// Correctness over concurrency: a miss's read-through copy runs under
-/// the lock, serializing that group's fills (which also dedupes
-/// concurrent misses of the same archive into one copy plus hits);
-/// moving the copy outside the lock behind an in-flight map is a known
-/// follow-up (see ROADMAP).
+/// real archive files it governs in `ifs/<group>/data/`.
+///
+/// Concurrency shape (the PR-3 rework): the metadata LRU lives under one
+/// short-held mutex — hits resolve (and open, so a hit can never observe
+/// a half-evicted file) under it — while miss *fills* run outside it
+/// behind a per-archive [`Fill`] latch in an in-flight map. Concurrent
+/// misses of the same archive dedupe onto one fill; misses of distinct
+/// archives copy in parallel. A fill is sourced from the producing
+/// sibling group's retention when possible (neighbor transfer via
+/// [`publish_link`] — no central-store round trip) and from GFS
+/// otherwise; either way the data lands atomically and is accounted
+/// (evicting LRU victims) before waiters are released.
 pub struct GroupCache {
+    /// This cache's IFS group index (to recognise itself in a sibling
+    /// slice and to skip "neighbor" transfers from itself).
+    group: u32,
     data_dir: PathBuf,
+    /// `ifs/<group>/cache.manifest`, the warm-start state file.
+    manifest: PathBuf,
+    /// Archives larger than this are never pulled group-to-group (the
+    /// duplicate would churn too much of the cache); they pay the GFS
+    /// path. See [`PlacementPolicy::neighbor_transfer_limit`].
+    neighbor_limit: u64,
     inner: Mutex<IfsCache>,
+    /// Archive name → in-flight fill latch (singleflight map).
+    fills: Mutex<HashMap<String, Arc<Fill>>>,
+    neighbor_transfers: AtomicU64,
+    gfs_copies: AtomicU64,
+    gfs_direct: AtomicU64,
 }
 
 impl GroupCache {
-    /// Retention for `group` of `layout`, bounded by `capacity` bytes.
+    /// Retention for `group` of `layout`, bounded by `capacity` bytes,
+    /// with the neighbor-transfer size cap defaulting to the full
+    /// capacity. Warm-starts from `ifs/<group>/cache.manifest` when a
+    /// previous runner persisted one (entries are reconciled against the
+    /// files actually on disk; stale ones are dropped).
     pub fn new(layout: &LocalLayout, group: u32, capacity: u64) -> GroupCache {
-        GroupCache { data_dir: layout.ifs_data(group), inner: Mutex::new(IfsCache::new(capacity)) }
+        Self::with_limits(layout, group, capacity, capacity)
+    }
+
+    /// [`GroupCache::new`] with an explicit neighbor-transfer size cap.
+    pub fn with_limits(
+        layout: &LocalLayout,
+        group: u32,
+        capacity: u64,
+        neighbor_limit: u64,
+    ) -> GroupCache {
+        let data_dir = layout.ifs_data(group);
+        let manifest = layout.ifs_manifest(group);
+        let cache = warm_start(&manifest, &data_dir, capacity);
+        GroupCache {
+            group,
+            data_dir,
+            manifest,
+            neighbor_limit,
+            inner: Mutex::new(cache),
+            fills: Mutex::new(HashMap::new()),
+            neighbor_transfers: AtomicU64::new(0),
+            gfs_copies: AtomicU64::new(0),
+            gfs_direct: AtomicU64::new(0),
+        }
     }
 
     /// One cache per IFS group of `layout`, ready for
     /// [`CollectorOptions::retention`].
     pub fn per_group(layout: &LocalLayout, capacity: u64) -> Arc<Vec<GroupCache>> {
-        Arc::new((0..layout.ifs_groups()).map(|g| GroupCache::new(layout, g, capacity)).collect())
+        Self::per_group_with(layout, capacity, capacity)
+    }
+
+    /// [`GroupCache::per_group`] with an explicit neighbor-transfer cap.
+    pub fn per_group_with(
+        layout: &LocalLayout,
+        capacity: u64,
+        neighbor_limit: u64,
+    ) -> Arc<Vec<GroupCache>> {
+        Arc::new(
+            (0..layout.ifs_groups())
+                .map(|g| GroupCache::with_limits(layout, g, capacity, neighbor_limit))
+                .collect(),
+        )
+    }
+
+    /// This cache's IFS group index.
+    pub fn group(&self) -> u32 {
+        self.group
     }
 
     /// Retain a copy of `src` (an archive just flushed to GFS) as `name`
@@ -99,43 +250,186 @@ impl GroupCache {
         Ok(true)
     }
 
-    /// Open archive `name` for a stage task: the retained copy on a hit;
-    /// on a miss, pull the archive from `gfs_dir` into the data dir
-    /// (read-through — the §5.3 re-stage from central storage, and the
-    /// cost a miss pays), retain it, then open. Oversized archives are
-    /// read from GFS directly without retention.
+    /// Open archive `name` for a stage task with no sibling groups in
+    /// reach: hit reads in place, miss pays the GFS round trip
+    /// ([`GroupCache::open_archive_via`] with an empty sibling slice).
     pub fn open_archive(
         &self,
         gfs_dir: &std::path::Path,
         name: &str,
     ) -> Result<(Reader, CacheOutcome)> {
-        let mut cache = self.inner.lock().unwrap();
-        match cache.get(name) {
-            CacheOutcome::IfsHit => {
-                let reader = Reader::open(&self.data_dir.join(name))
-                    .with_context(|| format!("opening retained archive {name}"))?;
-                Ok((reader, CacheOutcome::IfsHit))
-            }
-            CacheOutcome::GfsMiss => {
-                let gfs_path = gfs_dir.join(name);
-                let bytes = std::fs::metadata(&gfs_path)
-                    .with_context(|| format!("no archive {name} on GFS"))?
-                    .len();
-                match cache.put_evicting(name, bytes) {
-                    Some(victims) => {
-                        for victim in &victims {
-                            let _ = std::fs::remove_file(self.data_dir.join(victim));
-                        }
-                        let retained = self.data_dir.join(name);
-                        if let Err(e) = publish_copy(&gfs_path, &retained) {
-                            cache.remove(name);
-                            return Err(e.context(format!("re-staging archive {name} to IFS")));
-                        }
-                        Ok((Reader::open(&retained)?, CacheOutcome::GfsMiss))
-                    }
-                    // Larger than the whole cache: read from GFS in place.
-                    None => Ok((Reader::open(&gfs_path)?, CacheOutcome::GfsMiss)),
+        self.open_archive_via(gfs_dir, name, &[])
+    }
+
+    /// Open archive `name` for a stage task through the three-tier read
+    /// path: retained copy on a hit; on a miss, fill from the producing
+    /// sibling group's retention (`siblings`, matched by
+    /// [`archive_group`]) when it still holds the archive, else from
+    /// `gfs_dir` — read-through either way, so the next read hits.
+    /// Oversized archives are read from GFS directly without retention.
+    ///
+    /// Fills are deduped per archive and run outside the metadata lock;
+    /// see the type docs for the concurrency contract.
+    pub fn open_archive_via(
+        &self,
+        gfs_dir: &std::path::Path,
+        name: &str,
+        siblings: &[GroupCache],
+    ) -> Result<(Reader, CacheOutcome)> {
+        loop {
+            // Fast path: metadata lock only. Opening the retained copy
+            // under it means a hit can never race an eviction unlink.
+            {
+                let mut cache = self.inner.lock().unwrap();
+                if cache.get(name) == CacheOutcome::IfsHit {
+                    let reader = Reader::open(&self.data_dir.join(name))
+                        .with_context(|| format!("opening retained archive {name}"))?;
+                    return Ok((reader, CacheOutcome::IfsHit));
                 }
+            }
+            // Miss (counted). Oversized archives bypass retention and the
+            // fill machinery entirely: read from GFS in place.
+            let gfs_path = gfs_dir.join(name);
+            let capacity = self.inner.lock().unwrap().capacity();
+            let gfs_bytes = std::fs::metadata(&gfs_path).map(|m| m.len());
+            if let Ok(bytes) = gfs_bytes {
+                if bytes > capacity {
+                    self.gfs_direct.fetch_add(1, Ordering::Relaxed);
+                    return Ok((Reader::open(&gfs_path)?, CacheOutcome::GfsMiss));
+                }
+            }
+            // Singleflight: join the in-flight fill or become the filler.
+            let (fill, filler) = {
+                let mut fills = self.fills.lock().unwrap();
+                match fills.get(name) {
+                    Some(f) => (f.clone(), false),
+                    None => {
+                        let f = Arc::new(Fill::new());
+                        fills.insert(name.to_string(), f.clone());
+                        (f, true)
+                    }
+                }
+            };
+            if !filler {
+                match fill.wait() {
+                    Ok(outcome) => {
+                        // The filler retained and accounted the archive;
+                        // serve the shared copy. An immediate eviction in
+                        // the gap sends us around the loop for a fresh
+                        // fill (counted as another miss — honestly).
+                        if self.contains(name) {
+                            if let Ok(reader) = Reader::open(&self.data_dir.join(name)) {
+                                return Ok((reader, outcome));
+                            }
+                        }
+                        continue;
+                    }
+                    Err(msg) => {
+                        anyhow::bail!("fill of archive {name} failed: {msg}");
+                    }
+                }
+            }
+            // Filler path: move the bytes OUTSIDE both locks, then
+            // account under the metadata lock, then release waiters.
+            let result = self.run_fill(&gfs_path, name, siblings);
+            self.fills.lock().unwrap().remove(name);
+            match result {
+                Ok(outcome) => {
+                    match Reader::open(&self.data_dir.join(name)) {
+                        Ok(reader) => {
+                            fill.publish(FillState::Done(outcome));
+                            return Ok((reader, outcome));
+                        }
+                        Err(_) => {
+                            // The fill landed and was accounted, but a
+                            // concurrent fill evicted it (unlinked the
+                            // file) before this open. That is a normal
+                            // cache event, not a fill failure: release
+                            // the waiters — they re-check retention and
+                            // re-resolve, exactly like this retry — and
+                            // go around the loop. A genuinely corrupt
+                            // (present but unreadable) copy terminates
+                            // on the next pass through the fast path,
+                            // whose hit-open error propagates.
+                            fill.publish(FillState::Done(outcome));
+                            continue;
+                        }
+                    }
+                }
+                Err(e) => {
+                    fill.publish(FillState::Failed(format!("{e:#}")));
+                    return Err(e.context(format!("filling archive {name}")));
+                }
+            }
+        }
+    }
+
+    /// Attempt the neighbor tier of one fill: locate the producing
+    /// sibling by [`archive_group`], probe its retention (no counters —
+    /// whether the producer still holds it is not a hit/miss event for
+    /// either side), and publish group-to-group. Returns `false` on any
+    /// reason to fall through to GFS: self-produced name, no such
+    /// sibling, not retained there, over the neighbor-transfer cap, or a
+    /// lost race with the sibling's eviction (the link/copy source
+    /// vanishing is not an error, just a miss of this tier).
+    fn try_neighbor_fill(
+        &self,
+        name: &str,
+        dst: &std::path::Path,
+        siblings: &[GroupCache],
+    ) -> bool {
+        let Some(owner) = archive_group(name) else {
+            return false;
+        };
+        if owner == self.group {
+            return false;
+        }
+        let Some(sib) = siblings.iter().find(|c| c.group == owner) else {
+            return false;
+        };
+        if !sib.contains(name) {
+            return false;
+        }
+        let src = sib.data_dir.join(name);
+        let small_enough = std::fs::metadata(&src)
+            .map(|m| m.len() <= self.neighbor_limit)
+            .unwrap_or(false);
+        small_enough && publish_link(&src, dst).is_ok()
+    }
+
+    /// The data movement of one deduped fill: neighbor tier first, GFS
+    /// fallback; publish atomically; account + unlink victims under the
+    /// metadata lock. Runs on exactly one thread per (archive, fill).
+    fn run_fill(
+        &self,
+        gfs_path: &std::path::Path,
+        name: &str,
+        siblings: &[GroupCache],
+    ) -> Result<CacheOutcome> {
+        let dst = self.data_dir.join(name);
+        let outcome = if self.try_neighbor_fill(name, &dst, siblings) {
+            self.neighbor_transfers.fetch_add(1, Ordering::Relaxed);
+            CacheOutcome::NeighborTransfer
+        } else {
+            publish_copy(gfs_path, &dst)
+                .with_context(|| format!("re-staging archive {name} from GFS"))?;
+            self.gfs_copies.fetch_add(1, Ordering::Relaxed);
+            CacheOutcome::GfsMiss
+        };
+        let bytes = std::fs::metadata(&dst)?.len();
+        let mut cache = self.inner.lock().unwrap();
+        match cache.put_evicting(name, bytes) {
+            Some(victims) => {
+                for victim in &victims {
+                    let _ = std::fs::remove_file(self.data_dir.join(victim));
+                }
+                Ok(outcome)
+            }
+            None => {
+                // Capacity raced below the archive size (possible only via
+                // a concurrent warm-start/clear); keep disk == accounting.
+                let _ = std::fs::remove_file(&dst);
+                anyhow::bail!("archive {name} no longer fits the cache");
             }
         }
     }
@@ -146,6 +440,9 @@ impl GroupCache {
         CacheSnapshot {
             hits: cache.hits(),
             misses: cache.misses(),
+            neighbor_transfers: self.neighbor_transfers.load(Ordering::Relaxed),
+            gfs_copies: self.gfs_copies.load(Ordering::Relaxed),
+            gfs_direct: self.gfs_direct.load(Ordering::Relaxed),
             evictions: cache.evictions(),
             used: cache.used(),
         }
@@ -155,6 +452,96 @@ impl GroupCache {
     pub fn contains(&self, name: &str) -> bool {
         self.inner.lock().unwrap().contains(name)
     }
+
+    /// Forget (and unlink) every retained `<prefix>-g*.cioar` — stale
+    /// derived artifacts of a stage about to re-run. Unaccounted on-disk
+    /// leftovers matching the pattern are unlinked too, so they can never
+    /// leak past the capacity bound. Runs under the metadata lock: no hit
+    /// can observe a half-cleared name.
+    pub fn clear_prefix(&self, prefix: &str) -> Result<()> {
+        let mut cache = self.inner.lock().unwrap();
+        let doomed: Vec<String> = cache
+            .entries_lru()
+            .map(|(n, _)| n.to_string())
+            .filter(|n| stage_artifact_matches(n, prefix))
+            .collect();
+        for name in &doomed {
+            cache.remove(name);
+        }
+        for entry in std::fs::read_dir(&self.data_dir)? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().to_string();
+            if stage_artifact_matches(&name, prefix) {
+                std::fs::remove_file(entry.path())
+                    .with_context(|| format!("clearing stale retained archive {name}"))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Persist the retention accounting to `ifs/<group>/cache.manifest`
+    /// (atomically), LRU-oldest first so a warm-start replay reconstructs
+    /// recency. Called by [`StageRunner`]'s drop; callers managing bare
+    /// caches can invoke it directly.
+    pub fn save_manifest(&self) -> Result<()> {
+        let mut text = String::from("# cio retention manifest, LRU-oldest first\n");
+        {
+            let cache = self.inner.lock().unwrap();
+            for (name, bytes) in cache.entries_lru() {
+                text.push_str(name);
+                text.push('\t');
+                text.push_str(&bytes.to_string());
+                text.push('\n');
+            }
+        }
+        let tmp = self.manifest.with_extension("manifest.tmp");
+        std::fs::write(&tmp, &text)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &self.manifest)
+            .with_context(|| format!("publishing {}", self.manifest.display()))?;
+        Ok(())
+    }
+}
+
+/// Does `name` look like a stage artifact of `prefix`
+/// (`<prefix>-g<group>-<seq>.cioar`)?
+fn stage_artifact_matches(name: &str, prefix: &str) -> bool {
+    name.starts_with(&format!("{prefix}-g")) && name.ends_with(".cioar")
+}
+
+/// Rebuild an [`IfsCache`] from a persisted manifest, reconciling every
+/// entry against the files actually in `data_dir`: an entry whose file is
+/// missing or has a different size is dropped (the disk is the truth —
+/// the §7 "learn from previous runs" warm start must never claim bytes it
+/// cannot serve). A missing or malformed manifest yields a cold cache.
+fn warm_start(manifest: &std::path::Path, data_dir: &std::path::Path, capacity: u64) -> IfsCache {
+    let mut cache = IfsCache::new(capacity);
+    let Ok(text) = std::fs::read_to_string(manifest) else {
+        return cache;
+    };
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((name, bytes)) = line.split_once('\t') else { continue };
+        let Ok(bytes) = bytes.trim().parse::<u64>() else { continue };
+        let on_disk = std::fs::metadata(data_dir.join(name))
+            .map(|m| m.is_file() && m.len() == bytes)
+            .unwrap_or(false);
+        if !on_disk {
+            continue;
+        }
+        // Replaying oldest-first through put_evicting reconstructs the
+        // LRU; if this run's capacity shrank, the replay itself evicts
+        // (and unlinks) the oldest entries to fit.
+        if let Some(victims) = cache.put_evicting(name, bytes) {
+            for victim in &victims {
+                let _ = std::fs::remove_file(data_dir.join(victim));
+            }
+        }
+    }
+    cache
 }
 
 /// Delete every `<prefix>-g*.cioar` in `dir` (stale stage artifacts from
@@ -164,7 +551,7 @@ fn clear_matching(dir: &std::path::Path, prefix: &str) -> Result<()> {
     for entry in std::fs::read_dir(dir)? {
         let entry = entry?;
         let name = entry.file_name().to_string_lossy().to_string();
-        if name.starts_with(&format!("{prefix}-g")) && name.ends_with(".cioar") {
+        if stage_artifact_matches(&name, prefix) {
             std::fs::remove_file(entry.path())
                 .with_context(|| format!("clearing stale stage archive {name}"))?;
         }
@@ -197,13 +584,19 @@ pub struct StageRunnerConfig {
     pub compression: Compression,
     /// Per-group retention capacity in bytes (bounds each [`GroupCache`]).
     pub cache_capacity: u64,
+    /// Largest archive a group may pull group-to-group from a sibling's
+    /// retention instead of GFS; bigger ones pay the central round trip
+    /// rather than churn the cache ([`PlacementPolicy::neighbor_transfer_limit`]).
+    pub neighbor_limit: u64,
     /// Worker threads per stage (tasks are pulled off a shared counter).
     pub threads: usize,
 }
 
 impl StageRunnerConfig {
-    /// Derive the retention capacity from the placement policy's IFS
-    /// sizing ([`PlacementPolicy::retention_capacity`]).
+    /// Derive the retention capacity and neighbor-transfer cap from the
+    /// placement policy's IFS sizing
+    /// ([`PlacementPolicy::retention_capacity`] /
+    /// [`PlacementPolicy::neighbor_transfer_limit`]).
     pub fn with_placement(
         policy: Policy,
         compression: Compression,
@@ -214,6 +607,7 @@ impl StageRunnerConfig {
             policy,
             compression,
             cache_capacity: placement.retention_capacity(),
+            neighbor_limit: placement.neighbor_transfer_limit(),
             threads,
         }
     }
@@ -230,8 +624,10 @@ pub struct StageExec<'a> {
 }
 
 /// Read access to the upstream stages' output archives for one task.
-/// Every archive resolve goes through the task's group cache:
-/// hit → retained IFS copy, miss → GFS round trip (re-staged locally).
+/// Every archive resolve goes through the task's group cache and the
+/// three-tier read path: hit → retained IFS copy, miss → neighbor-group
+/// transfer when the producer still retains the archive, else the GFS
+/// round trip (re-staged locally either way).
 pub struct StageInput<'a> {
     gfs: PathBuf,
     caches: &'a [GroupCache],
@@ -264,32 +660,64 @@ impl StageInput<'_> {
         self.group
     }
 
-    /// Open an upstream archive through this task's group cache.
+    /// Open an upstream archive through this task's group cache, with
+    /// every other group's cache reachable as a neighbor-transfer source.
     pub fn open_archive(&self, name: &str) -> Result<(Reader, CacheOutcome)> {
-        self.caches[self.group as usize].open_archive(&self.gfs, name)
+        self.caches[self.group as usize].open_archive_via(&self.gfs, name, self.caches)
     }
 
-    /// Read one upstream member: find its archive, open it (IFS hit or
-    /// GFS miss), extract the member by random access.
+    /// Read one upstream member: find its archive, resolve it through the
+    /// three-tier path, extract the member by random access.
     ///
     /// A retained copy can be evicted (its file unlinked) between the
     /// open and the extract — e.g. this stage's own collector retaining a
     /// new archive under a tight cache. The GFS copy is canonical and
-    /// never evicted, so a failed hit-read falls back to a direct GFS
-    /// read and reports the honest [`CacheOutcome::GfsMiss`].
+    /// never evicted, so a failed retained read falls back to a direct
+    /// GFS read and reports the honest [`CacheOutcome::GfsMiss`].
     pub fn read_member(&self, member: &str) -> Result<(Vec<u8>, CacheOutcome)> {
+        self.read_with(member, |reader| reader.extract(member))
+    }
+
+    /// Read `len` bytes at `offset` within one upstream member — the
+    /// record-granular read path ([`Reader::extract_range`] behind the
+    /// same three-tier resolve as [`StageInput::read_member`]): stage 2
+    /// pulls *records, not whole members,* out of retention, so the read
+    /// volume tracks the record size instead of the member size. The
+    /// range is clamped to the member length.
+    pub fn read_member_range(
+        &self,
+        member: &str,
+        offset: u64,
+        len: usize,
+    ) -> Result<(Vec<u8>, CacheOutcome)> {
+        self.read_with(member, |reader| reader.extract_range(member, offset, len))
+    }
+
+    /// Shared resolve-then-read with the eviction-race GFS fallback.
+    fn read_with(
+        &self,
+        member: &str,
+        read: impl Fn(&Reader) -> Result<Vec<u8>>,
+    ) -> Result<(Vec<u8>, CacheOutcome)> {
         let (archive, _owner) = self
             .members
             .get(member)
             .with_context(|| format!("no upstream stage produced member {member:?}"))?;
         let (reader, outcome) = self.open_archive(archive)?;
-        match reader.extract(member) {
+        match read(&reader) {
             Ok(bytes) => Ok((bytes, outcome)),
-            Err(_) if outcome == CacheOutcome::IfsHit => {
-                let reader = Reader::open(&self.gfs.join(archive))?;
-                Ok((reader.extract(member)?, CacheOutcome::GfsMiss))
+            // Any retained-copy read can lose an eviction race (the
+            // reader holds a path, not a descriptor); GFS is canonical,
+            // so retry there — but if GFS cannot serve either (a
+            // warm-started retained copy may have no GFS twin left, or
+            // the member is genuinely corrupt), report the first error,
+            // not the retry's.
+            Err(primary) => {
+                match Reader::open(&self.gfs.join(archive)).and_then(|r| read(&r)) {
+                    Ok(bytes) => Ok((bytes, CacheOutcome::GfsMiss)),
+                    Err(_) => Err(primary),
+                }
             }
-            Err(e) => Err(e),
         }
     }
 }
@@ -305,13 +733,19 @@ pub struct StageStats {
     pub collector: CollectorStats,
     /// Archives this stage produced on GFS, sorted.
     pub archives: Vec<String>,
-    /// Upstream archive resolves served from IFS retention, as accounted
-    /// by the group caches. A read that loses the eviction race after a
-    /// hit-open is served from GFS (and its task sees
-    /// [`CacheOutcome::GfsMiss`]) but still counts as a hit here — the
+    /// Upstream archive resolves served locally: retention hits plus
+    /// deduped waiters of an in-flight fill (which read the shared copy
+    /// once it lands — no data movement of their own). A read that loses
+    /// the eviction race after a hit-open is served from GFS (and its
+    /// task sees [`CacheOutcome::GfsMiss`]) but still counts here — the
     /// per-read outcome is the effective source of truth.
     pub ifs_hits: u64,
-    /// Upstream archive resolves that paid the GFS round trip.
+    /// Unique group-to-group fills from a producing sibling's retention
+    /// (no central-store round trip).
+    pub neighbor_transfers: u64,
+    /// Unique GFS round trips (read-through copies plus oversized
+    /// in-place reads). `ifs_hits + neighbor_transfers + gfs_misses`
+    /// equals the stage's total archive resolves.
     pub gfs_misses: u64,
     /// Wall-clock seconds for the stage (tasks + final drain).
     pub elapsed_s: f64,
@@ -330,14 +764,21 @@ impl WorkflowReport {
         self.stages.iter().map(|s| s.ifs_hits).sum()
     }
 
+    /// Total neighbor (group-to-group) transfers across stages.
+    pub fn neighbor_transfers(&self) -> u64 {
+        self.stages.iter().map(|s| s.neighbor_transfers).sum()
+    }
+
     /// Total GFS misses across stages.
     pub fn gfs_misses(&self) -> u64 {
         self.stages.iter().map(|s| s.gfs_misses).sum()
     }
 
     /// Workflow-wide retention hit rate in [0,1] (0 when nothing read).
+    /// Neighbor transfers count as non-hits: they avoided the GFS but
+    /// still moved the archive.
     pub fn hit_rate(&self) -> f64 {
-        let total = self.ifs_hits() + self.gfs_misses();
+        let total = self.ifs_hits() + self.neighbor_transfers() + self.gfs_misses();
         if total == 0 {
             0.0
         } else {
@@ -365,9 +806,11 @@ struct ProducedArchives {
 
 impl StageRunner {
     /// Build a runner; one [`GroupCache`] per IFS group, each bounded by
-    /// `config.cache_capacity`.
+    /// `config.cache_capacity` and warm-started from its persisted
+    /// manifest when a previous runner on this layout left one.
     pub fn new(layout: LocalLayout, graph: StageGraph, config: StageRunnerConfig) -> StageRunner {
-        let caches = GroupCache::per_group(&layout, config.cache_capacity);
+        let caches =
+            GroupCache::per_group_with(&layout, config.cache_capacity, config.neighbor_limit);
         StageRunner { layout, graph, caches, config }
     }
 
@@ -441,12 +884,13 @@ impl StageRunner {
         // `s<i>-g*` archives behind with other sequence numbers; the
         // post-stage index scan must never serve those stale bytes as
         // this run's output, so clear them before the collector starts.
-        // The same goes for stale *retained* copies in the IFS data dirs:
-        // this run's (empty-accounted) caches would never evict them, so
-        // left in place they would leak past the cache_capacity bound.
+        // The same goes for stale *retained* copies of this stage in the
+        // IFS data dirs — cleared through the caches so warm-started
+        // accounting forgets them too (earlier stages' retained archives
+        // survive: they are exactly what a warm start is for).
         clear_matching(&gfs, &prefix)?;
-        for g in 0..self.layout.ifs_groups() {
-            clear_matching(&self.layout.ifs_data(g), &prefix)?;
+        for cache in self.caches.iter() {
+            cache.clear_prefix(&prefix)?;
         }
         let collector = LocalCollector::start_with(
             &self.layout,
@@ -517,7 +961,7 @@ impl StageRunner {
         for entry in std::fs::read_dir(&gfs)? {
             let entry = entry?;
             let name = entry.file_name().to_string_lossy().to_string();
-            if !name.starts_with(&format!("{prefix}-g")) || !name.ends_with(".cioar") {
+            if !stage_artifact_matches(&name, &prefix) {
                 continue;
             }
             let group = archive_group(&name)
@@ -531,18 +975,35 @@ impl StageRunner {
         archives.sort();
 
         let after: Vec<CacheSnapshot> = self.caches.iter().map(|c| c.snapshot()).collect();
-        let ifs_hits: u64 = before.iter().zip(&after).map(|(b, a)| a.hits - b.hits).sum();
-        let gfs_misses: u64 = before.iter().zip(&after).map(|(b, a)| a.misses - b.misses).sum();
+        let delta = |f: fn(&CacheSnapshot) -> u64| -> u64 {
+            before.iter().zip(&after).map(|(b, a)| f(a) - f(b)).sum()
+        };
+        let resolves = delta(|s| s.hits) + delta(|s| s.misses);
+        let neighbor_transfers = delta(|s| s.neighbor_transfers);
+        let gfs_misses = delta(|s| s.gfs_copies) + delta(|s| s.gfs_direct);
         let stats = StageStats {
             name: stage_name,
             tasks: exec.tasks,
             collector: collector_stats,
             archives: archives.iter().map(|(n, _)| n.clone()).collect(),
-            ifs_hits,
+            // Everything not moved by a unique fill was served locally.
+            ifs_hits: resolves.saturating_sub(neighbor_transfers + gfs_misses),
+            neighbor_transfers,
             gfs_misses,
             elapsed_s: t0.elapsed().as_secs_f64(),
         };
         Ok((stats, ProducedArchives { archives, members }))
+    }
+}
+
+impl Drop for StageRunner {
+    /// Persist every group's retention manifest so the next run on this
+    /// layout warm-starts (§7 "learn from previous runs"). Best-effort:
+    /// a failed write just means the next run starts cold.
+    fn drop(&mut self) {
+        for cache in self.caches.iter() {
+            let _ = cache.save_manifest();
+        }
     }
 }
 
@@ -632,6 +1093,186 @@ mod tests {
     }
 
     #[test]
+    fn neighbor_transfer_serves_cross_group_miss_without_gfs_copy() {
+        let root = tmp("gc-neighbor");
+        let layout = LocalLayout::create(&root, 4, 2).unwrap(); // groups 0 and 1
+        // An archive produced by group 0 (per its name), canonical on GFS.
+        write_archive(&layout.gfs(), "s0-g0-00000.cioar", &[("m", b"cross-group bytes")]);
+        let caches: Vec<GroupCache> =
+            (0..2).map(|g| GroupCache::new(&layout, g, mib(16))).collect();
+        caches[0].retain(&layout.gfs().join("s0-g0-00000.cioar"), "s0-g0-00000.cioar").unwrap();
+
+        // Group 1 misses -> filled from group 0's retention, not GFS.
+        let (r, outcome) =
+            caches[1].open_archive_via(&layout.gfs(), "s0-g0-00000.cioar", &caches).unwrap();
+        assert_eq!(outcome, CacheOutcome::NeighborTransfer);
+        assert_eq!(r.extract("m").unwrap(), b"cross-group bytes");
+        let snap = caches[1].snapshot();
+        assert_eq!((snap.neighbor_transfers, snap.gfs_copies), (1, 0));
+        assert!(caches[1].contains("s0-g0-00000.cioar"), "neighbor fill must retain");
+
+        // Next resolve is a plain hit.
+        let (_, outcome) =
+            caches[1].open_archive_via(&layout.gfs(), "s0-g0-00000.cioar", &caches).unwrap();
+        assert_eq!(outcome, CacheOutcome::IfsHit);
+
+        // Evict group 0's copy: a fresh group-2-style miss (cold cache)
+        // falls back to the GFS round trip.
+        let cold = GroupCache::with_limits(&layout, 1, mib(16), mib(16));
+        let empty: Vec<GroupCache> = Vec::new();
+        let (_, outcome) =
+            cold.open_archive_via(&layout.gfs(), "s0-g0-00000.cioar", &empty).unwrap();
+        assert_eq!(outcome, CacheOutcome::GfsMiss);
+        assert_eq!(cold.snapshot().gfs_copies, 1);
+    }
+
+    #[test]
+    fn neighbor_limit_caps_group_to_group_pulls() {
+        let root = tmp("gc-nlimit");
+        let layout = LocalLayout::create(&root, 4, 2).unwrap();
+        write_archive(&layout.gfs(), "s0-g0-00000.cioar", &[("m", &vec![5u8; 4096])]);
+        let size = std::fs::metadata(layout.gfs().join("s0-g0-00000.cioar")).unwrap().len();
+        let caches: Vec<GroupCache> = vec![
+            GroupCache::new(&layout, 0, mib(16)),
+            // Group 1 may retain the archive but not neighbor-pull it.
+            GroupCache::with_limits(&layout, 1, mib(16), size - 1),
+        ];
+        caches[0].retain(&layout.gfs().join("s0-g0-00000.cioar"), "s0-g0-00000.cioar").unwrap();
+        let (_, outcome) =
+            caches[1].open_archive_via(&layout.gfs(), "s0-g0-00000.cioar", &caches).unwrap();
+        assert_eq!(outcome, CacheOutcome::GfsMiss, "over-limit pull must use GFS");
+        let snap = caches[1].snapshot();
+        assert_eq!((snap.neighbor_transfers, snap.gfs_copies), (0, 1));
+    }
+
+    #[test]
+    fn manifest_round_trip_warm_starts_and_reconciles() {
+        let root = tmp("gc-manifest");
+        let layout = LocalLayout::create(&root, 2, 2).unwrap();
+        write_archive(&layout.gfs(), "s0-g0-00000.cioar", &[("a", b"alpha")]);
+        write_archive(&layout.gfs(), "s0-g0-00001.cioar", &[("b", b"beta")]);
+        {
+            let cache = GroupCache::new(&layout, 0, mib(16));
+            cache.retain(&layout.gfs().join("s0-g0-00000.cioar"), "s0-g0-00000.cioar").unwrap();
+            cache.retain(&layout.gfs().join("s0-g0-00001.cioar"), "s0-g0-00001.cioar").unwrap();
+            cache.save_manifest().unwrap();
+        }
+        // Corrupt one retained file behind the manifest's back.
+        std::fs::write(layout.ifs_data(0).join("s0-g0-00001.cioar"), b"truncated").unwrap();
+
+        let warm = GroupCache::new(&layout, 0, mib(16));
+        assert!(warm.contains("s0-g0-00000.cioar"), "intact entry warm-starts");
+        assert!(
+            !warm.contains("s0-g0-00001.cioar"),
+            "size-mismatched entry must be dropped by reconcile"
+        );
+        // The warm entry serves a hit even with the GFS copy gone —
+        // retention, not re-staging.
+        std::fs::remove_file(layout.gfs().join("s0-g0-00000.cioar")).unwrap();
+        let (r, outcome) = warm.open_archive(&layout.gfs(), "s0-g0-00000.cioar").unwrap();
+        assert_eq!(outcome, CacheOutcome::IfsHit);
+        assert_eq!(r.extract("a").unwrap(), b"alpha");
+        // A missing manifest just means a cold start.
+        let cold = GroupCache::new(&layout, 1, mib(16));
+        assert_eq!(cold.snapshot().used, 0);
+    }
+
+    #[test]
+    fn concurrent_same_archive_misses_dedupe_to_one_gfs_copy() {
+        let root = tmp("gc-flight");
+        let layout = LocalLayout::create(&root, 1, 1).unwrap();
+        let payload = vec![0xC3u8; 200_000];
+        write_archive(&layout.gfs(), "s0-g0-00000.cioar", &[("m", &payload)]);
+        let cache = GroupCache::new(&layout, 0, mib(16));
+        let threads = 8;
+        let barrier = std::sync::Barrier::new(threads);
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                let cache = &cache;
+                let layout = &layout;
+                let barrier = &barrier;
+                let payload = &payload;
+                scope.spawn(move || {
+                    barrier.wait();
+                    let (r, _outcome) =
+                        cache.open_archive(&layout.gfs(), "s0-g0-00000.cioar").unwrap();
+                    assert_eq!(&r.extract("m").unwrap(), payload, "byte-exact for every reader");
+                });
+            }
+        });
+        let snap = cache.snapshot();
+        assert_eq!(snap.gfs_copies, 1, "exactly one fill for N concurrent misses: {snap:?}");
+        assert_eq!(snap.hits + snap.misses, threads as u64);
+    }
+
+    #[test]
+    fn distinct_archive_misses_fill_independently() {
+        let root = tmp("gc-distinct");
+        let layout = LocalLayout::create(&root, 1, 1).unwrap();
+        for i in 0..4 {
+            write_archive(
+                &layout.gfs(),
+                &format!("s0-g0-{i:05}.cioar"),
+                &[("m", &vec![i as u8; 50_000])],
+            );
+        }
+        let cache = GroupCache::new(&layout, 0, mib(64));
+        std::thread::scope(|scope| {
+            for i in 0..4 {
+                let cache = &cache;
+                let layout = &layout;
+                scope.spawn(move || {
+                    let name = format!("s0-g0-{i:05}.cioar");
+                    let (r, outcome) = cache.open_archive(&layout.gfs(), &name).unwrap();
+                    assert_eq!(outcome, CacheOutcome::GfsMiss);
+                    assert_eq!(r.extract("m").unwrap(), vec![i as u8; 50_000]);
+                });
+            }
+        });
+        let snap = cache.snapshot();
+        assert_eq!((snap.gfs_copies, snap.misses), (4, 4));
+    }
+
+    #[test]
+    fn fill_failure_wakes_waiters_with_the_error() {
+        let root = tmp("gc-fillfail");
+        let layout = LocalLayout::create(&root, 1, 1).unwrap();
+        write_archive(&layout.gfs(), "s0-g0-00000.cioar", &[("m", b"data")]);
+        let cache = GroupCache::new(&layout, 0, mib(16));
+        // Fills publish into the data dir; removing it makes every copy
+        // attempt fail after the miss is latched.
+        std::fs::remove_dir_all(layout.ifs_data(0)).unwrap();
+        let threads = 6;
+        let barrier = std::sync::Barrier::new(threads);
+        let failures = std::sync::atomic::AtomicU32::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                let cache = &cache;
+                let layout = &layout;
+                let barrier = &barrier;
+                let failures = &failures;
+                scope.spawn(move || {
+                    barrier.wait();
+                    let err = cache
+                        .open_archive(&layout.gfs(), "s0-g0-00000.cioar")
+                        .expect_err("fill into a missing dir must fail");
+                    // Filler and waiters alike see the copy failure, not
+                    // a deadlock or a panic.
+                    assert!(format!("{err:#}").contains("s0-g0-00000.cioar"), "{err:#}");
+                    failures.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(failures.load(Ordering::Relaxed), threads as u32);
+        // Recovery: restore the dir and the next open succeeds (the
+        // failed latch must not wedge the archive forever).
+        std::fs::create_dir_all(layout.ifs_data(0)).unwrap();
+        let (r, outcome) = cache.open_archive(&layout.gfs(), "s0-g0-00000.cioar").unwrap();
+        assert_eq!(outcome, CacheOutcome::GfsMiss);
+        assert_eq!(r.extract("m").unwrap(), b"data");
+    }
+
+    #[test]
     fn three_stage_chain_runs_with_retention_hits() {
         let root = tmp("runner");
         let layout = LocalLayout::create(&root, 4, 2).unwrap(); // 2 groups
@@ -644,6 +1285,7 @@ mod tests {
             },
             compression: Compression::None,
             cache_capacity: mib(64),
+            neighbor_limit: mib(64),
             threads: 4,
         };
         let mut runner = StageRunner::new(layout, graph, config);
@@ -701,6 +1343,7 @@ mod tests {
             },
             compression: Compression::None,
             cache_capacity: mib(4),
+            neighbor_limit: mib(4),
             threads: 1,
         };
         let mut runner = StageRunner::new(layout, graph, config);

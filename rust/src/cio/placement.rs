@@ -96,6 +96,16 @@ impl PlacementPolicy {
     pub fn retention_capacity(&self) -> u64 {
         self.ifs_limit / 2
     }
+
+    /// Largest archive a group should pull group-to-group from a
+    /// sibling's retention instead of reading it from GFS: a quarter of
+    /// the retention cache. A neighbor transfer *duplicates* the archive
+    /// onto this group's IFS, so an over-large pull both churns most of
+    /// the local LRU and burns aggregate IFS capacity that staged inputs
+    /// need; past this point the central round trip is the cheaper evil.
+    pub fn neighbor_transfer_limit(&self) -> u64 {
+        self.retention_capacity() / 4
+    }
 }
 
 /// Modeled per-node IFS read bandwidth at a given CN:IFS ratio — the
@@ -230,6 +240,7 @@ mod tests {
         assert_eq!(p.lfs_limit, cfg.node.lfs_capacity / 2);
         assert_eq!(p.ifs_limit, gib(64), "32 x 2GB stripes");
         assert_eq!(p.retention_capacity(), gib(32), "retention takes half the IFS");
+        assert_eq!(p.neighbor_transfer_limit(), gib(8), "neighbor pulls capped at a quarter");
     }
 
     #[test]

@@ -98,12 +98,19 @@ impl StageGraph {
     }
 }
 
-/// Where a stage's input was found (Figure 17's stage-2 difference).
+/// Where a stage's input was found (Figure 17's stage-2 difference,
+/// plus the torus-neighbor middle tier).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CacheOutcome {
-    /// Retained on the IFS from a previous stage: fast, distributed.
+    /// Retained on the reader's own IFS from a previous stage: fast,
+    /// distributed.
     IfsHit,
-    /// Fell back to GFS (evicted or never cached): slow, centralized.
+    /// Pulled group-to-group from the sibling IFS that produced the
+    /// archive (a Chirp-style torus-neighbor transfer) instead of round-
+    /// tripping through GFS. Cheaper than a miss, dearer than a hit.
+    NeighborTransfer,
+    /// Fell back to GFS (evicted or never cached anywhere reachable):
+    /// slow, centralized.
     GfsMiss,
 }
 
@@ -176,7 +183,18 @@ impl IfsCache {
         self.entries.contains_key(name)
     }
 
+    /// Retained entries as `(name, bytes)` in LRU order (oldest first) —
+    /// the serialization order for a retention manifest, so a warm-start
+    /// replay through [`IfsCache::put`] reconstructs the same recency.
+    pub fn entries_lru(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.lru.iter().map(|n| (n.as_str(), self.entries[n]))
+    }
+
     /// Look up a retained object for the next stage; refreshes recency.
+    /// Only ever answers [`CacheOutcome::IfsHit`] or
+    /// [`CacheOutcome::GfsMiss`]; whether a miss is then served by a
+    /// neighbor group or the GFS is the caller's
+    /// ([`crate::cio::local_stage::GroupCache`]'s) decision.
     pub fn get(&mut self, name: &str) -> CacheOutcome {
         if self.entries.contains_key(name) {
             self.lru.retain(|n| n != name);
@@ -205,6 +223,11 @@ impl IfsCache {
     /// Bytes retained.
     pub fn used(&self) -> u64 {
         self.used
+    }
+
+    /// The capacity bound in bytes.
+    pub fn capacity(&self) -> u64 {
+        self.capacity
     }
 
     /// Hit count.
@@ -334,6 +357,28 @@ mod tests {
         c.put("x", mib(2));
         assert_eq!(c.used(), mib(2));
         assert!(c.put("y", mib(8)), "shrunk entry leaves room");
+    }
+
+    #[test]
+    fn entries_lru_tracks_recency_for_manifests() {
+        let mut c = IfsCache::new(mib(10));
+        c.put("a", mib(1));
+        c.put("b", mib(2));
+        c.put("c", mib(3));
+        c.get("a"); // refresh: a becomes newest
+        let order: Vec<(String, u64)> =
+            c.entries_lru().map(|(n, b)| (n.to_string(), b)).collect();
+        assert_eq!(
+            order,
+            vec![("b".to_string(), mib(2)), ("c".to_string(), mib(3)), ("a".to_string(), mib(1))]
+        );
+        // Replaying through put in that order reconstructs the recency.
+        let mut replay = IfsCache::new(mib(10));
+        for (n, b) in &order {
+            replay.put(n, *b);
+        }
+        assert!(replay.put("d", mib(8)), "evicts oldest two");
+        assert!(!replay.contains("b") && !replay.contains("c") && replay.contains("a"));
     }
 
     #[test]

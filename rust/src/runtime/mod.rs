@@ -293,6 +293,40 @@ pub fn score_member_bytes(
     Ok(score_reference(meta, &ligands, grid, weights))
 }
 
+/// Bytes of one pose record inside a stage-1 ligand member: `atoms`
+/// rows of (x, y, z, q) little-endian f32s. A member written by a
+/// stage-1 task is `batch` such records back to back, so a stage-2 task
+/// that only needs pose `i` can pull `pose_record_bytes` at offset
+/// `i * pose_record_bytes` out of retention
+/// ([`crate::workload::blast::RecordFormat`] /
+/// `StageInput::read_member_range`) instead of extracting the member.
+pub fn pose_record_bytes(meta: &ArtifactMeta) -> usize {
+    meta.atoms * 4 * 4
+}
+
+/// Score a single pose record (the record-granular counterpart of
+/// [`score_member_bytes`]): decode one [`pose_record_bytes`]-sized
+/// payload and run the reference scorer on a batch of one.
+pub fn score_pose_bytes(
+    meta: &ArtifactMeta,
+    bytes: &[u8],
+    grid: &[f32],
+    weights: &[f32],
+) -> Result<f32> {
+    anyhow::ensure!(
+        bytes.len() == pose_record_bytes(meta),
+        "pose record holds {} bytes, expected atoms {} x 4 x 4 = {}",
+        bytes.len(),
+        meta.atoms,
+        pose_record_bytes(meta)
+    );
+    anyhow::ensure!(grid.len() == meta.atoms * meta.features, "grid length mismatch");
+    anyhow::ensure!(weights.len() == meta.features, "weights length mismatch");
+    let ligands = member_to_f32s(bytes)?;
+    let one = ArtifactMeta { batch: 1, ..meta.clone() };
+    Ok(score_reference(&one, &ligands, grid, weights)[0])
+}
+
 /// Pure-Rust reference scorer mirroring `python/compile/kernels/ref.py`,
 /// used to validate the PJRT path end-to-end (same formula, f32).
 ///
@@ -367,6 +401,26 @@ mod tests {
         // Shape violations are rejected, not mis-scored.
         assert!(score_member_bytes(&meta, &bytes[..7], &grid, &weights).is_err());
         assert!(score_member_bytes(&meta, &bytes[..4], &grid, &weights).is_err());
+    }
+
+    #[test]
+    fn pose_record_scoring_matches_batch_scoring() {
+        let meta = ArtifactMeta { batch: 2, atoms: 1, features: 2, top_k: 0 };
+        assert_eq!(pose_record_bytes(&meta), 16);
+        let ligands = [0.0f32, 0.0, 0.0, 2.0, 1.0, 0.0, 0.0, 2.0];
+        let bytes: Vec<u8> = ligands.iter().flat_map(|f| f.to_le_bytes()).collect();
+        let grid = [0.5, 1.5];
+        let weights = [1.0, 2.0];
+        let batch = score_reference(&meta, &ligands, &grid, &weights);
+        // Scoring each 16-byte record alone reproduces the batch scores.
+        for (i, want) in batch.iter().enumerate() {
+            let record = &bytes[i * 16..(i + 1) * 16];
+            let got = score_pose_bytes(&meta, record, &grid, &weights).unwrap();
+            assert!((got - want).abs() < 1e-6, "pose {i}: {got} vs {want}");
+        }
+        // A wrong-sized record is rejected, not mis-scored.
+        assert!(score_pose_bytes(&meta, &bytes[..12], &grid, &weights).is_err());
+        assert!(score_pose_bytes(&meta, &bytes, &grid, &weights).is_err());
     }
 
     #[test]

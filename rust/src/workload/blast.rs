@@ -11,10 +11,13 @@
 //! `ablation_blast` bench prints the curve.
 
 use crate::cio::distributor::TreeShape;
+use crate::cio::local_stage::StageInput;
 use crate::cio::placement::{Dataset, PlacementPolicy, Tier};
+use crate::cio::stage::CacheOutcome;
 use crate::config::ClusterConfig;
 use crate::sim::cluster::{IoMode, SimCluster, TaskSpec};
 use crate::util::units::{gib, kib};
+use anyhow::Result;
 
 /// BLAST-like workload parameters.
 #[derive(Debug, Clone, PartialEq)]
@@ -44,6 +47,74 @@ impl Default for BlastWorkload {
     }
 }
 
+/// Fixed-size record layout inside an archived member — the real-bytes
+/// half of the BLAST story. An index-guided scan touches a *slice* of
+/// the database, not the whole member, so stage 2 should read records
+/// out of retention ([`StageInput::read_member_range`] →
+/// [`crate::cio::archive::Reader::extract_range`]) instead of extracting
+/// whole members: the read volume drops from member size to
+/// `records × record_bytes` while the three-tier hit/neighbor/miss
+/// resolve stays identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecordFormat {
+    /// Bytes per record (e.g. one sequence block or one ligand pose).
+    pub record_bytes: usize,
+}
+
+impl RecordFormat {
+    /// Byte range of record `idx` within a member.
+    pub fn range(&self, idx: u64) -> (u64, usize) {
+        (idx * self.record_bytes as u64, self.record_bytes)
+    }
+
+    /// Whole records in a member of `member_bytes` (a ragged tail is not
+    /// a record).
+    pub fn records_in(&self, member_bytes: u64) -> u64 {
+        member_bytes / self.record_bytes as u64
+    }
+
+    /// Read record `idx` of `member` from retention. Errors when the
+    /// member ends before the record does (a short read is corruption or
+    /// an out-of-range index, never silently padded).
+    pub fn read_record(
+        &self,
+        input: &StageInput<'_>,
+        member: &str,
+        idx: u64,
+    ) -> Result<(Vec<u8>, CacheOutcome)> {
+        let (offset, len) = self.range(idx);
+        let (bytes, outcome) = input.read_member_range(member, offset, len)?;
+        anyhow::ensure!(
+            bytes.len() == len,
+            "record {idx} of member {member:?} is truncated ({} of {len} bytes)",
+            bytes.len()
+        );
+        Ok((bytes, outcome))
+    }
+
+    /// Read `count` consecutive records starting at `first` as one
+    /// contiguous range read (one resolve, one extent — how a scan reads
+    /// its slice of the database).
+    pub fn read_records(
+        &self,
+        input: &StageInput<'_>,
+        member: &str,
+        first: u64,
+        count: u64,
+    ) -> Result<(Vec<u8>, CacheOutcome)> {
+        let (offset, _) = self.range(first);
+        let len = (count as usize) * self.record_bytes;
+        let (bytes, outcome) = input.read_member_range(member, offset, len)?;
+        anyhow::ensure!(
+            bytes.len() == len,
+            "records {first}..{} of member {member:?} truncated ({} of {len} bytes)",
+            first + count,
+            bytes.len()
+        );
+        Ok((bytes, outcome))
+    }
+}
+
 /// Result of one BLAST run.
 #[derive(Debug, Clone)]
 pub struct BlastResult {
@@ -70,6 +141,13 @@ impl BlastWorkload {
     /// Per-task input bytes.
     pub fn in_bytes(&self) -> u64 {
         (self.db_bytes as f64 * self.read_fraction) as u64
+    }
+
+    /// How many records of `fmt` one task's index-guided scan touches —
+    /// the record-granular equivalent of [`BlastWorkload::in_bytes`]
+    /// (at least one: a task that reads nothing is not a query).
+    pub fn records_per_task(&self, fmt: &RecordFormat) -> u64 {
+        (self.in_bytes() / fmt.record_bytes as u64).max(1)
     }
 
     /// Run with the given stripe degree.
@@ -115,6 +193,29 @@ impl BlastWorkload {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn record_format_geometry() {
+        let fmt = RecordFormat { record_bytes: 4096 };
+        assert_eq!(fmt.range(0), (0, 4096));
+        assert_eq!(fmt.range(7), (7 * 4096, 4096));
+        assert_eq!(fmt.records_in(4096 * 10), 10);
+        assert_eq!(fmt.records_in(4096 * 10 + 100), 10, "ragged tail is not a record");
+        assert_eq!(fmt.records_in(100), 0);
+    }
+
+    #[test]
+    fn records_per_task_tracks_read_fraction() {
+        let wl = BlastWorkload { db_bytes: gib(8), read_fraction: 0.02, ..Default::default() };
+        let fmt = RecordFormat { record_bytes: kib(64) as usize };
+        // 2% of 8 GiB = ~160 MiB => ~2560 64-KiB records.
+        let records = wl.records_per_task(&fmt);
+        assert!((2500..2700).contains(&records), "{records}");
+        // Record reads move ~50x less than whole-member (full-slice) ones
+        // would if members held the whole per-task slice... the floor is 1.
+        let tiny = BlastWorkload { db_bytes: kib(64), read_fraction: 0.0001, ..wl };
+        assert_eq!(tiny.records_per_task(&fmt), 1);
+    }
 
     #[test]
     fn db_goes_to_replicated_ifs() {

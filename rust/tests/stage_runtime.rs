@@ -19,8 +19,9 @@ use cio::cio::local_stage::{
     task_output_name, CacheSnapshot, GroupCache, StageExec, StageInput, StageRunner,
     StageRunnerConfig,
 };
-use cio::cio::stage::StageGraph;
-use cio::util::units::{mib, SimTime};
+use cio::cio::stage::{CacheOutcome, StageGraph};
+use cio::util::units::{kib, mib, SimTime};
+use cio::workload::blast::RecordFormat;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Mutex;
@@ -149,6 +150,7 @@ fn multistage_chain_hits_ifs_retention() {
         },
         compression: Compression::Deflate,
         cache_capacity: mib(64),
+        neighbor_limit: mib(64),
         threads: 4,
     };
     let mut runner = StageRunner::new(layout, graph, config);
@@ -212,6 +214,176 @@ fn multistage_chain_hits_ifs_retention() {
     let expected_n = tasks as u64 * 1024;
     let expected_sum: u64 = (0..tasks as u64).map(|t| ((t as u8) ^ 0xFF) as u64 * 1024).sum();
     assert_eq!(text, format!("{expected_n} bytes, checksum {expected_sum}"));
+}
+
+#[test]
+fn cross_group_reads_served_by_neighbor_transfers() {
+    // All-to-all stage-2 reads on a many-group layout: every cross-group
+    // archive resolve must be filled group-to-group from the producing
+    // sibling's retention — with ample retention the GFS round-trip count
+    // stays at zero after stage 1 (the §5.3 + torus-neighbor claim).
+    let root = workspace("neighbor");
+    let nodes = 4u32;
+    let layout = LocalLayout::create(&root, nodes, 1).unwrap(); // 4 groups
+    let graph = StageGraph::chain(&["produce", "gather"]);
+    let config = StageRunnerConfig {
+        policy: Policy {
+            max_delay: SimTime::from_secs(3600),
+            max_data: 1024,
+            min_free_space: 0,
+        },
+        compression: Compression::None,
+        cache_capacity: mib(64),
+        neighbor_limit: mib(64),
+        threads: 4,
+    };
+    let mut runner = StageRunner::new(layout, graph, config);
+    let tasks = 8u32;
+    let produce =
+        |t: u32, _in: &StageInput<'_>| -> anyhow::Result<Vec<u8>> { Ok(vec![t as u8; 2048]) };
+    let gather = move |_t: u32, input: &StageInput<'_>| -> anyhow::Result<Vec<u8>> {
+        for t in 0..tasks {
+            let (bytes, _) = input.read_member(&task_output_name(0, "produce", t))?;
+            anyhow::ensure!(bytes == vec![t as u8; 2048], "task {t} corrupt");
+        }
+        Ok(vec![1])
+    };
+    let report = runner
+        .run(&[StageExec { tasks, run: &produce }, StageExec { tasks, run: &gather }])
+        .unwrap();
+    let s = &report.stages[1];
+    assert!(
+        s.neighbor_transfers > 0,
+        "cross-group resolves must be neighbor-served: {s:?}"
+    );
+    assert_eq!(s.gfs_misses, 0, "no read should round-trip through GFS: {s:?}");
+    assert!(s.ifs_hits > 0, "own-group and post-fill resolves must hit: {s:?}");
+    // The workflow totals agree with the per-group counters.
+    let snaps: Vec<CacheSnapshot> = runner.caches().iter().map(|c| c.snapshot()).collect();
+    let neighbors: u64 = snaps.iter().map(|s| s.neighbor_transfers).sum();
+    assert_eq!(neighbors, report.neighbor_transfers());
+    assert!(report.hit_rate() > 0.0);
+}
+
+#[test]
+fn record_granular_reads_cut_read_volume() {
+    // Stage 2 reads records, not whole members: byte-exact slices at
+    // record offsets, a contiguous span in one extent, and the honest
+    // out-of-range error — all through the retention resolve.
+    let root = workspace("records");
+    let layout = LocalLayout::create(&root, 2, 2).unwrap();
+    let graph = StageGraph::chain(&["produce", "scan"]);
+    let config = StageRunnerConfig {
+        policy: Policy {
+            max_delay: SimTime::from_secs(3600),
+            max_data: mib(1),
+            min_free_space: 0,
+        },
+        compression: Compression::None, // records need uncompressed extents
+        cache_capacity: mib(64),
+        neighbor_limit: mib(64),
+        threads: 2,
+    };
+    let mut runner = StageRunner::new(layout, graph, config);
+    let fmt = RecordFormat { record_bytes: kib(4) as usize };
+    let records_per_member = 8u64;
+    let tasks = 4u32;
+    let record_fill = |t: u32, r: u64| -> Vec<u8> {
+        (0..fmt.record_bytes).map(|j| (t as u8) ^ (r as u8) ^ (j as u8)).collect()
+    };
+    let produce = move |t: u32, _in: &StageInput<'_>| -> anyhow::Result<Vec<u8>> {
+        let mut out = Vec::new();
+        for r in 0..records_per_member {
+            out.extend(record_fill(t, r));
+        }
+        Ok(out)
+    };
+    let scan = move |t: u32, input: &StageInput<'_>| -> anyhow::Result<Vec<u8>> {
+        let member = task_output_name(0, "produce", t);
+        let mut read_volume = 0u64;
+        // Single records, byte-exact, in scattered order.
+        for r in [5u64, 0, 7, 3] {
+            let (bytes, _) = fmt.read_record(input, &member, r)?;
+            anyhow::ensure!(bytes == record_fill(t, r), "record {r} corrupt");
+            read_volume += bytes.len() as u64;
+        }
+        // A contiguous span of 3 records in one extent.
+        let (span, _) = fmt.read_records(input, &member, 2, 3)?;
+        anyhow::ensure!(span.len() == 3 * fmt.record_bytes);
+        for (k, r) in (2u64..5).enumerate() {
+            let got = &span[k * fmt.record_bytes..(k + 1) * fmt.record_bytes];
+            anyhow::ensure!(got == record_fill(t, r).as_slice(), "span record {r} corrupt");
+        }
+        read_volume += span.len() as u64;
+        // Past-the-end records error instead of silently padding.
+        anyhow::ensure!(fmt.read_record(input, &member, records_per_member).is_err());
+        // The whole member would have been 8 records; we moved 7.
+        Ok(read_volume.to_le_bytes().to_vec())
+    };
+    let report = runner
+        .run(&[StageExec { tasks, run: &produce }, StageExec { tasks, run: &scan }])
+        .unwrap();
+    // Every scan task read 7 records' worth of bytes, not the member.
+    let scan_archives = &report.stages[1].archives;
+    assert!(!scan_archives.is_empty());
+    let mut seen = 0u32;
+    for name in scan_archives {
+        let r = Reader::open(&runner.layout().gfs().join(name)).unwrap();
+        for e in r.entries() {
+            let volume = u64::from_le_bytes(r.extract(&e.name).unwrap().try_into().unwrap());
+            assert_eq!(volume, 7 * fmt.record_bytes as u64);
+            seen += 1;
+        }
+    }
+    assert_eq!(seen, tasks);
+}
+
+#[test]
+fn retention_warm_starts_across_runner_instances() {
+    // §7 "learn from previous runs": a second StageRunner on the same
+    // layout must warm-start its caches from the manifests the first one
+    // persisted on drop — and serve hits from them without re-staging.
+    let root = workspace("warmstart");
+    let layout = LocalLayout::create(&root, 2, 2).unwrap();
+    let config = StageRunnerConfig {
+        policy: Policy {
+            max_delay: SimTime::from_secs(3600),
+            max_data: mib(1),
+            min_free_space: 0,
+        },
+        compression: Compression::None,
+        cache_capacity: mib(64),
+        neighbor_limit: mib(64),
+        threads: 2,
+    };
+    let produce =
+        |t: u32, _in: &StageInput<'_>| -> anyhow::Result<Vec<u8>> { Ok(vec![t as u8; 512]) };
+    let (archives, groups): (Vec<String>, u32) = {
+        let graph = StageGraph::chain(&["produce"]);
+        let mut runner = StageRunner::new(layout.clone(), graph, config.clone());
+        let report = runner.run(&[StageExec { tasks: 6, run: &produce }]).unwrap();
+        assert!(report.stages[0].collector.retained > 0);
+        (report.stages[0].archives.clone(), runner.layout().ifs_groups())
+        // runner drops here -> manifests persist
+    };
+    let graph = StageGraph::chain(&["produce"]);
+    let warm = StageRunner::new(layout.clone(), graph, config);
+    let mut warm_hits = 0;
+    for name in &archives {
+        let group = cio::cio::local_stage::archive_group(name).unwrap();
+        assert!(group < groups);
+        if warm.caches()[group as usize].contains(name) {
+            let (r, outcome) =
+                warm.caches()[group as usize].open_archive(&layout.gfs(), name).unwrap();
+            assert_eq!(outcome, CacheOutcome::IfsHit);
+            assert!(!r.is_empty());
+            warm_hits += 1;
+        }
+    }
+    assert!(
+        warm_hits > 0,
+        "at least one retained archive must survive into the next run: {archives:?}"
+    );
 }
 
 #[test]
