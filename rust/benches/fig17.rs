@@ -25,19 +25,22 @@ use cio::sim::cluster::IoMode;
 use cio::util::units::{mib, SimTime};
 use cio::workload::dock::{run_comparison, DockWorkflow};
 
-/// Real-bytes three-tier read-mix sweep: with many small IFS groups most
+/// Real-bytes routed read-mix sweep: with many small IFS groups most
 /// stage-2 reads cross group boundaries and are served by torus-neighbor
 /// transfers (plus follow-up hits on the pulled copy); with one big
-/// group every read is an IFS hit. GFS round trips appear only when no
-/// group retains the archive — with ample retention the central store
-/// drops out of the steady state entirely, the paper's §5.3 point.
+/// group every read is an IFS hit. The `routed` column counts transfers
+/// the retention directory steered to a *non-producing* replica — load
+/// the producer never had to serve — and `producer` the rest. GFS round
+/// trips appear only when no group retains the archive — with ample
+/// retention the central store drops out of the steady state entirely,
+/// the paper's §5.3 point.
 fn read_mix_sweep() {
     let nodes = 8u32;
     let tasks = 16u32;
     println!("--- stage-2 read-tier mix vs cn_per_ifs (real bytes, {nodes} nodes) ---");
     println!(
-        "{:>10} {:>6} {:>8} {:>9} {:>8} {:>6}",
-        "cn_per_ifs", "groups", "ifs_hit", "neighbor", "gfs", "hit%"
+        "{:>10} {:>6} {:>8} {:>7} {:>9} {:>8} {:>6}",
+        "cn_per_ifs", "groups", "ifs_hit", "routed", "producer", "gfs", "hit%"
     );
     for cn in [1u32, 2, 4, 8] {
         let root =
@@ -76,11 +79,12 @@ fn read_mix_sweep() {
         let s = &report.stages[1];
         let total = (s.ifs_hits + s.neighbor_transfers + s.gfs_misses).max(1);
         println!(
-            "{:>10} {:>6} {:>8} {:>9} {:>8} {:>5.0}%",
+            "{:>10} {:>6} {:>8} {:>7} {:>9} {:>8} {:>5.0}%",
             cn,
             runner.layout().ifs_groups(),
             s.ifs_hits,
-            s.neighbor_transfers,
+            s.routed_transfers,
+            s.producer_transfers,
             s.gfs_misses,
             100.0 * s.ifs_hits as f64 / total as f64
         );

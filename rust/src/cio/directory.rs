@@ -1,0 +1,260 @@
+//! Cluster-wide retention directory: which IFS groups currently retain
+//! each archive, and which retaining source a reader should pull from.
+//!
+//! PR 3's neighbor tier always asked the *producing* group — correct but
+//! centralizing: on an all-to-all stage-2 read the producer of a popular
+//! archive serves every cross-group fill while the groups that already
+//! pulled copies sit idle. The paper's §5.3 intermediate tier has no such
+//! constraint — any group holding a replica is an equally good source —
+//! so [`RetentionDirectory`] tracks *all* retention locations, updated on
+//! collector retains, neighbor-fill publishes, evictions, stage
+//! re-run clears, and manifest warm starts, and
+//! [`RetentionDirectory::route`] ranks the live sources for a reader by
+//! torus hop distance ([`crate::cio::placement::group_torus_distance`]),
+//! breaking ties toward the least-loaded source so concurrent fills of a
+//! popular archive spread across its replicas instead of converging on
+//! one hot owner.
+//!
+//! Entries are **hints, not truth**: a source can evict (or crash) in the
+//! gap between a lookup and the pull. The read path in
+//! [`crate::cio::local_stage::GroupCache::open_archive_via`] therefore
+//! treats every candidate as fallible — a candidate whose retention turns
+//! out to be gone is withdrawn ([`RetentionDirectory::record_stale`]) and
+//! the resolve falls onward (next-nearest source → producing group →
+//! GFS), so a stale entry only ever costs a fallback probe, never a wrong
+//! read and never a wedged fill.
+//!
+//! Per-source serve counters ([`RetentionDirectory::serves`]) make the
+//! load-spreading claim checkable: under the PR-3 producer-only policy
+//! the producing group serves *every* cross-group fill of its archive;
+//! with routing it must serve strictly fewer once a second replica
+//! exists.
+
+use crate::cio::placement::group_torus_distance;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Mutex;
+
+#[derive(Default)]
+struct DirInner {
+    /// archive name → groups currently retaining a copy.
+    sources: BTreeMap<String, BTreeSet<u32>>,
+    /// (archive name, source group) → neighbor fills served.
+    serves: BTreeMap<(String, u32), u64>,
+    /// source group → total neighbor fills served (route tie-breaker).
+    group_serves: BTreeMap<u32, u64>,
+    /// Entries withdrawn because a pull found the retention gone.
+    stale_withdrawals: u64,
+}
+
+/// Cluster-wide (per-[`crate::cio::local::LocalLayout`]) registry of which
+/// IFS groups retain which archives, with torus-distance source routing.
+/// Shared by every [`crate::cio::local_stage::GroupCache`] of one runner;
+/// all operations are internally synchronized (one short-held mutex, no
+/// IO under it).
+pub struct RetentionDirectory {
+    groups: u32,
+    inner: Mutex<DirInner>,
+}
+
+impl RetentionDirectory {
+    /// An empty directory for a layout with `groups` IFS groups.
+    pub fn new(groups: u32) -> RetentionDirectory {
+        RetentionDirectory { groups: groups.max(1), inner: Mutex::new(DirInner::default()) }
+    }
+
+    /// Number of IFS groups this directory routes over.
+    pub fn groups(&self) -> u32 {
+        self.groups
+    }
+
+    /// Record that `group` now retains `archive` (collector retain,
+    /// neighbor-fill publish, GFS read-through, or manifest warm start).
+    pub fn publish(&self, archive: &str, group: u32) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.sources.entry(archive.to_string()).or_default().insert(group);
+    }
+
+    /// Record that `group` no longer retains `archive` (eviction or a
+    /// stage re-run clear). Removing an unlisted pair is a no-op.
+    pub fn withdraw(&self, archive: &str, group: u32) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(set) = inner.sources.get_mut(archive) {
+            set.remove(&group);
+            if set.is_empty() {
+                inner.sources.remove(archive);
+            }
+        }
+    }
+
+    /// Withdraw a candidate that a pull found stale (the retention was
+    /// gone by the time the reader arrived) and count the event. The
+    /// *cost* of staleness is the caller's fallback to the next source;
+    /// the directory just stops advertising the dead entry.
+    pub fn record_stale(&self, archive: &str, group: u32) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(set) = inner.sources.get_mut(archive) {
+            set.remove(&group);
+            if set.is_empty() {
+                inner.sources.remove(archive);
+            }
+        }
+        inner.stale_withdrawals += 1;
+    }
+
+    /// How many stale entries pulls have withdrawn so far.
+    pub fn stale_withdrawals(&self) -> u64 {
+        self.inner.lock().unwrap().stale_withdrawals
+    }
+
+    /// Groups currently listed as retaining `archive`, ascending.
+    pub fn sources(&self, archive: &str) -> Vec<u32> {
+        let inner = self.inner.lock().unwrap();
+        inner.sources.get(archive).map(|s| s.iter().copied().collect()).unwrap_or_default()
+    }
+
+    /// Every listed archive with its retaining groups (tests and
+    /// diagnostics; ascending by name).
+    pub fn entries(&self) -> Vec<(String, Vec<u32>)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .sources
+            .iter()
+            .map(|(name, set)| (name.clone(), set.iter().copied().collect()))
+            .collect()
+    }
+
+    /// Number of archives with at least one listed source.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().sources.len()
+    }
+
+    /// True when no archive is listed anywhere.
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().sources.is_empty()
+    }
+
+    /// The fill resolve order for `reader`: every listed source of
+    /// `archive` except `reader` itself, cheapest first — ascending torus
+    /// hop distance, ties broken toward the source that has served the
+    /// fewest fills (spread), then by group index (determinism). The
+    /// caller probes candidates in order and falls back producer → GFS
+    /// when all of them turn out stale.
+    pub fn route(&self, archive: &str, reader: u32) -> Vec<u32> {
+        let inner = self.inner.lock().unwrap();
+        let Some(set) = inner.sources.get(archive) else {
+            return Vec::new();
+        };
+        let mut out: Vec<u32> = set.iter().copied().filter(|&g| g != reader).collect();
+        out.sort_by_key(|&g| {
+            (
+                group_torus_distance(reader, g, self.groups),
+                inner.group_serves.get(&g).copied().unwrap_or(0),
+                g,
+            )
+        });
+        out
+    }
+
+    /// Count one neighbor fill of `archive` served by `source`.
+    pub fn record_serve(&self, archive: &str, source: u32) {
+        let mut inner = self.inner.lock().unwrap();
+        *inner.serves.entry((archive.to_string(), source)).or_insert(0) += 1;
+        *inner.group_serves.entry(source).or_insert(0) += 1;
+    }
+
+    /// Neighbor fills of `archive` served by `source` so far.
+    pub fn serves(&self, archive: &str, source: u32) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner.serves.get(&(archive.to_string(), source)).copied().unwrap_or(0)
+    }
+
+    /// Total neighbor fills of `archive` across all sources.
+    pub fn archive_fills(&self, archive: &str) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .serves
+            .iter()
+            .filter(|((name, _), _)| name == archive)
+            .map(|(_, &n)| n)
+            .sum()
+    }
+
+    /// Total neighbor fills `source` has served across all archives.
+    pub fn group_serves(&self, source: u32) -> u64 {
+        self.inner.lock().unwrap().group_serves.get(&source).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_withdraw_sources() {
+        let d = RetentionDirectory::new(4);
+        assert!(d.is_empty());
+        d.publish("a.cioar", 0);
+        d.publish("a.cioar", 2);
+        d.publish("a.cioar", 2); // idempotent
+        d.publish("b.cioar", 1);
+        assert_eq!(d.sources("a.cioar"), vec![0, 2]);
+        assert_eq!(d.sources("b.cioar"), vec![1]);
+        assert_eq!(d.len(), 2);
+        d.withdraw("a.cioar", 0);
+        assert_eq!(d.sources("a.cioar"), vec![2]);
+        d.withdraw("a.cioar", 2);
+        assert!(d.sources("a.cioar").is_empty());
+        assert_eq!(d.len(), 1, "empty source sets are dropped");
+        d.withdraw("ghost.cioar", 3); // no-op
+        assert_eq!(d.entries(), vec![("b.cioar".to_string(), vec![1])]);
+    }
+
+    #[test]
+    fn route_orders_by_distance_then_load_then_index() {
+        // 4 groups fit a [2,2,1] torus: from group 0, groups 1 and 2 are
+        // 1 hop away, group 3 is 2 hops.
+        let d = RetentionDirectory::new(4);
+        for g in [1, 2, 3] {
+            d.publish("a.cioar", g);
+        }
+        assert_eq!(d.route("a.cioar", 0), vec![1, 2, 3], "distance, then index");
+        // Load the nearest source: the tie now breaks to the idle one.
+        d.record_serve("a.cioar", 1);
+        assert_eq!(d.route("a.cioar", 0), vec![2, 1, 3], "serve count breaks the tie");
+        assert_eq!(d.serves("a.cioar", 1), 1);
+        assert_eq!(d.group_serves(1), 1);
+        assert_eq!(d.archive_fills("a.cioar"), 1);
+        // The reader itself is never a candidate.
+        d.publish("a.cioar", 0);
+        assert!(!d.route("a.cioar", 0).contains(&0));
+        // Unknown archives route nowhere.
+        assert!(d.route("nope.cioar", 0).is_empty());
+    }
+
+    #[test]
+    fn stale_withdrawal_stops_advertising_and_counts() {
+        let d = RetentionDirectory::new(2);
+        d.publish("a.cioar", 1);
+        assert_eq!(d.route("a.cioar", 0), vec![1]);
+        d.record_stale("a.cioar", 1);
+        assert!(d.route("a.cioar", 0).is_empty(), "stale entry must stop routing");
+        assert_eq!(d.stale_withdrawals(), 1);
+        // Counting a stale probe of an already-withdrawn entry still
+        // counts the event (two readers can race the same dead source).
+        d.record_stale("a.cioar", 1);
+        assert_eq!(d.stale_withdrawals(), 2);
+    }
+
+    #[test]
+    fn serve_accounting_spreads_over_archives_and_groups() {
+        let d = RetentionDirectory::new(3);
+        d.record_serve("x.cioar", 0);
+        d.record_serve("x.cioar", 1);
+        d.record_serve("y.cioar", 0);
+        assert_eq!(d.archive_fills("x.cioar"), 2);
+        assert_eq!(d.archive_fills("y.cioar"), 1);
+        assert_eq!(d.serves("x.cioar", 0), 1);
+        assert_eq!(d.group_serves(0), 2);
+        assert_eq!(d.group_serves(2), 0);
+    }
+}

@@ -237,6 +237,86 @@ pub fn estimate_retention_read(
     RetentionReadModel { hit_s, neighbor_s, gfs_miss_s }
 }
 
+/// Multi-source extension of [`RetentionReadModel`]: what torus-distance
+/// source routing (the [`crate::cio::directory::RetentionDirectory`])
+/// buys on the neighbor tier. Two effects are modeled:
+///
+/// * **distance** — a transfer from the nearest retaining group crosses
+///   `nearest_hops` torus links, each charged one per-hop setup, while
+///   the producer-only policy pays `producer_hops`;
+/// * **fan-in** — when `readers` groups fill one popular archive, the
+///   producer-only policy serializes every transfer on the producer's
+///   link, whereas routing spreads them over all `sources` retaining
+///   replicas (each new fill adds a source, but the bound below charges
+///   the static replica count — conservative).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoutedReadModel {
+    /// The single-source per-read tiers (producer at one hop).
+    pub base: RetentionReadModel,
+    /// Seconds for one neighbor transfer from the nearest retaining
+    /// source.
+    pub routed_neighbor_s: f64,
+    /// Seconds for the same transfer from the producing group (the PR-3
+    /// policy's distance).
+    pub producer_neighbor_s: f64,
+    /// Wall-clock seconds until the last of `readers` concurrent fills
+    /// completes under producer-only routing: all of them serialize on
+    /// the producer's link.
+    pub producer_fanin_s: f64,
+    /// The same fan-in with the fills spread over `sources` retaining
+    /// groups: per-source depth shrinks to `ceil(readers / sources)`.
+    pub routed_fanin_s: f64,
+}
+
+impl RoutedReadModel {
+    /// Aggregate seconds for a measured hit / routed-neighbor /
+    /// producer-neighbor / miss mix (each read charged its tier's
+    /// service time — the serial planning bound, like
+    /// [`RetentionReadModel::mix_time_s`]).
+    pub fn mix_time_s(&self, hits: u64, routed: u64, producer: u64, misses: u64) -> f64 {
+        hits as f64 * self.base.hit_s
+            + routed as f64 * self.routed_neighbor_s
+            + producer as f64 * self.producer_neighbor_s
+            + misses as f64 * self.base.gfs_miss_s
+    }
+}
+
+/// Estimate the routed neighbor tier for one popular archive:
+/// `nearest_hops` / `producer_hops` are the reader's torus distances to
+/// the nearest retaining source and to the producer
+/// ([`crate::cio::placement::group_torus_distance`]), `sources` the
+/// number of groups currently retaining the archive (≥ 1), `readers` the
+/// number of concurrent cross-group fills. Per-transfer time follows
+/// [`estimate_retention_read`]'s neighbor tier with the per-hop setup
+/// charged per link crossed; the source's link occupancy (setup +
+/// archive move, without the final local read) is what fan-in
+/// serializes.
+pub fn estimate_routed_read(
+    cfg: &ClusterConfig,
+    archive_bytes: u64,
+    read_bytes: u64,
+    nearest_hops: u32,
+    producer_hops: u32,
+    sources: u32,
+    readers: u32,
+) -> RoutedReadModel {
+    assert!(sources >= 1, "an archive with no retaining source has no neighbor tier");
+    let base = estimate_retention_read(cfg, archive_bytes, read_bytes);
+    let occupancy = |hops: u32| -> f64 {
+        hops as f64 * cfg.net.tree_copy_setup_s + archive_bytes as f64 / cfg.net.tree_copy_bw
+    };
+    let routed_neighbor_s = occupancy(nearest_hops) + base.hit_s;
+    let producer_neighbor_s = occupancy(producer_hops) + base.hit_s;
+    let depth = readers.div_ceil(sources);
+    RoutedReadModel {
+        base,
+        routed_neighbor_s,
+        producer_neighbor_s,
+        producer_fanin_s: readers as f64 * occupancy(producer_hops) + base.hit_s,
+        routed_fanin_s: depth as f64 * occupancy(nearest_hops) + base.hit_s,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -374,6 +454,41 @@ mod tests {
         // Mix accounting is linear in the counts.
         let t = m.mix_time_s(10, 5, 2);
         let want = 10.0 * m.hit_s + 5.0 * m.neighbor_s + 2.0 * m.gfs_miss_s;
+        assert!((t - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn routed_read_model_orders_tiers_and_spreads_fanin() {
+        let cfg = ClusterConfig::bgp(4096);
+        // Reader 1 hop from the nearest replica, 2 from the producer,
+        // 3 groups retaining, 9 concurrent cross-group fills.
+        let m = estimate_routed_read(&cfg, mib(100), kib(64), 1, 2, 3, 9);
+        // Per-read ordering: hit < routed <= producer < gfs (the CI
+        // gate's analytic counterpart).
+        assert!(m.base.hit_s < m.routed_neighbor_s, "{m:?}");
+        assert!(m.routed_neighbor_s < m.producer_neighbor_s, "fewer hops must be cheaper");
+        assert!(m.producer_neighbor_s < m.base.gfs_miss_s, "{m:?}");
+        // At one hop the routed tier degenerates to the PR-3 model.
+        let one = estimate_routed_read(&cfg, mib(100), kib(64), 1, 1, 1, 1);
+        assert!((one.routed_neighbor_s - one.base.neighbor_s).abs() < 1e-12);
+        assert!((one.producer_neighbor_s - one.routed_neighbor_s).abs() < 1e-12);
+        assert!((one.producer_fanin_s - one.producer_neighbor_s).abs() < 1e-12);
+        // Fan-in: 9 fills over 3 sources = depth 3, so the routed bound
+        // is about a third of the producer-only serialization (hops
+        // equal to isolate the spreading effect).
+        let fan = estimate_routed_read(&cfg, mib(100), kib(64), 2, 2, 3, 9);
+        assert!(fan.routed_fanin_s < fan.producer_fanin_s, "{fan:?}");
+        let occupancy = fan.producer_neighbor_s - fan.base.hit_s;
+        let want_producer = 9.0 * occupancy + fan.base.hit_s;
+        let want_routed = 3.0 * occupancy + fan.base.hit_s;
+        assert!((fan.producer_fanin_s - want_producer).abs() < 1e-9);
+        assert!((fan.routed_fanin_s - want_routed).abs() < 1e-9);
+        // Mix accounting is linear in the counts.
+        let t = m.mix_time_s(4, 3, 2, 1);
+        let want = 4.0 * m.base.hit_s
+            + 3.0 * m.routed_neighbor_s
+            + 2.0 * m.producer_neighbor_s
+            + 1.0 * m.base.gfs_miss_s;
         assert!((t - want).abs() < 1e-12);
     }
 

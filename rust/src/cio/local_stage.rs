@@ -13,17 +13,27 @@
 //!   control (eviction unlinks the retained file).
 //! * Stage N+1's tasks open stage N's output archives via
 //!   [`crate::cio::archive::Reader`] random access — archive-as-input —
-//!   resolving each archive through a **three-tier read path**:
+//!   resolving each archive through a **routed four-step read path**:
 //!
 //!   1. **IFS hit** ([`CacheOutcome::IfsHit`]): the reading task's own
 //!      group retains the archive; the retained copy is read in place.
-//!   2. **Neighbor transfer** ([`CacheOutcome::NeighborTransfer`]): the
-//!      group that *produced* the archive (parsed from its name by
-//!      [`archive_group`]) still retains it, so the archive is pulled
-//!      group-to-group — a Chirp-style torus-neighbor copy, published
-//!      atomically by [`crate::cio::local::publish_link`] — and retained
-//!      locally, without ever touching the central store.
-//!   3. **GFS miss** ([`CacheOutcome::GfsMiss`]): nobody retains it; the
+//!   2. **Routed neighbor transfer** ([`CacheOutcome::NeighborTransfer`]
+//!      with a non-producing source): the cluster-wide
+//!      [`RetentionDirectory`] lists every group currently retaining the
+//!      archive — any replica is as good as the producer's — and the
+//!      fill pulls group-to-group from the *cheapest live source*
+//!      (nearest by torus hops, ties to the least-loaded; see
+//!      [`RetentionDirectory::route`]), published atomically by
+//!      [`crate::cio::local::publish_link`] and retained locally, so
+//!      fills of a popular archive spread across its replicas instead of
+//!      converging on one hot owner. A candidate whose retention turns
+//!      out to be gone (directory entries are hints, not truth) is
+//!      withdrawn and merely costs a fallback to the next source.
+//!   3. **Producer transfer** (same outcome, producing source): when the
+//!      directory lists no live source, the group that *produced* the
+//!      archive (parsed from its name by [`archive_group`]) is probed
+//!      directly — the PR-3 policy, kept as the penultimate fallback.
+//!   4. **GFS miss** ([`CacheOutcome::GfsMiss`]): nobody retains it; the
 //!      full GFS round trip is paid (the archive is re-staged from
 //!      `gfs/` into the group's data dir, read-through, exactly the
 //!      §5.3 fallback) before the read proceeds.
@@ -43,25 +53,33 @@
 //! [`Reader::extract_range`], cutting the read volume from the member
 //! size to the record size.
 //!
-//! Retention also survives the runner: each group's accounting is written
-//! to `ifs/<group>/cache.manifest` when the [`StageRunner`] drops, and a
-//! newly constructed [`GroupCache`] warm-starts from that manifest after
-//! reconciling it against the files actually on disk — the §7 "learn
-//! from previous runs" behaviour for outputs.
+//! Retention also survives the runner: each group's accounting — entries
+//! in LRU order, per-archive read counts, and the aggregate hit/miss
+//! totals — is written to `ifs/<group>/cache.manifest` when the
+//! [`StageRunner`] drops, and a newly constructed [`GroupCache`]
+//! warm-starts from that manifest after reconciling it against the files
+//! actually on disk — the §7 "learn from previous runs" behaviour for
+//! outputs. The persisted read counts additionally seed a
+//! [`LearnedPlacement`] ([`GroupCache::seed_learned`] /
+//! [`StageRunner::seed_learned`]) so the next run's placement sees last
+//! run's archive popularity without replaying its IO.
 //!
 //! Figure 17's stage-2 ablation is the tier difference on real bytes: a
-//! hit reads the archive in place, a neighbor transfer links/copies it
-//! from a sibling group first, a miss pays a full-archive copy from the
-//! central store. The `stage2_ifs_hit` / `stage2_gfs_miss` /
-//! `stage2_record_*` / `stage2_cold_group_*` cases in `perf_micro`
-//! measure it; `examples/multistage_workflow.rs` runs the whole 3-stage
-//! chain, and the `fig17` bench sweeps the hit/neighbor/miss mix over
+//! hit reads the archive in place, a routed/producer neighbor transfer
+//! links/copies it from a retaining sibling group first, a miss pays a
+//! full-archive copy from the central store. The `stage2_ifs_hit` /
+//! `stage2_gfs_miss` / `stage2_record_*` (including
+//! `stage2_record_routed_neighbor`) / `stage2_cold_group_*` /
+//! `stage2_alltoall *` cases in `perf_micro` measure it;
+//! `examples/multistage_workflow.rs` runs the whole 3-stage chain, and
+//! the `fig17` bench sweeps the hit/routed/producer/miss mix over
 //! `cn_per_ifs`.
 
 use crate::cio::archive::{Compression, Reader};
 use crate::cio::collector::{CollectorStats, Policy};
+use crate::cio::directory::RetentionDirectory;
 use crate::cio::local::{publish_copy, publish_link, CollectorOptions, LocalCollector, LocalLayout};
-use crate::cio::placement::PlacementPolicy;
+use crate::cio::placement::{LearnedPlacement, PlacementPolicy};
 use crate::cio::stage::{CacheOutcome, IfsCache, StageGraph};
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, HashMap};
@@ -81,9 +99,21 @@ pub struct CacheSnapshot {
     /// another thread's in-flight fill (the remainder — deduped waiters,
     /// ultimately served from the shared retained copy).
     pub misses: u64,
-    /// Misses filled group-to-group from the producing sibling's
-    /// retention instead of GFS (unique fills, not deduped waiters).
+    /// Misses filled group-to-group from *any* retaining sibling's
+    /// retention instead of GFS (unique fills, not deduped waiters) —
+    /// routed and producer transfers together.
     pub neighbor_transfers: u64,
+    /// The subset of `neighbor_transfers` served by a **non-producing**
+    /// retaining group, i.e. fills the [`RetentionDirectory`] routed away
+    /// from the producer. `neighbor_transfers - routed_transfers` is the
+    /// producer's share — under the PR-3 producer-only policy it equals
+    /// `neighbor_transfers`.
+    pub routed_transfers: u64,
+    /// Fill candidates whose directory entry turned out stale (the
+    /// retention was gone by the time the pull arrived). Each cost one
+    /// fallback probe to the next source / producer / GFS — never a
+    /// wrong read.
+    pub stale_fallbacks: u64,
     /// Misses that paid the full GFS round-trip copy (unique fills — the
     /// probe the concurrent-miss tests count).
     pub gfs_copies: u64,
@@ -146,11 +176,13 @@ impl Fill {
 /// a half-evicted file) under it — while miss *fills* run outside it
 /// behind a per-archive [`Fill`] latch in an in-flight map. Concurrent
 /// misses of the same archive dedupe onto one fill; misses of distinct
-/// archives copy in parallel. A fill is sourced from the producing
-/// sibling group's retention when possible (neighbor transfer via
-/// [`publish_link`] — no central-store round trip) and from GFS
-/// otherwise; either way the data lands atomically and is accounted
-/// (evicting LRU victims) before waiters are released.
+/// archives copy in parallel. A fill is sourced (PR-4 routing) from the
+/// cheapest live retaining group the shared [`RetentionDirectory`]
+/// routes to, falling back to the producing sibling and then GFS
+/// (neighbor transfers via [`publish_link`] — no central-store round
+/// trip); either way the data lands atomically and is accounted
+/// (evicting LRU victims, directory kept in sync) before waiters are
+/// released.
 pub struct GroupCache {
     /// This cache's IFS group index (to recognise itself in a sibling
     /// slice and to skip "neighbor" transfers from itself).
@@ -162,10 +194,24 @@ pub struct GroupCache {
     /// duplicate would churn too much of the cache); they pay the GFS
     /// path. See [`PlacementPolicy::neighbor_transfer_limit`].
     neighbor_limit: u64,
+    /// Cluster-wide retention registry this cache publishes to and routes
+    /// fills with. Shared across a runner's caches; a standalone cache
+    /// gets a private one (its fills then rely on the producer fallback).
+    directory: Arc<RetentionDirectory>,
     inner: Mutex<IfsCache>,
+    /// Per-archive successful-resolve counts (every tier), persisted in
+    /// the manifest and replayed into [`LearnedPlacement`] on warm start.
+    /// Lock order: `inner` before `reads`; never the reverse.
+    reads: Mutex<HashMap<String, u64>>,
+    /// Aggregate lookup totals restored from a previous run's manifest
+    /// (this run's live counters start at zero on top of them).
+    prior_hits: u64,
+    prior_misses: u64,
     /// Archive name → in-flight fill latch (singleflight map).
     fills: Mutex<HashMap<String, Arc<Fill>>>,
     neighbor_transfers: AtomicU64,
+    routed_transfers: AtomicU64,
+    stale_fallbacks: AtomicU64,
     gfs_copies: AtomicU64,
     gfs_direct: AtomicU64,
 }
@@ -180,24 +226,50 @@ impl GroupCache {
         Self::with_limits(layout, group, capacity, capacity)
     }
 
-    /// [`GroupCache::new`] with an explicit neighbor-transfer size cap.
+    /// [`GroupCache::new`] with an explicit neighbor-transfer size cap
+    /// and a private [`RetentionDirectory`] (fills of a standalone cache
+    /// route via the producer fallback only).
     pub fn with_limits(
         layout: &LocalLayout,
         group: u32,
         capacity: u64,
         neighbor_limit: u64,
     ) -> GroupCache {
+        let directory = Arc::new(RetentionDirectory::new(layout.ifs_groups()));
+        Self::with_directory(layout, group, capacity, neighbor_limit, directory)
+    }
+
+    /// [`GroupCache::with_limits`] publishing into a shared
+    /// [`RetentionDirectory`] — the routed configuration every cache of
+    /// one runner uses. Warm-started entries are published immediately so
+    /// siblings can route to them from the first resolve.
+    pub fn with_directory(
+        layout: &LocalLayout,
+        group: u32,
+        capacity: u64,
+        neighbor_limit: u64,
+        directory: Arc<RetentionDirectory>,
+    ) -> GroupCache {
         let data_dir = layout.ifs_data(group);
         let manifest = layout.ifs_manifest(group);
-        let cache = warm_start(&manifest, &data_dir, capacity);
+        let warm = warm_start(&manifest, &data_dir, capacity);
+        for (name, _) in warm.cache.entries_lru() {
+            directory.publish(name, group);
+        }
         GroupCache {
             group,
             data_dir,
             manifest,
             neighbor_limit,
-            inner: Mutex::new(cache),
+            directory,
+            inner: Mutex::new(warm.cache),
+            reads: Mutex::new(warm.reads),
+            prior_hits: warm.prior_hits,
+            prior_misses: warm.prior_misses,
             fills: Mutex::new(HashMap::new()),
             neighbor_transfers: AtomicU64::new(0),
+            routed_transfers: AtomicU64::new(0),
+            stale_fallbacks: AtomicU64::new(0),
             gfs_copies: AtomicU64::new(0),
             gfs_direct: AtomicU64::new(0),
         }
@@ -210,14 +282,20 @@ impl GroupCache {
     }
 
     /// [`GroupCache::per_group`] with an explicit neighbor-transfer cap.
+    /// All caches share one [`RetentionDirectory`], so cross-group fills
+    /// route to the cheapest live source.
     pub fn per_group_with(
         layout: &LocalLayout,
         capacity: u64,
         neighbor_limit: u64,
     ) -> Arc<Vec<GroupCache>> {
+        let directory = Arc::new(RetentionDirectory::new(layout.ifs_groups()));
         Arc::new(
             (0..layout.ifs_groups())
-                .map(|g| GroupCache::with_limits(layout, g, capacity, neighbor_limit))
+                .map(|g| {
+                    let dir = directory.clone();
+                    GroupCache::with_directory(layout, g, capacity, neighbor_limit, dir)
+                })
                 .collect(),
         )
     }
@@ -225,6 +303,39 @@ impl GroupCache {
     /// This cache's IFS group index.
     pub fn group(&self) -> u32 {
         self.group
+    }
+
+    /// The retention directory this cache publishes to and routes with.
+    pub fn directory(&self) -> &Arc<RetentionDirectory> {
+        &self.directory
+    }
+
+    /// Aggregate `(hits, misses)` restored from a previous run's manifest
+    /// (zero on a cold start). This run's live counters
+    /// ([`CacheSnapshot::hits`] / [`CacheSnapshot::misses`]) count from
+    /// zero on top of these.
+    pub fn prior_stats(&self) -> (u64, u64) {
+        (self.prior_hits, self.prior_misses)
+    }
+
+    /// Replay this cache's per-archive read counts into a
+    /// [`LearnedPlacement`] — the §7 "learn from the IO patterns of
+    /// previous runs" seed. Only currently retained archives are replayed
+    /// (their sizes are known from the accounting); counts accumulate
+    /// across warm starts because the manifest round-trips them.
+    pub fn seed_learned(&self, learned: &mut LearnedPlacement) {
+        let cache = self.inner.lock().unwrap();
+        let reads = self.reads.lock().unwrap();
+        for (name, bytes) in cache.entries_lru() {
+            let n = reads.get(name).copied().unwrap_or(0);
+            learned.record_reads(name, bytes, n.min(u32::MAX as u64) as u32);
+        }
+    }
+
+    /// Count one successful resolve of `name` (any tier) for the
+    /// popularity statistics the manifest persists.
+    fn note_read(&self, name: &str) {
+        *self.reads.lock().unwrap().entry(name.to_string()).or_insert(0) += 1;
     }
 
     /// Retain a copy of `src` (an archive just flushed to GFS) as `name`
@@ -241,12 +352,15 @@ impl GroupCache {
         };
         for victim in &victims {
             let _ = std::fs::remove_file(self.data_dir.join(victim));
+            self.directory.withdraw(victim, self.group);
         }
         if let Err(e) = publish_copy(src, &self.data_dir.join(name)) {
             // Keep accounting honest: the copy never landed.
             cache.remove(name);
+            self.directory.withdraw(name, self.group);
             return Err(e.context(format!("retaining archive {name} on IFS")));
         }
+        self.directory.publish(name, self.group);
         Ok(true)
     }
 
@@ -261,12 +375,14 @@ impl GroupCache {
         self.open_archive_via(gfs_dir, name, &[])
     }
 
-    /// Open archive `name` for a stage task through the three-tier read
-    /// path: retained copy on a hit; on a miss, fill from the producing
-    /// sibling group's retention (`siblings`, matched by
-    /// [`archive_group`]) when it still holds the archive, else from
-    /// `gfs_dir` — read-through either way, so the next read hits.
-    /// Oversized archives are read from GFS directly without retention.
+    /// Open archive `name` for a stage task through the routed four-step
+    /// read path: retained copy on a hit; on a miss, fill group-to-group
+    /// from the **cheapest live retaining source** the
+    /// [`RetentionDirectory`] routes to (any sibling in `siblings`
+    /// holding a replica), then from the producing group (matched by
+    /// [`archive_group`]), then from `gfs_dir` — read-through either way,
+    /// so the next read hits. Oversized archives are read from GFS
+    /// directly without retention.
     ///
     /// Fills are deduped per archive and run outside the metadata lock;
     /// see the type docs for the concurrency contract.
@@ -284,6 +400,8 @@ impl GroupCache {
                 if cache.get(name) == CacheOutcome::IfsHit {
                     let reader = Reader::open(&self.data_dir.join(name))
                         .with_context(|| format!("opening retained archive {name}"))?;
+                    drop(cache);
+                    self.note_read(name);
                     return Ok((reader, CacheOutcome::IfsHit));
                 }
             }
@@ -295,6 +413,7 @@ impl GroupCache {
             if let Ok(bytes) = gfs_bytes {
                 if bytes > capacity {
                     self.gfs_direct.fetch_add(1, Ordering::Relaxed);
+                    self.note_read(name);
                     return Ok((Reader::open(&gfs_path)?, CacheOutcome::GfsMiss));
                 }
             }
@@ -319,6 +438,7 @@ impl GroupCache {
                         // fill (counted as another miss — honestly).
                         if self.contains(name) {
                             if let Ok(reader) = Reader::open(&self.data_dir.join(name)) {
+                                self.note_read(name);
                                 return Ok((reader, outcome));
                             }
                         }
@@ -338,6 +458,7 @@ impl GroupCache {
                     match Reader::open(&self.data_dir.join(name)) {
                         Ok(reader) => {
                             fill.publish(FillState::Done(outcome));
+                            self.note_read(name);
                             return Ok((reader, outcome));
                         }
                         Err(_) => {
@@ -364,42 +485,125 @@ impl GroupCache {
         }
     }
 
-    /// Attempt the neighbor tier of one fill: locate the producing
-    /// sibling by [`archive_group`], probe its retention (no counters —
-    /// whether the producer still holds it is not a hit/miss event for
-    /// either side), and publish group-to-group. Returns `false` on any
-    /// reason to fall through to GFS: self-produced name, no such
-    /// sibling, not retained there, over the neighbor-transfer cap, or a
-    /// lost race with the sibling's eviction (the link/copy source
-    /// vanishing is not an error, just a miss of this tier).
-    fn try_neighbor_fill(
+    /// Attempt the neighbor tier of one fill: probe every live source
+    /// the [`RetentionDirectory`] routes to (cheapest first), then the
+    /// producing sibling as the legacy fallback (the directory may be
+    /// cold — standalone caches — or every entry stale). Returns the
+    /// group that served the pull, or `None` to fall through to GFS.
+    ///
+    /// A candidate whose retention turns out to be gone (accounting
+    /// dropped it, or the file vanished mid-link — a lost race with that
+    /// group's eviction, or a fault) is **withdrawn from the directory
+    /// and skipped**: staleness costs one fallback probe, never an error
+    /// and never a wrong read. An over-the-cap archive aborts the tier
+    /// without a stale mark (every replica has the same size).
+    fn try_routed_fill(
         &self,
         name: &str,
         dst: &std::path::Path,
         siblings: &[GroupCache],
+    ) -> Option<u32> {
+        let producer = archive_group(name);
+        let mut tried_producer = false;
+        for cand in self.directory.route(name, self.group) {
+            if Some(cand) == producer {
+                tried_producer = true;
+            }
+            if self.pull_from(cand, name, dst, siblings, true) {
+                return Some(cand);
+            }
+        }
+        if let Some(owner) = producer {
+            if owner != self.group
+                && !tried_producer
+                && self.pull_from(owner, name, dst, siblings, false)
+            {
+                return Some(owner);
+            }
+        }
+        None
+    }
+
+    /// Probe one candidate source and publish group-to-group on success
+    /// (no hit/miss counters on the source side — serving a sibling is
+    /// not a recency event for its own LRU). `true` iff the link/copy
+    /// landed at `dst`. Failed probes reconcile the candidate's
+    /// directory entry under *its* metadata lock
+    /// ([`GroupCache::reconcile_stale`]) so a stale withdrawal can never
+    /// race — and cancel — a concurrent re-publish by that group.
+    fn pull_from(
+        &self,
+        source: u32,
+        name: &str,
+        dst: &std::path::Path,
+        siblings: &[GroupCache],
+        advertised: bool,
     ) -> bool {
-        let Some(owner) = archive_group(name) else {
-            return false;
-        };
-        if owner == self.group {
+        if source == self.group {
             return false;
         }
-        let Some(sib) = siblings.iter().find(|c| c.group == owner) else {
+        let Some(sib) = siblings.iter().find(|c| c.group == source) else {
+            // Not reachable from this call site (partial sibling slice);
+            // the entry is not stale, just unusable here.
             return false;
         };
         if !sib.contains(name) {
+            // A producer probed on spec (`!advertised`) simply may not
+            // retain the archive — that is a plain miss of this tier,
+            // not a stale directory entry.
+            if advertised && sib.reconcile_stale(name) {
+                self.stale_fallbacks.fetch_add(1, Ordering::Relaxed);
+            }
             return false;
         }
         let src = sib.data_dir.join(name);
-        let small_enough = std::fs::metadata(&src)
-            .map(|m| m.len() <= self.neighbor_limit)
-            .unwrap_or(false);
-        small_enough && publish_link(&src, dst).is_ok()
+        match std::fs::metadata(&src) {
+            Ok(m) if m.len() > self.neighbor_limit => return false,
+            Ok(_) => {}
+            Err(_) => {
+                // Accounted but the file is gone — eviction race or an
+                // injected fault.
+                if sib.reconcile_stale(name) {
+                    self.stale_fallbacks.fetch_add(1, Ordering::Relaxed);
+                }
+                return false;
+            }
+        }
+        if publish_link(&src, dst).is_ok() {
+            return true;
+        }
+        // The source vanished between the probe and the link.
+        if sib.reconcile_stale(name) {
+            self.stale_fallbacks.fetch_add(1, Ordering::Relaxed);
+        }
+        false
     }
 
-    /// The data movement of one deduped fill: neighbor tier first, GFS
-    /// fallback; publish atomically; account + unlink victims under the
-    /// metadata lock. Runs on exactly one thread per (archive, fill).
+    /// Called by a reader whose pull from this (sibling) cache failed:
+    /// under this group's metadata lock, re-check the retention of
+    /// `name` against both the accounting and the file on disk. A live
+    /// entry — the probe lost a race with a re-fill — is left alone and
+    /// is not stale. A dead one is dropped from the accounting (an
+    /// injected fault can kill the file behind the accounting's back)
+    /// and withdrawn from the directory. Because every publish of this
+    /// group's entries also runs under this lock, a withdrawal here can
+    /// never cancel a fresh publish. Returns `true` when the entry was
+    /// stale.
+    fn reconcile_stale(&self, name: &str) -> bool {
+        let mut cache = self.inner.lock().unwrap();
+        if cache.contains(name) && self.data_dir.join(name).is_file() {
+            return false;
+        }
+        cache.remove(name);
+        self.directory.record_stale(name, self.group);
+        true
+    }
+
+    /// The data movement of one deduped fill: routed neighbor tier first
+    /// (directory sources, then producer), GFS fallback; publish
+    /// atomically; account + unlink victims under the metadata lock and
+    /// keep the directory in sync. Runs on exactly one thread per
+    /// (archive, fill).
     fn run_fill(
         &self,
         gfs_path: &std::path::Path,
@@ -407,8 +611,12 @@ impl GroupCache {
         siblings: &[GroupCache],
     ) -> Result<CacheOutcome> {
         let dst = self.data_dir.join(name);
-        let outcome = if self.try_neighbor_fill(name, &dst, siblings) {
+        let outcome = if let Some(source) = self.try_routed_fill(name, &dst, siblings) {
             self.neighbor_transfers.fetch_add(1, Ordering::Relaxed);
+            if archive_group(name) != Some(source) {
+                self.routed_transfers.fetch_add(1, Ordering::Relaxed);
+            }
+            self.directory.record_serve(name, source);
             CacheOutcome::NeighborTransfer
         } else {
             publish_copy(gfs_path, &dst)
@@ -422,7 +630,9 @@ impl GroupCache {
             Some(victims) => {
                 for victim in &victims {
                     let _ = std::fs::remove_file(self.data_dir.join(victim));
+                    self.directory.withdraw(victim, self.group);
                 }
+                self.directory.publish(name, self.group);
                 Ok(outcome)
             }
             None => {
@@ -441,6 +651,8 @@ impl GroupCache {
             hits: cache.hits(),
             misses: cache.misses(),
             neighbor_transfers: self.neighbor_transfers.load(Ordering::Relaxed),
+            routed_transfers: self.routed_transfers.load(Ordering::Relaxed),
+            stale_fallbacks: self.stale_fallbacks.load(Ordering::Relaxed),
             gfs_copies: self.gfs_copies.load(Ordering::Relaxed),
             gfs_direct: self.gfs_direct.load(Ordering::Relaxed),
             evictions: cache.evictions(),
@@ -467,7 +679,14 @@ impl GroupCache {
             .collect();
         for name in &doomed {
             cache.remove(name);
+            self.directory.withdraw(name, self.group);
         }
+        // The cleared names will be *re-produced* by the stage re-run as
+        // brand-new artifacts; their popularity history must not carry
+        // over, or seed_learned would credit a cold output with the old
+        // artifact's reads. (Plain eviction keeps the counts: the archive
+        // identity survives eviction, only the copy is dropped.)
+        self.reads.lock().unwrap().retain(|n, _| !stage_artifact_matches(n, prefix));
         for entry in std::fs::read_dir(&self.data_dir)? {
             let entry = entry?;
             let name = entry.file_name().to_string_lossy().to_string();
@@ -480,17 +699,29 @@ impl GroupCache {
     }
 
     /// Persist the retention accounting to `ifs/<group>/cache.manifest`
-    /// (atomically), LRU-oldest first so a warm-start replay reconstructs
-    /// recency. Called by [`StageRunner`]'s drop; callers managing bare
-    /// caches can invoke it directly.
+    /// (atomically): a `#stats` line with the cumulative hit/miss totals
+    /// (prior runs included), then `name\tbytes\treads` entries
+    /// LRU-oldest first so a warm-start replay reconstructs recency — and
+    /// the per-archive read counts survive to seed
+    /// [`GroupCache::seed_learned`]. Called by [`StageRunner`]'s drop;
+    /// callers managing bare caches can invoke it directly.
     pub fn save_manifest(&self) -> Result<()> {
         let mut text = String::from("# cio retention manifest, LRU-oldest first\n");
         {
             let cache = self.inner.lock().unwrap();
+            let reads = self.reads.lock().unwrap();
+            text.push_str(&format!(
+                "#stats\t{}\t{}\n",
+                self.prior_hits + cache.hits(),
+                self.prior_misses + cache.misses()
+            ));
             for (name, bytes) in cache.entries_lru() {
+                let n = reads.get(name).copied().unwrap_or(0);
                 text.push_str(name);
                 text.push('\t');
                 text.push_str(&bytes.to_string());
+                text.push('\t');
+                text.push_str(&n.to_string());
                 text.push('\n');
             }
         }
@@ -509,23 +740,57 @@ fn stage_artifact_matches(name: &str, prefix: &str) -> bool {
     name.starts_with(&format!("{prefix}-g")) && name.ends_with(".cioar")
 }
 
+/// What a manifest warm start recovered: the reconciled accounting, the
+/// per-archive read counts, and the previous run's aggregate hit/miss
+/// totals.
+struct WarmState {
+    cache: IfsCache,
+    reads: HashMap<String, u64>,
+    prior_hits: u64,
+    prior_misses: u64,
+}
+
 /// Rebuild an [`IfsCache`] from a persisted manifest, reconciling every
 /// entry against the files actually in `data_dir`: an entry whose file is
 /// missing or has a different size is dropped (the disk is the truth —
 /// the §7 "learn from previous runs" warm start must never claim bytes it
-/// cannot serve). A missing or malformed manifest yields a cold cache.
-fn warm_start(manifest: &std::path::Path, data_dir: &std::path::Path, capacity: u64) -> IfsCache {
-    let mut cache = IfsCache::new(capacity);
+/// cannot serve). Read counts (third column, absent in pre-PR-4
+/// manifests) and the `#stats` aggregate line ride along; a missing or
+/// malformed manifest yields a cold cache with zero statistics.
+fn warm_start(manifest: &std::path::Path, data_dir: &std::path::Path, capacity: u64) -> WarmState {
+    let mut warm = WarmState {
+        cache: IfsCache::new(capacity),
+        reads: HashMap::new(),
+        prior_hits: 0,
+        prior_misses: 0,
+    };
     let Ok(text) = std::fs::read_to_string(manifest) else {
-        return cache;
+        return warm;
     };
     for line in text.lines() {
         let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
+        if line.is_empty() {
             continue;
         }
-        let Some((name, bytes)) = line.split_once('\t') else { continue };
-        let Ok(bytes) = bytes.trim().parse::<u64>() else { continue };
+        if let Some(stats) = line.strip_prefix("#stats\t") {
+            let mut fields = stats.split('\t');
+            let hits = fields.next().and_then(|f| f.trim().parse::<u64>().ok());
+            let misses = fields.next().and_then(|f| f.trim().parse::<u64>().ok());
+            if let (Some(h), Some(m)) = (hits, misses) {
+                warm.prior_hits = h;
+                warm.prior_misses = m;
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        let mut fields = line.split('\t');
+        let Some(name) = fields.next() else { continue };
+        let Some(bytes) = fields.next().and_then(|f| f.trim().parse::<u64>().ok()) else {
+            continue;
+        };
+        let reads = fields.next().and_then(|f| f.trim().parse::<u64>().ok()).unwrap_or(0);
         let on_disk = std::fs::metadata(data_dir.join(name))
             .map(|m| m.is_file() && m.len() == bytes)
             .unwrap_or(false);
@@ -535,13 +800,17 @@ fn warm_start(manifest: &std::path::Path, data_dir: &std::path::Path, capacity: 
         // Replaying oldest-first through put_evicting reconstructs the
         // LRU; if this run's capacity shrank, the replay itself evicts
         // (and unlinks) the oldest entries to fit.
-        if let Some(victims) = cache.put_evicting(name, bytes) {
+        if let Some(victims) = warm.cache.put_evicting(name, bytes) {
             for victim in &victims {
                 let _ = std::fs::remove_file(data_dir.join(victim));
+                warm.reads.remove(victim.as_str());
             }
         }
+        if reads > 0 {
+            warm.reads.insert(name.to_string(), reads);
+        }
     }
-    cache
+    warm
 }
 
 /// Delete every `<prefix>-g*.cioar` in `dir` (stale stage artifacts from
@@ -625,9 +894,10 @@ pub struct StageExec<'a> {
 
 /// Read access to the upstream stages' output archives for one task.
 /// Every archive resolve goes through the task's group cache and the
-/// three-tier read path: hit → retained IFS copy, miss → neighbor-group
-/// transfer when the producer still retains the archive, else the GFS
-/// round trip (re-staged locally either way).
+/// routed four-step read path: hit → retained IFS copy; miss → transfer
+/// from the cheapest live retaining group the [`RetentionDirectory`]
+/// routes to, then from the producing group, else the GFS round trip
+/// (re-staged locally either way).
 pub struct StageInput<'a> {
     gfs: PathBuf,
     caches: &'a [GroupCache],
@@ -667,7 +937,7 @@ impl StageInput<'_> {
     }
 
     /// Read one upstream member: find its archive, resolve it through the
-    /// three-tier path, extract the member by random access.
+    /// routed four-step path, extract the member by random access.
     ///
     /// A retained copy can be evicted (its file unlinked) between the
     /// open and the extract — e.g. this stage's own collector retaining a
@@ -680,7 +950,7 @@ impl StageInput<'_> {
 
     /// Read `len` bytes at `offset` within one upstream member — the
     /// record-granular read path ([`Reader::extract_range`] behind the
-    /// same three-tier resolve as [`StageInput::read_member`]): stage 2
+    /// same routed resolve as [`StageInput::read_member`]): stage 2
     /// pulls *records, not whole members,* out of retention, so the read
     /// volume tracks the record size instead of the member size. The
     /// range is clamped to the member length.
@@ -740,9 +1010,17 @@ pub struct StageStats {
     /// task sees [`CacheOutcome::GfsMiss`]) but still counts here — the
     /// per-read outcome is the effective source of truth.
     pub ifs_hits: u64,
-    /// Unique group-to-group fills from a producing sibling's retention
-    /// (no central-store round trip).
+    /// Unique group-to-group fills from *any* retaining sibling's
+    /// retention (no central-store round trip) — routed plus producer.
     pub neighbor_transfers: u64,
+    /// The subset of `neighbor_transfers` the [`RetentionDirectory`]
+    /// routed to a **non-producing** retaining group — load the producer
+    /// did not have to serve.
+    pub routed_transfers: u64,
+    /// The subset of `neighbor_transfers` served by the producing group
+    /// itself (`neighbor_transfers - routed_transfers`; under the PR-3
+    /// producer-only policy this was the whole neighbor tier).
+    pub producer_transfers: u64,
     /// Unique GFS round trips (read-through copies plus oversized
     /// in-place reads). `ifs_hits + neighbor_transfers + gfs_misses`
     /// equals the stage's total archive resolves.
@@ -769,6 +1047,12 @@ impl WorkflowReport {
         self.stages.iter().map(|s| s.neighbor_transfers).sum()
     }
 
+    /// Total transfers routed to a non-producing retaining source across
+    /// stages (the load spread off the producers).
+    pub fn routed_transfers(&self) -> u64 {
+        self.stages.iter().map(|s| s.routed_transfers).sum()
+    }
+
     /// Total GFS misses across stages.
     pub fn gfs_misses(&self) -> u64 {
         self.stages.iter().map(|s| s.gfs_misses).sum()
@@ -793,6 +1077,7 @@ pub struct StageRunner {
     layout: LocalLayout,
     graph: StageGraph,
     caches: Arc<Vec<GroupCache>>,
+    directory: Arc<RetentionDirectory>,
     config: StageRunnerConfig,
 }
 
@@ -806,12 +1091,17 @@ struct ProducedArchives {
 
 impl StageRunner {
     /// Build a runner; one [`GroupCache`] per IFS group, each bounded by
-    /// `config.cache_capacity` and warm-started from its persisted
-    /// manifest when a previous runner on this layout left one.
+    /// `config.cache_capacity`, warm-started from its persisted manifest
+    /// when a previous runner on this layout left one, and all publishing
+    /// into one shared [`RetentionDirectory`] so cross-group fills route
+    /// to the cheapest live source.
     pub fn new(layout: LocalLayout, graph: StageGraph, config: StageRunnerConfig) -> StageRunner {
         let caches =
             GroupCache::per_group_with(&layout, config.cache_capacity, config.neighbor_limit);
-        StageRunner { layout, graph, caches, config }
+        // A layout always has >= 1 IFS group; every cache shares one
+        // directory, so any of them hands back the cluster-wide handle.
+        let directory = caches[0].directory().clone();
+        StageRunner { layout, graph, caches, directory, config }
     }
 
     /// The directory layout this runner executes over.
@@ -822,6 +1112,23 @@ impl StageRunner {
     /// The per-group retention caches (inspection / warmup).
     pub fn caches(&self) -> &[GroupCache] {
         &self.caches
+    }
+
+    /// The cluster-wide retention directory (source routing, per-source
+    /// serve counters).
+    pub fn directory(&self) -> &RetentionDirectory {
+        &self.directory
+    }
+
+    /// Merge every group's persisted+live read statistics into one
+    /// [`LearnedPlacement`] — the §7 seed a follow-up run's distributor
+    /// can plan with.
+    pub fn seed_learned(&self) -> LearnedPlacement {
+        let mut learned = LearnedPlacement::new();
+        for cache in self.caches.iter() {
+            cache.seed_learned(&mut learned);
+        }
+        learned
     }
 
     /// Execute the whole workflow: stages run as the [`StageGraph`] makes
@@ -980,6 +1287,7 @@ impl StageRunner {
         };
         let resolves = delta(|s| s.hits) + delta(|s| s.misses);
         let neighbor_transfers = delta(|s| s.neighbor_transfers);
+        let routed_transfers = delta(|s| s.routed_transfers);
         let gfs_misses = delta(|s| s.gfs_copies) + delta(|s| s.gfs_direct);
         let stats = StageStats {
             name: stage_name,
@@ -989,6 +1297,8 @@ impl StageRunner {
             // Everything not moved by a unique fill was served locally.
             ifs_hits: resolves.saturating_sub(neighbor_transfers + gfs_misses),
             neighbor_transfers,
+            routed_transfers,
+            producer_transfers: neighbor_transfers.saturating_sub(routed_transfers),
             gfs_misses,
             elapsed_s: t0.elapsed().as_secs_f64(),
         };
@@ -1143,6 +1453,116 @@ mod tests {
         assert_eq!(outcome, CacheOutcome::GfsMiss, "over-limit pull must use GFS");
         let snap = caches[1].snapshot();
         assert_eq!((snap.neighbor_transfers, snap.gfs_copies), (0, 1));
+    }
+
+    #[test]
+    fn routed_fill_uses_non_producer_source_when_producer_evicted() {
+        let root = tmp("gc-routed");
+        let layout = LocalLayout::create(&root, 3, 1).unwrap(); // groups 0, 1, 2
+        let name = "s0-g0-00000.cioar";
+        write_archive(&layout.gfs(), name, &[("m", b"routed bytes")]);
+        let caches = GroupCache::per_group(&layout, mib(16)); // shared directory
+        caches[0].retain(&layout.gfs().join(name), name).unwrap();
+
+        // Group 2 pulls from the producer and becomes a source itself.
+        let (_, outcome) = caches[2].open_archive_via(&layout.gfs(), name, &caches).unwrap();
+        assert_eq!(outcome, CacheOutcome::NeighborTransfer);
+        assert_eq!(caches[2].snapshot().routed_transfers, 0, "first pull is producer-served");
+        let dir = caches[0].directory().clone();
+        assert_eq!(dir.sources(name), vec![0, 2]);
+        assert_eq!(dir.serves(name, 0), 1);
+
+        // Evict the producer's copy via a stage clear: the only live
+        // source left is group 2, so group 1's fill must route there —
+        // not to the producer, not to GFS.
+        caches[0].clear_prefix("s0").unwrap();
+        assert_eq!(dir.sources(name), vec![2]);
+        let (r, outcome) = caches[1].open_archive_via(&layout.gfs(), name, &caches).unwrap();
+        assert_eq!(outcome, CacheOutcome::NeighborTransfer);
+        assert_eq!(r.extract("m").unwrap(), b"routed bytes");
+        let snap = caches[1].snapshot();
+        assert_eq!(
+            (snap.neighbor_transfers, snap.routed_transfers, snap.gfs_copies),
+            (1, 1, 0),
+            "{snap:?}"
+        );
+        assert_eq!(dir.serves(name, 2), 1, "the non-producer source served the fill");
+        assert_eq!(dir.sources(name), vec![1, 2], "the filled group is published");
+    }
+
+    #[test]
+    fn stale_directory_entry_falls_back_without_error() {
+        let root = tmp("gc-stale");
+        let layout = LocalLayout::create(&root, 2, 1).unwrap();
+        let name = "s0-g0-00000.cioar";
+        write_archive(&layout.gfs(), name, &[("m", b"stale test")]);
+        let caches = GroupCache::per_group(&layout, mib(16));
+        caches[0].retain(&layout.gfs().join(name), name).unwrap();
+        // Fault: the retained file vanishes behind the accounting's back;
+        // the directory still advertises group 0 as a source.
+        std::fs::remove_file(layout.ifs_data(0).join(name)).unwrap();
+        let (r, outcome) = caches[1].open_archive_via(&layout.gfs(), name, &caches).unwrap();
+        assert_eq!(outcome, CacheOutcome::GfsMiss, "stale source -> GFS fallback");
+        assert_eq!(r.extract("m").unwrap(), b"stale test");
+        let snap = caches[1].snapshot();
+        assert_eq!((snap.gfs_copies, snap.neighbor_transfers), (1, 0), "{snap:?}");
+        assert!(snap.stale_fallbacks >= 1, "{snap:?}");
+        let dir = caches[1].directory();
+        assert!(!dir.sources(name).contains(&0), "stale entry must be withdrawn");
+        assert!(dir.stale_withdrawals() >= 1);
+        // The reader's own fill re-published a live copy.
+        assert!(dir.sources(name).contains(&1));
+    }
+
+    #[test]
+    fn manifest_round_trips_read_stats_and_seeds_learned_placement() {
+        use crate::cio::placement::{Dataset, Tier};
+        let root = tmp("gc-stats");
+        let layout = LocalLayout::create(&root, 1, 1).unwrap();
+        let hot = "s0-g0-00000.cioar";
+        let cold = "s0-g0-00001.cioar";
+        write_archive(&layout.gfs(), hot, &[("m", b"hot data")]);
+        write_archive(&layout.gfs(), cold, &[("m", b"cold data")]);
+        let (hot_bytes, cold_bytes) = {
+            let cache = GroupCache::new(&layout, 0, mib(16));
+            assert_eq!(cache.prior_stats(), (0, 0), "first run starts cold");
+            cache.retain(&layout.gfs().join(hot), hot).unwrap();
+            cache.retain(&layout.gfs().join(cold), cold).unwrap();
+            for _ in 0..5 {
+                cache.open_archive(&layout.gfs(), hot).unwrap();
+            }
+            cache.open_archive(&layout.gfs(), cold).unwrap();
+            cache.save_manifest().unwrap();
+            (
+                std::fs::metadata(layout.gfs().join(hot)).unwrap().len(),
+                std::fs::metadata(layout.gfs().join(cold)).unwrap().len(),
+            )
+        };
+
+        let warm = GroupCache::new(&layout, 0, mib(16));
+        assert_eq!(warm.prior_stats(), (6, 0), "persisted hit/miss totals restored");
+        // Seeding: the hot archive's 5 persisted reads promote it to
+        // read-many; the cold one stays read-few.
+        let mut learned = LearnedPlacement::new();
+        warm.seed_learned(&mut learned);
+        let policy = PlacementPolicy {
+            lfs_limit: 4, // force past-LFS so the reader count decides
+            ifs_limit: mib(32),
+            read_many_threshold: 1,
+        };
+        let hot_ds = Dataset { name: hot.into(), bytes: hot_bytes, readers: 1 };
+        let cold_ds = Dataset { name: cold.into(), bytes: cold_bytes, readers: 1 };
+        assert_eq!(learned.decide(&policy, &hot_ds), Tier::IfsReplicated);
+        assert_eq!(learned.decide(&policy, &cold_ds), Tier::Ifs);
+
+        // Statistics keep accumulating across warm starts.
+        warm.open_archive(&layout.gfs(), hot).unwrap();
+        warm.save_manifest().unwrap();
+        let warm2 = GroupCache::new(&layout, 0, mib(16));
+        assert_eq!(warm2.prior_stats(), (7, 0));
+        let mut learned2 = LearnedPlacement::new();
+        warm2.seed_learned(&mut learned2);
+        assert!(!learned2.is_empty());
     }
 
     #[test]

@@ -50,9 +50,19 @@
 //!   inter-stage retention. Each stage's collector retains flushed
 //!   archives in the group's `ifs/<group>/data/` under
 //!   [`local_stage::GroupCache`] bounded-LRU control; the next stage
-//!   opens them via [`archive::Reader`] random access (archive-as-input),
-//!   falling back to a GFS round trip + read-through re-stage on a miss —
-//!   the Figure 17 stage-2 ablation, measurable on real data.
+//!   opens them via [`archive::Reader`] random access (archive-as-input)
+//!   through the routed four-step resolve (IFS hit → routed neighbor →
+//!   producer → GFS round trip + read-through re-stage) — the Figure 17
+//!   stage-2 ablation, measurable on real data.
+//! * [`directory`] — the PR-4 tentpole: a cluster-wide
+//!   [`directory::RetentionDirectory`] tracks which groups retain each
+//!   archive (updated on retains, fills, evictions, clears, and manifest
+//!   warm starts) and routes each cross-group fill to the cheapest live
+//!   source by torus distance ([`placement::group_torus_distance`]),
+//!   ties to the least-loaded replica — so popular-archive fills spread
+//!   across retaining groups instead of hammering the producer, with
+//!   stale entries costing only a fallback (next source → producer →
+//!   GFS).
 //!
 //! The shared concurrency substrate (buffer pool + ordered worker
 //! pipeline) lives in [`crate::util::pool`].
@@ -78,6 +88,7 @@
 pub mod archive;
 pub mod collective;
 pub mod collector;
+pub mod directory;
 pub mod dispatch;
 pub mod distributor;
 pub mod local;

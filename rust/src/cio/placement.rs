@@ -16,6 +16,7 @@
 //! files (the "learn from the IO patterns of previous runs" item).
 
 use crate::config::ClusterConfig;
+use crate::sim::topology::Torus;
 use std::collections::HashMap;
 
 /// Storage tier assignment for a dataset.
@@ -108,6 +109,20 @@ impl PlacementPolicy {
     }
 }
 
+/// Torus hop distance between IFS groups `a` and `b` when `groups` groups
+/// are laid out on the smallest roughly-cubic torus that fits them — the
+/// routing metric [`crate::cio::directory::RetentionDirectory`] ranks
+/// retaining sources with. On the BG/P each IFS group's servers sit in a
+/// contiguous torus block (Figure 8), so group index distance on the
+/// fitted torus is the natural stand-in for the link cost of a Chirp
+/// group-to-group transfer: a transfer from the nearest retaining group
+/// crosses fewer hops than one from an arbitrary (e.g. the producing)
+/// group.
+pub fn group_torus_distance(a: u32, b: u32, groups: u32) -> u32 {
+    let torus = Torus::fitting(groups.max(1).max(a.saturating_add(1)).max(b.saturating_add(1)));
+    torus.hops(a, b)
+}
+
 /// Modeled per-node IFS read bandwidth at a given CN:IFS ratio — the
 /// quantity Figure 11 sweeps ("a 64:1 ratio is good when trying to
 /// maximize the bandwidth per node"). Derived from the chirp model: the
@@ -164,13 +179,25 @@ impl LearnedPlacement {
 
     /// Record one observed read of `name` with the given size.
     pub fn record_read(&mut self, name: &str, bytes: u64) {
+        self.record_reads(name, bytes, 1);
+    }
+
+    /// Record `reads` observed reads of `name` at once — the warm-start
+    /// seeding path: a retention manifest persists per-archive read
+    /// counts ([`crate::cio::local_stage::GroupCache::seed_learned`]),
+    /// and replaying them here lets a new run's placement see last run's
+    /// popularity without replaying the IO. Zero reads record nothing.
+    pub fn record_reads(&mut self, name: &str, bytes: u64, reads: u32) {
+        if reads == 0 {
+            return;
+        }
         let e = self.observed.entry(name.to_string()).or_insert_with(|| Dataset {
             name: name.to_string(),
             bytes,
             readers: 0,
         });
         e.bytes = e.bytes.max(bytes);
-        e.readers += 1;
+        e.readers += reads;
     }
 
     /// Number of files with history.
@@ -265,6 +292,42 @@ mod tests {
         // per-node bandwidth is overhead-dominated anyway.
         let r_small = auto_ratio(&cfg, 1024, 64, 512);
         assert!(r_small >= 64);
+    }
+
+    #[test]
+    fn group_torus_distance_matches_fitted_torus() {
+        // 4 groups -> [2,2,1] torus: 0=[0,0], 1=[1,0], 2=[0,1], 3=[1,1].
+        assert_eq!(group_torus_distance(0, 0, 4), 0);
+        assert_eq!(group_torus_distance(0, 1, 4), 1);
+        assert_eq!(group_torus_distance(0, 2, 4), 1);
+        assert_eq!(group_torus_distance(0, 3, 4), 2);
+        // Symmetric.
+        assert_eq!(group_torus_distance(3, 0, 4), group_torus_distance(0, 3, 4));
+        // 2 groups -> one hop apart on a [2,1,1] ring.
+        assert_eq!(group_torus_distance(0, 1, 2), 1);
+        // Out-of-range ids (a short last group after a layout change)
+        // still measure instead of panicking: the torus grows to fit.
+        assert_eq!(group_torus_distance(0, 0, 1), 0);
+        let d = group_torus_distance(0, 7, 4);
+        assert!(d >= 1);
+    }
+
+    #[test]
+    fn record_reads_batches_observations() {
+        let p = policy();
+        let mut learned = LearnedPlacement::new();
+        learned.record_reads("warm.db", gib(2), 0);
+        assert!(learned.is_empty(), "zero reads record nothing");
+        learned.record_reads("warm.db", gib(2), 64);
+        let declared = Dataset { name: "warm.db".into(), bytes: gib(2), readers: 1 };
+        assert_eq!(
+            learned.decide(&p, &declared),
+            Tier::IfsReplicated,
+            "64 seeded reads promote to replicated"
+        );
+        // Batch + single observations accumulate in one entry.
+        learned.record_read("warm.db", gib(3));
+        assert_eq!(learned.len(), 1);
     }
 
     #[test]

@@ -1,11 +1,17 @@
 //! Failure injection: degraded resources, overloaded staging, chirp OOM,
-//! and cancelled transfers must leave the system consistent (every task
-//! accounted, no byte lost or double-counted, no hangs).
+//! cancelled transfers, and dying retention sources must leave the system
+//! consistent (every task accounted, no byte lost or double-counted, no
+//! hangs).
 
+use cio::cio::archive::{Compression, Writer};
+use cio::cio::local::LocalLayout;
+use cio::cio::local_stage::GroupCache;
+use cio::cio::stage::CacheOutcome;
 use cio::config::ClusterConfig;
 use cio::sim::cluster::{IoMode, SimCluster};
 use cio::sim::flow::{FlowNet, HasFlowNet};
 use cio::util::units::{mbps, mib, SimTime};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 #[test]
 fn gfs_brownout_mid_run_slows_but_completes() {
@@ -104,6 +110,86 @@ fn cancelled_transfers_release_capacity() {
     assert!((4.5..6.0).contains(&t), "completion at {t}s");
     assert_eq!(w.net.flows_completed(), 5);
     assert_eq!(w.net.flows_cancelled(), 5);
+}
+
+#[test]
+fn routed_source_unlinked_mid_resolve_falls_back_cleanly() {
+    // The nearest retaining source's file is unlinked behind its
+    // accounting's back (a crashed or wiped IFS server): a fill routed
+    // there must fall back down the chain — next source -> producer ->
+    // GFS — with consistent counters, and concurrent waiters sharing the
+    // fill must see the final outcome, never the transient fault.
+    let root = std::env::temp_dir()
+        .join(format!("cio-fault-routed-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let layout = LocalLayout::create(&root, 4, 1).unwrap(); // 4 groups
+    let name = "s0-g0-00000.cioar";
+    let payload: Vec<u8> = (0..50_000usize).map(|j| (j % 251) as u8).collect();
+    {
+        let mut w = Writer::create(&layout.gfs().join(name)).unwrap();
+        w.add("m", &payload, Compression::None).unwrap();
+        w.finish().unwrap();
+    }
+    let caches = GroupCache::per_group_with(&layout, mib(16), mib(16));
+    caches[0].retain(&layout.gfs().join(name), name).unwrap();
+    // Group 3 pulls a replica: the directory now lists sources {0, 3}.
+    let (_, outcome) = caches[3].open_archive_via(&layout.gfs(), name, &caches).unwrap();
+    assert_eq!(outcome, CacheOutcome::NeighborTransfer);
+
+    // Fault 1: group 3's retained file dies behind its accounting. A
+    // group-1 reader is equidistant from 0 and 3; the serve-count
+    // tie-break routes it to the idle group 3 first, where the dead file
+    // must cost exactly one stale fallback to the NEXT source (the
+    // producer) — not an error, and not a GFS round trip.
+    std::fs::remove_file(layout.ifs_data(3).join(name)).unwrap();
+    let (r, outcome) = caches[1].open_archive_via(&layout.gfs(), name, &caches).unwrap();
+    assert_eq!(outcome, CacheOutcome::NeighborTransfer, "fallback stays on the neighbor tier");
+    assert_eq!(r.extract("m").unwrap(), payload);
+    let snap = caches[1].snapshot();
+    assert_eq!(
+        (snap.neighbor_transfers, snap.gfs_copies),
+        (1, 0),
+        "one fill, no GFS round trip: {snap:?}"
+    );
+    assert!(snap.stale_fallbacks >= 1, "the dead source must cost a fallback: {snap:?}");
+    let dir = caches[1].directory();
+    assert!(!dir.sources(name).contains(&3), "the dead entry must be withdrawn");
+    assert!(dir.stale_withdrawals() >= 1);
+
+    // Fault 2: every remaining retained copy dies too (groups 0 and 1).
+    // Concurrent group-2 readers share one deduped fill that must fall
+    // all the way to GFS; every waiter gets byte-exact data from the
+    // shared final outcome rather than observing the mid-resolve faults.
+    std::fs::remove_file(layout.ifs_data(0).join(name)).unwrap();
+    std::fs::remove_file(layout.ifs_data(1).join(name)).unwrap();
+    let threads = 6u32;
+    let barrier = std::sync::Barrier::new(threads as usize);
+    let served = AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let caches = &caches;
+            let layout = &layout;
+            let barrier = &barrier;
+            let payload = &payload;
+            let served = &served;
+            scope.spawn(move || {
+                barrier.wait();
+                let (r, _outcome) =
+                    caches[2].open_archive_via(&layout.gfs(), name, caches).unwrap();
+                assert_eq!(&r.extract("m").unwrap(), payload, "byte-exact for every waiter");
+                served.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+    });
+    assert_eq!(served.load(Ordering::Relaxed), threads as u64);
+    let snap = caches[2].snapshot();
+    assert_eq!(snap.gfs_copies, 1, "exactly one deduped GFS fill: {snap:?}");
+    assert_eq!(snap.neighbor_transfers, 0, "no live source was left: {snap:?}");
+    assert!(snap.stale_fallbacks >= 2, "both dead sources probed and counted: {snap:?}");
+    assert_eq!(snap.hits + snap.misses, threads as u64, "every reader accounted: {snap:?}");
+    // The cluster healed: group 2 now holds the only live copy and is
+    // the directory's sole source for the archive.
+    assert_eq!(dir.sources(name), vec![2]);
 }
 
 #[test]

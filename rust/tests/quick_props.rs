@@ -2,9 +2,12 @@
 //! quickcheck-style framework (`cio::util::quick`). These are the
 //! "routing, batching, state" invariants DESIGN.md calls out.
 
+use cio::cio::archive::{Compression, Writer};
 use cio::cio::collector::{CollectorStats, FlushReason, Policy};
 use cio::cio::dispatch::Pacer;
-use cio::cio::placement::{Dataset, PlacementPolicy, Tier};
+use cio::cio::local::LocalLayout;
+use cio::cio::local_stage::{archive_group, task_output_name, GroupCache};
+use cio::cio::placement::{group_torus_distance, Dataset, PlacementPolicy, Tier};
 use cio::cio::stage::IfsCache;
 use cio::config::{ClusterConfig, DispatchConfig};
 use cio::sim::cluster::{IoMode, SimCluster};
@@ -153,6 +156,99 @@ fn prop_collector_stats_conserve_files_and_bytes() {
         s.archives == batches.len() as u64
             && s.files == batches.iter().map(|b| b.0).sum::<u64>()
             && s.bytes == batches.iter().map(|b| b.1).sum::<u64>()
+    });
+}
+
+#[test]
+fn prop_archive_and_member_names_round_trip() {
+    // Collector archive names round-trip their producing group through
+    // archive_group for any stage index / group / sequence number, and
+    // task-output member names (even ones embedding "-g<digits>"
+    // lookalikes) never parse as archives.
+    let gen = pair(pair(Gen::u64(0..40), Gen::u64(0..500)), Gen::u64(0..100_000));
+    forall("archive name round trip", 200, gen, |&((stage, group), seq)| {
+        let name = format!("s{stage}-g{group}-{seq:05}.cioar");
+        if archive_group(&name) != Some(group as u32) {
+            return false;
+        }
+        let member = task_output_name(stage as usize, "xform-g7", group as u32);
+        archive_group(&member).is_none()
+    });
+}
+
+#[test]
+fn prop_group_torus_distance_is_a_metric() {
+    // Identity, symmetry, and the per-axis wraparound bound (each axis
+    // contributes at most half its ring).
+    let gen = pair(pair(Gen::u64(0..64), Gen::u64(0..64)), Gen::u64(1..65));
+    forall("torus distance metric", 200, gen, |&((a, b), groups)| {
+        let (a, b, groups) = (a as u32, b as u32, groups as u32);
+        let d = group_torus_distance(a, b, groups);
+        let sym = group_torus_distance(b, a, groups);
+        let zero = group_torus_distance(a, a, groups);
+        zero == 0 && d == sym && (a == b || d >= 1)
+    });
+}
+
+#[test]
+fn prop_retention_directory_agrees_with_caches_and_disk() {
+    // Arbitrary retain / resolve / clear sequences over real files: at
+    // quiescence the directory lists a group for an archive iff that
+    // group's cache accounts it (so a group is never listed for an
+    // archive it evicted), and every accounted archive is a real file in
+    // that group's ifs/<g>/data/.
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let gen = Gen::vec(pair(Gen::u64(0..3), Gen::u64(0..6)), 1..30);
+    forall("retention directory vs disk", 20, gen, |ops: &Vec<(u64, u64)>| {
+        let run = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let root = std::env::temp_dir()
+            .join(format!("cio-propdir-{}-{run}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let layout = LocalLayout::create(&root, 3, 1).unwrap();
+        let names: Vec<String> = (0..4).map(|i| format!("s0-g0-{i:05}.cioar")).collect();
+        for (i, name) in names.iter().enumerate() {
+            let mut w = Writer::create(&layout.gfs().join(name)).unwrap();
+            w.add("m", &vec![i as u8; 4000], Compression::None).unwrap();
+            w.finish().unwrap();
+        }
+        let filler = "s9-g0-00000.cioar".to_string();
+        {
+            let mut w = Writer::create(&layout.gfs().join(&filler)).unwrap();
+            w.add("f", &vec![9u8; 4000], Compression::None).unwrap();
+            w.finish().unwrap();
+        }
+        let arch = std::fs::metadata(layout.gfs().join(&names[0])).unwrap().len();
+        // Fits two archives: retains and fills evict constantly.
+        let caches = GroupCache::per_group_with(&layout, 2 * arch + 32, 2 * arch + 32);
+        for &(g, act) in ops {
+            let g = g as usize;
+            let ok = match act {
+                0..=3 => caches[g]
+                    .open_archive_via(&layout.gfs(), &names[act as usize], &caches)
+                    .is_ok(),
+                4 => caches[g].retain(&layout.gfs().join(&filler), &filler).is_ok(),
+                _ => caches[g].clear_prefix("s0").is_ok(),
+            };
+            if !ok {
+                return false;
+            }
+        }
+        let dir = caches[0].directory();
+        let mut all = names.clone();
+        all.push(filler.clone());
+        for cache in caches.iter() {
+            for name in &all {
+                let listed = dir.sources(name).contains(&cache.group());
+                if listed != cache.contains(name) {
+                    return false;
+                }
+                if listed && !layout.ifs_data(cache.group()).join(name).is_file() {
+                    return false;
+                }
+            }
+        }
+        let _ = std::fs::remove_dir_all(&root);
+        true
     });
 }
 

@@ -12,18 +12,19 @@
 //!   where stage 2 reads its input archives from IFS retention (hit rate
 //!   > 0 via the cache stats) and every byte round-trips.
 
-use cio::cio::archive::{Compression, Reader};
+use cio::cio::archive::{Compression, Reader, Writer};
 use cio::cio::collector::Policy;
 use cio::cio::local::{LocalCollector, LocalLayout};
 use cio::cio::local_stage::{
-    task_output_name, CacheSnapshot, GroupCache, StageExec, StageInput, StageRunner,
-    StageRunnerConfig,
+    archive_group, task_output_name, CacheSnapshot, GroupCache, StageExec, StageInput,
+    StageRunner, StageRunnerConfig,
 };
 use cio::cio::stage::{CacheOutcome, StageGraph};
 use cio::util::units::{kib, mib, SimTime};
 use cio::workload::blast::RecordFormat;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
 fn workspace(tag: &str) -> PathBuf {
@@ -263,6 +264,209 @@ fn cross_group_reads_served_by_neighbor_transfers() {
     let neighbors: u64 = snaps.iter().map(|s| s.neighbor_transfers).sum();
     assert_eq!(neighbors, report.neighbor_transfers());
     assert!(report.hit_rate() > 0.0);
+}
+
+#[test]
+fn routed_alltoall_spreads_load_off_producer() {
+    // The PR-4 acceptance workload: four 1-node groups, stage 1 produces,
+    // stage 2 reads every member from every group. With ample retention
+    // (>= 3 groups end up holding every popular stage-1 archive) the
+    // central store must drop out of the steady state entirely, and the
+    // retention directory must route fills to non-producing replicas —
+    // so every producer serves strictly fewer transfers than under the
+    // PR-3 producer-only policy (where it served all of them).
+    let root = workspace("routed-spread");
+    let nodes = 4u32;
+    let layout = LocalLayout::create(&root, nodes, 1).unwrap(); // 4 groups
+    let graph = StageGraph::chain(&["produce", "gather"]);
+    let config = StageRunnerConfig {
+        policy: Policy {
+            max_delay: SimTime::from_secs(3600),
+            max_data: 1024,
+            min_free_space: 0,
+        },
+        compression: Compression::None,
+        cache_capacity: mib(64),
+        neighbor_limit: mib(64),
+        // Sequential tasks: each fill is published to the directory
+        // before the next resolve routes, so the spread is deterministic.
+        threads: 1,
+    };
+    let mut runner = StageRunner::new(layout, graph, config);
+    let tasks = 8u32;
+    let produce =
+        |t: u32, _in: &StageInput<'_>| -> anyhow::Result<Vec<u8>> { Ok(vec![t as u8; 2048]) };
+    let gather = move |_t: u32, input: &StageInput<'_>| -> anyhow::Result<Vec<u8>> {
+        for t in 0..tasks {
+            let (bytes, _) = input.read_member(&task_output_name(0, "produce", t))?;
+            anyhow::ensure!(bytes == vec![t as u8; 2048], "task {t} corrupt");
+        }
+        Ok(vec![1])
+    };
+    let report = runner
+        .run(&[StageExec { tasks, run: &produce }, StageExec { tasks, run: &gather }])
+        .unwrap();
+    let s = &report.stages[1];
+    assert_eq!(s.gfs_misses, 0, "no read may round-trip through GFS: {s:?}");
+    assert!(s.neighbor_transfers > 0, "{s:?}");
+    assert!(
+        s.routed_transfers > 0,
+        "the directory must route some fills off the producers: {s:?}"
+    );
+    assert_eq!(s.producer_transfers + s.routed_transfers, s.neighbor_transfers, "{s:?}");
+    assert!(
+        s.producer_transfers < s.neighbor_transfers,
+        "producers must serve strictly fewer transfers than the producer-only policy: {s:?}"
+    );
+    assert_eq!(report.routed_transfers(), s.routed_transfers);
+
+    // Every stage-1 archive is popular: at least 3 groups retain it.
+    let dir = runner.directory();
+    for name in &report.stages[0].archives {
+        let sources = dir.sources(name);
+        assert!(sources.len() >= 3, "popular archive {name} retained by {sources:?} only");
+    }
+    // Per-archive serve counters agree with the stage totals, the summed
+    // producer share is strictly below the producer-only policy, and at
+    // least one archive was served by two distinct sources (spread).
+    let mut producer_served = 0u64;
+    let mut total_fills = 0u64;
+    let mut spread_archives = 0u32;
+    for name in &report.stages[0].archives {
+        let producer = archive_group(name).unwrap();
+        producer_served += dir.serves(name, producer);
+        total_fills += dir.archive_fills(name);
+        let serving = (0..nodes).filter(|&g| dir.serves(name, g) > 0).count();
+        if serving >= 2 {
+            spread_archives += 1;
+        }
+    }
+    assert_eq!(total_fills, s.neighbor_transfers);
+    assert!(
+        producer_served < total_fills,
+        "producers served {producer_served} of {total_fills} cross-group fills"
+    );
+    assert!(spread_archives >= 1, "no archive was served from two distinct sources");
+}
+
+#[test]
+fn eviction_churn_keeps_reads_byte_exact_and_directory_consistent() {
+    // N reader threads across 3 groups race a background evictor that
+    // keeps churning every group's retention with filler retains. Every
+    // read must return byte-exact data regardless of which tier serves
+    // it; a stale directory entry may only ever cost a fallback (counted)
+    // — never a wrong read, an error, or a wedged fill latch — and at
+    // quiescence the directory must agree with both the cache accounting
+    // and the files on disk.
+    let root = workspace("churn");
+    let layout = LocalLayout::create(&root, 3, 1).unwrap(); // 3 groups
+    let gfs = layout.gfs();
+    fn payload(i: usize) -> Vec<u8> {
+        (0..20_000usize).map(|j| (i as u8) ^ (j as u8)).collect()
+    }
+    let popular: Vec<String> = (0..4usize)
+        .map(|i| {
+            let name = format!("s0-g0-{i:05}.cioar");
+            let mut w = Writer::create(&gfs.join(&name)).unwrap();
+            w.add("m", &payload(i), Compression::None).unwrap();
+            w.finish().unwrap();
+            name
+        })
+        .collect();
+    let fillers: Vec<String> = (0..3u32)
+        .map(|g| {
+            let name = format!("s9-g{g}-00000.cioar");
+            let mut w = Writer::create(&gfs.join(&name)).unwrap();
+            w.add("f", &vec![0x55u8; 20_000], Compression::None).unwrap();
+            w.finish().unwrap();
+            name
+        })
+        .collect();
+    let arch_size = std::fs::metadata(gfs.join(&popular[0])).unwrap().len();
+    // Room for ~2 archives per group: every fill or retain evicts.
+    let caches = GroupCache::per_group_with(&layout, 2 * arch_size + 64, 2 * arch_size + 64);
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let evictor = {
+            let caches = &caches;
+            let gfs = &gfs;
+            let fillers = &fillers;
+            let stop = &stop;
+            scope.spawn(move || {
+                let mut round = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let g = round % 3;
+                    caches[g].retain(&gfs.join(&fillers[g]), &fillers[g]).unwrap();
+                    round += 1;
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let readers: Vec<_> = (0..6u32)
+            .map(|t| {
+                let caches = &caches;
+                let gfs = &gfs;
+                let popular = &popular;
+                scope.spawn(move || {
+                    for i in 0..40u32 {
+                        let g = ((t + i) % 3) as usize;
+                        let idx = ((t + i) % 4) as usize;
+                        let name = &popular[idx];
+                        let (r, _outcome) =
+                            caches[g].open_archive_via(gfs, name, caches).unwrap();
+                        let got = r.extract("m").unwrap();
+                        assert_eq!(got, payload(idx), "reader {t} iter {i}: wrong bytes");
+                    }
+                })
+            })
+            .collect();
+        for h in readers {
+            h.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        evictor.join().unwrap();
+    });
+
+    // Quiescent agreement: listed in the directory <=> accounted by the
+    // cache, and accounted => a real file on disk. In particular a group
+    // is never listed as a source for an archive it evicted.
+    let dir = caches[0].directory();
+    for cache in caches.iter() {
+        for name in popular.iter().chain(fillers.iter()) {
+            let listed = dir.sources(name).contains(&cache.group());
+            assert_eq!(
+                listed,
+                cache.contains(name),
+                "directory vs accounting for {name} in group {}",
+                cache.group()
+            );
+            if listed {
+                assert!(
+                    layout.ifs_data(cache.group()).join(name).is_file(),
+                    "listed retention of {name} in group {} has no file",
+                    cache.group()
+                );
+            }
+        }
+    }
+    // Every miss was resolved by exactly one data movement or by joining
+    // one; stale entries cost fallbacks, never unaccounted fills.
+    for cache in caches.iter() {
+        let snap = cache.snapshot();
+        assert!(
+            snap.misses >= snap.neighbor_transfers + snap.gfs_copies,
+            "fills exceed misses in group {}: {snap:?}",
+            cache.group()
+        );
+    }
+    // No fill latch is wedged: a fresh resolve of every popular archive
+    // still succeeds in every group, byte-exact.
+    for cache in caches.iter() {
+        for (i, name) in popular.iter().enumerate() {
+            let (r, _) = cache.open_archive_via(&gfs, name, &caches).unwrap();
+            assert_eq!(r.extract("m").unwrap(), payload(i), "post-churn read of {name}");
+        }
+    }
 }
 
 #[test]
