@@ -21,7 +21,7 @@ use cio::cio::local_stage::{
 };
 use cio::cio::stage::StageGraph;
 use cio::runtime::{score_member_bytes, ArtifactMeta};
-use cio::util::units::{mib, SimTime};
+use cio::util::units::{kib, mib, SimTime};
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
@@ -40,6 +40,7 @@ fn main() -> anyhow::Result<()> {
         compression: Compression::Deflate,
         cache_capacity: mib(64),
         neighbor_limit: mib(64),
+        fill_chunk_bytes: kib(64),
         threads: 8,
     };
     let mut runner = StageRunner::new(layout, graph, config);

@@ -22,7 +22,7 @@ use cio::cio::local_stage::{
 use cio::cio::stage::StageGraph;
 use cio::config::ClusterConfig;
 use cio::sim::cluster::IoMode;
-use cio::util::units::{mib, SimTime};
+use cio::util::units::{kib, mib, SimTime};
 use cio::workload::dock::{run_comparison, DockWorkflow};
 
 /// Real-bytes routed read-mix sweep: with many small IFS groups most
@@ -39,8 +39,8 @@ fn read_mix_sweep() {
     let tasks = 16u32;
     println!("--- stage-2 read-tier mix vs cn_per_ifs (real bytes, {nodes} nodes) ---");
     println!(
-        "{:>10} {:>6} {:>8} {:>7} {:>9} {:>8} {:>6}",
-        "cn_per_ifs", "groups", "ifs_hit", "routed", "producer", "gfs", "hit%"
+        "{:>10} {:>6} {:>8} {:>7} {:>9} {:>8} {:>9} {:>6}",
+        "cn_per_ifs", "groups", "ifs_hit", "routed", "producer", "gfs", "fallback", "hit%"
     );
     for cn in [1u32, 2, 4, 8] {
         let root =
@@ -57,6 +57,7 @@ fn read_mix_sweep() {
             compression: Compression::None,
             cache_capacity: mib(64),
             neighbor_limit: mib(64),
+            fill_chunk_bytes: kib(64),
             threads: 4,
         };
         let mut runner = StageRunner::new(layout, graph, config);
@@ -79,13 +80,16 @@ fn read_mix_sweep() {
         let s = &report.stages[1];
         let total = (s.ifs_hits + s.neighbor_transfers + s.gfs_misses).max(1);
         println!(
-            "{:>10} {:>6} {:>8} {:>7} {:>9} {:>8} {:>5.0}%",
+            "{:>10} {:>6} {:>8} {:>7} {:>9} {:>8} {:>9} {:>5.0}%",
             cn,
             runner.layout().ifs_groups(),
             s.ifs_hits,
             s.routed_transfers,
             s.producer_transfers,
             s.gfs_misses,
+            // The previously invisible eviction-race GFS retries: real
+            // central-store traffic the tier counters cannot see.
+            s.fallback_reads,
             100.0 * s.ifs_hits as f64 / total as f64
         );
         drop(runner);

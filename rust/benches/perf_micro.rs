@@ -25,7 +25,7 @@ use cio::sim::flow::{FlowNet, HasFlowNet};
 use cio::util::bench::{black_box, Bencher};
 use cio::util::rng::Rng;
 use cio::util::stats::Summary;
-use cio::util::units::{mib, SimTime};
+use cio::util::units::{kib, mib, SimTime};
 use std::path::PathBuf;
 use std::time::Instant;
 
@@ -324,7 +324,7 @@ fn main() {
     // 5 reps (min taken) because the CI gate compares the routed and
     // producer neighbor tiers at near-parity; more samples shrink the
     // cross-case jitter of few-millisecond wall times.
-    let tier_reps = 5;
+    let tier_reps = 5usize;
     // IFS hit: the producer reads its own warm retention.
     let mut tier_hit = f64::INFINITY;
     for _ in 0..tier_reps {
@@ -417,6 +417,113 @@ fn main() {
     b.metric("stage2_record_routed_neighbor throughput", reads / tier_routed, "reads/s");
     let _ = std::fs::remove_dir_all(&r3root);
 
+    // --- Chunked partial fill (the PR-5 tentpole): cold-archive FIRST-
+    // RECORD latency. The full-fill baseline resolves the cold archive
+    // through the classic whole-archive copy and then range-reads one
+    // record; the partial case fetches the index extent plus just the
+    // chunks covering the record, so the first byte arrives after
+    // O(record + index) moved bytes instead of O(archive).
+    let proot = dir.join("stage2-partial");
+    let _ = std::fs::remove_dir_all(&proot);
+    let playout = LocalLayout::create(&proot, 1, 1).unwrap();
+    let p_arch_bytes = if fast { mib(2) } else { mib(8) } as usize;
+    let p_chunk = kib(64);
+    let p_name = "s1-g0-00000.cioar";
+    {
+        let mut w = Writer::create(&playout.gfs().join(p_name)).unwrap();
+        let mut data = vec![0u8; p_arch_bytes];
+        for (j, byte) in data.iter_mut().enumerate() {
+            *byte = (j * 13) as u8;
+        }
+        w.add("records.bin", &data, Compression::None).unwrap();
+        w.finish().unwrap();
+    }
+    let p_records = p_arch_bytes / record_bytes;
+    let fresh_group = |playout: &LocalLayout| {
+        let _ = std::fs::remove_dir_all(playout.ifs_data(0));
+        std::fs::create_dir_all(playout.ifs_data(0)).unwrap();
+    };
+    let mut full_cold = f64::INFINITY;
+    for r in 0..tier_reps {
+        fresh_group(&playout);
+        let cold = GroupCache::new(&playout, 0, mib(1024));
+        let off = ((r * 2711) % p_records * record_bytes) as u64;
+        let t0 = Instant::now();
+        let (reader, outcome) = cold.open_archive(&playout.gfs(), p_name).unwrap();
+        assert_eq!(outcome, CacheOutcome::GfsMiss);
+        let rec = reader.extract_range("records.bin", off, record_bytes).unwrap();
+        assert_eq!(rec.len(), record_bytes);
+        black_box(rec.len());
+        full_cold = full_cold.min(t0.elapsed().as_secs_f64());
+    }
+    let mut partial_cold = f64::INFINITY;
+    let mut partial_moved = u64::MAX;
+    for r in 0..tier_reps {
+        fresh_group(&playout);
+        let cold = GroupCache::new(&playout, 0, mib(1024)).with_fill_chunk(p_chunk);
+        let off = ((r * 2711) % p_records * record_bytes) as u64;
+        let t0 = Instant::now();
+        let (rec, outcome) = cold
+            .read_member_range_via(&playout.gfs(), p_name, &[], "records.bin", off, record_bytes)
+            .unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(outcome, CacheOutcome::GfsMiss);
+        assert_eq!(rec.len(), record_bytes);
+        black_box(rec.len());
+        let snap = cold.snapshot();
+        assert_eq!(snap.gfs_copies, 0, "a partial read must not trigger a whole fill: {snap:?}");
+        assert!(
+            snap.partial_bytes > 0 && snap.partial_bytes < p_arch_bytes as u64,
+            "partial residency must be a strict subset of the archive: {snap:?}"
+        );
+        partial_cold = partial_cold.min(dt);
+        partial_moved = partial_moved.min(snap.partial_bytes);
+    }
+    b.metric("stage2_record_full_cold latency", full_cold * 1e3, "ms");
+    b.metric("stage2_record_partial_cold latency", partial_cold * 1e3, "ms");
+    b.metric("stage2: partial cold first-record speedup", full_cold / partial_cold, "x");
+    b.metric(
+        "stage2: partial fill byte volume reduction",
+        p_arch_bytes as f64 / partial_moved as f64,
+        "x",
+    );
+    // Two concurrent readers of disjoint records on ONE cold archive:
+    // no whole-archive fill ever happens and chunk singleflight keeps
+    // every chunk to one move — the acceptance probe for "record reads
+    // do not serialize on a whole-archive latch".
+    {
+        fresh_group(&playout);
+        let cold = GroupCache::new(&playout, 0, mib(1024)).with_fill_chunk(p_chunk);
+        let barrier = std::sync::Barrier::new(2);
+        std::thread::scope(|scope| {
+            for t in 0..2usize {
+                let cold = &cold;
+                let playout = &playout;
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    barrier.wait();
+                    let off = (t * (p_records / 2) * record_bytes) as u64;
+                    let (rec, _) = cold
+                        .read_member_range_via(
+                            &playout.gfs(),
+                            p_name,
+                            &[],
+                            "records.bin",
+                            off,
+                            record_bytes,
+                        )
+                        .unwrap();
+                    assert_eq!(rec.len(), record_bytes);
+                });
+            }
+        });
+        let snap = cold.snapshot();
+        assert_eq!(snap.gfs_copies, 0, "disjoint records must not serialize: {snap:?}");
+        assert!(snap.chunk_fills >= 2, "{snap:?}");
+        b.metric("stage2_partial_concurrent chunk fills", snap.chunk_fills as f64, "chunks");
+    }
+    let _ = std::fs::remove_dir_all(&proot);
+
     // --- Routed all-to-all spread (the PR-4 acceptance workload): four
     // 1-node groups; stage 1 produces, stage 2 reads every member from
     // every group. With ample retention the central store must drop out
@@ -438,6 +545,7 @@ fn main() {
         neighbor_limit: mib(64),
         // Sequential tasks: each fill lands (and is published) before the
         // next resolve routes, so the spread is deterministic.
+        fill_chunk_bytes: kib(64),
         threads: 1,
     };
     let mut sp_runner = StageRunner::new(splayout, sp_graph, sp_config);

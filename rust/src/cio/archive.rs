@@ -114,6 +114,21 @@ fn member_header_len(name_len: usize) -> u64 {
     4 + 2 + name_len as u64 + 1 + 8 + 8 + 4
 }
 
+impl Entry {
+    /// Archive-file offset of the member's first *data* byte (the stored
+    /// bytes start right after the member header).
+    pub fn data_offset(&self) -> u64 {
+        self.offset + member_header_len(self.name.len())
+    }
+
+    /// Archive-file offset one past the member's last stored byte. With
+    /// [`Entry::offset`] this bounds the byte extent a partial fill must
+    /// materialize to read the member (header included).
+    pub fn stored_end(&self) -> u64 {
+        self.data_offset() + self.stored_len
+    }
+}
+
 /// A compressed member produced by a pipeline worker, ready to append.
 struct Blob {
     name: String,
@@ -510,58 +525,42 @@ impl Reader {
     /// that every entry's extent lies inside the member region (a corrupt
     /// index cannot direct reads past EOF or demand absurd allocations).
     pub fn open(path: &Path) -> Result<Reader> {
+        Self::open_indexed_range(path, &mut |_, _| Ok(()))
+    }
+
+    /// [`Reader::open`] over a **partially-resident** file: before every
+    /// read of a byte range, `materialize(offset, len)` is called so the
+    /// caller (the partial-fill engine) can fetch the covering chunks
+    /// first. The trailer and index live at the archive tail, so
+    /// mounting an index costs exactly two materialized extents — the
+    /// 16-byte trailer, then `[index_offset, len - 16)` — and the rest of
+    /// the archive can stay absent. On a fully-resident file the no-op
+    /// callback makes this identical to [`Reader::open`].
+    pub fn open_indexed_range(
+        path: &Path,
+        materialize: &mut dyn FnMut(u64, u64) -> Result<()>,
+    ) -> Result<Reader> {
         let mut f = std::fs::File::open(path)
             .with_context(|| format!("opening archive {}", path.display()))?;
         let len = f.metadata()?.len();
         ensure!(len >= 16, "archive too short ({len} bytes)");
+        materialize(len - 16, 16).context("materializing the archive trailer")?;
         f.seek(SeekFrom::End(-16))?;
         let mut trailer = [0u8; 16];
         f.read_exact(&mut trailer)?;
         let index_offset = u64::from_le_bytes(trailer[0..8].try_into().unwrap());
         let magic = u32::from_le_bytes(trailer[12..16].try_into().unwrap());
         ensure!(magic == MAGIC_TRAILER, "bad trailer magic {magic:#x}");
-        ensure!(index_offset < len, "index offset {index_offset} beyond EOF {len}");
+        // The index region must fit between the members and the trailer
+        // (`<=` rather than `< len`: an offset inside the trailer would
+        // underflow the region length below).
+        ensure!(index_offset <= len - 16, "index offset {index_offset} beyond EOF {len}");
+        materialize(index_offset, len - 16 - index_offset)
+            .context("materializing the archive index")?;
         f.seek(SeekFrom::Start(index_offset))?;
         let mut index_bytes = vec![0u8; (len - 16 - index_offset) as usize];
         f.read_exact(&mut index_bytes)?;
-        let mut cur = &index_bytes[..];
-        let magic = read_u32(&mut cur)?;
-        ensure!(magic == MAGIC_INDEX, "bad index magic {magic:#x}");
-        let count = read_u32(&mut cur)? as usize;
-        let mut entries = Vec::with_capacity(count.min(PREALLOC_CAP / 64));
-        let mut by_name = BTreeMap::new();
-        for i in 0..count {
-            let name_len = read_u16(&mut cur)? as usize;
-            ensure!(cur.len() >= name_len, "truncated index entry {i}");
-            let name = std::str::from_utf8(&cur[..name_len])
-                .context("non-utf8 member name")?
-                .to_string();
-            cur = &cur[name_len..];
-            let offset = read_u64(&mut cur)?;
-            let raw_len = read_u64(&mut cur)?;
-            let stored_len = read_u64(&mut cur)?;
-            let crc32 = read_u32(&mut cur)?;
-            let flags = read_u8(&mut cur)?;
-            // Validate the extent against the member region
-            // [0, index_offset) before trusting it.
-            let end = offset
-                .checked_add(member_header_len(name_len))
-                .and_then(|v| v.checked_add(stored_len))
-                .with_context(|| format!("member {name:?}: extent overflows"))?;
-            ensure!(
-                end <= index_offset,
-                "member {name:?} extends beyond the member region (corrupt index)"
-            );
-            by_name.insert(name.clone(), i);
-            entries.push(Entry {
-                name,
-                offset,
-                raw_len,
-                stored_len,
-                crc32,
-                compression: Compression::from_flag(flags)?,
-            });
-        }
+        let (entries, by_name) = parse_index(&index_bytes, index_offset)?;
         Ok(Reader { path: path.to_path_buf(), entries, by_name })
     }
 
@@ -721,6 +720,53 @@ impl Reader {
         }
         Ok(())
     }
+}
+
+/// Parse the index region bytes (everything in `[index_offset, EOF-16)`)
+/// into the entry table, validating every extent against the member
+/// region `[0, index_offset)` before trusting it — shared by
+/// [`Reader::open`] and [`Reader::open_indexed_range`].
+fn parse_index(
+    index_bytes: &[u8],
+    index_offset: u64,
+) -> Result<(Vec<Entry>, BTreeMap<String, usize>)> {
+    let mut cur = index_bytes;
+    let magic = read_u32(&mut cur)?;
+    ensure!(magic == MAGIC_INDEX, "bad index magic {magic:#x}");
+    let count = read_u32(&mut cur)? as usize;
+    let mut entries = Vec::with_capacity(count.min(PREALLOC_CAP / 64));
+    let mut by_name = BTreeMap::new();
+    for i in 0..count {
+        let name_len = read_u16(&mut cur)? as usize;
+        ensure!(cur.len() >= name_len, "truncated index entry {i}");
+        let name = std::str::from_utf8(&cur[..name_len])
+            .context("non-utf8 member name")?
+            .to_string();
+        cur = &cur[name_len..];
+        let offset = read_u64(&mut cur)?;
+        let raw_len = read_u64(&mut cur)?;
+        let stored_len = read_u64(&mut cur)?;
+        let crc32 = read_u32(&mut cur)?;
+        let flags = read_u8(&mut cur)?;
+        let end = offset
+            .checked_add(member_header_len(name_len))
+            .and_then(|v| v.checked_add(stored_len))
+            .with_context(|| format!("member {name:?}: extent overflows"))?;
+        ensure!(
+            end <= index_offset,
+            "member {name:?} extends beyond the member region (corrupt index)"
+        );
+        by_name.insert(name.clone(), i);
+        entries.push(Entry {
+            name,
+            offset,
+            raw_len,
+            stored_len,
+            crc32,
+            compression: Compression::from_flag(flags)?,
+        });
+    }
+    Ok((entries, by_name))
 }
 
 /// Tar-like sequential scan: read members in order without the index
@@ -930,6 +976,65 @@ mod tests {
         }
         assert_eq!(r.extract_range("tiny", 1, 10).unwrap(), b"b");
         assert!(r.extract_range("ghost", 0, 1).is_err());
+    }
+
+    #[test]
+    fn open_indexed_range_mounts_index_over_partial_file() {
+        use crate::cio::local::{create_sparse, read_range, write_range_at};
+        let dir = tmpdir("partial");
+        let full = dir.join("full.cioar");
+        let data: Vec<u8> = (0..50_000u32).map(|i| (i % 251) as u8).collect();
+        let mut w = Writer::create(&full).unwrap();
+        w.add("a", &data, Compression::None).unwrap();
+        w.add("b", &data, Compression::None).unwrap();
+        w.finish().unwrap();
+        let len = std::fs::metadata(&full).unwrap().len();
+
+        // A sparse twin holding no bytes yet; the callback copies each
+        // requested extent over from the full archive — exactly what the
+        // partial-fill engine does with chunks.
+        let sparse = dir.join("sparse.cioar");
+        create_sparse(&sparse, len).unwrap();
+        let mut asked: Vec<(u64, u64)> = Vec::new();
+        let r = Reader::open_indexed_range(&sparse, &mut |off, n| {
+            asked.push((off, n));
+            let bytes = read_range(&full, off, n as usize)?;
+            write_range_at(&sparse, off, &bytes)
+        })
+        .unwrap();
+        // Exactly two extents were materialized: the 16-byte trailer,
+        // then the index region — no member bytes.
+        assert_eq!(asked.len(), 2, "{asked:?}");
+        assert_eq!(asked[0], (len - 16, 16));
+        assert_eq!(asked[1].0 + asked[1].1, len - 16, "index region ends at the trailer");
+        let members_end: u64 = r.entries().iter().map(|e| e.stored_end()).max().unwrap();
+        assert_eq!(asked[1].0, members_end, "index region starts after the members");
+
+        // Materialize just member b's extent and read records out of it;
+        // member a's bytes never move.
+        let e = r.entry("b").unwrap().clone();
+        let span = read_range(&full, e.offset, (e.stored_end() - e.offset) as usize).unwrap();
+        write_range_at(&sparse, e.offset, &span).unwrap();
+        assert_eq!(r.extract_range("b", 100, 64).unwrap(), data[100..164]);
+        assert_eq!(r.extract("b").unwrap(), data, "full member extract CRC-checks");
+        let a = r.entry("a").unwrap();
+        let hole = read_range(&sparse, a.data_offset(), 64).unwrap();
+        assert_eq!(hole, vec![0u8; 64], "member a stays a hole in the sparse file");
+    }
+
+    #[test]
+    fn entry_extent_helpers_bound_the_member_bytes() {
+        let dir = tmpdir("extent-helpers");
+        let path = dir.join("x.cioar");
+        let mut w = Writer::create(&path).unwrap();
+        w.add("m0", &vec![1u8; 100], Compression::None).unwrap();
+        w.add("m1", &vec![2u8; 100], Compression::None).unwrap();
+        w.finish().unwrap();
+        let r = Reader::open(&path).unwrap();
+        let (e0, e1) = (&r.entries()[0], &r.entries()[1]);
+        assert_eq!(e0.data_offset() - e0.offset, e1.data_offset() - e1.offset);
+        assert_eq!(e0.stored_end(), e1.offset, "members are packed back to back");
+        assert_eq!(e0.stored_end() - e0.data_offset(), e0.stored_len);
     }
 
     #[test]

@@ -42,6 +42,9 @@ struct DirInner {
     serves: BTreeMap<(String, u32), u64>,
     /// source group → total neighbor fills served (route tie-breaker).
     group_serves: BTreeMap<u32, u64>,
+    /// source group → transfers being served *right now* (the queue
+    /// depth the load-aware route cost charges).
+    inflight: BTreeMap<u32, u64>,
     /// Entries withdrawn because a pull found the retention gone.
     stale_withdrawals: u64,
 }
@@ -134,11 +137,16 @@ impl RetentionDirectory {
     }
 
     /// The fill resolve order for `reader`: every listed source of
-    /// `archive` except `reader` itself, cheapest first — ascending torus
-    /// hop distance, ties broken toward the source that has served the
-    /// fewest fills (spread), then by group index (determinism). The
-    /// caller probes candidates in order and falls back producer → GFS
-    /// when all of them turn out stale.
+    /// `archive` except `reader` itself, cheapest first by the
+    /// **load-aware cost** `hops × (1 + inflight_serves)` — a
+    /// near-but-busy replica ranks below a slightly-farther idle one, so
+    /// concurrent fills of a popular archive stop piling onto the
+    /// nearest source. Ties break toward the source that has served the
+    /// fewest fills historically (spread), then by group index
+    /// (determinism). With nothing in flight the cost degenerates to
+    /// plain hop distance — the PR-4 ranking. The caller probes
+    /// candidates in order and falls back producer → GFS when all of
+    /// them turn out stale.
     pub fn route(&self, archive: &str, reader: u32) -> Vec<u32> {
         let inner = self.inner.lock().unwrap();
         let Some(set) = inner.sources.get(archive) else {
@@ -146,13 +154,39 @@ impl RetentionDirectory {
         };
         let mut out: Vec<u32> = set.iter().copied().filter(|&g| g != reader).collect();
         out.sort_by_key(|&g| {
+            let hops = group_torus_distance(reader, g, self.groups) as u64;
+            let inflight = inner.inflight.get(&g).copied().unwrap_or(0);
             (
-                group_torus_distance(reader, g, self.groups),
+                hops.saturating_mul(1 + inflight),
                 inner.group_serves.get(&g).copied().unwrap_or(0),
                 g,
             )
         });
         out
+    }
+
+    /// Record that `group` started serving a transfer (fills the
+    /// load-aware route cost charges). Pair with
+    /// [`RetentionDirectory::end_serve`].
+    pub fn begin_serve(&self, group: u32) {
+        let mut inner = self.inner.lock().unwrap();
+        *inner.inflight.entry(group).or_insert(0) += 1;
+    }
+
+    /// Record that `group` finished serving a transfer.
+    pub fn end_serve(&self, group: u32) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(n) = inner.inflight.get_mut(&group) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                inner.inflight.remove(&group);
+            }
+        }
+    }
+
+    /// Transfers `group` is serving right now.
+    pub fn inflight_serves(&self, group: u32) -> u64 {
+        self.inner.lock().unwrap().inflight.get(&group).copied().unwrap_or(0)
     }
 
     /// Count one neighbor fill of `archive` served by `source`.
@@ -229,6 +263,41 @@ mod tests {
         assert!(!d.route("a.cioar", 0).contains(&0));
         // Unknown archives route nowhere.
         assert!(d.route("nope.cioar", 0).is_empty());
+    }
+
+    #[test]
+    fn route_cost_is_load_aware() {
+        // 4 groups on a [2,2,1] torus: from group 0, groups 1 and 2 are
+        // equidistant (1 hop), group 3 is 2 hops.
+        let d = RetentionDirectory::new(4);
+        for g in [1, 2, 3] {
+            d.publish("a.cioar", g);
+        }
+        // Skewed in-flight load on the equidistant pair: the idle one
+        // must rank first — fills split instead of piling onto group 1.
+        d.begin_serve(1);
+        assert_eq!(d.inflight_serves(1), 1);
+        assert_eq!(d.route("a.cioar", 0), vec![2, 1, 3], "busy equidistant source demoted");
+        // hops x (1 + inflight): a near source with 2 transfers in
+        // flight (cost 3) ranks below the 2-hop idle source (cost 2).
+        d.begin_serve(1);
+        d.begin_serve(2);
+        d.begin_serve(2);
+        assert_eq!(
+            d.route("a.cioar", 0),
+            vec![3, 1, 2],
+            "near-but-busy replicas rank below the farther idle one"
+        );
+        // Draining the transfers restores the plain distance order.
+        for _ in 0..2 {
+            d.end_serve(1);
+            d.end_serve(2);
+        }
+        assert_eq!(d.inflight_serves(1), 0);
+        assert_eq!(d.route("a.cioar", 0), vec![1, 2, 3]);
+        // end_serve never underflows.
+        d.end_serve(1);
+        assert_eq!(d.inflight_serves(1), 0);
     }
 
     #[test]

@@ -317,6 +317,85 @@ pub fn estimate_routed_read(
     }
 }
 
+/// First-byte model of the §5.3 **chunked partial fill**
+/// ([`crate::cio::extent`]): what a cold record read pays when the fill
+/// engine moves only the chunks covering the index and the record,
+/// versus waiting behind the whole-archive transfer.
+///
+/// Every chunk costs one request (the per-chunk overhead is what bounds
+/// how small [`crate::cio::placement::PlacementPolicy::fill_chunk_bytes`]
+/// should go) plus its bytes over the fill path's bandwidth; the
+/// whole-archive baseline pays one setup plus the full archive over the
+/// same path. The byte-volume ratio is the CI-gated "downstream read
+/// volume tracks record size, not archive size" claim.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartialReadModel {
+    /// The whole-archive per-read tiers this extends.
+    pub base: RetentionReadModel,
+    /// Seconds until a cold record read returns under the chunked
+    /// partial fill: `(index_chunks + record_chunks) × chunk_time` plus
+    /// the local read.
+    pub partial_first_byte_s: f64,
+    /// Seconds until the same read returns when it must wait behind the
+    /// whole-archive fill (the pre-PR-5 latch).
+    pub full_first_byte_s: f64,
+    /// Bytes a partial fill moves for this read (covering chunks only).
+    pub partial_bytes_moved: u64,
+    /// Bytes the whole-archive fill moves.
+    pub full_bytes_moved: u64,
+}
+
+impl PartialReadModel {
+    /// `full_bytes_moved / partial_bytes_moved` — the byte-volume
+    /// reduction the partial fill buys this read (≥ 1 whenever the
+    /// record + index cover less than the archive).
+    pub fn byte_volume_reduction(&self) -> f64 {
+        self.full_bytes_moved as f64 / self.partial_bytes_moved.max(1) as f64
+    }
+}
+
+/// Estimate a cold record read of `record_bytes` (plus an
+/// `index_bytes` tail extent, fetched once per archive) out of an
+/// `archive_bytes` archive chunked at `chunk_bytes`, with the fill
+/// crossing `hops` torus links from the serving source (0 = the fill
+/// reads GFS; the bandwidth then follows the GFS tier, like
+/// [`estimate_retention_read`]'s miss).
+pub fn estimate_partial_read(
+    cfg: &ClusterConfig,
+    archive_bytes: u64,
+    record_bytes: u64,
+    index_bytes: u64,
+    chunk_bytes: u64,
+    hops: u32,
+) -> PartialReadModel {
+    assert!(chunk_bytes > 0, "chunk size must be positive");
+    let base = estimate_retention_read(cfg, archive_bytes, record_bytes);
+    let (fill_bw, setup_s) = if hops == 0 {
+        (cfg.gfs.per_client_bw, cfg.net.chirp_request_overhead_s)
+    } else {
+        (cfg.net.tree_copy_bw, hops as f64 * cfg.net.tree_copy_setup_s)
+    };
+    let cover = |bytes: u64| -> u64 { bytes.div_ceil(chunk_bytes) };
+    // The trailer is always read, so the index tier covers >= 1 chunk.
+    let index_chunks = cover(index_bytes.max(1));
+    let record_chunks = cover(record_bytes);
+    let chunks_needed = index_chunks + record_chunks;
+    let partial_bytes_moved = (chunks_needed * chunk_bytes).min(archive_bytes);
+    let chunk_time = |chunks: u64, bytes: u64| -> f64 {
+        chunks as f64 * setup_s + bytes as f64 / fill_bw
+    };
+    // chunks_needed × chunk_time vs one setup + the whole archive.
+    let partial_first_byte_s = chunk_time(chunks_needed, partial_bytes_moved) + base.hit_s;
+    let full_first_byte_s = chunk_time(1, archive_bytes) + base.hit_s;
+    PartialReadModel {
+        base,
+        partial_first_byte_s,
+        full_first_byte_s,
+        partial_bytes_moved,
+        full_bytes_moved: archive_bytes,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -490,6 +569,34 @@ mod tests {
             + 2.0 * m.producer_neighbor_s
             + 1.0 * m.base.gfs_miss_s;
         assert!((t - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_read_first_byte_beats_full_fill_for_small_records() {
+        let cfg = ClusterConfig::bgp(4096);
+        // A 4 KiB record out of a 100 MiB archive, 256 KiB chunks,
+        // filled over one torus hop: first byte must arrive far sooner
+        // than behind the whole-archive transfer, moving ~2 chunks
+        // instead of 100 MiB.
+        let m = estimate_partial_read(&cfg, mib(100), kib(4), kib(16), kib(256), 1);
+        assert!(
+            m.partial_first_byte_s < m.full_first_byte_s,
+            "partial fill must cut cold first-record latency: {m:?}"
+        );
+        assert!(m.byte_volume_reduction() >= 4.0, "{m:?}");
+        assert!(m.partial_bytes_moved <= 2 * kib(256), "index chunk + record chunk");
+        // The GFS-sourced fill (0 hops) obeys the same shape.
+        let gfs = estimate_partial_read(&cfg, mib(100), kib(4), kib(16), kib(256), 0);
+        assert!(gfs.partial_first_byte_s < gfs.full_first_byte_s);
+        // Reading the whole archive record-wise cannot beat one
+        // transfer: per-chunk request overhead dominates.
+        let whole = estimate_partial_read(&cfg, mib(100), mib(100), kib(16), kib(256), 1);
+        assert!(whole.partial_first_byte_s > whole.full_first_byte_s);
+        assert!(whole.byte_volume_reduction() <= 1.0 + 1e-9);
+        // Chunk size is a real trade-off: tiny chunks pay overhead.
+        let tiny = estimate_partial_read(&cfg, mib(100), mib(1), kib(16), kib(4), 1);
+        let fat = estimate_partial_read(&cfg, mib(100), mib(1), kib(16), mib(1), 1);
+        assert!(tiny.partial_first_byte_s > fat.partial_first_byte_s, "{tiny:?} vs {fat:?}");
     }
 
     #[test]

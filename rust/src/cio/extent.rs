@@ -1,0 +1,388 @@
+//! Extent-granular partial fills: the chunk map behind record reads that
+//! start before the whole archive lands.
+//!
+//! PR 3/4 resolve a cold archive with an all-or-nothing fill: every
+//! reader of the archive — even a 4 KiB [`record
+//! read`](crate::cio::local_stage::StageInput::read_member_range) — waits
+//! behind one whole-archive transfer latch. This module over-decomposes
+//! the fill the way a page cache over-decomposes file IO: the archive is
+//! divided into fixed-size **chunks**
+//! ([`PlacementPolicy::fill_chunk_bytes`](crate::cio::placement::PlacementPolicy::fill_chunk_bytes)),
+//! an [`ExtentMap`] tracks which chunks are resident in a sparse staging
+//! file, and a reader fetches (or waits for) exactly the chunks covering
+//! the bytes it needs — so concurrent readers of disjoint records on the
+//! same cold archive proceed in parallel, and the downstream read volume
+//! tracks the *record* size, not the archive size.
+//!
+//! Concurrency shape, mirroring the whole-archive `Fill` latch one level
+//! down:
+//!
+//! * the bitmap and the in-flight table live under one short-held mutex —
+//!   no IO ever runs under it;
+//! * [`ExtentMap::plan`] partitions the chunks covering a byte range into
+//!   *resident* (nothing to do), *claimed* (this caller must fetch them —
+//!   a fresh latch was installed per chunk), and *in flight* (another
+//!   caller's latch to wait on). Each chunk is claimed by exactly one
+//!   caller, so no chunk is ever fetched twice;
+//! * the claimer moves the bytes, then [`ExtentMap::commit`]s (marking
+//!   the chunk resident and waking waiters) or [`ExtentMap::fail`]s
+//!   (waking waiters with the error). A failed chunk's latch is removed,
+//!   so the next resolve re-claims it — a failure can never wedge a
+//!   chunk, only cost a retry;
+//! * waiting happens with no locks held, and claimers publish every
+//!   claimed chunk before waiting on anyone else's, so two readers with
+//!   overlapping covers cannot deadlock.
+//!
+//! When the bitmap completes, the owner
+//! ([`crate::cio::local_stage::GroupCache`]) promotes the staging file to
+//! an ordinary retained archive — eviction, neighbor serving and
+//! manifests all apply only to complete copies; partial residency is
+//! accounted separately
+//! ([`CacheSnapshot::partial_bytes`](crate::cio::local_stage::CacheSnapshot::partial_bytes) /
+//! [`chunk_fills`](crate::cio::local_stage::CacheSnapshot::chunk_fills)).
+
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Chunk indices covering the byte range `[offset, offset + len)` of a
+/// file chunked at `chunk_bytes`. An empty range covers no chunks.
+pub fn chunk_cover(offset: u64, len: u64, chunk_bytes: u64) -> Range<u64> {
+    assert!(chunk_bytes > 0, "chunk size must be positive");
+    if len == 0 {
+        let c = offset / chunk_bytes;
+        return c..c;
+    }
+    let first = offset / chunk_bytes;
+    let last = (offset + len - 1) / chunk_bytes;
+    first..last + 1
+}
+
+/// Byte range of chunk `idx` of a `total`-byte file chunked at
+/// `chunk_bytes` (the tail chunk is short; chunks past EOF are empty).
+pub fn chunk_span(idx: u64, chunk_bytes: u64, total: u64) -> Range<u64> {
+    assert!(chunk_bytes > 0, "chunk size must be positive");
+    let start = idx.saturating_mul(chunk_bytes).min(total);
+    let end = (idx + 1).saturating_mul(chunk_bytes).min(total);
+    start..end
+}
+
+/// Number of chunks in a `total`-byte file chunked at `chunk_bytes`.
+pub fn chunk_count(total: u64, chunk_bytes: u64) -> u64 {
+    assert!(chunk_bytes > 0, "chunk size must be positive");
+    total.div_ceil(chunk_bytes)
+}
+
+/// Coalesce sorted chunk indices into maximal contiguous runs — a
+/// claimer fetches each run with one range read instead of one IO per
+/// chunk.
+pub fn chunk_runs(chunks: &[u64]) -> Vec<Range<u64>> {
+    let mut runs: Vec<Range<u64>> = Vec::new();
+    for &c in chunks {
+        match runs.last_mut() {
+            Some(run) if run.end == c => run.end = c + 1,
+            _ => runs.push(c..c + 1),
+        }
+    }
+    runs
+}
+
+/// One in-flight chunk's singleflight latch.
+enum ChunkState {
+    /// The claimer is fetching; waiters block on the condvar.
+    Pending,
+    /// The chunk landed and is resident.
+    Done,
+    /// The fetch failed; waiters get the error. The latch is already
+    /// removed from the in-flight table, so the next resolve re-claims
+    /// the chunk instead of inheriting the corpse.
+    Failed(String),
+}
+
+struct ChunkLatch {
+    state: Mutex<ChunkState>,
+    cv: Condvar,
+}
+
+impl ChunkLatch {
+    fn new() -> ChunkLatch {
+        ChunkLatch { state: Mutex::new(ChunkState::Pending), cv: Condvar::new() }
+    }
+
+    fn publish(&self, state: ChunkState) {
+        *self.state.lock().unwrap() = state;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> Result<(), String> {
+        let mut state = self.state.lock().unwrap();
+        loop {
+            match &*state {
+                ChunkState::Pending => state = self.cv.wait(state).unwrap(),
+                ChunkState::Done => return Ok(()),
+                ChunkState::Failed(msg) => return Err(msg.clone()),
+            }
+        }
+    }
+}
+
+/// What [`ExtentMap::plan`] hands a caller for one byte range.
+pub struct FetchPlan {
+    /// Chunks this caller claimed and must fetch (ascending). Every one
+    /// must be resolved with [`ExtentMap::commit`] or [`ExtentMap::fail`].
+    pub mine: Vec<u64>,
+    /// Latches of chunks another caller is already fetching; wait on them
+    /// (after fetching `mine`) via [`ExtentMap::wait`].
+    theirs: Vec<Arc<ChunkLatch>>,
+}
+
+impl FetchPlan {
+    /// True when every covering chunk was already resident — nothing to
+    /// fetch, nothing to wait for.
+    pub fn resident(&self) -> bool {
+        self.mine.is_empty() && self.theirs.is_empty()
+    }
+}
+
+struct MapInner {
+    resident: Vec<bool>,
+    resident_chunks: u64,
+    resident_bytes: u64,
+    inflight: HashMap<u64, Arc<ChunkLatch>>,
+}
+
+/// Per-archive chunk bitmap + per-chunk singleflight latches governing a
+/// sparse staging file (see the module docs for the protocol).
+pub struct ExtentMap {
+    chunk_bytes: u64,
+    total: u64,
+    inner: Mutex<MapInner>,
+}
+
+impl ExtentMap {
+    /// An all-absent map for a `total`-byte file chunked at `chunk_bytes`.
+    pub fn new(total: u64, chunk_bytes: u64) -> ExtentMap {
+        let chunks = chunk_count(total, chunk_bytes) as usize;
+        ExtentMap {
+            chunk_bytes,
+            total,
+            inner: Mutex::new(MapInner {
+                resident: vec![false; chunks],
+                resident_chunks: 0,
+                resident_bytes: 0,
+                inflight: HashMap::new(),
+            }),
+        }
+    }
+
+    /// The chunk size in bytes.
+    pub fn chunk_bytes(&self) -> u64 {
+        self.chunk_bytes
+    }
+
+    /// The governed file's full length in bytes.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Total chunk count.
+    pub fn chunks(&self) -> u64 {
+        chunk_count(self.total, self.chunk_bytes)
+    }
+
+    /// Byte range of chunk `idx`, clamped to the file length.
+    pub fn span(&self, idx: u64) -> Range<u64> {
+        chunk_span(idx, self.chunk_bytes, self.total)
+    }
+
+    /// Bytes currently resident.
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().resident_bytes
+    }
+
+    /// True once every chunk is resident (a zero-byte file is trivially
+    /// complete).
+    pub fn is_complete(&self) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner.resident_chunks == inner.resident.len() as u64
+    }
+
+    /// Is chunk `idx` resident (probe only)?
+    pub fn is_resident(&self, idx: u64) -> bool {
+        self.inner.lock().unwrap().resident.get(idx as usize).copied().unwrap_or(false)
+    }
+
+    /// Partition the chunks covering `[offset, offset + len)` into
+    /// claimed / in-flight / resident (see [`FetchPlan`]). The byte range
+    /// is clamped to the file length.
+    pub fn plan(&self, offset: u64, len: u64) -> FetchPlan {
+        let start = offset.min(self.total);
+        let len = len.min(self.total - start);
+        let cover = chunk_cover(start, len, self.chunk_bytes);
+        let mut inner = self.inner.lock().unwrap();
+        let mut mine = Vec::new();
+        let mut theirs = Vec::new();
+        for c in cover {
+            if inner.resident[c as usize] {
+                continue;
+            }
+            match inner.inflight.get(&c) {
+                Some(latch) => theirs.push(latch.clone()),
+                None => {
+                    inner.inflight.insert(c, Arc::new(ChunkLatch::new()));
+                    mine.push(c);
+                }
+            }
+        }
+        FetchPlan { mine, theirs }
+    }
+
+    /// Mark a claimed chunk resident and wake its waiters. Returns the
+    /// chunk's byte length (what landed in the staging file).
+    pub fn commit(&self, idx: u64) -> u64 {
+        let span = self.span(idx);
+        let bytes = span.end - span.start;
+        let latch = {
+            let mut inner = self.inner.lock().unwrap();
+            if !inner.resident[idx as usize] {
+                inner.resident[idx as usize] = true;
+                inner.resident_chunks += 1;
+                inner.resident_bytes += bytes;
+            }
+            inner.inflight.remove(&idx)
+        };
+        if let Some(latch) = latch {
+            latch.publish(ChunkState::Done);
+        }
+        bytes
+    }
+
+    /// Fail a claimed chunk: remove its latch (the next resolve re-claims
+    /// it) and wake its waiters with the error.
+    pub fn fail(&self, idx: u64, msg: &str) {
+        let latch = self.inner.lock().unwrap().inflight.remove(&idx);
+        if let Some(latch) = latch {
+            latch.publish(ChunkState::Failed(msg.to_string()));
+        }
+    }
+
+    /// Block until every in-flight chunk of `plan` lands; `Err` carries
+    /// the first failed chunk's error. Call only after resolving every
+    /// claimed chunk in `plan.mine` (commit or fail) — waiting first
+    /// could deadlock two claimers with overlapping covers.
+    pub fn wait(&self, plan: &FetchPlan) -> Result<(), String> {
+        for latch in &plan.theirs {
+            latch.wait()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cover_math_is_exact() {
+        // [0, 10) @ 4 -> chunks 0..3 (bytes 0..12 cover 0..10).
+        assert_eq!(chunk_cover(0, 10, 4), 0..3);
+        assert_eq!(chunk_cover(4, 4, 4), 1..2);
+        assert_eq!(chunk_cover(3, 2, 4), 0..2);
+        assert_eq!(chunk_cover(7, 1, 4), 1..2);
+        assert_eq!(chunk_cover(8, 0, 4), 2..2, "empty range covers nothing");
+        assert_eq!(chunk_count(0, 4), 0);
+        assert_eq!(chunk_count(1, 4), 1);
+        assert_eq!(chunk_count(8, 4), 2);
+        assert_eq!(chunk_count(9, 4), 3);
+        assert_eq!(chunk_span(2, 4, 10), 8..10, "tail chunk is short");
+        assert_eq!(chunk_span(5, 4, 10), 10..10, "past-EOF chunk is empty");
+    }
+
+    #[test]
+    fn runs_coalesce_contiguous_chunks() {
+        assert_eq!(chunk_runs(&[]), Vec::<Range<u64>>::new());
+        assert_eq!(chunk_runs(&[3]), vec![3..4]);
+        assert_eq!(chunk_runs(&[1, 2, 3, 7, 9, 10]), vec![1..4, 7..8, 9..11]);
+    }
+
+    #[test]
+    fn plan_claims_each_chunk_exactly_once() {
+        let map = ExtentMap::new(100, 10);
+        let a = map.plan(0, 35); // chunks 0..4
+        assert_eq!(a.mine, vec![0, 1, 2, 3]);
+        assert!(a.theirs.is_empty());
+        // Overlapping plan: claimed chunks are someone else's, the rest
+        // are fresh claims.
+        let b = map.plan(30, 30); // chunks 3..6
+        assert_eq!(b.mine, vec![4, 5]);
+        assert_eq!(b.theirs.len(), 1, "chunk 3 is in flight");
+        // Commits make chunks resident; later plans skip them.
+        for &c in &a.mine {
+            map.commit(c);
+        }
+        for &c in &b.mine {
+            map.commit(c);
+        }
+        assert!(map.wait(&b).is_ok());
+        let c = map.plan(0, 60);
+        assert!(c.resident(), "all covering chunks landed");
+        assert_eq!(map.resident_bytes(), 60);
+        assert!(!map.is_complete());
+        let rest = map.plan(60, 40);
+        assert_eq!(rest.mine, vec![6, 7, 8, 9]);
+        for &c in &rest.mine {
+            map.commit(c);
+        }
+        assert!(map.is_complete());
+        assert_eq!(map.resident_bytes(), 100);
+    }
+
+    #[test]
+    fn failed_chunk_wakes_waiters_and_is_reclaimable() {
+        let map = Arc::new(ExtentMap::new(40, 10));
+        let a = map.plan(0, 40);
+        assert_eq!(a.mine, vec![0, 1, 2, 3]);
+        let (planned_tx, planned_rx) = std::sync::mpsc::channel();
+        let waiter = {
+            let map = map.clone();
+            std::thread::spawn(move || {
+                let plan = map.plan(0, 40);
+                assert!(plan.mine.is_empty(), "every chunk already claimed");
+                planned_tx.send(()).unwrap();
+                map.wait(&plan)
+            })
+        };
+        // The waiter holds latches on all four chunks before any lands.
+        planned_rx.recv().unwrap();
+        map.commit(0);
+        map.commit(1);
+        map.fail(2, "torn source");
+        map.commit(3);
+        let err = waiter.join().unwrap().expect_err("waiter must see the failure");
+        assert!(err.contains("torn source"), "{err}");
+        // The failed chunk is reclaimable, not wedged.
+        let retry = map.plan(20, 10);
+        assert_eq!(retry.mine, vec![2]);
+        map.commit(2);
+        assert!(map.is_complete());
+    }
+
+    #[test]
+    fn clamps_past_eof_plans() {
+        let map = ExtentMap::new(25, 10);
+        let p = map.plan(20, 100);
+        assert_eq!(p.mine, vec![2], "plan clamps to the file length");
+        map.commit(2);
+        assert_eq!(map.resident_bytes(), 5, "tail chunk is 5 bytes");
+        let empty = map.plan(25, 10);
+        assert!(empty.resident(), "a plan at EOF covers nothing");
+    }
+
+    #[test]
+    fn zero_byte_file_is_trivially_complete() {
+        let map = ExtentMap::new(0, 10);
+        assert_eq!(map.chunks(), 0);
+        assert!(map.is_complete());
+        assert!(map.plan(0, 10).resident());
+    }
+}

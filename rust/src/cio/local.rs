@@ -133,6 +133,52 @@ pub fn publish_link(src: &Path, dst: &Path) -> Result<u64> {
     Ok(bytes)
 }
 
+/// Read exactly `len` bytes at `offset` from `path` — the chunk-granular
+/// read primitive of the partial-fill engine
+/// ([`crate::cio::extent::ExtentMap`]): a filler moves only the chunks
+/// covering what a reader needs from the routed source / producer / GFS,
+/// never the whole file. Errors (rather than short-reading) when the
+/// file ends before the range does.
+pub fn read_range(path: &Path, offset: u64, len: usize) -> Result<Vec<u8>> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {} for a range read", path.display()))?;
+    f.seek(SeekFrom::Start(offset))?;
+    let mut out = vec![0u8; len];
+    f.read_exact(&mut out)
+        .with_context(|| format!("range read [{offset}, +{len}) of {}", path.display()))?;
+    Ok(out)
+}
+
+/// Write `data` at `offset` into `path`, which must already exist — the
+/// partial-fill engine pre-sizes its sparse staging file with
+/// [`create_sparse`]. Never creates the file, so a straggling chunk
+/// write can never resurrect a staging file that was already promoted
+/// or discarded (it fails cleanly instead).
+pub fn write_range_at(path: &Path, offset: u64, data: &[u8]) -> Result<()> {
+    use std::io::{Seek, SeekFrom, Write as IoWrite};
+    let mut f = std::fs::OpenOptions::new()
+        .write(true)
+        .open(path)
+        .with_context(|| format!("opening {} for a range write", path.display()))?;
+    f.seek(SeekFrom::Start(offset))?;
+    f.write_all(data).with_context(|| {
+        format!("range write [{offset}, +{}) of {}", data.len(), path.display())
+    })?;
+    Ok(())
+}
+
+/// Create (truncating) a sparse file of `len` bytes at `path` — the
+/// staging file a partial fill writes chunks into. Unwritten regions
+/// read as zeros and occupy no disk until a chunk lands.
+pub fn create_sparse(path: &Path, len: u64) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating sparse staging file {}", path.display()))?;
+    f.set_len(len)
+        .with_context(|| format!("sizing {} to {len} bytes", path.display()))?;
+    Ok(())
+}
+
 /// Directory layout for a local run.
 #[derive(Debug, Clone)]
 pub struct LocalLayout {
@@ -818,6 +864,29 @@ mod tests {
         // A missing source is a clean error either way.
         assert!(publish_link(&root.join("a/ghost"), &root.join("b/out")).is_err());
         assert!(!root.join("b/out").exists());
+    }
+
+    #[test]
+    fn range_primitives_round_trip_sparse_chunks() {
+        let root = tmp("range");
+        std::fs::create_dir_all(&root).unwrap();
+        let p = root.join("sparse.bin");
+        create_sparse(&p, 100).unwrap();
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), 100);
+        // Disjoint chunk writes land independently; unwritten gaps read
+        // as zeros.
+        write_range_at(&p, 40, &[7u8; 10]).unwrap();
+        write_range_at(&p, 90, &[9u8; 10]).unwrap();
+        assert_eq!(read_range(&p, 40, 10).unwrap(), vec![7u8; 10]);
+        assert_eq!(read_range(&p, 90, 10).unwrap(), vec![9u8; 10]);
+        assert_eq!(read_range(&p, 0, 10).unwrap(), vec![0u8; 10]);
+        // A read past EOF errors instead of short-reading.
+        assert!(read_range(&p, 95, 10).is_err());
+        // A write into a missing file fails cleanly (never creates —
+        // stragglers must not resurrect promoted staging files).
+        let ghost = root.join("ghost.bin");
+        assert!(write_range_at(&ghost, 0, b"x").is_err());
+        assert!(!ghost.exists());
     }
 
     #[test]

@@ -38,20 +38,50 @@
 //!      `gfs/` into the group's data dir, read-through, exactly the
 //!      §5.3 fallback) before the read proceeds.
 //!
-//! Cache *fills* (tiers 2 and 3) are **singleflight**: the metadata LRU
-//! lives under one short-held mutex, while each miss's data movement runs
-//! outside it behind a per-archive in-flight latch. Concurrent misses on
-//! the same archive dedupe onto one fill (waiters block on the latch and
-//! share the filler's outcome — or its error), and misses on distinct
-//! archives fill in parallel, so a cold group's warm-up is bounded by one
-//! copy, not the sum of all of them.
+//! Whole-archive cache *fills* (tiers 2 and 3) are **singleflight**: the
+//! metadata LRU lives under one short-held mutex, while each miss's data
+//! movement runs outside it behind a per-archive in-flight latch.
+//! Concurrent misses on the same archive dedupe onto one fill (waiters
+//! block on the latch and share the filler's outcome — or its error),
+//! and misses on distinct archives fill in parallel, so a cold group's
+//! warm-up is bounded by one copy, not the sum of all of them.
 //!
-//! Tasks can read **records, not whole members**: for record-structured
-//! members, [`StageInput::read_member_range`] (and the
-//! [`crate::workload::blast`] record layer over it) extracts just the
-//! requested byte range from the resolved archive via
-//! [`Reader::extract_range`], cutting the read volume from the member
-//! size to the record size.
+//! Tasks can read **records, not whole members** — and, since PR 5, a
+//! record read never waits for the whole archive either.
+//! [`StageInput::read_member_range`] (and the
+//! [`crate::workload::blast`] record layer over it) resolves through the
+//! **chunked partial-fill engine** ([`crate::cio::extent`]):
+//!
+//! * a cold archive gets a sparse staging file
+//!   (`ifs/<group>/data/.partial-<name>`) pre-sized to the archive
+//!   length, governed by an [`ExtentMap`] — a chunk bitmap
+//!   ([`PlacementPolicy::fill_chunk_bytes`] per chunk) with a
+//!   singleflight latch per chunk;
+//! * the read fetches the **index extent once** (trailer + member index
+//!   live at the archive tail; [`Reader::open_indexed_range`] mounts
+//!   the index over the partially-resident file), then exactly the
+//!   chunks covering the record's `(offset, len)` — each chunk moving
+//!   down the same routed chain as a whole-archive fill: cheapest live
+//!   retaining source → producing group → GFS — and returns as soon as
+//!   *those* chunks land. Concurrent readers of disjoint records on one
+//!   cold archive therefore proceed in parallel instead of serializing
+//!   on a whole-archive latch, and the downstream read volume tracks
+//!   the record size, not the archive size;
+//! * whole-archive consumers ([`StageInput::read_member`],
+//!   [`GroupCache::open_archive`]) request the **full extent through
+//!   the same engine** when a partial fill is underway (chunks that
+//!   already landed never move again), and the classic one-transfer
+//!   fill otherwise;
+//! * when the bitmap completes, the staging file is **promoted** to an
+//!   ordinary retained archive — accounted in the LRU,
+//!   `directory.publish`ed, manifest-persisted — so eviction, neighbor
+//!   serving, and warm starts apply only to complete copies. Partial
+//!   residency is accounted separately
+//!   ([`CacheSnapshot::partial_bytes`], [`CacheSnapshot::chunk_fills`]);
+//!   a failed chunk wakes its waiters with the error and is re-claimed
+//!   by the next resolve — never a wedged latch, and a reader that
+//!   loses the staging file mid-read falls back to the canonical GFS
+//!   copy (counted in [`CacheSnapshot::fallback_reads`]).
 //!
 //! Retention also survives the runner: each group's accounting — entries
 //! in LRU order, per-archive read counts, and the aggregate hit/miss
@@ -78,15 +108,45 @@
 use crate::cio::archive::{Compression, Reader};
 use crate::cio::collector::{CollectorStats, Policy};
 use crate::cio::directory::RetentionDirectory;
-use crate::cio::local::{publish_copy, publish_link, CollectorOptions, LocalCollector, LocalLayout};
+use crate::cio::extent::{chunk_runs, ExtentMap};
+use crate::cio::local::{
+    create_sparse, publish_copy, publish_link, read_range, write_range_at, CollectorOptions,
+    LocalCollector, LocalLayout,
+};
 use crate::cio::placement::{LearnedPlacement, PlacementPolicy};
 use crate::cio::stage::{CacheOutcome, IfsCache, StageGraph};
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
+
+/// Prefix of in-flight partial (chunked) staging files in a group's data
+/// dir. Retention scans, manifests, and `stage_artifact_matches` never
+/// see these as archives; they are cleared on construction (a previous
+/// process's chunk bitmap died with it) and by [`GroupCache::clear_prefix`].
+const PARTIAL_PREFIX: &str = ".partial-";
+
+/// Process-wide uniquifier for partial staging paths: a promoted or
+/// discarded staging file's path is never reused, so a reader that lost
+/// the promote race gets a clean open error (handled by its retry loop)
+/// and can never alias a *newer* partial's file and read its holes.
+static PARTIAL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Default partial-fill chunk size when no [`PlacementPolicy`] is in
+/// play (bare caches in tests); runners derive theirs from
+/// [`PlacementPolicy::fill_chunk_bytes`].
+const DEFAULT_FILL_CHUNK: u64 = 256 * 1024;
+
+/// Cap on concurrently-live partial staging states per group. An
+/// incomplete partial is never evicted by the retention LRU (it lives
+/// outside the `IfsCache` accounting), so without a bound a workload
+/// touching one record in each of many cold archives would leak a
+/// staging file per archive for the rest of the run. At the cap, the
+/// least-resident incomplete state is shed — its readers observe the
+/// superseded state and simply re-resolve.
+const MAX_PARTIALS: usize = 64;
 
 /// Point-in-time counters of one group's retention cache.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -124,6 +184,30 @@ pub struct CacheSnapshot {
     pub evictions: u64,
     /// Bytes currently retained.
     pub used: u64,
+    /// Bytes currently resident in partial (chunked) staging files —
+    /// capacity the extent engine holds *outside* the retention
+    /// accounting until a completed bitmap promotes the file
+    /// ([`crate::cio::extent`]).
+    pub partial_bytes: u64,
+    /// Chunks fetched by the partial-fill engine so far (each chunk
+    /// moves exactly once — the probe the concurrency tests and the
+    /// partial-fill byte-volume metric count).
+    pub chunk_fills: u64,
+    /// Record reads whose partial resolve moved chunks group-to-group
+    /// (per-read tier attribution, so the stage mix stays honest even
+    /// though no whole-archive fill happened).
+    pub partial_neighbor_reads: u64,
+    /// The subset of `partial_neighbor_reads` whose chunks came from a
+    /// non-producing (routed) source.
+    pub partial_routed_reads: u64,
+    /// Record reads whose partial resolve moved chunks from the
+    /// canonical GFS copy — central-store traffic that the whole-fill
+    /// counters (`gfs_copies` / `gfs_direct`) never see.
+    pub partial_gfs_reads: u64,
+    /// Reads that resolved, lost an eviction race mid-read, and were
+    /// served by the direct-GFS retry ([`StageInput::read_with`]'s
+    /// fallback) — GFS traffic the per-tier fill counters cannot see.
+    pub fallback_reads: u64,
 }
 
 /// State of one in-flight cache fill (the singleflight latch).
@@ -168,6 +252,57 @@ impl Fill {
     }
 }
 
+/// One archive's chunked partial-fill state (the PR-5 tentpole): a
+/// sparse staging file in the group's data dir plus the
+/// [`ExtentMap`] governing which chunks are resident. Record readers
+/// mount the index once the tail chunks land and then fetch exactly the
+/// chunks covering each read; when the bitmap completes, the owner
+/// promotes the file to ordinary retention.
+struct Partial {
+    /// `ifs/<group>/data/.partial-<name>`, pre-sized (sparse) to the
+    /// archive length.
+    path: PathBuf,
+    /// Full archive byte length.
+    total: u64,
+    map: ExtentMap,
+    /// Index over the partially-resident file, mounted once the trailer
+    /// + index extents land ([`Reader::open_indexed_range`]).
+    reader: OnceLock<Reader>,
+}
+
+/// What one partial fetch moved, and from where — folded into the
+/// [`CacheOutcome`] a record read reports.
+#[derive(Debug, Clone, Copy, Default)]
+struct FetchTier {
+    /// Chunks fetched group-to-group from a retaining sibling.
+    neighbor_chunks: u64,
+    /// The subset of `neighbor_chunks` served by a non-producing group.
+    routed_chunks: u64,
+    /// Chunks fetched from the canonical GFS copy.
+    gfs_chunks: u64,
+}
+
+impl FetchTier {
+    fn merge(&mut self, other: FetchTier) {
+        self.neighbor_chunks += other.neighbor_chunks;
+        self.routed_chunks += other.routed_chunks;
+        self.gfs_chunks += other.gfs_chunks;
+    }
+
+    /// The per-read outcome: the slowest tier any chunk of this read
+    /// paid. A read whose chunks were all already resident (or fetched
+    /// by concurrent readers) was served locally.
+    fn outcome(&self) -> CacheOutcome {
+        if self.gfs_chunks > 0 {
+            CacheOutcome::GfsMiss
+        } else if self.neighbor_chunks > 0 {
+            CacheOutcome::NeighborTransfer
+        } else {
+            CacheOutcome::IfsHit
+        }
+    }
+}
+
 /// One IFS group's on-disk retention: the [`IfsCache`] accounting plus the
 /// real archive files it governs in `ifs/<group>/data/`.
 ///
@@ -201,7 +336,8 @@ pub struct GroupCache {
     inner: Mutex<IfsCache>,
     /// Per-archive successful-resolve counts (every tier), persisted in
     /// the manifest and replayed into [`LearnedPlacement`] on warm start.
-    /// Lock order: `inner` before `reads`; never the reverse.
+    /// Lock order: `partials` before `inner` before `reads`; never the
+    /// reverse.
     reads: Mutex<HashMap<String, u64>>,
     /// Aggregate lookup totals restored from a previous run's manifest
     /// (this run's live counters start at zero on top of them).
@@ -209,11 +345,23 @@ pub struct GroupCache {
     prior_misses: u64,
     /// Archive name → in-flight fill latch (singleflight map).
     fills: Mutex<HashMap<String, Arc<Fill>>>,
+    /// Archive name → chunked partial-fill state (the PR-5 engine).
+    partials: Mutex<HashMap<String, Arc<Partial>>>,
+    /// Partial-fill chunk size ([`PlacementPolicy::fill_chunk_bytes`]).
+    fill_chunk: u64,
+    /// `<root>/ifs` — to reach the on-disk retention of groups this
+    /// runner has no cache for (cold-runner-bootstrap sources).
+    ifs_root: PathBuf,
     neighbor_transfers: AtomicU64,
     routed_transfers: AtomicU64,
     stale_fallbacks: AtomicU64,
     gfs_copies: AtomicU64,
     gfs_direct: AtomicU64,
+    chunk_fills: AtomicU64,
+    partial_neighbor_reads: AtomicU64,
+    partial_routed_reads: AtomicU64,
+    partial_gfs_reads: AtomicU64,
+    fallback_reads: AtomicU64,
 }
 
 impl GroupCache {
@@ -252,6 +400,10 @@ impl GroupCache {
     ) -> GroupCache {
         let data_dir = layout.ifs_data(group);
         let manifest = layout.ifs_manifest(group);
+        // A previous process's partial staging files are worthless
+        // without their (in-memory) chunk bitmaps: clear them before
+        // warm-starting the complete-copy accounting.
+        clear_stale_partials(&data_dir);
         let warm = warm_start(&manifest, &data_dir, capacity);
         for (name, _) in warm.cache.entries_lru() {
             directory.publish(name, group);
@@ -267,12 +419,28 @@ impl GroupCache {
             prior_hits: warm.prior_hits,
             prior_misses: warm.prior_misses,
             fills: Mutex::new(HashMap::new()),
+            partials: Mutex::new(HashMap::new()),
+            fill_chunk: DEFAULT_FILL_CHUNK,
+            ifs_root: layout.root.join("ifs"),
             neighbor_transfers: AtomicU64::new(0),
             routed_transfers: AtomicU64::new(0),
             stale_fallbacks: AtomicU64::new(0),
             gfs_copies: AtomicU64::new(0),
             gfs_direct: AtomicU64::new(0),
+            chunk_fills: AtomicU64::new(0),
+            partial_neighbor_reads: AtomicU64::new(0),
+            partial_routed_reads: AtomicU64::new(0),
+            partial_gfs_reads: AtomicU64::new(0),
+            fallback_reads: AtomicU64::new(0),
         }
+    }
+
+    /// Use `bytes` as the partial-fill chunk size (what a cold record
+    /// read moves per chunk; see
+    /// [`PlacementPolicy::fill_chunk_bytes`]). Defaults to 256 KiB.
+    pub fn with_fill_chunk(mut self, bytes: u64) -> GroupCache {
+        self.fill_chunk = bytes.max(1);
+        self
     }
 
     /// One cache per IFS group of `layout`, ready for
@@ -289,12 +457,24 @@ impl GroupCache {
         capacity: u64,
         neighbor_limit: u64,
     ) -> Arc<Vec<GroupCache>> {
+        Self::per_group_config(layout, capacity, neighbor_limit, DEFAULT_FILL_CHUNK)
+    }
+
+    /// [`GroupCache::per_group_with`] with an explicit partial-fill
+    /// chunk size — the full [`StageRunner`] configuration.
+    pub fn per_group_config(
+        layout: &LocalLayout,
+        capacity: u64,
+        neighbor_limit: u64,
+        fill_chunk: u64,
+    ) -> Arc<Vec<GroupCache>> {
         let directory = Arc::new(RetentionDirectory::new(layout.ifs_groups()));
         Arc::new(
             (0..layout.ifs_groups())
                 .map(|g| {
                     let dir = directory.clone();
                     GroupCache::with_directory(layout, g, capacity, neighbor_limit, dir)
+                        .with_fill_chunk(fill_chunk)
                 })
                 .collect(),
         )
@@ -543,8 +723,15 @@ impl GroupCache {
             return false;
         }
         let Some(sib) = siblings.iter().find(|c| c.group == source) else {
-            // Not reachable from this call site (partial sibling slice);
-            // the entry is not stale, just unusable here.
+            // No cache of this runner manages that group. A source the
+            // cold-runner bootstrap advertised (group index beyond this
+            // runner's own range) is pulled straight from its on-disk
+            // retention — nothing in this process ever evicts it.
+            // Anything else is a partial sibling slice: the entry is not
+            // stale, just unreachable from this call site.
+            if advertised && source >= self.directory.groups() {
+                return self.pull_from_disk(source, name, dst);
+            }
             return false;
         };
         if !sib.contains(name) {
@@ -569,7 +756,12 @@ impl GroupCache {
                 return false;
             }
         }
-        if publish_link(&src, dst).is_ok() {
+        // The transfer is charged to the source while it runs, so
+        // concurrent fills route around it (load-aware ranking).
+        self.directory.begin_serve(source);
+        let ok = publish_link(&src, dst).is_ok();
+        self.directory.end_serve(source);
+        if ok {
             return true;
         }
         // The source vanished between the probe and the link.
@@ -577,6 +769,32 @@ impl GroupCache {
             self.stale_fallbacks.fetch_add(1, Ordering::Relaxed);
         }
         false
+    }
+
+    /// Pull `name` from the on-disk retention of a group this runner has
+    /// no cache for (a cold-runner-bootstrap source): same size cap and
+    /// staleness contract as a cache-managed sibling, except the dead
+    /// entry is withdrawn straight from the directory — no accounting
+    /// exists to reconcile.
+    fn pull_from_disk(&self, source: u32, name: &str, dst: &std::path::Path) -> bool {
+        let src = self.foreign_data_path(source, name);
+        match std::fs::metadata(&src) {
+            Ok(m) if m.len() > self.neighbor_limit => return false,
+            Ok(_) => {}
+            Err(_) => {
+                self.directory.record_stale(name, source);
+                self.stale_fallbacks.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+        }
+        self.directory.begin_serve(source);
+        let ok = publish_link(&src, dst).is_ok();
+        self.directory.end_serve(source);
+        if !ok {
+            self.directory.record_stale(name, source);
+            self.stale_fallbacks.fetch_add(1, Ordering::Relaxed);
+        }
+        ok
     }
 
     /// Called by a reader whose pull from this (sibling) cache failed:
@@ -611,6 +829,45 @@ impl GroupCache {
         siblings: &[GroupCache],
     ) -> Result<CacheOutcome> {
         let dst = self.data_dir.join(name);
+        // A record reader already started a chunked partial fill: this
+        // whole-archive consumer requests the *full extent* through the
+        // same engine — chunks that already landed are never moved
+        // again — and promotes the completed staging file instead of
+        // re-copying the archive.
+        let existing = self.partials.lock().unwrap().get(name).cloned();
+        if let Some(part) = existing {
+            let tier = match self.fetch_partial_range(gfs_path, name, &part, 0, part.total, siblings)
+            {
+                Ok(tier) => tier,
+                Err(e) => {
+                    // The staging state died under this completion (a
+                    // stage clear, or a promotion that beat us to it);
+                    // if a retained copy is there the fill's goal is met.
+                    if self.contains(name) {
+                        return Ok(CacheOutcome::IfsHit);
+                    }
+                    return Err(e.context(format!("completing partial fill of archive {name}")));
+                }
+            };
+            self.promote_partial(name)?;
+            let outcome = tier.outcome();
+            match outcome {
+                CacheOutcome::GfsMiss => {
+                    self.gfs_copies.fetch_add(1, Ordering::Relaxed);
+                }
+                CacheOutcome::NeighborTransfer => {
+                    self.neighbor_transfers.fetch_add(1, Ordering::Relaxed);
+                    if tier.routed_chunks > 0 {
+                        self.routed_transfers.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                // Every chunk was already resident (or fetched by the
+                // concurrent record readers): completing the fill moved
+                // nothing — the bytes were effectively served locally.
+                CacheOutcome::IfsHit => {}
+            }
+            return Ok(outcome);
+        }
         let outcome = if let Some(source) = self.try_routed_fill(name, &dst, siblings) {
             self.neighbor_transfers.fetch_add(1, Ordering::Relaxed);
             if archive_group(name) != Some(source) {
@@ -633,6 +890,11 @@ impl GroupCache {
                     self.directory.withdraw(victim, self.group);
                 }
                 self.directory.publish(name, self.group);
+                drop(cache);
+                // A record reader may have started a chunked partial
+                // fill while this classic copy ran; the complete copy
+                // supersedes it.
+                self.discard_partial(name);
                 Ok(outcome)
             }
             None => {
@@ -644,8 +906,573 @@ impl GroupCache {
         }
     }
 
+    /// A fresh (process-unique) staging path for a partial fill of
+    /// archive `name`.
+    fn partial_path(&self, name: &str) -> PathBuf {
+        let seq = PARTIAL_SEQ.fetch_add(1, Ordering::Relaxed);
+        self.data_dir.join(format!("{PARTIAL_PREFIX}{seq}-{name}"))
+    }
+
+    /// On-disk retention path of `name` in a group this runner has no
+    /// cache for (a cold-runner-bootstrap source). Mirrors
+    /// [`LocalLayout::ifs_data`]'s `ifs/<group>/data` scheme — the one
+    /// place that layout knowledge is re-encoded here.
+    fn foreign_data_path(&self, group: u32, name: &str) -> PathBuf {
+        self.ifs_root.join(group.to_string()).join("data").join(name)
+    }
+
+    /// Full byte length of archive `name`: an existing partial state
+    /// knows it; else the canonical GFS copy; else any live retaining
+    /// source (a warm-started retention can outlive its GFS twin).
+    fn archive_total(
+        &self,
+        gfs_path: &std::path::Path,
+        name: &str,
+        siblings: &[GroupCache],
+    ) -> Result<u64> {
+        if let Some(part) = self.partials.lock().unwrap().get(name) {
+            return Ok(part.total);
+        }
+        if let Ok(m) = std::fs::metadata(gfs_path) {
+            return Ok(m.len());
+        }
+        for cand in self.directory.route(name, self.group) {
+            let path = match siblings.iter().find(|c| c.group == cand) {
+                Some(sib) if sib.contains(name) => sib.data_dir.join(name),
+                Some(_) => continue,
+                None if cand >= self.directory.groups() => {
+                    self.foreign_data_path(cand, name)
+                }
+                None => continue,
+            };
+            if let Ok(m) = std::fs::metadata(&path) {
+                return Ok(m.len());
+            }
+        }
+        anyhow::bail!("archive {name} not found on GFS or any retaining source")
+    }
+
+    /// Get-or-create the partial-fill state for `name` (singleflight on
+    /// the sparse staging file's creation). `None` means the archive got
+    /// retained since the caller's miss — re-resolve instead of staging.
+    fn partial_state(&self, name: &str, total: u64) -> Result<Option<Arc<Partial>>> {
+        if let Some(part) = self.partials.lock().unwrap().get(name) {
+            return Ok(Some(part.clone()));
+        }
+        if self.inner.lock().unwrap().contains(name) {
+            return Ok(None);
+        }
+        // Create the sparse staging file OUTSIDE the partials lock —
+        // the path is process-unique, so racing creators never collide
+        // and the map's critical section stays memory-only. Install it
+        // under the lock, re-checking both races: another creator may
+        // have won, and a classic whole-archive fill may have retained
+        // the archive while we touched the disk (installing then would
+        // leak the state forever: every later read would hit the
+        // retained copy, so the bitmap could never complete and nothing
+        // would discard the staging file — the fill's discard_partial
+        // runs after its accounting, so this re-check under the lock
+        // closes the window).
+        let path = self.partial_path(name);
+        create_sparse(&path, total)
+            .with_context(|| format!("creating partial staging for archive {name}"))?;
+        let part = Arc::new(Partial {
+            path,
+            total,
+            map: ExtentMap::new(total, self.fill_chunk),
+            reader: OnceLock::new(),
+        });
+        let mut shed: Option<Arc<Partial>> = None;
+        let installed = {
+            let mut partials = self.partials.lock().unwrap();
+            if let Some(existing) = partials.get(name) {
+                Some(existing.clone())
+            } else if self.inner.lock().unwrap().contains(name) {
+                None
+            } else {
+                // Bound the staging footprint: at the cap, shed the
+                // least-resident state — cheapest to redo; its readers
+                // observe the superseded state and re-resolve
+                // ([`MAX_PARTIALS`]).
+                if partials.len() >= MAX_PARTIALS {
+                    let victim = partials
+                        .iter()
+                        .min_by_key(|(_, p)| p.map.resident_bytes())
+                        .map(|(n, _)| n.clone());
+                    shed = victim.and_then(|v| partials.remove(&v));
+                }
+                partials.insert(name.to_string(), part.clone());
+                Some(part.clone())
+            }
+        };
+        if let Some(doomed) = shed {
+            let _ = std::fs::remove_file(&doomed.path);
+        }
+        match installed {
+            Some(winner) => {
+                if !Arc::ptr_eq(&winner, &part) {
+                    // Lost the creation race; ours was never visible.
+                    let _ = std::fs::remove_file(&part.path);
+                }
+                Ok(Some(winner))
+            }
+            None => {
+                // Retained while we were creating: never install.
+                let _ = std::fs::remove_file(&part.path);
+                Ok(None)
+            }
+        }
+    }
+
+    /// A probe of `source`'s retention of `name` came back dead:
+    /// reconcile through the sibling's own accounting when a cache
+    /// manages that group (so a withdrawal can never cancel a concurrent
+    /// re-publish), else withdraw the bootstrap entry straight from the
+    /// directory — and count the fallback either way.
+    fn note_stale_source(&self, source: u32, name: &str, siblings: &[GroupCache]) {
+        match siblings.iter().find(|c| c.group == source) {
+            Some(sib) => {
+                if sib.reconcile_stale(name) {
+                    self.stale_fallbacks.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            None => {
+                self.directory.record_stale(name, source);
+                self.stale_fallbacks.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Read `[offset, offset + len)` of archive `name` out of source
+    /// group `source`'s retention — the chunk-granular sibling probe,
+    /// with [`GroupCache::pull_from`]'s staleness contract: a dead
+    /// source is withdrawn (and counted) and the caller falls onward.
+    /// `None` means "try the next source", never an error.
+    #[allow(clippy::too_many_arguments)]
+    fn read_chunks_from(
+        &self,
+        source: u32,
+        name: &str,
+        offset: u64,
+        len: usize,
+        total: u64,
+        siblings: &[GroupCache],
+        advertised: bool,
+    ) -> Option<Vec<u8>> {
+        if source == self.group {
+            return None;
+        }
+        let src = match siblings.iter().find(|c| c.group == source) {
+            Some(sib) => {
+                if !sib.contains(name) {
+                    if advertised {
+                        self.note_stale_source(source, name, siblings);
+                    }
+                    return None;
+                }
+                sib.data_dir.join(name)
+            }
+            // Cold-runner-bootstrap sources only (see pull_from).
+            None if advertised && source >= self.directory.groups() => {
+                self.foreign_data_path(source, name)
+            }
+            None => return None,
+        };
+        // A size mismatch means this is not the same archive build;
+        // never mix its bytes into the staging file.
+        let size_ok = std::fs::metadata(&src).map(|m| m.len() == total).unwrap_or(false);
+        if !size_ok {
+            if advertised {
+                self.note_stale_source(source, name, siblings);
+            }
+            return None;
+        }
+        self.directory.begin_serve(source);
+        let got = read_range(&src, offset, len);
+        self.directory.end_serve(source);
+        match got {
+            Ok(bytes) => Some(bytes),
+            Err(_) => {
+                // The retention died under the read (eviction race or a
+                // fault): withdraw and fall onward — one fallback probe,
+                // never a wrong read.
+                if advertised {
+                    self.note_stale_source(source, name, siblings);
+                }
+                None
+            }
+        }
+    }
+
+    /// Materialize the chunks covering `[offset, offset + len)` of
+    /// `name`'s staging file: claim the missing chunks through the
+    /// [`ExtentMap`] (each chunk is fetched exactly once cluster-wide
+    /// per residency), move claimed chunks in coalesced runs from the
+    /// routed source → producer → GFS chain, commit each as it lands,
+    /// then wait for chunks other readers claimed. Returns what this
+    /// call moved. On a chunk failure every remaining claim is failed
+    /// (waking its waiters) — a failure costs a retry, never a wedge.
+    fn fetch_partial_range(
+        &self,
+        gfs_path: &std::path::Path,
+        name: &str,
+        part: &Partial,
+        offset: u64,
+        len: u64,
+        siblings: &[GroupCache],
+    ) -> Result<FetchTier> {
+        let mut tier = FetchTier::default();
+        let plan = part.map.plan(offset, len);
+        if !plan.mine.is_empty() {
+            // Freeze the candidate order once per fetch; every run falls
+            // down the same source → producer → GFS chain. Archives over
+            // the neighbor-transfer cap keep the whole-archive policy:
+            // their chunks come from GFS only, so completing a partial
+            // never moves an over-cap archive group-to-group behind
+            // [`GroupCache::pull_from`]'s back.
+            let producer = archive_group(name);
+            let mut cands: Vec<(u32, bool)> = Vec::new();
+            if part.total <= self.neighbor_limit {
+                let mut tried_producer = false;
+                for cand in self.directory.route(name, self.group) {
+                    if Some(cand) == producer {
+                        tried_producer = true;
+                    }
+                    cands.push((cand, true));
+                }
+                if let Some(owner) = producer {
+                    if owner != self.group && !tried_producer {
+                        cands.push((owner, false));
+                    }
+                }
+            }
+            let mut failed: Option<anyhow::Error> = None;
+            for run in chunk_runs(&plan.mine) {
+                if let Some(e) = &failed {
+                    let msg = format!("abandoned after an earlier chunk failure: {e:#}");
+                    for c in run {
+                        part.map.fail(c, &msg);
+                    }
+                    continue;
+                }
+                let span_start = part.map.span(run.start).start;
+                let span_end = part.map.span(run.end - 1).end;
+                let n = (span_end - span_start) as usize;
+                let mut got: Option<(Vec<u8>, Option<u32>)> = None;
+                for &(cand, advertised) in &cands {
+                    let probe = self.read_chunks_from(
+                        cand, name, span_start, n, part.total, siblings, advertised,
+                    );
+                    if let Some(bytes) = probe {
+                        got = Some((bytes, Some(cand)));
+                        break;
+                    }
+                }
+                if got.is_none() {
+                    // Same guard as the sibling probe: a GFS file whose
+                    // length disagrees with the staging total is another
+                    // archive build (the total may have come from a
+                    // retained copy that outlived its GFS twin) — never
+                    // mix its bytes into the staging file.
+                    let gfs_ok = std::fs::metadata(gfs_path)
+                        .map(|m| m.len() == part.total)
+                        .unwrap_or(false);
+                    let ranged = if gfs_ok {
+                        read_range(gfs_path, span_start, n)
+                    } else {
+                        Err(anyhow::anyhow!(
+                            "canonical copy {} is missing or not {} bytes",
+                            gfs_path.display(),
+                            part.total
+                        ))
+                    };
+                    match ranged {
+                        Ok(bytes) => got = Some((bytes, None)),
+                        Err(e) => {
+                            let e = e.context(format!(
+                                "fetching chunks {}..{} of archive {name}",
+                                run.start, run.end
+                            ));
+                            let msg = format!("{e:#}");
+                            for c in run {
+                                part.map.fail(c, &msg);
+                            }
+                            failed = Some(e);
+                            continue;
+                        }
+                    }
+                }
+                let (bytes, source) = got.expect("fetched or failed above");
+                if let Err(e) = write_range_at(&part.path, span_start, &bytes) {
+                    let e = e.context(format!("staging chunks of archive {name}"));
+                    let msg = format!("{e:#}");
+                    for c in run {
+                        part.map.fail(c, &msg);
+                    }
+                    failed = Some(e);
+                    continue;
+                }
+                for c in run.clone() {
+                    part.map.commit(c);
+                }
+                let nchunks = run.end - run.start;
+                self.chunk_fills.fetch_add(nchunks, Ordering::Relaxed);
+                match source {
+                    Some(g) => {
+                        tier.neighbor_chunks += nchunks;
+                        if producer != Some(g) {
+                            tier.routed_chunks += nchunks;
+                        }
+                        self.directory.record_serve(name, g);
+                    }
+                    None => tier.gfs_chunks += nchunks,
+                }
+            }
+            if let Some(e) = failed {
+                return Err(e);
+            }
+        }
+        if let Err(msg) = part.map.wait(&plan) {
+            anyhow::bail!("partial fill of archive {name} failed: {msg}");
+        }
+        Ok(tier)
+    }
+
+    /// Mount (or reuse) the member index over `part`'s staging file: the
+    /// trailer and index extents are fetched through the chunk engine
+    /// ([`Reader::open_indexed_range`]) — O(index) bytes, not
+    /// O(archive) — and the parsed reader is shared by every subsequent
+    /// record read of this partial.
+    fn partial_reader<'p>(
+        &self,
+        gfs_path: &std::path::Path,
+        name: &str,
+        part: &'p Partial,
+        siblings: &[GroupCache],
+        tier: &mut FetchTier,
+    ) -> Result<&'p Reader> {
+        if let Some(reader) = part.reader.get() {
+            return Ok(reader);
+        }
+        let reader = Reader::open_indexed_range(&part.path, &mut |off, len| {
+            let t = self.fetch_partial_range(gfs_path, name, part, off, len, siblings)?;
+            tier.merge(t);
+            Ok(())
+        })
+        .with_context(|| format!("mounting index over partial archive {name}"))?;
+        let _ = part.reader.set(reader);
+        Ok(part.reader.get().expect("index reader just installed"))
+    }
+
+    /// The bitmap completed: promote the staging file to an ordinary
+    /// retained archive — accounted (evicting LRU victims),
+    /// `directory.publish`ed, manifest-persisted — so eviction, neighbor
+    /// serving, and warm starts apply to it as a complete copy.
+    /// Idempotent: the first caller promotes, later callers find the
+    /// state already gone.
+    fn promote_partial(&self, name: &str) -> Result<()> {
+        // Hold the partials guard across accounting + rename (`partials`
+        // before `inner`, per the lock order): a reader that observes
+        // this state gone must then find the promoted copy fully
+        // accounted, so its retry lands on an ordinary hit instead of
+        // double-counting a miss and re-staging from scratch.
+        let mut partials = self.partials.lock().unwrap();
+        let Some(part) = partials.remove(name) else {
+            return Ok(());
+        };
+        let mut cache = self.inner.lock().unwrap();
+        match cache.put_evicting(name, part.total) {
+            Some(victims) => {
+                for victim in &victims {
+                    let _ = std::fs::remove_file(self.data_dir.join(victim));
+                    self.directory.withdraw(victim, self.group);
+                }
+                if let Err(e) = std::fs::rename(&part.path, self.data_dir.join(name)) {
+                    cache.remove(name);
+                    self.directory.withdraw(name, self.group);
+                    let _ = std::fs::remove_file(&part.path);
+                    return Err(anyhow::Error::from(e)
+                        .context(format!("promoting partial fill of archive {name}")));
+                }
+                self.directory.publish(name, self.group);
+                Ok(())
+            }
+            None => {
+                // Capacity raced below the archive size; keep disk ==
+                // accounting by dropping the staging file.
+                let _ = std::fs::remove_file(&part.path);
+                anyhow::bail!("archive {name} no longer fits the cache");
+            }
+        }
+    }
+
+    /// Drop any partial state for `name` (a complete copy landed through
+    /// the classic fill, or a stage clear invalidated the bytes).
+    fn discard_partial(&self, name: &str) {
+        let removed = self.partials.lock().unwrap().remove(name);
+        if let Some(part) = removed {
+            let _ = std::fs::remove_file(&part.path);
+        }
+    }
+
+    /// Record-granular resolve (the PR-5 tentpole): read `len` bytes at
+    /// `offset` within `member` of archive `name` **without waiting for
+    /// the whole archive to land**. A retained copy serves the read in
+    /// place (hit); otherwise the chunked partial-fill engine fetches
+    /// the index extent once, then exactly the chunks covering the
+    /// record — from the routed source → producer → GFS chain — and the
+    /// read returns as soon as *those* chunks are resident. Concurrent
+    /// readers of disjoint records on the same cold archive therefore
+    /// proceed in parallel instead of serializing on a whole-archive
+    /// fill; when the last chunk lands the staging file is promoted to
+    /// ordinary retention. Oversized archives (larger than the whole
+    /// cache) bypass staging and read straight from GFS, as ever.
+    pub fn read_member_range_via(
+        &self,
+        gfs_dir: &std::path::Path,
+        name: &str,
+        siblings: &[GroupCache],
+        member: &str,
+        offset: u64,
+        len: usize,
+    ) -> Result<(Vec<u8>, CacheOutcome)> {
+        loop {
+            // Retained-copy fast path, as in open_archive_via. The open
+            // runs under the metadata lock (it cannot race an eviction),
+            // but the extract re-opens by path — a lost eviction race
+            // there re-resolves instead of erroring.
+            {
+                let mut cache = self.inner.lock().unwrap();
+                if cache.get(name) == CacheOutcome::IfsHit {
+                    let reader = Reader::open(&self.data_dir.join(name))
+                        .with_context(|| format!("opening retained archive {name}"))?;
+                    drop(cache);
+                    self.note_read(name);
+                    match reader.extract_range(member, offset, len) {
+                        Ok(bytes) => return Ok((bytes, CacheOutcome::IfsHit)),
+                        Err(e) if self.contains(name) => return Err(e),
+                        Err(_) => continue,
+                    }
+                }
+            }
+            // Miss (counted by the probe above).
+            let gfs_path = gfs_dir.join(name);
+            let capacity = self.inner.lock().unwrap().capacity();
+            let total = self.archive_total(&gfs_path, name, siblings)?;
+            if total > capacity {
+                // §5.3: archives larger than the whole cache are never
+                // staged; the record is read from GFS in place.
+                self.gfs_direct.fetch_add(1, Ordering::Relaxed);
+                self.note_read(name);
+                let reader = Reader::open(&gfs_path)?;
+                return Ok((reader.extract_range(member, offset, len)?, CacheOutcome::GfsMiss));
+            }
+            let Some(part) = self.partial_state(name, total)? else {
+                // Retained since the miss: the fast path serves it now.
+                continue;
+            };
+            match self.read_partial_record(&gfs_path, name, &part, siblings, member, offset, len)
+            {
+                Ok(result) => return Ok(result),
+                Err(e) => {
+                    // A concurrent promotion / classic fill / stage
+                    // clear can vacate the staging file under this read
+                    // (its path is never reused, so the failure is a
+                    // clean error, never someone else's holes). If our
+                    // state was superseded, re-resolve — typically an
+                    // ordinary hit on the promoted copy; a still-current
+                    // state means a genuine IO failure.
+                    let superseded = {
+                        let partials = self.partials.lock().unwrap();
+                        partials.get(name).map(|cur| !Arc::ptr_eq(cur, &part)).unwrap_or(true)
+                    };
+                    if !superseded {
+                        return Err(e);
+                    }
+                }
+            }
+        }
+    }
+
+    /// One attempt of the partial-engine record read against a specific
+    /// [`Partial`] state: mount the index, materialize the member
+    /// extent, extract, and promote on completion. Split out so the
+    /// caller can distinguish "this state was superseded mid-read" from
+    /// a genuine failure.
+    #[allow(clippy::too_many_arguments)]
+    fn read_partial_record(
+        &self,
+        gfs_path: &std::path::Path,
+        name: &str,
+        part: &Partial,
+        siblings: &[GroupCache],
+        member: &str,
+        offset: u64,
+        len: usize,
+    ) -> Result<(Vec<u8>, CacheOutcome)> {
+        let mut tier = FetchTier::default();
+        let reader = self.partial_reader(gfs_path, name, part, siblings, &mut tier)?;
+        let entry = reader
+            .entry(member)
+            .with_context(|| format!("no member {member:?} in archive {name}"))?;
+        // The extent that must be resident: raw members need only the
+        // covering data bytes; a deflated member has no random-access
+        // substructure, so its whole extent (header included — the
+        // extract CRC-checks it) must land.
+        let (need_off, need_len) = match entry.compression {
+            Compression::None => {
+                let start = offset.min(entry.raw_len);
+                let take = (len as u64).min(entry.raw_len - start);
+                (entry.data_offset() + start, take)
+            }
+            Compression::Deflate => (entry.offset, entry.stored_end() - entry.offset),
+        };
+        if need_len > 0 {
+            let t = self.fetch_partial_range(gfs_path, name, part, need_off, need_len, siblings)?;
+            tier.merge(t);
+        }
+        let bytes = reader.extract_range(member, offset, len)?;
+        self.note_read(name);
+        if part.map.is_complete() {
+            // Some reader always crosses the line: promote so the next
+            // resolve is an ordinary hit and PR-2/3/4 semantics apply.
+            self.promote_partial(name)?;
+        }
+        // Per-read tier attribution: without it a GFS-fed record-read
+        // stage would report 100% local service (no whole-archive fill
+        // counter ever moves on this path).
+        let outcome = tier.outcome();
+        match outcome {
+            CacheOutcome::GfsMiss => {
+                self.partial_gfs_reads.fetch_add(1, Ordering::Relaxed);
+            }
+            CacheOutcome::NeighborTransfer => {
+                self.partial_neighbor_reads.fetch_add(1, Ordering::Relaxed);
+                if tier.routed_chunks > 0 {
+                    self.partial_routed_reads.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            CacheOutcome::IfsHit => {}
+        }
+        Ok((bytes, outcome))
+    }
+
+    /// Count one read served by the direct-GFS retry after a lost
+    /// eviction race (the bugfix counter behind
+    /// [`CacheSnapshot::fallback_reads`]).
+    fn note_fallback(&self) {
+        self.fallback_reads.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Current counters.
     pub fn snapshot(&self) -> CacheSnapshot {
+        let partial_bytes: u64 = self
+            .partials
+            .lock()
+            .unwrap()
+            .values()
+            .map(|p| p.map.resident_bytes())
+            .sum();
         let cache = self.inner.lock().unwrap();
         CacheSnapshot {
             hits: cache.hits(),
@@ -657,6 +1484,12 @@ impl GroupCache {
             gfs_direct: self.gfs_direct.load(Ordering::Relaxed),
             evictions: cache.evictions(),
             used: cache.used(),
+            partial_bytes,
+            chunk_fills: self.chunk_fills.load(Ordering::Relaxed),
+            partial_neighbor_reads: self.partial_neighbor_reads.load(Ordering::Relaxed),
+            partial_routed_reads: self.partial_routed_reads.load(Ordering::Relaxed),
+            partial_gfs_reads: self.partial_gfs_reads.load(Ordering::Relaxed),
+            fallback_reads: self.fallback_reads.load(Ordering::Relaxed),
         }
     }
 
@@ -671,6 +1504,20 @@ impl GroupCache {
     /// leak past the capacity bound. Runs under the metadata lock: no hit
     /// can observe a half-cleared name.
     pub fn clear_prefix(&self, prefix: &str) -> Result<()> {
+        // Partial staging of matching archives is equally stale: drop
+        // the in-memory chunk state and unlink the staging files
+        // (`partials` before `inner`, per the lock order).
+        {
+            let mut partials = self.partials.lock().unwrap();
+            partials.retain(|name, part| {
+                if stage_artifact_matches(name, prefix) {
+                    let _ = std::fs::remove_file(&part.path);
+                    false
+                } else {
+                    true
+                }
+            });
+        }
         let mut cache = self.inner.lock().unwrap();
         let doomed: Vec<String> = cache
             .entries_lru()
@@ -750,6 +1597,64 @@ struct WarmState {
     prior_misses: u64,
 }
 
+/// A parsed retention manifest: the `#stats` aggregate line plus the
+/// `(name, bytes, reads)` entries in their on-file (LRU-oldest-first)
+/// order. Unverified against disk — callers reconcile.
+struct ManifestText {
+    prior_hits: u64,
+    prior_misses: u64,
+    entries: Vec<(String, u64, u64)>,
+}
+
+/// Parse a manifest's text (shared by the warm start and the cold-runner
+/// directory bootstrap). Malformed lines are skipped; read counts (third
+/// column) default to zero for pre-PR-4 manifests.
+fn parse_manifest(text: &str) -> ManifestText {
+    let mut out = ManifestText { prior_hits: 0, prior_misses: 0, entries: Vec::new() };
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(stats) = line.strip_prefix("#stats\t") {
+            let mut fields = stats.split('\t');
+            let hits = fields.next().and_then(|f| f.trim().parse::<u64>().ok());
+            let misses = fields.next().and_then(|f| f.trim().parse::<u64>().ok());
+            if let (Some(h), Some(m)) = (hits, misses) {
+                out.prior_hits = h;
+                out.prior_misses = m;
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        let mut fields = line.split('\t');
+        let Some(name) = fields.next() else { continue };
+        let Some(bytes) = fields.next().and_then(|f| f.trim().parse::<u64>().ok()) else {
+            continue;
+        };
+        let reads = fields.next().and_then(|f| f.trim().parse::<u64>().ok()).unwrap_or(0);
+        out.entries.push((name.to_string(), bytes, reads));
+    }
+    out
+}
+
+/// Remove every leftover `.partial-*` staging file in `dir`: a previous
+/// process's chunk bitmaps died with it, so the sparse files behind them
+/// are unusable (and invisible to the manifest/accounting, so they would
+/// otherwise leak).
+fn clear_stale_partials(dir: &std::path::Path) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        if entry.file_name().to_string_lossy().starts_with(PARTIAL_PREFIX) {
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
+}
+
 /// Rebuild an [`IfsCache`] from a persisted manifest, reconciling every
 /// entry against the files actually in `data_dir`: an entry whose file is
 /// missing or has a different size is dropped (the disk is the truth —
@@ -767,31 +1672,11 @@ fn warm_start(manifest: &std::path::Path, data_dir: &std::path::Path, capacity: 
     let Ok(text) = std::fs::read_to_string(manifest) else {
         return warm;
     };
-    for line in text.lines() {
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        if let Some(stats) = line.strip_prefix("#stats\t") {
-            let mut fields = stats.split('\t');
-            let hits = fields.next().and_then(|f| f.trim().parse::<u64>().ok());
-            let misses = fields.next().and_then(|f| f.trim().parse::<u64>().ok());
-            if let (Some(h), Some(m)) = (hits, misses) {
-                warm.prior_hits = h;
-                warm.prior_misses = m;
-            }
-            continue;
-        }
-        if line.starts_with('#') {
-            continue;
-        }
-        let mut fields = line.split('\t');
-        let Some(name) = fields.next() else { continue };
-        let Some(bytes) = fields.next().and_then(|f| f.trim().parse::<u64>().ok()) else {
-            continue;
-        };
-        let reads = fields.next().and_then(|f| f.trim().parse::<u64>().ok()).unwrap_or(0);
-        let on_disk = std::fs::metadata(data_dir.join(name))
+    let parsed = parse_manifest(&text);
+    warm.prior_hits = parsed.prior_hits;
+    warm.prior_misses = parsed.prior_misses;
+    for (name, bytes, reads) in parsed.entries {
+        let on_disk = std::fs::metadata(data_dir.join(&name))
             .map(|m| m.is_file() && m.len() == bytes)
             .unwrap_or(false);
         if !on_disk {
@@ -800,17 +1685,54 @@ fn warm_start(manifest: &std::path::Path, data_dir: &std::path::Path, capacity: 
         // Replaying oldest-first through put_evicting reconstructs the
         // LRU; if this run's capacity shrank, the replay itself evicts
         // (and unlinks) the oldest entries to fit.
-        if let Some(victims) = warm.cache.put_evicting(name, bytes) {
+        if let Some(victims) = warm.cache.put_evicting(&name, bytes) {
             for victim in &victims {
                 let _ = std::fs::remove_file(data_dir.join(victim));
                 warm.reads.remove(victim.as_str());
             }
         }
         if reads > 0 {
-            warm.reads.insert(name.to_string(), reads);
+            warm.reads.insert(name, reads);
         }
     }
     warm
+}
+
+/// The cold-runner directory bootstrap (ROADMAP follow-up): scan every
+/// `ifs/<g>/cache.manifest` under `layout`'s root — **including groups
+/// beyond this layout's own** (a previous run may have been shaped
+/// differently) — and publish each disk-verified entry, so a fresh
+/// runner routes to that warm sibling retention from its very first
+/// fill instead of paying GFS round trips until the directory
+/// repopulates. The runner's own groups already published through their
+/// caches' warm start; only foreign groups are scanned here (their
+/// retention is read-only to this runner — nothing evicts it, and a
+/// vanished file is handled as an ordinary stale entry).
+fn bootstrap_directory(layout: &LocalLayout, directory: &RetentionDirectory) {
+    let ifs_root = layout.root.join("ifs");
+    let Ok(entries) = std::fs::read_dir(&ifs_root) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let Some(group) = entry.file_name().to_str().and_then(|s| s.parse::<u32>().ok()) else {
+            continue;
+        };
+        if group < layout.ifs_groups() {
+            continue;
+        }
+        let Ok(text) = std::fs::read_to_string(layout.ifs_manifest(group)) else {
+            continue;
+        };
+        let data_dir = layout.ifs_data(group);
+        for (name, bytes, _) in parse_manifest(&text).entries {
+            let live = std::fs::metadata(data_dir.join(&name))
+                .map(|m| m.is_file() && m.len() == bytes)
+                .unwrap_or(false);
+            if live {
+                directory.publish(&name, group);
+            }
+        }
+    }
 }
 
 /// Delete every `<prefix>-g*.cioar` in `dir` (stale stage artifacts from
@@ -857,6 +1779,10 @@ pub struct StageRunnerConfig {
     /// retention instead of GFS; bigger ones pay the central round trip
     /// rather than churn the cache ([`PlacementPolicy::neighbor_transfer_limit`]).
     pub neighbor_limit: u64,
+    /// Chunk size of the partial-fill engine — what a cold record read
+    /// moves per chunk instead of the whole archive
+    /// ([`PlacementPolicy::fill_chunk_bytes`]).
+    pub fill_chunk_bytes: u64,
     /// Worker threads per stage (tasks are pulled off a shared counter).
     pub threads: usize,
 }
@@ -877,6 +1803,7 @@ impl StageRunnerConfig {
             compression,
             cache_capacity: placement.retention_capacity(),
             neighbor_limit: placement.neighbor_transfer_limit(),
+            fill_chunk_bytes: placement.fill_chunk_bytes(),
             threads,
         }
     }
@@ -949,10 +1876,13 @@ impl StageInput<'_> {
     }
 
     /// Read `len` bytes at `offset` within one upstream member — the
-    /// record-granular read path ([`Reader::extract_range`] behind the
-    /// same routed resolve as [`StageInput::read_member`]): stage 2
-    /// pulls *records, not whole members,* out of retention, so the read
-    /// volume tracks the record size instead of the member size. The
+    /// record-granular read path, resolved through the **chunked
+    /// partial-fill engine** ([`GroupCache::read_member_range_via`]): a
+    /// retained copy serves it in place; a cold archive moves only the
+    /// index extent plus the chunks covering the record, and the read
+    /// returns as soon as those land — it never waits for (or triggers)
+    /// a whole-archive fill, so the read volume *and* the first-byte
+    /// latency track the record size instead of the archive size. The
     /// range is clamped to the member length.
     pub fn read_member_range(
         &self,
@@ -960,7 +1890,20 @@ impl StageInput<'_> {
         offset: u64,
         len: usize,
     ) -> Result<(Vec<u8>, CacheOutcome)> {
-        self.read_with(member, |reader| reader.extract_range(member, offset, len))
+        let (archive, _owner) = self
+            .members
+            .get(member)
+            .with_context(|| format!("no upstream stage produced member {member:?}"))?;
+        let cache = &self.caches[self.group as usize];
+        match cache.read_member_range_via(&self.gfs, archive, self.caches, member, offset, len) {
+            Ok(result) => Ok(result),
+            // Same eviction-race honesty as read_with: the retained copy
+            // (or the staging file) can die under the resolve; the
+            // canonical GFS copy serves the read, counted as a fallback.
+            Err(primary) => {
+                self.gfs_retry(archive, primary, |r| r.extract_range(member, offset, len))
+            }
+        }
     }
 
     /// Shared resolve-then-read with the eviction-race GFS fallback.
@@ -976,18 +1919,30 @@ impl StageInput<'_> {
         let (reader, outcome) = self.open_archive(archive)?;
         match read(&reader) {
             Ok(bytes) => Ok((bytes, outcome)),
-            // Any retained-copy read can lose an eviction race (the
-            // reader holds a path, not a descriptor); GFS is canonical,
-            // so retry there — but if GFS cannot serve either (a
-            // warm-started retained copy may have no GFS twin left, or
-            // the member is genuinely corrupt), report the first error,
-            // not the retry's.
-            Err(primary) => {
-                match Reader::open(&self.gfs.join(archive)).and_then(|r| read(&r)) {
-                    Ok(bytes) => Ok((bytes, CacheOutcome::GfsMiss)),
-                    Err(_) => Err(primary),
-                }
+            Err(primary) => self.gfs_retry(archive, primary, read),
+        }
+    }
+
+    /// Any retained-copy (or staging-file) read can lose an eviction
+    /// race — the reader holds a path, not a descriptor. GFS is
+    /// canonical, so retry there; the retry is counted
+    /// ([`CacheSnapshot::fallback_reads`]) so the fig17 mix no longer
+    /// understates GFS traffic. If GFS cannot serve either (a
+    /// warm-started retained copy may have no GFS twin left, or the
+    /// member is genuinely corrupt), the *first* error is reported, not
+    /// the retry's.
+    fn gfs_retry(
+        &self,
+        archive: &str,
+        primary: anyhow::Error,
+        read: impl Fn(&Reader) -> Result<Vec<u8>>,
+    ) -> Result<(Vec<u8>, CacheOutcome)> {
+        match Reader::open(&self.gfs.join(archive)).and_then(|r| read(&r)) {
+            Ok(bytes) => {
+                self.caches[self.group as usize].note_fallback();
+                Ok((bytes, CacheOutcome::GfsMiss))
             }
+            Err(_) => Err(primary),
         }
     }
 }
@@ -1010,8 +1965,10 @@ pub struct StageStats {
     /// task sees [`CacheOutcome::GfsMiss`]) but still counts here — the
     /// per-read outcome is the effective source of truth.
     pub ifs_hits: u64,
-    /// Unique group-to-group fills from *any* retaining sibling's
-    /// retention (no central-store round trip) — routed plus producer.
+    /// Group-to-group service — routed plus producer: unique
+    /// whole-archive fills from a retaining sibling's retention, plus
+    /// record reads whose partial-fill chunks moved group-to-group (no
+    /// central-store round trip either way).
     pub neighbor_transfers: u64,
     /// The subset of `neighbor_transfers` the [`RetentionDirectory`]
     /// routed to a **non-producing** retaining group — load the producer
@@ -1021,10 +1978,22 @@ pub struct StageStats {
     /// itself (`neighbor_transfers - routed_transfers`; under the PR-3
     /// producer-only policy this was the whole neighbor tier).
     pub producer_transfers: u64,
-    /// Unique GFS round trips (read-through copies plus oversized
-    /// in-place reads). `ifs_hits + neighbor_transfers + gfs_misses`
-    /// equals the stage's total archive resolves.
+    /// GFS service: unique whole-archive round trips (read-through
+    /// copies plus oversized in-place reads) plus record reads whose
+    /// partial-fill chunks came from the canonical GFS copy.
+    /// `ifs_hits + neighbor_transfers + gfs_misses` equals the stage's
+    /// total archive resolves.
     pub gfs_misses: u64,
+    /// Chunks moved by the partial-fill engine for this stage's record
+    /// reads. The per-read tier of those reads is already folded into
+    /// `neighbor_transfers` / `gfs_misses` above; this is the
+    /// byte-granular movement count behind them (reads × covering
+    /// chunks, each chunk moved exactly once).
+    pub chunk_fills: u64,
+    /// Reads served by the direct-GFS retry after a lost eviction race
+    /// mid-read — GFS traffic that was previously invisible in this
+    /// report.
+    pub fallback_reads: u64,
     /// Wall-clock seconds for the stage (tasks + final drain).
     pub elapsed_s: f64,
 }
@@ -1096,11 +2065,19 @@ impl StageRunner {
     /// into one shared [`RetentionDirectory`] so cross-group fills route
     /// to the cheapest live source.
     pub fn new(layout: LocalLayout, graph: StageGraph, config: StageRunnerConfig) -> StageRunner {
-        let caches =
-            GroupCache::per_group_with(&layout, config.cache_capacity, config.neighbor_limit);
+        let caches = GroupCache::per_group_config(
+            &layout,
+            config.cache_capacity,
+            config.neighbor_limit,
+            config.fill_chunk_bytes.max(1),
+        );
         // A layout always has >= 1 IFS group; every cache shares one
         // directory, so any of them hands back the cluster-wide handle.
         let directory = caches[0].directory().clone();
+        // Cold-runner bootstrap: route to warm retention left by a
+        // previous (possibly differently-shaped) run from the first
+        // fill, not just to this layout's own warm-started groups.
+        bootstrap_directory(&layout, &directory);
         StageRunner { layout, graph, caches, directory, config }
     }
 
@@ -1286,9 +2263,15 @@ impl StageRunner {
             before.iter().zip(&after).map(|(b, a)| f(a) - f(b)).sum()
         };
         let resolves = delta(|s| s.hits) + delta(|s| s.misses);
-        let neighbor_transfers = delta(|s| s.neighbor_transfers);
-        let routed_transfers = delta(|s| s.routed_transfers);
-        let gfs_misses = delta(|s| s.gfs_copies) + delta(|s| s.gfs_direct);
+        // Record reads resolved by the partial engine move chunks, not
+        // whole archives; fold their per-read tiers into the mix so a
+        // GFS-fed record stage cannot masquerade as locally served.
+        let neighbor_transfers =
+            delta(|s| s.neighbor_transfers) + delta(|s| s.partial_neighbor_reads);
+        let routed_transfers = delta(|s| s.routed_transfers) + delta(|s| s.partial_routed_reads);
+        let gfs_misses = delta(|s| s.gfs_copies)
+            + delta(|s| s.gfs_direct)
+            + delta(|s| s.partial_gfs_reads);
         let stats = StageStats {
             name: stage_name,
             tasks: exec.tasks,
@@ -1300,6 +2283,8 @@ impl StageRunner {
             routed_transfers,
             producer_transfers: neighbor_transfers.saturating_sub(routed_transfers),
             gfs_misses,
+            chunk_fills: delta(|s| s.chunk_fills),
+            fallback_reads: delta(|s| s.fallback_reads),
             elapsed_s: t0.elapsed().as_secs_f64(),
         };
         Ok((stats, ProducedArchives { archives, members }))
@@ -1320,7 +2305,7 @@ impl Drop for StageRunner {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::units::{mib, SimTime};
+    use crate::util::units::{kib, mib, SimTime};
 
     fn tmp(tag: &str) -> PathBuf {
         let d = std::env::temp_dir().join(format!("cio-stage-{tag}-{}", std::process::id()));
@@ -1334,6 +2319,15 @@ mod tests {
             w.add(m, data, Compression::None).unwrap();
         }
         w.finish().unwrap();
+    }
+
+    /// Names of `.partial-*` staging files in `dir`.
+    fn partial_files(dir: &std::path::Path) -> Vec<String> {
+        std::fs::read_dir(dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+            .filter(|n| n.starts_with(PARTIAL_PREFIX))
+            .collect()
     }
 
     #[test]
@@ -1706,6 +2700,7 @@ mod tests {
             compression: Compression::None,
             cache_capacity: mib(64),
             neighbor_limit: mib(64),
+            fill_chunk_bytes: kib(64),
             threads: 4,
         };
         let mut runner = StageRunner::new(layout, graph, config);
@@ -1751,6 +2746,223 @@ mod tests {
     }
 
     #[test]
+    fn partial_record_read_moves_chunks_not_archive() {
+        let root = tmp("gc-partial");
+        let layout = LocalLayout::create(&root, 1, 1).unwrap();
+        let name = "s1-g0-00000.cioar";
+        let record = 4096usize;
+        let records = 32usize;
+        let data: Vec<u8> = (0..records * record).map(|i| (i % 251) as u8).collect();
+        write_archive(&layout.gfs(), name, &[("m", &data)]);
+        let total = std::fs::metadata(layout.gfs().join(name)).unwrap().len();
+        let cache = GroupCache::new(&layout, 0, mib(16)).with_fill_chunk(record as u64);
+        let chunks = total.div_ceil(record as u64);
+
+        // One cold record read: index extent + the record's chunks move,
+        // nothing else — no whole-archive fill, no retained copy yet.
+        let (bytes, outcome) = cache
+            .read_member_range_via(&layout.gfs(), name, &[], "m", record as u64, record)
+            .unwrap();
+        assert_eq!(bytes, data[record..2 * record], "byte-exact record");
+        assert_eq!(outcome, CacheOutcome::GfsMiss, "cold chunks come from GFS");
+        let snap = cache.snapshot();
+        assert_eq!(snap.gfs_copies, 0, "no whole-archive fill: {snap:?}");
+        assert_eq!(snap.partial_gfs_reads, 1, "the read's GFS tier is attributed: {snap:?}");
+        assert!(snap.chunk_fills >= 2 && snap.chunk_fills <= 5, "{snap:?}");
+        assert!(
+            snap.chunk_fills < chunks / 2,
+            "a record read must move O(record + index) chunks, not O(archive): {snap:?}"
+        );
+        assert!(snap.partial_bytes > 0 && snap.partial_bytes < total, "{snap:?}");
+        assert!(!cache.contains(name), "partial residency is not retention");
+        assert_eq!((snap.hits, snap.misses), (0, 1));
+
+        // A re-read of the same record is chunk-resident: no new fills.
+        let before = cache.snapshot().chunk_fills;
+        let (_, outcome) = cache
+            .read_member_range_via(&layout.gfs(), name, &[], "m", record as u64, record)
+            .unwrap();
+        assert_eq!(outcome, CacheOutcome::IfsHit, "resident chunks serve locally");
+        assert_eq!(cache.snapshot().chunk_fills, before, "no chunk is fetched twice");
+
+        // Reading every record completes the bitmap and promotes the
+        // staging file to ordinary retention.
+        for r in 0..records {
+            let off = (r * record) as u64;
+            let (bytes, _) =
+                cache.read_member_range_via(&layout.gfs(), name, &[], "m", off, record).unwrap();
+            assert_eq!(bytes, data[r * record..(r + 1) * record], "record {r}");
+        }
+        let snap = cache.snapshot();
+        assert_eq!(snap.chunk_fills, chunks, "every chunk moved exactly once: {snap:?}");
+        assert_eq!(snap.partial_bytes, 0, "promotion drains partial accounting: {snap:?}");
+        assert!(cache.contains(name), "completed partial must be promoted");
+        assert!(partial_files(&layout.ifs_data(0)).is_empty(), "staging file renamed away");
+        let (_, outcome) = cache.open_archive(&layout.gfs(), name).unwrap();
+        assert_eq!(outcome, CacheOutcome::IfsHit, "promoted copy is an ordinary hit");
+    }
+
+    #[test]
+    fn whole_archive_consumer_completes_inflight_partial() {
+        let root = tmp("gc-partial-full");
+        let layout = LocalLayout::create(&root, 1, 1).unwrap();
+        let name = "s1-g0-00000.cioar";
+        let data: Vec<u8> = (0..100_000).map(|i| (i % 249) as u8).collect();
+        write_archive(&layout.gfs(), name, &[("m", &data)]);
+        let total = std::fs::metadata(layout.gfs().join(name)).unwrap().len();
+        let cache = GroupCache::new(&layout, 0, mib(16)).with_fill_chunk(8192);
+
+        // A record read starts the partial fill...
+        let (_, outcome) =
+            cache.read_member_range_via(&layout.gfs(), name, &[], "m", 0, 4096).unwrap();
+        assert_eq!(outcome, CacheOutcome::GfsMiss);
+        let after_record = cache.snapshot().chunk_fills;
+        assert!(after_record > 0);
+        // ...then a whole-archive consumer requests the full extent
+        // through the same engine: already-resident chunks never move
+        // again, and the completed staging file is promoted.
+        let (r, outcome) = cache.open_archive(&layout.gfs(), name).unwrap();
+        assert_eq!(outcome, CacheOutcome::GfsMiss, "remaining chunks came from GFS");
+        assert_eq!(r.extract("m").unwrap(), data, "byte-exact after completion");
+        let snap = cache.snapshot();
+        assert_eq!(
+            snap.chunk_fills,
+            total.div_ceil(8192),
+            "completion moved only the missing chunks: {snap:?}"
+        );
+        assert_eq!(snap.gfs_copies, 1, "the completion counts as the unique fill");
+        assert!(cache.contains(name));
+        assert_eq!(snap.partial_bytes, 0);
+        assert!(after_record < snap.chunk_fills);
+    }
+
+    #[test]
+    fn partial_chunks_pull_from_routed_sibling() {
+        let root = tmp("gc-partial-sib");
+        let layout = LocalLayout::create(&root, 2, 1).unwrap(); // groups 0, 1
+        let name = "s1-g0-00000.cioar";
+        let data: Vec<u8> = (0..60_000).map(|i| (i % 247) as u8).collect();
+        write_archive(&layout.gfs(), name, &[("m", &data)]);
+        let directory = Arc::new(RetentionDirectory::new(layout.ifs_groups()));
+        let caches: Vec<GroupCache> = (0..2)
+            .map(|g| {
+                GroupCache::with_directory(&layout, g, mib(16), mib(16), directory.clone())
+                    .with_fill_chunk(4096)
+            })
+            .collect();
+        caches[0].retain(&layout.gfs().join(name), name).unwrap();
+        // An archive over the neighbor-transfer cap keeps the
+        // whole-archive policy: its chunks come from GFS, never
+        // group-to-group, even with a live advertised source.
+        let capped = GroupCache::with_directory(&layout, 1, mib(16), 1024, directory.clone())
+            .with_fill_chunk(4096);
+        let (bytes, outcome) =
+            capped.read_member_range_via(&layout.gfs(), name, &caches, "m", 0, 4096).unwrap();
+        assert_eq!(bytes, data[..4096]);
+        assert_eq!(outcome, CacheOutcome::GfsMiss, "over-cap chunks must bypass siblings");
+        assert_eq!(capped.directory().serves(name, 0), 0, "the sibling served nothing");
+        // Group 1's record read pulls its chunks group-to-group.
+        let (bytes, outcome) = caches[1]
+            .read_member_range_via(&layout.gfs(), name, &caches, "m", 8192, 4096)
+            .unwrap();
+        assert_eq!(bytes, data[8192..12288]);
+        assert_eq!(outcome, CacheOutcome::NeighborTransfer, "chunks served by the sibling");
+        let snap = caches[1].snapshot();
+        assert!(snap.chunk_fills > 0 && snap.gfs_copies == 0, "{snap:?}");
+        assert_eq!(
+            (snap.partial_neighbor_reads, snap.partial_gfs_reads),
+            (1, 0),
+            "the read's neighbor tier is attributed: {snap:?}"
+        );
+        let dir = caches[1].directory();
+        assert!(dir.serves(name, 0) > 0, "the sibling's serve is accounted");
+        assert_eq!(dir.inflight_serves(0), 0, "serve accounting drains");
+    }
+
+    #[test]
+    fn clear_prefix_drops_partial_staging() {
+        let root = tmp("gc-partial-clear");
+        let layout = LocalLayout::create(&root, 1, 1).unwrap();
+        let name = "s1-g0-00000.cioar";
+        write_archive(&layout.gfs(), name, &[("m", &vec![3u8; 50_000])]);
+        let cache = GroupCache::new(&layout, 0, mib(16)).with_fill_chunk(4096);
+        cache.read_member_range_via(&layout.gfs(), name, &[], "m", 0, 1024).unwrap();
+        assert!(cache.snapshot().partial_bytes > 0);
+        assert_eq!(partial_files(&layout.ifs_data(0)).len(), 1, "staging file while partial");
+        cache.clear_prefix("s1").unwrap();
+        assert_eq!(cache.snapshot().partial_bytes, 0, "cleared partials drop accounting");
+        assert!(partial_files(&layout.ifs_data(0)).is_empty(), "staging file cleared");
+        // A fresh cache on the same layout clears crashed-run leftovers.
+        cache.read_member_range_via(&layout.gfs(), name, &[], "m", 0, 1024).unwrap();
+        assert_eq!(partial_files(&layout.ifs_data(0)).len(), 1);
+        drop(cache);
+        let _fresh = GroupCache::new(&layout, 0, mib(16));
+        assert!(
+            partial_files(&layout.ifs_data(0)).is_empty(),
+            "constructor clears stale partial staging"
+        );
+    }
+
+    #[test]
+    fn eviction_race_gfs_fallback_is_counted() {
+        // The PR-5 bugfix: a read that resolves a retained copy and then
+        // loses it mid-read is served by the direct-GFS retry — which
+        // used to be invisible in the snapshot, understating GFS traffic.
+        let root = tmp("gc-fallback");
+        let layout = LocalLayout::create(&root, 1, 1).unwrap();
+        let name = "s1-g0-00000.cioar";
+        write_archive(&layout.gfs(), name, &[("m", b"fallback bytes")]);
+        let caches = GroupCache::per_group(&layout, mib(16));
+        caches[0].retain(&layout.gfs().join(name), name).unwrap();
+        let mut members = BTreeMap::new();
+        members.insert("m".to_string(), (name.to_string(), 0u32));
+        let archives = vec![(name.to_string(), 0u32)];
+        let input = StageInput {
+            gfs: layout.gfs(),
+            caches: caches.as_slice(),
+            group: 0,
+            members: &members,
+            archives: &archives,
+        };
+        // Corrupt one data byte of the retained copy behind the
+        // accounting (the index still parses): the hit extract fails its
+        // CRC, the canonical GFS copy serves the member, and the retry
+        // is counted.
+        let retained = layout.ifs_data(0).join(name);
+        let mut bytes = std::fs::read(&retained).unwrap();
+        bytes[30] ^= 0xFF; // inside member data
+        std::fs::write(&retained, &bytes).unwrap();
+        let (bytes, outcome) = input.read_member("m").unwrap();
+        assert_eq!(bytes, b"fallback bytes");
+        assert_eq!(outcome, CacheOutcome::GfsMiss, "the honest per-read outcome");
+        assert_eq!(caches[0].snapshot().fallback_reads, 1, "the GFS retry must be counted");
+        // Record reads fall back (and count) too: the retained file
+        // vanishes entirely behind the accounting.
+        std::fs::remove_file(&retained).unwrap();
+        let (bytes, outcome) = input.read_member_range("m", 9, 5).unwrap();
+        assert_eq!(bytes, b"bytes");
+        assert_eq!(outcome, CacheOutcome::GfsMiss);
+        assert_eq!(caches[0].snapshot().fallback_reads, 2);
+    }
+
+    #[test]
+    fn oversized_archive_record_read_stays_gfs_direct() {
+        let root = tmp("gc-partial-big");
+        let layout = LocalLayout::create(&root, 1, 1).unwrap();
+        let name = "s1-g0-00000.cioar";
+        write_archive(&layout.gfs(), name, &[("m", &vec![9u8; 8192])]);
+        let cache = GroupCache::new(&layout, 0, 64).with_fill_chunk(1024); // tiny cache
+        let (bytes, outcome) = cache
+            .read_member_range_via(&layout.gfs(), name, &[], "m", 100, 50)
+            .unwrap();
+        assert_eq!(bytes, vec![9u8; 50]);
+        assert_eq!(outcome, CacheOutcome::GfsMiss);
+        let snap = cache.snapshot();
+        assert_eq!((snap.gfs_direct, snap.chunk_fills, snap.partial_bytes), (1, 0, 0), "{snap:?}");
+        assert!(partial_files(&layout.ifs_data(0)).is_empty(), "oversized: no staging");
+    }
+
+    #[test]
     fn task_error_aborts_stage_but_drains_collector() {
         let root = tmp("runner-err");
         let layout = LocalLayout::create(&root, 2, 2).unwrap();
@@ -1764,6 +2976,7 @@ mod tests {
             compression: Compression::None,
             cache_capacity: mib(4),
             neighbor_limit: mib(4),
+            fill_chunk_bytes: kib(64),
             threads: 1,
         };
         let mut runner = StageRunner::new(layout, graph, config);

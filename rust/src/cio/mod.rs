@@ -54,6 +54,15 @@
 //!   through the routed four-step resolve (IFS hit → routed neighbor →
 //!   producer → GFS round trip + read-through re-stage) — the Figure 17
 //!   stage-2 ablation, measurable on real data.
+//! * [`extent`] — the PR-5 tentpole: the chunked partial-fill engine.
+//!   [`extent::ExtentMap`] (chunk bitmap + per-chunk singleflight
+//!   latches) governs a sparse staging file per cold archive, so a
+//!   record read fetches only the chunks covering the index and the
+//!   record's extent — the read starts before the archive lands, cold
+//!   first-record latency tracks the record size, and concurrent
+//!   readers of disjoint records fill in parallel. When the bitmap
+//!   completes, [`local_stage::GroupCache`] promotes the staging file to
+//!   ordinary retention.
 //! * [`directory`] — the PR-4 tentpole: a cluster-wide
 //!   [`directory::RetentionDirectory`] tracks which groups retain each
 //!   archive (updated on retains, fills, evictions, clears, and manifest
@@ -91,6 +100,7 @@ pub mod collector;
 pub mod directory;
 pub mod dispatch;
 pub mod distributor;
+pub mod extent;
 pub mod local;
 pub mod local_stage;
 pub mod placement;

@@ -107,6 +107,18 @@ impl PlacementPolicy {
     pub fn neighbor_transfer_limit(&self) -> u64 {
         self.retention_capacity() / 4
     }
+
+    /// Chunk size of the §5.3 partial-fill engine
+    /// ([`crate::cio::extent::ExtentMap`]): the unit a cold record read
+    /// moves instead of the whole archive. Scaled as 1/4096 of the IFS
+    /// capacity — deep enough that a full archive still completes in a
+    /// few thousand requests — and clamped to [64 KiB, 4 MiB]: below
+    /// that the per-chunk request overhead dominates the transfer
+    /// (`estimate_partial_read` charges one request per chunk), above it
+    /// a single record read starts paying archive-scale latency again.
+    pub fn fill_chunk_bytes(&self) -> u64 {
+        (self.ifs_limit / 4096).clamp(crate::util::units::kib(64), crate::util::units::mib(4))
+    }
 }
 
 /// Torus hop distance between IFS groups `a` and `b` when `groups` groups
@@ -268,6 +280,18 @@ mod tests {
         assert_eq!(p.ifs_limit, gib(64), "32 x 2GB stripes");
         assert_eq!(p.retention_capacity(), gib(32), "retention takes half the IFS");
         assert_eq!(p.neighbor_transfer_limit(), gib(8), "neighbor pulls capped at a quarter");
+        assert_eq!(p.fill_chunk_bytes(), mib(4), "64 GiB IFS -> 16 MiB, clamped to 4 MiB");
+    }
+
+    #[test]
+    fn fill_chunk_scales_with_ifs_and_clamps() {
+        let mut p = policy();
+        p.ifs_limit = gib(4);
+        assert_eq!(p.fill_chunk_bytes(), mib(1), "4 GiB / 4096");
+        p.ifs_limit = mib(16);
+        assert_eq!(p.fill_chunk_bytes(), 64 * 1024, "floor at 64 KiB");
+        p.ifs_limit = gib(1024);
+        assert_eq!(p.fill_chunk_bytes(), mib(4), "ceiling at 4 MiB");
     }
 
     #[test]

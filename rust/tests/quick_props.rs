@@ -177,6 +177,83 @@ fn prop_archive_and_member_names_round_trip() {
 }
 
 #[test]
+fn prop_chunk_cover_is_exact_and_never_double_fetches() {
+    use cio::cio::extent::{chunk_cover, chunk_runs, chunk_span, ExtentMap};
+    // For arbitrary (offset, len, chunk_size, total): the cover's chunk
+    // spans tile the requested range exactly — every requested byte is
+    // covered, every covered chunk intersects the range (no overshoot
+    // beyond one chunk's rounding), and planning the same range twice
+    // against an ExtentMap claims each chunk exactly once in total.
+    let gen = pair(
+        pair(pair(Gen::u64(0..1 << 20), Gen::u64(0..1 << 18)), Gen::u64(1..1 << 16)),
+        Gen::u64(1..1 << 20),
+    );
+    forall("chunk cover exactness", 300, gen, |&(((offset, len), chunk), total)| {
+        let cover = chunk_cover(offset, len, chunk);
+        if len == 0 && !cover.is_empty() {
+            return false;
+        }
+        if len > 0 {
+            // Coverage: the union of chunk byte ranges ⊇ [offset, offset+len).
+            let lo = cover.start * chunk;
+            let hi = cover.end * chunk;
+            if lo > offset || hi < offset + len {
+                return false;
+            }
+            // Minimality: first and last chunk intersect the range.
+            if lo + chunk <= offset || (cover.end - 1) * chunk >= offset + len {
+                return false;
+            }
+            // Exact count, directly from the geometry.
+            let expect = (offset + len - 1) / chunk - offset / chunk + 1;
+            if cover.end - cover.start != expect {
+                return false;
+            }
+        }
+        // Runs partition the cover: same chunks, same order, contiguous.
+        let chunks: Vec<u64> = cover.clone().collect();
+        let runs = chunk_runs(&chunks);
+        let flat: Vec<u64> = runs.iter().flat_map(|r| r.clone()).collect();
+        if flat != chunks {
+            return false;
+        }
+        // Spans tile [0, total) back to back.
+        let map = ExtentMap::new(total, chunk);
+        let mut expect_start = 0u64;
+        for c in 0..map.chunks() {
+            let span = chunk_span(c, chunk, total);
+            if span.start != expect_start || span.end < span.start {
+                return false;
+            }
+            expect_start = span.end;
+        }
+        if expect_start != total {
+            return false;
+        }
+        // No chunk is ever claimed (fetched) twice: two identical plans
+        // split the cover disjointly, and after committing both, the
+        // range is fully resident and a third plan claims nothing.
+        let a = map.plan(offset, len);
+        let b = map.plan(offset, len);
+        let mut all: Vec<u64> = a.mine.iter().chain(b.mine.iter()).copied().collect();
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        if all.len() != n {
+            return false; // a chunk was claimed twice
+        }
+        let clamped = chunk_cover(offset.min(total), len.min(total - offset.min(total)), chunk);
+        if n as u64 != clamped.end - clamped.start {
+            return false; // claims must cover the (clamped) range exactly
+        }
+        for &c in &all {
+            map.commit(c);
+        }
+        map.plan(offset, len).resident()
+    });
+}
+
+#[test]
 fn prop_group_torus_distance_is_a_metric() {
     // Identity, symmetry, and the per-axis wraparound bound (each axis
     // contributes at most half its ring).

@@ -152,6 +152,7 @@ fn multistage_chain_hits_ifs_retention() {
         compression: Compression::Deflate,
         cache_capacity: mib(64),
         neighbor_limit: mib(64),
+        fill_chunk_bytes: kib(64),
         threads: 4,
     };
     let mut runner = StageRunner::new(layout, graph, config);
@@ -236,6 +237,7 @@ fn cross_group_reads_served_by_neighbor_transfers() {
         compression: Compression::None,
         cache_capacity: mib(64),
         neighbor_limit: mib(64),
+        fill_chunk_bytes: kib(64),
         threads: 4,
     };
     let mut runner = StageRunner::new(layout, graph, config);
@@ -290,6 +292,7 @@ fn routed_alltoall_spreads_load_off_producer() {
         neighbor_limit: mib(64),
         // Sequential tasks: each fill is published to the directory
         // before the next resolve routes, so the spread is deterministic.
+        fill_chunk_bytes: kib(64),
         threads: 1,
     };
     let mut runner = StageRunner::new(layout, graph, config);
@@ -486,6 +489,7 @@ fn record_granular_reads_cut_read_volume() {
         compression: Compression::None, // records need uncompressed extents
         cache_capacity: mib(64),
         neighbor_limit: mib(64),
+        fill_chunk_bytes: kib(64),
         threads: 2,
     };
     let mut runner = StageRunner::new(layout, graph, config);
@@ -543,6 +547,302 @@ fn record_granular_reads_cut_read_volume() {
 }
 
 #[test]
+fn concurrent_disjoint_record_reads_share_one_cold_archive() {
+    // The PR-5 acceptance shape: N readers hit N disjoint records of ONE
+    // cold archive concurrently. Under the old whole-archive latch they
+    // would serialize behind a single fill; under the chunked engine
+    // each reader fetches its own covering chunks (plus the shared index
+    // extent, fetched once) and no whole-archive fill ever happens —
+    // asserted via the chunk-fill probe counters.
+    let root = workspace("partial-conc");
+    let layout = LocalLayout::create(&root, 1, 1).unwrap();
+    let name = "s1-g0-00000.cioar";
+    let record = 8192usize;
+    let readers = 8usize;
+    let data: Vec<u8> = (0..readers * record).map(|i| (i % 251) as u8).collect();
+    {
+        let mut w = Writer::create(&layout.gfs().join(name)).unwrap();
+        w.add("m", &data, Compression::None).unwrap();
+        w.finish().unwrap();
+    }
+    let total = std::fs::metadata(layout.gfs().join(name)).unwrap().len();
+    let cache = GroupCache::new(&layout, 0, mib(64)).with_fill_chunk(record as u64);
+    let barrier = std::sync::Barrier::new(readers);
+    std::thread::scope(|scope| {
+        for t in 0..readers {
+            let cache = &cache;
+            let layout = &layout;
+            let barrier = &barrier;
+            let data = &data;
+            scope.spawn(move || {
+                barrier.wait();
+                let (bytes, _outcome) = cache
+                    .read_member_range_via(
+                        &layout.gfs(),
+                        name,
+                        &[],
+                        "m",
+                        (t * record) as u64,
+                        record,
+                    )
+                    .unwrap();
+                assert_eq!(
+                    bytes,
+                    data[t * record..(t + 1) * record],
+                    "reader {t}: byte-exact disjoint record"
+                );
+            });
+        }
+    });
+    let snap = cache.snapshot();
+    assert_eq!(snap.gfs_copies, 0, "no whole-archive fill may happen: {snap:?}");
+    assert!(snap.chunk_fills > 0, "{snap:?}");
+    assert!(
+        snap.chunk_fills <= total.div_ceil(record as u64),
+        "chunk singleflight: no chunk moves twice even under contention: {snap:?}"
+    );
+    assert_eq!(snap.misses, readers as u64, "every cold record read is an honest miss");
+    // The archive completed (the 8 records + index cover everything), so
+    // it must have been promoted to ordinary retention.
+    assert!(cache.contains(name), "completed partial promotes to retention: {snap:?}");
+    assert_eq!(snap.partial_bytes, 0, "{snap:?}");
+}
+
+#[test]
+fn partial_readers_race_evictor_byte_exact_no_wedged_latch() {
+    // Churn: record readers resolve disjoint records of popular archives
+    // through the partial engine while a background evictor keeps
+    // churning retention (promotions race retains race eviction
+    // unlinks). Every read must be byte-exact whatever tier serves it, a
+    // lost race may only cost a counted fallback, and at quiescence no
+    // chunk latch is wedged — a fresh read of every record still works.
+    let root = workspace("partial-churn");
+    let layout = LocalLayout::create(&root, 2, 1).unwrap(); // 2 groups
+    let gfs = layout.gfs();
+    let record = 4096usize;
+    let records = 8usize;
+    fn payload(i: usize, len: usize) -> Vec<u8> {
+        (0..len).map(|j| ((i * 37) as u8) ^ (j as u8)).collect()
+    }
+    let popular: Vec<String> = (0..3usize)
+        .map(|i| {
+            let name = format!("s0-g0-{i:05}.cioar");
+            let mut w = Writer::create(&gfs.join(&name)).unwrap();
+            w.add("m", &payload(i, records * record), Compression::None).unwrap();
+            w.finish().unwrap();
+            name
+        })
+        .collect();
+    let filler = "s9-g0-00000.cioar";
+    {
+        let mut w = Writer::create(&gfs.join(filler)).unwrap();
+        w.add("f", &vec![0x5Au8; records * record], Compression::None).unwrap();
+        w.finish().unwrap();
+    }
+    let arch = std::fs::metadata(gfs.join(&popular[0])).unwrap().len();
+    // Fits ~2 archives per group: promotions and retains evict furiously.
+    let caches = GroupCache::per_group_config(&layout, 2 * arch + 64, 2 * arch + 64, 4096);
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let evictor = {
+            let caches = &caches;
+            let gfs = &gfs;
+            let stop = &stop;
+            scope.spawn(move || {
+                let mut round = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let g = round % 2;
+                    caches[g].retain(&gfs.join(filler), filler).unwrap();
+                    round += 1;
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let handles: Vec<_> = (0..6u32)
+            .map(|t| {
+                let caches = &caches;
+                let gfs = &gfs;
+                let popular = &popular;
+                scope.spawn(move || {
+                    for i in 0..60u32 {
+                        let g = ((t + i) % 2) as usize;
+                        let idx = ((t + i) % 3) as usize;
+                        let r = ((t as usize + i as usize) * 5) % records;
+                        let (bytes, _outcome) = caches[g]
+                            .read_member_range_via(
+                                gfs,
+                                &popular[idx],
+                                caches,
+                                "m",
+                                (r * record) as u64,
+                                record,
+                            )
+                            .unwrap();
+                        let want = payload(idx, records * record);
+                        assert_eq!(
+                            bytes,
+                            want[r * record..(r + 1) * record],
+                            "reader {t} iter {i}: wrong bytes"
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        evictor.join().unwrap();
+    });
+    // No wedged chunk latch: a fresh read of every record of every
+    // archive still resolves, byte-exact, in every group.
+    for cache in caches.iter() {
+        for (i, name) in popular.iter().enumerate() {
+            let want = payload(i, records * record);
+            for r in 0..records {
+                let (bytes, _) = cache
+                    .read_member_range_via(
+                        &gfs,
+                        name,
+                        &caches,
+                        "m",
+                        (r * record) as u64,
+                        record,
+                    )
+                    .unwrap();
+                assert_eq!(bytes, want[r * record..(r + 1) * record], "post-churn {name}:{r}");
+            }
+        }
+    }
+    // Quiescent agreement between directory, accounting, and disk still
+    // holds with the partial engine in the mix.
+    let dir = caches[0].directory();
+    for cache in caches.iter() {
+        for name in popular.iter().chain(std::iter::once(&filler.to_string())) {
+            let listed = dir.sources(name).contains(&cache.group());
+            assert_eq!(listed, cache.contains(name), "directory vs accounting for {name}");
+            if listed {
+                assert!(layout.ifs_data(cache.group()).join(name).is_file());
+            }
+        }
+    }
+}
+
+#[test]
+fn cold_runner_bootstraps_directory_from_foreign_manifests() {
+    // ROADMAP follow-up: runner A ran an all-to-all with four 1-node
+    // groups, so every group retained every stage-1 archive; runner B
+    // comes up on the same root with only TWO groups, and its own
+    // retention is wiped. B's caches can only warm-start groups 0 and 1
+    // (both empty) — but StageRunner::new scans every
+    // ifs/*/cache.manifest, so the directory also advertises groups 2
+    // and 3's retention, and B's first fill routes group-to-group to a
+    // bootstrapped source with zero GFS round trips — even to a
+    // *non-producing* replica when the producer's copy is gone.
+    let root = workspace("bootstrap");
+    let layout_a = LocalLayout::create(&root, 4, 1).unwrap(); // 4 groups
+    let config = StageRunnerConfig {
+        policy: Policy {
+            max_delay: SimTime::from_secs(3600),
+            max_data: 1024,
+            min_free_space: 0,
+        },
+        compression: Compression::None,
+        cache_capacity: mib(64),
+        neighbor_limit: mib(64),
+        fill_chunk_bytes: kib(64),
+        threads: 4,
+    };
+    let tasks = 8u32;
+    let produce =
+        |t: u32, _in: &StageInput<'_>| -> anyhow::Result<Vec<u8>> { Ok(vec![t as u8; 2048]) };
+    let gather = move |_t: u32, input: &StageInput<'_>| -> anyhow::Result<Vec<u8>> {
+        for t in 0..tasks {
+            let (bytes, _) = input.read_member(&task_output_name(0, "produce", t))?;
+            anyhow::ensure!(bytes == vec![t as u8; 2048], "task {t} corrupt");
+        }
+        Ok(vec![1])
+    };
+    let archives: Vec<String> = {
+        let graph = StageGraph::chain(&["produce", "gather"]);
+        let mut runner = StageRunner::new(layout_a.clone(), graph, config.clone());
+        let report = runner
+            .run(&[StageExec { tasks, run: &produce }, StageExec { tasks, run: &gather }])
+            .unwrap();
+        assert_eq!(report.stages[1].gfs_misses, 0);
+        report.stages[0].archives.clone()
+        // runner A drops -> every group's manifest persists
+    };
+    // Pick a victim produced by group 2; after the all-to-all every
+    // group retains it. Kill the producer's copy and B's own groups'
+    // retention entirely, and drop the canonical GFS copy — the only
+    // live sources left are the foreign non-producing groups (3).
+    let victim =
+        archives.iter().find(|n| archive_group(n) == Some(2)).expect("group-2 archive").clone();
+    std::fs::remove_file(layout_a.ifs_data(2).join(&victim)).unwrap();
+    std::fs::remove_file(layout_a.gfs().join(&victim)).unwrap();
+    for g in 0..2u32 {
+        std::fs::remove_dir_all(layout_a.ifs_data(g)).unwrap();
+        std::fs::create_dir_all(layout_a.ifs_data(g)).unwrap();
+        let _ = std::fs::remove_file(layout_a.ifs_manifest(g));
+    }
+
+    let layout_b = LocalLayout { root: root.clone(), nodes: 2, cn_per_ifs: 1 }; // 2 groups
+    let graph = StageGraph::chain(&["noop"]);
+    let runner_b = StageRunner::new(layout_b, graph, config);
+    let dir = runner_b.directory();
+    assert!(
+        dir.sources(&victim).contains(&3),
+        "bootstrap must advertise group 3's retention of {victim}: {:?}",
+        dir.sources(&victim)
+    );
+    assert!(
+        !dir.sources(&victim).contains(&2),
+        "the producer's dead copy must not be advertised: {:?}",
+        dir.sources(&victim)
+    );
+    // Resolving the victim from B's group 0: a routed transfer from the
+    // bootstrapped non-producing source — not GFS (no copy left), not
+    // the producer (copy dead), not an error.
+    let caches = runner_b.caches();
+    let (reader, outcome) =
+        caches[0].open_archive_via(&runner_b.layout().gfs(), &victim, caches).unwrap();
+    assert_eq!(outcome, CacheOutcome::NeighborTransfer, "bootstrap-routed fill");
+    assert!(!reader.is_empty());
+    let snap = caches[0].snapshot();
+    assert_eq!(
+        (snap.neighbor_transfers, snap.routed_transfers, snap.gfs_copies, snap.gfs_direct),
+        (1, 1, 0, 0),
+        "routed to warm sibling retention with gfs_misses == 0: {snap:?}"
+    );
+    // Record reads resolve through bootstrapped sources too: B group 1
+    // partial-reads a different high-group archive whose GFS copy is
+    // also gone. (Find the group-3 archive actually holding task 3's
+    // output — with per-commit flushes each g3 archive holds one task.)
+    let member = task_output_name(0, "produce", 3); // node 3 -> group 3
+    let other = archives
+        .iter()
+        .filter(|n| archive_group(n) == Some(3))
+        .find(|n| {
+            Reader::open(&layout_a.ifs_data(3).join(n.as_str()))
+                .map(|r| r.entry(&member).is_some())
+                .unwrap_or(false)
+        })
+        .expect("an archive holding task 3's output")
+        .clone();
+    std::fs::remove_file(layout_a.gfs().join(&other)).unwrap();
+    let cold = caches.iter().find(|c| c.group() == 1).unwrap();
+    let (bytes, outcome) = cold
+        .read_member_range_via(&runner_b.layout().gfs(), &other, caches, &member, 0, 64)
+        .unwrap();
+    assert_eq!(outcome, CacheOutcome::NeighborTransfer);
+    assert_eq!(bytes, vec![3u8; 64]);
+    let snap = cold.snapshot();
+    assert_eq!((snap.gfs_copies, snap.gfs_direct), (0, 0), "{snap:?}");
+    assert!(snap.chunk_fills > 0, "chunks came from the bootstrapped source: {snap:?}");
+}
+
+#[test]
 fn retention_warm_starts_across_runner_instances() {
     // §7 "learn from previous runs": a second StageRunner on the same
     // layout must warm-start its caches from the manifests the first one
@@ -558,6 +858,7 @@ fn retention_warm_starts_across_runner_instances() {
         compression: Compression::None,
         cache_capacity: mib(64),
         neighbor_limit: mib(64),
+        fill_chunk_bytes: kib(64),
         threads: 2,
     };
     let produce =
