@@ -15,6 +15,7 @@
 
 use cio::cio::archive::{Compression, Reader};
 use cio::cio::collector::Policy;
+use cio::cio::fault::RetryPolicy;
 use cio::cio::local::LocalLayout;
 use cio::cio::local_stage::{
     task_output_name, StageExec, StageInput, StageRunner, StageRunnerConfig,
@@ -42,6 +43,8 @@ fn main() -> anyhow::Result<()> {
         neighbor_limit: mib(64),
         fill_chunk_bytes: kib(64),
         threads: 8,
+        retry: RetryPolicy::default(),
+        faults: None,
     };
     let mut runner = StageRunner::new(layout, graph, config);
     let t0 = Instant::now();

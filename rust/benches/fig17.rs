@@ -15,6 +15,7 @@ mod common;
 
 use cio::cio::archive::Compression;
 use cio::cio::collector::Policy;
+use cio::cio::fault::RetryPolicy;
 use cio::cio::local::LocalLayout;
 use cio::cio::local_stage::{
     task_output_name, StageExec, StageInput, StageRunner, StageRunnerConfig,
@@ -39,8 +40,9 @@ fn read_mix_sweep() {
     let tasks = 16u32;
     println!("--- stage-2 read-tier mix vs cn_per_ifs (real bytes, {nodes} nodes) ---");
     println!(
-        "{:>10} {:>6} {:>8} {:>7} {:>9} {:>8} {:>9} {:>6}",
-        "cn_per_ifs", "groups", "ifs_hit", "routed", "producer", "gfs", "fallback", "hit%"
+        "{:>10} {:>6} {:>8} {:>7} {:>9} {:>8} {:>9} {:>6} {:>7} {:>8} {:>8}",
+        "cn_per_ifs", "groups", "ifs_hit", "routed", "producer", "gfs", "fallback", "hit%",
+        "retries", "rerouted", "degraded"
     );
     for cn in [1u32, 2, 4, 8] {
         let root =
@@ -59,6 +61,8 @@ fn read_mix_sweep() {
             neighbor_limit: mib(64),
             fill_chunk_bytes: kib(64),
             threads: 4,
+            retry: RetryPolicy::default(),
+            faults: None,
         };
         let mut runner = StageRunner::new(layout, graph, config);
         let produce =
@@ -80,7 +84,7 @@ fn read_mix_sweep() {
         let s = &report.stages[1];
         let total = (s.ifs_hits + s.neighbor_transfers + s.gfs_misses).max(1);
         println!(
-            "{:>10} {:>6} {:>8} {:>7} {:>9} {:>8} {:>9} {:>5.0}%",
+            "{:>10} {:>6} {:>8} {:>7} {:>9} {:>8} {:>9} {:>5.0}% {:>7} {:>8} {:>8}",
             cn,
             runner.layout().ifs_groups(),
             s.ifs_hits,
@@ -90,7 +94,12 @@ fn read_mix_sweep() {
             // The previously invisible eviction-race GFS retries: real
             // central-store traffic the tier counters cannot see.
             s.fallback_reads,
-            100.0 * s.ifs_hits as f64 / total as f64
+            100.0 * s.ifs_hits as f64 / total as f64,
+            // PR-6 fault-chain columns: zero on a healthy run — printed
+            // so a faulty one is visible at a glance.
+            s.retries,
+            s.rerouted_fills,
+            s.degraded_reads
         );
         drop(runner);
         let _ = std::fs::remove_dir_all(&root);

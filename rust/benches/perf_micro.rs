@@ -13,6 +13,7 @@ mod common;
 
 use cio::cio::archive::{read_sequential, Compression, Reader, Writer};
 use cio::cio::collector::Policy;
+use cio::cio::fault::{FaultAction, FaultInjector, OpClass, RetryPolicy};
 use cio::cio::local::{LocalCollector, LocalLayout};
 use cio::cio::local_stage::{
     task_output_name, GroupCache, StageExec, StageInput, StageRunner, StageRunnerConfig,
@@ -547,6 +548,8 @@ fn main() {
         // next resolve routes, so the spread is deterministic.
         fill_chunk_bytes: kib(64),
         threads: 1,
+        retry: RetryPolicy::default(),
+        faults: None,
     };
     let mut sp_runner = StageRunner::new(splayout, sp_graph, sp_config);
     let sp_tasks = 8u32;
@@ -636,6 +639,91 @@ fn main() {
     b.metric("stage2: concurrent fill speedup", serial_best / conc_best, "x");
     b.metric("stage2: concurrent fill threads", fill_threads as f64, "threads");
     let _ = std::fs::remove_dir_all(&croot);
+
+    // --- Flaky-source record reads (the PR-6 fault chain): the same
+    // record-read workload three ways — plain, with an (empty) fault
+    // layer armed, and with 10% of the source's chunk reads injected to
+    // fail. Every read must still succeed (failed runs re-route to
+    // GFS); the CI gates hold the fault-free instrumentation overhead
+    // to ≤5% and the 10%-fault latency inflation to ≤3x.
+    let froot = dir.join("stage2-flaky");
+    let _ = std::fs::remove_dir_all(&froot);
+    let flayout = LocalLayout::create(&froot, 2, 1).unwrap(); // 0 producer, 1 reader
+    // Not shrunk in fast mode: the ≤5% overhead gate needs wall times
+    // comfortably above timer noise.
+    let f_arch = 12usize;
+    let f_arch_bytes = mib(1) as usize;
+    let f_records = f_arch_bytes / record_bytes;
+    let mut f_names: Vec<String> = Vec::new();
+    for i in 0..f_arch {
+        let name = format!("s1-g0-{i:05}.cioar");
+        let mut w = Writer::create(&flayout.gfs().join(&name)).unwrap();
+        let mut data = vec![0u8; f_arch_bytes];
+        for (j, byte) in data.iter_mut().enumerate() {
+            *byte = (i * 37 + j * 11) as u8;
+        }
+        w.add("records.bin", &data, Compression::None).unwrap();
+        w.finish().unwrap();
+        f_names.push(name);
+    }
+    let f_producer = GroupCache::new(&flayout, 0, mib(1024));
+    for name in &f_names {
+        f_producer.retain(&flayout.gfs().join(name), name).unwrap();
+    }
+    let f_fresh = || {
+        let _ = std::fs::remove_dir_all(flayout.ifs_data(1));
+        std::fs::create_dir_all(flayout.ifs_data(1)).unwrap();
+    };
+    let read_records = |cache: &GroupCache| -> f64 {
+        let t0 = Instant::now();
+        for (i, name) in f_names.iter().enumerate() {
+            let off = ((i * 7919) % f_records * record_bytes) as u64;
+            let (rec, _) = cache
+                .read_member_range_via(
+                    &flayout.gfs(),
+                    name,
+                    std::slice::from_ref(&f_producer),
+                    "records.bin",
+                    off,
+                    record_bytes,
+                )
+                .unwrap();
+            assert_eq!(rec.len(), record_bytes);
+            black_box(rec.len());
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    let idle_faults = std::sync::Arc::new(FaultInjector::new());
+    let flaky_faults = std::sync::Arc::new(FaultInjector::new());
+    // Every 10th chunk read out of the producer's retention fails —
+    // a deterministic 10% source fault rate.
+    flaky_faults.inject_every(OpClass::Read, "/ifs/0/data", FaultAction::Error, 10);
+    let (mut f_plain, mut f_instr, mut f_flaky) = (f64::INFINITY, f64::INFINITY, f64::INFINITY);
+    let mut f_rerouted = 0u64;
+    // Interleaved reps so machine drift hits all three cases alike.
+    for _ in 0..tier_reps {
+        f_fresh();
+        let cold = GroupCache::new(&flayout, 1, mib(1024)).with_fill_chunk(kib(64));
+        f_plain = f_plain.min(read_records(&cold));
+        f_fresh();
+        let cold = GroupCache::new(&flayout, 1, mib(1024))
+            .with_fill_chunk(kib(64))
+            .with_faults(idle_faults.clone());
+        f_instr = f_instr.min(read_records(&cold));
+        f_fresh();
+        let cold = GroupCache::new(&flayout, 1, mib(1024))
+            .with_fill_chunk(kib(64))
+            .with_faults(flaky_faults.clone());
+        f_flaky = f_flaky.min(read_records(&cold));
+        f_rerouted += cold.snapshot().rerouted_fills;
+    }
+    assert!(flaky_faults.injected() > 0, "the 10% fault rate must have fired");
+    assert!(f_rerouted > 0, "faulted chunk runs must have re-routed");
+    b.metric("stage2_record_fault_free latency", f_plain * 1e3, "ms");
+    b.metric("stage2_record_flaky_source latency", f_flaky * 1e3, "ms");
+    b.metric("stage2: flaky-source latency inflation", f_flaky / f_plain, "x");
+    b.metric("stage2: fault-layer fault-free overhead", f_instr / f_plain, "x");
+    let _ = std::fs::remove_dir_all(&froot);
 
     // --- PJRT scoring latency (needs artifacts).
     match cio::runtime::ScoreModel::load_default() {

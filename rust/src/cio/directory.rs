@@ -30,9 +30,30 @@
 //! with routing it must serve strictly fewer once a second replica
 //! exists.
 
+use crate::cio::fault::RetryPolicy;
 use crate::cio::placement::group_torus_distance;
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Mutex;
+
+/// Per-source circuit-breaker state (PR 6). A consecutive-failure streak
+/// trips the quarantine; [`RetentionDirectory::note_fill_success`] fills
+/// served *elsewhere* advance the probation clock until the source goes
+/// half-open (eligible for one deliberate re-probe); a successful probe
+/// recovers it fully, a failed one re-trips it.
+#[derive(Default)]
+struct SourceHealth {
+    /// Consecutive failed probes (stale entries, IO errors, blown
+    /// deadlines all count; any success resets it).
+    streak: u32,
+    /// Tripped: excluded from [`RetentionDirectory::route`] ranking
+    /// until probation opens.
+    quarantined: bool,
+    /// Half-open: routed again (ranked first, as the deliberate probe)
+    /// so one real fill decides recovery vs. re-trip.
+    probation: bool,
+    /// Successful fills served elsewhere since the trip.
+    elsewhere: u32,
+}
 
 #[derive(Default)]
 struct DirInner {
@@ -47,6 +68,75 @@ struct DirInner {
     inflight: BTreeMap<u32, u64>,
     /// Entries withdrawn because a pull found the retention gone.
     stale_withdrawals: u64,
+    /// source group → circuit-breaker state.
+    health: BTreeMap<u32, SourceHealth>,
+    /// Total quarantine trips (re-trips from a failed probation probe
+    /// included).
+    quarantine_trips: u64,
+}
+
+impl DirInner {
+    /// Charge one failed probe to `group`'s health; returns true when
+    /// this event tripped (or re-tripped) the quarantine.
+    fn charge_failure(&mut self, group: u32, streak_threshold: u32) -> bool {
+        if streak_threshold == 0 {
+            return false; // breaker disabled
+        }
+        let h = self.health.entry(group).or_default();
+        h.streak += 1;
+        let trip = if h.quarantined {
+            // A failed probation probe re-trips the breaker and restarts
+            // the probation clock.
+            let retrip = h.probation;
+            h.probation = false;
+            if retrip {
+                h.elsewhere = 0;
+            }
+            retrip
+        } else {
+            h.streak >= streak_threshold && {
+                h.quarantined = true;
+                h.probation = false;
+                h.elsewhere = 0;
+                true
+            }
+        };
+        if trip {
+            self.quarantine_trips += 1;
+        }
+        trip
+    }
+
+    /// Credit one successful fill: resets (and possibly recovers) the
+    /// serving source, and advances every *other* quarantined source's
+    /// probation clock.
+    fn credit_success(&mut self, source: Option<u32>, probation_fills: u32) {
+        if let Some(g) = source {
+            if let Some(h) = self.health.get_mut(&g) {
+                h.streak = 0;
+                h.quarantined = false;
+                h.probation = false;
+                h.elsewhere = 0;
+            }
+        }
+        for (&g, h) in self.health.iter_mut() {
+            if Some(g) == source || !h.quarantined || h.probation {
+                continue;
+            }
+            h.elsewhere += 1;
+            if h.elsewhere >= probation_fills.max(1) {
+                h.probation = true;
+            }
+        }
+    }
+
+    fn excluded(&self, group: u32) -> bool {
+        self.health.get(&group).is_some_and(|h| h.quarantined && !h.probation)
+    }
+
+    fn on_probation(&self, group: u32) -> bool {
+        self.health.get(&group).is_some_and(|h| h.quarantined && h.probation)
+    }
 }
 
 /// Cluster-wide (per-[`crate::cio::local::LocalLayout`]) registry of which
@@ -56,13 +146,34 @@ struct DirInner {
 /// IO under it).
 pub struct RetentionDirectory {
     groups: u32,
+    quarantine_streak: u32,
+    probation_fills: u32,
     inner: Mutex<DirInner>,
 }
 
 impl RetentionDirectory {
-    /// An empty directory for a layout with `groups` IFS groups.
+    /// An empty directory for a layout with `groups` IFS groups, with
+    /// the default [`RetryPolicy`] quarantine thresholds.
     pub fn new(groups: u32) -> RetentionDirectory {
-        RetentionDirectory { groups: groups.max(1), inner: Mutex::new(DirInner::default()) }
+        let policy = RetryPolicy::default();
+        RetentionDirectory::with_health(groups, policy.quarantine_streak, policy.probation_fills)
+    }
+
+    /// An empty directory with explicit circuit-breaker thresholds: a
+    /// source is quarantined after `quarantine_streak` consecutive
+    /// failures (0 disables the breaker) and goes half-open after
+    /// `probation_fills` successful fills served elsewhere.
+    pub fn with_health(
+        groups: u32,
+        quarantine_streak: u32,
+        probation_fills: u32,
+    ) -> RetentionDirectory {
+        RetentionDirectory {
+            groups: groups.max(1),
+            quarantine_streak,
+            probation_fills,
+            inner: Mutex::new(DirInner::default()),
+        }
     }
 
     /// Number of IFS groups this directory routes over.
@@ -92,8 +203,11 @@ impl RetentionDirectory {
     /// Withdraw a candidate that a pull found stale (the retention was
     /// gone by the time the reader arrived) and count the event. The
     /// *cost* of staleness is the caller's fallback to the next source;
-    /// the directory just stops advertising the dead entry.
-    pub fn record_stale(&self, archive: &str, group: u32) {
+    /// the directory stops advertising the dead entry, and the event is
+    /// folded into the source's health signal — enough stale probes trip
+    /// the same quarantine an erroring source earns. Returns true when
+    /// this event tripped the quarantine.
+    pub fn record_stale(&self, archive: &str, group: u32) -> bool {
         let mut inner = self.inner.lock().unwrap();
         if let Some(set) = inner.sources.get_mut(archive) {
             set.remove(&group);
@@ -102,6 +216,44 @@ impl RetentionDirectory {
             }
         }
         inner.stale_withdrawals += 1;
+        inner.charge_failure(group, self.quarantine_streak)
+    }
+
+    /// Charge one failed (or deadline-blown) probe of `group` to its
+    /// health without withdrawing any retention entry — the copy may be
+    /// fine; the *source* is misbehaving. Returns true when this event
+    /// tripped the quarantine.
+    pub fn record_failure(&self, group: u32) -> bool {
+        self.inner.lock().unwrap().charge_failure(group, self.quarantine_streak)
+    }
+
+    /// Credit one successful fill: `Some(group)` for a neighbor/producer
+    /// serve (resets its streak and recovers it if it was the probation
+    /// probe), `None` for a GFS fill. Either way, every *other*
+    /// quarantined source's probation clock advances — after
+    /// `probation_fills` successful fills elsewhere it goes half-open
+    /// and is routed again for its re-probe.
+    pub fn note_fill_success(&self, source: Option<u32>) {
+        self.inner.lock().unwrap().credit_success(source, self.probation_fills);
+    }
+
+    /// Is `group` currently tripped (excluded from routing)? Half-open
+    /// probation counts as quarantined — the breaker has not recovered
+    /// until a probe succeeds.
+    pub fn is_quarantined(&self, group: u32) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner.health.get(&group).is_some_and(|h| h.quarantined)
+    }
+
+    /// Groups currently quarantined (probation included), ascending.
+    pub fn quarantined(&self) -> Vec<u32> {
+        let inner = self.inner.lock().unwrap();
+        inner.health.iter().filter(|(_, h)| h.quarantined).map(|(&g, _)| g).collect()
+    }
+
+    /// Total quarantine trips so far (failed probation probes re-count).
+    pub fn quarantine_trips(&self) -> u64 {
+        self.inner.lock().unwrap().quarantine_trips
     }
 
     /// How many stale entries pulls have withdrawn so far.
@@ -147,16 +299,27 @@ impl RetentionDirectory {
     /// plain hop distance — the PR-4 ranking. The caller probes
     /// candidates in order and falls back producer → GFS when all of
     /// them turn out stale.
+    ///
+    /// Quarantined sources are excluded from the ranking while tripped.
+    /// A source on half-open probation is routed again and ranked
+    /// *first*: the next fill is its deliberate re-probe (one request
+    /// decides recovery or re-trip; a failure only costs the usual
+    /// fallback to the next candidate).
     pub fn route(&self, archive: &str, reader: u32) -> Vec<u32> {
         let inner = self.inner.lock().unwrap();
         let Some(set) = inner.sources.get(archive) else {
             return Vec::new();
         };
-        let mut out: Vec<u32> = set.iter().copied().filter(|&g| g != reader).collect();
+        let mut out: Vec<u32> = set
+            .iter()
+            .copied()
+            .filter(|&g| g != reader && !inner.excluded(g))
+            .collect();
         out.sort_by_key(|&g| {
             let hops = group_torus_distance(reader, g, self.groups) as u64;
             let inflight = inner.inflight.get(&g).copied().unwrap_or(0);
             (
+                !inner.on_probation(g),
                 hops.saturating_mul(1 + inflight),
                 inner.group_serves.get(&g).copied().unwrap_or(0),
                 g,
@@ -312,6 +475,62 @@ mod tests {
         // counts the event (two readers can race the same dead source).
         d.record_stale("a.cioar", 1);
         assert_eq!(d.stale_withdrawals(), 2);
+    }
+
+    #[test]
+    fn quarantine_trips_probates_and_recovers() {
+        let d = RetentionDirectory::with_health(4, 3, 2);
+        for g in [1, 2] {
+            d.publish("a.cioar", g);
+        }
+        // Two failures are a streak, not a trip.
+        assert!(!d.record_failure(1));
+        assert!(!d.record_failure(1));
+        assert!(!d.is_quarantined(1));
+        // A success resets the streak...
+        d.note_fill_success(Some(1));
+        assert!(!d.record_failure(1));
+        assert!(!d.record_failure(1));
+        // ...and the third consecutive failure trips the breaker.
+        assert!(d.record_failure(1), "third consecutive failure must trip");
+        assert!(d.is_quarantined(1));
+        assert_eq!(d.quarantined(), vec![1]);
+        assert_eq!(d.quarantine_trips(), 1);
+        assert_eq!(d.route("a.cioar", 0), vec![2], "tripped source leaves the ranking");
+        // Two successful fills elsewhere open probation: the source is
+        // routed again, ranked first as the deliberate re-probe.
+        d.note_fill_success(Some(2));
+        d.note_fill_success(None); // GFS fills count as "elsewhere" too
+        assert!(d.is_quarantined(1), "probation is still quarantined");
+        assert_eq!(d.route("a.cioar", 0), vec![1, 2], "probation probe ranks first");
+        // A failed probe re-trips (and re-counts the trip)...
+        assert!(d.record_failure(1));
+        assert_eq!(d.quarantine_trips(), 2);
+        assert_eq!(d.route("a.cioar", 0), vec![2]);
+        // ...while a successful probe after the next probation recovers.
+        d.note_fill_success(None);
+        d.note_fill_success(None);
+        assert_eq!(d.route("a.cioar", 0), vec![1, 2]);
+        d.note_fill_success(Some(1));
+        assert!(!d.is_quarantined(1));
+        assert_eq!(d.route("a.cioar", 0), vec![1, 2], "recovered source ranks normally");
+        assert_eq!(d.quarantine_trips(), 2, "recovery does not count a trip");
+    }
+
+    #[test]
+    fn stale_probes_feed_the_same_health_signal() {
+        let d = RetentionDirectory::with_health(2, 2, 1);
+        d.publish("a.cioar", 1);
+        assert!(!d.record_stale("a.cioar", 1));
+        d.publish("a.cioar", 1);
+        assert!(d.record_stale("a.cioar", 1), "stale probes count toward the streak");
+        assert!(d.is_quarantined(1));
+        // Disabled breaker (threshold 0) never trips.
+        let open = RetentionDirectory::with_health(2, 0, 1);
+        for _ in 0..10 {
+            assert!(!open.record_failure(1));
+        }
+        assert!(!open.is_quarantined(1));
     }
 
     #[test]

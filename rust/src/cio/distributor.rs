@@ -12,6 +12,7 @@
 //! happens in the simulator ([`crate::sim::cluster`]) and the real-bytes
 //! runtime ([`crate::cio::local`]).
 
+use crate::cio::fault::RetryPolicy;
 use crate::cio::placement::{Dataset, PlacementPolicy, Tier};
 use crate::config::ClusterConfig;
 use crate::sim::topology::{binomial_broadcast, flat_broadcast, kary_broadcast, rounds, TreeCopy};
@@ -396,6 +397,105 @@ pub fn estimate_partial_read(
     }
 }
 
+/// Expected-cost extension of [`RoutedReadModel`] under a per-probe
+/// fault rate and the PR-6 [`RetryPolicy`]: what retries, deterministic
+/// backoff, and deadline-bounded re-routing cost a neighbor fill when
+/// sources misbehave. Failed probes waste at most the per-source
+/// deadline of link occupancy before the fill re-routes; the chain gives
+/// up on the neighbor tier after `attempts` probes and falls through to
+/// GFS (the tier of last resort, which this model charges at the miss
+/// rate for that residual fraction).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultyReadModel {
+    /// The fault-free routed model this extends.
+    pub base: RoutedReadModel,
+    /// Expected probes per fill under the truncated-geometric retry
+    /// budget: `Σ_{k=1..attempts} p^{k-1}` (1.0 when `fault_rate` = 0).
+    pub expected_attempts: f64,
+    /// Expected seconds of deterministic backoff per fill — each wait in
+    /// [`RetryPolicy::schedule_ms`] weighted by the probability the
+    /// chain reaches that attempt.
+    pub expected_backoff_s: f64,
+    /// Expected seconds a cold routed fill takes including wasted
+    /// probes, backoff, and the GFS fallback residue. Equals
+    /// `base.routed_neighbor_s` at `fault_rate` = 0.
+    pub faulty_neighbor_s: f64,
+    /// Probability the whole neighbor retry budget is exhausted and the
+    /// fill falls through to GFS (`p^attempts`).
+    pub gfs_fallback_fraction: f64,
+}
+
+impl FaultyReadModel {
+    /// Relative latency inflation the fault rate costs a cold routed
+    /// fill (1.0 = fault-free). The perf gate asserts the measured
+    /// flaky-source inflation stays under the analytic bound's regime
+    /// (≤ 3× at a 10% fault rate with default policy).
+    pub fn inflation(&self) -> f64 {
+        self.faulty_neighbor_s / self.base.routed_neighbor_s
+    }
+}
+
+/// Estimate the expected cost of a cold routed fill when each source
+/// probe independently fails with probability `fault_rate` (0.0..1.0).
+/// The fault-free geometry comes from [`estimate_routed_read`]; a failed
+/// probe wastes the smaller of its transfer occupancy and the policy's
+/// per-source deadline (a hung source is abandoned at the deadline, a
+/// torn one fails as fast as it transfers), then the fill backs off per
+/// the deterministic schedule and re-routes.
+#[allow(clippy::too_many_arguments)]
+pub fn estimate_faulty_read(
+    cfg: &ClusterConfig,
+    archive_bytes: u64,
+    read_bytes: u64,
+    nearest_hops: u32,
+    producer_hops: u32,
+    sources: u32,
+    readers: u32,
+    fault_rate: f64,
+    policy: &RetryPolicy,
+) -> FaultyReadModel {
+    assert!((0.0..1.0).contains(&fault_rate), "fault rate must be in [0, 1)");
+    let base = estimate_routed_read(
+        cfg,
+        archive_bytes,
+        read_bytes,
+        nearest_hops,
+        producer_hops,
+        sources,
+        readers,
+    );
+    let attempts = policy.attempts.max(1);
+    let p = fault_rate;
+    // Truncated geometric: attempt k happens iff the k-1 before it failed.
+    let mut expected_attempts = 0.0;
+    let mut expected_backoff_s = 0.0;
+    let mut reach = 1.0; // P(attempt k happens)
+    for k in 1..=attempts {
+        expected_attempts += reach;
+        if k >= 2 {
+            expected_backoff_s += reach * policy.backoff_ms(k) as f64 / 1e3;
+        }
+        reach *= p;
+    }
+    let gfs_fallback_fraction = reach; // p^attempts
+    let occupancy = base.routed_neighbor_s - base.base.hit_s;
+    let deadline_s = policy
+        .source_deadline()
+        .map_or(occupancy, |d| d.as_secs_f64().min(occupancy));
+    // Each failed probe wastes up to the deadline; the successful final
+    // probe (or the GFS fallback residue) pays its full tier cost.
+    let wasted_s = (expected_attempts - 1.0) * deadline_s + expected_backoff_s;
+    let served_s = (1.0 - gfs_fallback_fraction) * base.routed_neighbor_s
+        + gfs_fallback_fraction * base.base.gfs_miss_s;
+    FaultyReadModel {
+        base,
+        expected_attempts,
+        expected_backoff_s,
+        faulty_neighbor_s: wasted_s + served_s,
+        gfs_fallback_fraction,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -597,6 +697,44 @@ mod tests {
         let tiny = estimate_partial_read(&cfg, mib(100), mib(1), kib(16), kib(4), 1);
         let fat = estimate_partial_read(&cfg, mib(100), mib(1), kib(16), mib(1), 1);
         assert!(tiny.partial_first_byte_s > fat.partial_first_byte_s, "{tiny:?} vs {fat:?}");
+    }
+
+    #[test]
+    fn faulty_read_model_degenerates_and_inflates() {
+        let cfg = ClusterConfig::bgp(4096);
+        let policy = RetryPolicy::default();
+        // Fault-free: the model must collapse exactly onto the routed
+        // fault-free geometry — no phantom retry cost.
+        let clean = estimate_faulty_read(&cfg, mib(100), kib(64), 1, 2, 3, 9, 0.0, &policy);
+        assert!((clean.expected_attempts - 1.0).abs() < 1e-12, "{clean:?}");
+        assert!(clean.expected_backoff_s.abs() < 1e-12);
+        assert!((clean.faulty_neighbor_s - clean.base.routed_neighbor_s).abs() < 1e-12);
+        assert!(clean.gfs_fallback_fraction.abs() < 1e-12);
+        assert!((clean.inflation() - 1.0).abs() < 1e-12);
+        // A 10% per-probe fault rate with the default policy: some
+        // retry cost, but bounded well under the 3× perf gate.
+        let flaky = estimate_faulty_read(&cfg, mib(100), kib(64), 1, 2, 3, 9, 0.1, &policy);
+        assert!(flaky.expected_attempts > 1.0 && flaky.expected_attempts < 1.2, "{flaky:?}");
+        assert!(flaky.faulty_neighbor_s > flaky.base.routed_neighbor_s);
+        assert!(flaky.inflation() < 3.0, "10% faults must stay under the CI gate: {flaky:?}");
+        assert!((flaky.gfs_fallback_fraction - 0.001).abs() < 1e-9, "0.1^3");
+        // Inflation is monotonic in the fault rate.
+        let worse = estimate_faulty_read(&cfg, mib(100), kib(64), 1, 2, 3, 9, 0.5, &policy);
+        assert!(worse.inflation() > flaky.inflation());
+        assert!(worse.expected_backoff_s > flaky.expected_backoff_s);
+        // The deadline caps what a hung probe can waste: an absurdly
+        // long per-source deadline cannot make a *short* transfer probe
+        // cost more than the transfer itself.
+        let hung = RetryPolicy { source_deadline_ms: 3_600_000, ..RetryPolicy::default() };
+        let capped = estimate_faulty_read(&cfg, mib(100), kib(64), 1, 2, 3, 9, 0.1, &hung);
+        let occupancy = capped.base.routed_neighbor_s - capped.base.base.hit_s;
+        let max_waste = (capped.expected_attempts - 1.0) * occupancy
+            + capped.expected_backoff_s
+            + capped.gfs_fallback_fraction * capped.base.base.gfs_miss_s;
+        assert!(
+            capped.faulty_neighbor_s <= capped.base.routed_neighbor_s + max_waste + 1e-9,
+            "{capped:?}"
+        );
     }
 
     #[test]

@@ -41,6 +41,7 @@
 //! ([`CacheSnapshot::partial_bytes`](crate::cio::local_stage::CacheSnapshot::partial_bytes) /
 //! [`chunk_fills`](crate::cio::local_stage::CacheSnapshot::chunk_fills)).
 
+use crate::cio::fault::FillError;
 use std::collections::HashMap;
 use std::ops::Range;
 use std::sync::{Arc, Condvar, Mutex};
@@ -93,10 +94,12 @@ enum ChunkState {
     Pending,
     /// The chunk landed and is resident.
     Done,
-    /// The fetch failed; waiters get the error. The latch is already
-    /// removed from the in-flight table, so the next resolve re-claims
-    /// the chunk instead of inheriting the corpse.
-    Failed(String),
+    /// The fetch failed; waiters get the typed error
+    /// ([`crate::cio::fault::FillError`] — tier, source, retryability).
+    /// The latch is already removed from the in-flight table, so the
+    /// next resolve re-claims the chunk instead of inheriting the
+    /// corpse.
+    Failed(FillError),
 }
 
 struct ChunkLatch {
@@ -114,13 +117,13 @@ impl ChunkLatch {
         self.cv.notify_all();
     }
 
-    fn wait(&self) -> Result<(), String> {
+    fn wait(&self) -> Result<(), FillError> {
         let mut state = self.state.lock().unwrap();
         loop {
             match &*state {
                 ChunkState::Pending => state = self.cv.wait(state).unwrap(),
                 ChunkState::Done => return Ok(()),
-                ChunkState::Failed(msg) => return Err(msg.clone()),
+                ChunkState::Failed(err) => return Err(err.clone()),
             }
         }
     }
@@ -258,11 +261,11 @@ impl ExtentMap {
     }
 
     /// Fail a claimed chunk: remove its latch (the next resolve re-claims
-    /// it) and wake its waiters with the error.
-    pub fn fail(&self, idx: u64, msg: &str) {
+    /// it) and wake its waiters with the typed error.
+    pub fn fail(&self, idx: u64, err: &FillError) {
         let latch = self.inner.lock().unwrap().inflight.remove(&idx);
         if let Some(latch) = latch {
-            latch.publish(ChunkState::Failed(msg.to_string()));
+            latch.publish(ChunkState::Failed(err.clone()));
         }
     }
 
@@ -270,7 +273,7 @@ impl ExtentMap {
     /// the first failed chunk's error. Call only after resolving every
     /// claimed chunk in `plan.mine` (commit or fail) — waiting first
     /// could deadlock two claimers with overlapping covers.
-    pub fn wait(&self, plan: &FetchPlan) -> Result<(), String> {
+    pub fn wait(&self, plan: &FetchPlan) -> Result<(), FillError> {
         for latch in &plan.theirs {
             latch.wait()?;
         }
@@ -281,6 +284,7 @@ impl ExtentMap {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cio::fault::FillTier;
 
     #[test]
     fn cover_math_is_exact() {
@@ -356,10 +360,13 @@ mod tests {
         planned_rx.recv().unwrap();
         map.commit(0);
         map.commit(1);
-        map.fail(2, "torn source");
+        let torn = FillError::classify(FillTier::Neighbor, Some(1), &anyhow::anyhow!("torn"));
+        map.fail(2, &torn);
         map.commit(3);
         let err = waiter.join().unwrap().expect_err("waiter must see the failure");
-        assert!(err.contains("torn source"), "{err}");
+        assert!(err.to_string().contains("torn"), "{err}");
+        assert_eq!(err.tier, FillTier::Neighbor);
+        assert_eq!(err.source, Some(1));
         // The failed chunk is reclaimable, not wedged.
         let retry = map.plan(20, 10);
         assert_eq!(retry.mine, vec![2]);

@@ -1,0 +1,485 @@
+//! Fault tolerance for the fill chain: an injectable fault layer, a
+//! deterministic retry policy, and the typed fill error the latches carry.
+//!
+//! The resolve chain (IFS hit → routed neighbor → producer → GFS, whole
+//! archive and per chunk alike) only survives petascale operation if the
+//! failures that scale makes routine — slow or dead replicas, torn
+//! transfers, full local disks — are absorbed by the IO layer rather than
+//! surfaced to every singleflight waiter. This module holds the three
+//! pieces that layer is built from:
+//!
+//! * [`FaultInjector`] — a failpoint registry keyed by operation class
+//!   ([`OpClass`]) and path substring, consulted by the `local.rs` IO
+//!   primitives (`read_range`, `publish_link`, `publish_copy`,
+//!   `write_range_at`, `create_sparse`). Fault tests drive the
+//!   *production* retry/re-route/quarantine code rather than simulating
+//!   failures with ad-hoc `unlink` tricks. Actions: inject an IO error,
+//!   sleep a fixed delay (to blow a source deadline), truncate the
+//!   operation after N bytes (a torn transfer), or report `ENOSPC` (a
+//!   full staging tree). Rules fire always, a bounded number of times, or
+//!   every Nth matching operation — all deterministic, no randomness.
+//! * [`RetryPolicy`] — bounded attempts with exponential backoff and
+//!   deterministic jitter derived from an injected seed (splitmix64 of
+//!   `(seed, attempt)`, never the wall clock), plus the per-source probe
+//!   deadline and the quarantine thresholds. The whole schedule is a pure
+//!   function of the policy, so tests can assert it exactly.
+//! * [`FillError`] — the typed error the `Fill` latch publishes: which
+//!   tier failed, which source (if any), and whether the failure is worth
+//!   retrying. Retry logic and tests branch on fields instead of
+//!   string-matching messages.
+
+use std::fmt;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Which IO primitive an operation belongs to, for failpoint matching.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    /// `read_range`: a ranged read from a retained or GFS file (chunk
+    /// fetches, neighbor probes).
+    Read,
+    /// `publish_link`: hard-link publish of a sibling's retained copy.
+    PublishLink,
+    /// `publish_copy`: copy-then-rename publish (GFS fills, retention).
+    PublishCopy,
+    /// `write_range_at` / `create_sparse`: writes into the sparse
+    /// partial-fill staging file.
+    Write,
+}
+
+/// What a matched failpoint does to the operation.
+#[derive(Debug, Clone)]
+pub enum FaultAction {
+    /// Fail with a generic injected IO error (retryable).
+    Error,
+    /// Sleep for the fixed duration, then let the operation proceed —
+    /// used to blow per-source deadlines deterministically.
+    Delay(Duration),
+    /// Let only the first N bytes take effect, then fail — a torn
+    /// transfer the caller must detect and re-route around.
+    TruncateAfter(u64),
+    /// Fail with `ENOSPC` — flips the group into degraded GFS-direct
+    /// serving.
+    Enospc,
+}
+
+/// How often a rule fires once matched.
+#[derive(Debug, Clone, Copy)]
+pub enum FireMode {
+    /// Every matching operation.
+    Always,
+    /// Only the first N matching operations.
+    Times(u64),
+    /// Every Nth matching operation (n=10 ≈ a 10% fault rate,
+    /// deterministically).
+    EveryNth(u64),
+}
+
+struct Rule {
+    op: OpClass,
+    pattern: String,
+    action: FaultAction,
+    mode: FireMode,
+    matched: u64,
+    fired: u64,
+}
+
+impl Rule {
+    /// Does this rule fire for the current match? (Counts the match.)
+    fn fire(&mut self) -> bool {
+        self.matched += 1;
+        let fire = match self.mode {
+            FireMode::Always => true,
+            FireMode::Times(n) => self.fired < n,
+            FireMode::EveryNth(n) => n != 0 && self.matched % n == 1 % n.max(1),
+        };
+        if fire {
+            self.fired += 1;
+        }
+        fire
+    }
+}
+
+/// The verdict the IO primitives act on.
+#[derive(Debug)]
+pub enum FaultVerdict {
+    /// No fault (any injected delay has already been slept).
+    Proceed,
+    /// Fail the operation with this error before doing anything.
+    Fail(std::io::Error),
+    /// Perform only the first N bytes, then fail as a torn transfer.
+    Truncate(u64),
+}
+
+/// A failpoint registry: rules keyed by operation class and path
+/// substring, consulted by the `local.rs` IO primitives. Deterministic —
+/// rules fire by match count, never by randomness — so every fault test
+/// is exactly reproducible. One injector is shared per `StageRunner` (or
+/// handed to bare [`GroupCache`](crate::cio::local_stage::GroupCache)s)
+/// and is cheap to consult when empty: one atomic load.
+#[derive(Default)]
+pub struct FaultInjector {
+    rules: Mutex<Vec<Rule>>,
+    armed: AtomicU64,
+    injected: AtomicU64,
+}
+
+/// Linux errno values used for injected storage faults; kept literal so
+/// the crate needs no libc dependency.
+const ENOSPC: i32 = 28;
+const EROFS: i32 = 30;
+
+impl FaultInjector {
+    pub fn new() -> FaultInjector {
+        FaultInjector::default()
+    }
+
+    /// Register a rule that fires on every matching operation.
+    pub fn inject(&self, op: OpClass, pattern: &str, action: FaultAction) {
+        self.add(op, pattern, action, FireMode::Always);
+    }
+
+    /// Register a rule that fires only for the first `n` matches.
+    pub fn inject_times(&self, op: OpClass, pattern: &str, action: FaultAction, n: u64) {
+        self.add(op, pattern, action, FireMode::Times(n));
+    }
+
+    /// Register a rule that fires every `n`th match (deterministic
+    /// `1/n` fault rate, firing on the first match then every `n` after).
+    pub fn inject_every(&self, op: OpClass, pattern: &str, action: FaultAction, n: u64) {
+        self.add(op, pattern, action, FireMode::EveryNth(n));
+    }
+
+    fn add(&self, op: OpClass, pattern: &str, action: FaultAction, mode: FireMode) {
+        let mut rules = self.rules.lock().unwrap();
+        rules.push(Rule { op, pattern: pattern.to_string(), action, mode, matched: 0, fired: 0 });
+        self.armed.store(rules.len() as u64, Ordering::Release);
+    }
+
+    /// Drop every rule — the fault "repairs" (degraded-mode recovery
+    /// probes start succeeding again).
+    pub fn clear(&self) {
+        let mut rules = self.rules.lock().unwrap();
+        rules.clear();
+        self.armed.store(0, Ordering::Release);
+    }
+
+    /// Total faults fired so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Evaluate the failpoints for one operation. Sleeps injected delays
+    /// in place, then returns what the primitive must do. The first
+    /// matching rule that fires wins.
+    pub fn evaluate(&self, op: OpClass, path: &Path) -> FaultVerdict {
+        if self.armed.load(Ordering::Acquire) == 0 {
+            return FaultVerdict::Proceed;
+        }
+        let action = {
+            let mut rules = self.rules.lock().unwrap();
+            let text = path.to_string_lossy().into_owned();
+            rules
+                .iter_mut()
+                .filter(|r| r.op == op && text.contains(&r.pattern))
+                .find(|r| r.fire())
+                .map(|r| r.action.clone())
+        };
+        let Some(action) = action else { return FaultVerdict::Proceed };
+        self.injected.fetch_add(1, Ordering::Relaxed);
+        match action {
+            FaultAction::Error => FaultVerdict::Fail(std::io::Error::other(format!(
+                "injected fault: {op:?} on {}",
+                path.display()
+            ))),
+            FaultAction::Delay(d) => {
+                std::thread::sleep(d);
+                FaultVerdict::Proceed
+            }
+            FaultAction::TruncateAfter(n) => FaultVerdict::Truncate(n),
+            FaultAction::Enospc => FaultVerdict::Fail(std::io::Error::from_raw_os_error(ENOSPC)),
+        }
+    }
+}
+
+/// Is this error a full/read-only staging tree (`ENOSPC`/`EROFS`)? These
+/// flip the group into degraded GFS-direct serving instead of being
+/// retried — retrying a full disk is futile, but reads can still be
+/// served byte-exact from the canonical GFS copy.
+pub fn is_storage_full(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| {
+        c.downcast_ref::<std::io::Error>()
+            .is_some_and(|io| matches!(io.raw_os_error(), Some(ENOSPC) | Some(EROFS)))
+    })
+}
+
+/// Is this error worth retrying? `NotFound` is permanent (the canonical
+/// copy is gone, or the staging tree itself vanished — no number of
+/// retries conjures it back), storage-full faults are handled by
+/// degraded mode instead, and errors with no IO error in their chain are
+/// logic-level ("no longer fits", "not found on any source") and final.
+/// Everything else — torn reads, injected transients, EIO — is
+/// transient.
+pub fn is_retryable(err: &anyhow::Error) -> bool {
+    if is_storage_full(err) {
+        return false;
+    }
+    let mut saw_io = false;
+    for c in err.chain() {
+        if let Some(io) = c.downcast_ref::<std::io::Error>() {
+            saw_io = true;
+            if io.kind() == std::io::ErrorKind::NotFound {
+                return false;
+            }
+        }
+    }
+    saw_io
+}
+
+/// Which tier of the resolve chain an error came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FillTier {
+    /// A routed neighbor or producer probe.
+    Neighbor,
+    /// The GFS fallback copy.
+    Gfs,
+    /// The local staging tree itself (publish / sparse-file writes).
+    Staging,
+}
+
+/// The typed error a failed fill publishes through the `Fill` latch (and
+/// the chunk latches): which tier failed, from which source, and whether
+/// the failure was transient. Waiters and tests branch on the fields
+/// instead of string-matching messages.
+#[derive(Debug, Clone)]
+pub struct FillError {
+    /// The tier the terminal failure came from.
+    pub tier: FillTier,
+    /// The source group probed, when the tier has one.
+    pub source: Option<u32>,
+    /// Was the terminal failure transient? A filler only publishes a
+    /// retryable error after exhausting its retry budget.
+    pub retryable: bool,
+    /// Human-readable cause chain.
+    pub msg: String,
+}
+
+impl FillError {
+    /// Classify an `anyhow` error from one tier of the chain.
+    pub fn classify(tier: FillTier, source: Option<u32>, err: &anyhow::Error) -> FillError {
+        FillError { tier, source, retryable: is_retryable(err), msg: format!("{err:#}") }
+    }
+
+    /// A storage-tree failure (drives degraded mode, never retried).
+    pub fn storage(err: &anyhow::Error) -> FillError {
+        FillError {
+            tier: FillTier::Staging,
+            source: None,
+            retryable: false,
+            msg: format!("{err:#}"),
+        }
+    }
+}
+
+impl fmt::Display for FillError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?} tier", self.tier)?;
+        if let Some(g) = self.source {
+            write!(f, " (source group {g})")?;
+        }
+        write!(f, ", {}: {}", if self.retryable { "transient" } else { "permanent" }, self.msg)
+    }
+}
+
+impl std::error::Error for FillError {}
+
+/// splitmix64 — the deterministic jitter source. A pure function of the
+/// seed, so backoff schedules are exactly reproducible.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Bounded-retry policy for the fill chain: how many attempts a fill
+/// gets, how long to back off between them (exponential with
+/// deterministic jitter from `jitter_seed` — never the wall clock), how
+/// long one source probe may take before it is abandoned and re-routed,
+/// and when a source's failure streak trips the quarantine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Maximum attempts for one fill chain (≥ 1; 1 = no retry).
+    pub attempts: u32,
+    /// Base backoff before the second attempt, in milliseconds; attempt
+    /// `k` backs off `base · 2^(k-1)` plus jitter, capped.
+    pub backoff_base_ms: u64,
+    /// Ceiling on any single backoff, in milliseconds.
+    pub backoff_cap_ms: u64,
+    /// Seed for the deterministic jitter (tests pin it; production keeps
+    /// the default).
+    pub jitter_seed: u64,
+    /// Per-source probe deadline in milliseconds: a neighbor/producer
+    /// probe that takes longer is discarded, counted as a deadline
+    /// abort, charged to the source's health, and re-routed. `0`
+    /// disables the deadline. GFS, the tier of last resort, has none.
+    pub source_deadline_ms: u64,
+    /// Consecutive failures that trip a source's quarantine.
+    pub quarantine_streak: u32,
+    /// Successful fills *elsewhere* before a quarantined source is put
+    /// on probation (half-open: eligible for one re-probe).
+    pub probation_fills: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            attempts: 3,
+            backoff_base_ms: 2,
+            backoff_cap_ms: 100,
+            jitter_seed: 0x5eed_c10,
+            source_deadline_ms: 2_000,
+            quarantine_streak: 3,
+            probation_fills: 4,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before attempt `attempt` (attempts are 1-based; the first
+    /// attempt never waits). Exponential in the attempt number with
+    /// jitter in `[0, slot/2]` drawn deterministically from the seed.
+    pub fn backoff_ms(&self, attempt: u32) -> u64 {
+        if attempt <= 1 || self.backoff_base_ms == 0 {
+            return 0;
+        }
+        let slot = self
+            .backoff_base_ms
+            .saturating_mul(1u64 << (attempt - 2).min(20))
+            .min(self.backoff_cap_ms);
+        let jitter_space = slot / 2 + 1;
+        let jitter = splitmix64(self.jitter_seed ^ u64::from(attempt)) % jitter_space;
+        (slot + jitter).min(self.backoff_cap_ms)
+    }
+
+    /// The full backoff schedule: waits before attempts `2..=attempts`.
+    /// A pure function of the policy — same seed, same schedule.
+    pub fn schedule_ms(&self) -> Vec<u64> {
+        (2..=self.attempts).map(|a| self.backoff_ms(a)).collect()
+    }
+
+    /// The per-source probe deadline, if enabled.
+    pub fn source_deadline(&self) -> Option<Duration> {
+        (self.source_deadline_ms > 0).then(|| Duration::from_millis(self.source_deadline_ms))
+    }
+
+    /// Sleep the backoff before attempt `attempt` (no-op before the
+    /// first).
+    pub fn back_off(&self, attempt: u32) {
+        let ms = self.backoff_ms(attempt);
+        if ms > 0 {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn empty_injector_always_proceeds() {
+        let f = FaultInjector::new();
+        let p = PathBuf::from("/ifs/0/data/a.cioar");
+        assert!(matches!(f.evaluate(OpClass::Read, &p), FaultVerdict::Proceed));
+        assert_eq!(f.injected(), 0);
+    }
+
+    #[test]
+    fn rules_match_op_class_and_pattern() {
+        let f = FaultInjector::new();
+        f.inject(OpClass::Read, "/ifs/1/", FaultAction::Error);
+        let hit = PathBuf::from("/root/ifs/1/data/a.cioar");
+        let miss_path = PathBuf::from("/root/ifs/2/data/a.cioar");
+        assert!(matches!(f.evaluate(OpClass::Read, &hit), FaultVerdict::Fail(_)));
+        assert!(matches!(f.evaluate(OpClass::Read, &miss_path), FaultVerdict::Proceed));
+        assert!(
+            matches!(f.evaluate(OpClass::PublishLink, &hit), FaultVerdict::Proceed),
+            "other op classes are untouched"
+        );
+        assert_eq!(f.injected(), 1);
+        f.clear();
+        assert!(matches!(f.evaluate(OpClass::Read, &hit), FaultVerdict::Proceed));
+    }
+
+    #[test]
+    fn fire_modes_bound_and_space_faults() {
+        let f = FaultInjector::new();
+        f.inject_times(OpClass::PublishCopy, "a.cioar", FaultAction::Enospc, 2);
+        let p = PathBuf::from("/gfs/a.cioar");
+        assert!(matches!(f.evaluate(OpClass::PublishCopy, &p), FaultVerdict::Fail(_)));
+        assert!(matches!(f.evaluate(OpClass::PublishCopy, &p), FaultVerdict::Fail(_)));
+        assert!(matches!(f.evaluate(OpClass::PublishCopy, &p), FaultVerdict::Proceed));
+
+        let g = FaultInjector::new();
+        g.inject_every(OpClass::Read, "", FaultAction::Error, 3);
+        let fired: Vec<bool> = (0..9)
+            .map(|_| matches!(g.evaluate(OpClass::Read, &p), FaultVerdict::Fail(_)))
+            .collect();
+        assert_eq!(fired, vec![true, false, false, true, false, false, true, false, false]);
+        assert_eq!(g.injected(), 3);
+    }
+
+    #[test]
+    fn enospc_truncate_verdicts_classify() {
+        let f = FaultInjector::new();
+        f.inject(OpClass::Write, "part", FaultAction::Enospc);
+        f.inject(OpClass::Read, "part", FaultAction::TruncateAfter(7));
+        let p = PathBuf::from("/ifs/0/data/.partial-0-a");
+        let FaultVerdict::Fail(e) = f.evaluate(OpClass::Write, &p) else {
+            panic!("expected failure")
+        };
+        let any = anyhow::Error::from(e).context("chunk write");
+        assert!(is_storage_full(&any));
+        assert!(!is_retryable(&any), "ENOSPC is degraded mode's job, not retry's");
+        assert!(matches!(f.evaluate(OpClass::Read, &p), FaultVerdict::Truncate(7)));
+    }
+
+    #[test]
+    fn retryability_classification() {
+        let not_found = anyhow::Error::from(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "no such file",
+        ));
+        assert!(!is_retryable(&not_found), "NotFound is permanent");
+        let torn = anyhow::Error::from(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "short read",
+        ))
+        .context("reading chunk");
+        assert!(is_retryable(&torn), "torn reads are transient");
+        let logic = anyhow::anyhow!("archive no longer fits");
+        assert!(!is_retryable(&logic), "logic errors are final");
+        let fe = FillError::classify(FillTier::Neighbor, Some(2), &torn);
+        assert!(fe.retryable && fe.source == Some(2) && fe.tier == FillTier::Neighbor);
+        assert!(fe.to_string().contains("source group 2"), "{fe}");
+    }
+
+    #[test]
+    fn backoff_is_deterministic_bounded_and_growing() {
+        let p = RetryPolicy { attempts: 6, jitter_seed: 42, ..RetryPolicy::default() };
+        assert_eq!(p.schedule_ms(), p.schedule_ms(), "pure function of the policy");
+        let q = RetryPolicy { jitter_seed: 43, ..p.clone() };
+        assert_ne!(p.schedule_ms(), q.schedule_ms(), "seed actually feeds the jitter");
+        assert_eq!(p.backoff_ms(1), 0, "first attempt never waits");
+        for (i, &ms) in p.schedule_ms().iter().enumerate() {
+            let attempt = i as u32 + 2;
+            let slot = p.backoff_base_ms * (1 << (attempt - 2)).min(1 << 20);
+            let slot = slot.min(p.backoff_cap_ms);
+            assert!(ms >= slot && ms <= p.backoff_cap_ms, "attempt {attempt}: {ms}ms");
+        }
+    }
+}

@@ -45,6 +45,7 @@
 use crate::cio::archive::{Compression, Writer};
 use crate::cio::collector::{CollectorStats, FlushReason, Policy};
 use crate::cio::distributor::TreeShape;
+use crate::cio::fault::{FaultInjector, FaultVerdict, OpClass};
 use crate::cio::local_stage::GroupCache;
 use crate::util::units::SimTime;
 use anyhow::{Context, Result};
@@ -67,11 +68,44 @@ pub(crate) const TMP_PREFIX: &str = ".tmp-";
 /// into one directory never collide.
 static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
+/// Consult the (optional) failpoint registry for one IO operation.
+/// Every IO primitive below has a `*_with` variant taking the registry;
+/// the plain names are the fault-free production entry points.
+fn fault_verdict(faults: Option<&FaultInjector>, op: OpClass, path: &Path) -> FaultVerdict {
+    faults.map_or(FaultVerdict::Proceed, |f| f.evaluate(op, path))
+}
+
+/// The error an injected torn transfer surfaces as: an `UnexpectedEof`
+/// IO error (transient — the retry layer re-routes it), wrapped with the
+/// byte count for diagnostics.
+fn torn_transfer(op: OpClass, path: &Path, after: u64) -> anyhow::Error {
+    anyhow::Error::from(std::io::Error::new(
+        std::io::ErrorKind::UnexpectedEof,
+        format!("injected torn transfer: {op:?} on {} cut after {after} bytes", path.display()),
+    ))
+}
+
 /// Copy `src` to `dst` atomically: stream into a `.tmp-`-prefixed sibling
 /// of `dst` (same directory, hence same filesystem) and `rename` into
 /// place. A reader listing `dst`'s directory sees either nothing or the
 /// complete file — never a truncated prefix. Returns the bytes copied.
 pub fn publish_copy(src: &Path, dst: &Path) -> Result<u64> {
+    publish_copy_with(None, src, dst)
+}
+
+/// [`publish_copy`] consulting a failpoint registry (matched against the
+/// destination). An injected truncation behaves like a mid-copy crash:
+/// the short temp file is removed and the publish fails — the atomic
+/// contract means a torn copy is never visible under the final name.
+pub fn publish_copy_with(faults: Option<&FaultInjector>, src: &Path, dst: &Path) -> Result<u64> {
+    match fault_verdict(faults, OpClass::PublishCopy, dst) {
+        FaultVerdict::Proceed => {}
+        FaultVerdict::Fail(e) => {
+            return Err(anyhow::Error::from(e)
+                .context(format!("copy-publishing {}", dst.display())));
+        }
+        FaultVerdict::Truncate(n) => return Err(torn_transfer(OpClass::PublishCopy, dst, n)),
+    }
     let dir = dst.parent().context("publish destination has no parent")?;
     let name = dst
         .file_name()
@@ -105,6 +139,20 @@ pub fn publish_copy(src: &Path, dst: &Path) -> Result<u64> {
 /// linking is impossible (cross-device, unsupported filesystem). Returns
 /// the published file's size in bytes.
 pub fn publish_link(src: &Path, dst: &Path) -> Result<u64> {
+    publish_link_with(None, src, dst)
+}
+
+/// [`publish_link`] consulting a failpoint registry (matched against the
+/// destination). Note the copy fallback stays fault-aware too.
+pub fn publish_link_with(faults: Option<&FaultInjector>, src: &Path, dst: &Path) -> Result<u64> {
+    match fault_verdict(faults, OpClass::PublishLink, dst) {
+        FaultVerdict::Proceed => {}
+        FaultVerdict::Fail(e) => {
+            return Err(anyhow::Error::from(e)
+                .context(format!("link-publishing {}", dst.display())));
+        }
+        FaultVerdict::Truncate(n) => return Err(torn_transfer(OpClass::PublishLink, dst, n)),
+    }
     let dir = dst.parent().context("publish destination has no parent")?;
     let name = dst
         .file_name()
@@ -116,7 +164,7 @@ pub fn publish_link(src: &Path, dst: &Path) -> Result<u64> {
         TMP_SEQ.fetch_add(1, Ordering::Relaxed)
     ));
     if std::fs::hard_link(src, &tmp).is_err() {
-        return publish_copy(src, dst);
+        return publish_copy_with(faults, src, dst);
     }
     let bytes = match std::fs::metadata(&tmp) {
         Ok(m) => m.len(),
@@ -140,7 +188,28 @@ pub fn publish_link(src: &Path, dst: &Path) -> Result<u64> {
 /// never the whole file. Errors (rather than short-reading) when the
 /// file ends before the range does.
 pub fn read_range(path: &Path, offset: u64, len: usize) -> Result<Vec<u8>> {
+    read_range_with(None, path, offset, len)
+}
+
+/// [`read_range`] consulting a failpoint registry. An injected
+/// truncation surfaces exactly like a genuinely short file: an
+/// `UnexpectedEof` error after N bytes (transient, so the retry layer
+/// re-routes the read to the next source).
+pub fn read_range_with(
+    faults: Option<&FaultInjector>,
+    path: &Path,
+    offset: u64,
+    len: usize,
+) -> Result<Vec<u8>> {
     use std::io::{Read, Seek, SeekFrom};
+    match fault_verdict(faults, OpClass::Read, path) {
+        FaultVerdict::Proceed => {}
+        FaultVerdict::Fail(e) => {
+            return Err(anyhow::Error::from(e)
+                .context(format!("range read [{offset}, +{len}) of {}", path.display())));
+        }
+        FaultVerdict::Truncate(n) => return Err(torn_transfer(OpClass::Read, path, n)),
+    }
     let mut f = std::fs::File::open(path)
         .with_context(|| format!("opening {} for a range read", path.display()))?;
     f.seek(SeekFrom::Start(offset))?;
@@ -156,15 +225,44 @@ pub fn read_range(path: &Path, offset: u64, len: usize) -> Result<Vec<u8>> {
 /// write can never resurrect a staging file that was already promoted
 /// or discarded (it fails cleanly instead).
 pub fn write_range_at(path: &Path, offset: u64, data: &[u8]) -> Result<()> {
+    write_range_at_with(None, path, offset, data)
+}
+
+/// [`write_range_at`] consulting a failpoint registry. An injected
+/// truncation really writes the first N bytes before failing — a torn
+/// chunk write whose residue the re-fetch must overwrite byte-exactly
+/// (the chunk is only committed after a *successful* write, so the torn
+/// region is never readable as resident).
+pub fn write_range_at_with(
+    faults: Option<&FaultInjector>,
+    path: &Path,
+    offset: u64,
+    data: &[u8],
+) -> Result<()> {
     use std::io::{Seek, SeekFrom, Write as IoWrite};
+    let torn = match fault_verdict(faults, OpClass::Write, path) {
+        FaultVerdict::Proceed => None,
+        FaultVerdict::Fail(e) => {
+            return Err(anyhow::Error::from(e).context(format!(
+                "range write [{offset}, +{}) of {}",
+                data.len(),
+                path.display()
+            )));
+        }
+        FaultVerdict::Truncate(n) => Some((n as usize).min(data.len())),
+    };
     let mut f = std::fs::OpenOptions::new()
         .write(true)
         .open(path)
         .with_context(|| format!("opening {} for a range write", path.display()))?;
     f.seek(SeekFrom::Start(offset))?;
-    f.write_all(data).with_context(|| {
-        format!("range write [{offset}, +{}) of {}", data.len(), path.display())
+    let effective = torn.map_or(data, |n| &data[..n]);
+    f.write_all(effective).with_context(|| {
+        format!("range write [{offset}, +{}) of {}", effective.len(), path.display())
     })?;
+    if let Some(n) = torn {
+        return Err(torn_transfer(OpClass::Write, path, n as u64));
+    }
     Ok(())
 }
 
@@ -172,6 +270,21 @@ pub fn write_range_at(path: &Path, offset: u64, data: &[u8]) -> Result<()> {
 /// staging file a partial fill writes chunks into. Unwritten regions
 /// read as zeros and occupy no disk until a chunk lands.
 pub fn create_sparse(path: &Path, len: u64) -> Result<()> {
+    create_sparse_with(None, path, len)
+}
+
+/// [`create_sparse`] consulting a failpoint registry (op class
+/// [`OpClass::Write`] — it is the staging tree's other write primitive,
+/// and the degraded-mode recovery probe rides on it).
+pub fn create_sparse_with(faults: Option<&FaultInjector>, path: &Path, len: u64) -> Result<()> {
+    match fault_verdict(faults, OpClass::Write, path) {
+        FaultVerdict::Proceed => {}
+        FaultVerdict::Fail(e) => {
+            return Err(anyhow::Error::from(e)
+                .context(format!("creating sparse staging file {}", path.display())));
+        }
+        FaultVerdict::Truncate(n) => return Err(torn_transfer(OpClass::Write, path, n)),
+    }
     let f = std::fs::File::create(path)
         .with_context(|| format!("creating sparse staging file {}", path.display()))?;
     f.set_len(len)

@@ -83,6 +83,51 @@
 //!   loses the staging file mid-read falls back to the canonical GFS
 //!   copy (counted in [`CacheSnapshot::fallback_reads`]).
 //!
+//! # Failure semantics (the PR-6 fault chain)
+//!
+//! Every IO primitive on the fill path runs through
+//! [`crate::cio::fault`]'s injector hooks, so the behaviour below is
+//! exercised by fault tests against the *production* code:
+//!
+//! * **What is retried, in what order.** A whole-archive fill retries
+//!   the *entire* chain — routed sources (cheapest first), producer,
+//!   GFS — up to [`RetryPolicy::attempts`] times, spaced by
+//!   seed-deterministic exponential backoff
+//!   ([`RetryPolicy::backoff_ms`]); each attempt re-routes from
+//!   scratch, so a source that failed last attempt is naturally
+//!   demoted (its health streak reorders or quarantines it). A record
+//!   read retries its partial resolve the same way; a failed chunk
+//!   latch is re-claimable the moment it fails, so the retry claims it
+//!   afresh and deduped waiters observe only the **final** outcome —
+//!   never the first transient error, never a wedged latch. Errors
+//!   with no `io::Error` in their chain (logic errors), `NotFound`
+//!   (the canonical copy is genuinely gone), and storage-full faults
+//!   are not retried ([`crate::cio::fault::is_retryable`]).
+//! * **Deadlines.** Each candidate-source probe gets
+//!   [`RetryPolicy::source_deadline_ms`] (derived from the
+//!   neighbor-transfer cap by [`PlacementPolicy::retry_policy`]); a
+//!   probe that lands late is discarded (counted in
+//!   [`CacheSnapshot::deadline_aborts`]), charged to the source's
+//!   health, and the fill re-routes to the next candidate. GFS — the
+//!   last resort — has no deadline: slow truth beats fast nothing.
+//! * **Quarantine.** [`RetentionDirectory`] trips a per-source circuit
+//!   breaker after [`RetryPolicy::quarantine_streak`] consecutive
+//!   failures (stale probes via `record_stale` feed the same signal);
+//!   a quarantined source is excluded from `route` until
+//!   [`RetryPolicy::probation_fills`] fills succeed elsewhere, then
+//!   re-probed half-open (ranked first exactly once — the probe *is*
+//!   the next fill); a failed probe re-trips, a served one fully
+//!   recovers the source. GFS is never quarantined, so a fill always
+//!   has a live tier.
+//! * **Degraded mode.** ENOSPC/EROFS from the staging tree
+//!   ([`crate::cio::fault::is_storage_full`]) flips the group to
+//!   GFS-direct serving: reads come byte-exact from the canonical copy
+//!   (counted in [`CacheSnapshot::degraded_reads`]), retention
+//!   requests are declined without failing the collector, and every
+//!   resolve re-probes with a real staging write — the first probe
+//!   that succeeds lifts the mode. Data is never lost: the GFS copy is
+//!   canonical before retention ever happens.
+//!
 //! Retention also survives the runner: each group's accounting — entries
 //! in LRU order, per-archive read counts, and the aggregate hit/miss
 //! totals — is written to `ifs/<group>/cache.manifest` when the
@@ -109,9 +154,12 @@ use crate::cio::archive::{Compression, Reader};
 use crate::cio::collector::{CollectorStats, Policy};
 use crate::cio::directory::RetentionDirectory;
 use crate::cio::extent::{chunk_runs, ExtentMap};
+use crate::cio::fault::{
+    is_retryable, is_storage_full, FaultInjector, FillError, FillTier, RetryPolicy,
+};
 use crate::cio::local::{
-    create_sparse, publish_copy, publish_link, read_range, write_range_at, CollectorOptions,
-    LocalCollector, LocalLayout,
+    create_sparse_with, publish_copy_with, publish_link_with, read_range_with, write_range_at_with,
+    CollectorOptions, LocalCollector, LocalLayout, TMP_PREFIX,
 };
 use crate::cio::placement::{LearnedPlacement, PlacementPolicy};
 use crate::cio::stage::{CacheOutcome, IfsCache, StageGraph};
@@ -208,6 +256,26 @@ pub struct CacheSnapshot {
     /// served by the direct-GFS retry ([`StageInput::read_with`]'s
     /// fallback) — GFS traffic the per-tier fill counters cannot see.
     pub fallback_reads: u64,
+    /// Fill or record-read attempts repeated after a retryable failure
+    /// (bounded by [`RetryPolicy::attempts`], spaced by its
+    /// seed-deterministic backoff). Cumulative across warm starts.
+    pub retries: u64,
+    /// Fills (whole-archive or chunk-run) that succeeded from a *later*
+    /// candidate — next routed source, producer, or GFS — after at least
+    /// one earlier source failed its probe or blew its deadline.
+    pub rerouted_fills: u64,
+    /// Quarantine trips this cache's probes charged: a source whose
+    /// consecutive-failure streak hit [`RetryPolicy::quarantine_streak`]
+    /// and was excluded from routing until probation reopens it.
+    pub quarantined_sources: u64,
+    /// Reads served straight from the canonical GFS copy because the
+    /// staging tree is in degraded (ENOSPC/EROFS) mode — byte-exact, but
+    /// nothing was retained. The mode clears when a probe write succeeds.
+    pub degraded_reads: u64,
+    /// Source probes abandoned because they exceeded
+    /// [`RetryPolicy::source_deadline_ms`]; their data was discarded and
+    /// the fill re-routed to the next candidate.
+    pub deadline_aborts: u64,
 }
 
 /// State of one in-flight cache fill (the singleflight latch).
@@ -217,8 +285,12 @@ enum FillState {
     /// Fill landed; the retained copy is accounted and readable. Carries
     /// the tier the *filler* paid so deduped waiters report it honestly.
     Done(CacheOutcome),
-    /// Fill failed; waiters get the error instead of a deadlock.
-    Failed(String),
+    /// Fill failed; waiters get the typed error — which tier failed,
+    /// from which source, and whether it was transient — instead of a
+    /// deadlock. The filler publishes only the *final* outcome: retries
+    /// and re-routes happen before this state is reached, so waiters
+    /// never observe a first transient error.
+    Failed(FillError),
 }
 
 /// Per-archive in-flight fill latch: one filler copies, every concurrent
@@ -239,14 +311,15 @@ impl Fill {
         self.cv.notify_all();
     }
 
-    /// Block until the filler publishes; `Err` carries the fill error.
-    fn wait(&self) -> std::result::Result<CacheOutcome, String> {
+    /// Block until the filler publishes; `Err` carries the typed fill
+    /// error.
+    fn wait(&self) -> std::result::Result<CacheOutcome, FillError> {
         let mut state = self.state.lock().unwrap();
         loop {
             match &*state {
                 FillState::Pending => state = self.cv.wait(state).unwrap(),
                 FillState::Done(outcome) => return Ok(*outcome),
-                FillState::Failed(msg) => return Err(msg.clone()),
+                FillState::Failed(err) => return Err(err.clone()),
             }
         }
     }
@@ -268,6 +341,31 @@ struct Partial {
     /// Index over the partially-resident file, mounted once the trailer
     /// + index extents land ([`Reader::open_indexed_range`]).
     reader: OnceLock<Reader>,
+}
+
+/// What one candidate-source probe did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ProbeOutcome {
+    /// The pull landed at the destination within its deadline.
+    Served,
+    /// The candidate was inapplicable — the reader itself, an
+    /// over-the-cap archive, an unreachable group, or a producer probed
+    /// on spec that simply does not retain. Not a health event.
+    Skipped,
+    /// A real probe failed: stale entry, IO fault, or blown deadline —
+    /// charged to the source's health (quarantine streak).
+    Failed,
+}
+
+/// [`ProbeOutcome`] for the chunk-granular sibling probe, carrying the
+/// fetched bytes on success.
+enum ChunkProbe {
+    /// The chunk run landed.
+    Bytes(Vec<u8>),
+    /// A real probe failed (health charged); try the next source.
+    Failed,
+    /// The candidate was inapplicable; not a health event.
+    Skipped,
 }
 
 /// What one partial fetch moved, and from where — folded into the
@@ -352,6 +450,20 @@ pub struct GroupCache {
     /// `<root>/ifs` — to reach the on-disk retention of groups this
     /// runner has no cache for (cold-runner-bootstrap sources).
     ifs_root: PathBuf,
+    /// Fault-tolerance knobs: bounded attempts, deterministic backoff,
+    /// per-source probe deadline, quarantine thresholds.
+    retry: RetryPolicy,
+    /// Failpoint registry consulted by every IO primitive this cache
+    /// issues (`None` in production — zero-cost fast path).
+    faults: Option<Arc<FaultInjector>>,
+    /// Degraded GFS-direct mode: set when the staging tree reports
+    /// ENOSPC/EROFS, cleared when a probe write succeeds again.
+    degraded: AtomicBool,
+    /// Fault counters restored from a previous run's manifest (live
+    /// counters start at zero on top, like `prior_hits`/`prior_misses`).
+    prior_fault: FaultTotals,
+    /// Torn or unparseable manifest lines skipped during warm start.
+    manifest_corrupt: u64,
     neighbor_transfers: AtomicU64,
     routed_transfers: AtomicU64,
     stale_fallbacks: AtomicU64,
@@ -362,6 +474,22 @@ pub struct GroupCache {
     partial_routed_reads: AtomicU64,
     partial_gfs_reads: AtomicU64,
     fallback_reads: AtomicU64,
+    retries: AtomicU64,
+    rerouted_fills: AtomicU64,
+    quarantined_sources: AtomicU64,
+    degraded_reads: AtomicU64,
+    deadline_aborts: AtomicU64,
+}
+
+/// Cumulative fault-path counters as persisted in the manifest `#stats`
+/// line (and restored on warm start).
+#[derive(Debug, Clone, Copy, Default)]
+struct FaultTotals {
+    retries: u64,
+    rerouted: u64,
+    quarantined: u64,
+    degraded: u64,
+    deadline_aborts: u64,
 }
 
 impl GroupCache {
@@ -422,6 +550,11 @@ impl GroupCache {
             partials: Mutex::new(HashMap::new()),
             fill_chunk: DEFAULT_FILL_CHUNK,
             ifs_root: layout.root.join("ifs"),
+            retry: RetryPolicy::default(),
+            faults: None,
+            degraded: AtomicBool::new(false),
+            prior_fault: warm.prior_fault,
+            manifest_corrupt: warm.corrupt_lines,
             neighbor_transfers: AtomicU64::new(0),
             routed_transfers: AtomicU64::new(0),
             stale_fallbacks: AtomicU64::new(0),
@@ -432,7 +565,30 @@ impl GroupCache {
             partial_routed_reads: AtomicU64::new(0),
             partial_gfs_reads: AtomicU64::new(0),
             fallback_reads: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            rerouted_fills: AtomicU64::new(0),
+            quarantined_sources: AtomicU64::new(0),
+            degraded_reads: AtomicU64::new(0),
+            deadline_aborts: AtomicU64::new(0),
         }
+    }
+
+    /// Use `policy` for this cache's retry / backoff / deadline behaviour
+    /// (defaults to [`RetryPolicy::default`]). The quarantine thresholds
+    /// in `policy` apply only to directories built by
+    /// [`GroupCache::per_group_tuned`]; a directory passed to
+    /// [`GroupCache::with_directory`] keeps its own.
+    pub fn with_retry(mut self, policy: RetryPolicy) -> GroupCache {
+        self.retry = policy;
+        self
+    }
+
+    /// Thread `faults` through every IO primitive this cache issues, so
+    /// fault tests drive the *production* read/fill path rather than a
+    /// mock. Production caches leave this unset.
+    pub fn with_faults(mut self, faults: Arc<FaultInjector>) -> GroupCache {
+        self.faults = Some(faults);
+        self
     }
 
     /// Use `bytes` as the partial-fill chunk size (what a cold record
@@ -468,13 +624,45 @@ impl GroupCache {
         neighbor_limit: u64,
         fill_chunk: u64,
     ) -> Arc<Vec<GroupCache>> {
-        let directory = Arc::new(RetentionDirectory::new(layout.ifs_groups()));
+        Self::per_group_tuned(
+            layout,
+            capacity,
+            neighbor_limit,
+            fill_chunk,
+            RetryPolicy::default(),
+            None,
+        )
+    }
+
+    /// [`GroupCache::per_group_config`] plus the PR-6 fault-tolerance
+    /// knobs: every cache gets `retry` (whose quarantine thresholds also
+    /// shape the shared [`RetentionDirectory`]'s circuit breaker) and,
+    /// when given, the shared [`FaultInjector`] handle.
+    pub fn per_group_tuned(
+        layout: &LocalLayout,
+        capacity: u64,
+        neighbor_limit: u64,
+        fill_chunk: u64,
+        retry: RetryPolicy,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> Arc<Vec<GroupCache>> {
+        let directory = Arc::new(RetentionDirectory::with_health(
+            layout.ifs_groups(),
+            retry.quarantine_streak,
+            retry.probation_fills,
+        ));
         Arc::new(
             (0..layout.ifs_groups())
                 .map(|g| {
                     let dir = directory.clone();
-                    GroupCache::with_directory(layout, g, capacity, neighbor_limit, dir)
-                        .with_fill_chunk(fill_chunk)
+                    let mut cache =
+                        GroupCache::with_directory(layout, g, capacity, neighbor_limit, dir)
+                            .with_fill_chunk(fill_chunk)
+                            .with_retry(retry.clone());
+                    if let Some(f) = &faults {
+                        cache = cache.with_faults(f.clone());
+                    }
+                    cache
                 })
                 .collect(),
         )
@@ -496,6 +684,63 @@ impl GroupCache {
     /// zero on top of these.
     pub fn prior_stats(&self) -> (u64, u64) {
         (self.prior_hits, self.prior_misses)
+    }
+
+    /// Torn or unparseable lines skipped (and counted, never trusted)
+    /// while parsing this cache's warm-start manifest — crash residue
+    /// from a previous process dying mid-write.
+    pub fn manifest_corrupt_lines(&self) -> u64 {
+        self.manifest_corrupt
+    }
+
+    /// Whether this cache is currently serving in degraded GFS-direct
+    /// mode (staging tree reported ENOSPC/EROFS; see
+    /// [`CacheSnapshot::degraded_reads`]).
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// The injector handle threaded into IO primitives (`None` in
+    /// production).
+    fn faults(&self) -> Option<&FaultInjector> {
+        self.faults.as_deref()
+    }
+
+    /// Classify `e`: a storage-full/read-only staging tree flips (or
+    /// keeps) the cache in degraded GFS-direct mode. Returns whether the
+    /// error was a storage fault.
+    fn note_storage_fault(&self, e: &anyhow::Error) -> bool {
+        if is_storage_full(e) {
+            self.degraded.store(true, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// While degraded, probe the staging tree with a real write (through
+    /// the injector, so a persistent ENOSPC rule keeps the probe
+    /// failing); a successful probe clears the flag. Returns whether
+    /// serving must stay degraded. Cheap when not degraded.
+    fn still_degraded(&self) -> bool {
+        if !self.is_degraded() {
+            return false;
+        }
+        let probe = self.data_dir.join(format!("{TMP_PREFIX}probe-{}", self.group));
+        let ok = create_sparse_with(self.faults(), &probe, 1).is_ok();
+        let _ = std::fs::remove_file(&probe);
+        if ok {
+            self.degraded.store(false, Ordering::Relaxed);
+        }
+        !ok
+    }
+
+    /// Charge `source`'s health for a failed or deadline-blown probe;
+    /// count the quarantine trip if the streak crossed the breaker.
+    fn charge_source(&self, source: u32) {
+        if self.directory.record_failure(source) {
+            self.quarantined_sources.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Replay this cache's per-archive read counts into a
@@ -523,6 +768,12 @@ impl GroupCache {
     /// room. Returns `Ok(false)` when the archive is larger than the
     /// whole cache and was not retained (it stays GFS-only, per §5.3).
     pub fn retain(&self, src: &std::path::Path, name: &str) -> Result<bool> {
+        // A degraded staging tree cannot accept new retention; the
+        // archive stays GFS-only (exactly the oversized-archive
+        // semantics) until a read-path probe clears the mode.
+        if self.still_degraded() {
+            return Ok(false);
+        }
         let bytes = std::fs::metadata(src)
             .with_context(|| format!("retaining {}", src.display()))?
             .len();
@@ -534,10 +785,17 @@ impl GroupCache {
             let _ = std::fs::remove_file(self.data_dir.join(victim));
             self.directory.withdraw(victim, self.group);
         }
-        if let Err(e) = publish_copy(src, &self.data_dir.join(name)) {
+        if let Err(e) = publish_copy_with(self.faults(), src, &self.data_dir.join(name)) {
             // Keep accounting honest: the copy never landed.
             cache.remove(name);
             self.directory.withdraw(name, self.group);
+            drop(cache);
+            // A full/read-only tree degrades the group instead of
+            // erroring the collector: the flush already landed on GFS,
+            // so skipping retention loses performance, not data.
+            if self.note_storage_fault(&e) {
+                return Ok(false);
+            }
             return Err(e.context(format!("retaining archive {name} on IFS")));
         }
         self.directory.publish(name, self.group);
@@ -597,6 +855,16 @@ impl GroupCache {
                     return Ok((Reader::open(&gfs_path)?, CacheOutcome::GfsMiss));
                 }
             }
+            // Degraded GFS-direct serving: a full/read-only staging
+            // tree cannot accept a fill, but the canonical GFS copy
+            // still serves byte-exact reads (counted as degraded). The
+            // probe write inside `still_degraded` decides recovery on
+            // every resolve.
+            if self.still_degraded() {
+                self.degraded_reads.fetch_add(1, Ordering::Relaxed);
+                self.note_read(name);
+                return Ok((Reader::open(&gfs_path)?, CacheOutcome::GfsMiss));
+            }
             // Singleflight: join the in-flight fill or become the filler.
             let (fill, filler) = {
                 let mut fills = self.fills.lock().unwrap();
@@ -624,14 +892,39 @@ impl GroupCache {
                         }
                         continue;
                     }
-                    Err(msg) => {
-                        anyhow::bail!("fill of archive {name} failed: {msg}");
+                    Err(err) => {
+                        // The filler hit a storage fault and degraded the
+                        // group: its waiters serve from GFS the same way
+                        // instead of surfacing the staging error.
+                        if self.still_degraded() {
+                            self.degraded_reads.fetch_add(1, Ordering::Relaxed);
+                            self.note_read(name);
+                            return Ok((Reader::open(&gfs_path)?, CacheOutcome::GfsMiss));
+                        }
+                        anyhow::bail!("fill of archive {name} failed: {err}");
                     }
                 }
             }
             // Filler path: move the bytes OUTSIDE both locks, then
             // account under the metadata lock, then release waiters.
-            let result = self.run_fill(&gfs_path, name, siblings);
+            // The whole fill chain — routed sources, producer, GFS — is
+            // retried here with bounded, backed-off attempts; each
+            // attempt re-routes from scratch, so deduped waiters only
+            // ever observe the *final* outcome, never a transient error.
+            let mut attempt = 1u32;
+            let result = loop {
+                match self.run_fill(&gfs_path, name, siblings) {
+                    Ok(outcome) => break Ok(outcome),
+                    Err(e) => {
+                        if attempt >= self.retry.attempts.max(1) || !is_retryable(&e) {
+                            break Err(e);
+                        }
+                        attempt += 1;
+                        self.retries.fetch_add(1, Ordering::Relaxed);
+                        self.retry.back_off(attempt);
+                    }
+                }
+            };
             self.fills.lock().unwrap().remove(name);
             match result {
                 Ok(outcome) => {
@@ -658,7 +951,21 @@ impl GroupCache {
                     }
                 }
                 Err(e) => {
-                    fill.publish(FillState::Failed(format!("{e:#}")));
+                    // A storage-faulted staging tree degrades the group
+                    // instead of failing the read: waiters re-probe into
+                    // degraded serving, this read comes straight from the
+                    // canonical GFS copy.
+                    if self.note_storage_fault(&e) {
+                        fill.publish(FillState::Failed(FillError::storage(&e)));
+                        self.degraded_reads.fetch_add(1, Ordering::Relaxed);
+                        self.note_read(name);
+                        return Ok((Reader::open(&gfs_path)?, CacheOutcome::GfsMiss));
+                    }
+                    let err = e
+                        .downcast_ref::<FillError>()
+                        .cloned()
+                        .unwrap_or_else(|| FillError::classify(FillTier::Staging, None, &e));
+                    fill.publish(FillState::Failed(err));
                     return Err(e.context(format!("filling archive {name}")));
                 }
             }
@@ -677,31 +984,71 @@ impl GroupCache {
     /// and skipped**: staleness costs one fallback probe, never an error
     /// and never a wrong read. An over-the-cap archive aborts the tier
     /// without a stale mark (every replica has the same size).
+    ///
+    /// Returns `(serving group, failed probes)`: the second component
+    /// counts candidates that genuinely failed (stale, IO fault, blown
+    /// deadline — each charged to that source's health) before the pull
+    /// landed, so the caller can attribute a re-routed fill.
     fn try_routed_fill(
         &self,
         name: &str,
         dst: &std::path::Path,
         siblings: &[GroupCache],
-    ) -> Option<u32> {
+    ) -> (Option<u32>, u32) {
         let producer = archive_group(name);
         let mut tried_producer = false;
+        let mut failed = 0u32;
         for cand in self.directory.route(name, self.group) {
             if Some(cand) == producer {
                 tried_producer = true;
             }
-            if self.pull_from(cand, name, dst, siblings, true) {
-                return Some(cand);
+            match self.probe_pull(cand, name, dst, siblings, true) {
+                ProbeOutcome::Served => return (Some(cand), failed),
+                ProbeOutcome::Failed => failed += 1,
+                ProbeOutcome::Skipped => {}
             }
         }
         if let Some(owner) = producer {
-            if owner != self.group
-                && !tried_producer
-                && self.pull_from(owner, name, dst, siblings, false)
-            {
-                return Some(owner);
+            if owner != self.group && !tried_producer {
+                match self.probe_pull(owner, name, dst, siblings, false) {
+                    ProbeOutcome::Served => return (Some(owner), failed),
+                    ProbeOutcome::Failed => failed += 1,
+                    ProbeOutcome::Skipped => {}
+                }
             }
         }
-        None
+        (None, failed)
+    }
+
+    /// One deadline-guarded candidate probe. A pull that lands only
+    /// *after* the per-source deadline
+    /// ([`RetryPolicy::source_deadline_ms`]) is discarded — the copy is
+    /// unlinked, the abort counted, the source's health charged — and
+    /// reported as failed so the fill re-routes to the next candidate.
+    /// A kept pull credits the source's health (and every quarantined
+    /// source's probation clock).
+    fn probe_pull(
+        &self,
+        source: u32,
+        name: &str,
+        dst: &std::path::Path,
+        siblings: &[GroupCache],
+        advertised: bool,
+    ) -> ProbeOutcome {
+        let start = Instant::now();
+        let out = self.pull_from(source, name, dst, siblings, advertised);
+        if out == ProbeOutcome::Served {
+            if let Some(deadline) = self.retry.source_deadline() {
+                if start.elapsed() > deadline {
+                    self.deadline_aborts.fetch_add(1, Ordering::Relaxed);
+                    self.charge_source(source);
+                    let _ = std::fs::remove_file(dst);
+                    return ProbeOutcome::Failed;
+                }
+            }
+            self.directory.note_fill_success(Some(source));
+        }
+        out
     }
 
     /// Probe one candidate source and publish group-to-group on success
@@ -718,9 +1065,9 @@ impl GroupCache {
         dst: &std::path::Path,
         siblings: &[GroupCache],
         advertised: bool,
-    ) -> bool {
+    ) -> ProbeOutcome {
         if source == self.group {
-            return false;
+            return ProbeOutcome::Skipped;
         }
         let Some(sib) = siblings.iter().find(|c| c.group == source) else {
             // No cache of this runner manages that group. A source the
@@ -732,43 +1079,61 @@ impl GroupCache {
             if advertised && source >= self.directory.groups() {
                 return self.pull_from_disk(source, name, dst);
             }
-            return false;
+            return ProbeOutcome::Skipped;
         };
         if !sib.contains(name) {
             // A producer probed on spec (`!advertised`) simply may not
             // retain the archive — that is a plain miss of this tier,
             // not a stale directory entry.
-            if advertised && sib.reconcile_stale(name) {
-                self.stale_fallbacks.fetch_add(1, Ordering::Relaxed);
+            if advertised {
+                self.note_sibling_stale(sib, name);
+                return ProbeOutcome::Failed;
             }
-            return false;
+            return ProbeOutcome::Skipped;
         }
         let src = sib.data_dir.join(name);
         match std::fs::metadata(&src) {
-            Ok(m) if m.len() > self.neighbor_limit => return false,
+            Ok(m) if m.len() > self.neighbor_limit => return ProbeOutcome::Skipped,
             Ok(_) => {}
             Err(_) => {
                 // Accounted but the file is gone — eviction race or an
                 // injected fault.
-                if sib.reconcile_stale(name) {
-                    self.stale_fallbacks.fetch_add(1, Ordering::Relaxed);
-                }
-                return false;
+                self.note_sibling_stale(sib, name);
+                return ProbeOutcome::Failed;
             }
         }
         // The transfer is charged to the source while it runs, so
         // concurrent fills route around it (load-aware ranking).
         self.directory.begin_serve(source);
-        let ok = publish_link(&src, dst).is_ok();
+        let ok = publish_link_with(self.faults(), &src, dst).is_ok();
         self.directory.end_serve(source);
         if ok {
-            return true;
+            return ProbeOutcome::Served;
         }
-        // The source vanished between the probe and the link.
-        if sib.reconcile_stale(name) {
-            self.stale_fallbacks.fetch_add(1, Ordering::Relaxed);
+        // The source vanished between the probe and the link — or the
+        // transfer faulted with the entry still live. A live entry is a
+        // transient source fault, charged to its health but not
+        // withdrawn (its retention is fine; the wire was not).
+        if !self.note_sibling_stale(sib, name) {
+            self.charge_source(source);
         }
-        false
+        ProbeOutcome::Failed
+    }
+
+    /// Reconcile a failed probe of `sib`'s retention; returns whether
+    /// the entry was stale (then counted as a fallback, with any
+    /// quarantine trip charged to this reader's counters).
+    fn note_sibling_stale(&self, sib: &GroupCache, name: &str) -> bool {
+        match sib.reconcile_stale(name) {
+            Some(tripped) => {
+                self.stale_fallbacks.fetch_add(1, Ordering::Relaxed);
+                if tripped {
+                    self.quarantined_sources.fetch_add(1, Ordering::Relaxed);
+                }
+                true
+            }
+            None => false,
+        }
     }
 
     /// Pull `name` from the on-disk retention of a group this runner has
@@ -776,25 +1141,35 @@ impl GroupCache {
     /// staleness contract as a cache-managed sibling, except the dead
     /// entry is withdrawn straight from the directory — no accounting
     /// exists to reconcile.
-    fn pull_from_disk(&self, source: u32, name: &str, dst: &std::path::Path) -> bool {
+    fn pull_from_disk(&self, source: u32, name: &str, dst: &std::path::Path) -> ProbeOutcome {
         let src = self.foreign_data_path(source, name);
         match std::fs::metadata(&src) {
-            Ok(m) if m.len() > self.neighbor_limit => return false,
+            Ok(m) if m.len() > self.neighbor_limit => return ProbeOutcome::Skipped,
             Ok(_) => {}
             Err(_) => {
-                self.directory.record_stale(name, source);
-                self.stale_fallbacks.fetch_add(1, Ordering::Relaxed);
-                return false;
+                self.note_disk_stale(name, source);
+                return ProbeOutcome::Failed;
             }
         }
         self.directory.begin_serve(source);
-        let ok = publish_link(&src, dst).is_ok();
+        let ok = publish_link_with(self.faults(), &src, dst).is_ok();
         self.directory.end_serve(source);
-        if !ok {
-            self.directory.record_stale(name, source);
-            self.stale_fallbacks.fetch_add(1, Ordering::Relaxed);
+        if ok {
+            ProbeOutcome::Served
+        } else {
+            self.note_disk_stale(name, source);
+            ProbeOutcome::Failed
         }
-        ok
+    }
+
+    /// Stale mark for a cache-less (bootstrap) source: withdrawn
+    /// straight from the directory — no accounting exists to reconcile —
+    /// and counted like a sibling's stale entry.
+    fn note_disk_stale(&self, name: &str, source: u32) {
+        if self.directory.record_stale(name, source) {
+            self.quarantined_sources.fetch_add(1, Ordering::Relaxed);
+        }
+        self.stale_fallbacks.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Called by a reader whose pull from this (sibling) cache failed:
@@ -805,16 +1180,17 @@ impl GroupCache {
     /// injected fault can kill the file behind the accounting's back)
     /// and withdrawn from the directory. Because every publish of this
     /// group's entries also runs under this lock, a withdrawal here can
-    /// never cancel a fresh publish. Returns `true` when the entry was
-    /// stale.
-    fn reconcile_stale(&self, name: &str) -> bool {
+    /// never cancel a fresh publish. `None` means the entry is live (the
+    /// probe lost a race, not staleness); `Some(tripped)` means it was
+    /// stale, with `tripped` reporting whether the stale mark crossed
+    /// this source's quarantine breaker.
+    fn reconcile_stale(&self, name: &str) -> Option<bool> {
         let mut cache = self.inner.lock().unwrap();
         if cache.contains(name) && self.data_dir.join(name).is_file() {
-            return false;
+            return None;
         }
         cache.remove(name);
-        self.directory.record_stale(name, self.group);
-        true
+        Some(self.directory.record_stale(name, self.group))
     }
 
     /// The data movement of one deduped fill: routed neighbor tier first
@@ -868,7 +1244,11 @@ impl GroupCache {
             }
             return Ok(outcome);
         }
-        let outcome = if let Some(source) = self.try_routed_fill(name, &dst, siblings) {
+        let (routed, failed_probes) = self.try_routed_fill(name, &dst, siblings);
+        let outcome = if let Some(source) = routed {
+            if failed_probes > 0 {
+                self.rerouted_fills.fetch_add(1, Ordering::Relaxed);
+            }
             self.neighbor_transfers.fetch_add(1, Ordering::Relaxed);
             if archive_group(name) != Some(source) {
                 self.routed_transfers.fetch_add(1, Ordering::Relaxed);
@@ -876,8 +1256,17 @@ impl GroupCache {
             self.directory.record_serve(name, source);
             CacheOutcome::NeighborTransfer
         } else {
-            publish_copy(gfs_path, &dst)
-                .with_context(|| format!("re-staging archive {name} from GFS"))?;
+            publish_copy_with(self.faults(), gfs_path, &dst).map_err(|e| {
+                let fill = FillError::classify(FillTier::Gfs, None, &e);
+                e.context(format!("re-staging archive {name} from GFS")).context(fill)
+            })?;
+            // GFS is the last resort: a success after failed neighbor
+            // probes is a re-routed fill, and it advances every
+            // quarantined source's probation clock.
+            if failed_probes > 0 {
+                self.rerouted_fills.fetch_add(1, Ordering::Relaxed);
+            }
+            self.directory.note_fill_success(None);
             self.gfs_copies.fetch_add(1, Ordering::Relaxed);
             CacheOutcome::GfsMiss
         };
@@ -974,7 +1363,7 @@ impl GroupCache {
         // runs after its accounting, so this re-check under the lock
         // closes the window).
         let path = self.partial_path(name);
-        create_sparse(&path, total)
+        create_sparse_with(self.faults(), &path, total)
             .with_context(|| format!("creating partial staging for archive {name}"))?;
         let part = Arc::new(Partial {
             path,
@@ -1030,16 +1419,23 @@ impl GroupCache {
     /// re-publish), else withdraw the bootstrap entry straight from the
     /// directory — and count the fallback either way.
     fn note_stale_source(&self, source: u32, name: &str, siblings: &[GroupCache]) {
-        match siblings.iter().find(|c| c.group == source) {
-            Some(sib) => {
-                if sib.reconcile_stale(name) {
+        let tripped = match siblings.iter().find(|c| c.group == source) {
+            Some(sib) => match sib.reconcile_stale(name) {
+                Some(t) => {
                     self.stale_fallbacks.fetch_add(1, Ordering::Relaxed);
+                    t
                 }
-            }
+                // Entry live — the probe lost a race or hit a transient
+                // fault; charge the source's health without withdrawing.
+                None => self.directory.record_failure(source),
+            },
             None => {
-                self.directory.record_stale(name, source);
                 self.stale_fallbacks.fetch_add(1, Ordering::Relaxed);
+                self.directory.record_stale(name, source)
             }
+        };
+        if tripped {
+            self.quarantined_sources.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -1047,7 +1443,9 @@ impl GroupCache {
     /// group `source`'s retention — the chunk-granular sibling probe,
     /// with [`GroupCache::pull_from`]'s staleness contract: a dead
     /// source is withdrawn (and counted) and the caller falls onward.
-    /// `None` means "try the next source", never an error.
+    /// [`ChunkProbe::Failed`] (health charged) and
+    /// [`ChunkProbe::Skipped`] (candidate inapplicable) both mean "try
+    /// the next source", never an error.
     #[allow(clippy::too_many_arguments)]
     fn read_chunks_from(
         &self,
@@ -1058,17 +1456,18 @@ impl GroupCache {
         total: u64,
         siblings: &[GroupCache],
         advertised: bool,
-    ) -> Option<Vec<u8>> {
+    ) -> ChunkProbe {
         if source == self.group {
-            return None;
+            return ChunkProbe::Skipped;
         }
         let src = match siblings.iter().find(|c| c.group == source) {
             Some(sib) => {
                 if !sib.contains(name) {
                     if advertised {
                         self.note_stale_source(source, name, siblings);
+                        return ChunkProbe::Failed;
                     }
-                    return None;
+                    return ChunkProbe::Skipped;
                 }
                 sib.data_dir.join(name)
             }
@@ -1076,7 +1475,7 @@ impl GroupCache {
             None if advertised && source >= self.directory.groups() => {
                 self.foreign_data_path(source, name)
             }
-            None => return None,
+            None => return ChunkProbe::Skipped,
         };
         // A size mismatch means this is not the same archive build;
         // never mix its bytes into the staging file.
@@ -1084,22 +1483,26 @@ impl GroupCache {
         if !size_ok {
             if advertised {
                 self.note_stale_source(source, name, siblings);
+                return ChunkProbe::Failed;
             }
-            return None;
+            return ChunkProbe::Skipped;
         }
         self.directory.begin_serve(source);
-        let got = read_range(&src, offset, len);
+        let got = read_range_with(self.faults(), &src, offset, len);
         self.directory.end_serve(source);
         match got {
-            Ok(bytes) => Some(bytes),
+            Ok(bytes) => ChunkProbe::Bytes(bytes),
             Err(_) => {
                 // The retention died under the read (eviction race or a
                 // fault): withdraw and fall onward — one fallback probe,
-                // never a wrong read.
+                // never a wrong read. A producer probed on spec keeps
+                // its entry but is charged the transient fault.
                 if advertised {
                     self.note_stale_source(source, name, siblings);
+                } else {
+                    self.charge_source(source);
                 }
-                None
+                ChunkProbe::Failed
             }
         }
     }
@@ -1146,12 +1549,13 @@ impl GroupCache {
                     }
                 }
             }
-            let mut failed: Option<anyhow::Error> = None;
+            let mut failed: Option<(anyhow::Error, FillError)> = None;
             for run in chunk_runs(&plan.mine) {
-                if let Some(e) = &failed {
-                    let msg = format!("abandoned after an earlier chunk failure: {e:#}");
+                if let Some((_, fe)) = &failed {
+                    // Waiters of abandoned chunks see the *original*
+                    // typed failure; the next resolve re-claims them.
                     for c in run {
-                        part.map.fail(c, &msg);
+                        part.map.fail(c, fe);
                     }
                     continue;
                 }
@@ -1159,13 +1563,31 @@ impl GroupCache {
                 let span_end = part.map.span(run.end - 1).end;
                 let n = (span_end - span_start) as usize;
                 let mut got: Option<(Vec<u8>, Option<u32>)> = None;
+                let mut run_failed_probes = false;
                 for &(cand, advertised) in &cands {
+                    let start = Instant::now();
                     let probe = self.read_chunks_from(
                         cand, name, span_start, n, part.total, siblings, advertised,
                     );
-                    if let Some(bytes) = probe {
-                        got = Some((bytes, Some(cand)));
-                        break;
+                    match probe {
+                        ChunkProbe::Bytes(bytes) => {
+                            // A probe that beat the candidates but blew
+                            // the per-source deadline is discarded and
+                            // re-routed like a failure.
+                            if let Some(dl) = self.retry.source_deadline() {
+                                if start.elapsed() > dl {
+                                    self.deadline_aborts.fetch_add(1, Ordering::Relaxed);
+                                    self.charge_source(cand);
+                                    run_failed_probes = true;
+                                    continue;
+                                }
+                            }
+                            self.directory.note_fill_success(Some(cand));
+                            got = Some((bytes, Some(cand)));
+                            break;
+                        }
+                        ChunkProbe::Failed => run_failed_probes = true,
+                        ChunkProbe::Skipped => {}
                     }
                 }
                 if got.is_none() {
@@ -1178,7 +1600,7 @@ impl GroupCache {
                         .map(|m| m.len() == part.total)
                         .unwrap_or(false);
                     let ranged = if gfs_ok {
-                        read_range(gfs_path, span_start, n)
+                        read_range_with(self.faults(), gfs_path, span_start, n)
                     } else {
                         Err(anyhow::anyhow!(
                             "canonical copy {} is missing or not {} bytes",
@@ -1187,29 +1609,37 @@ impl GroupCache {
                         ))
                     };
                     match ranged {
-                        Ok(bytes) => got = Some((bytes, None)),
+                        Ok(bytes) => {
+                            self.directory.note_fill_success(None);
+                            got = Some((bytes, None));
+                        }
                         Err(e) => {
                             let e = e.context(format!(
                                 "fetching chunks {}..{} of archive {name}",
                                 run.start, run.end
                             ));
-                            let msg = format!("{e:#}");
+                            let fe = FillError::classify(FillTier::Gfs, None, &e);
                             for c in run {
-                                part.map.fail(c, &msg);
+                                part.map.fail(c, &fe);
                             }
-                            failed = Some(e);
+                            failed = Some((e, fe));
                             continue;
                         }
                     }
                 }
                 let (bytes, source) = got.expect("fetched or failed above");
-                if let Err(e) = write_range_at(&part.path, span_start, &bytes) {
+                if run_failed_probes {
+                    // The run landed from a later candidate (or GFS)
+                    // after at least one failed probe: a re-routed fill.
+                    self.rerouted_fills.fetch_add(1, Ordering::Relaxed);
+                }
+                if let Err(e) = write_range_at_with(self.faults(), &part.path, span_start, &bytes) {
                     let e = e.context(format!("staging chunks of archive {name}"));
-                    let msg = format!("{e:#}");
+                    let fe = FillError::classify(FillTier::Staging, None, &e);
                     for c in run {
-                        part.map.fail(c, &msg);
+                        part.map.fail(c, &fe);
                     }
-                    failed = Some(e);
+                    failed = Some((e, fe));
                     continue;
                 }
                 for c in run.clone() {
@@ -1228,12 +1658,13 @@ impl GroupCache {
                     None => tier.gfs_chunks += nchunks,
                 }
             }
-            if let Some(e) = failed {
+            if let Some((e, _)) = failed {
                 return Err(e);
             }
         }
-        if let Err(msg) = part.map.wait(&plan) {
-            anyhow::bail!("partial fill of archive {name} failed: {msg}");
+        if let Err(fe) = part.map.wait(&plan) {
+            return Err(anyhow::Error::new(fe.clone())
+                .context(format!("partial fill of archive {name} failed: {fe}")));
         }
         Ok(tier)
     }
@@ -1336,6 +1767,7 @@ impl GroupCache {
         offset: u64,
         len: usize,
     ) -> Result<(Vec<u8>, CacheOutcome)> {
+        let mut attempt = 1u32;
         loop {
             // Retained-copy fast path, as in open_archive_via. The open
             // runs under the metadata lock (it cannot race an eviction),
@@ -1367,9 +1799,28 @@ impl GroupCache {
                 let reader = Reader::open(&gfs_path)?;
                 return Ok((reader.extract_range(member, offset, len)?, CacheOutcome::GfsMiss));
             }
-            let Some(part) = self.partial_state(name, total)? else {
+            // Degraded GFS-direct serving, as in open_archive_via: no
+            // staging file can be written, but the record still reads
+            // byte-exact from the canonical copy.
+            if self.still_degraded() {
+                self.degraded_reads.fetch_add(1, Ordering::Relaxed);
+                self.note_read(name);
+                let reader = Reader::open(&gfs_path)?;
+                return Ok((reader.extract_range(member, offset, len)?, CacheOutcome::GfsMiss));
+            }
+            let part = match self.partial_state(name, total) {
+                Ok(Some(part)) => part,
                 // Retained since the miss: the fast path serves it now.
-                continue;
+                Ok(None) => continue,
+                Err(e) => {
+                    // Creating the sparse staging file hit a full/
+                    // read-only tree: degrade and go around — the
+                    // degraded branch above serves the read.
+                    if self.note_storage_fault(&e) {
+                        continue;
+                    }
+                    return Err(e);
+                }
             };
             match self.read_partial_record(&gfs_path, name, &part, siblings, member, offset, len)
             {
@@ -1381,12 +1832,27 @@ impl GroupCache {
                     // clean error, never someone else's holes). If our
                     // state was superseded, re-resolve — typically an
                     // ordinary hit on the promoted copy; a still-current
-                    // state means a genuine IO failure.
+                    // state means a genuine IO failure — retried with
+                    // backoff while it stays transient (a failed chunk
+                    // latch was re-claimable the moment it failed, so
+                    // the re-resolve claims it afresh), degraded to
+                    // GFS-direct serving on a storage fault, and
+                    // surfaced typed otherwise.
                     let superseded = {
                         let partials = self.partials.lock().unwrap();
                         partials.get(name).map(|cur| !Arc::ptr_eq(cur, &part)).unwrap_or(true)
                     };
                     if !superseded {
+                        if self.note_storage_fault(&e) {
+                            self.discard_partial(name);
+                            continue;
+                        }
+                        if attempt < self.retry.attempts.max(1) && is_retryable(&e) {
+                            attempt += 1;
+                            self.retries.fetch_add(1, Ordering::Relaxed);
+                            self.retry.back_off(attempt);
+                            continue;
+                        }
                         return Err(e);
                     }
                 }
@@ -1490,6 +1956,11 @@ impl GroupCache {
             partial_routed_reads: self.partial_routed_reads.load(Ordering::Relaxed),
             partial_gfs_reads: self.partial_gfs_reads.load(Ordering::Relaxed),
             fallback_reads: self.fallback_reads.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            rerouted_fills: self.rerouted_fills.load(Ordering::Relaxed),
+            quarantined_sources: self.quarantined_sources.load(Ordering::Relaxed),
+            degraded_reads: self.degraded_reads.load(Ordering::Relaxed),
+            deadline_aborts: self.deadline_aborts.load(Ordering::Relaxed),
         }
     }
 
@@ -1547,9 +2018,11 @@ impl GroupCache {
 
     /// Persist the retention accounting to `ifs/<group>/cache.manifest`
     /// (atomically): a `#stats` line with the cumulative hit/miss totals
-    /// (prior runs included), then `name\tbytes\treads` entries
-    /// LRU-oldest first so a warm-start replay reconstructs recency — and
-    /// the per-archive read counts survive to seed
+    /// plus the cumulative fault-path counters (retries, re-routed
+    /// fills, quarantine trips, degraded reads, deadline aborts — prior
+    /// runs included), then `name\tbytes\treads` entries LRU-oldest
+    /// first so a warm-start replay reconstructs recency — and the
+    /// per-archive read counts survive to seed
     /// [`GroupCache::seed_learned`]. Called by [`StageRunner`]'s drop;
     /// callers managing bare caches can invoke it directly.
     pub fn save_manifest(&self) -> Result<()> {
@@ -1558,9 +2031,14 @@ impl GroupCache {
             let cache = self.inner.lock().unwrap();
             let reads = self.reads.lock().unwrap();
             text.push_str(&format!(
-                "#stats\t{}\t{}\n",
+                "#stats\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
                 self.prior_hits + cache.hits(),
-                self.prior_misses + cache.misses()
+                self.prior_misses + cache.misses(),
+                self.prior_fault.retries + self.retries.load(Ordering::Relaxed),
+                self.prior_fault.rerouted + self.rerouted_fills.load(Ordering::Relaxed),
+                self.prior_fault.quarantined + self.quarantined_sources.load(Ordering::Relaxed),
+                self.prior_fault.degraded + self.degraded_reads.load(Ordering::Relaxed),
+                self.prior_fault.deadline_aborts + self.deadline_aborts.load(Ordering::Relaxed),
             ));
             for (name, bytes) in cache.entries_lru() {
                 let n = reads.get(name).copied().unwrap_or(0);
@@ -1595,22 +2073,37 @@ struct WarmState {
     reads: HashMap<String, u64>,
     prior_hits: u64,
     prior_misses: u64,
+    prior_fault: FaultTotals,
+    corrupt_lines: u64,
 }
 
 /// A parsed retention manifest: the `#stats` aggregate line plus the
 /// `(name, bytes, reads)` entries in their on-file (LRU-oldest-first)
-/// order. Unverified against disk — callers reconcile.
+/// order, and a count of torn/corrupt lines that were skipped (a
+/// previous process may have died mid-write; the atomic rename makes
+/// that unlikely but a torn disk is still a disk). Unverified against
+/// disk — callers reconcile.
 struct ManifestText {
     prior_hits: u64,
     prior_misses: u64,
+    prior_fault: FaultTotals,
     entries: Vec<(String, u64, u64)>,
+    corrupt_lines: u64,
 }
 
 /// Parse a manifest's text (shared by the warm start and the cold-runner
-/// directory bootstrap). Malformed lines are skipped; read counts (third
-/// column) default to zero for pre-PR-4 manifests.
+/// directory bootstrap). Malformed lines are **skipped and counted** —
+/// never trusted, never fatal; read counts (third column) default to
+/// zero for pre-PR-4 manifests, and `#stats` fault counters (fields 3–7)
+/// default to zero for pre-PR-6 manifests.
 fn parse_manifest(text: &str) -> ManifestText {
-    let mut out = ManifestText { prior_hits: 0, prior_misses: 0, entries: Vec::new() };
+    let mut out = ManifestText {
+        prior_hits: 0,
+        prior_misses: 0,
+        prior_fault: FaultTotals::default(),
+        entries: Vec::new(),
+        corrupt_lines: 0,
+    };
     for line in text.lines() {
         let line = line.trim();
         if line.is_empty() {
@@ -1618,11 +2111,24 @@ fn parse_manifest(text: &str) -> ManifestText {
         }
         if let Some(stats) = line.strip_prefix("#stats\t") {
             let mut fields = stats.split('\t');
-            let hits = fields.next().and_then(|f| f.trim().parse::<u64>().ok());
-            let misses = fields.next().and_then(|f| f.trim().parse::<u64>().ok());
-            if let (Some(h), Some(m)) = (hits, misses) {
-                out.prior_hits = h;
-                out.prior_misses = m;
+            let mut num = || fields.next().and_then(|f| f.trim().parse::<u64>().ok());
+            let hits = num();
+            let misses = num();
+            match (hits, misses) {
+                (Some(h), Some(m)) => {
+                    out.prior_hits = h;
+                    out.prior_misses = m;
+                    // Fault counters are absent in pre-PR-6 manifests
+                    // (back-compatible: missing fields stay zero).
+                    out.prior_fault = FaultTotals {
+                        retries: num().unwrap_or(0),
+                        rerouted: num().unwrap_or(0),
+                        quarantined: num().unwrap_or(0),
+                        degraded: num().unwrap_or(0),
+                        deadline_aborts: num().unwrap_or(0),
+                    };
+                }
+                _ => out.corrupt_lines += 1,
             }
             continue;
         }
@@ -1632,6 +2138,7 @@ fn parse_manifest(text: &str) -> ManifestText {
         let mut fields = line.split('\t');
         let Some(name) = fields.next() else { continue };
         let Some(bytes) = fields.next().and_then(|f| f.trim().parse::<u64>().ok()) else {
+            out.corrupt_lines += 1;
             continue;
         };
         let reads = fields.next().and_then(|f| f.trim().parse::<u64>().ok()).unwrap_or(0);
@@ -1640,16 +2147,20 @@ fn parse_manifest(text: &str) -> ManifestText {
     out
 }
 
-/// Remove every leftover `.partial-*` staging file in `dir`: a previous
-/// process's chunk bitmaps died with it, so the sparse files behind them
-/// are unusable (and invisible to the manifest/accounting, so they would
-/// otherwise leak).
+/// Crash-residue sweep on [`GroupCache`] construction: remove every
+/// leftover `.partial-*` staging file in `dir` — a previous process's
+/// chunk bitmaps died with it, so the sparse files behind them are
+/// unusable — **and** every orphaned `.tmp-*` publish file (a process
+/// that died between the temp write and the rename; invisible to the
+/// manifest/accounting, so it would otherwise leak disk forever).
 fn clear_stale_partials(dir: &std::path::Path) {
     let Ok(entries) = std::fs::read_dir(dir) else {
         return;
     };
     for entry in entries.flatten() {
-        if entry.file_name().to_string_lossy().starts_with(PARTIAL_PREFIX) {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with(PARTIAL_PREFIX) || name.starts_with(TMP_PREFIX) {
             let _ = std::fs::remove_file(entry.path());
         }
     }
@@ -1668,6 +2179,8 @@ fn warm_start(manifest: &std::path::Path, data_dir: &std::path::Path, capacity: 
         reads: HashMap::new(),
         prior_hits: 0,
         prior_misses: 0,
+        prior_fault: FaultTotals::default(),
+        corrupt_lines: 0,
     };
     let Ok(text) = std::fs::read_to_string(manifest) else {
         return warm;
@@ -1675,6 +2188,8 @@ fn warm_start(manifest: &std::path::Path, data_dir: &std::path::Path, capacity: 
     let parsed = parse_manifest(&text);
     warm.prior_hits = parsed.prior_hits;
     warm.prior_misses = parsed.prior_misses;
+    warm.prior_fault = parsed.prior_fault;
+    warm.corrupt_lines = parsed.corrupt_lines;
     for (name, bytes, reads) in parsed.entries {
         let on_disk = std::fs::metadata(data_dir.join(&name))
             .map(|m| m.is_file() && m.len() == bytes)
@@ -1785,13 +2300,24 @@ pub struct StageRunnerConfig {
     pub fill_chunk_bytes: u64,
     /// Worker threads per stage (tasks are pulled off a shared counter).
     pub threads: usize,
+    /// PR-6 fault-tolerance knobs: bounded retry attempts with
+    /// deterministic backoff, per-source probe deadlines, and the
+    /// quarantine circuit-breaker thresholds the shared
+    /// [`RetentionDirectory`] enforces.
+    pub retry: RetryPolicy,
+    /// Failpoint registry threaded through every cache's IO primitives
+    /// (fault-matrix tests drive the production path with it). `None` in
+    /// production.
+    pub faults: Option<Arc<FaultInjector>>,
 }
 
 impl StageRunnerConfig {
-    /// Derive the retention capacity and neighbor-transfer cap from the
-    /// placement policy's IFS sizing
+    /// Derive the retention capacity, neighbor-transfer cap, and retry
+    /// policy (whose source deadline scales with the transfer cap) from
+    /// the placement policy's IFS sizing
     /// ([`PlacementPolicy::retention_capacity`] /
-    /// [`PlacementPolicy::neighbor_transfer_limit`]).
+    /// [`PlacementPolicy::neighbor_transfer_limit`] /
+    /// [`PlacementPolicy::retry_policy`]).
     pub fn with_placement(
         policy: Policy,
         compression: Compression,
@@ -1805,6 +2331,8 @@ impl StageRunnerConfig {
             neighbor_limit: placement.neighbor_transfer_limit(),
             fill_chunk_bytes: placement.fill_chunk_bytes(),
             threads,
+            retry: placement.retry_policy(),
+            faults: None,
         }
     }
 }
@@ -1994,6 +2522,22 @@ pub struct StageStats {
     /// mid-read — GFS traffic that was previously invisible in this
     /// report.
     pub fallback_reads: u64,
+    /// Fill/read attempts repeated after a transient failure
+    /// ([`CacheSnapshot::retries`], summed over the stage's caches).
+    pub retries: u64,
+    /// Fills that landed from a later candidate after at least one
+    /// failed or deadline-blown probe
+    /// ([`CacheSnapshot::rerouted_fills`]).
+    pub rerouted_fills: u64,
+    /// Quarantine trips charged during the stage
+    /// ([`CacheSnapshot::quarantined_sources`]).
+    pub quarantined_sources: u64,
+    /// Reads served GFS-direct because a group's staging tree was
+    /// degraded (ENOSPC/EROFS) ([`CacheSnapshot::degraded_reads`]).
+    pub degraded_reads: u64,
+    /// Source probes discarded for blowing their deadline
+    /// ([`CacheSnapshot::deadline_aborts`]).
+    pub deadline_aborts: u64,
     /// Wall-clock seconds for the stage (tasks + final drain).
     pub elapsed_s: f64,
 }
@@ -2025,6 +2569,22 @@ impl WorkflowReport {
     /// Total GFS misses across stages.
     pub fn gfs_misses(&self) -> u64 {
         self.stages.iter().map(|s| s.gfs_misses).sum()
+    }
+
+    /// Total retried attempts across stages (fault path).
+    pub fn retries(&self) -> u64 {
+        self.stages.iter().map(|s| s.retries).sum()
+    }
+
+    /// Total re-routed fills across stages (fault path).
+    pub fn rerouted_fills(&self) -> u64 {
+        self.stages.iter().map(|s| s.rerouted_fills).sum()
+    }
+
+    /// Total degraded (GFS-direct, staging tree full/read-only) reads
+    /// across stages.
+    pub fn degraded_reads(&self) -> u64 {
+        self.stages.iter().map(|s| s.degraded_reads).sum()
     }
 
     /// Workflow-wide retention hit rate in [0,1] (0 when nothing read).
@@ -2065,11 +2625,13 @@ impl StageRunner {
     /// into one shared [`RetentionDirectory`] so cross-group fills route
     /// to the cheapest live source.
     pub fn new(layout: LocalLayout, graph: StageGraph, config: StageRunnerConfig) -> StageRunner {
-        let caches = GroupCache::per_group_config(
+        let caches = GroupCache::per_group_tuned(
             &layout,
             config.cache_capacity,
             config.neighbor_limit,
             config.fill_chunk_bytes.max(1),
+            config.retry.clone(),
+            config.faults.clone(),
         );
         // A layout always has >= 1 IFS group; every cache shares one
         // directory, so any of them hands back the cluster-wide handle.
@@ -2285,6 +2847,11 @@ impl StageRunner {
             gfs_misses,
             chunk_fills: delta(|s| s.chunk_fills),
             fallback_reads: delta(|s| s.fallback_reads),
+            retries: delta(|s| s.retries),
+            rerouted_fills: delta(|s| s.rerouted_fills),
+            quarantined_sources: delta(|s| s.quarantined_sources),
+            degraded_reads: delta(|s| s.degraded_reads),
+            deadline_aborts: delta(|s| s.deadline_aborts),
             elapsed_s: t0.elapsed().as_secs_f64(),
         };
         Ok((stats, ProducedArchives { archives, members }))
@@ -2702,6 +3269,8 @@ mod tests {
             neighbor_limit: mib(64),
             fill_chunk_bytes: kib(64),
             threads: 4,
+            retry: RetryPolicy::default(),
+            faults: None,
         };
         let mut runner = StageRunner::new(layout, graph, config);
         let tasks = 16u32;
@@ -2978,6 +3547,8 @@ mod tests {
             neighbor_limit: mib(4),
             fill_chunk_bytes: kib(64),
             threads: 1,
+            retry: RetryPolicy::default(),
+            faults: None,
         };
         let mut runner = StageRunner::new(layout, graph, config);
         let body = |t: u32, _input: &StageInput<'_>| -> Result<Vec<u8>> {

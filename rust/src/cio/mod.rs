@@ -63,6 +63,20 @@
 //!   readers of disjoint records fill in parallel. When the bitmap
 //!   completes, [`local_stage::GroupCache`] promotes the staging file to
 //!   ordinary retention.
+//! * [`fault`] — the PR-6 tentpole: the fault-tolerance layer for the
+//!   whole fill chain. [`fault::FaultInjector`] is a deterministic
+//!   failpoint registry (operation class × path pattern → error / delay /
+//!   truncate / ENOSPC) threaded through the `local` IO primitives so
+//!   fault tests drive the production path; [`fault::RetryPolicy`]
+//!   bounds attempts with seed-deterministic exponential backoff and
+//!   per-source probe deadlines; [`fault::FillError`] is the typed
+//!   latch error (tier / source / retryable). `GroupCache` retries and
+//!   *re-routes* failed or deadline-blown sources (next candidate →
+//!   producer → GFS), `RetentionDirectory` quarantines sources whose
+//!   failure streak trips the circuit breaker (half-open probation
+//!   after K fills elsewhere), and an ENOSPC/EROFS staging tree flips
+//!   the group to counted, byte-exact GFS-direct degraded serving until
+//!   a probe write succeeds.
 //! * [`directory`] — the PR-4 tentpole: a cluster-wide
 //!   [`directory::RetentionDirectory`] tracks which groups retain each
 //!   archive (updated on retains, fills, evictions, clears, and manifest
@@ -101,6 +115,7 @@ pub mod directory;
 pub mod dispatch;
 pub mod distributor;
 pub mod extent;
+pub mod fault;
 pub mod local;
 pub mod local_stage;
 pub mod placement;

@@ -119,6 +119,23 @@ impl PlacementPolicy {
     pub fn fill_chunk_bytes(&self) -> u64 {
         (self.ifs_limit / 4096).clamp(crate::util::units::kib(64), crate::util::units::mib(4))
     }
+
+    /// Fault-tolerance knobs (PR 6) derived from the placement scale:
+    /// the per-source probe deadline covers moving one neighbor-transfer
+    /// archive at a pessimistic floor bandwidth (~64 MiB/s), clamped to
+    /// [250 ms, 30 s] — long enough that a healthy loaded source never
+    /// trips it, short enough that a hung source costs one bounded stall
+    /// before the fill is re-routed. Attempt count, backoff, and
+    /// quarantine thresholds keep the [`RetryPolicy`] defaults.
+    pub fn retry_policy(&self) -> crate::cio::fault::RetryPolicy {
+        let floor_bw = crate::util::units::mib(64); // bytes/s, pessimistic
+        let deadline_ms = (self.neighbor_transfer_limit().saturating_mul(1000) / floor_bw.max(1))
+            .clamp(250, 30_000);
+        crate::cio::fault::RetryPolicy {
+            source_deadline_ms: deadline_ms,
+            ..crate::cio::fault::RetryPolicy::default()
+        }
+    }
 }
 
 /// Torus hop distance between IFS groups `a` and `b` when `groups` groups

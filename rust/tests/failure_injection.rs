@@ -2,16 +2,26 @@
 //! cancelled transfers, and dying retention sources must leave the system
 //! consistent (every task accounted, no byte lost or double-counted, no
 //! hangs).
+//!
+//! The second half is the PR-6 fault matrix: {error, delay past the
+//! per-source deadline, torn transfer, ENOSPC} injected via the
+//! [`FaultInjector`] into {neighbor chunk fetch, whole-archive fill, GFS
+//! copy, collector retention}. Every cell must end in byte-exact reads
+//! (or an honest decline for retention) with consistent counters —
+//! never a wedge, never a wrong byte.
 
 use cio::cio::archive::{Compression, Writer};
+use cio::cio::fault::{FaultAction, FaultInjector, OpClass, RetryPolicy};
 use cio::cio::local::LocalLayout;
 use cio::cio::local_stage::GroupCache;
 use cio::cio::stage::CacheOutcome;
 use cio::config::ClusterConfig;
 use cio::sim::cluster::{IoMode, SimCluster};
 use cio::sim::flow::{FlowNet, HasFlowNet};
-use cio::util::units::{mbps, mib, SimTime};
+use cio::util::units::{kib, mbps, mib, SimTime};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 #[test]
 fn gfs_brownout_mid_run_slows_but_completes() {
@@ -204,4 +214,336 @@ fn dispatcher_outage_window() {
     assert!(r.throttle_fraction > 0.9, "throttle {}", r.throttle_fraction);
     // 512 tasks at 50/s floor ≈ 10.2s minimum.
     assert!(r.makespan_tasks_s >= 10.0);
+}
+
+// ---------------------------------------------------------------------
+// PR-6 fault matrix: injected faults through the read/fill chain.
+// ---------------------------------------------------------------------
+
+/// A fresh layout with `groups` IFS groups and one canonical archive on
+/// GFS (produced by group 0), plus the payload it carries.
+fn fault_fixture(tag: &str, groups: u32) -> (LocalLayout, String, Vec<u8>) {
+    let root = std::env::temp_dir().join(format!("cio-pr6-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let layout = LocalLayout::create(&root, groups, 1).unwrap();
+    let name = "s0-g0-00000.cioar".to_string();
+    let payload: Vec<u8> = (0..60_000usize).map(|j| (j % 251) as u8).collect();
+    let mut w = Writer::create(&layout.gfs().join(&name)).unwrap();
+    w.add("m", &payload, Compression::None).unwrap();
+    w.finish().unwrap();
+    (layout, name, payload)
+}
+
+/// A retry policy with no sleeps and no deadline/quarantine side
+/// effects — tests opt into each knob explicitly.
+fn fast_retry() -> RetryPolicy {
+    RetryPolicy {
+        attempts: 3,
+        backoff_base_ms: 0,
+        backoff_cap_ms: 0,
+        jitter_seed: 7,
+        source_deadline_ms: 0,
+        quarantine_streak: 0,
+        probation_fills: 1,
+    }
+}
+
+#[test]
+fn injected_neighbor_fault_reroutes_whole_archive_fill() {
+    let (layout, name, payload) = fault_fixture("reroute", 4);
+    let faults = Arc::new(FaultInjector::new());
+    let caches = GroupCache::per_group_tuned(
+        &layout,
+        mib(16),
+        mib(16),
+        kib(64),
+        fast_retry(),
+        Some(faults.clone()),
+    );
+    caches[0].retain(&layout.gfs().join(&name), &name).unwrap();
+    let (_, out) = caches[3].open_archive_via(&layout.gfs(), &name, &caches).unwrap();
+    assert_eq!(out, CacheOutcome::NeighborTransfer);
+
+    // A group-1 reader's first neighbor link faults on the wire; the
+    // fill must re-route to the next retaining source — not GFS, not an
+    // error, and no live retention withdrawn.
+    faults.inject_times(OpClass::PublishLink, "/ifs/1/", FaultAction::Error, 1);
+    let (r, out) = caches[1].open_archive_via(&layout.gfs(), &name, &caches).unwrap();
+    assert_eq!(out, CacheOutcome::NeighborTransfer, "re-route stays on the neighbor tier");
+    assert_eq!(&r.extract("m").unwrap(), &payload);
+    let snap = caches[1].snapshot();
+    assert_eq!(snap.rerouted_fills, 1, "one fill landed past a failed probe: {snap:?}");
+    assert_eq!(snap.neighbor_transfers, 1, "{snap:?}");
+    assert_eq!(snap.gfs_copies, 0, "{snap:?}");
+    assert_eq!(snap.stale_fallbacks, 0, "a wire fault must not withdraw live retention: {snap:?}");
+    assert_eq!(faults.injected(), 1);
+
+    // Exhaust the whole neighbor tier for a group-2 reader: every link
+    // faults, so the fill falls through to GFS — re-routed, byte-exact.
+    faults.inject(OpClass::PublishLink, "/ifs/2/", FaultAction::Error);
+    let (r, out) = caches[2].open_archive_via(&layout.gfs(), &name, &caches).unwrap();
+    assert_eq!(out, CacheOutcome::GfsMiss, "exhausted neighbor tier falls through to GFS");
+    assert_eq!(&r.extract("m").unwrap(), &payload);
+    let snap = caches[2].snapshot();
+    assert_eq!(snap.rerouted_fills, 1, "{snap:?}");
+    assert_eq!(snap.gfs_copies, 1, "{snap:?}");
+    assert_eq!(snap.neighbor_transfers, 0, "{snap:?}");
+}
+
+#[test]
+fn torn_chunk_fetch_reroutes_record_read_byte_exact() {
+    let (layout, name, payload) = fault_fixture("torn-chunk", 4);
+    let faults = Arc::new(FaultInjector::new());
+    let caches = GroupCache::per_group_tuned(
+        &layout,
+        mib(16),
+        mib(16),
+        kib(4),
+        fast_retry(),
+        Some(faults.clone()),
+    );
+    caches[0].retain(&layout.gfs().join(&name), &name).unwrap();
+
+    // Every chunk read out of group 0's retention tears mid-transfer.
+    // Record reads must detect the short read, charge the source, and
+    // land the chunk runs from GFS — never mixing torn bytes in.
+    faults.inject(OpClass::Read, "/ifs/0/data", FaultAction::TruncateAfter(128));
+    let (bytes, _) = caches[1]
+        .read_member_range_via(&layout.gfs(), &name, &caches, "m", 1000, 3000)
+        .unwrap();
+    assert_eq!(bytes, payload[1000..4000]);
+    let snap = caches[1].snapshot();
+    assert!(snap.rerouted_fills >= 1, "a torn source must re-route the run: {snap:?}");
+    assert!(snap.chunk_fills >= 1, "{snap:?}");
+    assert!(snap.partial_gfs_reads >= 1, "the bytes must have come from GFS: {snap:?}");
+    assert_eq!(snap.stale_fallbacks, 0, "retention is intact, only the wire tore: {snap:?}");
+    assert!(
+        caches[1].directory().sources(&name).contains(&0),
+        "the torn source keeps its live entry"
+    );
+}
+
+#[test]
+fn delay_past_deadline_aborts_the_probe_and_reroutes() {
+    let (layout, name, payload) = fault_fixture("deadline", 4);
+    let faults = Arc::new(FaultInjector::new());
+    let mut policy = fast_retry();
+    policy.source_deadline_ms = 20;
+    let caches = GroupCache::per_group_tuned(
+        &layout,
+        mib(16),
+        mib(16),
+        kib(64),
+        policy,
+        Some(faults.clone()),
+    );
+    caches[0].retain(&layout.gfs().join(&name), &name).unwrap();
+    let (_, out) = caches[3].open_archive_via(&layout.gfs(), &name, &caches).unwrap();
+    assert_eq!(out, CacheOutcome::NeighborTransfer);
+
+    // Every neighbor link to group 1 stalls past the per-source
+    // deadline: both probes are discarded (slow data is never trusted
+    // into the cache) and the fill re-routes to GFS.
+    faults.inject(OpClass::PublishLink, "/ifs/1/", FaultAction::Delay(Duration::from_millis(60)));
+    let (r, out) = caches[1].open_archive_via(&layout.gfs(), &name, &caches).unwrap();
+    assert_eq!(out, CacheOutcome::GfsMiss);
+    assert_eq!(&r.extract("m").unwrap(), &payload);
+    let snap = caches[1].snapshot();
+    assert_eq!(snap.deadline_aborts, 2, "both retaining sources blew the deadline: {snap:?}");
+    assert_eq!(snap.rerouted_fills, 1, "{snap:?}");
+    assert_eq!(snap.gfs_copies, 1, "{snap:?}");
+    assert_eq!(snap.neighbor_transfers, 0, "{snap:?}");
+
+    // The chunk engine enforces the same guard per run: slow source
+    // reads are abandoned and the chunks land from GFS instead.
+    faults.clear();
+    faults.inject(OpClass::Read, "/ifs/", FaultAction::Delay(Duration::from_millis(60)));
+    let (bytes, _) = caches[2]
+        .read_member_range_via(&layout.gfs(), &name, &caches, "m", 500, 2000)
+        .unwrap();
+    assert_eq!(bytes, payload[500..2500]);
+    let snap = caches[2].snapshot();
+    assert!(snap.deadline_aborts >= 2, "every slow chunk probe must abort: {snap:?}");
+    assert!(snap.rerouted_fills >= 1, "{snap:?}");
+    assert!(snap.partial_gfs_reads >= 1, "{snap:?}");
+}
+
+#[test]
+fn enospc_degrades_the_group_to_gfs_direct_and_a_probe_write_recovers_it() {
+    let (layout, name, payload) = fault_fixture("enospc", 2);
+    let faults = Arc::new(FaultInjector::new());
+    let caches = GroupCache::per_group_tuned(
+        &layout,
+        mib(16),
+        mib(16),
+        kib(64),
+        fast_retry(),
+        Some(faults.clone()),
+    );
+    // Group 1's staging tree reports ENOSPC on every write-side op.
+    faults.inject(OpClass::PublishCopy, "/ifs/1/", FaultAction::Enospc);
+    faults.inject(OpClass::Write, "/ifs/1/", FaultAction::Enospc);
+
+    // The fill cannot land, but the read must not fail: the group flips
+    // to degraded GFS-direct serving, without burning retries on a
+    // non-transient fault.
+    let (r, out) = caches[1].open_archive_via(&layout.gfs(), &name, &caches).unwrap();
+    assert_eq!(out, CacheOutcome::GfsMiss);
+    assert_eq!(&r.extract("m").unwrap(), &payload);
+    assert!(caches[1].is_degraded(), "ENOSPC must degrade, not error");
+    let snap = caches[1].snapshot();
+    assert_eq!(snap.degraded_reads, 1, "{snap:?}");
+    assert_eq!(snap.retries, 0, "storage-full is terminal, never retried: {snap:?}");
+
+    // While degraded: reads keep serving byte-exact from the canonical
+    // copy, and retention is declined without error.
+    let (r, out) = caches[1].open_archive_via(&layout.gfs(), &name, &caches).unwrap();
+    assert_eq!(out, CacheOutcome::GfsMiss);
+    assert_eq!(&r.extract("m").unwrap(), &payload);
+    assert!(
+        !caches[1].retain(&layout.gfs().join(&name), &name).unwrap(),
+        "a degraded group declines retention instead of erroring"
+    );
+    assert!(caches[1].snapshot().degraded_reads >= 2);
+    assert!(!caches[1].contains(&name), "nothing retained while degraded");
+
+    // Space comes back: the next resolve's probe write clears the mode
+    // and the fill lands for real; the read after that is a plain hit.
+    faults.clear();
+    let (r, out) = caches[1].open_archive_via(&layout.gfs(), &name, &caches).unwrap();
+    assert_eq!(out, CacheOutcome::GfsMiss, "the recovery fill pays the GFS copy once");
+    assert_eq!(&r.extract("m").unwrap(), &payload);
+    assert!(!caches[1].is_degraded(), "a clean probe write must clear the mode");
+    let (_, out) = caches[1].open_archive_via(&layout.gfs(), &name, &caches).unwrap();
+    assert_eq!(out, CacheOutcome::IfsHit, "the recovered group retains again");
+}
+
+#[test]
+fn retention_enospc_skips_the_collector_copy_without_losing_the_flush() {
+    let (layout, name, _payload) = fault_fixture("retain-enospc", 2);
+    let faults = Arc::new(FaultInjector::new());
+    let caches = GroupCache::per_group_tuned(
+        &layout,
+        mib(16),
+        mib(16),
+        kib(64),
+        fast_retry(),
+        Some(faults.clone()),
+    );
+    faults.inject(OpClass::PublishCopy, "/ifs/0/", FaultAction::Enospc);
+    faults.inject(OpClass::Write, "/ifs/0/", FaultAction::Enospc);
+
+    // The collector's post-flush retention copy hits a full disk. The
+    // flush already landed on GFS, so retention is skipped — degraded,
+    // accounted, and silent — rather than erroring the collector.
+    assert!(!caches[0].retain(&layout.gfs().join(&name), &name).unwrap());
+    assert!(caches[0].is_degraded());
+    assert!(layout.gfs().join(&name).is_file(), "the canonical copy is untouched");
+    assert!(!caches[0].contains(&name), "accounting matches the disk: nothing landed");
+    assert!(
+        !caches[0].directory().sources(&name).contains(&0),
+        "no phantom directory entry for the failed copy"
+    );
+
+    // Space returns: the probe write reopens retention.
+    faults.clear();
+    assert!(caches[0].retain(&layout.gfs().join(&name), &name).unwrap());
+    assert!(!caches[0].is_degraded());
+    assert!(caches[0].contains(&name));
+    assert!(caches[0].directory().sources(&name).contains(&0));
+}
+
+#[test]
+fn transient_gfs_fault_is_retried_and_waiters_see_only_the_final_outcome() {
+    let (layout, name, payload) = fault_fixture("retry", 1);
+    let faults = Arc::new(FaultInjector::new());
+    let caches = GroupCache::per_group_tuned(
+        &layout,
+        mib(16),
+        mib(16),
+        kib(64),
+        fast_retry(),
+        Some(faults.clone()),
+    );
+    // The first GFS copy faults on the wire. The filler must retry the
+    // whole chain (bounded, backed off) and land it, with every deduped
+    // waiter observing only the final success — never the transient.
+    faults.inject_times(OpClass::PublishCopy, ".cioar", FaultAction::Error, 1);
+    let threads = 8u32;
+    let barrier = std::sync::Barrier::new(threads as usize);
+    let served = AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let caches = &caches;
+            let layout = &layout;
+            let name = &name;
+            let barrier = &barrier;
+            let payload = &payload;
+            let served = &served;
+            scope.spawn(move || {
+                barrier.wait();
+                let (r, _) = caches[0].open_archive_via(&layout.gfs(), name, caches).unwrap();
+                assert_eq!(&r.extract("m").unwrap(), payload, "byte-exact for every waiter");
+                served.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+    });
+    assert_eq!(served.load(Ordering::Relaxed), u64::from(threads));
+    let snap = caches[0].snapshot();
+    assert_eq!(snap.retries, 1, "exactly one bounded retry: {snap:?}");
+    assert_eq!(snap.gfs_copies, 1, "one deduped fill despite the fault: {snap:?}");
+    assert_eq!(faults.injected(), 1);
+    // The landed copy serves hits afterwards.
+    let (_, out) = caches[0].open_archive_via(&layout.gfs(), &name, &caches).unwrap();
+    assert_eq!(out, CacheOutcome::IfsHit);
+}
+
+#[test]
+fn repeated_source_faults_trip_quarantine_and_probation_reopens_the_source() {
+    let (layout, name, payload) = fault_fixture("quarantine", 4);
+    let faults = Arc::new(FaultInjector::new());
+    let mut policy = fast_retry();
+    policy.quarantine_streak = 1; // one strike trips the breaker
+    policy.probation_fills = 1; // one fill elsewhere reopens it
+    let caches = GroupCache::per_group_tuned(
+        &layout,
+        mib(16),
+        mib(16),
+        kib(4),
+        policy,
+        Some(faults.clone()),
+    );
+    caches[0].retain(&layout.gfs().join(&name), &name).unwrap();
+
+    // Group 0's wire faults on every chunk read: the reader's probes
+    // charge its health, the breaker trips, and the read still lands
+    // byte-exact from GFS.
+    faults.inject(OpClass::Read, "/ifs/0/data", FaultAction::Error);
+    let (bytes, _) = caches[1]
+        .read_member_range_via(&layout.gfs(), &name, &caches, "m", 0, 2000)
+        .unwrap();
+    assert_eq!(bytes, payload[0..2000]);
+    let dir = caches[1].directory();
+    assert!(dir.is_quarantined(0), "a failing source must trip the breaker");
+    assert!(dir.quarantine_trips() >= 1);
+    let snap = caches[1].snapshot();
+    assert!(snap.quarantined_sources >= 1, "the trip is charged to the reader: {snap:?}");
+    assert!(snap.rerouted_fills >= 1, "{snap:?}");
+
+    // The source heals. Fills landing elsewhere advance its probation
+    // clock; the half-open probe then recovers it fully — reads keep
+    // succeeding throughout (the chain is never stranded).
+    faults.clear();
+    let mut off = 8192usize;
+    for _ in 0..4 {
+        let (bytes, _) = caches[1]
+            .read_member_range_via(&layout.gfs(), &name, &caches, "m", off as u64, 1000)
+            .unwrap();
+        assert_eq!(bytes, payload[off..off + 1000]);
+        off += 8192;
+        if !dir.is_quarantined(0) {
+            break;
+        }
+    }
+    assert!(!dir.is_quarantined(0), "probation must reopen a healthy source");
 }

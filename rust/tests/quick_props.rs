@@ -4,7 +4,9 @@
 
 use cio::cio::archive::{Compression, Writer};
 use cio::cio::collector::{CollectorStats, FlushReason, Policy};
+use cio::cio::directory::RetentionDirectory;
 use cio::cio::dispatch::Pacer;
+use cio::cio::fault::RetryPolicy;
 use cio::cio::local::LocalLayout;
 use cio::cio::local_stage::{archive_group, task_output_name, GroupCache};
 use cio::cio::placement::{group_torus_distance, Dataset, PlacementPolicy, Tier};
@@ -419,4 +421,68 @@ fn prop_cio_never_slower_than_gpfs_for_small_outputs() {
         Outcome::Pass { .. } => {}
         Outcome::Fail { minimal, .. } => panic!("CIO slower than GPFS at {minimal:?}"),
     }
+}
+
+#[test]
+fn prop_quarantine_never_strands_the_fill_chain() {
+    // Arbitrary failure storms may trip any subset of sources, but the
+    // fill chain is never stranded: every source a reader cannot route
+    // to is *visibly* quarantined (never silently lost), GFS stays
+    // reachable by construction, and a single fill served elsewhere
+    // (e.g. that GFS fallback) reopens every breaker half-open.
+    let gen = pair(pair(Gen::u64(2..9), Gen::u64(1..4)), Gen::vec(Gen::u64(0..64), 1..40));
+    forall("quarantine liveness", 150, gen, |&((groups, streak), ref blows)| {
+        let groups = groups as u32;
+        let dir = RetentionDirectory::with_health(groups, streak as u32, 1);
+        let name = "s0-g0-00000.cioar";
+        for g in 0..groups {
+            dir.publish(name, g);
+        }
+        for &b in blows {
+            dir.record_failure(b as u32 % groups);
+        }
+        let reader = groups - 1;
+        let routable = dir.route(name, reader);
+        let quarantined = dir.quarantined();
+        for g in 0..groups {
+            if g != reader && !routable.contains(&g) && !quarantined.contains(&g) {
+                return false; // a source vanished without a breaker trip
+            }
+        }
+        // One success elsewhere puts every tripped source on half-open
+        // probation: the whole tier is probe-able again.
+        dir.note_fill_success(None);
+        dir.route(name, reader).len() == groups as usize - 1
+    });
+}
+
+#[test]
+fn prop_backoff_schedules_are_deterministic_and_bounded() {
+    // The retry backoff is a pure function of the policy: same seed,
+    // same schedule (replayable fault investigations); every wait is
+    // capped; the first attempt never waits; base 0 disables backoff.
+    let gen = pair(
+        pair(Gen::u64(1..6), Gen::u64(0..50)),
+        pair(Gen::u64(1..400), Gen::u64(0..100_000)),
+    );
+    forall("backoff schedule", 300, gen, |&((attempts, base), (cap, seed))| {
+        let policy = RetryPolicy {
+            attempts: attempts as u32,
+            backoff_base_ms: base,
+            backoff_cap_ms: cap,
+            jitter_seed: seed,
+            ..RetryPolicy::default()
+        };
+        let schedule = policy.schedule_ms();
+        if schedule != policy.schedule_ms() {
+            return false; // same seed must replay the same waits
+        }
+        if schedule.len() != attempts as usize - 1 {
+            return false;
+        }
+        if policy.backoff_ms(1) != 0 {
+            return false; // the first attempt never waits
+        }
+        schedule.iter().all(|&ms| if base == 0 { ms == 0 } else { ms <= cap })
+    });
 }

@@ -14,6 +14,7 @@
 
 use cio::cio::archive::{Compression, Reader, Writer};
 use cio::cio::collector::Policy;
+use cio::cio::fault::RetryPolicy;
 use cio::cio::local::{LocalCollector, LocalLayout};
 use cio::cio::local_stage::{
     archive_group, task_output_name, CacheSnapshot, GroupCache, StageExec, StageInput,
@@ -154,6 +155,8 @@ fn multistage_chain_hits_ifs_retention() {
         neighbor_limit: mib(64),
         fill_chunk_bytes: kib(64),
         threads: 4,
+        retry: RetryPolicy::default(),
+        faults: None,
     };
     let mut runner = StageRunner::new(layout, graph, config);
     let tasks = 24u32;
@@ -239,6 +242,8 @@ fn cross_group_reads_served_by_neighbor_transfers() {
         neighbor_limit: mib(64),
         fill_chunk_bytes: kib(64),
         threads: 4,
+        retry: RetryPolicy::default(),
+        faults: None,
     };
     let mut runner = StageRunner::new(layout, graph, config);
     let tasks = 8u32;
@@ -294,6 +299,8 @@ fn routed_alltoall_spreads_load_off_producer() {
         // before the next resolve routes, so the spread is deterministic.
         fill_chunk_bytes: kib(64),
         threads: 1,
+        retry: RetryPolicy::default(),
+        faults: None,
     };
     let mut runner = StageRunner::new(layout, graph, config);
     let tasks = 8u32;
@@ -491,6 +498,8 @@ fn record_granular_reads_cut_read_volume() {
         neighbor_limit: mib(64),
         fill_chunk_bytes: kib(64),
         threads: 2,
+        retry: RetryPolicy::default(),
+        faults: None,
     };
     let mut runner = StageRunner::new(layout, graph, config);
     let fmt = RecordFormat { record_bytes: kib(4) as usize };
@@ -752,6 +761,8 @@ fn cold_runner_bootstraps_directory_from_foreign_manifests() {
         neighbor_limit: mib(64),
         fill_chunk_bytes: kib(64),
         threads: 4,
+        retry: RetryPolicy::default(),
+        faults: None,
     };
     let tasks = 8u32;
     let produce =
@@ -860,6 +871,8 @@ fn retention_warm_starts_across_runner_instances() {
         neighbor_limit: mib(64),
         fill_chunk_bytes: kib(64),
         threads: 2,
+        retry: RetryPolicy::default(),
+        faults: None,
     };
     let produce =
         |t: u32, _in: &StageInput<'_>| -> anyhow::Result<Vec<u8>> { Ok(vec![t as u8; 512]) };
