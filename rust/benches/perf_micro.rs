@@ -1,8 +1,10 @@
 //! Performance micro-benchmarks for the L3 hot paths (the §Perf inputs in
 //! EXPERIMENTS.md): event-engine throughput, fluid-flow churn, collector
 //! policy evaluation, archive writer/reader throughput, the PR-1
-//! archive-pipeline and collector-latency cases, and PJRT scoring latency
-//! (skipped when `make artifacts` has not run).
+//! archive-pipeline and collector-latency cases, the PR-7 record-serving
+//! tier (Zipf client load, sharded-vs-single metadata lock, socket vs
+//! local fill transports), and PJRT scoring latency (skipped when
+//! `make artifacts` has not run).
 //!
 //! Regenerate: `cargo bench --bench perf_micro`
 //! Machine-readable output: `-- --json BENCH.json` (or `CIO_BENCH_JSON`),
@@ -13,12 +15,16 @@ mod common;
 
 use cio::cio::archive::{read_sequential, Compression, Reader, Writer};
 use cio::cio::collector::Policy;
+use cio::cio::directory::RetentionDirectory;
+use cio::cio::distributor::estimate_served_read;
 use cio::cio::fault::{FaultAction, FaultInjector, OpClass, RetryPolicy};
 use cio::cio::local::{LocalCollector, LocalLayout};
 use cio::cio::local_stage::{
-    task_output_name, GroupCache, StageExec, StageInput, StageRunner, StageRunnerConfig,
+    task_output_name, ClusterRecordSource, GroupCache, StageExec, StageInput, StageRunner,
+    StageRunnerConfig,
 };
 use cio::cio::stage::{CacheOutcome, StageGraph};
+use cio::cio::transport::{SocketTransport, TransportServer};
 use cio::config::ClusterConfig;
 use cio::sim::cluster::{IoMode, SimCluster};
 use cio::sim::engine::Engine;
@@ -724,6 +730,228 @@ fn main() {
     b.metric("stage2: flaky-source latency inflation", f_flaky / f_plain, "x");
     b.metric("stage2: fault-layer fault-free overhead", f_instr / f_plain, "x");
     let _ = std::fs::remove_dir_all(&froot);
+
+    // --- Record-serving tier (the PR-7 tentpole, ROADMAP item 5): a
+    // warm multi-runner cluster — group 0 serves its retention over the
+    // wire protocol, group 1 warms itself entirely through that socket —
+    // then N client threads hammer the warm reader with Zipf-distributed
+    // `read_member_range` calls. Reported: p50/p99 per-read latency and
+    // the saturation throughput, alongside the `estimate_served_read`
+    // queueing model's envelope for the same shape.
+    let vroot = dir.join("stage2-serving");
+    let _ = std::fs::remove_dir_all(&vroot);
+    let vlayout = LocalLayout::create(&vroot, 2, 1).unwrap(); // 0 server, 1 reader
+    let v_arch = if fast { 12usize } else { 16 };
+    let v_arch_bytes = mib(1) as usize;
+    let v_records = v_arch_bytes / record_bytes;
+    let mut v_names: Vec<String> = Vec::new();
+    for i in 0..v_arch {
+        let name = format!("s1-g0-{i:05}.cioar");
+        let mut w = Writer::create(&vlayout.gfs().join(&name)).unwrap();
+        let mut data = vec![0u8; v_arch_bytes];
+        for (j, byte) in data.iter_mut().enumerate() {
+            *byte = (i * 151 + j * 17) as u8;
+        }
+        w.add("records.bin", &data, Compression::None).unwrap();
+        w.finish().unwrap();
+        v_names.push(name);
+    }
+    // Serving runner: a warm group-0 cache behind a TCP listener, its
+    // retention published in the directory the reader routes with.
+    let vdir = std::sync::Arc::new(RetentionDirectory::new(2));
+    let v_server_cache =
+        GroupCache::with_directory(&vlayout, 0, mib(1024), mib(1024), vdir.clone());
+    for name in &v_names {
+        v_server_cache.retain(&vlayout.gfs().join(name), name).unwrap();
+    }
+    let v_caches = std::sync::Arc::new(vec![v_server_cache]);
+    let v_server = TransportServer::serve(
+        "127.0.0.1:0",
+        std::sync::Arc::new(ClusterRecordSource::new(v_caches.clone())),
+    )
+    .unwrap();
+    let v_addr = v_server.addr().to_string();
+    let clients = threads.max(8);
+    // Reader runner: sharded metadata lock (CkIO over-decomposition),
+    // every fill crossing the wire to the serving runner.
+    let v_reader = GroupCache::with_directory(&vlayout, 1, mib(1024), mib(1024), vdir.clone())
+        .with_shards(8);
+    v_reader.add_peer(0, std::sync::Arc::new(SocketTransport::new(&v_addr, 0)));
+    for name in &v_names {
+        let (_, o) = v_reader.open_archive_via(&vlayout.gfs(), name, &[]).unwrap();
+        assert_eq!(o, CacheOutcome::NeighborTransfer, "warmup of {name} must cross the wire");
+    }
+    let vsnap = v_reader.snapshot();
+    assert_eq!(
+        (vsnap.gfs_copies, vsnap.neighbor_transfers),
+        (0, v_arch as u64),
+        "the serving warmup must never touch GFS: {vsnap:?}"
+    );
+    // Zipf(1.1) popularity over the archives, hottest first — an inverse
+    // CDF each client samples with its own deterministic stream.
+    let zipf_cdf: Vec<f64> = {
+        let weights: Vec<f64> = (1..=v_arch).map(|r| 1.0 / (r as f64).powf(1.1)).collect();
+        let total: f64 = weights.iter().sum();
+        weights
+            .iter()
+            .scan(0.0, |acc, w| {
+                *acc += w / total;
+                Some(*acc)
+            })
+            .collect()
+    };
+    let reads_per_client = if fast { 120usize } else { 400 };
+    let t0 = Instant::now();
+    let mut serve_lat_us: Vec<f64> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..clients {
+            let v_reader = &v_reader;
+            let vlayout = &vlayout;
+            let v_names = &v_names;
+            let zipf_cdf = &zipf_cdf;
+            handles.push(scope.spawn(move || -> Vec<f64> {
+                let mut rng = Rng::new(0x5E41 + t as u64);
+                let mut lat = Vec::with_capacity(reads_per_client);
+                for _ in 0..reads_per_client {
+                    let u = (rng.below(1 << 24) as f64 + 0.5) / (1u64 << 24) as f64;
+                    let idx = zipf_cdf.iter().position(|&c| u <= c).unwrap_or(v_arch - 1);
+                    let off = rng.below(v_records as u64) * record_bytes as u64;
+                    let r0 = Instant::now();
+                    let (rec, outcome) = v_reader
+                        .read_member_range_via(
+                            &vlayout.gfs(),
+                            &v_names[idx],
+                            &[],
+                            "records.bin",
+                            off,
+                            record_bytes,
+                        )
+                        .unwrap();
+                    lat.push(r0.elapsed().as_secs_f64() * 1e6);
+                    assert_eq!(outcome, CacheOutcome::IfsHit, "{}", v_names[idx]);
+                    assert_eq!(rec.len(), record_bytes);
+                    black_box(rec.len());
+                }
+                lat
+            }));
+        }
+        for h in handles {
+            serve_lat_us.extend(h.join().unwrap());
+        }
+    });
+    let serve_wall = t0.elapsed().as_secs_f64();
+    let serve_sum = Summary::of(&serve_lat_us).unwrap();
+    b.metric("serve: clients", clients as f64, "threads");
+    b.metric("serve_zipf_p50", serve_sum.p50, "us");
+    b.metric("serve_zipf_p99", serve_sum.p99, "us");
+    b.metric("serve_saturation_rps", serve_lat_us.len() as f64 / serve_wall, "reads/s");
+    let model = estimate_served_read(&cfg, clients as u32, 8, record_bytes as u64);
+    b.metric("serve_model_saturation_rps", model.saturation_rps, "reads/s");
+    b.metric("serve_model_p99", model.p99_s * 1e6, "us");
+    drop(v_reader);
+
+    // --- Socket vs local fill transport on the routed-neighbor record
+    // case: a cold chunked reader pulls one record per archive from the
+    // warm group-0 retention, once through the in-process local
+    // transport and once through the TCP peer. Both move the same chunk
+    // bytes; the inflation is pure wire overhead, gated ≤3x in CI.
+    let v_fresh = || {
+        let _ = std::fs::remove_dir_all(vlayout.ifs_data(1));
+        std::fs::create_dir_all(vlayout.ifs_data(1)).unwrap();
+    };
+    let read_cold_records = |cache: &GroupCache, siblings: &[GroupCache]| -> f64 {
+        let t0 = Instant::now();
+        for (i, name) in v_names.iter().enumerate() {
+            let off = ((i * 7919) % v_records * record_bytes) as u64;
+            let (rec, _) = cache
+                .read_member_range_via(
+                    &vlayout.gfs(),
+                    name,
+                    siblings,
+                    "records.bin",
+                    off,
+                    record_bytes,
+                )
+                .unwrap();
+            assert_eq!(rec.len(), record_bytes);
+            black_box(rec.len());
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let snap = cache.snapshot();
+        assert_eq!(
+            (snap.partial_gfs_reads, snap.gfs_copies),
+            (0, 0),
+            "every routed record fill must come from the neighbor: {snap:?}"
+        );
+        dt
+    };
+    let (mut fill_local, mut fill_socket) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..tier_reps {
+        v_fresh();
+        let local = GroupCache::with_directory(&vlayout, 1, mib(1024), mib(1024), vdir.clone())
+            .with_fill_chunk(kib(64));
+        fill_local = fill_local.min(read_cold_records(&local, &v_caches));
+        v_fresh();
+        let remote = GroupCache::with_directory(&vlayout, 1, mib(1024), mib(1024), vdir.clone())
+            .with_fill_chunk(kib(64));
+        remote.add_peer(0, std::sync::Arc::new(SocketTransport::new(&v_addr, 0)));
+        fill_socket = fill_socket.min(read_cold_records(&remote, &[]));
+    }
+    b.metric("serve_record_local_fill latency", fill_local * 1e3, "ms");
+    b.metric("serve_record_socket_fill latency", fill_socket * 1e3, "ms");
+    b.metric("serve: socket fill inflation over local", fill_socket / fill_local, "x");
+    b.metric("serve: wire requests served", v_server.served() as f64, "reqs");
+    drop(v_server);
+    drop(v_caches);
+
+    // --- Sharded vs single metadata lock on the pure hit path: the
+    // retained-copy fast path opens the archive UNDER the owning shard's
+    // lock (so a hit can never race an eviction unlink), which is
+    // exactly what serializes hot-archive hits on one Mutex at high
+    // client counts. Same warm cache, same N clients, 1 shard vs 8.
+    let k_opens = if fast { 200usize } else { 600 };
+    let run_hits = |cache: &GroupCache| -> f64 {
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for t in 0..clients {
+                let cache = &cache;
+                let vlayout = &vlayout;
+                let v_names = &v_names;
+                scope.spawn(move || {
+                    for i in 0..k_opens {
+                        let name = &v_names[(t + i) % v_arch];
+                        let (r, o) = cache.open_archive_via(&vlayout.gfs(), name, &[]).unwrap();
+                        assert_eq!(o, CacheOutcome::IfsHit, "{name}");
+                        black_box(r.len());
+                    }
+                });
+            }
+        });
+        t0.elapsed().as_secs_f64()
+    };
+    let warm_from_gfs = |cache: &GroupCache| {
+        for name in &v_names {
+            cache.open_archive_via(&vlayout.gfs(), name, &[]).unwrap();
+        }
+    };
+    let (mut lock_single, mut lock_sharded) = (f64::INFINITY, f64::INFINITY);
+    // Interleaved reps so machine drift hits both variants alike.
+    for _ in 0..tier_reps {
+        v_fresh();
+        let single = GroupCache::new(&vlayout, 1, mib(1024));
+        warm_from_gfs(&single);
+        lock_single = lock_single.min(run_hits(&single));
+        v_fresh();
+        let sharded = GroupCache::new(&vlayout, 1, mib(1024)).with_shards(8);
+        warm_from_gfs(&sharded);
+        lock_sharded = lock_sharded.min(run_hits(&sharded));
+    }
+    let hit_ops = (clients * k_opens) as f64;
+    b.metric("serve_hit_single_lock throughput", hit_ops / lock_single, "opens/s");
+    b.metric("serve_hit_sharded_lock throughput", hit_ops / lock_sharded, "opens/s");
+    b.metric("serve: sharded metadata lock speedup", lock_single / lock_sharded, "x");
+    let _ = std::fs::remove_dir_all(&vroot);
 
     // --- PJRT scoring latency (needs artifacts).
     match cio::runtime::ScoreModel::load_default() {

@@ -1,0 +1,55 @@
+//! `cio-serve` — a standalone serving runner.
+//!
+//! Hosts one IFS group's retention over the wire protocol of
+//! [`cio::cio::transport`]: it warms a [`GroupCache`] from archives on
+//! the shared GFS directory, persists the retention manifest (so a peer
+//! process can seed its routing directory with
+//! [`bootstrap_peer_directory`]), then serves probe / whole-archive /
+//! range requests until stdin closes.
+//!
+//! This is the process the cross-process serving tests spawn: the test
+//! runner plays "runner B" in the same layout root and must resolve
+//! every read against this process's retention — never GFS.
+//!
+//! Usage: `cio-serve <root> <nodes> <cn_per_ifs> <group> <archive>...`
+//!
+//! Prints exactly one `READY <addr>` line on stdout once the listener is
+//! bound, then blocks reading stdin; EOF (the parent dropping the pipe)
+//! is the shutdown signal, so an orphaned server can never outlive its
+//! test.
+
+use cio::cio::local::LocalLayout;
+use cio::cio::local_stage::{ClusterRecordSource, GroupCache};
+use cio::cio::transport::TransportServer;
+use cio::util::units::mib;
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    if args.len() < 6 {
+        anyhow::bail!("usage: cio-serve <root> <nodes> <cn_per_ifs> <group> <archive>...");
+    }
+    let root = std::path::PathBuf::from(&args[1]);
+    let nodes: u32 = args[2].parse()?;
+    let cn_per_ifs: u32 = args[3].parse()?;
+    let group: u32 = args[4].parse()?;
+    // `create` is mkdir -p: joining an existing tree is the normal case.
+    let layout = LocalLayout::create(&root, nodes, cn_per_ifs)?;
+    let cache = GroupCache::new(&layout, group, mib(64));
+    for name in &args[5..] {
+        cache
+            .retain(&layout.gfs().join(name), name)
+            .map_err(|e| e.context(format!("warming {name} into group {group}")))?;
+    }
+    cache.save_manifest()?;
+    let source = Arc::new(ClusterRecordSource::new(Arc::new(vec![cache])));
+    let handle = TransportServer::serve("127.0.0.1:0", source)?;
+    println!("READY {}", handle.addr());
+    std::io::stdout().flush()?;
+    // Serve until the parent closes our stdin.
+    let mut sink = Vec::new();
+    let _ = std::io::stdin().read_to_end(&mut sink);
+    drop(handle);
+    Ok(())
+}

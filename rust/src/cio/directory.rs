@@ -245,6 +245,16 @@ impl RetentionDirectory {
         inner.health.get(&group).is_some_and(|h| h.quarantined)
     }
 
+    /// May `group` be probed as a last-resort candidate right now? True
+    /// unless the group is quarantined *and not yet on probation* — the
+    /// producer-fallback gate: a freshly tripped producer stops eating a
+    /// full deadline on every fill, but once its probation clock matures
+    /// (enough successful fills elsewhere) it is probe-eligible again,
+    /// so the breaker can still close through the fallback path.
+    pub fn probe_allowed(&self, group: u32) -> bool {
+        !self.inner.lock().unwrap().excluded(group)
+    }
+
     /// Groups currently quarantined (probation included), ascending.
     pub fn quarantined(&self) -> Vec<u32> {
         let inner = self.inner.lock().unwrap();

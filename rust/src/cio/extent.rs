@@ -198,6 +198,16 @@ impl ExtentMap {
         chunk_span(idx, self.chunk_bytes, self.total)
     }
 
+    /// Byte range covered by a contiguous chunk run (as produced by
+    /// [`chunk_runs`]) — the single range read a claimer issues for the
+    /// whole batch. Empty runs yield an empty range.
+    pub fn run_span(&self, run: &Range<u64>) -> Range<u64> {
+        if run.start >= run.end {
+            return 0..0;
+        }
+        self.span(run.start).start..self.span(run.end - 1).end
+    }
+
     /// Bytes currently resident.
     pub fn resident_bytes(&self) -> u64 {
         self.inner.lock().unwrap().resident_bytes

@@ -47,6 +47,14 @@ pub enum OpClass {
     /// `write_range_at` / `create_sparse`: writes into the sparse
     /// partial-fill staging file.
     Write,
+    /// Client side of a transport request (`SocketTransport` connect /
+    /// send / receive). Matched against the pseudo-path
+    /// `peer/<addr>/<archive>`.
+    Fetch,
+    /// Server side of a transport request (the per-runner serving loop).
+    /// Matched against the served archive's retained path, so one rule
+    /// can tear a specific peer's outbound frames.
+    Serve,
 }
 
 /// What a matched failpoint does to the operation.
@@ -210,8 +218,25 @@ impl FaultInjector {
 /// served byte-exact from the canonical GFS copy.
 pub fn is_storage_full(err: &anyhow::Error) -> bool {
     err.chain().any(|c| {
+        if let Some(fe) = c.downcast_ref::<FillError>() {
+            return fe.storage;
+        }
         c.downcast_ref::<std::io::Error>()
             .is_some_and(|io| matches!(io.raw_os_error(), Some(ENOSPC) | Some(EROFS)))
+    })
+}
+
+/// Did this error chain hit a deadline (`TimedOut`)? Blown transfer
+/// deadlines — the GFS chunked-copy loop, a socket read timeout — all
+/// normalize to `TimedOut`, so call sites can count `deadline_aborts`
+/// without string-matching.
+pub fn is_timeout(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| {
+        if let Some(fe) = c.downcast_ref::<FillError>() {
+            return fe.timeout;
+        }
+        c.downcast_ref::<std::io::Error>()
+            .is_some_and(|io| io.kind() == std::io::ErrorKind::TimedOut)
     })
 }
 
@@ -221,21 +246,27 @@ pub fn is_storage_full(err: &anyhow::Error) -> bool {
 /// degraded mode instead, and errors with no IO error in their chain are
 /// logic-level ("no longer fits", "not found on any source") and final.
 /// Everything else — torn reads, injected transients, EIO — is
-/// transient.
+/// transient. A [`FillError`] in the chain (a transport impl returning
+/// its own classification) carries its verdict directly.
 pub fn is_retryable(err: &anyhow::Error) -> bool {
     if is_storage_full(err) {
         return false;
     }
-    let mut saw_io = false;
+    let mut saw_verdict = false;
     for c in err.chain() {
-        if let Some(io) = c.downcast_ref::<std::io::Error>() {
-            saw_io = true;
+        if let Some(fe) = c.downcast_ref::<FillError>() {
+            saw_verdict = true;
+            if !fe.retryable {
+                return false;
+            }
+        } else if let Some(io) = c.downcast_ref::<std::io::Error>() {
+            saw_verdict = true;
             if io.kind() == std::io::ErrorKind::NotFound {
                 return false;
             }
         }
     }
-    saw_io
+    saw_verdict
 }
 
 /// Which tier of the resolve chain an error came from.
@@ -262,6 +293,16 @@ pub struct FillError {
     /// Was the terminal failure transient? A filler only publishes a
     /// retryable error after exhausting its retry budget.
     pub retryable: bool,
+    /// Was this a full/read-only staging tree (`ENOSPC`/`EROFS`)?
+    /// Carried explicitly so a transport-returned `FillError` — whose
+    /// chain may hold no `io::Error` to downcast — still drives
+    /// degraded-mode detection through [`is_storage_full`].
+    pub storage: bool,
+    /// Was this a blown transfer deadline? Carried explicitly (like
+    /// `storage`) so a wire transport's timeout — which never surfaces
+    /// an `io::Error` to the caller — still counts a deadline abort
+    /// through [`is_timeout`].
+    pub timeout: bool,
     /// Human-readable cause chain.
     pub msg: String,
 }
@@ -269,7 +310,14 @@ pub struct FillError {
 impl FillError {
     /// Classify an `anyhow` error from one tier of the chain.
     pub fn classify(tier: FillTier, source: Option<u32>, err: &anyhow::Error) -> FillError {
-        FillError { tier, source, retryable: is_retryable(err), msg: format!("{err:#}") }
+        FillError {
+            tier,
+            source,
+            retryable: is_retryable(err),
+            storage: is_storage_full(err),
+            timeout: is_timeout(err),
+            msg: format!("{err:#}"),
+        }
     }
 
     /// A storage-tree failure (drives degraded mode, never retried).
@@ -278,6 +326,8 @@ impl FillError {
             tier: FillTier::Staging,
             source: None,
             retryable: false,
+            storage: true,
+            timeout: false,
             msg: format!("{err:#}"),
         }
     }

@@ -98,6 +98,34 @@ pub fn publish_copy(src: &Path, dst: &Path) -> Result<u64> {
 /// the short temp file is removed and the publish fails — the atomic
 /// contract means a torn copy is never visible under the final name.
 pub fn publish_copy_with(faults: Option<&FaultInjector>, src: &Path, dst: &Path) -> Result<u64> {
+    publish_copy_deadline_with(faults, src, dst, None)
+}
+
+/// Bytes one iteration of the interruptible copy loop moves. Small
+/// enough that a blown deadline is detected within one buffer's transfer
+/// time, large enough that syscall overhead stays negligible.
+const COPY_CHUNK: usize = 256 * 1024;
+
+/// [`publish_copy_with`] bounded by a transfer `deadline`: the copy
+/// streams `src` into the `.tmp-` sibling in [`COPY_CHUNK`]-sized slices
+/// and checks the clock between slices, so a hung or glacial source
+/// (classically: the central GFS store under congestion) can no longer
+/// wedge the fill that waits on it. A blown deadline removes the temp
+/// file and fails with a `TimedOut` IO error — transient by
+/// [`crate::cio::fault::is_retryable`], so the retry chain re-routes it,
+/// and recognizable by [`crate::cio::fault::is_timeout`] so the caller
+/// can count it as a deadline abort. `None` disables the bound (the copy
+/// is still chunked, with identical results).
+pub fn publish_copy_deadline_with(
+    faults: Option<&FaultInjector>,
+    src: &Path,
+    dst: &Path,
+    deadline: Option<Duration>,
+) -> Result<u64> {
+    use std::io::{Read, Write as IoWrite};
+    // The clock starts before the failpoint: an injected Delay stands in
+    // for a hung store, so it must count against the deadline.
+    let start = Instant::now();
     match fault_verdict(faults, OpClass::PublishCopy, dst) {
         FaultVerdict::Proceed => {}
         FaultVerdict::Fail(e) => {
@@ -116,8 +144,46 @@ pub fn publish_copy_with(faults: Option<&FaultInjector>, src: &Path, dst: &Path)
         std::process::id(),
         TMP_SEQ.fetch_add(1, Ordering::Relaxed)
     ));
-    let bytes = std::fs::copy(src, &tmp)
-        .with_context(|| format!("copying {} to {}", src.display(), tmp.display()))?;
+    let mut reader = std::fs::File::open(src)
+        .with_context(|| format!("opening {} for a bounded copy", src.display()))?;
+    let mut writer = std::fs::File::create(&tmp)
+        .with_context(|| format!("creating copy temp {}", tmp.display()))?;
+    let mut buf = vec![0u8; COPY_CHUNK];
+    let mut bytes = 0u64;
+    loop {
+        if let Some(d) = deadline {
+            if start.elapsed() > d {
+                drop(writer);
+                let _ = std::fs::remove_file(&tmp);
+                return Err(anyhow::Error::from(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    format!(
+                        "copy deadline {}ms blown after {bytes} bytes of {}",
+                        d.as_millis(),
+                        src.display()
+                    ),
+                )));
+            }
+        }
+        let n = match reader.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(e) => {
+                drop(writer);
+                let _ = std::fs::remove_file(&tmp);
+                return Err(anyhow::Error::from(e)
+                    .context(format!("copying {} to {}", src.display(), tmp.display())));
+            }
+        };
+        if let Err(e) = writer.write_all(&buf[..n]) {
+            drop(writer);
+            let _ = std::fs::remove_file(&tmp);
+            return Err(anyhow::Error::from(e)
+                .context(format!("copying {} to {}", src.display(), tmp.display())));
+        }
+        bytes += n as u64;
+    }
+    drop(writer);
     if let Err(e) = std::fs::rename(&tmp, dst) {
         let _ = std::fs::remove_file(&tmp);
         return Err(anyhow::Error::from(e)

@@ -13,30 +13,44 @@
 //!   control (eviction unlinks the retained file).
 //! * Stage N+1's tasks open stage N's output archives via
 //!   [`crate::cio::archive::Reader`] random access — archive-as-input —
-//!   resolving each archive through a **routed four-step read path**:
+//!   resolving each archive through a **routed four-step read path**.
+//!   Since PR 7 every tier below the local hit moves its bytes through a
+//!   [`Transport`] (probe / whole-archive fetch / range fetch /
+//!   publish, each failing as a typed [`FillError`]), so *what* the
+//!   chain does — route, retry, quarantine, degrade — is independent of
+//!   *how* a source is reached:
 //!
 //!   1. **IFS hit** ([`CacheOutcome::IfsHit`]): the reading task's own
-//!      group retains the archive; the retained copy is read in place.
+//!      group retains the archive; the retained copy is read in place —
+//!      no transport, no copy.
 //!   2. **Routed neighbor transfer** ([`CacheOutcome::NeighborTransfer`]
 //!      with a non-producing source): the cluster-wide
 //!      [`RetentionDirectory`] lists every group currently retaining the
 //!      archive — any replica is as good as the producer's — and the
 //!      fill pulls group-to-group from the *cheapest live source*
 //!      (nearest by torus hops, ties to the least-loaded; see
-//!      [`RetentionDirectory::route`]), published atomically by
-//!      [`crate::cio::local::publish_link`] and retained locally, so
-//!      fills of a popular archive spread across its replicas instead of
-//!      converging on one hot owner. A candidate whose retention turns
+//!      [`RetentionDirectory::route`]). Each candidate resolves to a
+//!      transport: an in-process sibling or an on-disk foreign group
+//!      gets the hard-link [`LocalFsTransport`] (zero-copy, atomic); a
+//!      group registered via [`GroupCache::add_peer`] — another runner
+//!      *process* — is probed and fetched over its wire transport
+//!      (e.g. [`crate::cio::transport::SocketTransport`]), so routed
+//!      fills and load-aware ranking work cross-process. Fills of a
+//!      popular archive spread across its replicas instead of
+//!      converging on one hot owner; a candidate whose retention turns
 //!      out to be gone (directory entries are hints, not truth) is
 //!      withdrawn and merely costs a fallback to the next source.
 //!   3. **Producer transfer** (same outcome, producing source): when the
 //!      directory lists no live source, the group that *produced* the
 //!      archive (parsed from its name by [`archive_group`]) is probed
-//!      directly — the PR-3 policy, kept as the penultimate fallback.
+//!      directly — the PR-3 policy, kept as the penultimate fallback —
+//!      through the same transport resolution, and only while the
+//!      breaker allows it ([`RetentionDirectory::probe_allowed`]).
 //!   4. **GFS miss** ([`CacheOutcome::GfsMiss`]): nobody retains it; the
-//!      full GFS round trip is paid (the archive is re-staged from
-//!      `gfs/` into the group's data dir, read-through, exactly the
-//!      §5.3 fallback) before the read proceeds.
+//!      full GFS round trip is paid through the copy-mode
+//!      [`LocalFsTransport`] (deadline-bounded chunked copy, re-staged
+//!      from `gfs/` into the group's data dir, read-through, exactly
+//!      the §5.3 fallback) before the read proceeds.
 //!
 //! Whole-archive cache *fills* (tiers 2 and 3) are **singleflight**: the
 //! metadata LRU lives under one short-held mutex, while each miss's data
@@ -108,8 +122,15 @@
 //!   neighbor-transfer cap by [`PlacementPolicy::retry_policy`]); a
 //!   probe that lands late is discarded (counted in
 //!   [`CacheSnapshot::deadline_aborts`]), charged to the source's
-//!   health, and the fill re-routes to the next candidate. GFS — the
-//!   last resort — has no deadline: slow truth beats fast nothing.
+//!   health, and the fill re-routes to the next candidate. Where the
+//!   deadline is *enforced* depends on the transport: link-mode local
+//!   pulls are checked post-hoc (the link is instant or dead), wire
+//!   transports arm socket timeouts and abort mid-frame, and since
+//!   PR 7 the GFS tier aborts its chunked copy mid-transfer too — a
+//!   hung central store surfaces as a retryable timeout that the retry
+//!   loop re-attempts, instead of wedging the fill latch. (A *blown*
+//!   GFS deadline still re-resolves to GFS — it is the last resort —
+//!   but each attempt is bounded, so the latch always resolves.)
 //! * **Quarantine.** [`RetentionDirectory`] trips a per-source circuit
 //!   breaker after [`RetryPolicy::quarantine_streak`] consecutive
 //!   failures (stale probes via `record_stale` feed the same signal);
@@ -127,6 +148,22 @@
 //!   resolve re-probes with a real staging write — the first probe
 //!   that succeeds lifts the mode. Data is never lost: the GFS copy is
 //!   canonical before retention ever happens.
+//!
+//! # Serving tier (PR-7)
+//!
+//! A runner is also a *server*: [`StageRunner::serve`] (or a bare
+//! [`ClusterRecordSource`] over the caches) starts one lightweight
+//! [`crate::cio::transport::TransportServer`] loop answering probe /
+//! whole-archive / range requests out of the groups' retention, so
+//! another runner process pointed at the same GFS tree registers it
+//! with [`StageRunner::add_peer`] and warm-routes record reads across
+//! the wire — [`bootstrap_peer_directory`] seeds the reader's directory
+//! from the serving runner's persisted manifests. Under concurrent
+//! client load the metadata LRU itself becomes the bottleneck, so it is
+//! name-sharded ([`GroupCache::with_shards`], CkIO's over-decomposition
+//! move): per-name operations lock one shard, aggregates lock all in
+//! index order, and the default of one shard keeps single-client
+//! semantics bit-exact.
 //!
 //! Retention also survives the runner: each group's accounting — entries
 //! in LRU order, per-archive read counts, and the aggregate hit/miss
@@ -158,16 +195,21 @@ use crate::cio::fault::{
     is_retryable, is_storage_full, FaultInjector, FillError, FillTier, RetryPolicy,
 };
 use crate::cio::local::{
-    create_sparse_with, publish_copy_with, publish_link_with, read_range_with, write_range_at_with,
-    CollectorOptions, LocalCollector, LocalLayout, TMP_PREFIX,
+    create_sparse_with, publish_copy_with, read_range_with, write_range_at_with, CollectorOptions,
+    LocalCollector, LocalLayout, TMP_PREFIX,
 };
 use crate::cio::placement::{LearnedPlacement, PlacementPolicy};
 use crate::cio::stage::{CacheOutcome, IfsCache, StageGraph};
+use crate::cio::transport::{
+    LocalFsTransport, RecordSource, ServerHandle, Transport, TransportServer,
+};
 use anyhow::{Context, Result};
+use std::collections::hash_map::DefaultHasher;
 use std::collections::{BTreeMap, HashMap};
+use std::hash::{Hash, Hasher};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::time::Instant;
 
 /// Prefix of in-flight partial (chunked) staging files in a group's data
@@ -401,21 +443,100 @@ impl FetchTier {
     }
 }
 
+/// The metadata LRU, sharded by archive name (the PR-7 CkIO
+/// over-decomposition move): a serving tier with many concurrent client
+/// threads would otherwise convoy on one mutex just to *record* hits.
+/// Each archive name hashes to exactly one shard, so per-name operations
+/// (hit accounting, fill admission, eviction) lock one shard; aggregate
+/// operations (snapshot, manifest save, clear) lock all shards in index
+/// order. The default is a single shard — bit-exact legacy semantics,
+/// since per-shard capacity is `total / n` and eviction decisions are
+/// per-shard — and the serving benchmark opts into more via
+/// [`GroupCache::with_shards`].
+struct ShardedIfs {
+    shards: Vec<Mutex<IfsCache>>,
+}
+
+impl ShardedIfs {
+    /// One shard wrapping an existing (possibly warm-started) cache.
+    fn single(cache: IfsCache) -> ShardedIfs {
+        ShardedIfs { shards: vec![Mutex::new(cache)] }
+    }
+
+    fn shard_index(&self, name: &str) -> usize {
+        if self.shards.len() == 1 {
+            return 0;
+        }
+        let mut h = DefaultHasher::new();
+        name.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    /// Lock the one shard that owns `name`.
+    fn lock(&self, name: &str) -> MutexGuard<'_, IfsCache> {
+        self.shards[self.shard_index(name)].lock().unwrap()
+    }
+
+    /// Lock every shard, in index order (the only legal order — aggregate
+    /// ops all use this, so two aggregates can't deadlock each other).
+    fn lock_all(&self) -> Vec<MutexGuard<'_, IfsCache>> {
+        self.shards.iter().map(|s| s.lock().unwrap()).collect()
+    }
+
+    /// Total configured capacity across shards.
+    fn capacity(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().capacity()).sum()
+    }
+
+    /// Redistribute the current entries over `n` shards, splitting the
+    /// total capacity evenly (remainder to the low shards). Entries are
+    /// replayed oldest-first so each shard's LRU order is preserved.
+    fn reshard(self, n: usize) -> ShardedIfs {
+        let n = n.max(1);
+        let total: u64 = self.shards.iter().map(|s| s.lock().unwrap().capacity()).sum();
+        let mut entries: Vec<(String, u64)> = Vec::new();
+        for shard in &self.shards {
+            let guard = shard.lock().unwrap();
+            entries.extend(
+                guard.entries_lru().map(|(name, size)| (name.to_string(), size)),
+            );
+        }
+        let base = total / n as u64;
+        let rem = (total % n as u64) as usize;
+        let out = ShardedIfs {
+            shards: (0..n)
+                .map(|i| {
+                    let cap = base + if i < rem { 1 } else { 0 };
+                    Mutex::new(IfsCache::new(cap))
+                })
+                .collect(),
+        };
+        for (name, size) in entries {
+            out.lock(&name).put(&name, size);
+        }
+        out
+    }
+}
+
 /// One IFS group's on-disk retention: the [`IfsCache`] accounting plus the
 /// real archive files it governs in `ifs/<group>/data/`.
 ///
-/// Concurrency shape (the PR-3 rework): the metadata LRU lives under one
-/// short-held mutex — hits resolve (and open, so a hit can never observe
-/// a half-evicted file) under it — while miss *fills* run outside it
-/// behind a per-archive [`Fill`] latch in an in-flight map. Concurrent
-/// misses of the same archive dedupe onto one fill; misses of distinct
-/// archives copy in parallel. A fill is sourced (PR-4 routing) from the
-/// cheapest live retaining group the shared [`RetentionDirectory`]
-/// routes to, falling back to the producing sibling and then GFS
-/// (neighbor transfers via [`publish_link`] — no central-store round
-/// trip); either way the data lands atomically and is accounted
-/// (evicting LRU victims, directory kept in sync) before waiters are
-/// released.
+/// Concurrency shape (the PR-3 rework): the metadata LRU lives under
+/// short-held, name-sharded mutexes — hits resolve (and open, so a hit
+/// can never observe a half-evicted file) under the owning shard — while
+/// miss *fills* run outside it behind a per-archive [`Fill`] latch in an
+/// in-flight map. Concurrent misses of the same archive dedupe onto one
+/// fill; misses of distinct archives copy in parallel. A fill is sourced
+/// (PR-4 routing) from the cheapest live retaining group the shared
+/// [`RetentionDirectory`] routes to, falling back to the producing
+/// sibling and then GFS; since PR-7 every source is reached through a
+/// [`Transport`] — hard links for same-filesystem siblings, deadline-
+/// bounded chunked copies for GFS, length-prefixed TCP frames for peer
+/// runner processes — and every transport failure is a typed
+/// [`FillError`], so retry, re-route, quarantine, and degraded serving
+/// treat all of them alike. Either way the data lands atomically and is
+/// accounted (evicting LRU victims, directory kept in sync) before
+/// waiters are released.
 pub struct GroupCache {
     /// This cache's IFS group index (to recognise itself in a sibling
     /// slice and to skip "neighbor" transfers from itself).
@@ -431,12 +552,17 @@ pub struct GroupCache {
     /// fills with. Shared across a runner's caches; a standalone cache
     /// gets a private one (its fills then rely on the producer fallback).
     directory: Arc<RetentionDirectory>,
-    inner: Mutex<IfsCache>,
+    inner: ShardedIfs,
     /// Per-archive successful-resolve counts (every tier), persisted in
     /// the manifest and replayed into [`LearnedPlacement`] on warm start.
-    /// Lock order: `partials` before `inner` before `reads`; never the
-    /// reverse.
+    /// Lock order: `partials` before `inner` shard(s) before `reads`;
+    /// never the reverse. Multiple `inner` shards only ever lock in
+    /// index order (see [`ShardedIfs::lock_all`]).
     reads: Mutex<HashMap<String, u64>>,
+    /// Out-of-process sources: group → transport handle registered via
+    /// [`GroupCache::add_peer`]. Resolution order for a routed candidate
+    /// is in-process sibling → registered peer → on-disk foreign tree.
+    peers: Mutex<HashMap<u32, Arc<dyn Transport>>>,
     /// Aggregate lookup totals restored from a previous run's manifest
     /// (this run's live counters start at zero on top of them).
     prior_hits: u64,
@@ -542,8 +668,9 @@ impl GroupCache {
             manifest,
             neighbor_limit,
             directory,
-            inner: Mutex::new(warm.cache),
+            inner: ShardedIfs::single(warm.cache),
             reads: Mutex::new(warm.reads),
+            peers: Mutex::new(HashMap::new()),
             prior_hits: warm.prior_hits,
             prior_misses: warm.prior_misses,
             fills: Mutex::new(HashMap::new()),
@@ -597,6 +724,33 @@ impl GroupCache {
     pub fn with_fill_chunk(mut self, bytes: u64) -> GroupCache {
         self.fill_chunk = bytes.max(1);
         self
+    }
+
+    /// Shard the metadata LRU over `n` mutexes (name-hashed), splitting
+    /// the capacity evenly. Default is 1 — bit-exact legacy eviction
+    /// semantics, since sharding bounds each name to `capacity / n`.
+    /// Apply before filling: warm entries are redistributed, and any
+    /// that no longer fit their (smaller) shard are dropped from the
+    /// accounting. The serving benchmark's concurrent-client tier is the
+    /// intended user (CkIO-style over-decomposition of the lock).
+    pub fn with_shards(mut self, n: usize) -> GroupCache {
+        self.inner = self.inner.reshard(n);
+        self
+    }
+
+    /// Register a [`Transport`] for reaching `group`'s retention out of
+    /// process. A routed fill whose candidate has no in-process sibling
+    /// cache consults this table before falling back to the shared
+    /// on-disk tree; probe / fetch failures flow through the same
+    /// [`FillError`] retry / deadline / quarantine chain as every other
+    /// source.
+    pub fn add_peer(&self, group: u32, transport: Arc<dyn Transport>) {
+        self.peers.lock().unwrap().insert(group, transport);
+    }
+
+    /// The registered peer transport for `group`, if any.
+    fn peer(&self, group: u32) -> Option<Arc<dyn Transport>> {
+        self.peers.lock().unwrap().get(&group).cloned()
     }
 
     /// One cache per IFS group of `layout`, ready for
@@ -706,6 +860,14 @@ impl GroupCache {
         self.faults.as_deref()
     }
 
+    /// The copy-mode [`LocalFsTransport`] reaching the GFS directory
+    /// that holds `gfs_path` (deadline-bounded chunked copies, typed
+    /// [`FillError`]s).
+    fn gfs_transport(&self, gfs_path: &std::path::Path) -> LocalFsTransport {
+        let dir = gfs_path.parent().map(|p| p.to_path_buf()).unwrap_or_default();
+        LocalFsTransport::gfs(dir, self.faults.clone())
+    }
+
     /// Classify `e`: a storage-full/read-only staging tree flips (or
     /// keeps) the cache in degraded GFS-direct mode. Returns whether the
     /// error was a storage fault.
@@ -749,11 +911,13 @@ impl GroupCache {
     /// (their sizes are known from the accounting); counts accumulate
     /// across warm starts because the manifest round-trips them.
     pub fn seed_learned(&self, learned: &mut LearnedPlacement) {
-        let cache = self.inner.lock().unwrap();
+        let shards = self.inner.lock_all();
         let reads = self.reads.lock().unwrap();
-        for (name, bytes) in cache.entries_lru() {
-            let n = reads.get(name).copied().unwrap_or(0);
-            learned.record_reads(name, bytes, n.min(u32::MAX as u64) as u32);
+        for cache in &shards {
+            for (name, bytes) in cache.entries_lru() {
+                let n = reads.get(name).copied().unwrap_or(0);
+                learned.record_reads(name, bytes, n.min(u32::MAX as u64) as u32);
+            }
         }
     }
 
@@ -777,7 +941,7 @@ impl GroupCache {
         let bytes = std::fs::metadata(src)
             .with_context(|| format!("retaining {}", src.display()))?
             .len();
-        let mut cache = self.inner.lock().unwrap();
+        let mut cache = self.inner.lock(name);
         let Some(victims) = cache.put_evicting(name, bytes) else {
             return Ok(false);
         };
@@ -831,10 +995,11 @@ impl GroupCache {
         siblings: &[GroupCache],
     ) -> Result<(Reader, CacheOutcome)> {
         loop {
-            // Fast path: metadata lock only. Opening the retained copy
-            // under it means a hit can never race an eviction unlink.
+            // Fast path: the owning metadata shard only. Opening the
+            // retained copy under it means a hit can never race an
+            // eviction unlink.
             {
-                let mut cache = self.inner.lock().unwrap();
+                let mut cache = self.inner.lock(name);
                 if cache.get(name) == CacheOutcome::IfsHit {
                     let reader = Reader::open(&self.data_dir.join(name))
                         .with_context(|| format!("opening retained archive {name}"))?;
@@ -846,7 +1011,7 @@ impl GroupCache {
             // Miss (counted). Oversized archives bypass retention and the
             // fill machinery entirely: read from GFS in place.
             let gfs_path = gfs_dir.join(name);
-            let capacity = self.inner.lock().unwrap().capacity();
+            let capacity = self.inner.capacity();
             let gfs_bytes = std::fs::metadata(&gfs_path).map(|m| m.len());
             if let Ok(bytes) = gfs_bytes {
                 if bytes > capacity {
@@ -1009,7 +1174,11 @@ impl GroupCache {
             }
         }
         if let Some(owner) = producer {
-            if owner != self.group && !tried_producer {
+            // A quarantined producer is probed on spec only once its
+            // probation window opens (the breaker's half-open state);
+            // inside the window the fill goes straight to GFS instead of
+            // hammering a source the breaker just tripped.
+            if owner != self.group && !tried_producer && self.directory.probe_allowed(owner) {
                 match self.probe_pull(owner, name, dst, siblings, false) {
                     ProbeOutcome::Served => return (Some(owner), failed),
                     ProbeOutcome::Failed => failed += 1,
@@ -1070,12 +1239,17 @@ impl GroupCache {
             return ProbeOutcome::Skipped;
         }
         let Some(sib) = siblings.iter().find(|c| c.group == source) else {
-            // No cache of this runner manages that group. A source the
-            // cold-runner bootstrap advertised (group index beyond this
-            // runner's own range) is pulled straight from its on-disk
-            // retention — nothing in this process ever evicts it.
-            // Anything else is a partial sibling slice: the entry is not
-            // stale, just unreachable from this call site.
+            // No cache of this runner manages that group. A registered
+            // peer transport (another runner process serving its
+            // retention over the wire) is preferred; failing that, a
+            // source the cold-runner bootstrap advertised (group index
+            // beyond this runner's own range) is pulled straight from
+            // its on-disk retention — nothing in this process ever
+            // evicts it. Anything else is a partial sibling slice: the
+            // entry is not stale, just unreachable from this call site.
+            if let Some(peer) = self.peer(source) {
+                return self.pull_from_peer(&*peer, source, name, dst, advertised);
+            }
             if advertised && source >= self.directory.groups() {
                 return self.pull_from_disk(source, name, dst);
             }
@@ -1091,11 +1265,12 @@ impl GroupCache {
             }
             return ProbeOutcome::Skipped;
         }
-        let src = sib.data_dir.join(name);
-        match std::fs::metadata(&src) {
-            Ok(m) if m.len() > self.neighbor_limit => return ProbeOutcome::Skipped,
-            Ok(_) => {}
-            Err(_) => {
+        let transport =
+            LocalFsTransport::sibling(sib.data_dir.clone(), source, self.faults.clone());
+        match transport.probe(name) {
+            Ok(Some(len)) if len > self.neighbor_limit => return ProbeOutcome::Skipped,
+            Ok(Some(_)) => {}
+            Ok(None) | Err(_) => {
                 // Accounted but the file is gone — eviction race or an
                 // injected fault.
                 self.note_sibling_stale(sib, name);
@@ -1103,9 +1278,12 @@ impl GroupCache {
             }
         }
         // The transfer is charged to the source while it runs, so
-        // concurrent fills route around it (load-aware ranking).
+        // concurrent fills route around it (load-aware ranking). No
+        // transport-level deadline here: the caller's probe_pull applies
+        // the post-hoc per-source deadline so a kept-vs-discarded
+        // decision stays in one place for link-speed local pulls.
         self.directory.begin_serve(source);
-        let ok = publish_link_with(self.faults(), &src, dst).is_ok();
+        let ok = transport.fetch_archive(name, dst, None).is_ok();
         self.directory.end_serve(source);
         if ok {
             return ProbeOutcome::Served;
@@ -1118,6 +1296,63 @@ impl GroupCache {
             self.charge_source(source);
         }
         ProbeOutcome::Failed
+    }
+
+    /// Probe one out-of-process candidate through its registered
+    /// [`Transport`]: size-probe first (the neighbor-transfer cap and
+    /// staleness apply exactly as for an in-process sibling), then a
+    /// deadline-bounded fetch charged to the source's load while it
+    /// runs. A blown deadline counts a [`CacheSnapshot::deadline_aborts`]
+    /// here — the wire transport enforces it mid-transfer, so the
+    /// post-hoc check in [`GroupCache::probe_pull`] would never see the
+    /// slow success it was designed to discard.
+    fn pull_from_peer(
+        &self,
+        peer: &dyn Transport,
+        source: u32,
+        name: &str,
+        dst: &std::path::Path,
+        advertised: bool,
+    ) -> ProbeOutcome {
+        match peer.probe(name) {
+            Ok(Some(len)) if len > self.neighbor_limit => return ProbeOutcome::Skipped,
+            Ok(Some(_)) => {}
+            Ok(None) => {
+                if advertised {
+                    self.note_disk_stale(name, source);
+                    return ProbeOutcome::Failed;
+                }
+                return ProbeOutcome::Skipped;
+            }
+            Err(e) => {
+                if e.timeout {
+                    self.deadline_aborts.fetch_add(1, Ordering::Relaxed);
+                }
+                self.charge_source(source);
+                return ProbeOutcome::Failed;
+            }
+        }
+        self.directory.begin_serve(source);
+        let pulled = peer.fetch_archive(name, dst, self.retry.source_deadline());
+        self.directory.end_serve(source);
+        match pulled {
+            Ok(_) => ProbeOutcome::Served,
+            Err(e) => {
+                if e.timeout {
+                    self.deadline_aborts.fetch_add(1, Ordering::Relaxed);
+                }
+                // NOT_FOUND from the peer is staleness (its retention
+                // dropped the entry); everything else is a transient
+                // wire/source fault charged to health with the entry
+                // left live.
+                if !e.retryable && advertised {
+                    self.note_disk_stale(name, source);
+                } else {
+                    self.charge_source(source);
+                }
+                ProbeOutcome::Failed
+            }
+        }
     }
 
     /// Reconcile a failed probe of `sib`'s retention; returns whether
@@ -1142,17 +1377,22 @@ impl GroupCache {
     /// entry is withdrawn straight from the directory — no accounting
     /// exists to reconcile.
     fn pull_from_disk(&self, source: u32, name: &str, dst: &std::path::Path) -> ProbeOutcome {
-        let src = self.foreign_data_path(source, name);
-        match std::fs::metadata(&src) {
-            Ok(m) if m.len() > self.neighbor_limit => return ProbeOutcome::Skipped,
-            Ok(_) => {}
-            Err(_) => {
+        let dir = self
+            .foreign_data_path(source, name)
+            .parent()
+            .map(|p| p.to_path_buf())
+            .unwrap_or_else(|| self.ifs_root.clone());
+        let transport = LocalFsTransport::sibling(dir, source, self.faults.clone());
+        match transport.probe(name) {
+            Ok(Some(len)) if len > self.neighbor_limit => return ProbeOutcome::Skipped,
+            Ok(Some(_)) => {}
+            Ok(None) | Err(_) => {
                 self.note_disk_stale(name, source);
                 return ProbeOutcome::Failed;
             }
         }
         self.directory.begin_serve(source);
-        let ok = publish_link_with(self.faults(), &src, dst).is_ok();
+        let ok = transport.fetch_archive(name, dst, None).is_ok();
         self.directory.end_serve(source);
         if ok {
             ProbeOutcome::Served
@@ -1185,7 +1425,7 @@ impl GroupCache {
     /// stale, with `tripped` reporting whether the stale mark crossed
     /// this source's quarantine breaker.
     fn reconcile_stale(&self, name: &str) -> Option<bool> {
-        let mut cache = self.inner.lock().unwrap();
+        let mut cache = self.inner.lock(name);
         if cache.contains(name) && self.data_dir.join(name).is_file() {
             return None;
         }
@@ -1256,10 +1496,17 @@ impl GroupCache {
             self.directory.record_serve(name, source);
             CacheOutcome::NeighborTransfer
         } else {
-            publish_copy_with(self.faults(), gfs_path, &dst).map_err(|e| {
-                let fill = FillError::classify(FillTier::Gfs, None, &e);
-                e.context(format!("re-staging archive {name} from GFS")).context(fill)
-            })?;
+            // The GFS tier honors the per-source deadline too (PR-7):
+            // the chunked copy checks the clock between chunks and
+            // aborts mid-transfer, so a hung central store surfaces as a
+            // retryable timeout instead of a wedged fill latch.
+            self.gfs_transport(gfs_path).fetch_archive(name, &dst, self.retry.source_deadline())
+                .map_err(|fill| {
+                    if fill.timeout {
+                        self.deadline_aborts.fetch_add(1, Ordering::Relaxed);
+                    }
+                    anyhow::Error::new(fill).context(format!("re-staging archive {name} from GFS"))
+                })?;
             // GFS is the last resort: a success after failed neighbor
             // probes is a re-routed fill, and it advances every
             // quarantined source's probation clock.
@@ -1271,7 +1518,7 @@ impl GroupCache {
             CacheOutcome::GfsMiss
         };
         let bytes = std::fs::metadata(&dst)?.len();
-        let mut cache = self.inner.lock().unwrap();
+        let mut cache = self.inner.lock(name);
         match cache.put_evicting(name, bytes) {
             Some(victims) => {
                 for victim in &victims {
@@ -1329,10 +1576,22 @@ impl GroupCache {
             let path = match siblings.iter().find(|c| c.group == cand) {
                 Some(sib) if sib.contains(name) => sib.data_dir.join(name),
                 Some(_) => continue,
-                None if cand >= self.directory.groups() => {
-                    self.foreign_data_path(cand, name)
+                None => {
+                    // An out-of-process peer answers the size probe over
+                    // its transport; a probe failure is just this
+                    // candidate lost (the read path will charge it).
+                    if let Some(peer) = self.peer(cand) {
+                        if let Ok(Some(len)) = peer.probe(name) {
+                            return Ok(len);
+                        }
+                        continue;
+                    }
+                    if cand >= self.directory.groups() {
+                        self.foreign_data_path(cand, name)
+                    } else {
+                        continue;
+                    }
                 }
-                None => continue,
             };
             if let Ok(m) = std::fs::metadata(&path) {
                 return Ok(m.len());
@@ -1348,7 +1607,7 @@ impl GroupCache {
         if let Some(part) = self.partials.lock().unwrap().get(name) {
             return Ok(Some(part.clone()));
         }
-        if self.inner.lock().unwrap().contains(name) {
+        if self.inner.lock(name).contains(name) {
             return Ok(None);
         }
         // Create the sparse staging file OUTSIDE the partials lock —
@@ -1376,7 +1635,7 @@ impl GroupCache {
             let mut partials = self.partials.lock().unwrap();
             if let Some(existing) = partials.get(name) {
                 Some(existing.clone())
-            } else if self.inner.lock().unwrap().contains(name) {
+            } else if self.inner.lock(name).contains(name) {
                 None
             } else {
                 // Bound the staging footprint: at the cap, shed the
@@ -1471,11 +1730,22 @@ impl GroupCache {
                 }
                 sib.data_dir.join(name)
             }
-            // Cold-runner-bootstrap sources only (see pull_from).
-            None if advertised && source >= self.directory.groups() => {
-                self.foreign_data_path(source, name)
+            None => {
+                // A registered peer serves chunk ranges over its
+                // transport (partial fills work cross-process); failing
+                // that, cold-runner-bootstrap sources only (see
+                // pull_from).
+                if let Some(peer) = self.peer(source) {
+                    return self.read_chunks_from_peer(
+                        &*peer, source, name, offset, len, total, advertised,
+                    );
+                }
+                if advertised && source >= self.directory.groups() {
+                    self.foreign_data_path(source, name)
+                } else {
+                    return ChunkProbe::Skipped;
+                }
             }
-            None => return ChunkProbe::Skipped,
         };
         // A size mismatch means this is not the same archive build;
         // never mix its bytes into the staging file.
@@ -1499,6 +1769,59 @@ impl GroupCache {
                 // its entry but is charged the transient fault.
                 if advertised {
                     self.note_stale_source(source, name, siblings);
+                } else {
+                    self.charge_source(source);
+                }
+                ChunkProbe::Failed
+            }
+        }
+    }
+
+    /// The chunk-granular probe of an out-of-process source: size-check
+    /// via the transport's probe (a mismatched total is another archive
+    /// build — staleness, never mixed bytes), then a deadline-bounded
+    /// range fetch charged to the source's load. Deadline aborts are
+    /// counted here (the transport enforces them mid-transfer, so the
+    /// caller's post-hoc check never fires for wire sources).
+    #[allow(clippy::too_many_arguments)]
+    fn read_chunks_from_peer(
+        &self,
+        peer: &dyn Transport,
+        source: u32,
+        name: &str,
+        offset: u64,
+        len: usize,
+        total: u64,
+        advertised: bool,
+    ) -> ChunkProbe {
+        match peer.probe(name) {
+            Ok(Some(sz)) if sz == total => {}
+            Ok(_) => {
+                if advertised {
+                    self.note_disk_stale(name, source);
+                    return ChunkProbe::Failed;
+                }
+                return ChunkProbe::Skipped;
+            }
+            Err(e) => {
+                if e.timeout {
+                    self.deadline_aborts.fetch_add(1, Ordering::Relaxed);
+                }
+                self.charge_source(source);
+                return ChunkProbe::Failed;
+            }
+        }
+        self.directory.begin_serve(source);
+        let got = peer.fetch_range(name, offset, len, self.retry.source_deadline());
+        self.directory.end_serve(source);
+        match got {
+            Ok(bytes) => ChunkProbe::Bytes(bytes),
+            Err(e) => {
+                if e.timeout {
+                    self.deadline_aborts.fetch_add(1, Ordering::Relaxed);
+                }
+                if !e.retryable && advertised {
+                    self.note_disk_stale(name, source);
                 } else {
                     self.charge_source(source);
                 }
@@ -1544,7 +1867,13 @@ impl GroupCache {
                     cands.push((cand, true));
                 }
                 if let Some(owner) = producer {
-                    if owner != self.group && !tried_producer {
+                    // A quarantined producer is probed on spec only in
+                    // its probation window (same breaker contract as the
+                    // whole-archive path, [`GroupCache::try_routed_fill`]).
+                    if owner != self.group
+                        && !tried_producer
+                        && self.directory.probe_allowed(owner)
+                    {
                         cands.push((owner, false));
                     }
                 }
@@ -1559,9 +1888,9 @@ impl GroupCache {
                     }
                     continue;
                 }
-                let span_start = part.map.span(run.start).start;
-                let span_end = part.map.span(run.end - 1).end;
-                let n = (span_end - span_start) as usize;
+                let span = part.map.run_span(&run);
+                let span_start = span.start;
+                let n = (span.end - span.start) as usize;
                 let mut got: Option<(Vec<u8>, Option<u32>)> = None;
                 let mut run_failed_probes = false;
                 for &(cand, advertised) in &cands {
@@ -1600,7 +1929,18 @@ impl GroupCache {
                         .map(|m| m.len() == part.total)
                         .unwrap_or(false);
                     let ranged = if gfs_ok {
-                        read_range_with(self.faults(), gfs_path, span_start, n)
+                        // The GFS chunk read honors the per-source
+                        // deadline too (PR-7): a hung central store
+                        // surfaces as a retryable timeout, counted and
+                        // re-resolved, instead of a wedged chunk latch.
+                        self.gfs_transport(gfs_path)
+                            .fetch_range(name, span_start, n, self.retry.source_deadline())
+                            .map_err(|fe| {
+                                if fe.timeout {
+                                    self.deadline_aborts.fetch_add(1, Ordering::Relaxed);
+                                }
+                                anyhow::Error::new(fe)
+                            })
                     } else {
                         Err(anyhow::anyhow!(
                             "canonical copy {} is missing or not {} bytes",
@@ -1711,7 +2051,7 @@ impl GroupCache {
         let Some(part) = partials.remove(name) else {
             return Ok(());
         };
-        let mut cache = self.inner.lock().unwrap();
+        let mut cache = self.inner.lock(name);
         match cache.put_evicting(name, part.total) {
             Some(victims) => {
                 for victim in &victims {
@@ -1774,7 +2114,7 @@ impl GroupCache {
             // but the extract re-opens by path — a lost eviction race
             // there re-resolves instead of erroring.
             {
-                let mut cache = self.inner.lock().unwrap();
+                let mut cache = self.inner.lock(name);
                 if cache.get(name) == CacheOutcome::IfsHit {
                     let reader = Reader::open(&self.data_dir.join(name))
                         .with_context(|| format!("opening retained archive {name}"))?;
@@ -1789,7 +2129,7 @@ impl GroupCache {
             }
             // Miss (counted by the probe above).
             let gfs_path = gfs_dir.join(name);
-            let capacity = self.inner.lock().unwrap().capacity();
+            let capacity = self.inner.capacity();
             let total = self.archive_total(&gfs_path, name, siblings)?;
             if total > capacity {
                 // §5.3: archives larger than the whole cache are never
@@ -1939,17 +2279,17 @@ impl GroupCache {
             .values()
             .map(|p| p.map.resident_bytes())
             .sum();
-        let cache = self.inner.lock().unwrap();
+        let shards = self.inner.lock_all();
         CacheSnapshot {
-            hits: cache.hits(),
-            misses: cache.misses(),
+            hits: shards.iter().map(|c| c.hits()).sum(),
+            misses: shards.iter().map(|c| c.misses()).sum(),
             neighbor_transfers: self.neighbor_transfers.load(Ordering::Relaxed),
             routed_transfers: self.routed_transfers.load(Ordering::Relaxed),
             stale_fallbacks: self.stale_fallbacks.load(Ordering::Relaxed),
             gfs_copies: self.gfs_copies.load(Ordering::Relaxed),
             gfs_direct: self.gfs_direct.load(Ordering::Relaxed),
-            evictions: cache.evictions(),
-            used: cache.used(),
+            evictions: shards.iter().map(|c| c.evictions()).sum(),
+            used: shards.iter().map(|c| c.used()).sum(),
             partial_bytes,
             chunk_fills: self.chunk_fills.load(Ordering::Relaxed),
             partial_neighbor_reads: self.partial_neighbor_reads.load(Ordering::Relaxed),
@@ -1966,7 +2306,19 @@ impl GroupCache {
 
     /// Is `name` currently retained (no recency/counter side effects)?
     pub fn contains(&self, name: &str) -> bool {
-        self.inner.lock().unwrap().contains(name)
+        self.inner.lock(name).contains(name)
+    }
+
+    /// The retained on-disk copy of `name`, if this cache holds one:
+    /// `(path, bytes)` with the size read from the accounting's source of
+    /// truth (the file itself). No recency side effects — this is the
+    /// serving tier's lookup, not a client read.
+    pub fn retained_path(&self, name: &str) -> Option<(PathBuf, u64)> {
+        if !self.inner.lock(name).contains(name) {
+            return None;
+        }
+        let path = self.data_dir.join(name);
+        std::fs::metadata(&path).ok().map(|m| (path, m.len()))
     }
 
     /// Forget (and unlink) every retained `<prefix>-g*.cioar` — stale
@@ -1989,15 +2341,19 @@ impl GroupCache {
                 }
             });
         }
-        let mut cache = self.inner.lock().unwrap();
-        let doomed: Vec<String> = cache
-            .entries_lru()
-            .map(|(n, _)| n.to_string())
-            .filter(|n| stage_artifact_matches(n, prefix))
-            .collect();
-        for name in &doomed {
-            cache.remove(name);
-            self.directory.withdraw(name, self.group);
+        {
+            let mut shards = self.inner.lock_all();
+            for cache in shards.iter_mut() {
+                let doomed: Vec<String> = cache
+                    .entries_lru()
+                    .map(|(n, _)| n.to_string())
+                    .filter(|n| stage_artifact_matches(n, prefix))
+                    .collect();
+                for name in &doomed {
+                    cache.remove(name);
+                    self.directory.withdraw(name, self.group);
+                }
+            }
         }
         // The cleared names will be *re-produced* by the stage re-run as
         // brand-new artifacts; their popularity history must not carry
@@ -2028,26 +2384,31 @@ impl GroupCache {
     pub fn save_manifest(&self) -> Result<()> {
         let mut text = String::from("# cio retention manifest, LRU-oldest first\n");
         {
-            let cache = self.inner.lock().unwrap();
+            let shards = self.inner.lock_all();
             let reads = self.reads.lock().unwrap();
             text.push_str(&format!(
                 "#stats\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
-                self.prior_hits + cache.hits(),
-                self.prior_misses + cache.misses(),
+                self.prior_hits + shards.iter().map(|c| c.hits()).sum::<u64>(),
+                self.prior_misses + shards.iter().map(|c| c.misses()).sum::<u64>(),
                 self.prior_fault.retries + self.retries.load(Ordering::Relaxed),
                 self.prior_fault.rerouted + self.rerouted_fills.load(Ordering::Relaxed),
                 self.prior_fault.quarantined + self.quarantined_sources.load(Ordering::Relaxed),
                 self.prior_fault.degraded + self.degraded_reads.load(Ordering::Relaxed),
                 self.prior_fault.deadline_aborts + self.deadline_aborts.load(Ordering::Relaxed),
             ));
-            for (name, bytes) in cache.entries_lru() {
-                let n = reads.get(name).copied().unwrap_or(0);
-                text.push_str(name);
-                text.push('\t');
-                text.push_str(&bytes.to_string());
-                text.push('\t');
-                text.push_str(&n.to_string());
-                text.push('\n');
+            // Shard-major order: within a shard the LRU order is exact;
+            // across shards it is arbitrary (a single-shard cache — the
+            // default — round-trips recency exactly as before).
+            for cache in &shards {
+                for (name, bytes) in cache.entries_lru() {
+                    let n = reads.get(name).copied().unwrap_or(0);
+                    text.push_str(name);
+                    text.push('\t');
+                    text.push_str(&bytes.to_string());
+                    text.push('\t');
+                    text.push_str(&n.to_string());
+                    text.push('\n');
+                }
             }
         }
         let tmp = self.manifest.with_extension("manifest.tmp");
@@ -2248,6 +2609,39 @@ fn bootstrap_directory(layout: &LocalLayout, directory: &RetentionDirectory) {
             }
         }
     }
+}
+
+/// Seed `directory` with another runner's retention of `group` (an
+/// **in-range** group this process has no cache for, served by a peer
+/// process over a transport): parse `ifs/<group>/cache.manifest` and
+/// publish each disk-verified entry, so a routed fill's very first
+/// resolve lists the peer as a candidate. The cross-process complement
+/// of the cold-runner bootstrap — that one only scans groups *beyond*
+/// the layout's range (in-range groups normally publish through their
+/// own caches' warm start, which a peer process's groups never do
+/// here). Returns how many entries were published. Pair with
+/// [`GroupCache::add_peer`] / [`StageRunner::add_peer`] so the
+/// candidates are reachable.
+pub fn bootstrap_peer_directory(
+    layout: &LocalLayout,
+    directory: &RetentionDirectory,
+    group: u32,
+) -> u64 {
+    let Ok(text) = std::fs::read_to_string(layout.ifs_manifest(group)) else {
+        return 0;
+    };
+    let data_dir = layout.ifs_data(group);
+    let mut published = 0;
+    for (name, bytes, _) in parse_manifest(&text).entries {
+        let live = std::fs::metadata(data_dir.join(&name))
+            .map(|m| m.is_file() && m.len() == bytes)
+            .unwrap_or(false);
+        if live {
+            directory.publish(&name, group);
+            published += 1;
+        }
+    }
+    published
 }
 
 /// Delete every `<prefix>-g*.cioar` in `dir` (stale stage artifacts from
@@ -2600,6 +2994,60 @@ impl WorkflowReport {
     }
 }
 
+/// The serving side of the PR-7 record tier: adapts a runner's
+/// [`GroupCache`] cluster to [`RecordSource`], so one
+/// [`TransportServer`] loop serves every group's retention — lookups go
+/// through each cache's accounting (never a raw directory scan, so a
+/// half-evicted file can't be served), serves feed the shared
+/// directory's load-aware ranking, and [`crate::cio::fault::OpClass::Serve`]
+/// failpoints fire against the retained path being served.
+pub struct ClusterRecordSource {
+    caches: Arc<Vec<GroupCache>>,
+}
+
+impl ClusterRecordSource {
+    /// Serve from every cache in `caches` (a runner's
+    /// [`StageRunner::caches`] cluster, or a hand-built set).
+    pub fn new(caches: Arc<Vec<GroupCache>>) -> ClusterRecordSource {
+        ClusterRecordSource { caches }
+    }
+}
+
+impl RecordSource for ClusterRecordSource {
+    fn locate(&self, name: &str) -> Option<(u32, PathBuf, u64)> {
+        // The producing group almost always retains its own output —
+        // check it first, then fall back to any retaining cache.
+        let producer = archive_group(name);
+        let ordered = self
+            .caches
+            .iter()
+            .filter(|c| Some(c.group()) == producer)
+            .chain(self.caches.iter().filter(|c| Some(c.group()) != producer));
+        for cache in ordered {
+            if let Some((path, len)) = cache.retained_path(name) {
+                return Some((cache.group(), path, len));
+            }
+        }
+        None
+    }
+
+    fn begin_serve(&self, group: u32) {
+        if let Some(cache) = self.caches.first() {
+            cache.directory().begin_serve(group);
+        }
+    }
+
+    fn end_serve(&self, group: u32) {
+        if let Some(cache) = self.caches.first() {
+            cache.directory().end_serve(group);
+        }
+    }
+
+    fn faults(&self) -> Option<&FaultInjector> {
+        self.caches.first().and_then(|c| c.faults())
+    }
+}
+
 /// Executes a [`StageGraph`] workflow over a [`LocalLayout`] with §5.3
 /// inter-stage IFS retention. See the module docs for the data flow.
 pub struct StageRunner {
@@ -2657,6 +3105,26 @@ impl StageRunner {
     /// serve counters).
     pub fn directory(&self) -> &RetentionDirectory {
         &self.directory
+    }
+
+    /// Start this runner's serving loop on `addr` (`"127.0.0.1:0"` for
+    /// an ephemeral port): one [`TransportServer`] answering probe /
+    /// whole-archive / range requests out of every group's retention,
+    /// with serves feeding the directory's load-aware ranking. Peer
+    /// runner processes connect with
+    /// [`crate::cio::transport::SocketTransport`] and register it via
+    /// [`StageRunner::add_peer`] on their side.
+    pub fn serve(&self, addr: &str) -> Result<ServerHandle> {
+        TransportServer::serve(addr, Arc::new(ClusterRecordSource::new(self.caches.clone())))
+    }
+
+    /// Register a transport for reaching `group`'s retention in another
+    /// process, on every cache of this runner (each group's reads
+    /// resolve independently, so each needs the route).
+    pub fn add_peer(&self, group: u32, transport: Arc<dyn Transport>) {
+        for cache in self.caches.iter() {
+            cache.add_peer(group, transport.clone());
+        }
     }
 
     /// Merge every group's persisted+live read statistics into one

@@ -77,6 +77,18 @@
 //!   after K fills elsewhere), and an ENOSPC/EROFS staging tree flips
 //!   the group to counted, byte-exact GFS-direct degraded serving until
 //!   a probe write succeeds.
+//! * [`transport`] — the PR-7 tentpole: *how bytes move*, behind a
+//!   trait. [`transport::Transport`] names the four operations that
+//!   cross a source boundary (probe / whole-archive fetch / range fetch
+//!   / publish), each failing as a typed [`fault::FillError`] so retry,
+//!   deadlines, quarantine, and degraded serving apply to any impl.
+//!   [`transport::LocalFsTransport`] is the shared-filesystem impl
+//!   (hard-link siblings, deadline-bounded chunked GFS copies);
+//!   [`transport::SocketTransport`] + [`transport::TransportServer`]
+//!   move length-prefixed frames over TCP so two real runner processes
+//!   share one GFS tree and serve each other's retention across the
+//!   wire — directory routing, load-aware ranking, and partial fills
+//!   all working cross-process.
 //! * [`directory`] — the PR-4 tentpole: a cluster-wide
 //!   [`directory::RetentionDirectory`] tracks which groups retain each
 //!   archive (updated on retains, fills, evictions, clears, and manifest
@@ -121,3 +133,4 @@ pub mod local_stage;
 pub mod placement;
 pub mod stage;
 pub mod swift;
+pub mod transport;

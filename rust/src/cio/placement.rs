@@ -136,6 +136,42 @@ impl PlacementPolicy {
             ..crate::cio::fault::RetryPolicy::default()
         }
     }
+
+    /// Wire-transport timeouts (PR 7) derived from the same scale as
+    /// [`PlacementPolicy::retry_policy`]: the per-request IO timeout is
+    /// the per-source deadline (a socket request *is* one source probe,
+    /// so a stalled peer costs exactly what a hung local source costs),
+    /// and the connect timeout is a quarter of it clamped to
+    /// [100 ms, 2 s] — connection setup moves no payload, so a peer
+    /// that cannot even accept within that is routed around early
+    /// rather than consuming the whole probe budget.
+    pub fn transport_timeouts(&self) -> TransportTimeouts {
+        let io_ms = self.retry_policy().source_deadline_ms;
+        TransportTimeouts { connect_ms: (io_ms / 4).clamp(100, 2_000), io_ms }
+    }
+}
+
+/// Socket-transport timeout knobs derived from placement scale (see
+/// [`PlacementPolicy::transport_timeouts`]); feed them to
+/// [`crate::cio::transport::SocketTransport::with_timeouts`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransportTimeouts {
+    /// TCP connect timeout in milliseconds.
+    pub connect_ms: u64,
+    /// Per-request IO (read/write) timeout in milliseconds.
+    pub io_ms: u64,
+}
+
+impl TransportTimeouts {
+    /// The connect timeout as a [`std::time::Duration`].
+    pub fn connect(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.connect_ms)
+    }
+
+    /// The IO timeout as a [`std::time::Duration`].
+    pub fn io(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.io_ms)
+    }
 }
 
 /// Torus hop distance between IFS groups `a` and `b` when `groups` groups
@@ -298,6 +334,29 @@ mod tests {
         assert_eq!(p.retention_capacity(), gib(32), "retention takes half the IFS");
         assert_eq!(p.neighbor_transfer_limit(), gib(8), "neighbor pulls capped at a quarter");
         assert_eq!(p.fill_chunk_bytes(), mib(4), "64 GiB IFS -> 16 MiB, clamped to 4 MiB");
+    }
+
+    #[test]
+    fn transport_timeouts_track_the_source_deadline() {
+        let cfg = ClusterConfig::bgp(4096).with_stripe(32);
+        let p = PlacementPolicy::from_config(&cfg);
+        let t = p.transport_timeouts();
+        assert_eq!(t.io_ms, p.retry_policy().source_deadline_ms, "one request = one probe");
+        assert_eq!(t.connect_ms, (t.io_ms / 4).clamp(100, 2_000));
+        assert!(t.connect_ms <= t.io_ms);
+        assert_eq!(t.io().as_millis() as u64, t.io_ms);
+        assert_eq!(t.connect().as_millis() as u64, t.connect_ms);
+
+        // A tiny cluster's deadline clamps at the floor; connect stays
+        // within [100 ms, 2 s] regardless.
+        let tiny = PlacementPolicy {
+            lfs_limit: mib(1),
+            ifs_limit: mib(4),
+            read_many_threshold: 1,
+        };
+        let tt = tiny.transport_timeouts();
+        assert!(tt.connect_ms >= 100 && tt.connect_ms <= 2_000);
+        assert!(tt.io_ms >= 250);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! never a wedge, never a wrong byte.
 
 use cio::cio::archive::{Compression, Writer};
-use cio::cio::fault::{FaultAction, FaultInjector, OpClass, RetryPolicy};
+use cio::cio::fault::{is_retryable, is_timeout, FaultAction, FaultInjector, OpClass, RetryPolicy};
 use cio::cio::local::LocalLayout;
 use cio::cio::local_stage::GroupCache;
 use cio::cio::stage::CacheOutcome;
@@ -546,4 +546,150 @@ fn repeated_source_faults_trip_quarantine_and_probation_reopens_the_source() {
         }
     }
     assert!(!dir.is_quarantined(0), "probation must reopen a healthy source");
+}
+
+#[test]
+fn stalled_gfs_copy_blows_the_deadline_and_recovers_on_retry() {
+    let (layout, name, payload) = fault_fixture("gfs-deadline", 1);
+    let faults = Arc::new(FaultInjector::new());
+    let mut policy = fast_retry();
+    policy.source_deadline_ms = 20;
+    let caches = GroupCache::per_group_tuned(
+        &layout,
+        mib(16),
+        mib(16),
+        kib(64),
+        policy,
+        Some(faults.clone()),
+    );
+
+    // The central store hangs once, well past the per-source deadline.
+    // The chunked GFS copy checks the clock in-loop and aborts
+    // mid-transfer — a retryable timeout counted as a deadline abort —
+    // and the bounded retry lands the fill on the healed store.
+    faults.inject_times(
+        OpClass::PublishCopy,
+        ".cioar",
+        FaultAction::Delay(Duration::from_millis(80)),
+        1,
+    );
+    let (r, out) = caches[0].open_archive_via(&layout.gfs(), &name, &caches).unwrap();
+    assert_eq!(out, CacheOutcome::GfsMiss);
+    assert_eq!(&r.extract("m").unwrap(), &payload);
+    let snap = caches[0].snapshot();
+    assert_eq!(snap.deadline_aborts, 1, "the hung copy was abandoned at the deadline: {snap:?}");
+    assert_eq!(snap.retries, 1, "one bounded retry re-landed it: {snap:?}");
+    assert_eq!(snap.gfs_copies, 1, "{snap:?}");
+    let leftovers: Vec<_> = std::fs::read_dir(layout.ifs_data(0))
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+        .filter(|n| n.starts_with(".tmp-"))
+        .collect();
+    assert!(leftovers.is_empty(), "the aborted copy cleaned its temp file: {leftovers:?}");
+
+    // A store that never recovers exhausts the bounded attempts and
+    // surfaces a typed, retryable timeout — with the fill latch
+    // released, so the next resolve starts fresh once the store heals.
+    let name2 = "s0-g0-00001.cioar";
+    let mut w = Writer::create(&layout.gfs().join(name2)).unwrap();
+    w.add("m", &payload, Compression::None).unwrap();
+    w.finish().unwrap();
+    faults.inject(
+        OpClass::PublishCopy,
+        "00001.cioar",
+        FaultAction::Delay(Duration::from_millis(80)),
+    );
+    let err = caches[0].open_archive_via(&layout.gfs(), name2, &caches).unwrap_err();
+    assert!(is_timeout(&err), "the surfaced error is a typed timeout: {err:#}");
+    assert!(is_retryable(&err), "{err:#}");
+    let snap = caches[0].snapshot();
+    assert_eq!(snap.deadline_aborts, 4, "all three attempts blew the deadline: {snap:?}");
+    assert_eq!(snap.retries, 3, "{snap:?}");
+    faults.clear();
+    let (r2, out2) = caches[0].open_archive_via(&layout.gfs(), name2, &caches).unwrap();
+    assert_eq!(out2, CacheOutcome::GfsMiss, "the healed store serves a fresh fill");
+    assert_eq!(&r2.extract("m").unwrap(), &payload);
+}
+
+#[test]
+fn quarantined_producer_is_probed_only_once_probation_opens() {
+    let (layout, name, payload) = fault_fixture("producer-gate", 2);
+    let name2 = "s0-g0-00001.cioar";
+    let name3 = "s0-g0-00002.cioar";
+    for n in [name2, name3] {
+        let mut w = Writer::create(&layout.gfs().join(n)).unwrap();
+        w.add("m", &payload, Compression::None).unwrap();
+        w.finish().unwrap();
+    }
+    let faults = Arc::new(FaultInjector::new());
+    let mut policy = fast_retry();
+    policy.quarantine_streak = 1; // one strike trips the breaker
+    policy.probation_fills = 8; // several fills elsewhere reopen it
+    let caches = GroupCache::per_group_tuned(
+        &layout,
+        mib(16),
+        mib(16),
+        kib(4),
+        policy,
+        Some(faults.clone()),
+    );
+    for n in [name.as_str(), name2, name3] {
+        caches[0].retain(&layout.gfs().join(n), n).unwrap();
+    }
+
+    // Strike one trips the breaker: the producer's outbound wire faults,
+    // the read lands from GFS, and group 0 is quarantined.
+    faults.inject(OpClass::PublishLink, "/ifs/1/", FaultAction::Error);
+    let (r, out) = caches[1].open_archive_via(&layout.gfs(), &name, &caches).unwrap();
+    assert_eq!(out, CacheOutcome::GfsMiss);
+    assert_eq!(&r.extract("m").unwrap(), &payload);
+    let dir = caches[1].directory();
+    assert!(dir.is_quarantined(0));
+    assert!(
+        !dir.probe_allowed(0),
+        "freshly tripped: not even the producer fallback may probe it"
+    );
+
+    // While the breaker is closed, reads of the producer's other
+    // archives must go straight to GFS without probing it at all — no
+    // routed candidate, no producer-fallback probe, even though the
+    // source is healthy again (only the breaker gates it).
+    faults.clear();
+    let (bytes, _) = caches[1]
+        .read_member_range_via(&layout.gfs(), name2, &caches, "m", 100, 2000)
+        .unwrap();
+    assert_eq!(bytes, payload[100..2100]);
+    let snap = caches[1].snapshot();
+    assert_eq!(
+        snap.partial_neighbor_reads + snap.partial_routed_reads,
+        0,
+        "no chunk was pulled from the gated producer: {snap:?}"
+    );
+    assert!(snap.partial_gfs_reads >= 1, "{snap:?}");
+    assert_eq!(snap.stale_fallbacks, 0, "gating is not staleness: {snap:?}");
+
+    // Fills landing elsewhere advance the probation clock; once it
+    // matures the breaker goes half-open and the producer is
+    // probe-eligible again.
+    for i in 0..12u32 {
+        if dir.probe_allowed(0) {
+            break;
+        }
+        // GFS-only filler archives produced by the reader's own group:
+        // no routing involved, each fill just advances the clock.
+        let filler = format!("s9-g1-{i:05}.cioar");
+        let mut w = Writer::create(&layout.gfs().join(&filler)).unwrap();
+        w.add("m", &payload[..1000], Compression::None).unwrap();
+        w.finish().unwrap();
+        let (_, out) = caches[1].open_archive_via(&layout.gfs(), &filler, &caches).unwrap();
+        assert_eq!(out, CacheOutcome::GfsMiss);
+    }
+    assert!(dir.probe_allowed(0), "enough fills elsewhere must open the probation window");
+    assert!(dir.is_quarantined(0), "half-open still counts as quarantined until a probe lands");
+
+    // The next read's successful probe recovers the producer fully.
+    let (r3, out3) = caches[1].open_archive_via(&layout.gfs(), name3, &caches).unwrap();
+    assert_eq!(out3, CacheOutcome::NeighborTransfer, "the half-open probe lands");
+    assert_eq!(&r3.extract("m").unwrap(), &payload);
+    assert!(!dir.is_quarantined(0), "a successful probe closes the breaker");
 }

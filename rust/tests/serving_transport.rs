@@ -1,0 +1,248 @@
+//! Integration: the PR-7 serving tier — runners serving each other's
+//! retention over the wire transport.
+//!
+//! * In-process socket serving: a `GroupCache` behind a
+//!   [`TransportServer`] serves a peer cache's whole-archive fills and
+//!   record-range reads byte-exact with the GFS tier never touched.
+//! * Cross-process serving: a real second process (`cio-serve`) warms a
+//!   group's retention on a shared layout root; this process's runner
+//!   seeds its routing directory from the peer's manifest
+//!   ([`bootstrap_peer_directory`]), registers a [`SocketTransport`],
+//!   and must resolve reads with **zero GFS misses**.
+//! * The wire fault matrix riding the PR-6 chain: a mid-frame
+//!   connection drop is a retryable torn transfer that re-routes, and a
+//!   stalled peer blows the per-source deadline, re-routes, and trips
+//!   the quarantine breaker — byte-exact data and no wedged fill latch
+//!   either way.
+
+use cio::cio::archive::{Compression, Writer};
+use cio::cio::directory::RetentionDirectory;
+use cio::cio::fault::{FaultAction, FaultInjector, OpClass, RetryPolicy};
+use cio::cio::local::LocalLayout;
+use cio::cio::local_stage::{bootstrap_peer_directory, ClusterRecordSource, GroupCache};
+use cio::cio::stage::CacheOutcome;
+use cio::cio::transport::{ServerHandle, SocketTransport, TransportServer};
+use cio::util::units::{kib, mib};
+use std::io::BufRead;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn workspace(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("cio-serve-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Write a canonical single-member archive (member `"m"`) to GFS and
+/// return its payload.
+fn seed_archive(layout: &LocalLayout, name: &str, bytes: usize) -> Vec<u8> {
+    let payload: Vec<u8> = (0..bytes).map(|j| (j % 251) as u8).collect();
+    let mut w = Writer::create(&layout.gfs().join(name)).unwrap();
+    w.add("m", &payload, Compression::None).unwrap();
+    w.finish().unwrap();
+    payload
+}
+
+/// Retries with no sleeps and an explicit per-source deadline.
+fn wire_retry(deadline_ms: u64) -> RetryPolicy {
+    RetryPolicy {
+        attempts: 3,
+        backoff_base_ms: 0,
+        backoff_cap_ms: 0,
+        jitter_seed: 11,
+        source_deadline_ms: deadline_ms,
+        quarantine_streak: 0,
+        probation_fills: 1,
+    }
+}
+
+/// Move `cache` behind a serving loop on an ephemeral port; the handle's
+/// address is what peers dial.
+fn serve_cache(cache: GroupCache) -> ServerHandle {
+    let source = Arc::new(ClusterRecordSource::new(Arc::new(vec![cache])));
+    TransportServer::serve("127.0.0.1:0", source).unwrap()
+}
+
+/// Every counter that means "the GFS tier served bytes".
+fn gfs_misses(cache: &GroupCache) -> u64 {
+    let snap = cache.snapshot();
+    snap.gfs_copies + snap.gfs_direct + snap.partial_gfs_reads + snap.degraded_reads
+}
+
+#[test]
+fn socket_peer_serves_whole_archive_without_gfs() {
+    let root = workspace("whole");
+    let layout = LocalLayout::create(&root, 2, 1).unwrap(); // 2 groups
+    let name = "s0-g0-00000.cioar";
+    let payload = seed_archive(&layout, name, 60_000);
+    let directory = Arc::new(RetentionDirectory::new(layout.ifs_groups()));
+    let warm = GroupCache::with_directory(&layout, 0, mib(16), mib(16), directory.clone());
+    warm.retain(&layout.gfs().join(name), name).unwrap();
+    let server = serve_cache(warm);
+
+    let reader = GroupCache::with_directory(&layout, 1, mib(16), mib(16), directory);
+    reader.add_peer(0, Arc::new(SocketTransport::new(&server.addr().to_string(), 0)));
+    // Kill the canonical copy: every byte — including the size probe the
+    // resolve needs — must now come over the wire.
+    std::fs::remove_file(layout.gfs().join(name)).unwrap();
+
+    let (r, outcome) = reader.open_archive_via(&layout.gfs(), name, &[]).unwrap();
+    assert_eq!(outcome, CacheOutcome::NeighborTransfer, "served from the peer's retention");
+    assert_eq!(r.extract("m").unwrap(), payload, "byte-exact over the wire");
+    let snap = reader.snapshot();
+    assert_eq!(snap.neighbor_transfers, 1, "{snap:?}");
+    assert_eq!(gfs_misses(&reader), 0, "GFS never touched: {snap:?}");
+    assert!(server.served() >= 2, "probe + fetch crossed the wire");
+
+    // Read-through: the fill retained the copy, so the next open hits.
+    let (_, again) = reader.open_archive_via(&layout.gfs(), name, &[]).unwrap();
+    assert_eq!(again, CacheOutcome::IfsHit);
+}
+
+#[test]
+fn socket_peer_serves_record_ranges_without_gfs() {
+    let root = workspace("range");
+    let layout = LocalLayout::create(&root, 2, 1).unwrap();
+    let name = "s0-g0-00000.cioar";
+    let payload = seed_archive(&layout, name, 200_000);
+    let directory = Arc::new(RetentionDirectory::new(layout.ifs_groups()));
+    let warm = GroupCache::with_directory(&layout, 0, mib(16), mib(16), directory.clone());
+    warm.retain(&layout.gfs().join(name), name).unwrap();
+    let server = serve_cache(warm);
+
+    let reader = GroupCache::with_directory(&layout, 1, mib(16), mib(16), directory)
+        .with_fill_chunk(kib(16));
+    reader.add_peer(0, Arc::new(SocketTransport::new(&server.addr().to_string(), 0)));
+    std::fs::remove_file(layout.gfs().join(name)).unwrap();
+
+    // A cold record-range read drives the extent engine: index extent
+    // plus exactly the chunks covering the range, all over the wire.
+    let (bytes, _) = reader
+        .read_member_range_via(&layout.gfs(), name, &[], "m", 50_000, 10_000)
+        .unwrap();
+    assert_eq!(bytes, payload[50_000..60_000], "range is byte-exact over the wire");
+    let snap = reader.snapshot();
+    assert!(snap.chunk_fills >= 1, "the extent engine moved chunks: {snap:?}");
+    assert!(snap.partial_neighbor_reads >= 1, "chunks came from the peer: {snap:?}");
+    assert_eq!(gfs_misses(&reader), 0, "GFS never touched: {snap:?}");
+    assert!(server.served() >= 2);
+}
+
+#[test]
+fn cross_process_runner_serves_peer_retention() {
+    let root = workspace("xproc");
+    let layout = LocalLayout::create(&root, 2, 1).unwrap(); // 2 groups
+    let name = "s0-g0-00000.cioar";
+    let payload = seed_archive(&layout, name, 80_000);
+
+    // Process A: a real second runner warming group 0's retention from
+    // the shared GFS tree, then serving it over TCP. It persists the
+    // retention manifest before printing READY, so this process can
+    // bootstrap its routing directory from the shared filesystem.
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_cio-serve"))
+        .arg(&root)
+        .args(["2", "1", "0", name])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawning cio-serve");
+    let mut ready = String::new();
+    std::io::BufReader::new(child.stdout.take().unwrap()).read_line(&mut ready).unwrap();
+    let addr = ready
+        .trim()
+        .strip_prefix("READY ")
+        .unwrap_or_else(|| panic!("unexpected cio-serve banner: {ready:?}"))
+        .to_string();
+
+    // Process B (this one): runner for group 1 on the same layout root.
+    // Seed the directory from the peer's manifest and register the wire
+    // route; the warm-routed read must never fall through to GFS.
+    let directory = Arc::new(RetentionDirectory::new(layout.ifs_groups()));
+    assert_eq!(bootstrap_peer_directory(&layout, &directory, 0), 1, "manifest entry published");
+    let reader = GroupCache::with_directory(&layout, 1, mib(16), mib(16), directory);
+    reader.add_peer(0, Arc::new(SocketTransport::new(&addr, 0)));
+
+    let (r, outcome) = reader.open_archive_via(&layout.gfs(), name, &[]).unwrap();
+    assert_eq!(outcome, CacheOutcome::NeighborTransfer, "warm-routed to the peer process");
+    assert_eq!(r.extract("m").unwrap(), payload, "byte-exact across processes");
+    let snap = reader.snapshot();
+    assert_eq!(gfs_misses(&reader), 0, "gfs_misses == 0: {snap:?}");
+    assert_eq!(snap.neighbor_transfers, 1, "{snap:?}");
+    assert_eq!((snap.hits, snap.misses), (0, 1), "one cold resolve: {snap:?}");
+
+    // Closing the child's stdin is its shutdown signal.
+    drop(child.stdin.take());
+    let status = child.wait().expect("cio-serve exits");
+    assert!(status.success(), "cio-serve exited with {status:?}");
+}
+
+#[test]
+fn mid_frame_drop_reroutes_to_gfs_byte_exact() {
+    let root = workspace("torn");
+    let layout = LocalLayout::create(&root, 2, 1).unwrap();
+    let name = "s0-g0-00000.cioar";
+    let payload = seed_archive(&layout, name, 70_000);
+    let faults = Arc::new(FaultInjector::new());
+    // Every serve of group 0's retained copy sends 1000 bytes of a
+    // claimed-complete frame, then drops the connection.
+    faults.inject(OpClass::Serve, "ifs/0/data", FaultAction::TruncateAfter(1000));
+    let directory = Arc::new(RetentionDirectory::with_health(layout.ifs_groups(), 2, 4));
+    let warm = GroupCache::with_directory(&layout, 0, mib(16), mib(16), directory.clone())
+        .with_faults(faults.clone());
+    warm.retain(&layout.gfs().join(name), name).unwrap();
+    let server = serve_cache(warm);
+
+    let reader = GroupCache::with_directory(&layout, 1, mib(16), mib(16), directory.clone())
+        .with_retry(wire_retry(0));
+    reader.add_peer(0, Arc::new(SocketTransport::new(&server.addr().to_string(), 0)));
+
+    // The torn transfer is a transient wire fault: the fill re-routes to
+    // the canonical GFS copy within the same resolve — no retry storm,
+    // no wedged latch, and the peer's (healthy) retention entry stays
+    // advertised.
+    let (r, outcome) = reader.open_archive_via(&layout.gfs(), name, &[]).unwrap();
+    assert_eq!(outcome, CacheOutcome::GfsMiss, "re-routed past the torn peer");
+    assert_eq!(r.extract("m").unwrap(), payload, "byte-exact despite the torn frame");
+    let snap = reader.snapshot();
+    assert_eq!(snap.rerouted_fills, 1, "the failed probe was attributed: {snap:?}");
+    assert_eq!(snap.stale_fallbacks, 0, "a torn wire is not staleness: {snap:?}");
+    assert!(directory.sources(name).contains(&0), "the peer's entry stays advertised");
+    assert!(faults.injected() >= 1, "the failpoint actually fired");
+}
+
+#[test]
+fn stalled_peer_blows_deadline_reroutes_and_quarantines() {
+    let root = workspace("stall");
+    let layout = LocalLayout::create(&root, 2, 1).unwrap();
+    let name = "s0-g0-00000.cioar";
+    let payload = seed_archive(&layout, name, 40_000);
+    let faults = Arc::new(FaultInjector::new());
+    // Group 0's serving loop stalls every request well past the
+    // reader's per-source deadline.
+    faults.inject(OpClass::Serve, "ifs/0/data", FaultAction::Delay(Duration::from_millis(400)));
+    // One blown probe trips the breaker (streak = 1).
+    let directory = Arc::new(RetentionDirectory::with_health(layout.ifs_groups(), 1, 4));
+    let warm = GroupCache::with_directory(&layout, 0, mib(16), mib(16), directory.clone())
+        .with_faults(faults.clone());
+    warm.retain(&layout.gfs().join(name), name).unwrap();
+    let server = serve_cache(warm);
+
+    let reader = GroupCache::with_directory(&layout, 1, mib(16), mib(16), directory.clone())
+        .with_retry(wire_retry(60));
+    reader.add_peer(
+        0,
+        Arc::new(SocketTransport::new(&server.addr().to_string(), 0)
+            .with_timeouts(Duration::from_millis(500), Duration::from_millis(60))),
+    );
+
+    let (r, outcome) = reader.open_archive_via(&layout.gfs(), name, &[]).unwrap();
+    assert_eq!(outcome, CacheOutcome::GfsMiss, "re-routed off the stalled peer");
+    assert_eq!(r.extract("m").unwrap(), payload, "byte-exact after the stall");
+    let snap = reader.snapshot();
+    assert!(snap.deadline_aborts >= 1, "the stall was counted as a deadline abort: {snap:?}");
+    assert_eq!(snap.rerouted_fills, 1, "{snap:?}");
+    assert!(snap.quarantined_sources >= 1, "the breaker tripped: {snap:?}");
+    assert!(directory.is_quarantined(0), "the stalled source is quarantined");
+    assert!(directory.quarantine_trips() >= 1);
+    drop(server);
+}
