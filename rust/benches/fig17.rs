@@ -40,9 +40,9 @@ fn read_mix_sweep() {
     let tasks = 16u32;
     println!("--- stage-2 read-tier mix vs cn_per_ifs (real bytes, {nodes} nodes) ---");
     println!(
-        "{:>10} {:>6} {:>8} {:>7} {:>9} {:>8} {:>9} {:>6} {:>7} {:>8} {:>8}",
+        "{:>10} {:>6} {:>8} {:>7} {:>9} {:>8} {:>9} {:>6} {:>7} {:>8} {:>8} {:>7} {:>6}",
         "cn_per_ifs", "groups", "ifs_hit", "routed", "producer", "gfs", "fallback", "hit%",
-        "retries", "rerouted", "degraded"
+        "retries", "rerouted", "degraded", "corrupt", "hedged"
     );
     for cn in [1u32, 2, 4, 8] {
         let root =
@@ -84,7 +84,7 @@ fn read_mix_sweep() {
         let s = &report.stages[1];
         let total = (s.ifs_hits + s.neighbor_transfers + s.gfs_misses).max(1);
         println!(
-            "{:>10} {:>6} {:>8} {:>7} {:>9} {:>8} {:>9} {:>5.0}% {:>7} {:>8} {:>8}",
+            "{:>10} {:>6} {:>8} {:>7} {:>9} {:>8} {:>9} {:>5.0}% {:>7} {:>8} {:>8} {:>7} {:>6}",
             cn,
             runner.layout().ifs_groups(),
             s.ifs_hits,
@@ -99,7 +99,12 @@ fn read_mix_sweep() {
             // so a faulty one is visible at a glance.
             s.retries,
             s.rerouted_fills,
-            s.degraded_reads
+            s.degraded_reads,
+            // PR-8 integrity columns: checksum mismatches caught on
+            // arrival and hedged second fills — both zero on a healthy
+            // uncontended run.
+            s.corruption_detected,
+            s.hedged_fills
         );
         drop(runner);
         let _ = std::fs::remove_dir_all(&root);

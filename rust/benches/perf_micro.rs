@@ -3,8 +3,10 @@
 //! policy evaluation, archive writer/reader throughput, the PR-1
 //! archive-pipeline and collector-latency cases, the PR-7 record-serving
 //! tier (Zipf client load, sharded-vs-single metadata lock, socket vs
-//! local fill transports), and PJRT scoring latency (skipped when
-//! `make artifacts` has not run).
+//! local fill transports), the PR-8 integrity tax (fill verification on
+//! vs off — the warm-hit overhead is the ≤5% CI gate) and hedged-fill
+//! tail trim (waiter p99 with a stalled primary, hedge armed vs off),
+//! and PJRT scoring latency (skipped when `make artifacts` has not run).
 //!
 //! Regenerate: `cargo bench --bench perf_micro`
 //! Machine-readable output: `-- --json BENCH.json` (or `CIO_BENCH_JSON`),
@@ -34,7 +36,7 @@ use cio::util::rng::Rng;
 use cio::util::stats::Summary;
 use cio::util::units::{kib, mib, SimTime};
 use std::path::PathBuf;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 struct W {
     net: FlowNet<W>,
@@ -952,6 +954,163 @@ fn main() {
     b.metric("serve_hit_sharded_lock throughput", hit_ops / lock_sharded, "opens/s");
     b.metric("serve: sharded metadata lock speedup", lock_single / lock_sharded, "x");
     let _ = std::fs::remove_dir_all(&vroot);
+
+    // --- Verified fills (the PR-8 tentpole): the same cold-fill and
+    // warm-hit workloads with arrival verification on (the default) and
+    // off. The cold delta is the honest checksum tax — one CRC pass over
+    // every landed byte; the warm delta is the number CI gates at ≤5%,
+    // because a retained copy that already verified on arrival must not
+    // pay the tax again on every open.
+    let yroot = dir.join("stage2-verify");
+    let _ = std::fs::remove_dir_all(&yroot);
+    let ylayout = LocalLayout::create(&yroot, 1, 1).unwrap();
+    let y_arch = 12usize;
+    let y_arch_bytes = mib(1) as usize;
+    let mut y_names: Vec<String> = Vec::new();
+    for i in 0..y_arch {
+        let name = format!("s1-g0-{i:05}.cioar");
+        let mut w = Writer::create(&ylayout.gfs().join(&name)).unwrap();
+        let mut data = vec![0u8; y_arch_bytes];
+        for (j, byte) in data.iter_mut().enumerate() {
+            *byte = (i * 53 + j * 29) as u8;
+        }
+        w.add("records.bin", &data, Compression::None).unwrap();
+        w.finish().unwrap();
+        y_names.push(name);
+    }
+    let y_fresh = || {
+        let _ = std::fs::remove_dir_all(ylayout.ifs_data(0));
+        std::fs::create_dir_all(ylayout.ifs_data(0)).unwrap();
+    };
+    let y_cold = |verify: bool| -> f64 {
+        y_fresh();
+        let cache = GroupCache::new(&ylayout, 0, mib(1024)).with_verification(verify);
+        let t0 = Instant::now();
+        for name in &y_names {
+            let (r, o) = cache.open_archive(&ylayout.gfs(), name).unwrap();
+            assert_eq!(o, CacheOutcome::GfsMiss, "{name}");
+            black_box(r.len());
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(cache.snapshot().corruption_detected, 0, "clean data must verify clean");
+        dt
+    };
+    let y_opens = if fast { 200usize } else { 600 };
+    let y_warm = |verify: bool| -> f64 {
+        y_fresh();
+        let cache = GroupCache::new(&ylayout, 0, mib(1024)).with_verification(verify);
+        for name in &y_names {
+            cache.open_archive(&ylayout.gfs(), name).unwrap();
+        }
+        let t0 = Instant::now();
+        for i in 0..y_opens {
+            let name = &y_names[i % y_arch];
+            let (r, o) = cache.open_archive(&ylayout.gfs(), name).unwrap();
+            assert_eq!(o, CacheOutcome::IfsHit, "{name}");
+            black_box(r.len());
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    let (mut y_cold_on, mut y_cold_off) = (f64::INFINITY, f64::INFINITY);
+    let (mut y_warm_on, mut y_warm_off) = (f64::INFINITY, f64::INFINITY);
+    // Interleaved reps so machine drift hits both variants alike.
+    for _ in 0..tier_reps {
+        y_cold_on = y_cold_on.min(y_cold(true));
+        y_cold_off = y_cold_off.min(y_cold(false));
+        y_warm_on = y_warm_on.min(y_warm(true));
+        y_warm_off = y_warm_off.min(y_warm(false));
+    }
+    b.metric("verify_cold_fill_on latency", y_cold_on * 1e3, "ms");
+    b.metric("verify_cold_fill_off latency", y_cold_off * 1e3, "ms");
+    b.metric("verify: cold fill verification overhead", y_cold_on / y_cold_off, "x");
+    b.metric("verify_warm_hit_on throughput", y_opens as f64 / y_warm_on, "opens/s");
+    b.metric("verify_warm_hit_off throughput", y_opens as f64 / y_warm_off, "opens/s");
+    b.metric("verify: warm hit verification overhead", y_warm_on / y_warm_off, "x");
+    let _ = std::fs::remove_dir_all(&yroot);
+
+    // --- Hedged fills (the PR-8 tail trim): per archive, a primary
+    // thread claims the fill latch and stalls in a fault-injected slow
+    // GFS copy while a waiter piles up behind the latch. With the hedge
+    // off the waiter eats the whole stall; with it armed the waiter
+    // launches a clean second fill after `hedge_delay_ms` and wins
+    // through the same first-success-wins publish. The CI gate is
+    // hedged waiter p99 < unhedged waiter p99.
+    let hroot = dir.join("stage2-hedge");
+    let _ = std::fs::remove_dir_all(&hroot);
+    let hlayout = LocalLayout::create(&hroot, 1, 1).unwrap();
+    let h_arch = if fast { 8usize } else { 16 };
+    let h_arch_bytes = mib(1) as usize;
+    let stall_ms = 60u64;
+    let mut h_names: Vec<String> = Vec::new();
+    for i in 0..h_arch {
+        let name = format!("s1-g0-{i:05}.cioar");
+        let mut w = Writer::create(&hlayout.gfs().join(&name)).unwrap();
+        let mut data = vec![0u8; h_arch_bytes];
+        for (j, byte) in data.iter_mut().enumerate() {
+            *byte = (i * 71 + j * 23) as u8;
+        }
+        w.add("records.bin", &data, Compression::None).unwrap();
+        w.finish().unwrap();
+        h_names.push(name);
+    }
+    let h_fresh = || {
+        let _ = std::fs::remove_dir_all(hlayout.ifs_data(0));
+        std::fs::create_dir_all(hlayout.ifs_data(0)).unwrap();
+    };
+    let h_run = |hedge_delay_ms: u64| -> (Vec<f64>, u64, u64) {
+        h_fresh();
+        let faults = std::sync::Arc::new(FaultInjector::new());
+        for name in &h_names {
+            // The FIRST copy of each archive stalls; a hedged retry is clean.
+            faults.inject_times(
+                OpClass::PublishCopy,
+                name,
+                FaultAction::Delay(Duration::from_millis(stall_ms)),
+                1,
+            );
+        }
+        let policy = RetryPolicy { hedge_delay_ms, ..RetryPolicy::default() };
+        let cache = std::sync::Arc::new(
+            GroupCache::new(&hlayout, 0, mib(1024))
+                .with_retry(policy)
+                .with_faults(faults),
+        );
+        let mut waiter_ms: Vec<f64> = Vec::new();
+        for name in &h_names {
+            let primary = {
+                let cache = cache.clone();
+                let gfs = hlayout.gfs();
+                let name = name.clone();
+                std::thread::spawn(move || {
+                    let (r, _) = cache.open_archive(&gfs, &name).unwrap();
+                    black_box(r.len());
+                })
+            };
+            // Let the primary claim the latch before the waiter arrives.
+            std::thread::sleep(Duration::from_millis(5));
+            let t0 = Instant::now();
+            let (r, _) = cache.open_archive(&hlayout.gfs(), name).unwrap();
+            waiter_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            black_box(r.len());
+            primary.join().unwrap();
+        }
+        let snap = cache.snapshot();
+        (waiter_ms, snap.hedged_fills, snap.hedge_wins)
+    };
+    let (off_ms, off_hedges, _) = h_run(0);
+    let (on_ms, on_hedges, on_wins) = h_run(10);
+    assert_eq!(off_hedges, 0, "hedge_delay_ms=0 must disarm hedging");
+    assert!(on_hedges > 0 && on_wins > 0, "armed waiters must hedge and win");
+    let off_sum = Summary::of(&off_ms).unwrap();
+    let on_sum = Summary::of(&on_ms).unwrap();
+    b.metric("hedge_off_waiter_p50", off_sum.p50, "ms");
+    b.metric("hedge_off_waiter_p99", off_sum.p99, "ms");
+    b.metric("hedge_on_waiter_p50", on_sum.p50, "ms");
+    b.metric("hedge_on_waiter_p99", on_sum.p99, "ms");
+    b.metric("hedge: waiter p99 trim", off_sum.p99 / on_sum.p99, "x");
+    b.metric("hedge: hedged fills", on_hedges as f64, "fills");
+    b.metric("hedge: hedge wins", on_wins as f64, "fills");
+    let _ = std::fs::remove_dir_all(&hroot);
 
     // --- PJRT scoring latency (needs artifacts).
     match cio::runtime::ScoreModel::load_default() {

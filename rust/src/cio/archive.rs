@@ -33,9 +33,11 @@
 //! Layout:
 //!
 //! ```text
-//! [member]* [index] [trailer]
+//! [member]* [sums?] [index] [trailer]
 //! member : MAGIC_MEMBER u32 | name_len u16 | name | flags u8 |
 //!          raw_len u64 | stored_len u64 | crc32(raw) u32 | data
+//! sums   : an ordinary member named `.cio-sums` (hidden) whose data is
+//!          chunk u64 | data_end u64 | count u32 | crc32 u32 × count
 //! index  : MAGIC_INDEX u32 | count u32 | entry*
 //! entry  : name_len u16 | name | offset u64 | raw_len u64 |
 //!          stored_len u64 | crc32 u32 | flags u8
@@ -43,6 +45,19 @@
 //! ```
 //!
 //! All integers little-endian.
+//!
+//! Integrity (PR-8): the per-member CRC32 only validates a *whole*
+//! member after extraction — a chunk-granular partial fill moves raw
+//! archive byte ranges that cross member boundaries and never inflates
+//! members. The hidden `.cio-sums` member closes that gap: it records a
+//! CRC32 for every [`SUM_CHUNK`]-sized slice of the member region
+//! `[0, data_end)`, so a receiver can verify any chunk-aligned byte span
+//! on arrival ([`ChunkSums::verify_span`]) and a scrubber can re-verify a
+//! retained file end to end ([`verify_archive`]). Hidden members (name
+//! prefix `.cio-`) are reachable by exact-name lookup but excluded from
+//! enumeration, so member counts and sequential scans are unchanged.
+//! Archives written before PR-8 simply lack the member and verify as
+//! [`Verification::Unchecked`].
 
 use crate::util::pool::{ordered_pipeline, BufferPool, PooledBuf};
 use anyhow::{bail, ensure, Context, Result};
@@ -58,6 +73,21 @@ const MAGIC_TRAILER: u32 = 0xC10A_0E4D;
 
 /// Chunk size for streamed member ingestion (and the pool's buffer size).
 const CHUNK: usize = 256 * 1024;
+
+/// Name prefix of hidden (bookkeeping) members: reachable via
+/// [`Reader::entry`] / [`Reader::extract`] by exact name, but excluded
+/// from [`Reader::entries`] / [`Reader::len`] / [`read_sequential`]
+/// enumeration. Public member names may not start with it.
+pub const HIDDEN_PREFIX: &str = ".cio-";
+
+/// The hidden member holding the per-chunk checksum table.
+pub const SUMS_MEMBER: &str = ".cio-sums";
+
+/// Granularity of the per-chunk checksum table: one CRC32 per 4 KiB of
+/// the member region (~0.1% space overhead). Small enough that every
+/// fill-chunk size the partial-fill engine uses is a whole multiple, so
+/// chunk-granular transfers verify without read amplification.
+pub const SUM_CHUNK: u64 = 4096;
 
 /// Cap on speculative pre-allocation from header-declared sizes. Actual
 /// data may exceed this (buffers grow on demand); a corrupt header cannot
@@ -170,6 +200,13 @@ pub struct Writer<F: IoWrite + Seek> {
     /// `offset` does not account for; all further writes (and `finish`)
     /// are refused so a corrupt index can never be emitted.
     poisoned: bool,
+    /// The on-disk path when created via [`Writer::create`]: lets
+    /// `finish` re-read the member region to build the `.cio-sums`
+    /// checksum table (streamed members are header-back-patched, so the
+    /// final bytes are only knowable from the file). `None` for generic
+    /// sinks — those archives carry no sums member and verify as
+    /// [`Verification::Unchecked`].
+    source_path: Option<PathBuf>,
     pool: Arc<BufferPool>,
 }
 
@@ -178,7 +215,9 @@ impl Writer<std::io::BufWriter<std::fs::File>> {
     pub fn create(path: &Path) -> Result<Self> {
         let f = std::fs::File::create(path)
             .with_context(|| format!("creating archive {}", path.display()))?;
-        Writer::new(std::io::BufWriter::new(f))
+        let mut w = Writer::new(std::io::BufWriter::new(f))?;
+        w.source_path = Some(path.to_path_buf());
+        Ok(w)
     }
 }
 
@@ -192,6 +231,7 @@ impl<F: IoWrite + Seek> Writer<F> {
             offset: 0,
             finished: false,
             poisoned: false,
+            source_path: None,
             pool: BufferPool::new(CHUNK, 16),
         })
     }
@@ -201,6 +241,10 @@ impl<F: IoWrite + Seek> Writer<F> {
         ensure!(!self.finished, "archive already finished");
         ensure!(!self.poisoned, "archive writer poisoned by an earlier IO error");
         ensure!(!name.is_empty() && name.len() <= u16::MAX as usize, "bad member name");
+        ensure!(
+            !name.starts_with(HIDDEN_PREFIX),
+            "member name {name:?} collides with the hidden-member prefix {HIDDEN_PREFIX:?}"
+        );
         ensure!(
             self.names.insert(name.to_string(), ()).is_none(),
             "duplicate member name {name:?}"
@@ -434,6 +478,23 @@ impl<F: IoWrite + Seek> Writer<F> {
              over partial member bytes"
         );
         self.finished = true;
+        // Append the hidden per-chunk checksum table covering every
+        // member byte written so far. Only possible for path-backed
+        // writers (streamed members back-patch their headers, so the
+        // final bytes must be re-read from the file); generic sinks
+        // produce a legacy archive that verifies as `Unchecked`.
+        if let Some(path) = self.source_path.clone() {
+            if !self.entries.is_empty() {
+                let data_end = self.offset;
+                self.file.flush()?;
+                let mut f = std::fs::File::open(&path)
+                    .with_context(|| format!("re-reading {} for checksums", path.display()))?;
+                let sums = ChunkSums::compute(&mut f, data_end, SUM_CHUNK)?;
+                let encoded = sums.encode();
+                let result = self.add_slice_inner(SUMS_MEMBER, &encoded, Compression::None);
+                self.poison_on_err(result)?;
+            }
+        }
         let index_offset = self.offset;
         let mut idx = Vec::new();
         idx.extend_from_slice(&MAGIC_INDEX.to_le_bytes());
@@ -516,7 +577,10 @@ fn compress_member(
 /// Random-access archive reader.
 pub struct Reader {
     path: PathBuf,
+    /// All entries, visible first (stable order), hidden at the tail.
     entries: Vec<Entry>,
+    /// Count of visible (non-`.cio-`) entries at the front of `entries`.
+    visible: usize,
     by_name: BTreeMap<String, usize>,
 }
 
@@ -560,23 +624,35 @@ impl Reader {
         f.seek(SeekFrom::Start(index_offset))?;
         let mut index_bytes = vec![0u8; (len - 16 - index_offset) as usize];
         f.read_exact(&mut index_bytes)?;
-        let (entries, by_name) = parse_index(&index_bytes, index_offset)?;
-        Ok(Reader { path: path.to_path_buf(), entries, by_name })
+        let (entries, visible, by_name) = parse_index(&index_bytes, index_offset)?;
+        Ok(Reader { path: path.to_path_buf(), entries, visible, by_name })
     }
 
-    /// Member entries in archive order.
+    /// Visible member entries in archive order (hidden `.cio-`
+    /// bookkeeping members are excluded; look those up by exact name).
     pub fn entries(&self) -> &[Entry] {
-        &self.entries
+        &self.entries[..self.visible]
     }
 
-    /// Number of members.
+    /// Number of visible members.
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.visible
     }
 
-    /// True when the archive holds no members.
+    /// True when the archive holds no visible members.
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.visible == 0
+    }
+
+    /// The per-chunk checksum table, if this archive carries one.
+    /// Loading goes through [`Reader::extract`], so the table itself is
+    /// member-CRC-validated before anything trusts it.
+    pub fn chunk_sums(&self) -> Result<Option<ChunkSums>> {
+        if self.entry(SUMS_MEMBER).is_none() {
+            return Ok(None);
+        }
+        let raw = self.extract(SUMS_MEMBER)?;
+        Ok(Some(ChunkSums::parse(&raw)?))
     }
 
     /// Look up a member by name.
@@ -678,7 +754,7 @@ impl Reader {
         threads: usize,
         visit: impl Fn(&str, &[u8]) + Send + Sync,
     ) -> Result<()> {
-        let threads = threads.max(1).min(self.entries.len().max(1));
+        let threads = threads.max(1).min(self.visible.max(1));
         let next = Arc::new(std::sync::atomic::AtomicUsize::new(0));
         let errors = std::sync::Mutex::new(Vec::<anyhow::Error>::new());
         std::thread::scope(|scope| {
@@ -686,7 +762,7 @@ impl Reader {
                 let next = next.clone();
                 let errors = &errors;
                 let visit = &visit;
-                let entries = &self.entries;
+                let entries = &self.entries[..self.visible];
                 let path = &self.path;
                 scope.spawn(move || {
                     let mut f = match std::fs::File::open(path) {
@@ -729,7 +805,7 @@ impl Reader {
 fn parse_index(
     index_bytes: &[u8],
     index_offset: u64,
-) -> Result<(Vec<Entry>, BTreeMap<String, usize>)> {
+) -> Result<(Vec<Entry>, usize, BTreeMap<String, usize>)> {
     let mut cur = index_bytes;
     let magic = read_u32(&mut cur)?;
     ensure!(magic == MAGIC_INDEX, "bad index magic {magic:#x}");
@@ -756,7 +832,6 @@ fn parse_index(
             end <= index_offset,
             "member {name:?} extends beyond the member region (corrupt index)"
         );
-        by_name.insert(name.clone(), i);
         entries.push(Entry {
             name,
             offset,
@@ -766,7 +841,168 @@ fn parse_index(
             compression: Compression::from_flag(flags)?,
         });
     }
-    Ok((entries, by_name))
+    // Stable-partition visible members to the front so enumeration can
+    // hand out a plain slice; hidden bookkeeping members sit at the tail,
+    // reachable only by exact-name lookup.
+    let (mut visible_entries, hidden): (Vec<Entry>, Vec<Entry>) =
+        entries.into_iter().partition(|e| !e.name.starts_with(HIDDEN_PREFIX));
+    let visible = visible_entries.len();
+    visible_entries.extend(hidden);
+    for (i, e) in visible_entries.iter().enumerate() {
+        by_name.insert(e.name.clone(), i);
+    }
+    Ok((visible_entries, visible, by_name))
+}
+
+/// The per-chunk checksum table carried in the hidden [`SUMS_MEMBER`]:
+/// one CRC32 per `chunk`-sized slice of the member region
+/// `[0, data_end)` (the final slice may be short). This is what lets a
+/// receiver verify *partial* transfers — chunk-aligned raw byte spans —
+/// without inflating or even parsing members.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkSums {
+    /// Checksum granularity in bytes (always [`SUM_CHUNK`] for archives
+    /// we write; parsed archives may differ).
+    pub chunk: u64,
+    /// End of the covered member region — the sums member's own offset.
+    pub data_end: u64,
+    /// `data_end.div_ceil(chunk)` CRC32s, in chunk order.
+    pub crcs: Vec<u32>,
+}
+
+impl ChunkSums {
+    /// Compute the table by streaming `data_end` bytes from `reader`
+    /// (positioned at archive offset 0).
+    pub fn compute(reader: &mut dyn Read, data_end: u64, chunk: u64) -> Result<ChunkSums> {
+        ensure!(chunk > 0, "zero checksum chunk");
+        let mut crcs = Vec::with_capacity(data_end.div_ceil(chunk) as usize);
+        let mut buf = vec![0u8; chunk as usize];
+        let mut at = 0u64;
+        while at < data_end {
+            let n = chunk.min(data_end - at) as usize;
+            reader
+                .read_exact(&mut buf[..n])
+                .with_context(|| format!("reading member region at {at} for checksums"))?;
+            crcs.push(crc32fast::hash(&buf[..n]));
+            at += n as u64;
+        }
+        Ok(ChunkSums { chunk, data_end, crcs })
+    }
+
+    /// Serialize for the hidden member.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(20 + self.crcs.len() * 4);
+        out.extend_from_slice(&self.chunk.to_le_bytes());
+        out.extend_from_slice(&self.data_end.to_le_bytes());
+        out.extend_from_slice(&(self.crcs.len() as u32).to_le_bytes());
+        for crc in &self.crcs {
+            out.extend_from_slice(&crc.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse a hidden-member payload (validating internal consistency).
+    pub fn parse(data: &[u8]) -> Result<ChunkSums> {
+        let mut cur = data;
+        let chunk = read_u64(&mut cur)?;
+        let data_end = read_u64(&mut cur)?;
+        let count = read_u32(&mut cur)? as usize;
+        ensure!(chunk > 0, "zero checksum chunk");
+        ensure!(
+            count as u64 == data_end.div_ceil(chunk),
+            "checksum table holds {count} entries for a {data_end}-byte region"
+        );
+        ensure!(cur.len() == count * 4, "truncated checksum table");
+        let mut crcs = Vec::with_capacity(count);
+        for _ in 0..count {
+            crcs.push(read_u32(&mut cur)?);
+        }
+        Ok(ChunkSums { chunk, data_end, crcs })
+    }
+
+    /// Verify a raw archive byte span that arrived as `bytes` starting at
+    /// archive offset `span_start`. Every sum chunk *fully* covered by
+    /// the span is checked (the final short chunk counts as fully covered
+    /// when the span reaches `data_end`); bytes past `data_end` — the
+    /// sums member itself, the index, the trailer — are ignored, as are
+    /// partially-covered edge chunks (their remaining bytes will be
+    /// verified by the transfer that moves them). Errors name the first
+    /// mismatching chunk.
+    pub fn verify_span(&self, span_start: u64, bytes: &[u8]) -> Result<()> {
+        let span_end = span_start + bytes.len() as u64;
+        let covered_end = span_end.min(self.data_end);
+        if span_start >= covered_end {
+            return Ok(());
+        }
+        let mut check = |idx: u64| -> Result<()> {
+            let cstart = idx * self.chunk;
+            let cend = (cstart + self.chunk).min(self.data_end);
+            let want = *self
+                .crcs
+                .get(idx as usize)
+                .with_context(|| format!("checksum table too short for chunk {idx}"))?;
+            let lo = (cstart - span_start) as usize;
+            let hi = (cend - span_start) as usize;
+            let got = crc32fast::hash(&bytes[lo..hi]);
+            ensure!(
+                got == want,
+                "checksum mismatch in archive span [{cstart}, {cend}): \
+                 got {got:#010x}, want {want:#010x}"
+            );
+            Ok(())
+        };
+        for idx in crate::cio::extent::chunks_within(span_start, covered_end, self.chunk) {
+            check(idx)?;
+        }
+        // The final short chunk has no full-chunk extent; it is verifiable
+        // exactly when the span covers through data_end.
+        if self.data_end % self.chunk != 0 && covered_end == self.data_end {
+            let tail = self.data_end / self.chunk;
+            if tail * self.chunk >= span_start {
+                check(tail)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// What [`verify_archive`] concluded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verification {
+    /// Every member-region chunk matched the checksum table.
+    Verified,
+    /// The archive predates the checksum table (no hidden sums member);
+    /// nothing to verify against.
+    Unchecked,
+}
+
+/// Re-verify a complete on-disk archive against its checksum table — the
+/// scrubber's primitive, and the whole-file check a fill runs after a
+/// transfer lands. Returns [`Verification::Unchecked`] for legacy
+/// archives without a table; errors on any mismatch (or IO failure),
+/// naming the first bad chunk.
+pub fn verify_archive(path: &Path) -> Result<Verification> {
+    let r = Reader::open(path)?;
+    let Some(sums) = r.chunk_sums()? else {
+        return Ok(Verification::Unchecked);
+    };
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {} for verification", path.display()))?;
+    let mut buf = vec![0u8; sums.chunk as usize];
+    for (i, &want) in sums.crcs.iter().enumerate() {
+        let start = i as u64 * sums.chunk;
+        let n = sums.chunk.min(sums.data_end - start) as usize;
+        f.read_exact(&mut buf[..n])
+            .with_context(|| format!("reading chunk {i} of {}", path.display()))?;
+        let got = crc32fast::hash(&buf[..n]);
+        ensure!(
+            got == want,
+            "checksum mismatch in {} at [{start}, {}): got {got:#010x}, want {want:#010x}",
+            path.display(),
+            start + n as u64,
+        );
+    }
+    Ok(Verification::Verified)
 }
 
 /// Tar-like sequential scan: read members in order without the index
@@ -818,8 +1054,12 @@ pub fn read_sequential(path: &Path, mut visit: impl FnMut(&str, &[u8])) -> Resul
         };
         ensure!(data.len() == raw_len, "length mismatch for {name}");
         ensure!(crc32fast::hash(data) == crc, "CRC mismatch for {name}");
-        visit(&name, data);
-        count += 1;
+        // Hidden bookkeeping members are verified (above) but not part of
+        // the member stream a tar-style consumer sees.
+        if !name.starts_with(HIDDEN_PREFIX) {
+            visit(&name, data);
+            count += 1;
+        }
     }
 }
 
@@ -1008,7 +1248,9 @@ mod tests {
         assert_eq!(asked[0], (len - 16, 16));
         assert_eq!(asked[1].0 + asked[1].1, len - 16, "index region ends at the trailer");
         let members_end: u64 = r.entries().iter().map(|e| e.stored_end()).max().unwrap();
-        assert_eq!(asked[1].0, members_end, "index region starts after the members");
+        let sums_end = r.entry(SUMS_MEMBER).expect("checksum member").stored_end();
+        assert_eq!(asked[1].0, sums_end, "index region starts after the sums member");
+        assert!(sums_end > members_end, "sums member sits after the visible members");
 
         // Materialize just member b's extent and read records out of it;
         // member a's bytes never move.
@@ -1060,6 +1302,89 @@ mod tests {
         let r = Reader::open(&path).unwrap();
         let err = r.extract("victim").unwrap_err();
         assert!(err.to_string().contains("CRC mismatch"), "{err}");
+    }
+
+    #[test]
+    fn hidden_sums_member_is_invisible_but_reachable() {
+        let dir = tmpdir("sums");
+        let path = dir.join("s.cioar");
+        let members = sample_members(5);
+        let mut w = Writer::create(&path).unwrap();
+        for (name, data) in &members {
+            w.add(name, data, Compression::None).unwrap();
+        }
+        // Public adds may not squat on the hidden prefix.
+        let err = w.add(".cio-evil", b"x", Compression::None).unwrap_err();
+        assert!(err.to_string().contains("hidden-member prefix"), "{err}");
+        w.finish().unwrap();
+        let r = Reader::open(&path).unwrap();
+        assert_eq!(r.len(), 5, "hidden member not enumerated");
+        assert!(r.entries().iter().all(|e| !e.name.starts_with(HIDDEN_PREFIX)));
+        let mut seq = 0;
+        read_sequential(&path, |_, _| seq += 1).unwrap();
+        assert_eq!(seq, 5, "sequential scan skips the sums member");
+        // ... but exact-name lookup reaches it, CRC-checked.
+        let sums = r.chunk_sums().unwrap().expect("sums present");
+        assert_eq!(sums.chunk, SUM_CHUNK);
+        assert_eq!(sums.data_end, r.entry(SUMS_MEMBER).unwrap().offset);
+        assert_eq!(sums.crcs.len() as u64, sums.data_end.div_ceil(SUM_CHUNK));
+    }
+
+    #[test]
+    fn verify_archive_detects_member_region_bit_flip() {
+        let dir = tmpdir("verify");
+        let path = dir.join("v.cioar");
+        let mut w = Writer::create(&path).unwrap();
+        w.add("m", &vec![9u8; 20_000], Compression::None).unwrap();
+        w.finish().unwrap();
+        assert_eq!(verify_archive(&path).unwrap(), Verification::Verified);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[5_000] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = verify_archive(&path).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn verify_span_checks_only_fully_covered_chunks() {
+        let dir = tmpdir("span");
+        let path = dir.join("sp.cioar");
+        let data: Vec<u8> = (0..3 * SUM_CHUNK as usize + 100).map(|i| (i % 250) as u8).collect();
+        let mut w = Writer::create(&path).unwrap();
+        w.add("m", &data, Compression::None).unwrap();
+        w.finish().unwrap();
+        let r = Reader::open(&path).unwrap();
+        let sums = r.chunk_sums().unwrap().unwrap();
+        let file = std::fs::read(&path).unwrap();
+        // Whole file (incl. index/trailer tail beyond data_end) verifies.
+        sums.verify_span(0, &file).unwrap();
+        // A chunk-aligned interior span verifies on its own.
+        let (lo, hi) = (SUM_CHUNK as usize, 3 * SUM_CHUNK as usize);
+        sums.verify_span(lo as u64, &file[lo..hi]).unwrap();
+        // A span covering through data_end verifies the short tail chunk.
+        sums.verify_span(lo as u64, &file[lo..]).unwrap();
+        // A partially-covering span checks nothing — no false alarms.
+        sums.verify_span(lo as u64 + 1, &file[lo + 1..hi - 1]).unwrap();
+        // A flipped byte inside a covered chunk is caught.
+        let mut bad = file[lo..hi].to_vec();
+        bad[10] ^= 0xFF;
+        let err = sums.verify_span(lo as u64, &bad).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn legacy_sink_archives_verify_unchecked() {
+        // A generic-sink writer (no path) emits no sums member; readers
+        // and the verifier treat it as a legacy archive.
+        let dir = tmpdir("legacy");
+        let path = dir.join("l.cioar");
+        let f = std::fs::File::create(&path).unwrap();
+        let mut w = Writer::new(std::io::BufWriter::new(f)).unwrap();
+        w.add("m", b"old-format", Compression::None).unwrap();
+        w.finish().unwrap();
+        let r = Reader::open(&path).unwrap();
+        assert!(r.chunk_sums().unwrap().is_none());
+        assert_eq!(verify_archive(&path).unwrap(), Verification::Unchecked);
     }
 
     #[test]

@@ -29,11 +29,27 @@
 //! the producing group serves *every* cross-group fill of its archive;
 //! with routing it must serve strictly fewer once a second replica
 //! exists.
+//!
+//! **Liveness leases (PR 8).** The health ledger above learns about a
+//! dead source one failed fill at a time — each discovery costs a reader
+//! a blown deadline. A *lease* inverts that: a peer-lifecycle monitor
+//! pings each serving peer on an interval and calls
+//! [`RetentionDirectory::renew_lease`] on success; when
+//! [`RetentionDirectory::expire_overdue`] finds a lease past its TTL it
+//! withdraws **all** of that group's advertised retention in one sweep
+//! (the same `record_stale` bookkeeping, batched) and bars the group from
+//! routing *and* last-resort probes until the lease is renewed. A
+//! hard-killed peer therefore stops being routed within one lease
+//! interval, and after the sweep no reader burns a per-fill deadline
+//! discovering the corpse. Groups without a lease (the common
+//! shared-filesystem deployment) are unaffected — leases gate only the
+//! groups that have ever held one.
 
 use crate::cio::fault::RetryPolicy;
 use crate::cio::placement::group_torus_distance;
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 /// Per-source circuit-breaker state (PR 6). A consecutive-failure streak
 /// trips the quarantine; [`RetentionDirectory::note_fill_success`] fills
@@ -73,6 +89,13 @@ struct DirInner {
     /// Total quarantine trips (re-trips from a failed probation probe
     /// included).
     quarantine_trips: u64,
+    /// source group → when its liveness lease runs out.
+    leases: BTreeMap<u32, Instant>,
+    /// Groups whose lease expired and has not been renewed since —
+    /// excluded from routing and probes absolutely.
+    expired: BTreeSet<u32>,
+    /// Total lease expirations (a flapping peer re-counts).
+    lease_expirations: u64,
 }
 
 impl DirInner {
@@ -131,7 +154,23 @@ impl DirInner {
     }
 
     fn excluded(&self, group: u32) -> bool {
-        self.health.get(&group).is_some_and(|h| h.quarantined && !h.probation)
+        self.expired.contains(&group)
+            || self.health.get(&group).is_some_and(|h| h.quarantined && !h.probation)
+    }
+
+    /// Withdraw every retention entry `group` advertises, counting each
+    /// as a stale withdrawal (the lease sweep is `record_stale` batched
+    /// over a dead peer's whole advertisement).
+    fn withdraw_all(&mut self, group: u32) -> u64 {
+        let mut pulled = 0;
+        self.sources.retain(|_, set| {
+            if set.remove(&group) {
+                pulled += 1;
+            }
+            !set.is_empty()
+        });
+        self.stale_withdrawals += pulled;
+        pulled
     }
 
     fn on_probation(&self, group: u32) -> bool {
@@ -250,7 +289,10 @@ impl RetentionDirectory {
     /// producer-fallback gate: a freshly tripped producer stops eating a
     /// full deadline on every fill, but once its probation clock matures
     /// (enough successful fills elsewhere) it is probe-eligible again,
-    /// so the breaker can still close through the fallback path.
+    /// so the breaker can still close through the fallback path. A group
+    /// whose liveness lease has expired is never probe-eligible — there
+    /// is no peer behind the address to answer — until a renewed lease
+    /// revives it.
     pub fn probe_allowed(&self, group: u32) -> bool {
         !self.inner.lock().unwrap().excluded(group)
     }
@@ -269,6 +311,50 @@ impl RetentionDirectory {
     /// How many stale entries pulls have withdrawn so far.
     pub fn stale_withdrawals(&self) -> u64 {
         self.inner.lock().unwrap().stale_withdrawals
+    }
+
+    /// Record a successful liveness probe of `group`: its lease now runs
+    /// `ttl` from this instant, and an expired group is revived (its
+    /// future publishes route again). Only groups that have ever held a
+    /// lease are subject to expiry — calling this opts the group into
+    /// the lease regime.
+    pub fn renew_lease(&self, group: u32, ttl: Duration) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.leases.insert(group, Instant::now() + ttl);
+        inner.expired.remove(&group);
+    }
+
+    /// Sweep the lease table: every group whose lease is past due has
+    /// **all** of its advertised retention withdrawn in one step (each
+    /// entry counted as a stale withdrawal) and is barred from routing
+    /// and last-resort probes until [`RetentionDirectory::renew_lease`]
+    /// revives it. Returns the groups expired by *this* sweep.
+    pub fn expire_overdue(&self) -> Vec<u32> {
+        let now = Instant::now();
+        let mut inner = self.inner.lock().unwrap();
+        let overdue: Vec<u32> = inner
+            .leases
+            .iter()
+            .filter(|(_, &deadline)| deadline < now)
+            .map(|(&g, _)| g)
+            .collect();
+        for &g in &overdue {
+            inner.leases.remove(&g);
+            inner.expired.insert(g);
+            inner.lease_expirations += 1;
+            inner.withdraw_all(g);
+        }
+        overdue
+    }
+
+    /// Total liveness-lease expirations so far.
+    pub fn lease_expirations(&self) -> u64 {
+        self.inner.lock().unwrap().lease_expirations
+    }
+
+    /// Groups currently barred because their lease expired, ascending.
+    pub fn expired_peers(&self) -> Vec<u32> {
+        self.inner.lock().unwrap().expired.iter().copied().collect()
     }
 
     /// Groups currently listed as retaining `archive`, ascending.
@@ -541,6 +627,34 @@ mod tests {
             assert!(!open.record_failure(1));
         }
         assert!(!open.is_quarantined(1));
+    }
+
+    #[test]
+    fn expired_lease_withdraws_everything_and_bars_probes() {
+        let d = RetentionDirectory::new(4);
+        d.publish("a.cioar", 1);
+        d.publish("b.cioar", 1);
+        d.publish("b.cioar", 2);
+        // Group 2 never opts into the lease regime: unaffected throughout.
+        d.renew_lease(1, Duration::from_millis(0));
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(d.expire_overdue(), vec![1], "overdue lease expires");
+        assert_eq!(d.lease_expirations(), 1);
+        assert_eq!(d.expired_peers(), vec![1]);
+        assert!(d.sources("a.cioar").is_empty(), "all of group 1's entries withdrawn");
+        assert_eq!(d.sources("b.cioar"), vec![2], "other groups' entries survive");
+        assert_eq!(d.stale_withdrawals(), 2, "the sweep reuses the stale bookkeeping");
+        assert!(!d.probe_allowed(1), "no last-resort probes at a dead address");
+        assert!(d.probe_allowed(2));
+        // Even a re-publish (e.g. a racing manifest load) does not route
+        // the dead peer back in while the lease is expired.
+        d.publish("a.cioar", 1);
+        assert!(d.route("a.cioar", 0).is_empty());
+        // Renewal revives it in one step.
+        d.renew_lease(1, Duration::from_secs(60));
+        assert!(d.probe_allowed(1));
+        assert_eq!(d.route("a.cioar", 0), vec![1]);
+        assert_eq!(d.expire_overdue(), Vec::<u32>::new(), "fresh lease does not expire");
     }
 
     #[test]

@@ -566,6 +566,113 @@ pub fn estimate_served_read(
     }
 }
 
+/// The PR-8 hedged-fill cost model: what a second, delayed GFS fetch
+/// racing a straggling primary fill buys the tail, and what it costs the
+/// central store. Two-point latency mix — a fraction `straggler_rate` of
+/// cold fills run `slowdown`× the fault-free routed time (a loaded
+/// source, a slow link), the rest run at it — because the hedge's value
+/// lives entirely in that mass split: the fast mass must not launch
+/// hedges (wasted GFS load), the slow mass must beat the straggler with
+/// `hedge_delay + gfs_miss`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HedgedReadModel {
+    /// The fault-free routed geometry this extends.
+    pub base: RoutedReadModel,
+    /// Expected cold-fill seconds without hedging.
+    pub unhedged_mean_s: f64,
+    /// Expected cold-fill seconds with the hedge armed.
+    pub hedged_mean_s: f64,
+    /// Straggler-tail seconds without hedging (the p99 proxy whenever
+    /// `straggler_rate` ≥ 0.01).
+    pub unhedged_tail_s: f64,
+    /// Straggler-tail seconds with the hedge armed: the straggler now
+    /// races `hedge_delay + gfs_miss`.
+    pub hedged_tail_s: f64,
+    /// Fraction of cold fills that launch a hedge — each one is an extra
+    /// GFS fetch, so this is also the central-store load the hedge adds.
+    pub hedge_rate: f64,
+}
+
+impl HedgedReadModel {
+    /// Tail shrink factor (>1 when the hedge helps). The perf gate
+    /// asserts the measured hedged p99 stays below the unhedged p99
+    /// whenever this bound predicts a win.
+    pub fn tail_speedup(&self) -> f64 {
+        self.unhedged_tail_s / self.hedged_tail_s
+    }
+}
+
+/// Estimate the hedged-fill envelope (see [`HedgedReadModel`]). The
+/// fault-free geometry comes from [`estimate_routed_read`]; the hedge
+/// fires on any fill still pending after `policy.hedge_delay_ms` and
+/// completes at `delay + gfs_miss` (first landing wins, per the fill
+/// latch). `hedge_delay_ms` = 0 disables hedging — the model collapses
+/// to the unhedged numbers with a zero hedge rate.
+#[allow(clippy::too_many_arguments)]
+pub fn estimate_hedged_read(
+    cfg: &ClusterConfig,
+    archive_bytes: u64,
+    read_bytes: u64,
+    nearest_hops: u32,
+    producer_hops: u32,
+    sources: u32,
+    readers: u32,
+    straggler_rate: f64,
+    slowdown: f64,
+    policy: &RetryPolicy,
+) -> HedgedReadModel {
+    assert!((0.0..1.0).contains(&straggler_rate), "straggler rate must be in [0, 1)");
+    assert!(slowdown >= 1.0, "a straggler is at best as fast as the fault-free fill");
+    let base = estimate_routed_read(
+        cfg,
+        archive_bytes,
+        read_bytes,
+        nearest_hops,
+        producer_hops,
+        sources,
+        readers,
+    );
+    let fast_s = base.routed_neighbor_s;
+    let slow_s = fast_s * slowdown;
+    let p = straggler_rate;
+    let unhedged_mean_s = (1.0 - p) * fast_s + p * slow_s;
+    if policy.hedge_delay_ms == 0 {
+        return HedgedReadModel {
+            base,
+            unhedged_mean_s,
+            hedged_mean_s: unhedged_mean_s,
+            unhedged_tail_s: slow_s,
+            hedged_tail_s: slow_s,
+            hedge_rate: 0.0,
+        };
+    }
+    let delay_s = policy.hedge_delay_ms as f64 / 1e3;
+    let hedge_done_s = delay_s + base.base.gfs_miss_s;
+    // Each latency mass either finishes before the delay (no hedge) or
+    // races the hedged GFS fetch.
+    let mut hedge_rate = 0.0;
+    let fast_hedged_s = if fast_s <= delay_s {
+        fast_s
+    } else {
+        hedge_rate += 1.0 - p;
+        fast_s.min(hedge_done_s)
+    };
+    let slow_hedged_s = if slow_s <= delay_s {
+        slow_s
+    } else {
+        hedge_rate += p;
+        slow_s.min(hedge_done_s)
+    };
+    HedgedReadModel {
+        base,
+        unhedged_mean_s,
+        hedged_mean_s: (1.0 - p) * fast_hedged_s + p * slow_hedged_s,
+        unhedged_tail_s: slow_s,
+        hedged_tail_s: slow_hedged_s,
+        hedge_rate,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -838,6 +945,41 @@ mod tests {
             assert!(m.saturation_rps <= s as f64 / m.lock_s + 1e-6);
             assert!((0.0..=1.0).contains(&m.utilization));
         }
+    }
+
+    #[test]
+    fn hedged_read_model_trims_the_tail_not_the_fast_path() {
+        let cfg = ClusterConfig::bgp(4096);
+        // Disabled hedge: the model must collapse exactly onto the
+        // unhedged mix — no phantom GFS load, no phantom speedup.
+        let off = RetryPolicy { hedge_delay_ms: 0, ..RetryPolicy::default() };
+        let base = estimate_hedged_read(&cfg, mib(100), kib(64), 1, 2, 3, 9, 0.05, 10.0, &off);
+        assert_eq!(base.hedge_rate, 0.0);
+        assert!((base.hedged_mean_s - base.unhedged_mean_s).abs() < 1e-12, "{base:?}");
+        assert!((base.tail_speedup() - 1.0).abs() < 1e-12);
+        assert!(base.unhedged_tail_s > base.base.routed_neighbor_s, "stragglers are slower");
+
+        // Arm the hedge just past the fault-free fill time: the fast
+        // mass never launches one (no wasted GFS fetches), only the
+        // straggler mass races `delay + gfs_miss`.
+        let fast_s = base.base.routed_neighbor_s;
+        let delay_ms = (fast_s * 1.2 * 1e3).ceil() as u64 + 1;
+        let armed = RetryPolicy { hedge_delay_ms: delay_ms, ..RetryPolicy::default() };
+        let hedged = estimate_hedged_read(&cfg, mib(100), kib(64), 1, 2, 3, 9, 0.05, 10.0, &armed);
+        assert!((hedged.hedge_rate - 0.05).abs() < 1e-9, "only stragglers hedge: {hedged:?}");
+        assert!(hedged.hedged_tail_s <= hedged.unhedged_tail_s);
+        assert!(hedged.hedged_mean_s <= hedged.unhedged_mean_s + 1e-12);
+        // When the hedge completion actually beats a 10x straggler, the
+        // tail must shrink — the relation the perf_micro gate measures.
+        if delay_ms as f64 / 1e3 + hedged.base.base.gfs_miss_s < hedged.unhedged_tail_s {
+            assert!(hedged.tail_speedup() > 1.0, "{hedged:?}");
+        }
+
+        // An over-eager delay hedges (nearly) every fill: the full cold
+        // mass lands on the central store a second time.
+        let eager = RetryPolicy { hedge_delay_ms: 1, ..RetryPolicy::default() };
+        let all_in = estimate_hedged_read(&cfg, mib(100), kib(64), 1, 2, 3, 9, 0.05, 10.0, &eager);
+        assert!(all_in.hedge_rate > 0.99 && all_in.hedge_rate <= 1.0 + 1e-12, "{all_in:?}");
     }
 
     #[test]

@@ -74,6 +74,27 @@ pub fn chunk_count(total: u64, chunk_bytes: u64) -> u64 {
     total.div_ceil(chunk_bytes)
 }
 
+/// Indices of the chunks *fully contained* in the byte range
+/// `[start, end)` — the dual of [`chunk_cover`], which returns every
+/// chunk the range *touches*. The verification layer checks exactly
+/// these against the archive's per-chunk checksum table: an edge chunk
+/// only partially inside the range cannot be hashed yet, so it is left
+/// to whichever transfer completes it. An empty or sub-chunk range
+/// contains no whole chunk.
+pub fn chunks_within(start: u64, end: u64, chunk_bytes: u64) -> Range<u64> {
+    assert!(chunk_bytes > 0, "chunk size must be positive");
+    if end <= start {
+        let c = start / chunk_bytes;
+        return c..c;
+    }
+    let first = start.div_ceil(chunk_bytes);
+    let last = end / chunk_bytes;
+    if last <= first {
+        return first..first;
+    }
+    first..last
+}
+
 /// Coalesce sorted chunk indices into maximal contiguous runs — a
 /// claimer fetches each run with one range read instead of one IO per
 /// chunk.
@@ -310,6 +331,27 @@ mod tests {
         assert_eq!(chunk_count(9, 4), 3);
         assert_eq!(chunk_span(2, 4, 10), 8..10, "tail chunk is short");
         assert_eq!(chunk_span(5, 4, 10), 10..10, "past-EOF chunk is empty");
+    }
+
+    #[test]
+    fn within_math_is_exact() {
+        // Whole chunks fully inside the range, edges excluded.
+        assert_eq!(chunks_within(0, 12, 4), 0..3);
+        assert_eq!(chunks_within(1, 12, 4), 1..3, "leading edge chunk excluded");
+        assert_eq!(chunks_within(0, 11, 4), 0..2, "trailing edge chunk excluded");
+        assert_eq!(chunks_within(5, 7, 4), 2..2, "sub-chunk range holds none");
+        assert_eq!(chunks_within(4, 8, 4), 1..2);
+        assert_eq!(chunks_within(8, 8, 4), 2..2, "empty range");
+        assert_eq!(chunks_within(9, 3, 4), 2..2, "inverted range");
+        // Every chunk within is also covered (dual of chunk_cover).
+        for (s, e) in [(0u64, 37u64), (3, 29), (8, 8), (15, 16)] {
+            let within = chunks_within(s, e, 4);
+            let cover = chunk_cover(s, e.saturating_sub(s), 4);
+            assert!(
+                within.start >= cover.start && within.end <= cover.end,
+                "[{s},{e}): within {within:?} vs cover {cover:?}"
+            );
+        }
     }
 
     #[test]

@@ -15,9 +15,11 @@
 //!   *production* retry/re-route/quarantine code rather than simulating
 //!   failures with ad-hoc `unlink` tricks. Actions: inject an IO error,
 //!   sleep a fixed delay (to blow a source deadline), truncate the
-//!   operation after N bytes (a torn transfer), or report `ENOSPC` (a
-//!   full staging tree). Rules fire always, a bounded number of times, or
-//!   every Nth matching operation — all deterministic, no randomness.
+//!   operation after N bytes (a torn transfer), report `ENOSPC` (a
+//!   full staging tree), or silently flip a byte of the moved stream (a
+//!   corrupting replica the checksum layer must catch). Rules fire
+//!   always, a bounded number of times, or every Nth matching
+//!   operation — all deterministic, no randomness.
 //! * [`RetryPolicy`] — bounded attempts with exponential backoff and
 //!   deterministic jitter derived from an injected seed (splitmix64 of
 //!   `(seed, attempt)`, never the wall clock), plus the per-source probe
@@ -71,6 +73,13 @@ pub enum FaultAction {
     /// Fail with `ENOSPC` — flips the group into degraded GFS-direct
     /// serving.
     Enospc,
+    /// Let the operation proceed but flip one byte at the given offset
+    /// of the moved byte stream (deterministic bit-flip, XOR `0xFF`) — a
+    /// silently corrupting source or wire the *receiver* must detect via
+    /// checksums (the PR-8 verification layer) and re-route around. The
+    /// offset is interpreted relative to the operation's byte stream and
+    /// clamped to its length; fires on `Read`/`Serve`/copy op classes.
+    CorruptRange(u64),
 }
 
 /// How often a rule fires once matched.
@@ -119,6 +128,10 @@ pub enum FaultVerdict {
     Fail(std::io::Error),
     /// Perform only the first N bytes, then fail as a torn transfer.
     Truncate(u64),
+    /// Perform the operation but flip the byte at this stream offset
+    /// (clamped to the stream length) — the operation "succeeds" with
+    /// silently wrong bytes that only checksum verification catches.
+    Corrupt(u64),
 }
 
 /// A failpoint registry: rules keyed by operation class and path
@@ -208,8 +221,20 @@ impl FaultInjector {
             }
             FaultAction::TruncateAfter(n) => FaultVerdict::Truncate(n),
             FaultAction::Enospc => FaultVerdict::Fail(std::io::Error::from_raw_os_error(ENOSPC)),
+            FaultAction::CorruptRange(off) => FaultVerdict::Corrupt(off),
         }
     }
+}
+
+/// Flip one byte of `buf` at `offset` (clamped into the buffer) — the
+/// canonical realization of a [`FaultVerdict::Corrupt`] verdict on an
+/// in-memory byte stream. A no-op on an empty buffer.
+pub fn corrupt_buffer(buf: &mut [u8], offset: u64) {
+    if buf.is_empty() {
+        return;
+    }
+    let idx = (offset as usize).min(buf.len() - 1);
+    buf[idx] ^= 0xFF;
 }
 
 /// Is this error a full/read-only staging tree (`ENOSPC`/`EROFS`)? These
@@ -238,6 +263,14 @@ pub fn is_timeout(err: &anyhow::Error) -> bool {
         c.downcast_ref::<std::io::Error>()
             .is_some_and(|io| io.kind() == std::io::ErrorKind::TimedOut)
     })
+}
+
+/// Did checksum verification reject this error's bytes somewhere in the
+/// chain? Corruption is carried explicitly on [`FillError`] (there is no
+/// `io::Error` kind for it) so call sites can count `corruption_detected`
+/// and charge the offending source without string-matching.
+pub fn is_corrupt(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| c.downcast_ref::<FillError>().is_some_and(|fe| fe.corrupt))
 }
 
 /// Is this error worth retrying? `NotFound` is permanent (the canonical
@@ -303,6 +336,12 @@ pub struct FillError {
     /// an `io::Error` to the caller — still counts a deadline abort
     /// through [`is_timeout`].
     pub timeout: bool,
+    /// Did checksum verification reject the received bytes? A corrupt
+    /// fetch is always retryable — the canonical copy is intact, only
+    /// this transfer (or this source's replica) is damaged — and feeds
+    /// the same retry → re-route → quarantine chain as a failing source,
+    /// so a bit-flipping replica is excluded exactly like a dead one.
+    pub corrupt: bool,
     /// Human-readable cause chain.
     pub msg: String,
 }
@@ -316,6 +355,7 @@ impl FillError {
             retryable: is_retryable(err),
             storage: is_storage_full(err),
             timeout: is_timeout(err),
+            corrupt: is_corrupt(err),
             msg: format!("{err:#}"),
         }
     }
@@ -328,7 +368,24 @@ impl FillError {
             retryable: false,
             storage: true,
             timeout: false,
+            corrupt: false,
             msg: format!("{err:#}"),
+        }
+    }
+
+    /// A checksum mismatch on bytes received from one tier. Always
+    /// retryable: the canonical copy is intact, only this transfer (or
+    /// this source's replica) is damaged, so the retry → re-route →
+    /// quarantine chain handles it like any other probe failure.
+    pub fn corruption(tier: FillTier, source: Option<u32>, msg: String) -> FillError {
+        FillError {
+            tier,
+            source,
+            retryable: true,
+            storage: false,
+            timeout: false,
+            corrupt: true,
+            msg,
         }
     }
 }
@@ -381,6 +438,12 @@ pub struct RetryPolicy {
     /// Successful fills *elsewhere* before a quarantined source is put
     /// on probation (half-open: eligible for one re-probe).
     pub probation_fills: u32,
+    /// Delay in milliseconds before a *waiter* on an in-flight fill that
+    /// has already failed once launches a hedged second fill straight
+    /// from GFS (first success wins through the singleflight latch). `0`
+    /// disables hedging; the placement policy derives an enabled value
+    /// from the source deadline.
+    pub hedge_delay_ms: u64,
 }
 
 impl Default for RetryPolicy {
@@ -393,6 +456,7 @@ impl Default for RetryPolicy {
             source_deadline_ms: 2_000,
             quarantine_streak: 3,
             probation_fills: 4,
+            hedge_delay_ms: 0,
         }
     }
 }

@@ -45,7 +45,7 @@
 use crate::cio::archive::{Compression, Writer};
 use crate::cio::collector::{CollectorStats, FlushReason, Policy};
 use crate::cio::distributor::TreeShape;
-use crate::cio::fault::{FaultInjector, FaultVerdict, OpClass};
+use crate::cio::fault::{corrupt_buffer, FaultInjector, FaultVerdict, OpClass};
 use crate::cio::local_stage::GroupCache;
 use crate::util::units::SimTime;
 use anyhow::{Context, Result};
@@ -126,14 +126,15 @@ pub fn publish_copy_deadline_with(
     // The clock starts before the failpoint: an injected Delay stands in
     // for a hung store, so it must count against the deadline.
     let start = Instant::now();
-    match fault_verdict(faults, OpClass::PublishCopy, dst) {
-        FaultVerdict::Proceed => {}
+    let mut corrupt_at = match fault_verdict(faults, OpClass::PublishCopy, dst) {
+        FaultVerdict::Proceed => None,
         FaultVerdict::Fail(e) => {
             return Err(anyhow::Error::from(e)
                 .context(format!("copy-publishing {}", dst.display())));
         }
         FaultVerdict::Truncate(n) => return Err(torn_transfer(OpClass::PublishCopy, dst, n)),
-    }
+        FaultVerdict::Corrupt(off) => Some(off),
+    };
     let dir = dst.parent().context("publish destination has no parent")?;
     let name = dst
         .file_name()
@@ -175,6 +176,16 @@ pub fn publish_copy_deadline_with(
                     .context(format!("copying {} to {}", src.display(), tmp.display())));
             }
         };
+        // An injected corruption flips one byte of the stream in flight —
+        // the copy "succeeds" with silently wrong bytes the checksum
+        // layer must catch. An offset past the stream is a no-op.
+        if let Some(off) = corrupt_at {
+            if off < bytes + n as u64 {
+                let idx = off.saturating_sub(bytes) as usize;
+                buf[idx] ^= 0xFF;
+                corrupt_at = None;
+            }
+        }
         if let Err(e) = writer.write_all(&buf[..n]) {
             drop(writer);
             let _ = std::fs::remove_file(&tmp);
@@ -218,6 +229,36 @@ pub fn publish_link_with(faults: Option<&FaultInjector>, src: &Path, dst: &Path)
                 .context(format!("link-publishing {}", dst.display())));
         }
         FaultVerdict::Truncate(n) => return Err(torn_transfer(OpClass::PublishLink, dst, n)),
+        // A hard link cannot alter bytes (it shares the inode), so a
+        // corrupting "link" degrades to a corrupting private copy — the
+        // on-disk stand-in for a replica whose bytes differ from the
+        // canonical archive.
+        FaultVerdict::Corrupt(off) => {
+            let dir = dst.parent().context("publish destination has no parent")?;
+            let name = dst
+                .file_name()
+                .and_then(|n| n.to_str())
+                .context("publish destination has no utf8 file name")?;
+            let tmp = dir.join(format!(
+                "{TMP_PREFIX}{}-{}-{name}",
+                std::process::id(),
+                TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+            ));
+            let mut data = std::fs::read(src)
+                .with_context(|| format!("reading {} for a corrupting copy", src.display()))?;
+            corrupt_buffer(&mut data, off);
+            let bytes = data.len() as u64;
+            if let Err(e) = std::fs::write(&tmp, data) {
+                let _ = std::fs::remove_file(&tmp);
+                return Err(anyhow::Error::from(e).context("writing corrupting-copy temp"));
+            }
+            if let Err(e) = std::fs::rename(&tmp, dst) {
+                let _ = std::fs::remove_file(&tmp);
+                return Err(anyhow::Error::from(e)
+                    .context(format!("publishing link {} into place", dst.display())));
+            }
+            return Ok(bytes);
+        }
     }
     let dir = dst.parent().context("publish destination has no parent")?;
     let name = dst
@@ -268,20 +309,26 @@ pub fn read_range_with(
     len: usize,
 ) -> Result<Vec<u8>> {
     use std::io::{Read, Seek, SeekFrom};
-    match fault_verdict(faults, OpClass::Read, path) {
-        FaultVerdict::Proceed => {}
+    let corrupt = match fault_verdict(faults, OpClass::Read, path) {
+        FaultVerdict::Proceed => None,
         FaultVerdict::Fail(e) => {
             return Err(anyhow::Error::from(e)
                 .context(format!("range read [{offset}, +{len}) of {}", path.display())));
         }
         FaultVerdict::Truncate(n) => return Err(torn_transfer(OpClass::Read, path, n)),
-    }
+        FaultVerdict::Corrupt(off) => Some(off),
+    };
     let mut f = std::fs::File::open(path)
         .with_context(|| format!("opening {} for a range read", path.display()))?;
     f.seek(SeekFrom::Start(offset))?;
     let mut out = vec![0u8; len];
     f.read_exact(&mut out)
         .with_context(|| format!("range read [{offset}, +{len}) of {}", path.display()))?;
+    // Injected corruption: the read "succeeds" with one flipped byte
+    // (offset relative to the returned range) — only checksums catch it.
+    if let Some(off) = corrupt {
+        corrupt_buffer(&mut out, off);
+    }
     Ok(out)
 }
 
@@ -306,6 +353,8 @@ pub fn write_range_at_with(
     data: &[u8],
 ) -> Result<()> {
     use std::io::{Seek, SeekFrom, Write as IoWrite};
+    let mut corrupted;
+    let mut data = data;
     let torn = match fault_verdict(faults, OpClass::Write, path) {
         FaultVerdict::Proceed => None,
         FaultVerdict::Fail(e) => {
@@ -316,6 +365,14 @@ pub fn write_range_at_with(
             )));
         }
         FaultVerdict::Truncate(n) => Some((n as usize).min(data.len())),
+        // The write "succeeds" with one flipped byte landing on disk —
+        // retained-file bit rot the scrubber must find and repair.
+        FaultVerdict::Corrupt(off) => {
+            corrupted = data.to_vec();
+            corrupt_buffer(&mut corrupted, off);
+            data = &corrupted;
+            None
+        }
     };
     let mut f = std::fs::OpenOptions::new()
         .write(true)
@@ -350,6 +407,8 @@ pub fn create_sparse_with(faults: Option<&FaultInjector>, path: &Path, len: u64)
                 .context(format!("creating sparse staging file {}", path.display())));
         }
         FaultVerdict::Truncate(n) => return Err(torn_transfer(OpClass::Write, path, n)),
+        // A fresh sparse file is all zeros — nothing to corrupt yet.
+        FaultVerdict::Corrupt(_) => {}
     }
     let f = std::fs::File::create(path)
         .with_context(|| format!("creating sparse staging file {}", path.display()))?;

@@ -148,6 +148,39 @@
 //!   resolve re-probes with a real staging write — the first probe
 //!   that succeeds lifts the mode. Data is never lost: the GFS copy is
 //!   canonical before retention ever happens.
+//! * **Integrity (PR 8).** Archives carry a hidden per-chunk checksum
+//!   table ([`crate::cio::archive::ChunkSums`]); every transfer on the
+//!   fill path is verified on arrival. A whole-archive fill re-verifies
+//!   the landed file before accounting it ([`verify_archive`]): a
+//!   mismatch unlinks the copy, counts
+//!   [`CacheSnapshot::corruption_detected`], and surfaces as a
+//!   retryable `FillError { corrupt: true }` — a corrupt sibling/peer
+//!   probe is charged and re-routed exactly like a failing one (a
+//!   bit-flipping source quarantines through the same breaker), a
+//!   corrupt GFS copy is re-fetched by the retry loop. Chunk fetches
+//!   verify each span against the table loaded from the **canonical
+//!   GFS copy** (never from the unverified channel) before the bytes
+//!   enter the staging file, so a reader can never observe wrong
+//!   bytes. Warm hits are not re-verified (the landed copy was) —
+//!   verification costs only on fills; [`GroupCache::scrub`]
+//!   re-verifies retained archives in the background and repairs
+//!   bit-rot from GFS ([`CacheSnapshot::scrub_repairs`]).
+//! * **Hedged fills (PR 8).** When [`RetryPolicy::hedge_delay_ms`] is
+//!   non-zero, a waiter still blocked on another thread's fill after
+//!   that delay launches one hedged GFS fetch of its own
+//!   ([`CacheSnapshot::hedged_fills`]); first success wins the latch
+//!   ([`CacheSnapshot::hedge_wins`]) and the loser's landing is a
+//!   harmless idempotent re-account — tail latency of a slow source is
+//!   bounded by the hedge, never by the slowest probe chain. Off by
+//!   default (zero delay) — [`PlacementPolicy::retry_policy`] derives
+//!   a delay from the per-source deadline.
+//! * **Peer liveness (PR 8).** A [`PeerMonitor`] pings each registered
+//!   peer transport on a heartbeat and renews its lease in the shared
+//!   [`RetentionDirectory`]; a peer that misses its lease has *all* its
+//!   advertised retention withdrawn in one step and is barred from
+//!   routing until it answers again — so a hard-killed runner stops
+//!   costing per-fill deadline burns within one lease interval
+//!   ([`RetentionDirectory::lease_expirations`]).
 //!
 //! # Serving tier (PR-7)
 //!
@@ -187,7 +220,7 @@
 //! the `fig17` bench sweeps the hit/routed/producer/miss mix over
 //! `cn_per_ifs`.
 
-use crate::cio::archive::{Compression, Reader};
+use crate::cio::archive::{verify_archive, ChunkSums, Compression, Reader};
 use crate::cio::collector::{CollectorStats, Policy};
 use crate::cio::directory::RetentionDirectory;
 use crate::cio::extent::{chunk_runs, ExtentMap};
@@ -210,7 +243,7 @@ use std::hash::{Hash, Hasher};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Prefix of in-flight partial (chunked) staging files in a group's data
 /// dir. Retention scans, manifests, and `stage_artifact_matches` never
@@ -318,6 +351,41 @@ pub struct CacheSnapshot {
     /// [`RetryPolicy::source_deadline_ms`]; their data was discarded and
     /// the fill re-routed to the next candidate.
     pub deadline_aborts: u64,
+    /// Checksum mismatches caught on arrival (whole-archive fill
+    /// verification, chunk-span verification, or a scrub finding
+    /// bit-rot in a retained copy). Each one was discarded and
+    /// re-fetched / re-routed — corruption never reaches a reader.
+    pub corruption_detected: u64,
+    /// Retained archives a [`GroupCache::scrub`] pass found corrupt and
+    /// successfully repaired from the canonical GFS copy.
+    pub scrub_repairs: u64,
+    /// Hedged second fills launched by waiters whose primary fill was
+    /// still pending after [`RetryPolicy::hedge_delay_ms`].
+    pub hedged_fills: u64,
+    /// The subset of `hedged_fills` that resolved the latch first (the
+    /// hedge beat the primary fill).
+    pub hedge_wins: u64,
+}
+
+/// What one [`GroupCache::scrub`] pass did (PR 8): background
+/// re-verification of retained archives against their chunk-checksum
+/// tables, with repair from the canonical GFS copy.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScrubSummary {
+    /// Retained archives examined (skips entries whose file vanished
+    /// mid-scan — an ordinary eviction race, not corruption).
+    pub scanned: u64,
+    /// Archives whose checksums all matched (or that predate the table
+    /// and have nothing to verify against).
+    pub clean: u64,
+    /// Corrupt archives re-fetched from GFS and re-verified good
+    /// (counted in [`CacheSnapshot::scrub_repairs`] too).
+    pub repaired: u64,
+    /// Corrupt archives that could not be repaired (GFS copy gone or
+    /// itself bad): dropped from retention and withdrawn from the
+    /// directory, so readers re-stage from the canonical copy instead
+    /// of ever touching the bad bytes.
+    pub dropped: u64,
 }
 
 /// State of one in-flight cache fill (the singleflight latch).
@@ -340,17 +408,35 @@ enum FillState {
 struct Fill {
     state: Mutex<FillState>,
     cv: Condvar,
+    /// Set by the one waiter that claimed the hedged second fill (PR 8);
+    /// later timeouts see it taken and keep waiting instead of piling
+    /// more hedges onto the same archive.
+    hedge: AtomicBool,
 }
 
 impl Fill {
     fn new() -> Fill {
-        Fill { state: Mutex::new(FillState::Pending), cv: Condvar::new() }
+        Fill {
+            state: Mutex::new(FillState::Pending),
+            cv: Condvar::new(),
+            hedge: AtomicBool::new(false),
+        }
     }
 
-    /// Publish the fill's outcome and wake every waiter.
-    fn publish(&self, state: FillState) {
-        *self.state.lock().unwrap() = state;
-        self.cv.notify_all();
+    /// Publish `state` only if the latch is still pending, waking every
+    /// waiter; returns whether this call won the publish. With hedging,
+    /// primary filler and hedger race to resolve the latch — first
+    /// success wins, and a loser's late `Failed` can never overwrite a
+    /// `Done` that waiters already acted on.
+    fn publish_first(&self, state: FillState) -> bool {
+        let mut s = self.state.lock().unwrap();
+        if matches!(*s, FillState::Pending) {
+            *s = state;
+            self.cv.notify_all();
+            true
+        } else {
+            false
+        }
     }
 
     /// Block until the filler publishes; `Err` carries the typed fill
@@ -363,6 +449,33 @@ impl Fill {
                 FillState::Done(outcome) => return Ok(*outcome),
                 FillState::Failed(err) => return Err(err.clone()),
             }
+        }
+    }
+
+    /// Wait up to `delay` for the filler; if the latch is still pending
+    /// after that, try to claim the (single) hedged fill. `None` means
+    /// this caller claimed it — launch the hedge and then `wait`;
+    /// `Some(result)` is the resolved latch (a later claimer keeps
+    /// waiting indefinitely, like [`Fill::wait`]).
+    fn wait_or_hedge(&self, delay: Duration) -> Option<std::result::Result<CacheOutcome, FillError>> {
+        let deadline = Instant::now() + delay;
+        let mut state = self.state.lock().unwrap();
+        loop {
+            match &*state {
+                FillState::Pending => {}
+                FillState::Done(outcome) => return Some(Ok(*outcome)),
+                FillState::Failed(err) => return Some(Err(err.clone())),
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                if self.hedge.compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire).is_ok() {
+                    return None;
+                }
+                // Someone else is hedging; fall back to a plain wait.
+                state = self.cv.wait(state).unwrap();
+                continue;
+            }
+            state = self.cv.wait_timeout(state, deadline - now).unwrap().0;
         }
     }
 }
@@ -383,6 +496,13 @@ struct Partial {
     /// Index over the partially-resident file, mounted once the trailer
     /// + index extents land ([`Reader::open_indexed_range`]).
     reader: OnceLock<Reader>,
+    /// Per-chunk checksum table loaded lazily from the **canonical GFS
+    /// copy** (never from the unverified transfer channel), used to
+    /// verify every fetched chunk span before it enters the staging
+    /// file. `None` once loading was attempted and the archive carries
+    /// no table (legacy build, or the GFS copy is gone) — then spans are
+    /// accepted unverified, exactly the pre-PR-8 behaviour.
+    sums: OnceLock<Option<ChunkSums>>,
 }
 
 /// What one candidate-source probe did.
@@ -585,6 +705,12 @@ pub struct GroupCache {
     /// Degraded GFS-direct mode: set when the staging tree reports
     /// ENOSPC/EROFS, cleared when a probe write succeeds again.
     degraded: AtomicBool,
+    /// End-to-end integrity verification (PR 8): landed fills are
+    /// re-verified against the archive's chunk-checksum table, fetched
+    /// chunk spans against the table from the canonical GFS copy. On by
+    /// default; [`GroupCache::with_verification`] turns it off (the
+    /// verification-overhead benchmark's baseline).
+    verify: bool,
     /// Fault counters restored from a previous run's manifest (live
     /// counters start at zero on top, like `prior_hits`/`prior_misses`).
     prior_fault: FaultTotals,
@@ -605,6 +731,10 @@ pub struct GroupCache {
     quarantined_sources: AtomicU64,
     degraded_reads: AtomicU64,
     deadline_aborts: AtomicU64,
+    corruption_detected: AtomicU64,
+    scrub_repairs: AtomicU64,
+    hedged_fills: AtomicU64,
+    hedge_wins: AtomicU64,
 }
 
 /// Cumulative fault-path counters as persisted in the manifest `#stats`
@@ -616,6 +746,10 @@ struct FaultTotals {
     quarantined: u64,
     degraded: u64,
     deadline_aborts: u64,
+    corruption: u64,
+    scrub_repairs: u64,
+    hedged: u64,
+    hedge_wins: u64,
 }
 
 impl GroupCache {
@@ -680,6 +814,7 @@ impl GroupCache {
             retry: RetryPolicy::default(),
             faults: None,
             degraded: AtomicBool::new(false),
+            verify: true,
             prior_fault: warm.prior_fault,
             manifest_corrupt: warm.corrupt_lines,
             neighbor_transfers: AtomicU64::new(0),
@@ -697,6 +832,10 @@ impl GroupCache {
             quarantined_sources: AtomicU64::new(0),
             degraded_reads: AtomicU64::new(0),
             deadline_aborts: AtomicU64::new(0),
+            corruption_detected: AtomicU64::new(0),
+            scrub_repairs: AtomicU64::new(0),
+            hedged_fills: AtomicU64::new(0),
+            hedge_wins: AtomicU64::new(0),
         }
     }
 
@@ -715,6 +854,21 @@ impl GroupCache {
     /// mock. Production caches leave this unset.
     pub fn with_faults(mut self, faults: Arc<FaultInjector>) -> GroupCache {
         self.faults = Some(faults);
+        self
+    }
+
+    /// Enable or disable end-to-end fill verification (PR 8; default
+    /// **on**). Landed whole-archive fills are re-verified against the
+    /// archive's hidden chunk-checksum table, fetched chunk spans
+    /// against the table from the canonical GFS copy; a mismatch never
+    /// reaches a reader — it is discarded, counted
+    /// ([`CacheSnapshot::corruption_detected`]), charged to the source,
+    /// and re-fetched through the retry → re-route → quarantine chain.
+    /// Warm hits are never re-verified, so the cost lands only on
+    /// fills; the `verify_overhead` benchmark case gates it. Off is the
+    /// benchmark baseline only — production caches keep it on.
+    pub fn with_verification(mut self, on: bool) -> GroupCache {
+        self.verify = on;
         self
     }
 
@@ -905,6 +1059,54 @@ impl GroupCache {
         }
     }
 
+    /// Verify a just-landed whole-archive fill at `dst` against its own
+    /// chunk-checksum table. A mismatch (or an unopenable file) unlinks
+    /// the copy and counts the detection; archives without a table
+    /// (legacy builds) pass unchecked. `true` iff the copy may be
+    /// accounted and served.
+    fn verify_fill(&self, dst: &std::path::Path) -> bool {
+        if !self.verify {
+            return true;
+        }
+        match verify_archive(dst) {
+            Ok(_) => true,
+            Err(_) => {
+                self.corruption_detected.fetch_add(1, Ordering::Relaxed);
+                let _ = std::fs::remove_file(dst);
+                false
+            }
+        }
+    }
+
+    /// Verify a fetched chunk span of a partial fill against the
+    /// checksum table loaded (once) from the canonical GFS copy. Spans
+    /// are accepted unverified when no table is loadable — the GFS copy
+    /// is gone, predates checksums, or belongs to another build (its
+    /// `data_end` would exceed the staging total). Only fully-covered
+    /// sum chunks are checked ([`ChunkSums::verify_span`]); partially
+    /// covered edges are verified by the transfer that completes them.
+    fn span_verified(
+        &self,
+        gfs_path: &std::path::Path,
+        part: &Partial,
+        span_start: u64,
+        bytes: &[u8],
+    ) -> bool {
+        if !self.verify {
+            return true;
+        }
+        let sums = part.sums.get_or_init(|| {
+            Reader::open(gfs_path)
+                .ok()
+                .and_then(|r| r.chunk_sums().ok().flatten())
+                .filter(|s| s.data_end <= part.total)
+        });
+        match sums {
+            Some(s) => s.verify_span(span_start, bytes).is_ok(),
+            None => true,
+        }
+    }
+
     /// Replay this cache's per-archive read counts into a
     /// [`LearnedPlacement`] — the §7 "learn from the IO patterns of
     /// previous runs" seed. Only currently retained archives are replayed
@@ -1043,7 +1245,31 @@ impl GroupCache {
                 }
             };
             if !filler {
-                match fill.wait() {
+                let waited = if self.retry.hedge_delay_ms > 0 {
+                    match fill.wait_or_hedge(Duration::from_millis(self.retry.hedge_delay_ms)) {
+                        Some(resolved) => resolved,
+                        None => {
+                            // This waiter claimed the hedged second fill
+                            // (PR 8): one bounded GFS fetch racing the
+                            // primary chain. First publish wins the
+                            // latch; if the primary lands too, the later
+                            // landing is an idempotent re-account of the
+                            // same bytes. A failed hedge just falls back
+                            // to waiting — the primary still owns the
+                            // latch and always resolves it.
+                            self.hedged_fills.fetch_add(1, Ordering::Relaxed);
+                            if self.hedge_fill_gfs(&gfs_path, name).is_ok()
+                                && fill.publish_first(FillState::Done(CacheOutcome::GfsMiss))
+                            {
+                                self.hedge_wins.fetch_add(1, Ordering::Relaxed);
+                            }
+                            fill.wait()
+                        }
+                    }
+                } else {
+                    fill.wait()
+                };
+                match waited {
                     Ok(outcome) => {
                         // The filler retained and accounted the archive;
                         // serve the shared copy. An immediate eviction in
@@ -1095,7 +1321,7 @@ impl GroupCache {
                 Ok(outcome) => {
                     match Reader::open(&self.data_dir.join(name)) {
                         Ok(reader) => {
-                            fill.publish(FillState::Done(outcome));
+                            fill.publish_first(FillState::Done(outcome));
                             self.note_read(name);
                             return Ok((reader, outcome));
                         }
@@ -1110,7 +1336,7 @@ impl GroupCache {
                             // (present but unreadable) copy terminates
                             // on the next pass through the fast path,
                             // whose hit-open error propagates.
-                            fill.publish(FillState::Done(outcome));
+                            fill.publish_first(FillState::Done(outcome));
                             continue;
                         }
                     }
@@ -1121,7 +1347,7 @@ impl GroupCache {
                     // degraded serving, this read comes straight from the
                     // canonical GFS copy.
                     if self.note_storage_fault(&e) {
-                        fill.publish(FillState::Failed(FillError::storage(&e)));
+                        fill.publish_first(FillState::Failed(FillError::storage(&e)));
                         self.degraded_reads.fetch_add(1, Ordering::Relaxed);
                         self.note_read(name);
                         return Ok((Reader::open(&gfs_path)?, CacheOutcome::GfsMiss));
@@ -1130,7 +1356,13 @@ impl GroupCache {
                         .downcast_ref::<FillError>()
                         .cloned()
                         .unwrap_or_else(|| FillError::classify(FillTier::Staging, None, &e));
-                    fill.publish(FillState::Failed(err));
+                    if !fill.publish_first(FillState::Failed(err)) {
+                        // A hedged fill resolved the latch while this
+                        // chain was failing: the archive landed after
+                        // all — re-resolve like a waiter instead of
+                        // surfacing a stale error.
+                        continue;
+                    }
                     return Err(e.context(format!("filling archive {name}")));
                 }
             }
@@ -1214,6 +1446,15 @@ impl GroupCache {
                     let _ = std::fs::remove_file(dst);
                     return ProbeOutcome::Failed;
                 }
+            }
+            // Integrity gate (PR 8): a pull that landed in time but
+            // fails its checksum table is exactly as useless as one
+            // that never landed — discard it (verify_fill unlinks and
+            // counts), charge the source (a bit-flipping replica
+            // quarantines like a failing one), and re-route.
+            if !self.verify_fill(dst) {
+                self.charge_source(source);
+                return ProbeOutcome::Failed;
             }
             self.directory.note_fill_success(Some(source));
         }
@@ -1507,6 +1748,19 @@ impl GroupCache {
                     }
                     anyhow::Error::new(fill).context(format!("re-staging archive {name} from GFS"))
                 })?;
+            // Integrity gate (PR 8): a landed copy that fails its
+            // checksum table is discarded (verify_fill unlinks and
+            // counts) and surfaced as a retryable corrupt failure — the
+            // outer retry loop re-fetches, so a transiently corrupting
+            // transfer recovers and a reader never sees wrong bytes.
+            if !self.verify_fill(&dst) {
+                return Err(anyhow::Error::new(FillError::corruption(
+                    FillTier::Gfs,
+                    None,
+                    format!("archive {name} failed checksum verification after GFS re-stage"),
+                ))
+                .context(format!("re-staging archive {name} from GFS")));
+            }
             // GFS is the last resort: a success after failed neighbor
             // probes is a re-routed fill, and it advances every
             // quarantined source's probation clock.
@@ -1536,6 +1790,51 @@ impl GroupCache {
             None => {
                 // Capacity raced below the archive size (possible only via
                 // a concurrent warm-start/clear); keep disk == accounting.
+                let _ = std::fs::remove_file(&dst);
+                anyhow::bail!("archive {name} no longer fits the cache");
+            }
+        }
+    }
+
+    /// The hedged second fill (PR 8): one deadline-bounded, verified
+    /// GFS fetch racing the primary fill chain, launched by a waiter
+    /// whose latch was still pending after
+    /// [`RetryPolicy::hedge_delay_ms`]. Lands atomically and accounts
+    /// exactly like the classic fill — when both land, the later one is
+    /// an idempotent re-account of the same bytes (the transports stage
+    /// to a temp name and rename, so concurrent landings never tear).
+    fn hedge_fill_gfs(&self, gfs_path: &std::path::Path, name: &str) -> Result<()> {
+        let dst = self.data_dir.join(name);
+        self.gfs_transport(gfs_path)
+            .fetch_archive(name, &dst, self.retry.source_deadline())
+            .map_err(|fill| {
+                if fill.timeout {
+                    self.deadline_aborts.fetch_add(1, Ordering::Relaxed);
+                }
+                anyhow::Error::new(fill).context(format!("hedged re-stage of archive {name}"))
+            })?;
+        if !self.verify_fill(&dst) {
+            anyhow::bail!("hedged copy of archive {name} failed checksum verification");
+        }
+        self.gfs_copies.fetch_add(1, Ordering::Relaxed);
+        self.directory.note_fill_success(None);
+        let bytes = std::fs::metadata(&dst)?.len();
+        let mut cache = self.inner.lock(name);
+        match cache.put_evicting(name, bytes) {
+            Some(victims) => {
+                for victim in &victims {
+                    let _ = std::fs::remove_file(self.data_dir.join(victim));
+                    self.directory.withdraw(victim, self.group);
+                }
+                self.directory.publish(name, self.group);
+                drop(cache);
+                // A record reader's partial staging of this archive is
+                // superseded by the complete copy, as in the classic
+                // fill.
+                self.discard_partial(name);
+                Ok(())
+            }
+            None => {
                 let _ = std::fs::remove_file(&dst);
                 anyhow::bail!("archive {name} no longer fits the cache");
             }
@@ -1629,6 +1928,7 @@ impl GroupCache {
             total,
             map: ExtentMap::new(total, self.fill_chunk),
             reader: OnceLock::new(),
+            sums: OnceLock::new(),
         });
         let mut shed: Option<Arc<Partial>> = None;
         let installed = {
@@ -1911,6 +2211,19 @@ impl GroupCache {
                                     continue;
                                 }
                             }
+                            // Integrity gate (PR 8): the span must match
+                            // the checksum table from the canonical GFS
+                            // copy before it may enter the staging file.
+                            // A mismatch discards the bytes, charges the
+                            // source, and falls to the next candidate —
+                            // a bit-flipping replica re-routes (and
+                            // quarantines) like a failing one.
+                            if !self.span_verified(gfs_path, part, span_start, &bytes) {
+                                self.corruption_detected.fetch_add(1, Ordering::Relaxed);
+                                self.charge_source(cand);
+                                run_failed_probes = true;
+                                continue;
+                            }
                             self.directory.note_fill_success(Some(cand));
                             got = Some((bytes, Some(cand)));
                             break;
@@ -1940,6 +2253,25 @@ impl GroupCache {
                                     self.deadline_aborts.fetch_add(1, Ordering::Relaxed);
                                 }
                                 anyhow::Error::new(fe)
+                            })
+                            .and_then(|bytes| {
+                                // Integrity gate (PR 8): a GFS span that
+                                // fails its own checksum table is a
+                                // retryable corrupt failure — the record
+                                // read's retry loop re-fetches it.
+                                if self.span_verified(gfs_path, part, span_start, &bytes) {
+                                    Ok(bytes)
+                                } else {
+                                    self.corruption_detected.fetch_add(1, Ordering::Relaxed);
+                                    Err(anyhow::Error::new(FillError::corruption(
+                                        FillTier::Gfs,
+                                        None,
+                                        format!(
+                                            "chunk span {span_start}..+{n} of archive {name} \
+                                             failed checksum verification"
+                                        ),
+                                    )))
+                                }
                             })
                     } else {
                         Err(anyhow::anyhow!(
@@ -2301,6 +2633,10 @@ impl GroupCache {
             quarantined_sources: self.quarantined_sources.load(Ordering::Relaxed),
             degraded_reads: self.degraded_reads.load(Ordering::Relaxed),
             deadline_aborts: self.deadline_aborts.load(Ordering::Relaxed),
+            corruption_detected: self.corruption_detected.load(Ordering::Relaxed),
+            scrub_repairs: self.scrub_repairs.load(Ordering::Relaxed),
+            hedged_fills: self.hedged_fills.load(Ordering::Relaxed),
+            hedge_wins: self.hedge_wins.load(Ordering::Relaxed),
         }
     }
 
@@ -2372,10 +2708,68 @@ impl GroupCache {
         Ok(())
     }
 
+    /// Background integrity scrub (PR 8): re-verify every retained
+    /// archive against its chunk-checksum table and repair bit-rot from
+    /// the canonical copy in `gfs_dir`. Names are collected under the
+    /// metadata locks but all IO runs outside them, so serving
+    /// continues while the scrub walks. A corrupt copy counts
+    /// [`CacheSnapshot::corruption_detected`] and is re-fetched from
+    /// GFS (atomically replacing the bad file) and re-verified — a good
+    /// repair counts [`CacheSnapshot::scrub_repairs`]; an unrepairable
+    /// one is dropped from retention and withdrawn from the directory,
+    /// so the next read re-stages rather than serving bad bytes.
+    /// Archives without a table verify trivially clean (legacy builds).
+    pub fn scrub(&self, gfs_dir: &std::path::Path) -> ScrubSummary {
+        let names: Vec<String> = {
+            let shards = self.inner.lock_all();
+            shards
+                .iter()
+                .flat_map(|c| c.entries_lru().map(|(n, _)| n.to_string()))
+                .collect()
+        };
+        let mut summary = ScrubSummary::default();
+        for name in names {
+            let path = self.data_dir.join(&name);
+            if !path.is_file() {
+                // Evicted (or cleared) since the name was collected —
+                // nothing retained to verify.
+                continue;
+            }
+            summary.scanned += 1;
+            if verify_archive(&path).is_ok() {
+                summary.clean += 1;
+                continue;
+            }
+            self.corruption_detected.fetch_add(1, Ordering::Relaxed);
+            // Repair in place from the canonical copy: the transport
+            // stages to a temp name and renames, so concurrent readers
+            // see the old (bad, but CRC-guarded at extract time) bytes
+            // or the repaired file — never a torn mix.
+            let repaired = self
+                .gfs_transport(&gfs_dir.join(&name))
+                .fetch_archive(&name, &path, self.retry.source_deadline())
+                .is_ok()
+                && verify_archive(&path).is_ok();
+            if repaired {
+                self.scrub_repairs.fetch_add(1, Ordering::Relaxed);
+                summary.repaired += 1;
+            } else {
+                // Unrepairable: keep accounting honest and route
+                // readers back to whatever canonical copy exists.
+                self.inner.lock(&name).remove(&name);
+                self.directory.withdraw(&name, self.group);
+                let _ = std::fs::remove_file(&path);
+                summary.dropped += 1;
+            }
+        }
+        summary
+    }
+
     /// Persist the retention accounting to `ifs/<group>/cache.manifest`
     /// (atomically): a `#stats` line with the cumulative hit/miss totals
     /// plus the cumulative fault-path counters (retries, re-routed
-    /// fills, quarantine trips, degraded reads, deadline aborts — prior
+    /// fills, quarantine trips, degraded reads, deadline aborts,
+    /// corruption detections, scrub repairs, hedged fills/wins — prior
     /// runs included), then `name\tbytes\treads` entries LRU-oldest
     /// first so a warm-start replay reconstructs recency — and the
     /// per-archive read counts survive to seed
@@ -2387,7 +2781,7 @@ impl GroupCache {
             let shards = self.inner.lock_all();
             let reads = self.reads.lock().unwrap();
             text.push_str(&format!(
-                "#stats\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
+                "#stats\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
                 self.prior_hits + shards.iter().map(|c| c.hits()).sum::<u64>(),
                 self.prior_misses + shards.iter().map(|c| c.misses()).sum::<u64>(),
                 self.prior_fault.retries + self.retries.load(Ordering::Relaxed),
@@ -2395,6 +2789,10 @@ impl GroupCache {
                 self.prior_fault.quarantined + self.quarantined_sources.load(Ordering::Relaxed),
                 self.prior_fault.degraded + self.degraded_reads.load(Ordering::Relaxed),
                 self.prior_fault.deadline_aborts + self.deadline_aborts.load(Ordering::Relaxed),
+                self.prior_fault.corruption + self.corruption_detected.load(Ordering::Relaxed),
+                self.prior_fault.scrub_repairs + self.scrub_repairs.load(Ordering::Relaxed),
+                self.prior_fault.hedged + self.hedged_fills.load(Ordering::Relaxed),
+                self.prior_fault.hedge_wins + self.hedge_wins.load(Ordering::Relaxed),
             ));
             // Shard-major order: within a shard the LRU order is exact;
             // across shards it is arbitrary (a single-shard cache — the
@@ -2479,14 +2877,20 @@ fn parse_manifest(text: &str) -> ManifestText {
                 (Some(h), Some(m)) => {
                     out.prior_hits = h;
                     out.prior_misses = m;
-                    // Fault counters are absent in pre-PR-6 manifests
-                    // (back-compatible: missing fields stay zero).
+                    // Fault counters are absent in pre-PR-6 manifests,
+                    // and the integrity/hedge counters (fields 8–11) in
+                    // pre-PR-8 ones (back-compatible: missing fields
+                    // stay zero).
                     out.prior_fault = FaultTotals {
                         retries: num().unwrap_or(0),
                         rerouted: num().unwrap_or(0),
                         quarantined: num().unwrap_or(0),
                         degraded: num().unwrap_or(0),
                         deadline_aborts: num().unwrap_or(0),
+                        corruption: num().unwrap_or(0),
+                        scrub_repairs: num().unwrap_or(0),
+                        hedged: num().unwrap_or(0),
+                        hedge_wins: num().unwrap_or(0),
                     };
                 }
                 _ => out.corrupt_lines += 1,
@@ -2932,6 +3336,23 @@ pub struct StageStats {
     /// Source probes discarded for blowing their deadline
     /// ([`CacheSnapshot::deadline_aborts`]).
     pub deadline_aborts: u64,
+    /// Checksum mismatches caught (and discarded) on the stage's fill
+    /// paths ([`CacheSnapshot::corruption_detected`]) — corruption
+    /// never reached a reader.
+    pub corruption_detected: u64,
+    /// Retained archives repaired from GFS by scrub passes during the
+    /// stage ([`CacheSnapshot::scrub_repairs`]).
+    pub scrub_repairs: u64,
+    /// Hedged second fills launched by waiters during the stage
+    /// ([`CacheSnapshot::hedged_fills`]).
+    pub hedged_fills: u64,
+    /// Hedges that resolved their latch first
+    /// ([`CacheSnapshot::hedge_wins`]).
+    pub hedge_wins: u64,
+    /// Peer liveness leases that expired during the stage — each
+    /// withdrew the dead peer's whole advertised retention in one step
+    /// ([`RetentionDirectory::lease_expirations`]).
+    pub peer_lease_expirations: u64,
     /// Wall-clock seconds for the stage (tasks + final drain).
     pub elapsed_s: f64,
 }
@@ -2979,6 +3400,18 @@ impl WorkflowReport {
     /// across stages.
     pub fn degraded_reads(&self) -> u64 {
         self.stages.iter().map(|s| s.degraded_reads).sum()
+    }
+
+    /// Total checksum mismatches caught across stages — every one was
+    /// discarded before a reader saw it (integrity path, PR 8).
+    pub fn corruption_detected(&self) -> u64 {
+        self.stages.iter().map(|s| s.corruption_detected).sum()
+    }
+
+    /// Total hedged second fills launched across stages (tail path,
+    /// PR 8).
+    pub fn hedged_fills(&self) -> u64 {
+        self.stages.iter().map(|s| s.hedged_fills).sum()
     }
 
     /// Workflow-wide retention hit rate in [0,1] (0 when nothing read).
@@ -3191,6 +3624,7 @@ impl StageRunner {
         let stage_name = self.graph.stage(stage_idx).name.clone();
         let t0 = Instant::now();
         let before: Vec<CacheSnapshot> = self.caches.iter().map(|c| c.snapshot()).collect();
+        let leases_before = self.directory.lease_expirations();
         let prefix = format!("s{stage_idx}");
         let gfs = self.layout.gfs();
         // Fresh-run semantics: stage archives are derived artifacts. A
@@ -3320,6 +3754,11 @@ impl StageRunner {
             quarantined_sources: delta(|s| s.quarantined_sources),
             degraded_reads: delta(|s| s.degraded_reads),
             deadline_aborts: delta(|s| s.deadline_aborts),
+            corruption_detected: delta(|s| s.corruption_detected),
+            scrub_repairs: delta(|s| s.scrub_repairs),
+            hedged_fills: delta(|s| s.hedged_fills),
+            hedge_wins: delta(|s| s.hedge_wins),
+            peer_lease_expirations: self.directory.lease_expirations() - leases_before,
             elapsed_s: t0.elapsed().as_secs_f64(),
         };
         Ok((stats, ProducedArchives { archives, members }))
@@ -3334,6 +3773,86 @@ impl Drop for StageRunner {
         for cache in self.caches.iter() {
             let _ = cache.save_manifest();
         }
+    }
+}
+
+/// Background heartbeat thread that keeps remote peers' liveness leases
+/// current in a [`RetentionDirectory`] (PR 8 peer lifecycle).
+///
+/// Each monitored peer is pinged once per `interval` over its registered
+/// [`Transport`]; a successful [`Transport::ping`] renews that peer's
+/// lease for `ttl`. After every sweep the monitor calls
+/// [`RetentionDirectory::expire_overdue`], so a peer that stops
+/// answering (process killed, network partition) has its *entire*
+/// advertised retention withdrawn within roughly one `ttl` of its last
+/// successful heartbeat — readers stop routing to it in one step rather
+/// than timing out against each of its archives individually.
+///
+/// The monitor grants every peer an initial lease at construction so a
+/// healthy peer is never withdrawn before its first heartbeat lands.
+/// Dropping the monitor (or calling [`PeerMonitor::stop`]) joins the
+/// thread; leases already granted simply age out afterwards.
+pub struct PeerMonitor {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PeerMonitor {
+    /// Start heartbeating `peers` (group id + transport to reach it)
+    /// against `directory`. `interval` is the sweep period, `ttl` the
+    /// lease granted per successful ping; `ttl` should comfortably
+    /// exceed `interval` (the placement layer derives `interval = ttl/3`)
+    /// so one dropped heartbeat does not withdraw a healthy peer.
+    pub fn start(
+        directory: Arc<RetentionDirectory>,
+        peers: Vec<(u32, Arc<dyn Transport>)>,
+        interval: Duration,
+        ttl: Duration,
+    ) -> PeerMonitor {
+        for (group, _) in &peers {
+            directory.renew_lease(*group, ttl);
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let handle = std::thread::spawn(move || loop {
+            for (group, transport) in &peers {
+                if transport.ping().is_ok() {
+                    directory.renew_lease(*group, ttl);
+                }
+            }
+            directory.expire_overdue();
+            // Sliced sleep so stop() returns promptly even with a long
+            // sweep interval.
+            let deadline = Instant::now() + interval;
+            while Instant::now() < deadline {
+                if stop_flag.load(Ordering::Acquire) {
+                    return;
+                }
+                let left = deadline.saturating_duration_since(Instant::now());
+                std::thread::sleep(Duration::from_millis(20).min(left));
+            }
+            if stop_flag.load(Ordering::Acquire) {
+                return;
+            }
+        });
+        PeerMonitor {
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    /// Stop the heartbeat thread and wait for it to exit.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for PeerMonitor {
+    fn drop(&mut self) {
+        self.stop();
     }
 }
 
@@ -4025,5 +4544,117 @@ mod tests {
         };
         let err = runner.run(&[StageExec { tasks: 8, run: &body }]).unwrap_err();
         assert!(format!("{err:#}").contains("task 3 exploded"), "{err:#}");
+    }
+
+    #[test]
+    fn corrupt_neighbor_fill_is_discarded_and_refetched_from_gfs() {
+        let root = tmp("gc-corrupt");
+        let layout = LocalLayout::create(&root, 4, 2).unwrap();
+        let name = "s0-g0-00000.cioar";
+        write_archive(&layout.gfs(), name, &[("m", b"integrity bytes")]);
+        let caches: Vec<GroupCache> =
+            (0..2).map(|g| GroupCache::new(&layout, g, mib(16))).collect();
+        caches[0].retain(&layout.gfs().join(name), name).unwrap();
+
+        // Flip a payload byte in group 0's retained copy — a bit-flipping
+        // source. Rewrite through a fresh inode so a hard-linked
+        // retention cannot rot the canonical GFS copy too.
+        let retained = layout.ifs_data(0).join(name);
+        let mut bytes = std::fs::read(&retained).unwrap();
+        let pos = bytes.windows(9).position(|w| w == b"integrity").unwrap();
+        bytes[pos] ^= 0xFF;
+        std::fs::remove_file(&retained).unwrap();
+        std::fs::write(&retained, &bytes).unwrap();
+
+        // Group 1's fill probes the producer, catches the checksum
+        // mismatch, discards the pull, and re-routes to GFS — the reader
+        // observes only correct bytes.
+        let (r, outcome) =
+            caches[1].open_archive_via(&layout.gfs(), name, &caches).unwrap();
+        assert_eq!(outcome, CacheOutcome::GfsMiss);
+        assert_eq!(r.extract("m").unwrap(), b"integrity bytes");
+        let snap = caches[1].snapshot();
+        assert_eq!(snap.corruption_detected, 1, "{snap:?}");
+        assert_eq!((snap.neighbor_transfers, snap.gfs_copies), (0, 1), "{snap:?}");
+        assert_eq!(snap.rerouted_fills, 1, "{snap:?}");
+    }
+
+    #[test]
+    fn scrub_repairs_corrupt_retention_and_drops_orphans() {
+        let root = tmp("gc-scrub");
+        let layout = LocalLayout::create(&root, 1, 1).unwrap();
+        write_archive(&layout.gfs(), "a.cioar", &[("m", b"scrub payload")]);
+        write_archive(&layout.gfs(), "b.cioar", &[("m", b"orphan payload")]);
+        let cache = GroupCache::new(&layout, 0, mib(16));
+        cache.retain(&layout.gfs().join("a.cioar"), "a.cioar").unwrap();
+        cache.retain(&layout.gfs().join("b.cioar"), "b.cioar").unwrap();
+
+        // Rot a payload byte in both retained copies (fresh inodes, so a
+        // hard-linked retention cannot rot the GFS canonicals), then lose
+        // b's canonical entirely — a repair with no source to repair from.
+        for name in ["a.cioar", "b.cioar"] {
+            let p = layout.ifs_data(0).join(name);
+            let mut bytes = std::fs::read(&p).unwrap();
+            let pos = bytes.windows(7).position(|w| w == b"payload").unwrap();
+            bytes[pos] ^= 0xFF;
+            std::fs::remove_file(&p).unwrap();
+            std::fs::write(&p, &bytes).unwrap();
+        }
+        std::fs::remove_file(layout.gfs().join("b.cioar")).unwrap();
+
+        let summary = cache.scrub(&layout.gfs());
+        assert_eq!(
+            summary,
+            ScrubSummary { scanned: 2, clean: 0, repaired: 1, dropped: 1 },
+        );
+
+        // a: repaired in place, still retained, byte-exact.
+        let (r, outcome) = cache.open_archive(&layout.gfs(), "a.cioar").unwrap();
+        assert_eq!(outcome, CacheOutcome::IfsHit);
+        assert_eq!(r.extract("m").unwrap(), b"scrub payload");
+        // b: dropped from retention and disk rather than served rotten.
+        assert!(!cache.contains("b.cioar"));
+        assert!(!layout.ifs_data(0).join("b.cioar").exists());
+        let snap = cache.snapshot();
+        assert_eq!((snap.scrub_repairs, snap.corruption_detected), (1, 2), "{snap:?}");
+    }
+
+    #[test]
+    fn hedged_fill_wins_when_primary_stalls() {
+        use crate::cio::fault::{FaultAction, FaultInjector, OpClass};
+        let root = tmp("gc-hedge");
+        let layout = LocalLayout::create(&root, 1, 1).unwrap();
+        let name = "s0-g0-00000.cioar";
+        write_archive(&layout.gfs(), name, &[("m", b"hedged bytes")]);
+        let faults = Arc::new(FaultInjector::new());
+        // The first GFS copy (the primary fill) stalls well past the
+        // hedge delay; the hedge's own copy runs clean.
+        faults.inject_times(
+            OpClass::PublishCopy,
+            name,
+            FaultAction::Delay(Duration::from_millis(250)),
+            1,
+        );
+        let retry = RetryPolicy { hedge_delay_ms: 20, ..RetryPolicy::default() };
+        let cache = Arc::new(
+            GroupCache::new(&layout, 0, mib(16)).with_retry(retry).with_faults(faults),
+        );
+        let gfs = layout.gfs();
+        let primary = {
+            let (cache, gfs) = (cache.clone(), gfs.clone());
+            std::thread::spawn(move || {
+                let (r, _) = cache.open_archive(&gfs, name).unwrap();
+                r.extract("m").unwrap()
+            })
+        };
+        // Let the primary claim the fill latch, then arrive as a waiter:
+        // the latch is still pending after hedge_delay_ms, so this read
+        // claims the hedge, fetches clean, and resolves the latch first.
+        std::thread::sleep(Duration::from_millis(40));
+        let (r, _) = cache.open_archive(&gfs, name).unwrap();
+        assert_eq!(r.extract("m").unwrap(), b"hedged bytes");
+        assert_eq!(primary.join().unwrap(), b"hedged bytes");
+        let snap = cache.snapshot();
+        assert_eq!((snap.hedged_fills, snap.hedge_wins), (1, 1), "{snap:?}");
     }
 }

@@ -89,6 +89,21 @@
 //!   share one GFS tree and serve each other's retention across the
 //!   wire — directory routing, load-aware ranking, and partial fills
 //!   all working cross-process.
+//!   The PR-8 robustness layer makes the tier trustworthy end to end:
+//!   every fill is *verified on arrival* against the archive's embedded
+//!   per-chunk checksums ([`archive::ChunkSums`]) — a local link/copy,
+//!   a chunk range, or a wire frame that lands corrupt is a retryable
+//!   [`fault::FillError`] feeding the same retry → re-route →
+//!   quarantine chain, so a bit-flipping source is indistinguishable
+//!   from a failing one and a reader never observes wrong bytes.
+//!   Liveness rides the same wire: a `PING` op plus a per-peer lease in
+//!   the directory ([`directory::RetentionDirectory::renew_lease`])
+//!   withdraws a dead peer's whole advertised retention in one step
+//!   ([`local_stage::PeerMonitor`]), pooled connections reconnect on
+//!   stale, a background scrubber ([`local_stage::GroupCache::scrub`])
+//!   re-verifies retained archives and repairs from GFS, and a waiter
+//!   stuck behind a slow fill hedges a bounded second fetch —
+//!   first-success-wins through the existing fill latch.
 //! * [`directory`] — the PR-4 tentpole: a cluster-wide
 //!   [`directory::RetentionDirectory`] tracks which groups retain each
 //!   archive (updated on retains, fills, evictions, clears, and manifest

@@ -125,14 +125,20 @@ impl PlacementPolicy {
     /// archive at a pessimistic floor bandwidth (~64 MiB/s), clamped to
     /// [250 ms, 30 s] — long enough that a healthy loaded source never
     /// trips it, short enough that a hung source costs one bounded stall
-    /// before the fill is re-routed. Attempt count, backoff, and
-    /// quarantine thresholds keep the [`RetryPolicy`] defaults.
+    /// before the fill is re-routed. The hedge delay (PR 8) is a quarter
+    /// of that deadline clamped to [25 ms, 1 s]: a waiter whose fill is
+    /// still pending after a quarter of the worst-case healthy transfer
+    /// is probably behind a straggler, and the hedged GFS fetch it
+    /// launches then is cheap insurance against the tail. Attempt count,
+    /// backoff, and quarantine thresholds keep the [`RetryPolicy`]
+    /// defaults.
     pub fn retry_policy(&self) -> crate::cio::fault::RetryPolicy {
         let floor_bw = crate::util::units::mib(64); // bytes/s, pessimistic
         let deadline_ms = (self.neighbor_transfer_limit().saturating_mul(1000) / floor_bw.max(1))
             .clamp(250, 30_000);
         crate::cio::fault::RetryPolicy {
             source_deadline_ms: deadline_ms,
+            hedge_delay_ms: (deadline_ms / 4).clamp(25, 1_000),
             ..crate::cio::fault::RetryPolicy::default()
         }
     }
@@ -148,6 +154,41 @@ impl PlacementPolicy {
     pub fn transport_timeouts(&self) -> TransportTimeouts {
         let io_ms = self.retry_policy().source_deadline_ms;
         TransportTimeouts { connect_ms: (io_ms / 4).clamp(100, 2_000), io_ms }
+    }
+
+    /// Peer-liveness lease knobs (PR 8) derived from the same scale: a
+    /// lease lasts two source deadlines clamped to [500 ms, 60 s] — a
+    /// peer slower than *two* worst-case probes is one readers should
+    /// stop routing to — and the heartbeat runs at a third of the lease,
+    /// so a single dropped ping never withdraws a healthy peer (it takes
+    /// three consecutive misses to age the lease out). Feed these to
+    /// [`crate::cio::local_stage::PeerMonitor::start`].
+    pub fn lease_config(&self) -> LeaseConfig {
+        let ttl_ms = self.retry_policy().source_deadline_ms.saturating_mul(2).clamp(500, 60_000);
+        LeaseConfig { ttl_ms, heartbeat_ms: (ttl_ms / 3).max(1) }
+    }
+}
+
+/// Peer-liveness lease knobs derived from placement scale (see
+/// [`PlacementPolicy::lease_config`]); feed them to
+/// [`crate::cio::local_stage::PeerMonitor::start`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LeaseConfig {
+    /// Lease granted per successful heartbeat, in milliseconds.
+    pub ttl_ms: u64,
+    /// Heartbeat sweep period in milliseconds (a third of the lease).
+    pub heartbeat_ms: u64,
+}
+
+impl LeaseConfig {
+    /// The lease TTL as a [`std::time::Duration`].
+    pub fn ttl(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.ttl_ms)
+    }
+
+    /// The heartbeat period as a [`std::time::Duration`].
+    pub fn heartbeat(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.heartbeat_ms)
     }
 }
 
@@ -357,6 +398,34 @@ mod tests {
         let tt = tiny.transport_timeouts();
         assert!(tt.connect_ms >= 100 && tt.connect_ms <= 2_000);
         assert!(tt.io_ms >= 250);
+    }
+
+    #[test]
+    fn hedge_and_lease_knobs_track_the_source_deadline() {
+        let cfg = ClusterConfig::bgp(4096).with_stripe(32);
+        let p = PlacementPolicy::from_config(&cfg);
+        let retry = p.retry_policy();
+        assert_eq!(retry.hedge_delay_ms, (retry.source_deadline_ms / 4).clamp(25, 1_000));
+        assert!(retry.hedge_delay_ms <= retry.source_deadline_ms);
+        let lease = p.lease_config();
+        assert_eq!(lease.ttl_ms, (retry.source_deadline_ms * 2).clamp(500, 60_000));
+        assert_eq!(lease.heartbeat_ms, lease.ttl_ms / 3);
+        assert!(
+            lease.heartbeat_ms * 3 <= lease.ttl_ms,
+            "one dropped heartbeat must not expire a healthy peer"
+        );
+        assert_eq!(lease.ttl().as_millis() as u64, lease.ttl_ms);
+        assert_eq!(lease.heartbeat().as_millis() as u64, lease.heartbeat_ms);
+
+        // A tiny cluster clamps at the floors and stays ordered.
+        let tiny = PlacementPolicy {
+            lfs_limit: mib(1),
+            ifs_limit: mib(4),
+            read_many_threshold: 1,
+        };
+        let tr = tiny.retry_policy();
+        assert_eq!(tr.hedge_delay_ms, 62, "250 ms deadline / 4");
+        assert_eq!(tiny.lease_config().ttl_ms, 500);
     }
 
     #[test]

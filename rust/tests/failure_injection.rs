@@ -9,6 +9,13 @@
 //! copy, collector retention}. Every cell must end in byte-exact reads
 //! (or an honest decline for retention) with consistent counters —
 //! never a wedge, never a wrong byte.
+//!
+//! PR 8 adds the silent-corruption column: `CorruptRange` flips one
+//! in-flight byte of {neighbor fill, chunk fetch, GFS copy} without any
+//! IO error. The checksum layer must catch every cell — the corrupt
+//! landing is discarded and counted (`corruption_detected`), the fill
+//! re-routes or retries, the reader observes only correct bytes, and a
+//! repeat offender quarantines exactly like a failing source.
 
 use cio::cio::archive::{Compression, Writer};
 use cio::cio::fault::{is_retryable, is_timeout, FaultAction, FaultInjector, OpClass, RetryPolicy};
@@ -245,6 +252,7 @@ fn fast_retry() -> RetryPolicy {
         source_deadline_ms: 0,
         quarantine_streak: 0,
         probation_fills: 1,
+        hedge_delay_ms: 0,
     }
 }
 
@@ -692,4 +700,149 @@ fn quarantined_producer_is_probed_only_once_probation_opens() {
     assert_eq!(out3, CacheOutcome::NeighborTransfer, "the half-open probe lands");
     assert_eq!(&r3.extract("m").unwrap(), &payload);
     assert!(!dir.is_quarantined(0), "a successful probe closes the breaker");
+}
+
+// ---------------------------------------------------------------------
+// PR-8 corruption matrix: one silently flipped byte per transfer tier.
+// ---------------------------------------------------------------------
+
+#[test]
+fn corrupt_neighbor_fill_is_caught_and_rerouted_byte_exact() {
+    let (layout, name, payload) = fault_fixture("corrupt-neighbor", 4);
+    let faults = Arc::new(FaultInjector::new());
+    let caches = GroupCache::per_group_tuned(
+        &layout,
+        mib(16),
+        mib(16),
+        kib(64),
+        fast_retry(),
+        Some(faults.clone()),
+    );
+    caches[0].retain(&layout.gfs().join(&name), &name).unwrap();
+    let (_, out) = caches[3].open_archive_via(&layout.gfs(), &name, &caches).unwrap();
+    assert_eq!(out, CacheOutcome::NeighborTransfer);
+
+    // A group-1 reader's first neighbor transfer flips one payload byte
+    // in flight — no IO error, just wrong bytes. The checksum gate must
+    // discard the landing, charge the source, and re-route to the next
+    // retaining source; the reader never sees the flip.
+    faults.inject_times(OpClass::PublishLink, "/ifs/1/", FaultAction::CorruptRange(100), 1);
+    let (r, out) = caches[1].open_archive_via(&layout.gfs(), &name, &caches).unwrap();
+    assert_eq!(out, CacheOutcome::NeighborTransfer, "re-route stays on the neighbor tier");
+    assert_eq!(&r.extract("m").unwrap(), &payload, "the flipped byte never reaches the reader");
+    let snap = caches[1].snapshot();
+    assert_eq!(snap.corruption_detected, 1, "{snap:?}");
+    assert_eq!(snap.rerouted_fills, 1, "{snap:?}");
+    assert_eq!((snap.neighbor_transfers, snap.gfs_copies), (1, 0), "{snap:?}");
+    assert_eq!(
+        snap.stale_fallbacks, 0,
+        "corruption charges health, it does not withdraw live retention: {snap:?}"
+    );
+    // The landed (clean) copy verifies end to end.
+    assert!(matches!(
+        cio::cio::archive::verify_archive(&layout.ifs_data(1).join(&name)).unwrap(),
+        cio::cio::archive::Verification::Verified
+    ));
+}
+
+#[test]
+fn corrupt_chunk_fetch_lands_the_record_from_gfs_byte_exact() {
+    let (layout, name, payload) = fault_fixture("corrupt-chunk", 4);
+    let faults = Arc::new(FaultInjector::new());
+    let caches = GroupCache::per_group_tuned(
+        &layout,
+        mib(16),
+        mib(16),
+        kib(4),
+        fast_retry(),
+        Some(faults.clone()),
+    );
+    caches[0].retain(&layout.gfs().join(&name), &name).unwrap();
+
+    // Every chunk read out of group 0's retention flips its first byte.
+    // The per-span checksum check must reject the chunks and land the
+    // run from GFS — never mixing a flipped byte into the staging file.
+    faults.inject(OpClass::Read, "/ifs/0/data", FaultAction::CorruptRange(0));
+    let (bytes, _) = caches[1]
+        .read_member_range_via(&layout.gfs(), &name, &caches, "m", 1000, 3000)
+        .unwrap();
+    assert_eq!(bytes, payload[1000..4000], "flipped chunks never reach the reader");
+    let snap = caches[1].snapshot();
+    assert!(snap.corruption_detected >= 1, "{snap:?}");
+    assert!(snap.rerouted_fills >= 1, "{snap:?}");
+    assert!(snap.partial_gfs_reads >= 1, "the bytes must have come from GFS: {snap:?}");
+    assert_eq!(snap.stale_fallbacks, 0, "retention is intact, only the wire flips: {snap:?}");
+}
+
+#[test]
+fn corrupt_gfs_copy_is_retried_and_lands_verified() {
+    let (layout, name, payload) = fault_fixture("corrupt-gfs", 1);
+    let faults = Arc::new(FaultInjector::new());
+    let caches = GroupCache::per_group_tuned(
+        &layout,
+        mib(16),
+        mib(16),
+        kib(64),
+        fast_retry(),
+        Some(faults.clone()),
+    );
+    // The first GFS copy flips one byte in the stream; the copy
+    // "succeeds". Post-landing verification must catch it, discard the
+    // file, and surface a retryable corrupt failure the bounded retry
+    // chain re-fetches.
+    faults.inject_times(OpClass::PublishCopy, ".cioar", FaultAction::CorruptRange(200), 1);
+    let (r, out) = caches[0].open_archive_via(&layout.gfs(), &name, &caches).unwrap();
+    assert_eq!(out, CacheOutcome::GfsMiss);
+    assert_eq!(&r.extract("m").unwrap(), &payload);
+    let snap = caches[0].snapshot();
+    assert_eq!(snap.corruption_detected, 1, "{snap:?}");
+    assert_eq!(snap.retries, 1, "one bounded retry re-landed it: {snap:?}");
+    assert_eq!(snap.gfs_copies, 1, "only the clean landing is counted: {snap:?}");
+    assert!(matches!(
+        cio::cio::archive::verify_archive(&layout.ifs_data(0).join(&name)).unwrap(),
+        cio::cio::archive::Verification::Verified
+    ));
+    // And it serves plain hits afterwards.
+    let (_, out) = caches[0].open_archive_via(&layout.gfs(), &name, &caches).unwrap();
+    assert_eq!(out, CacheOutcome::IfsHit);
+}
+
+#[test]
+fn repeat_corrupting_source_trips_quarantine() {
+    let (layout, name, payload) = fault_fixture("corrupt-repeat", 4);
+    let faults = Arc::new(FaultInjector::new());
+    let mut policy = fast_retry();
+    policy.quarantine_streak = 2; // K strikes trip the breaker
+    policy.probation_fills = 8;
+    let caches = GroupCache::per_group_tuned(
+        &layout,
+        mib(16),
+        mib(16),
+        kib(4),
+        policy,
+        Some(faults.clone()),
+    );
+    caches[0].retain(&layout.gfs().join(&name), &name).unwrap();
+
+    // Group 0 flips a byte on *every* chunk it serves — a bit-flipping
+    // replica. Each corrupt span charges its health exactly like a
+    // failing probe; after K mismatches the breaker trips and readers
+    // stop routing to it, while every read stays byte-exact throughout.
+    faults.inject(OpClass::Read, "/ifs/0/data", FaultAction::CorruptRange(0));
+    let dir = caches[1].directory();
+    let mut off = 0usize;
+    for _ in 0..4 {
+        let (bytes, _) = caches[1]
+            .read_member_range_via(&layout.gfs(), &name, &caches, "m", off as u64, 2000)
+            .unwrap();
+        assert_eq!(bytes, payload[off..off + 2000], "byte-exact under a flipping source");
+        if dir.is_quarantined(0) {
+            break;
+        }
+        off += 16384;
+    }
+    assert!(dir.is_quarantined(0), "K corrupt serves must trip the breaker");
+    let snap = caches[1].snapshot();
+    assert!(snap.corruption_detected >= 2, "{snap:?}");
+    assert!(snap.quarantined_sources >= 1, "{snap:?}");
 }

@@ -14,18 +14,27 @@
 //!   stalled peer blows the per-source deadline, re-routes, and trips
 //!   the quarantine breaker — byte-exact data and no wedged fill latch
 //!   either way.
+//! * The PR-8 integrity and lifecycle cells: a frame whose payload was
+//!   flipped in flight fails its frame CRC and re-routes byte-exact;
+//!   a hard-killed peer process is detected through the stale pooled
+//!   connection, its fills re-route, and the [`PeerMonitor`]'s missed
+//!   heartbeats expire its liveness lease — withdrawing the dead
+//!   peer's whole advertised retention in one step and gating even the
+//!   producer fallback until it comes back.
 
 use cio::cio::archive::{Compression, Writer};
 use cio::cio::directory::RetentionDirectory;
 use cio::cio::fault::{FaultAction, FaultInjector, OpClass, RetryPolicy};
 use cio::cio::local::LocalLayout;
-use cio::cio::local_stage::{bootstrap_peer_directory, ClusterRecordSource, GroupCache};
+use cio::cio::local_stage::{
+    bootstrap_peer_directory, ClusterRecordSource, GroupCache, PeerMonitor,
+};
 use cio::cio::stage::CacheOutcome;
-use cio::cio::transport::{ServerHandle, SocketTransport, TransportServer};
+use cio::cio::transport::{ServerHandle, SocketTransport, Transport, TransportServer};
 use cio::util::units::{kib, mib};
 use std::io::BufRead;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn workspace(tag: &str) -> std::path::PathBuf {
     let d = std::env::temp_dir().join(format!("cio-serve-it-{tag}-{}", std::process::id()));
@@ -53,6 +62,7 @@ fn wire_retry(deadline_ms: u64) -> RetryPolicy {
         source_deadline_ms: deadline_ms,
         quarantine_streak: 0,
         probation_fills: 1,
+        hedge_delay_ms: 0,
     }
 }
 
@@ -245,4 +255,140 @@ fn stalled_peer_blows_deadline_reroutes_and_quarantines() {
     assert!(directory.is_quarantined(0), "the stalled source is quarantined");
     assert!(directory.quarantine_trips() >= 1);
     drop(server);
+}
+
+#[test]
+fn corrupt_wire_frame_reroutes_to_gfs_byte_exact() {
+    let root = workspace("wire-corrupt");
+    let layout = LocalLayout::create(&root, 2, 1).unwrap();
+    let name = "s0-g0-00000.cioar";
+    let payload = seed_archive(&layout, name, 70_000);
+    let faults = Arc::new(FaultInjector::new());
+    // Every frame served out of group 0's retention flips one payload
+    // byte *after* the frame CRC is computed — in-flight wire damage.
+    faults.inject(OpClass::Serve, "ifs/0/data", FaultAction::CorruptRange(500));
+    let directory = Arc::new(RetentionDirectory::with_health(layout.ifs_groups(), 2, 4));
+    let warm = GroupCache::with_directory(&layout, 0, mib(16), mib(16), directory.clone())
+        .with_faults(faults.clone());
+    warm.retain(&layout.gfs().join(name), name).unwrap();
+    let server = serve_cache(warm);
+
+    let reader = GroupCache::with_directory(&layout, 1, mib(16), mib(16), directory.clone())
+        .with_retry(wire_retry(0));
+    reader.add_peer(0, Arc::new(SocketTransport::new(&server.addr().to_string(), 0)));
+
+    // The frame CRC catches the flip at arrival; the fill re-routes to
+    // the canonical GFS copy within the same resolve, and the reader
+    // never observes a wrong byte. The peer's retention itself is fine,
+    // so its entry stays advertised.
+    let (r, outcome) = reader.open_archive_via(&layout.gfs(), name, &[]).unwrap();
+    assert_eq!(outcome, CacheOutcome::GfsMiss, "re-routed past the flipping wire");
+    assert_eq!(r.extract("m").unwrap(), payload, "byte-exact despite the corrupt frame");
+    let snap = reader.snapshot();
+    assert_eq!(snap.rerouted_fills, 1, "{snap:?}");
+    assert_eq!(snap.stale_fallbacks, 0, "wire damage is not staleness: {snap:?}");
+    assert!(directory.sources(name).contains(&0), "the peer's entry stays advertised");
+    assert!(faults.injected() >= 1, "the failpoint actually fired");
+    drop(server);
+}
+
+#[test]
+fn hard_killed_peer_reroutes_and_lease_expiry_withdraws_its_retention() {
+    let root = workspace("kill");
+    let layout = LocalLayout::create(&root, 2, 1).unwrap();
+    let name = "s0-g0-00000.cioar";
+    let name2 = "s0-g0-00001.cioar";
+    let payload = seed_archive(&layout, name, 80_000);
+    let payload2 = seed_archive(&layout, name2, 80_000);
+
+    // Process A: a real runner warming both archives into group 0 and
+    // serving them over TCP.
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_cio-serve"))
+        .arg(&root)
+        .args(["2", "1", "0", name, name2])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawning cio-serve");
+    let mut ready = String::new();
+    std::io::BufReader::new(child.stdout.take().unwrap()).read_line(&mut ready).unwrap();
+    let addr = ready
+        .trim()
+        .strip_prefix("READY ")
+        .unwrap_or_else(|| panic!("unexpected cio-serve banner: {ready:?}"))
+        .to_string();
+
+    let directory = Arc::new(RetentionDirectory::new(layout.ifs_groups()));
+    assert_eq!(bootstrap_peer_directory(&layout, &directory, 0), 2, "both entries published");
+    let reader = GroupCache::with_directory(&layout, 1, mib(16), mib(16), directory.clone())
+        .with_retry(wire_retry(2_000));
+    let transport = Arc::new(
+        SocketTransport::new(&addr, 0)
+            .with_timeouts(Duration::from_millis(500), Duration::from_millis(500)),
+    );
+    reader.add_peer(0, transport.clone());
+
+    // Warm resolve over the live peer: served, byte-exact, and the
+    // connection is parked in the pool for reuse.
+    let (r, outcome) = reader.open_archive_via(&layout.gfs(), name, &[]).unwrap();
+    assert_eq!(outcome, CacheOutcome::NeighborTransfer, "served by the live peer");
+    assert_eq!(r.extract("m").unwrap(), payload);
+    transport.ping().expect("a live peer answers the heartbeat");
+
+    // The lifecycle monitor heartbeats the peer and keeps its lease
+    // current; ttl > 3 sweeps, so only sustained silence expires it.
+    let monitor = PeerMonitor::start(
+        directory.clone(),
+        vec![(0, transport.clone() as Arc<dyn Transport>)],
+        Duration::from_millis(40),
+        Duration::from_millis(150),
+    );
+
+    // Hard-kill the serving process — no shutdown handshake, the pooled
+    // connection dies with it.
+    child.kill().expect("killing cio-serve");
+    child.wait().expect("reaping cio-serve");
+
+    // The next fetch rides the stale pooled connection: the transport
+    // must detect the dead stream, attempt a replacement, and fail the
+    // probe cleanly; the fill re-routes to GFS byte-exact with no
+    // wedged latch.
+    let (r2, out2) = reader.open_archive_via(&layout.gfs(), name2, &[]).unwrap();
+    assert_eq!(out2, CacheOutcome::GfsMiss, "re-routed off the dead peer");
+    assert_eq!(r2.extract("m").unwrap(), payload2, "byte-exact after the kill");
+    assert!(reader.snapshot().rerouted_fills >= 1, "{:?}", reader.snapshot());
+    assert!(
+        transport.reconnects() >= 1,
+        "the stale pooled connection was detected and replaced (reconnects = {})",
+        transport.reconnects()
+    );
+
+    // Within roughly one lease of the kill, the missed heartbeats expire
+    // the lease and withdraw the dead peer's *entire* advertised
+    // retention in one step.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while directory.lease_expirations() == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(directory.lease_expirations() >= 1, "the dead peer's lease must expire");
+    assert!(!directory.sources(name).contains(&0), "entry withdrawn with the lease");
+    assert!(!directory.sources(name2).contains(&0), "all entries withdrawn in one step");
+    assert!(directory.expired_peers().contains(&0));
+    drop(monitor);
+
+    // Routing now skips the dead peer entirely: a fresh producer-owned
+    // archive resolves straight from GFS without probing it (the
+    // expired lease gates even the producer fallback).
+    assert!(!directory.probe_allowed(0), "an expired peer is not probe-eligible");
+    let name3 = "s0-g0-00002.cioar";
+    let payload3 = seed_archive(&layout, name3, 30_000);
+    let reconnects_before = transport.reconnects();
+    let (r3, out3) = reader.open_archive_via(&layout.gfs(), name3, &[]).unwrap();
+    assert_eq!(out3, CacheOutcome::GfsMiss, "no route through the dead peer");
+    assert_eq!(r3.extract("m").unwrap(), payload3);
+    assert_eq!(
+        transport.reconnects(),
+        reconnects_before,
+        "the dead peer was never dialed again"
+    );
 }
