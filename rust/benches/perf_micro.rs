@@ -6,7 +6,10 @@
 //! local fill transports), the PR-8 integrity tax (fill verification on
 //! vs off — the warm-hit overhead is the ≤5% CI gate) and hedged-fill
 //! tail trim (waiter p99 with a stalled primary, hedge armed vs off),
-//! and PJRT scoring latency (skipped when `make artifacts` has not run).
+//! the PR-9 pipelined-vs-barriered workflow (streaming stage execution
+//! wall-clock + overlap fraction — pipelined < barriered is the CI
+//! gate), and PJRT scoring latency (skipped when `make artifacts` has
+//! not run).
 //!
 //! Regenerate: `cargo bench --bench perf_micro`
 //! Machine-readable output: `-- --json BENCH.json` (or `CIO_BENCH_JSON`),
@@ -1111,6 +1114,85 @@ fn main() {
     b.metric("hedge: hedged fills", on_hedges as f64, "fills");
     b.metric("hedge: hedge wins", on_wins as f64, "fills");
     let _ = std::fs::remove_dir_all(&hroot);
+
+    // --- Pipelined vs barriered workflow (the PR-9 tentpole, ROADMAP
+    // item 1): the same 3-stage chain of sleep-weighted tasks run twice —
+    // once with the classic per-stage barrier (`run`, downstream opens
+    // archives only after the upstream collector drains) and once with
+    // streaming stage execution (`run_pipelined`, downstream subscribes
+    // to publish-on-flush announcements and starts on the first upstream
+    // archive). With per-commit flushes (`max_data: 1`) every stage
+    // overlaps its successor, so the pipelined wall-clock approaches
+    // max(stage) while the barriered wall-clock is sum(stages). CI gates
+    // pipelined < barriered (speedup ≥ 1.3x) and overlap fraction > 0.
+    let wfroot = dir.join("workflow-pipeline");
+    let _ = std::fs::remove_dir_all(&wfroot);
+    let wf_tasks = 6u32;
+    let wf_task_ms = if fast { 3u64 } else { 5 };
+    let wf_reps = if fast { 2usize } else { 3 };
+    let wf_run = |pipelined: bool, rep: usize| -> (f64, f64) {
+        let root = wfroot.join(format!("{}-{rep}", if pipelined { "pipe" } else { "barrier" }));
+        let _ = std::fs::remove_dir_all(&root);
+        let layout = LocalLayout::create(&root, 2, 1).unwrap();
+        let graph = StageGraph::chain(&["produce", "transform", "reduce"]);
+        let config = StageRunnerConfig {
+            policy: Policy {
+                max_delay: SimTime::from_secs(3600),
+                max_data: 1,
+                min_free_space: 0,
+            },
+            compression: Compression::None,
+            cache_capacity: mib(64),
+            neighbor_limit: mib(8),
+            fill_chunk_bytes: kib(16),
+            threads: 1,
+            retry: RetryPolicy::default(),
+            faults: None,
+        };
+        let mut runner = StageRunner::new(layout, graph, config);
+        let produce = |t: u32, _in: &StageInput<'_>| -> anyhow::Result<Vec<u8>> {
+            std::thread::sleep(Duration::from_millis(wf_task_ms));
+            Ok(vec![t as u8 + 1; 1024])
+        };
+        let transform = |t: u32, input: &StageInput<'_>| -> anyhow::Result<Vec<u8>> {
+            let (bytes, _) = input.read_member(&task_output_name(0, "produce", t))?;
+            std::thread::sleep(Duration::from_millis(wf_task_ms));
+            Ok(bytes)
+        };
+        let reduce = |t: u32, input: &StageInput<'_>| -> anyhow::Result<Vec<u8>> {
+            let (bytes, _) = input.read_member(&task_output_name(1, "transform", t))?;
+            std::thread::sleep(Duration::from_millis(wf_task_ms));
+            Ok(bytes)
+        };
+        let execs = [
+            StageExec { tasks: wf_tasks, run: &produce },
+            StageExec { tasks: wf_tasks, run: &transform },
+            StageExec { tasks: wf_tasks, run: &reduce },
+        ];
+        let report = if pipelined { runner.run_pipelined(&execs) } else { runner.run(&execs) }
+            .expect("pipelined-vs-barriered workflow");
+        let overlap = report.overlap_fraction();
+        drop(runner);
+        let _ = std::fs::remove_dir_all(&root);
+        (report.wall_s, overlap)
+    };
+    let (mut wf_barrier, mut wf_pipe, mut wf_overlap) = (f64::INFINITY, f64::INFINITY, 0.0f64);
+    // Interleaved reps so machine drift hits both executors alike.
+    for rep in 0..wf_reps {
+        let (wall, _) = wf_run(false, rep);
+        wf_barrier = wf_barrier.min(wall);
+        let (wall, overlap) = wf_run(true, rep);
+        if wall < wf_pipe {
+            wf_pipe = wall;
+            wf_overlap = overlap;
+        }
+    }
+    assert!(wf_overlap > 0.0, "the pipelined run must overlap dependent stages");
+    b.metric("workflow_barriered wall", wf_barrier * 1e3, "ms");
+    b.metric("workflow_pipelined wall", wf_pipe * 1e3, "ms");
+    b.metric("workflow: pipelined speedup", wf_barrier / wf_pipe, "x");
+    b.metric("workflow: pipelined overlap fraction", wf_overlap, "frac");
+    let _ = std::fs::remove_dir_all(&wfroot);
 
     // --- PJRT scoring latency (needs artifacts).
     match cio::runtime::ScoreModel::load_default() {

@@ -128,6 +128,15 @@ pub struct CollectorStats {
     /// Text of the first failed retention copy (`None` while
     /// `retention_errors` is 0).
     pub first_retention_error: Option<String>,
+    /// Archives announced to the retention directory's publish feed as
+    /// they flushed (PR 9 streaming) — downstream stages saw each of
+    /// these before this collector's `finish()` returned.
+    pub announced: u64,
+    /// Idle backstop rescans that found nothing: wakeups where no commit
+    /// notification and no unnotified staging activity had been observed
+    /// since the last scan. After the PR-9 backstop fix this stays 0 for
+    /// workloads whose producers all use the notify path.
+    pub idle_rescans: u64,
 }
 
 impl CollectorStats {
@@ -170,6 +179,8 @@ impl CollectorStats {
         self.flush_errors += other.flush_errors;
         self.retained += other.retained;
         self.retention_errors += other.retention_errors;
+        self.announced += other.announced;
+        self.idle_rescans += other.idle_rescans;
         if let (None, Some(e)) = (&self.first_flush_error, &other.first_flush_error) {
             self.first_flush_error = Some(e.clone());
         }
@@ -290,6 +301,8 @@ mod tests {
         s.flush_errors = 3;
         s.retained = 2;
         s.retention_errors = 1;
+        s.announced = 2;
+        s.idle_rescans = 5;
         s.note_flush_error("disk full");
         s.note_flush_error("later error must not displace the first");
         s.note_retention_error("cache dir vanished");
@@ -302,6 +315,8 @@ mod tests {
         assert_eq!(total.flush_errors, 6);
         assert_eq!(total.retained, 4);
         assert_eq!(total.retention_errors, 2);
+        assert_eq!(total.announced, 4);
+        assert_eq!(total.idle_rescans, 10);
         assert_eq!(total.first_flush_error.as_deref(), Some("disk full"));
         assert_eq!(total.first_retention_error.as_deref(), Some("cache dir vanished"));
         assert!((total.reduction_factor() - 512.0).abs() < 1e-9);

@@ -44,11 +44,26 @@
 //! discovering the corpse. Groups without a lease (the common
 //! shared-filesystem deployment) are unaffected — leases gate only the
 //! groups that have ever held one.
+//!
+//! **Publish feed (PR 9).** Alongside the residency hints the directory
+//! keeps an append-only feed of [`StreamEvent`]s: the producing
+//! collector [`RetentionDirectory::announce`]s each archive the moment
+//! it flushes (not at `finish()`), and a downstream stage
+//! [`RetentionDirectory::subscribe`]s and consumes names with
+//! [`RetentionDirectory::wait_for_prefix`] as they land. A
+//! [`Subscription`] is a cursor into the log, so a late subscriber
+//! replays already-announced archives instead of missing them. Each
+//! stage prefix's stream carries a terminator — `end_stream` when the
+//! upstream collector drains cleanly, `fail_stream` with a typed
+//! [`FillError`] when it cannot — and every wait is timeout-bounded, so
+//! no subscriber can wedge on a producer that died. A stage re-run
+//! [`RetentionDirectory::retract`]s the purged names first, so a live
+//! subscriber drops them instead of burning stale-fallback probes.
 
-use crate::cio::fault::RetryPolicy;
+use crate::cio::fault::{FillError, RetryPolicy};
 use crate::cio::placement::group_torus_distance;
 use std::collections::{BTreeMap, BTreeSet};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Per-source circuit-breaker state (PR 6). A consecutive-failure streak
@@ -178,6 +193,84 @@ impl DirInner {
     }
 }
 
+/// One entry in the directory's append-only publish feed (PR 9). The
+/// feed is the *streaming* face of the directory: residency hints live
+/// in the sources map, but the feed records the order in which archives
+/// became visible, so a downstream stage can consume upstream output as
+/// it lands instead of waiting for the producer's collector to drain.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StreamEvent {
+    /// An archive landed on GFS (and usually in its producer's IFS):
+    /// subscribers may open it now. Emitted once per flushed archive by
+    /// the producing collector — re-publishes from neighbor fills do not
+    /// re-announce.
+    Announced { archive: String, group: u32 },
+    /// The archive's bytes were purged (stage re-run clear): subscribers
+    /// must drop it from their working set instead of burning a
+    /// stale-fallback probe on a name that no longer resolves.
+    Retracted { archive: String },
+}
+
+impl StreamEvent {
+    fn archive(&self) -> &str {
+        match self {
+            StreamEvent::Announced { archive, .. } => archive,
+            StreamEvent::Retracted { archive } => archive,
+        }
+    }
+}
+
+/// Termination state of one stage prefix's publish stream.
+#[derive(Debug, Clone)]
+enum StreamStatus {
+    /// Producer still running: more announcements may arrive.
+    Open,
+    /// Producer's collector drained cleanly: the announced set is final.
+    Ended,
+    /// Producer failed (flush error / degraded group): waiters get the
+    /// typed error instead of wedging on a stream that will never end.
+    Failed(FillError),
+}
+
+#[derive(Default)]
+struct FeedInner {
+    /// Append-only event log; a [`Subscription`] is a cursor into it, so
+    /// late subscribers replay everything already published.
+    log: Vec<StreamEvent>,
+    /// Archives currently announced and not retracted (dedup guard:
+    /// announce/retract emit events only on state *changes*).
+    live: BTreeSet<String>,
+    /// stage prefix → stream termination state. Absent means open.
+    streams: BTreeMap<String, StreamStatus>,
+}
+
+/// A cursor into the directory's publish feed. Created at generation 0,
+/// so a subscriber that arrives after archives were already announced
+/// replays them on its first [`RetentionDirectory::wait_for_prefix`]
+/// call — late subscribers never miss an event.
+#[derive(Debug, Default)]
+pub struct Subscription {
+    next: usize,
+}
+
+/// One batch of feed events delivered to a subscriber.
+#[derive(Debug, Default)]
+pub struct StreamBatch {
+    /// Events that matched the requested prefixes, oldest first. Empty
+    /// with `ended == false` means the wait timed out.
+    pub events: Vec<StreamEvent>,
+    /// True once every requested prefix's stream has ended *and* all
+    /// prior events were delivered: no more events will ever arrive.
+    pub ended: bool,
+}
+
+/// Does `archive` belong to stage `prefix`? Stage archives are named
+/// `<prefix>-g<group>-<seq>.cioar`, and matching on the `-g` separator
+/// keeps `s1` from claiming `s10-...`.
+fn archive_in_prefix(archive: &str, prefix: &str) -> bool {
+    archive.strip_prefix(prefix).is_some_and(|rest| rest.starts_with("-g"))
+}
+
 /// Cluster-wide (per-[`crate::cio::local::LocalLayout`]) registry of which
 /// IFS groups retain which archives, with torus-distance source routing.
 /// Shared by every [`crate::cio::local_stage::GroupCache`] of one runner;
@@ -188,6 +281,8 @@ pub struct RetentionDirectory {
     quarantine_streak: u32,
     probation_fills: u32,
     inner: Mutex<DirInner>,
+    feed: Mutex<FeedInner>,
+    feed_cv: Condvar,
 }
 
 impl RetentionDirectory {
@@ -212,6 +307,8 @@ impl RetentionDirectory {
             quarantine_streak,
             probation_fills,
             inner: Mutex::new(DirInner::default()),
+            feed: Mutex::new(FeedInner::default()),
+            feed_cv: Condvar::new(),
         }
     }
 
@@ -476,6 +573,163 @@ impl RetentionDirectory {
     pub fn group_serves(&self, source: u32) -> u64 {
         self.inner.lock().unwrap().group_serves.get(&source).copied().unwrap_or(0)
     }
+
+    // ---- publish feed (PR 9: subscribe-on-read streaming) ----
+
+    /// Announce a freshly flushed archive to the publish feed. Called by
+    /// the producing collector the moment the archive lands on GFS —
+    /// *before* `finish()` — so subscribers see output as it flushes.
+    /// Idempotent per live archive: re-announcing an archive that was
+    /// not retracted since is a no-op, so retention re-publishes (routed
+    /// fills, manifest warm starts) never duplicate feed entries.
+    pub fn announce(&self, archive: &str, group: u32) {
+        let mut feed = self.feed.lock().unwrap();
+        if feed.live.insert(archive.to_string()) {
+            feed.log.push(StreamEvent::Announced { archive: archive.to_string(), group });
+            self.feed_cv.notify_all();
+        }
+    }
+
+    /// Retract an announced archive from the publish feed (stage re-run
+    /// clear): live subscribers receive a [`StreamEvent::Retracted`] and
+    /// drop the name instead of probing purged bytes. A no-op for names
+    /// never announced (or already retracted).
+    pub fn retract(&self, archive: &str) {
+        let mut feed = self.feed.lock().unwrap();
+        if feed.live.remove(archive) {
+            feed.log.push(StreamEvent::Retracted { archive: archive.to_string() });
+            self.feed_cv.notify_all();
+        }
+    }
+
+    /// Mark `prefix`'s stream open (stage start / re-run). Clears a
+    /// previous run's `Ended`/`Failed` terminator so a re-subscribing
+    /// downstream waits for the new run's output, and retracts any of the
+    /// previous run's names still live under the prefix — a re-run
+    /// produces the *same* archive names (sequence numbers restart), so a
+    /// stale live entry would make the announce dedup swallow the new
+    /// run's announcement.
+    pub fn open_stream(&self, prefix: &str) {
+        let mut feed = self.feed.lock().unwrap();
+        let stale: Vec<String> = feed
+            .live
+            .iter()
+            .filter(|n| archive_in_prefix(n, prefix))
+            .cloned()
+            .collect();
+        for name in stale {
+            feed.live.remove(&name);
+            feed.log.push(StreamEvent::Retracted { archive: name });
+        }
+        feed.streams.insert(prefix.to_string(), StreamStatus::Open);
+        self.feed_cv.notify_all();
+    }
+
+    /// Mark `prefix`'s stream cleanly ended: the producing collector
+    /// drained, every archive of the stage has been announced, and no
+    /// more will arrive. Wakes all subscribers. Does not override an
+    /// earlier failure — a failed stream stays failed until re-opened.
+    pub fn end_stream(&self, prefix: &str) {
+        let mut feed = self.feed.lock().unwrap();
+        let status = feed.streams.entry(prefix.to_string()).or_insert(StreamStatus::Open);
+        if !matches!(status, StreamStatus::Failed(_)) {
+            *status = StreamStatus::Ended;
+        }
+        self.feed_cv.notify_all();
+    }
+
+    /// Terminate `prefix`'s stream with a typed error (upstream flush
+    /// failure or degraded group): every blocked subscriber wakes and
+    /// gets `err` instead of wedging on announcements that will never
+    /// come. The first failure wins; later calls are no-ops.
+    pub fn fail_stream(&self, prefix: &str, err: FillError) {
+        let mut feed = self.feed.lock().unwrap();
+        let status = feed.streams.entry(prefix.to_string()).or_insert(StreamStatus::Open);
+        if !matches!(status, StreamStatus::Failed(_)) {
+            *status = StreamStatus::Failed(err);
+        }
+        self.feed_cv.notify_all();
+    }
+
+    /// A fresh cursor into the publish feed, positioned at generation 0:
+    /// the first wait replays every event already logged, so subscribing
+    /// after archives were announced loses nothing.
+    pub fn subscribe(&self) -> Subscription {
+        Subscription::default()
+    }
+
+    /// Wait (bounded by `timeout`) for feed events on one stage prefix.
+    /// See [`RetentionDirectory::wait_for_prefixes`].
+    pub fn wait_for_prefix(
+        &self,
+        sub: &mut Subscription,
+        prefix: &str,
+        timeout: Duration,
+    ) -> std::result::Result<StreamBatch, FillError> {
+        self.wait_for_prefixes(sub, &[prefix], timeout)
+    }
+
+    /// Wait (bounded by `timeout`) for feed events on any of `prefixes`,
+    /// advancing `sub`'s cursor past everything scanned. Returns, in
+    /// order of preference:
+    ///
+    /// - `Ok` with matching events (oldest first) as soon as any exist —
+    ///   already-logged events return immediately, no wait;
+    /// - `Err` with the typed terminator once any requested stream has
+    ///   failed and all earlier events were delivered;
+    /// - `Ok` with an empty batch and `ended == true` once *all*
+    ///   requested streams have ended and the log is drained;
+    /// - `Ok` with an empty batch and `ended == false` when `timeout`
+    ///   elapses first — the caller re-arms its own deadline policy, so
+    ///   no subscriber ever parks indefinitely.
+    pub fn wait_for_prefixes(
+        &self,
+        sub: &mut Subscription,
+        prefixes: &[&str],
+        timeout: Duration,
+    ) -> std::result::Result<StreamBatch, FillError> {
+        let deadline = Instant::now() + timeout;
+        let mut feed = self.feed.lock().unwrap();
+        loop {
+            let mut events = Vec::new();
+            while sub.next < feed.log.len() {
+                let ev = &feed.log[sub.next];
+                sub.next += 1;
+                if prefixes.iter().any(|p| archive_in_prefix(ev.archive(), p)) {
+                    events.push(ev.clone());
+                }
+            }
+            if !events.is_empty() {
+                return Ok(StreamBatch { events, ended: false });
+            }
+            // Log drained: the stream state decides whether to report a
+            // terminator or keep waiting.
+            let failed = prefixes.iter().find_map(|p| match feed.streams.get(*p) {
+                Some(StreamStatus::Failed(err)) => Some(err.clone()),
+                _ => None,
+            });
+            if let Some(err) = failed {
+                return Err(err);
+            }
+            let all_ended = prefixes
+                .iter()
+                .all(|p| matches!(feed.streams.get(*p), Some(StreamStatus::Ended)));
+            if all_ended {
+                return Ok(StreamBatch { events: Vec::new(), ended: true });
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(StreamBatch { events: Vec::new(), ended: false });
+            }
+            feed = self.feed_cv.wait_timeout(feed, deadline - now).unwrap().0;
+        }
+    }
+
+    /// How many events the publish feed has logged so far (the feed's
+    /// generation counter; tests and diagnostics).
+    pub fn feed_generation(&self) -> usize {
+        self.feed.lock().unwrap().log.len()
+    }
 }
 
 #[cfg(test)]
@@ -655,6 +909,123 @@ mod tests {
         assert!(d.probe_allowed(1));
         assert_eq!(d.route("a.cioar", 0), vec![1]);
         assert_eq!(d.expire_overdue(), Vec::<u32>::new(), "fresh lease does not expire");
+    }
+
+    #[test]
+    fn late_subscriber_replays_announced_archives() {
+        let d = RetentionDirectory::new(2);
+        d.open_stream("s0");
+        d.announce("s0-g0-00000.cioar", 0);
+        d.announce("s0-g1-00000.cioar", 1);
+        d.announce("s0-g0-00000.cioar", 0); // re-announce dedups
+        // A subscriber arriving after the fact replays both, in order.
+        let mut sub = d.subscribe();
+        let batch = d.wait_for_prefix(&mut sub, "s0", Duration::from_millis(0)).unwrap();
+        assert_eq!(
+            batch.events,
+            vec![
+                StreamEvent::Announced { archive: "s0-g0-00000.cioar".into(), group: 0 },
+                StreamEvent::Announced { archive: "s0-g1-00000.cioar".into(), group: 1 },
+            ]
+        );
+        assert!(!batch.ended);
+        // Open stream + drained log: a zero-timeout wait returns empty.
+        let idle = d.wait_for_prefix(&mut sub, "s0", Duration::from_millis(0)).unwrap();
+        assert!(idle.events.is_empty() && !idle.ended);
+        // End-of-stream is observed only after all events are consumed.
+        d.end_stream("s0");
+        let fin = d.wait_for_prefix(&mut sub, "s0", Duration::from_millis(0)).unwrap();
+        assert!(fin.events.is_empty() && fin.ended);
+    }
+
+    #[test]
+    fn prefix_match_does_not_cross_stage_names() {
+        let d = RetentionDirectory::new(2);
+        d.announce("s1-g0-00000.cioar", 0);
+        d.announce("s10-g0-00000.cioar", 0);
+        let mut sub = d.subscribe();
+        let batch = d.wait_for_prefix(&mut sub, "s1", Duration::from_millis(0)).unwrap();
+        assert_eq!(batch.events.len(), 1, "s1 must not claim s10's archives");
+        assert_eq!(batch.events[0].archive(), "s1-g0-00000.cioar");
+    }
+
+    #[test]
+    fn failed_stream_delivers_typed_error_after_pending_events() {
+        let d = RetentionDirectory::new(2);
+        d.open_stream("s0");
+        d.announce("s0-g0-00000.cioar", 0);
+        let err = FillError {
+            tier: crate::cio::fault::FillTier::Staging,
+            source: None,
+            retryable: false,
+            storage: true,
+            timeout: false,
+            corrupt: false,
+            msg: "flush failed".to_string(),
+        };
+        d.fail_stream("s0", err);
+        let mut sub = d.subscribe();
+        // Events logged before the failure still arrive...
+        let batch = d.wait_for_prefix(&mut sub, "s0", Duration::from_millis(0)).unwrap();
+        assert_eq!(batch.events.len(), 1);
+        // ...then the typed terminator, immediately (no timeout burn).
+        let got = d.wait_for_prefix(&mut sub, "s0", Duration::from_secs(30)).unwrap_err();
+        assert!(got.storage);
+        // end_stream does not launder a failure...
+        d.end_stream("s0");
+        assert!(d.wait_for_prefix(&mut sub, "s0", Duration::from_millis(0)).is_err());
+        // ...but a re-run's open_stream resets the terminator and
+        // retracts the failed run's live names, so the re-run's identical
+        // archive names can be re-announced past the dedup.
+        d.open_stream("s0");
+        let reset = d.wait_for_prefix(&mut sub, "s0", Duration::from_millis(0)).unwrap();
+        assert_eq!(
+            reset.events,
+            vec![StreamEvent::Retracted { archive: "s0-g0-00000.cioar".into() }]
+        );
+        assert!(!reset.ended);
+    }
+
+    #[test]
+    fn retraction_reaches_live_subscribers() {
+        let d = RetentionDirectory::new(2);
+        d.open_stream("s0");
+        d.announce("s0-g0-00000.cioar", 0);
+        let mut sub = d.subscribe();
+        let _ = d.wait_for_prefix(&mut sub, "s0", Duration::from_millis(0)).unwrap();
+        d.retract("s0-g0-00000.cioar");
+        d.retract("s0-g0-00000.cioar"); // idempotent
+        let batch = d.wait_for_prefix(&mut sub, "s0", Duration::from_millis(0)).unwrap();
+        assert_eq!(
+            batch.events,
+            vec![StreamEvent::Retracted { archive: "s0-g0-00000.cioar".into() }]
+        );
+        // Retract-then-announce (a re-run) re-announces the name.
+        d.announce("s0-g0-00000.cioar", 0);
+        let again = d.wait_for_prefix(&mut sub, "s0", Duration::from_millis(0)).unwrap();
+        assert_eq!(again.events.len(), 1);
+        assert_eq!(d.feed_generation(), 4);
+    }
+
+    #[test]
+    fn wait_spans_multiple_prefixes_and_wakes_on_announce() {
+        let d = std::sync::Arc::new(RetentionDirectory::new(2));
+        d.open_stream("s0");
+        d.open_stream("s1");
+        let bg = d.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            bg.announce("s1-g0-00000.cioar", 0);
+            bg.end_stream("s0");
+            bg.end_stream("s1");
+        });
+        let mut sub = d.subscribe();
+        let batch =
+            d.wait_for_prefixes(&mut sub, &["s0", "s1"], Duration::from_secs(10)).unwrap();
+        assert_eq!(batch.events.len(), 1, "the announce must wake the blocked waiter");
+        let fin = d.wait_for_prefixes(&mut sub, &["s0", "s1"], Duration::from_secs(10)).unwrap();
+        assert!(fin.ended, "ended only once every requested stream ends");
+        t.join().unwrap();
     }
 
     #[test]

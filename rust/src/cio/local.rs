@@ -40,12 +40,24 @@
 //!   archive in the group's `ifs/<group>/data/` directory under
 //!   [`crate::cio::local_stage::GroupCache`] LRU control — the §5.3
 //!   inter-stage retention that [`crate::cio::local_stage::StageRunner`]
-//!   reads back as archive-as-input.
+//!   reads back as archive-as-input;
+//! * with [`CollectorOptions::directory`] set, every flushed archive is
+//!   **announced** to the [`RetentionDirectory`] publish feed the moment
+//!   it lands on GFS (PR 9 publish-on-flush), and the stage's stream is
+//!   terminated at [`LocalCollector::finish`] — `end_stream` on a clean
+//!   drain, `fail_stream` with the typed [`FillError`] on a flush
+//!   failure — so a pipelined downstream stage reads output while this
+//!   stage still runs and never wedges on a dead producer;
+//! * the 250 ms unnotified-commit rescan backstop arms **only after a
+//!   scan observes an unnotified commit** (more staged files than commit
+//!   notifications claimed); an all-notifying workload pays one
+//!   quiescent sweep per second instead of four needless rescans.
 
 use crate::cio::archive::{Compression, Writer};
 use crate::cio::collector::{CollectorStats, FlushReason, Policy};
+use crate::cio::directory::RetentionDirectory;
 use crate::cio::distributor::TreeShape;
-use crate::cio::fault::{corrupt_buffer, FaultInjector, FaultVerdict, OpClass};
+use crate::cio::fault::{corrupt_buffer, FaultInjector, FaultVerdict, FillError, FillTier, OpClass};
 use crate::cio::local_stage::GroupCache;
 use crate::util::units::SimTime;
 use anyhow::{Context, Result};
@@ -55,9 +67,19 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// How often an idle collector rescans for files committed without a
-/// wakeup (the [`commit_output`] free-function path). Notified commits
-/// never wait on this.
+/// wakeup (the [`commit_output`] free-function path) **once such a
+/// commit has been observed** — the scan-time accounting saw more staged
+/// files than commit notifications claimed. Notified commits never wait
+/// on this, and a run whose producers all notify never arms it.
 const UNNOTIFIED_RESCAN: Duration = Duration::from_millis(250);
+
+/// Idle resweep interval while *no* unnotified commit has been observed:
+/// the safety net that discovers the first notification-free
+/// [`commit_output`] of a run (there is no wakeup to learn about it
+/// from). Once one is observed the tighter [`UNNOTIFIED_RESCAN`]
+/// backstop arms; until then a streaming run pays one no-op scan per
+/// second instead of four.
+const QUIESCENT_RESCAN: Duration = Duration::from_secs(1);
 
 /// Prefix for in-flight publishes. Directory scans ([`staged_files`],
 /// retention lookups) skip entries carrying it; the final name only ever
@@ -646,7 +668,10 @@ pub fn distribute_to_lfs(layout: &LocalLayout, gfs_file: &str, shape: TreeShape)
 ///
 /// This free function does **not** wake a running [`LocalCollector`];
 /// prefer [`LocalCollector::commit`], which does. Files committed through
-/// here are still picked up by the deadline / rescan backstop.
+/// here are still picked up by the deadline / rescan backstop: the first
+/// one of a run is discovered by the quiescent sweep (within
+/// [`QUIESCENT_RESCAN`]); once observed, the tighter
+/// [`UNNOTIFIED_RESCAN`] backstop arms.
 pub fn commit_output(layout: &LocalLayout, node: u32, name: &str) -> Result<u64> {
     // A name carrying the in-flight publish prefix would be skipped by
     // every staging scan forever — refuse it instead of losing the data.
@@ -703,6 +728,9 @@ pub struct LocalCollector {
     signals: Arc<Vec<GroupSignal>>,
     handles: Vec<std::thread::JoinHandle<Result<CollectorStats>>>,
     archives_written: Arc<AtomicU64>,
+    /// The publish-feed stream this collector owns (directory + stage
+    /// prefix), terminated by [`LocalCollector::finish`].
+    stream: Option<(Arc<RetentionDirectory>, String)>,
 }
 
 /// Options for [`LocalCollector::start_with`].
@@ -719,6 +747,19 @@ pub struct CollectorOptions {
     /// next workflow stage re-reads it from the IFS instead of GFS. Must
     /// hold exactly one cache per IFS group.
     pub retention: Option<Arc<Vec<GroupCache>>>,
+    /// PR 9 publish-on-flush: announce every flushed archive to this
+    /// directory's publish feed the moment it lands on GFS, open the
+    /// stage prefix's stream at start, and terminate it at
+    /// [`LocalCollector::finish`] (`end_stream` on a clean drain,
+    /// `fail_stream` with the typed error otherwise) — so a downstream
+    /// stage consumes this collector's output while it is still running
+    /// and can never wedge waiting on a producer that died.
+    pub directory: Option<Arc<RetentionDirectory>>,
+    /// Failpoint registry for the flush path: evaluated as
+    /// [`OpClass::PublishCopy`] against the archive's GFS destination
+    /// before each flush, so fault tests can fail flushes (and thereby
+    /// the publish stream) deterministically. `None` in production.
+    pub faults: Option<Arc<FaultInjector>>,
 }
 
 /// Everything one group's collector thread needs, bundled for the spawn.
@@ -731,6 +772,8 @@ struct GroupCollectorCtx {
     prefix: String,
     flush_threads: usize,
     retention: Option<Arc<Vec<GroupCache>>>,
+    directory: Option<Arc<RetentionDirectory>>,
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl LocalCollector {
@@ -771,6 +814,12 @@ impl LocalCollector {
         let signals: Arc<Vec<GroupSignal>> =
             Arc::new((0..groups).map(|_| GroupSignal::default()).collect());
         let archives_written = Arc::new(AtomicU64::new(0));
+        // Open the stage's publish stream before any collector thread can
+        // flush: a subscriber must never observe an announce on a stream
+        // still carrying the previous run's terminator.
+        if let Some(dir) = &options.directory {
+            dir.open_stream(&prefix);
+        }
         // Split the machine's parallelism across the per-group flush
         // pipelines so concurrent flushes do not oversubscribe.
         let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -786,6 +835,8 @@ impl LocalCollector {
                 prefix: prefix.clone(),
                 flush_threads,
                 retention: options.retention.clone(),
+                directory: options.directory.clone(),
+                faults: options.faults.clone(),
             };
             let signals = signals.clone();
             let counter = archives_written.clone();
@@ -793,7 +844,8 @@ impl LocalCollector {
                 collector_loop(ctx, &signals[g as usize], &counter)
             }));
         }
-        Ok(LocalCollector { signals, handles, archives_written })
+        let stream = options.directory.map(|dir| (dir, prefix));
+        Ok(LocalCollector { signals, handles, archives_written, stream })
     }
 
     /// Commit a task's output and wake the owning group's collector — the
@@ -820,17 +872,57 @@ impl LocalCollector {
     }
 
     /// Signal shutdown, final-drain every staging dir, and return merged
-    /// stats.
+    /// stats. When the collector owns a publish stream, the stream is
+    /// terminated here: `end_stream` after a clean drain of every group,
+    /// `fail_stream` with the typed error when any group thread failed —
+    /// so a subscribed downstream stage always sees a terminator and can
+    /// never wedge waiting for announcements that will not come.
     pub fn finish(self) -> Result<CollectorStats> {
-        for signal in self.signals.iter() {
+        let LocalCollector { signals, handles, archives_written: _, stream } = self;
+        for signal in signals.iter() {
             signal.notify_stop();
         }
         let mut total = CollectorStats::default();
-        for h in self.handles {
-            let stats = h.join().map_err(|_| anyhow::anyhow!("collector thread panicked"))??;
-            total.merge(&stats);
+        let mut failure: Option<anyhow::Error> = None;
+        // Join every thread even after a failure: the stream must not be
+        // terminated while a surviving group could still announce.
+        for h in handles {
+            let joined =
+                h.join().map_err(|_| anyhow::anyhow!("collector thread panicked")).and_then(|r| r);
+            match joined {
+                Ok(stats) => total.merge(&stats),
+                Err(e) => {
+                    if failure.is_none() {
+                        failure = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = failure {
+            if let Some((dir, prefix)) = &stream {
+                dir.fail_stream(prefix, FillError::classify(FillTier::Staging, None, &e));
+            }
+            return Err(e);
+        }
+        if let Some((dir, prefix)) = &stream {
+            dir.end_stream(prefix);
         }
         Ok(total)
+    }
+}
+
+/// Cheap emptiness probe: does `staging` hold any non-temp entry? Early-
+/// exits on the first hit and stats nothing — the shutdown drain uses it
+/// to skip the full scan + flush machinery when the group is already
+/// known clean. An unreadable staging dir counts as dirty so the full
+/// scan surfaces the real error.
+fn staging_is_clean(staging: &Path) -> bool {
+    match std::fs::read_dir(staging) {
+        Ok(entries) => !entries.flatten().any(|e| {
+            !e.file_name().to_string_lossy().starts_with(TMP_PREFIX)
+                && e.metadata().is_ok_and(|m| m.is_file())
+        }),
+        Err(_) => false,
     }
 }
 
@@ -925,20 +1017,58 @@ fn collector_loop(
         prefix,
         flush_threads,
         retention,
+        directory,
+        faults,
     } = ctx;
     let mut stats = CollectorStats::default();
     let started = Instant::now();
     let mut last_write = Duration::ZERO;
     let mut seq = 0u64;
+    // Notified commits claimed but not yet accounted for by a flush. A
+    // scan that finds more staged files than this credit has observed an
+    // unnotified commit_output — the only evidence that arms the tight
+    // rescan backstop.
+    let mut credit: u64 = 0;
+    // Did the last scan observe unnotified staging activity? Starts
+    // false: until proven otherwise, producers are assumed to notify and
+    // idle wakeups stay on the slow quiescent sweep.
+    let mut unnotified_seen = false;
+    // Did the last scan leave the staging dir empty? Lets the shutdown
+    // drain skip the full scan when nothing can be buffered.
+    let mut last_scan_empty = false;
     loop {
         // Claim every wakeup observed so far: a commit arriving after this
         // point re-arms the condvar instead of being lost to the scan.
-        let stopping = {
+        let (claimed, stopping) = {
             let mut state = signal.state.lock().unwrap();
+            let p = state.pending;
             state.pending = 0;
-            state.stop
+            (p, state.stop)
         };
+        credit += claimed;
+        // Shortened shutdown drain: when the last scan left the group
+        // clean and nothing was claimed since, a cheap emptiness probe
+        // replaces the full scan + flush machinery. The probe looks at
+        // the real directory, so even an unobserved commit_output racing
+        // the shutdown is still drained.
+        if stopping
+            && claimed == 0
+            && credit == 0
+            && !unnotified_seen
+            && last_scan_empty
+            && staging_is_clean(&staging)
+        {
+            return Ok(stats);
+        }
+        let timer_wake = claimed == 0 && !stopping;
         let files = staged_files(&staging)?;
+        // The unnotified-commit observation: more files staged than
+        // notifications account for. Clamping the credit to what is
+        // actually staged keeps commits whose files vanished pre-scan
+        // from masking later unnotified ones forever.
+        unnotified_seen = files.len() as u64 > credit;
+        credit = credit.min(files.len() as u64);
+        last_scan_empty = files.is_empty();
         let buffered: u64 = files.iter().map(|(_, b)| b).sum();
         let since = SimTime::from_secs_f64((started.elapsed() - last_write).as_secs_f64());
         // Local staging is a real disk; free space is effectively
@@ -952,15 +1082,29 @@ fn collector_loop(
         if let Some(reason) = reason {
             let archive_name = format!("{prefix}-g{group}-{seq:05}.cioar");
             seq += 1;
-            match flush_group(&gfs, &archive_name, &files, compression, flush_threads) {
+            // Flush failpoint: evaluated against the archive's GFS
+            // destination so fault tests can fail (or degrade) the flush
+            // path itself, not just retention and fills.
+            let flushed = match faults
+                .as_deref()
+                .map(|f| f.evaluate(OpClass::PublishCopy, &gfs.join(&archive_name)))
+            {
+                Some(FaultVerdict::Fail(e)) => {
+                    Err(anyhow::Error::from(e).context("injected flush fault"))
+                }
+                _ => flush_group(&gfs, &archive_name, &files, compression, flush_threads),
+            };
+            match flushed {
                 Ok((0, _)) => {
                     // Every candidate vanished between scan and flush;
                     // nothing archived, nothing to record.
+                    credit = 0;
                     last_write = started.elapsed();
                 }
                 Ok((nfiles, nbytes)) => {
                     stats.record(reason, nfiles, nbytes);
                     counter.fetch_add(1, Ordering::Relaxed);
+                    credit = credit.saturating_sub(nfiles);
                     last_write = started.elapsed();
                     if let Some(caches) = &retention {
                         // §5.3: keep a copy on the IFS for the next stage.
@@ -977,8 +1121,31 @@ fn collector_loop(
                             }
                         }
                     }
+                    if let Some(dir) = &directory {
+                        // Publish-on-flush: subscribers see the archive
+                        // now, not at finish(). The GFS copy is already
+                        // durable, so announcing is correct even when
+                        // retention declined or failed (readers fall back
+                        // to the canonical GFS copy).
+                        dir.announce(&archive_name, group);
+                        stats.announced += 1;
+                    }
                 }
                 Err(e) => {
+                    // A transient flush failure is retried on a later
+                    // wakeup, so the stream stays open — the announce
+                    // just arrives late. A non-retryable one (degraded
+                    // staging/GFS tree: ENOSPC/EROFS, or a logic-level
+                    // failure no retry can fix) terminates the stream
+                    // *immediately* with the typed error: a downstream
+                    // stage blocked on this group's next announcement
+                    // unwedges now instead of at finish().
+                    if let Some(dir) = &directory {
+                        let typed = FillError::classify(FillTier::Staging, None, &e);
+                        if !typed.retryable {
+                            dir.fail_stream(&prefix, typed);
+                        }
+                    }
                     // The staged files are intact; the rescan backstop
                     // guarantees a retry. Only a failed FINAL drain may
                     // abandon data, so only then does the error propagate
@@ -999,20 +1166,38 @@ fn collector_loop(
         if stopping {
             return Ok(stats);
         }
-        // Sleep until a commit wakes us, the maxDelay edge passes (only
+        // A timer wakeup whose scan found nothing unaccounted and tripped
+        // no flush did pure discovery work; count it so "the backstop
+        // fires needlessly" is a measurable claim.
+        if timer_wake && reason.is_none() && !unnotified_seen {
+            stats.idle_rescans += 1;
+        }
+        // Sleep until a commit wakes us or the maxDelay edge passes (only
         // meaningful while data is buffered — an empty staging dir never
-        // deadline-flushes), or the unnotified-commit backstop expires.
+        // deadline-flushes). The 250 ms rescan backstop arms only when
+        // the scan above observed an unnotified commit — producers that
+        // all notify never pay it; until the first unnotified commit is
+        // observed, a slow quiescent sweep is the only safety net.
         let has_backlog = reason.is_none() && buffered > 0;
+        let rescan = if unnotified_seen { UNNOTIFIED_RESCAN } else { QUIESCENT_RESCAN };
         let wait = if has_backlog {
             let since_now =
                 SimTime::from_secs_f64((started.elapsed() - last_write).as_secs_f64());
-            policy.until_deadline(since_now).min(UNNOTIFIED_RESCAN)
+            policy.until_deadline(since_now).min(rescan)
         } else {
-            UNNOTIFIED_RESCAN
+            rescan
         };
-        let state = signal.state.lock().unwrap();
-        if state.pending == 0 && !state.stop {
-            let _unused = signal.cv.wait_timeout(state, wait).unwrap();
+        // Wait out the full budget across spurious wakeups: a scan is
+        // only worth repeating on a commit notification, a stop, or the
+        // rescan deadline itself.
+        let deadline = Instant::now() + wait;
+        let mut state = signal.state.lock().unwrap();
+        while state.pending == 0 && !state.stop {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            state = signal.cv.wait_timeout(state, deadline - now).unwrap().0;
         }
     }
 }
@@ -1374,5 +1559,69 @@ mod tests {
             "median commit->flush latency {median:?}; condvar path should beat the \
              old 5 ms poll quantum"
         );
+    }
+
+    #[test]
+    fn notified_only_run_never_arms_the_backstop() {
+        // All commits use the notify path, then the collector idles past
+        // two of the old 250 ms backstop quanta. The fixed loop must not
+        // have burned a single idle rescan — the backstop arms only when
+        // a scan observes an unnotified commit.
+        let root = tmp("noidle");
+        let l = LocalLayout::create(&root, 2, 2).unwrap();
+        let policy =
+            Policy { max_delay: SimTime::from_secs(3600), max_data: 1, min_free_space: 0 };
+        let collector = LocalCollector::start(&l, policy, Compression::None);
+        for i in 0..5 {
+            let name = format!("n{i}.out");
+            std::fs::write(l.lfs(0).join(&name), vec![7u8; 64]).unwrap();
+            collector.commit(&l, 0, &name).unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while collector.archives_written() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Idle window longer than two old-style backstop periods but
+        // shorter than the quiescent sweep.
+        std::thread::sleep(Duration::from_millis(600));
+        let stats = collector.finish().unwrap();
+        assert_eq!(stats.files, 5);
+        assert_eq!(
+            stats.idle_rescans, 0,
+            "an all-notifying workload must never pay a backstop rescan"
+        );
+    }
+
+    #[test]
+    fn flushes_announce_to_the_publish_feed_before_finish() {
+        let root = tmp("announce");
+        let l = LocalLayout::create(&root, 2, 2).unwrap();
+        let dir = Arc::new(RetentionDirectory::new(l.ifs_groups()));
+        let policy =
+            Policy { max_delay: SimTime::from_secs(3600), max_data: 1, min_free_space: 0 };
+        let collector = LocalCollector::start_with(
+            &l,
+            policy,
+            Compression::None,
+            CollectorOptions {
+                archive_prefix: Some("s0".to_string()),
+                directory: Some(dir.clone()),
+                ..CollectorOptions::default()
+            },
+        )
+        .unwrap();
+        let mut sub = dir.subscribe();
+        std::fs::write(l.lfs(0).join("a.out"), vec![1u8; 64]).unwrap();
+        collector.commit(&l, 0, "a.out").unwrap();
+        // Publish-on-flush: the announcement arrives while the collector
+        // is still running, well before finish().
+        let batch = dir.wait_for_prefix(&mut sub, "s0", Duration::from_secs(10)).unwrap();
+        assert_eq!(batch.events.len(), 1, "flushed archive must be announced immediately");
+        assert!(!batch.ended);
+        let stats = collector.finish().unwrap();
+        assert_eq!(stats.announced, 1);
+        // finish() terminates the stream cleanly.
+        let fin = dir.wait_for_prefix(&mut sub, "s0", Duration::from_secs(10)).unwrap();
+        assert!(fin.ended, "a clean drain must end the stream");
     }
 }

@@ -10,7 +10,9 @@
 //!   outputs commit through a per-stage [`LocalCollector`] whose flushes
 //!   land on `gfs/` **and are retained** in the owning group's
 //!   `ifs/<group>/data/` directory under [`GroupCache`] bounded-LRU
-//!   control (eviction unlinks the retained file).
+//!   control (eviction unlinks the retained file) **and are announced**
+//!   to the shared [`RetentionDirectory`]'s publish feed the moment they
+//!   land (PR 9 publish-on-flush — see *Execution model* below).
 //! * Stage N+1's tasks open stage N's output archives via
 //!   [`crate::cio::archive::Reader`] random access — archive-as-input —
 //!   resolving each archive through a **routed four-step read path**.
@@ -96,6 +98,68 @@
 //!   by the next resolve — never a wedged latch, and a reader that
 //!   loses the staging file mid-read falls back to the canonical GFS
 //!   copy (counted in [`CacheSnapshot::fallback_reads`]).
+//!
+//! # Execution model (PR 9: publish-on-flush, subscribe-on-read)
+//!
+//! The runner offers two executors over the same [`StageGraph`] and the
+//! same task bodies:
+//!
+//! * **Barriered** ([`StageRunner::run`]) — the reference semantics. A
+//!   stage starts only when every dependency has *completed* (collector
+//!   drained, archives indexed); its input is the dependencies' final
+//!   post-drain listing. Workflow wall-clock approaches the **sum** of
+//!   stage times.
+//! * **Pipelined** ([`StageRunner::run_pipelined`]) — every stage starts
+//!   at once under streaming readiness ([`StageGraph::stream_ready`]: a
+//!   stage may start once its dependencies have *started*). Each stage
+//!   runs a feeder thread subscribed to its dependencies' publish
+//!   streams ([`RetentionDirectory::subscribe`] /
+//!   [`RetentionDirectory::wait_for_prefixes`]); the producing
+//!   collectors **announce every archive as it flushes** — not at
+//!   `finish()` — and the feeder indexes each announced archive's member
+//!   listing from the canonical GFS copy (a footer read, no data
+//!   movement). A task's per-member read
+//!   ([`StageInput::read_member`] / [`StageInput::read_member_range`])
+//!   blocks until the one archive holding that member is announced —
+//!   object-granular dataflow synchronization — then resolves through
+//!   the identical routed four-step read path. Workflow wall-clock
+//!   approaches the **max** of stage times (the pipelined-vs-barriered
+//!   CI gate; [`StageStats::overlap_s`] / `WorkflowReport::overlap_fraction`
+//!   quantify the banked overlap).
+//!
+//! The stream protocol keeps late subscribers and re-runs exact: the
+//! feed is an append-only event log with a generation cursor, so a
+//! subscriber that arrives after archives were announced replays them
+//! losslessly; a stage re-run's clear
+//! ([`GroupCache::clear_prefix`]) *retracts* the purged names from live
+//! streams so a subscriber never chases deleted bytes; and a mid-stream
+//! *eviction* deliberately does **not** retract — the GFS copy is
+//! canonical, so the reader re-resolves through the routed fill chain
+//! exactly as in a barriered run.
+//!
+//! End-of-stream and failure are explicit terminators, never inferred:
+//! a clean collector drain ends the stream
+//! ([`RetentionDirectory::end_stream`]), while a flush failure that
+//! cannot be retried (degraded staging/GFS tree, or a failed *final*
+//! drain) fails it with the typed [`FillError`]
+//! ([`RetentionDirectory::fail_stream`]) — every blocked downstream
+//! reader unwedges with that error instead of waiting for
+//! announcements that will never come. A *transient* flush failure
+//! terminates nothing: the flush retries on a later wakeup and the
+//! announcement simply arrives late. Every wait on the subscription
+//! path (feeder, member waits, drained-listing waits) is
+//! timeout-bounded and re-checked, so no fill or subscription path can
+//! park a waiter indefinitely. Whole-input accessors
+//! ([`StageInput::archives`], [`StageInput::members`]) need the
+//! complete listing and therefore block until end-of-stream — bodies
+//! that can name their members should prefer the per-member readers,
+//! which is where the overlap comes from.
+//!
+//! Accounting under pipelining: concurrent stages share the group
+//! caches, so cache-tier deltas cannot be attributed per stage; the
+//! workflow-wide tier deltas ride on the *final* stage's
+//! [`StageStats`] (report totals stay exact), while collector stats,
+//! `archives`, `elapsed_s`, and `overlap_s` remain genuinely per stage.
 //!
 //! # Failure semantics (the PR-6 fault chain)
 //!
@@ -222,7 +286,7 @@
 
 use crate::cio::archive::{verify_archive, ChunkSums, Compression, Reader};
 use crate::cio::collector::{CollectorStats, Policy};
-use crate::cio::directory::RetentionDirectory;
+use crate::cio::directory::{RetentionDirectory, StreamEvent};
 use crate::cio::extent::{chunk_runs, ExtentMap};
 use crate::cio::fault::{
     is_retryable, is_storage_full, FaultInjector, FillError, FillTier, RetryPolicy,
@@ -240,7 +304,7 @@ use anyhow::{Context, Result};
 use std::collections::hash_map::DefaultHasher;
 use std::collections::{BTreeMap, HashMap};
 use std::hash::{Hash, Hasher};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::time::{Duration, Instant};
@@ -452,13 +516,31 @@ impl Fill {
         }
     }
 
+    /// How long a waiter that lost the hedge claim trusts the claimer
+    /// before assuming it died and re-opening the claim. Scaled up from
+    /// the hedge delay so a merely-slow hedger is not second-guessed.
+    fn takeover_grace(delay: Duration) -> Duration {
+        (delay * 2).max(Duration::from_millis(50))
+    }
+
     /// Wait up to `delay` for the filler; if the latch is still pending
     /// after that, try to claim the (single) hedged fill. `None` means
     /// this caller claimed it — launch the hedge and then `wait`;
-    /// `Some(result)` is the resolved latch (a later claimer keeps
-    /// waiting indefinitely, like [`Fill::wait`]).
+    /// `Some(result)` is the resolved latch.
+    ///
+    /// A waiter that observes the hedge already claimed must **never**
+    /// park indefinitely: the claimer can die between claiming and
+    /// publishing (a panicked worker thread), and an unbounded `cv.wait`
+    /// here would wedge every remaining waiter forever. Instead the
+    /// post-claim wait is timeout-bounded and re-checks the latch; after
+    /// a takeover grace with no publish the claim is re-opened and the
+    /// next deadline check re-races it — exactly one of the survivors
+    /// wins the CAS and launches a replacement hedge, the rest re-arm
+    /// their grace. A live-but-slow hedger costs at most one redundant
+    /// fill (the latch is first-success-wins); a dead one costs one
+    /// grace period instead of a wedge.
     fn wait_or_hedge(&self, delay: Duration) -> Option<std::result::Result<CacheOutcome, FillError>> {
-        let deadline = Instant::now() + delay;
+        let mut deadline = Instant::now() + delay;
         let mut state = self.state.lock().unwrap();
         loop {
             match &*state {
@@ -471,8 +553,15 @@ impl Fill {
                 if self.hedge.compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire).is_ok() {
                     return None;
                 }
-                // Someone else is hedging; fall back to a plain wait.
-                state = self.cv.wait(state).unwrap();
+                // Someone else holds the hedge claim. Trust it for one
+                // grace period, then re-open the claim so a survivor can
+                // take over from a claimer that died before publishing.
+                let grace = Fill::takeover_grace(delay);
+                deadline = now + grace;
+                state = self.cv.wait_timeout(state, grace).unwrap().0;
+                if Instant::now() >= deadline && matches!(&*state, FillState::Pending) {
+                    self.hedge.store(false, Ordering::Release);
+                }
                 continue;
             }
             state = self.cv.wait_timeout(state, deadline - now).unwrap().0;
@@ -2688,6 +2777,13 @@ impl GroupCache {
                 for name in &doomed {
                     cache.remove(name);
                     self.directory.withdraw(name, self.group);
+                    // PR 9: the name must also leave any live publish
+                    // stream — a pipelined downstream holding it would
+                    // otherwise probe bytes this clear is about to purge
+                    // and burn a stale fallback per archive. (Idempotent
+                    // across the per-group clears: the first retract
+                    // emits the event, the rest are no-ops.)
+                    self.directory.retract(name);
                 }
             }
         }
@@ -2701,6 +2797,7 @@ impl GroupCache {
             let entry = entry?;
             let name = entry.file_name().to_string_lossy().to_string();
             if stage_artifact_matches(&name, prefix) {
+                self.directory.retract(&name);
                 std::fs::remove_file(entry.path())
                     .with_context(|| format!("clearing stale retained archive {name}"))?;
             }
@@ -3145,37 +3242,275 @@ pub struct StageExec<'a> {
     pub run: &'a (dyn Fn(u32, &StageInput<'_>) -> Result<Vec<u8>> + Sync),
 }
 
+/// Live index of upstream output for a pipelined stage (PR 9): the
+/// stage's feeder thread appends archives (and their member listings) as
+/// the upstream collectors announce them on the
+/// [`RetentionDirectory`] publish feed, and task threads block per
+/// member — object-granular dataflow synchronization — until the one
+/// they need lands, the stream ends, or it fails with a typed error.
+struct StreamFeed {
+    state: Mutex<StreamIndex>,
+    cv: Condvar,
+    /// Drained-stream snapshot backing the whole-input accessors
+    /// ([`StageInput::archives`] / [`StageInput::members`]).
+    snapshot: OnceLock<(Vec<(String, u32)>, BTreeMap<String, (String, u32)>)>,
+}
+
+#[derive(Default)]
+struct StreamIndex {
+    /// Announced (and not since retracted) archives: name → producer.
+    archives: BTreeMap<String, u32>,
+    /// member name → (archive name, producing group).
+    members: BTreeMap<String, (String, u32)>,
+    /// Every upstream stream delivered its end-of-stream marker.
+    done: bool,
+    /// The typed terminator, when an upstream stream failed.
+    error: Option<FillError>,
+}
+
+impl StreamFeed {
+    fn new() -> StreamFeed {
+        StreamFeed {
+            state: Mutex::new(StreamIndex::default()),
+            cv: Condvar::new(),
+            snapshot: OnceLock::new(),
+        }
+    }
+
+    /// Index one announced archive with its member listing.
+    fn announce(&self, archive: String, group: u32, members: Vec<String>) {
+        let mut st = self.state.lock().unwrap();
+        for m in members {
+            st.members.insert(m, (archive.clone(), group));
+        }
+        st.archives.insert(archive, group);
+        self.cv.notify_all();
+    }
+
+    /// Drop a retracted archive and every member it carried (stage
+    /// re-run clear): readers re-block until the re-announce.
+    fn retract(&self, archive: &str) {
+        let mut st = self.state.lock().unwrap();
+        st.archives.remove(archive);
+        st.members.retain(|_, loc| loc.0 != archive);
+        self.cv.notify_all();
+    }
+
+    /// Clean end-of-stream: every upstream drained.
+    fn finish(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.done = true;
+        self.cv.notify_all();
+    }
+
+    /// Terminate with the upstream's typed error (first failure wins);
+    /// every blocked reader wakes and surfaces it.
+    fn fail(&self, err: FillError) {
+        let mut st = self.state.lock().unwrap();
+        if st.error.is_none() {
+            st.error = Some(err);
+        }
+        st.done = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until `member` is announced, the stream ends without it, or
+    /// the stream fails. All waits are bounded re-check slices, so a
+    /// reader can never park indefinitely.
+    fn wait_member(&self, member: &str) -> Result<(String, u32)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(loc) = st.members.get(member) {
+                return Ok(loc.clone());
+            }
+            if let Some(err) = &st.error {
+                return Err(anyhow::Error::new(err.clone()).context(format!(
+                    "upstream stream failed before producing member {member:?}"
+                )));
+            }
+            if st.done {
+                anyhow::bail!("no upstream stage produced member {member:?}");
+            }
+            st = self.cv.wait_timeout(st, Duration::from_millis(100)).unwrap().0;
+        }
+    }
+
+    /// The fully drained stream (blocks until end-of-stream; a failed
+    /// stream snapshots whatever had arrived). Archives sorted by name.
+    fn drained(&self) -> &(Vec<(String, u32)>, BTreeMap<String, (String, u32)>) {
+        self.snapshot.get_or_init(|| {
+            let mut st = self.state.lock().unwrap();
+            while !st.done {
+                st = self.cv.wait_timeout(st, Duration::from_millis(100)).unwrap().0;
+            }
+            let archives = st.archives.iter().map(|(n, &g)| (n.clone(), g)).collect();
+            (archives, st.members.clone())
+        })
+    }
+}
+
+/// Consume the dependencies' publish streams for one pipelined stage:
+/// index every announced archive's members from the canonical GFS copy
+/// (a footer read, no data movement), drop retracted names, and
+/// terminate the feed when every upstream ends — or with the typed
+/// error when one fails. `stop` is set once the stage's tasks are all
+/// done, so a feeder never outlives its readers' interest.
+fn feeder_loop(
+    directory: &RetentionDirectory,
+    gfs: &Path,
+    prefixes: &[String],
+    feed: &StreamFeed,
+    stop: &AtomicBool,
+) {
+    let mut sub = directory.subscribe();
+    let refs: Vec<&str> = prefixes.iter().map(|s| s.as_str()).collect();
+    loop {
+        match directory.wait_for_prefixes(&mut sub, &refs, Duration::from_millis(50)) {
+            Ok(batch) => {
+                // Net announce/retract pairs within the batch before
+                // touching GFS: a replayed log carries a prior run's
+                // announcements together with their retractions (the
+                // stage prepare appends the retractions before any
+                // subscriber starts), and indexing such a stale name
+                // would probe a GFS file the prepare already deleted.
+                let mut fresh: Vec<(String, u32)> = Vec::new();
+                for ev in batch.events {
+                    match ev {
+                        StreamEvent::Announced { archive, group } => {
+                            fresh.push((archive, group));
+                        }
+                        StreamEvent::Retracted { archive } => {
+                            fresh.retain(|(a, _)| *a != archive);
+                            feed.retract(&archive);
+                        }
+                    }
+                }
+                for (archive, group) in fresh {
+                    let indexed = Reader::open(&gfs.join(&archive)).map(|r| {
+                        r.entries().iter().map(|e| e.name.clone()).collect::<Vec<_>>()
+                    });
+                    match indexed {
+                        Ok(members) => feed.announce(archive, group, members),
+                        Err(e) => {
+                            let e =
+                                e.context(format!("indexing announced archive {archive}"));
+                            feed.fail(FillError::classify(FillTier::Gfs, None, &e));
+                            return;
+                        }
+                    }
+                }
+                if batch.ended {
+                    feed.finish();
+                    return;
+                }
+            }
+            Err(err) => {
+                feed.fail(err);
+                return;
+            }
+        }
+        if stop.load(Ordering::Acquire) {
+            feed.finish();
+            return;
+        }
+    }
+}
+
+/// Upstream index handed to `StageRunner::execute_stage`: the
+/// dependencies' post-drain listing (barriered [`StageRunner::run`]) or
+/// their live publish streams, identified by stage archive prefix
+/// (pipelined [`StageRunner::run_pipelined`]).
+enum StageSource<'a> {
+    Static {
+        /// upstream (archive name, producing group), sorted by name.
+        archives: &'a [(String, u32)],
+        /// member name → (archive name, producing group).
+        members: &'a BTreeMap<String, (String, u32)>,
+    },
+    Stream {
+        /// The dependencies' archive prefixes (`s<dep>`).
+        prefixes: Vec<String>,
+    },
+}
+
+/// Where a [`StageInput`] finds its upstream index: the post-drain
+/// listing (barriered [`StageRunner::run`]) or a live publish-feed
+/// stream (pipelined [`StageRunner::run_pipelined`]).
+enum InputSource<'a> {
+    Static {
+        /// member name → (archive name, producing group).
+        members: &'a BTreeMap<String, (String, u32)>,
+        /// upstream (archive name, producing group), sorted by name.
+        archives: &'a [(String, u32)],
+    },
+    Stream { feed: &'a StreamFeed },
+}
+
 /// Read access to the upstream stages' output archives for one task.
 /// Every archive resolve goes through the task's group cache and the
 /// routed four-step read path: hit → retained IFS copy; miss → transfer
 /// from the cheapest live retaining group the [`RetentionDirectory`]
 /// routes to, then from the producing group, else the GFS round trip
 /// (re-staged locally either way).
+///
+/// Under pipelined execution the per-member readers
+/// ([`StageInput::read_member`] / [`StageInput::read_member_range`])
+/// are the streaming path: they block until the member's archive is
+/// announced, then resolve through the same routed read path. The
+/// whole-input accessors ([`StageInput::archives`],
+/// [`StageInput::members`], [`StageInput::member_archive`]) need the
+/// complete listing, so they block until the upstream streams end.
 pub struct StageInput<'a> {
     gfs: PathBuf,
     caches: &'a [GroupCache],
     /// The reading task's IFS group.
     group: u32,
-    /// member name → (archive name, producing group).
-    members: &'a BTreeMap<String, (String, u32)>,
-    /// upstream (archive name, producing group), sorted by name.
-    archives: &'a [(String, u32)],
+    source: InputSource<'a>,
 }
 
 impl StageInput<'_> {
-    /// Upstream archives as `(name, producing group)`.
+    /// Upstream archives as `(name, producing group)`, sorted by name.
+    /// Pipelined: blocks until every upstream stream ended.
     pub fn archives(&self) -> &[(String, u32)] {
-        self.archives
+        match &self.source {
+            InputSource::Static { archives, .. } => archives,
+            InputSource::Stream { feed } => &feed.drained().0,
+        }
     }
 
-    /// All upstream member names (sorted).
+    fn members_map(&self) -> &BTreeMap<String, (String, u32)> {
+        match &self.source {
+            InputSource::Static { members, .. } => members,
+            InputSource::Stream { feed } => &feed.drained().1,
+        }
+    }
+
+    /// All upstream member names (sorted). Pipelined: blocks until every
+    /// upstream stream ended.
     pub fn members(&self) -> impl Iterator<Item = &str> {
-        self.members.keys().map(|s| s.as_str())
+        self.members_map().keys().map(|s| s.as_str())
     }
 
     /// The archive holding `member`, if any upstream stage produced it.
+    /// Pipelined: blocks until every upstream stream ended — prefer
+    /// [`StageInput::read_member`], which blocks only for that member.
     pub fn member_archive(&self, member: &str) -> Option<&str> {
-        self.members.get(member).map(|(a, _)| a.as_str())
+        self.members_map().get(member).map(|(a, _)| a.as_str())
+    }
+
+    /// Resolve `member` to `(archive name, producing group)`. The
+    /// streaming path blocks until the member's archive is announced —
+    /// object-granular dataflow synchronization — and surfaces the
+    /// stream's typed terminator if the upstream failed (or ended
+    /// without producing it).
+    fn locate(&self, member: &str) -> Result<(String, u32)> {
+        match &self.source {
+            InputSource::Static { members, .. } => members
+                .get(member)
+                .cloned()
+                .with_context(|| format!("no upstream stage produced member {member:?}")),
+            InputSource::Stream { feed } => feed.wait_member(member),
+        }
     }
 
     /// The reading task's IFS group.
@@ -3216,18 +3551,15 @@ impl StageInput<'_> {
         offset: u64,
         len: usize,
     ) -> Result<(Vec<u8>, CacheOutcome)> {
-        let (archive, _owner) = self
-            .members
-            .get(member)
-            .with_context(|| format!("no upstream stage produced member {member:?}"))?;
+        let (archive, _owner) = self.locate(member)?;
         let cache = &self.caches[self.group as usize];
-        match cache.read_member_range_via(&self.gfs, archive, self.caches, member, offset, len) {
+        match cache.read_member_range_via(&self.gfs, &archive, self.caches, member, offset, len) {
             Ok(result) => Ok(result),
             // Same eviction-race honesty as read_with: the retained copy
             // (or the staging file) can die under the resolve; the
             // canonical GFS copy serves the read, counted as a fallback.
             Err(primary) => {
-                self.gfs_retry(archive, primary, |r| r.extract_range(member, offset, len))
+                self.gfs_retry(&archive, primary, |r| r.extract_range(member, offset, len))
             }
         }
     }
@@ -3238,14 +3570,11 @@ impl StageInput<'_> {
         member: &str,
         read: impl Fn(&Reader) -> Result<Vec<u8>>,
     ) -> Result<(Vec<u8>, CacheOutcome)> {
-        let (archive, _owner) = self
-            .members
-            .get(member)
-            .with_context(|| format!("no upstream stage produced member {member:?}"))?;
-        let (reader, outcome) = self.open_archive(archive)?;
+        let (archive, _owner) = self.locate(member)?;
+        let (reader, outcome) = self.open_archive(&archive)?;
         match read(&reader) {
             Ok(bytes) => Ok((bytes, outcome)),
-            Err(primary) => self.gfs_retry(archive, primary, read),
+            Err(primary) => self.gfs_retry(&archive, primary, read),
         }
     }
 
@@ -3355,6 +3684,11 @@ pub struct StageStats {
     pub peer_lease_expirations: u64,
     /// Wall-clock seconds for the stage (tasks + final drain).
     pub elapsed_s: f64,
+    /// Seconds this stage ran concurrently with the slowest-overlapping
+    /// of its upstream dependencies (PR 9 pipelined execution; 0 under
+    /// the barriered [`StageRunner::run`], where a stage starts only
+    /// after its dependencies drained).
+    pub overlap_s: f64,
 }
 
 /// Whole-workflow outcome.
@@ -3362,6 +3696,10 @@ pub struct StageStats {
 pub struct WorkflowReport {
     /// Per-stage stats in completion order.
     pub stages: Vec<StageStats>,
+    /// Whole-workflow wall-clock seconds. Barriered execution approaches
+    /// the *sum* of stage times; pipelined execution approaches the
+    /// *max* (the pipelined-vs-barriered CI gate).
+    pub wall_s: f64,
 }
 
 impl WorkflowReport {
@@ -3412,6 +3750,24 @@ impl WorkflowReport {
     /// PR 8).
     pub fn hedged_fills(&self) -> u64 {
         self.stages.iter().map(|s| s.hedged_fills).sum()
+    }
+
+    /// Total seconds stages spent running concurrently with their
+    /// upstream dependencies (PR 9; 0 for a barriered run).
+    pub fn overlap_s(&self) -> f64 {
+        self.stages.iter().map(|s| s.overlap_s).sum()
+    }
+
+    /// Fraction of total stage time spent overlapped with upstream
+    /// production, in [0,1) — 0 for a barriered run, approaching
+    /// `(n-1)/n` for an n-stage chain fully pipelined.
+    pub fn overlap_fraction(&self) -> f64 {
+        let total: f64 = self.stages.iter().map(|s| s.elapsed_s).sum();
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.overlap_s() / total
+        }
     }
 
     /// Workflow-wide retention hit rate in [0,1] (0 when nothing read).
@@ -3582,6 +3938,7 @@ impl StageRunner {
             execs.len(),
             self.graph.len()
         );
+        let t0 = Instant::now();
         let mut produced: Vec<Option<ProducedArchives>> = Vec::new();
         produced.resize_with(self.graph.len(), || None);
         let mut report = WorkflowReport::default();
@@ -3608,12 +3965,194 @@ impl StageRunner {
                 self.graph.complete(i);
             }
         }
+        report.wall_s = t0.elapsed().as_secs_f64();
         Ok(report)
     }
 
-    /// Run one stage: collector up (per-stage archive prefix, retention
-    /// into the group caches), tasks over worker threads, final drain,
-    /// then index this stage's archives for downstream readers.
+    /// Execute the whole workflow **pipelined** (PR 9): every stage
+    /// starts at once (streaming readiness —
+    /// [`StageGraph::stream_ready`]), each downstream stage subscribes
+    /// to its dependencies' publish streams, and each task read blocks
+    /// per member until the archive holding it is announced. Workflow
+    /// wall-clock approaches max(stage) instead of sum(stages); the
+    /// barriered [`StageRunner::run`] remains the reference executor.
+    ///
+    /// Failure semantics: an upstream flush failure (or degraded group)
+    /// terminates that stage's stream with a typed
+    /// [`FillError`] — downstream readers surface it as task errors
+    /// instead of wedging — and any task failure aborts every stage's
+    /// remaining tasks while each collector still drains, so every
+    /// stream gets a terminator. The first failing stage's error (in
+    /// index order) is returned. A mid-stream evicted archive is
+    /// re-resolved through the normal routed fill path, exactly as in a
+    /// barriered run.
+    ///
+    /// Accounting: stages share the group caches and run concurrently,
+    /// so cache-tier deltas cannot be attributed per stage; the whole
+    /// workflow's tier counters are carried on the **final** stage's
+    /// [`StageStats`] entry (keeping every [`WorkflowReport`] total
+    /// exact), while collector stats, `archives`, `elapsed_s`, and
+    /// `overlap_s` remain genuinely per stage.
+    pub fn run_pipelined(&mut self, execs: &[StageExec<'_>]) -> Result<WorkflowReport> {
+        anyhow::ensure!(
+            execs.len() == self.graph.len(),
+            "{} stage bodies for a {}-stage graph",
+            execs.len(),
+            self.graph.len()
+        );
+        let n = self.graph.len();
+        // Stages are authored in topological order (StageGraph::new
+        // enforces deps point backwards), so starting them in index
+        // order satisfies streaming readiness; the graph still checks.
+        for i in 0..n {
+            anyhow::ensure!(
+                self.graph.stream_ready(i),
+                "stage {i} is not stream-ready in index order (already run?)"
+            );
+            self.graph.start(i);
+        }
+        // Clear every stage's stale artifacts before any subscriber
+        // exists: a feeder must never see this run's own clears as
+        // mid-stream retractions.
+        for i in 0..n {
+            self.prepare_stage(i)?;
+        }
+        let t0 = Instant::now();
+        let before: Vec<CacheSnapshot> = self.caches.iter().map(|c| c.snapshot()).collect();
+        let leases_before = self.directory.lease_expirations();
+        let abort = AtomicBool::new(false);
+        type StageOutcome = Result<(StageStats, ProducedArchives, f64, f64)>;
+        let this: &StageRunner = self;
+        let results: Vec<StageOutcome> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n)
+                .map(|i| {
+                    let abort = &abort;
+                    let exec = &execs[i];
+                    let deps = this.graph.stage(i).deps.clone();
+                    scope.spawn(move || {
+                        let start_s = t0.elapsed().as_secs_f64();
+                        let prefixes: Vec<String> =
+                            deps.iter().map(|&d| format!("s{d}")).collect();
+                        let r = this.execute_stage(
+                            i,
+                            exec,
+                            StageSource::Stream { prefixes },
+                            abort,
+                        );
+                        let end_s = t0.elapsed().as_secs_f64();
+                        r.map(|(stats, prod)| (stats, prod, start_s, end_s))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .map_err(|_| anyhow::anyhow!("stage thread panicked"))
+                        .and_then(|r| r)
+                })
+                .collect()
+        });
+        let mut stages: Vec<StageStats> = Vec::with_capacity(n);
+        let mut intervals: Vec<(f64, f64)> = Vec::with_capacity(n);
+        let mut failure: Option<anyhow::Error> = None;
+        for (i, res) in results.into_iter().enumerate() {
+            match res {
+                Ok((stats, _produced, start_s, end_s)) => {
+                    stages.push(stats);
+                    intervals.push((start_s, end_s));
+                    if failure.is_none() {
+                        self.graph.complete(i);
+                    }
+                }
+                Err(e) => {
+                    if failure.is_none() {
+                        let name = self.graph.stage(i).name.clone();
+                        failure = Some(e.context(format!("stage {name}")));
+                    }
+                }
+            }
+        }
+        if let Some(e) = failure {
+            return Err(e);
+        }
+        // Overlap: how long each stage ran while the slowest-overlapping
+        // of its dependencies was still producing.
+        for (i, stats) in stages.iter_mut().enumerate() {
+            let (s, e) = intervals[i];
+            let mut overlap = 0.0f64;
+            for &d in &self.graph.stage(i).deps {
+                let (ds, de) = intervals[d];
+                overlap = overlap.max((e.min(de) - s.max(ds)).max(0.0));
+            }
+            stats.overlap_s = overlap;
+        }
+        // Workflow-wide cache-tier deltas on the final stage (see the
+        // accounting note in the method docs).
+        let after: Vec<CacheSnapshot> = self.caches.iter().map(|c| c.snapshot()).collect();
+        let delta = |f: fn(&CacheSnapshot) -> u64| -> u64 {
+            before.iter().zip(&after).map(|(b, a)| f(a) - f(b)).sum()
+        };
+        if let Some(last) = stages.last_mut() {
+            let resolves = delta(|s| s.hits) + delta(|s| s.misses);
+            let neighbor_transfers =
+                delta(|s| s.neighbor_transfers) + delta(|s| s.partial_neighbor_reads);
+            let routed_transfers =
+                delta(|s| s.routed_transfers) + delta(|s| s.partial_routed_reads);
+            let gfs_misses = delta(|s| s.gfs_copies)
+                + delta(|s| s.gfs_direct)
+                + delta(|s| s.partial_gfs_reads);
+            last.ifs_hits = resolves.saturating_sub(neighbor_transfers + gfs_misses);
+            last.neighbor_transfers = neighbor_transfers;
+            last.routed_transfers = routed_transfers;
+            last.producer_transfers = neighbor_transfers.saturating_sub(routed_transfers);
+            last.gfs_misses = gfs_misses;
+            last.chunk_fills = delta(|s| s.chunk_fills);
+            last.fallback_reads = delta(|s| s.fallback_reads);
+            last.retries = delta(|s| s.retries);
+            last.rerouted_fills = delta(|s| s.rerouted_fills);
+            last.quarantined_sources = delta(|s| s.quarantined_sources);
+            last.degraded_reads = delta(|s| s.degraded_reads);
+            last.deadline_aborts = delta(|s| s.deadline_aborts);
+            last.corruption_detected = delta(|s| s.corruption_detected);
+            last.scrub_repairs = delta(|s| s.scrub_repairs);
+            last.hedged_fills = delta(|s| s.hedged_fills);
+            last.hedge_wins = delta(|s| s.hedge_wins);
+            last.peer_lease_expirations =
+                self.directory.lease_expirations() - leases_before;
+        }
+        Ok(WorkflowReport { stages, wall_s: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Fresh-run semantics for one stage: stage archives are derived
+    /// artifacts. A previous (possibly failed) run on this layout may
+    /// have left `s<i>-g*` archives behind with other sequence numbers;
+    /// the post-stage index scan must never serve those stale bytes as
+    /// this run's output, so clear them before the collector starts.
+    /// The same goes for stale *retained* copies of this stage in the
+    /// IFS data dirs — cleared through the caches so warm-started
+    /// accounting forgets them too (earlier stages' retained archives
+    /// survive: they are exactly what a warm start is for), and
+    /// retracted from any live publish stream so a pipelined subscriber
+    /// never chases purged bytes.
+    fn prepare_stage(&self, stage_idx: usize) -> Result<()> {
+        let prefix = format!("s{stage_idx}");
+        clear_matching(&self.layout.gfs(), &prefix)?;
+        for cache in self.caches.iter() {
+            cache.clear_prefix(&prefix)?;
+        }
+        // Open the stage's publish stream here — before any pipelined
+        // subscriber can exist — so every stale live name's retraction
+        // is in the feed log ahead of the first subscription replay; a
+        // feeder must never index a prior run's announcement whose GFS
+        // file the clears above just deleted. (The collector re-opens
+        // the stream when it starts; by then this is a no-op.)
+        self.directory.open_stream(&prefix);
+        Ok(())
+    }
+
+    /// Run one stage barriered: prepare, then execute against the
+    /// dependencies' post-drain listing.
     fn run_stage(
         &self,
         stage_idx: usize,
@@ -3621,25 +4160,43 @@ impl StageRunner {
         upstream_archives: &[(String, u32)],
         upstream_members: &BTreeMap<String, (String, u32)>,
     ) -> Result<(StageStats, ProducedArchives)> {
+        self.prepare_stage(stage_idx)?;
+        let abort = AtomicBool::new(false);
+        self.execute_stage(
+            stage_idx,
+            exec,
+            StageSource::Static { archives: upstream_archives, members: upstream_members },
+            &abort,
+        )
+    }
+
+    /// Execute one prepared stage: collector up (per-stage archive
+    /// prefix, retention into the group caches, publish-on-flush into
+    /// the shared directory), tasks over worker threads — plus, for a
+    /// streaming source, a feeder thread consuming the dependencies'
+    /// publish streams — final drain, then index this stage's archives
+    /// for downstream readers. Per-stage cache-tier deltas are recorded
+    /// only for a static source; under pipelining the caches are shared
+    /// by concurrently running stages, so [`StageRunner::run_pipelined`]
+    /// accounts the workflow-wide deltas instead.
+    fn execute_stage(
+        &self,
+        stage_idx: usize,
+        exec: &StageExec<'_>,
+        source: StageSource<'_>,
+        abort: &AtomicBool,
+    ) -> Result<(StageStats, ProducedArchives)> {
         let stage_name = self.graph.stage(stage_idx).name.clone();
         let t0 = Instant::now();
-        let before: Vec<CacheSnapshot> = self.caches.iter().map(|c| c.snapshot()).collect();
+        let per_stage_deltas = matches!(source, StageSource::Static { .. });
+        let before: Vec<CacheSnapshot> = if per_stage_deltas {
+            self.caches.iter().map(|c| c.snapshot()).collect()
+        } else {
+            Vec::new()
+        };
         let leases_before = self.directory.lease_expirations();
         let prefix = format!("s{stage_idx}");
         let gfs = self.layout.gfs();
-        // Fresh-run semantics: stage archives are derived artifacts. A
-        // previous (possibly failed) run on this layout may have left
-        // `s<i>-g*` archives behind with other sequence numbers; the
-        // post-stage index scan must never serve those stale bytes as
-        // this run's output, so clear them before the collector starts.
-        // The same goes for stale *retained* copies of this stage in the
-        // IFS data dirs — cleared through the caches so warm-started
-        // accounting forgets them too (earlier stages' retained archives
-        // survive: they are exactly what a warm start is for).
-        clear_matching(&gfs, &prefix)?;
-        for cache in self.caches.iter() {
-            cache.clear_prefix(&prefix)?;
-        }
         let collector = LocalCollector::start_with(
             &self.layout,
             self.config.policy.clone(),
@@ -3647,56 +4204,87 @@ impl StageRunner {
             CollectorOptions {
                 archive_prefix: Some(prefix.clone()),
                 retention: Some(self.caches.clone()),
+                directory: Some(self.directory.clone()),
+                faults: self.config.faults.clone(),
             },
         )?;
 
+        let feed = StreamFeed::new();
+        let feeder_stop = AtomicBool::new(false);
         let next = AtomicU32::new(0);
-        let abort = AtomicBool::new(false);
         let errors: Mutex<Vec<anyhow::Error>> = Mutex::new(Vec::new());
         let workers = self.config.threads.max(1).min(exec.tasks.max(1) as usize);
         std::thread::scope(|scope| {
-            for _ in 0..workers {
-                let next = &next;
-                let abort = &abort;
-                let errors = &errors;
-                let collector = &collector;
+            if let StageSource::Stream { prefixes } = &source {
+                let feed = &feed;
+                let feeder_stop = &feeder_stop;
+                let directory = &self.directory;
                 let gfs = &gfs;
-                let stage_name = &stage_name;
                 scope.spawn(move || {
-                    loop {
-                        let t = next.fetch_add(1, Ordering::Relaxed);
-                        if t >= exec.tasks || abort.load(Ordering::Relaxed) {
-                            return;
-                        }
-                        let node = t % self.layout.nodes;
-                        let input = StageInput {
-                            gfs: gfs.clone(),
-                            caches: &self.caches,
-                            group: self.layout.group_of(node),
-                            members: upstream_members,
-                            archives: upstream_archives,
-                        };
-                        let result = (exec.run)(t, &input).and_then(|bytes| {
-                            let name = task_output_name(stage_idx, stage_name, t);
-                            std::fs::write(self.layout.lfs(node).join(&name), &bytes)
-                                .with_context(|| format!("writing task output {name}"))?;
-                            collector.commit(&self.layout, node, &name)?;
-                            Ok(())
-                        });
-                        if let Err(e) = result {
-                            abort.store(true, Ordering::Relaxed);
-                            errors
-                                .lock()
-                                .unwrap()
-                                .push(e.context(format!("stage {stage_name}, task {t}")));
-                            return;
-                        }
-                    }
+                    feeder_loop(directory, gfs, prefixes, feed, feeder_stop);
                 });
             }
+            let source = &source;
+            let feed = &feed;
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let next = &next;
+                    let abort = abort;
+                    let errors = &errors;
+                    let collector = &collector;
+                    let gfs = &gfs;
+                    let stage_name = &stage_name;
+                    scope.spawn(move || {
+                        loop {
+                            let t = next.fetch_add(1, Ordering::Relaxed);
+                            if t >= exec.tasks || abort.load(Ordering::Relaxed) {
+                                return;
+                            }
+                            let node = t % self.layout.nodes;
+                            let input = StageInput {
+                                gfs: gfs.clone(),
+                                caches: &self.caches,
+                                group: self.layout.group_of(node),
+                                source: match source {
+                                    StageSource::Static { members, archives } => {
+                                        InputSource::Static {
+                                            members: *members,
+                                            archives: *archives,
+                                        }
+                                    }
+                                    StageSource::Stream { .. } => InputSource::Stream { feed },
+                                },
+                            };
+                            let result = (exec.run)(t, &input).and_then(|bytes| {
+                                let name = task_output_name(stage_idx, stage_name, t);
+                                std::fs::write(self.layout.lfs(node).join(&name), &bytes)
+                                    .with_context(|| format!("writing task output {name}"))?;
+                                collector.commit(&self.layout, node, &name)?;
+                                Ok(())
+                            });
+                            if let Err(e) = result {
+                                abort.store(true, Ordering::Relaxed);
+                                errors
+                                    .lock()
+                                    .unwrap()
+                                    .push(e.context(format!("stage {stage_name}, task {t}")));
+                                return;
+                            }
+                        }
+                    })
+                })
+                .collect();
+            // Join the workers explicitly so the feeder can be released
+            // the moment nobody reads the feed any more (it also exits
+            // on upstream end-of-stream, whichever comes first).
+            for h in handles {
+                let _ = h.join();
+            }
+            feeder_stop.store(true, Ordering::Release);
         });
         // Always drain the collector, even on task failure, so staged
-        // outputs of the successful tasks are not abandoned.
+        // outputs of the successful tasks are not abandoned — and so the
+        // stage's publish stream always gets its terminator.
         let collector_stats = collector.finish()?;
         if let Some(e) = errors.into_inner().unwrap().into_iter().next() {
             return Err(e);
@@ -3758,8 +4346,15 @@ impl StageRunner {
             scrub_repairs: delta(|s| s.scrub_repairs),
             hedged_fills: delta(|s| s.hedged_fills),
             hedge_wins: delta(|s| s.hedge_wins),
-            peer_lease_expirations: self.directory.lease_expirations() - leases_before,
+            // Leases expire directory-wide; only a barriered (static)
+            // stage may claim the interval as its own.
+            peer_lease_expirations: if per_stage_deltas {
+                self.directory.lease_expirations() - leases_before
+            } else {
+                0
+            },
             elapsed_s: t0.elapsed().as_secs_f64(),
+            overlap_s: 0.0,
         };
         Ok((stats, ProducedArchives { archives, members }))
     }
@@ -4241,6 +4836,65 @@ mod tests {
     }
 
     #[test]
+    fn hedge_claim_reopens_after_claimer_dies() {
+        // The PR-9 wedge fix: a waiter that loses the hedge CAS used to
+        // park on an unbounded cv.wait — if the claimer died between
+        // claiming and publishing (a panicked worker), every remaining
+        // waiter wedged forever. The post-claim wait is now grace-bounded
+        // and re-opens the claim.
+        let fill = Fill::new();
+        let delay = Duration::from_millis(10);
+        // First waiter claims the hedge... and dies before publishing.
+        assert!(fill.wait_or_hedge(delay).is_none(), "first timeout claims the hedge");
+        // A survivor must not park forever behind the dead claim: after
+        // the takeover grace it re-opens the claim and wins it itself.
+        let t0 = Instant::now();
+        assert!(fill.wait_or_hedge(delay).is_none(), "survivor takes over the dead claim");
+        let waited = t0.elapsed();
+        assert!(
+            waited >= Fill::takeover_grace(delay),
+            "takeover only after the grace, not a hot spin ({waited:?})"
+        );
+        assert!(waited < Duration::from_secs(10), "bounded takeover, not a wedge");
+        // The replacement hedge resolves the latch for everyone.
+        assert!(fill.publish_first(FillState::Done(CacheOutcome::GfsMiss)));
+        assert!(matches!(fill.wait_or_hedge(delay), Some(Ok(CacheOutcome::GfsMiss))));
+    }
+
+    #[test]
+    fn rerun_clear_withdraws_archives_from_live_streams() {
+        // Satellite 3: a stage re-run's clear_prefix must push
+        // retractions to live publish-feed subscribers — a pipelined
+        // downstream holding the stale name would otherwise probe bytes
+        // the clear just purged.
+        let root = tmp("rerun-retract");
+        let layout = LocalLayout::create(&root, 1, 1).unwrap();
+        let name = "s1-g0-00000.cioar";
+        write_archive(&layout.gfs(), name, &[("m", b"stale")]);
+        let caches = GroupCache::per_group(&layout, mib(16));
+        caches[0].retain(&layout.gfs().join(name), name).unwrap();
+        let dir = caches[0].directory().clone();
+        dir.open_stream("s1");
+        dir.announce(name, 0);
+        // Drain the setup events; the name is live at the cursor.
+        let mut sub = dir.subscribe();
+        let batch = dir.wait_for_prefix(&mut sub, "s1", Duration::from_secs(5)).unwrap();
+        assert!(
+            matches!(batch.events.last(), Some(StreamEvent::Announced { .. })),
+            "{:?}",
+            batch.events
+        );
+        caches[0].clear_prefix("s1").unwrap();
+        let batch = dir.wait_for_prefix(&mut sub, "s1", Duration::from_secs(5)).unwrap();
+        assert_eq!(
+            batch.events,
+            vec![StreamEvent::Retracted { archive: name.to_string() }],
+            "the clear must reach the live subscriber exactly once"
+        );
+        assert!(!batch.ended, "a re-run clear is not a stream terminator");
+    }
+
+    #[test]
     fn three_stage_chain_runs_with_retention_hits() {
         let root = tmp("runner");
         let layout = LocalLayout::create(&root, 4, 2).unwrap(); // 2 groups
@@ -4299,6 +4953,85 @@ mod tests {
         let r = Reader::open(&runner.layout().gfs().join(&final_archives[0])).unwrap();
         let bytes = r.extract(&task_output_name(2, "reduce", 0)).unwrap();
         assert_eq!(u64::from_le_bytes(bytes.as_slice().try_into().unwrap()), expected);
+    }
+
+    #[test]
+    fn pipelined_chain_matches_barriered_output() {
+        // The streaming executor must produce byte-identical results to
+        // the barriered reference on the same workflow — subscribe-on-read
+        // is an execution strategy, not a semantic change.
+        let root = tmp("runner-pipe");
+        let layout = LocalLayout::create(&root, 4, 2).unwrap();
+        let graph = StageGraph::chain(&["produce", "transform", "reduce"]);
+        let config = StageRunnerConfig {
+            // max_data: 1 → every commit flushes, so announcements stream
+            // out while the stage is still running.
+            policy: Policy { max_delay: SimTime::from_secs(3600), max_data: 1, min_free_space: 0 },
+            compression: Compression::None,
+            cache_capacity: mib(64),
+            neighbor_limit: mib(64),
+            fill_chunk_bytes: kib(64),
+            threads: 4,
+            retry: RetryPolicy::default(),
+            faults: None,
+        };
+        let mut runner = StageRunner::new(layout, graph, config);
+        let tasks = 8u32;
+        let produce =
+            |t: u32, _input: &StageInput<'_>| -> Result<Vec<u8>> { Ok(vec![t as u8; 256]) };
+        let transform = |t: u32, input: &StageInput<'_>| -> Result<Vec<u8>> {
+            // Streaming path: blocks until this one member's archive is
+            // announced, not until the produce stage drains.
+            let (bytes, _) = input.read_member(&task_output_name(0, "produce", t))?;
+            anyhow::ensure!(bytes == vec![t as u8; 256], "piped bytes corrupt for task {t}");
+            let sum: u64 = bytes.iter().map(|&b| b as u64).sum();
+            Ok(sum.to_le_bytes().to_vec())
+        };
+        let reduce = |_t: u32, input: &StageInput<'_>| -> Result<Vec<u8>> {
+            let mut total = 0u64;
+            for t in 0..tasks {
+                let (bytes, _) = input.read_member(&task_output_name(1, "transform", t))?;
+                total += u64::from_le_bytes(bytes.as_slice().try_into()?);
+            }
+            Ok(total.to_le_bytes().to_vec())
+        };
+        let report = runner
+            .run_pipelined(&[
+                StageExec { tasks, run: &produce },
+                StageExec { tasks, run: &transform },
+                StageExec { tasks: 1, run: &reduce },
+            ])
+            .unwrap();
+        assert_eq!(report.stages.len(), 3);
+        assert!(report.wall_s > 0.0);
+        assert_eq!(report.stages[0].collector.files, tasks as u64);
+        assert!(
+            report.stages[0].collector.announced >= 1,
+            "pipelined stages must publish-on-flush"
+        );
+        // The whole-workflow tier totals ride on the final stage entry
+        // (shared caches make per-stage attribution impossible); the
+        // report-level totals must still balance.
+        let expected: u64 = (0..tasks as u64).map(|t| t * 256).sum();
+        let final_archives = &report.stages[2].archives;
+        assert_eq!(final_archives.len(), 1);
+        let r = Reader::open(&runner.layout().gfs().join(&final_archives[0])).unwrap();
+        let bytes = r.extract(&task_output_name(2, "reduce", 0)).unwrap();
+        assert_eq!(u64::from_le_bytes(bytes.as_slice().try_into().unwrap()), expected);
+        assert!(
+            report.ifs_hits() + report.neighbor_transfers() + report.gfs_misses() > 0,
+            "the workflow-wide tier deltas must be accounted"
+        );
+        // A second pipelined run on the same runner refuses: the graph
+        // is consumed (every stage already started).
+        let err = runner
+            .run_pipelined(&[
+                StageExec { tasks, run: &produce },
+                StageExec { tasks, run: &transform },
+                StageExec { tasks: 1, run: &reduce },
+            ])
+            .expect_err("a consumed graph must not re-run");
+        assert!(format!("{err:#}").contains("stream-ready"), "{err:#}");
     }
 
     #[test]
@@ -4477,8 +5210,7 @@ mod tests {
             gfs: layout.gfs(),
             caches: caches.as_slice(),
             group: 0,
-            members: &members,
-            archives: &archives,
+            source: InputSource::Static { members: &members, archives: &archives },
         };
         // Corrupt one data byte of the retained copy behind the
         // accounting (the index still parses): the hit extract fails its

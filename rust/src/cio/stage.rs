@@ -23,9 +23,24 @@ pub struct StageSpec {
 }
 
 /// Dataflow-synchronized stage readiness tracking.
+///
+/// Two readiness notions coexist (PR 9):
+///
+/// * **Barriered** ([`StageGraph::ready`]): a stage may run once every
+///   dependency *completed* — the abstract model's rule 3 taken at file
+///   granularity, where "the writer completes" means the whole stage
+///   drained.
+/// * **Streaming** ([`StageGraph::stream_ready`]): a stage may *start*
+///   once every dependency has *started* — under publish-on-flush its
+///   readers consume the dependencies' live publish streams, so rule 3
+///   is enforced per object (each read blocks until that object's
+///   archive is announced) instead of per stage. Completion ordering is
+///   unchanged: [`StageGraph::complete`] still requires the
+///   dependencies to have completed first.
 #[derive(Debug, Clone)]
 pub struct StageGraph {
     stages: Vec<StageSpec>,
+    started: Vec<bool>,
     done: Vec<bool>,
 }
 
@@ -44,7 +59,8 @@ impl StageGraph {
             }
         }
         let done = vec![false; stages.len()];
-        Ok(StageGraph { stages, done })
+        let started = vec![false; stages.len()];
+        Ok(StageGraph { stages, started, done })
     }
 
     /// Simple chain `a -> b -> c` (the docking workflow shape).
@@ -80,10 +96,32 @@ impl StageGraph {
         !self.done[i] && self.stages[i].deps.iter().all(|&d| self.done[d])
     }
 
+    /// Streaming readiness (PR 9): may stage `i` *start* under pipelined
+    /// execution? True once every dependency has started — its readers
+    /// then consume the dependencies' publish streams, blocking per
+    /// object rather than per stage.
+    pub fn stream_ready(&self, i: usize) -> bool {
+        !self.started[i] && !self.done[i] && self.stages[i].deps.iter().all(|&d| self.started[d])
+    }
+
+    /// Mark stage `i` started (pipelined execution); panics if a
+    /// dependency has not started — a reader subscribed to a stream whose
+    /// producer cannot exist yet would wait forever.
+    pub fn start(&mut self, i: usize) {
+        assert!(self.stream_ready(i), "starting stage {i} before its dependencies");
+        self.started[i] = true;
+    }
+
+    /// Has stage `i` started (or completed — completion implies started)?
+    pub fn started(&self, i: usize) -> bool {
+        self.started[i] || self.done[i]
+    }
+
     /// Mark stage `i` complete; panics if its dependencies were not done
     /// (that would be a dataflow-synchronization violation).
     pub fn complete(&mut self, i: usize) {
         assert!(self.ready(i), "completing stage {i} out of order");
+        self.started[i] = true;
         self.done[i] = true;
     }
 
@@ -293,6 +331,33 @@ mod tests {
         assert!(!g.ready(3), "join waits for both writers");
         g.complete(2);
         assert!(g.ready(3));
+    }
+
+    #[test]
+    fn stream_readiness_gates_on_started_not_done() {
+        let mut g = StageGraph::chain(&["produce", "transform", "reduce"]);
+        // Barriered readiness: only stage 0. Streaming: same, initially.
+        assert!(g.stream_ready(0) && !g.stream_ready(1));
+        g.start(0);
+        // Stage 1 may *start* (it consumes stage 0's stream) while stage
+        // 0 is still running — but it is not barrier-ready.
+        assert!(g.stream_ready(1) && !g.ready(1));
+        g.start(1);
+        assert!(g.stream_ready(2));
+        g.start(2);
+        assert!(!g.stream_ready(2), "a started stage does not restart");
+        // Completion ordering is unchanged by streaming starts.
+        g.complete(0);
+        g.complete(1);
+        g.complete(2);
+        assert!(g.all_done());
+    }
+
+    #[test]
+    #[should_panic(expected = "before its dependencies")]
+    fn stream_start_before_dependency_panics() {
+        let mut g = StageGraph::chain(&["a", "b"]);
+        g.start(1);
     }
 
     #[test]

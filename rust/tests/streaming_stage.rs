@@ -1,0 +1,218 @@
+//! Integration: PR-9 streaming stage execution (publish-on-flush,
+//! subscribe-on-read).
+//!
+//! * `downstream_reads_before_upstream_finishes`: the pipelined proof —
+//!   a consumer task reads a producer's member while the producer stage
+//!   is still running (a producer task refuses to finish until the
+//!   downstream read is observed), and the report carries the overlap.
+//! * `pipelined_bytes_exact_under_churn`: byte-exactness under
+//!   publish/subscribe/evict churn — a hair-trigger flush policy and a
+//!   tiny retention cache force announcements, subscriptions, and
+//!   evictions to race while every member must still read back exactly.
+//! * `upstream_flush_failure_fails_subscribers_typed`: a non-retryable
+//!   flush failure (injected ENOSPC on the publish path) must terminate
+//!   the producer's stream with a typed [`FillError`] — blocked
+//!   subscribers unwedge with the storage error in bounded time instead
+//!   of waiting for announcements that will never come.
+
+use cio::cio::archive::Compression;
+use cio::cio::collector::Policy;
+use cio::cio::fault::{FaultAction, FaultInjector, FillError, OpClass, RetryPolicy};
+use cio::cio::local::LocalLayout;
+use cio::cio::local_stage::{
+    task_output_name, StageExec, StageInput, StageRunner, StageRunnerConfig,
+};
+use cio::cio::stage::StageGraph;
+use cio::util::units::{kib, mib, SimTime};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn workspace(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cio-stream-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A config whose collector flushes on every commit (`max_data: 1`), so
+/// announcements stream out while the stage is still producing.
+fn streaming_config(cache_capacity: u64, threads: usize) -> StageRunnerConfig {
+    StageRunnerConfig {
+        policy: Policy { max_delay: SimTime::from_secs(3600), max_data: 1, min_free_space: 0 },
+        compression: Compression::None,
+        cache_capacity,
+        neighbor_limit: mib(8),
+        fill_chunk_bytes: kib(16),
+        threads,
+        retry: RetryPolicy::default(),
+        faults: None,
+    }
+}
+
+#[test]
+fn downstream_reads_before_upstream_finishes() {
+    let root = workspace("overlap");
+    let layout = LocalLayout::create(&root, 4, 2).unwrap();
+    let graph = StageGraph::chain(&["produce", "consume"]);
+    let mut runner = StageRunner::new(layout, graph, streaming_config(mib(64), 4));
+    let tasks = 4u32;
+    // The forcing handshake: producer task `tasks-1` refuses to return
+    // until the consumer has read task 0's output. Under barriered
+    // semantics (downstream waits for the producer's finish()) that read
+    // can never happen first, the gate times out, and the test fails —
+    // so a pass proves the downstream read genuinely preceded the
+    // upstream drain.
+    let downstream_read = AtomicBool::new(false);
+    let produce = |t: u32, _input: &StageInput<'_>| -> anyhow::Result<Vec<u8>> {
+        if t == tasks - 1 {
+            let deadline = Instant::now() + Duration::from_secs(30);
+            while !downstream_read.load(Ordering::Acquire) {
+                anyhow::ensure!(
+                    Instant::now() < deadline,
+                    "downstream never read while the producer was still running \
+                     (pipelining broken)"
+                );
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+        Ok(vec![t as u8 + 1; 512])
+    };
+    let consume = |_t: u32, input: &StageInput<'_>| -> anyhow::Result<Vec<u8>> {
+        // Blocks only until task 0's archive is announced — well before
+        // the gated last producer task lets the stage drain.
+        let (bytes, _) = input.read_member(&task_output_name(0, "produce", 0))?;
+        anyhow::ensure!(bytes == vec![1u8; 512], "streamed bytes corrupt");
+        downstream_read.store(true, Ordering::Release);
+        Ok(bytes)
+    };
+    let report = runner
+        .run_pipelined(&[StageExec { tasks, run: &produce }, StageExec { tasks: 1, run: &consume }])
+        .unwrap();
+    assert!(downstream_read.load(Ordering::Acquire));
+    assert_eq!(report.stages.len(), 2);
+    // The consumer ran concurrently with its dependency for (at least)
+    // the handshake window, and the report says so.
+    assert!(
+        report.stages[1].overlap_s > 0.0,
+        "consume must overlap produce: {:?}",
+        report.stages[1]
+    );
+    assert!(report.overlap_s() > 0.0 && report.overlap_fraction() > 0.0);
+    // Pipelined wall-clock is bounded by the sum of stage times minus
+    // the overlap actually banked (loose sanity, not the perf gate).
+    let sum: f64 = report.stages.iter().map(|s| s.elapsed_s).sum();
+    assert!(report.wall_s < sum, "wall {} !< sum {}", report.wall_s, sum);
+}
+
+#[test]
+fn pipelined_bytes_exact_under_churn() {
+    let root = workspace("churn");
+    let layout = LocalLayout::create(&root, 4, 2).unwrap();
+    let graph = StageGraph::chain(&["produce", "transform", "reduce"]);
+    // Retention cache far smaller than the stage output: every flush
+    // evicts earlier archives, so subscribers routinely resolve
+    // announced-then-evicted archives through routed fills / the
+    // canonical GFS copy while new announcements keep arriving.
+    let mut runner = StageRunner::new(layout, graph, streaming_config(2048, 4));
+    let tasks = 24u32;
+    let payload = |t: u32| -> Vec<u8> {
+        (0..384u32).map(|i| (t.wrapping_mul(31).wrapping_add(i) & 0xFF) as u8).collect()
+    };
+    let produce = |t: u32, _input: &StageInput<'_>| -> anyhow::Result<Vec<u8>> {
+        // Pace the producers slightly so flushes interleave with commits
+        // (streaming announcements, not one shutdown batch).
+        std::thread::sleep(Duration::from_millis(2));
+        Ok(payload(t))
+    };
+    let transform = |t: u32, input: &StageInput<'_>| -> anyhow::Result<Vec<u8>> {
+        let (bytes, _) = input.read_member(&task_output_name(0, "produce", t))?;
+        anyhow::ensure!(bytes == payload(t), "stage-1 streamed bytes corrupt for task {t}");
+        let sum: u64 = bytes.iter().map(|&b| b as u64).sum();
+        Ok(sum.to_le_bytes().to_vec())
+    };
+    let reduce = |_t: u32, input: &StageInput<'_>| -> anyhow::Result<Vec<u8>> {
+        let mut total = 0u64;
+        for t in 0..tasks {
+            let (bytes, _) = input.read_member(&task_output_name(1, "transform", t))?;
+            total += u64::from_le_bytes(bytes.as_slice().try_into()?);
+        }
+        Ok(total.to_le_bytes().to_vec())
+    };
+    let report = runner
+        .run_pipelined(&[
+            StageExec { tasks, run: &produce },
+            StageExec { tasks, run: &transform },
+            StageExec { tasks: 1, run: &reduce },
+        ])
+        .unwrap();
+    // Every transform task verified its input inside the closure; the
+    // reduce total pins the end-to-end bytes.
+    let expected: u64 = (0..tasks)
+        .map(|t| payload(t).iter().map(|&b| b as u64).sum::<u64>())
+        .sum();
+    let final_archive = &report.stages[2].archives[0];
+    let r = cio::cio::archive::Reader::open(&runner.layout().gfs().join(final_archive)).unwrap();
+    let bytes = r.extract(&task_output_name(2, "reduce", 0)).unwrap();
+    assert_eq!(u64::from_le_bytes(bytes.as_slice().try_into().unwrap()), expected);
+    // The hair-trigger policy really did stream (at least one archive
+    // per group, all announced before finish) and the tiny cache really
+    // did churn.
+    assert!(report.stages[0].collector.archives >= 2, "{:?}", report.stages[0].collector);
+    assert_eq!(
+        report.stages[0].collector.announced, report.stages[0].collector.archives,
+        "every flushed archive must be announced"
+    );
+    assert!(
+        report.gfs_misses() + report.neighbor_transfers() > 0,
+        "evict churn must force non-local resolves"
+    );
+}
+
+#[test]
+fn upstream_flush_failure_fails_subscribers_typed() {
+    let root = workspace("flushfail");
+    let layout = LocalLayout::create(&root, 2, 1).unwrap();
+    let graph = StageGraph::chain(&["produce", "consume"]);
+    let faults = Arc::new(FaultInjector::new());
+    // Every stage-0 flush hits a full disk: non-retryable, so the very
+    // first failure must terminate the "s0" stream with the typed error.
+    faults.inject(OpClass::PublishCopy, "s0-", FaultAction::Enospc);
+    let mut config = streaming_config(mib(16), 2);
+    config.faults = Some(faults);
+    let mut runner = StageRunner::new(layout, graph, config);
+    let produce =
+        |t: u32, _input: &StageInput<'_>| -> anyhow::Result<Vec<u8>> { Ok(vec![t as u8; 128]) };
+    let consume = |_t: u32, input: &StageInput<'_>| -> anyhow::Result<Vec<u8>> {
+        // Blocks on an announcement that will never come; must unwedge
+        // with the stream's typed terminator, not hang.
+        let (bytes, _) = input.read_member(&task_output_name(0, "produce", 0))?;
+        Ok(bytes)
+    };
+    let t0 = Instant::now();
+    let err = runner
+        .run_pipelined(&[
+            StageExec { tasks: 2, run: &produce },
+            StageExec { tasks: 1, run: &consume },
+        ])
+        .expect_err("a dead publish path must fail the workflow");
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "failure must propagate in bounded time, not wedge"
+    );
+    // The first failing stage in index order is the producer, whose
+    // final drain hit the injected full disk.
+    let text = format!("{err:#}");
+    assert!(text.contains("produce"), "{text}");
+    assert!(cio::cio::fault::is_storage_full(&err), "{text}");
+    // The subscriber side saw the *typed* terminator: the stream is
+    // failed in the directory, and any subscriber draining it gets the
+    // storage-classified FillError, not a generic hang or string.
+    let dir = runner.directory();
+    let mut sub = dir.subscribe();
+    let typed: FillError = dir
+        .wait_for_prefix(&mut sub, "s0", Duration::from_secs(5))
+        .expect_err("the s0 stream must carry its typed terminator");
+    assert!(typed.storage, "subscribers must see the storage classification: {typed:?}");
+    assert!(!typed.retryable, "a full publish path is not transient: {typed:?}");
+}
