@@ -40,9 +40,9 @@ fn read_mix_sweep() {
     let tasks = 16u32;
     println!("--- stage-2 read-tier mix vs cn_per_ifs (real bytes, {nodes} nodes) ---");
     println!(
-        "{:>10} {:>6} {:>8} {:>7} {:>9} {:>8} {:>9} {:>6} {:>7} {:>8} {:>8} {:>7} {:>6}",
+        "{:>10} {:>6} {:>8} {:>7} {:>9} {:>8} {:>9} {:>6} {:>7} {:>8} {:>8} {:>7} {:>6} {:>7} {:>7}",
         "cn_per_ifs", "groups", "ifs_hit", "routed", "producer", "gfs", "fallback", "hit%",
-        "retries", "rerouted", "degraded", "corrupt", "hedged"
+        "retries", "rerouted", "degraded", "corrupt", "hedged", "repair", "scrubs"
     );
     for cn in [1u32, 2, 4, 8] {
         let root =
@@ -63,6 +63,7 @@ fn read_mix_sweep() {
             threads: 4,
             retry: RetryPolicy::default(),
             faults: None,
+            repair: None,
         };
         let mut runner = StageRunner::new(layout, graph, config);
         let produce =
@@ -84,7 +85,7 @@ fn read_mix_sweep() {
         let s = &report.stages[1];
         let total = (s.ifs_hits + s.neighbor_transfers + s.gfs_misses).max(1);
         println!(
-            "{:>10} {:>6} {:>8} {:>7} {:>9} {:>8} {:>9} {:>5.0}% {:>7} {:>8} {:>8} {:>7} {:>6}",
+            "{:>10} {:>6} {:>8} {:>7} {:>9} {:>8} {:>9} {:>5.0}% {:>7} {:>8} {:>8} {:>7} {:>6} {:>7} {:>7}",
             cn,
             runner.layout().ifs_groups(),
             s.ifs_hits,
@@ -104,7 +105,11 @@ fn read_mix_sweep() {
             // arrival and hedged second fills — both zero on a healthy
             // uncontended run.
             s.corruption_detected,
-            s.hedged_fills
+            s.hedged_fills,
+            // PR-10 self-healing columns: background repair pushes and
+            // scheduled scrub passes — zero with no repair config.
+            s.repair_pushes,
+            s.scrub_cycles
         );
         drop(runner);
         let _ = std::fs::remove_dir_all(&root);

@@ -8,6 +8,9 @@
 //! tail trim (waiter p99 with a stalled primary, hedge armed vs off),
 //! the PR-9 pipelined-vs-barriered workflow (streaming stage execution
 //! wall-clock + overlap fraction — pipelined < barriered is the CI
+//! gate), the PR-10 self-healing cases (repair convergence after a
+//! total replica loss, and the maintenance daemon's warm-hit
+//! interference — daemon-on p50 within 5% of daemon-off is the CI
 //! gate), and PJRT scoring latency (skipped when `make artifacts` has
 //! not run).
 //!
@@ -25,9 +28,11 @@ use cio::cio::distributor::estimate_served_read;
 use cio::cio::fault::{FaultAction, FaultInjector, OpClass, RetryPolicy};
 use cio::cio::local::{LocalCollector, LocalLayout};
 use cio::cio::local_stage::{
-    task_output_name, ClusterRecordSource, GroupCache, StageExec, StageInput, StageRunner,
-    StageRunnerConfig,
+    task_output_name, ClusterRecordSource, GroupCache, RunnerRepairExecutor, StageExec,
+    StageInput, StageRunner, StageRunnerConfig,
 };
+use cio::cio::placement::LearnedPlacement;
+use cio::cio::repair::{AvailabilityManager, MaintenanceDaemon, RepairConfig, RepairExecutor};
 use cio::cio::stage::{CacheOutcome, StageGraph};
 use cio::cio::transport::{SocketTransport, TransportServer};
 use cio::config::ClusterConfig;
@@ -561,6 +566,7 @@ fn main() {
         threads: 1,
         retry: RetryPolicy::default(),
         faults: None,
+        repair: None,
     };
     let mut sp_runner = StageRunner::new(splayout, sp_graph, sp_config);
     let sp_tasks = 8u32;
@@ -1148,6 +1154,7 @@ fn main() {
             threads: 1,
             retry: RetryPolicy::default(),
             faults: None,
+            repair: None,
         };
         let mut runner = StageRunner::new(layout, graph, config);
         let produce = |t: u32, _in: &StageInput<'_>| -> anyhow::Result<Vec<u8>> {
@@ -1193,6 +1200,150 @@ fn main() {
     b.metric("workflow: pipelined speedup", wf_barrier / wf_pipe, "x");
     b.metric("workflow: pipelined overlap fraction", wf_overlap, "frac");
     let _ = std::fs::remove_dir_all(&wfroot);
+
+    // --- Self-healing convergence (the PR-10 tentpole): a three-group
+    // cluster loses *every* replica of a hot working set at once (the
+    // sole retaining group evicts it wholesale); the availability
+    // manager absorbs the loss events and re-replicates each archive to
+    // its popularity target under the per-tick byte budget. Measured:
+    // wall-clock from loss to full convergence, then proof that warm
+    // reads are served entirely by the repaired replicas (zero new GFS
+    // traffic).
+    let rroot = dir.join("stage2-repair");
+    let _ = std::fs::remove_dir_all(&rroot);
+    let rlayout = LocalLayout::create(&rroot, 3, 1).unwrap();
+    let r_arch = if fast { 6usize } else { 12 };
+    let r_bytes = kib(256) as usize;
+    let mut r_names: Vec<String> = Vec::new();
+    for i in 0..r_arch {
+        let name = format!("s0-g0-{i:05}.cioar");
+        let mut w = Writer::create(&rlayout.gfs().join(&name)).unwrap();
+        w.add("records.bin", &vec![(i * 37) as u8; r_bytes], Compression::None).unwrap();
+        w.finish().unwrap();
+        r_names.push(name);
+    }
+    let r_caches = GroupCache::per_group(&rlayout, mib(64));
+    for name in &r_names {
+        r_caches[0].retain(&rlayout.gfs().join(name), name).unwrap();
+    }
+    let r_cfg = RepairConfig {
+        replica_target: 2,
+        popularity_threshold: 0,
+        byte_budget_per_tick: mib(1),
+        max_inflight_per_tick: 4,
+        tick_ms: 1,
+        scrub_period_ms: 60_000,
+        scrub_batch: 4,
+    };
+    let r_dir = r_caches[0].directory().clone();
+    // The manager attaches (and enables loss tracking) *before* the
+    // failure, with the whole set known-popular.
+    let r_mgr = AvailabilityManager::new(r_dir.clone(), r_cfg);
+    let mut r_learned = LearnedPlacement::new();
+    for name in &r_names {
+        r_learned.record_reads(name, r_bytes as u64, 8);
+    }
+    r_mgr.seed_popularity(&r_learned);
+    let r_exec = RunnerRepairExecutor::new(r_caches.clone(), rlayout.gfs());
+    // Total loss: the only retaining group drops the whole stage.
+    r_caches[0].clear_prefix("s0").unwrap();
+    let r_t0 = Instant::now();
+    let mut r_ticks = 0u64;
+    while !r_names.iter().all(|n| r_dir.sources(n).len() >= 2) {
+        let out = r_mgr.tick(&r_exec);
+        assert!(out.bytes <= r_cfg.byte_budget_per_tick, "budget is a hard cap: {out:?}");
+        r_ticks += 1;
+        assert!(r_ticks < 100_000, "repair must converge ({} pushes)", r_mgr.repair_pushes());
+    }
+    let r_conv_s = r_t0.elapsed().as_secs_f64();
+    let gfs_reads = |c: &GroupCache| {
+        let s = c.snapshot();
+        s.gfs_copies + s.gfs_direct + s.partial_gfs_reads + s.degraded_reads
+    };
+    let r_before = gfs_reads(&r_caches[1]);
+    for name in &r_names {
+        let (r, _) = r_caches[1].open_archive_via(&rlayout.gfs(), name, &r_caches).unwrap();
+        black_box(r.len());
+    }
+    assert_eq!(gfs_reads(&r_caches[1]), r_before, "healed reads must skip the central store");
+    b.metric("repair_convergence latency", r_conv_s * 1e3, "ms");
+    b.metric("repair_convergence ticks", r_ticks as f64, "ticks");
+    b.metric("repair: pushes", r_mgr.repair_pushes() as f64, "pushes");
+    b.metric("repair: bytes moved", r_mgr.repair_bytes() as f64, "bytes");
+    let _ = std::fs::remove_dir_all(&rroot);
+
+    // --- Maintenance-daemon interference: the warm-hit loop from the
+    // verify case, with the daemon off vs aggressively scrubbing the
+    // same cache alongside (1 ms cadence — far hotter than production).
+    // Background repair must ride the idle gaps: CI gates daemon-on p50
+    // at ≤ 1.05x daemon-off.
+    let iroot = dir.join("stage2-interfere");
+    let _ = std::fs::remove_dir_all(&iroot);
+    let ilayout = LocalLayout::create(&iroot, 1, 1).unwrap();
+    let i_arch = 12usize;
+    let mut i_names: Vec<String> = Vec::new();
+    for i in 0..i_arch {
+        let name = format!("s1-g0-{i:05}.cioar");
+        let mut w = Writer::create(&ilayout.gfs().join(&name)).unwrap();
+        w.add("records.bin", &vec![(i * 41) as u8; mib(1) as usize], Compression::None)
+            .unwrap();
+        w.finish().unwrap();
+        i_names.push(name);
+    }
+    let i_opens = if fast { 200usize } else { 600 };
+    let i_run = |daemon_on: bool| -> f64 {
+        let _ = std::fs::remove_dir_all(ilayout.ifs_data(0));
+        std::fs::create_dir_all(ilayout.ifs_data(0)).unwrap();
+        let caches = GroupCache::per_group(&ilayout, mib(1024));
+        for name in &i_names {
+            caches[0].open_archive(&ilayout.gfs(), name).unwrap();
+        }
+        let daemon = daemon_on.then(|| {
+            let cfg = RepairConfig {
+                replica_target: 1,
+                popularity_threshold: u32::MAX,
+                byte_budget_per_tick: mib(1),
+                max_inflight_per_tick: 1,
+                tick_ms: 1,
+                scrub_period_ms: 1,
+                scrub_batch: 4,
+            };
+            let mgr = std::sync::Arc::new(AvailabilityManager::new(
+                caches[0].directory().clone(),
+                cfg,
+            ));
+            let exec: std::sync::Arc<dyn RepairExecutor> =
+                std::sync::Arc::new(RunnerRepairExecutor::new(caches.clone(), ilayout.gfs()));
+            MaintenanceDaemon::start(mgr, exec)
+        });
+        let mut lat_ms: Vec<f64> = Vec::with_capacity(i_opens);
+        for i in 0..i_opens {
+            let name = &i_names[i % i_arch];
+            let t0 = Instant::now();
+            let (r, o) = caches[0].open_archive(&ilayout.gfs(), name).unwrap();
+            assert_eq!(o, CacheOutcome::IfsHit, "{name}");
+            lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            black_box(r.len());
+        }
+        if let Some(d) = daemon {
+            let deadline = Instant::now() + Duration::from_secs(5);
+            while d.scrub_cycles() == 0 && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            assert!(d.scrub_cycles() > 0, "the daemon must actually have scrubbed");
+        }
+        Summary::of(&lat_ms).unwrap().p50
+    };
+    let (mut i_off, mut i_on) = (f64::INFINITY, f64::INFINITY);
+    // Interleaved reps so machine drift hits both variants alike.
+    for _ in 0..tier_reps {
+        i_off = i_off.min(i_run(false));
+        i_on = i_on.min(i_run(true));
+    }
+    b.metric("repair_interference_off warm p50", i_off, "ms");
+    b.metric("repair_interference_on warm p50", i_on, "ms");
+    b.metric("repair: daemon warm-hit interference", i_on / i_off, "x");
+    let _ = std::fs::remove_dir_all(&iroot);
 
     // --- PJRT scoring latency (needs artifacts).
     match cio::runtime::ScoreModel::load_default() {

@@ -37,7 +37,7 @@
 //! member : MAGIC_MEMBER u32 | name_len u16 | name | flags u8 |
 //!          raw_len u64 | stored_len u64 | crc32(raw) u32 | data
 //! sums   : an ordinary member named `.cio-sums` (hidden) whose data is
-//!          chunk u64 | data_end u64 | count u32 | crc32 u32 × count
+//!          algo u8 | chunk u64 | data_end u64 | count u32 | sum u32 × count
 //! index  : MAGIC_INDEX u32 | count u32 | entry*
 //! entry  : name_len u16 | name | offset u64 | raw_len u64 |
 //!          stored_len u64 | crc32 u32 | flags u8
@@ -57,7 +57,10 @@
 //! prefix `.cio-`) are reachable by exact-name lookup but excluded from
 //! enumeration, so member counts and sequential scans are unchanged.
 //! Archives written before PR-8 simply lack the member and verify as
-//! [`Verification::Unchecked`].
+//! [`Verification::Unchecked`]. The table is versioned by a leading
+//! algorithm-id byte ([`SUM_ALGO_CRC32`]); readers reject unknown ids
+//! with a typed error instead of misinterpreting a future keyed or
+//! cryptographic hash's table as CRC32s.
 
 use crate::util::pool::{ordered_pipeline, BufferPool, PooledBuf};
 use anyhow::{bail, ensure, Context, Result};
@@ -88,6 +91,12 @@ pub const SUMS_MEMBER: &str = ".cio-sums";
 /// fill-chunk size the partial-fill engine uses is a whole multiple, so
 /// chunk-granular transfers verify without read amplification.
 pub const SUM_CHUNK: u64 = 4096;
+
+/// Algorithm id of a CRC32 checksum table — the first byte of the
+/// [`SUMS_MEMBER`] payload. A keyed or cryptographic hash can slot in
+/// under a new id without a format break; parsers reject ids they do
+/// not implement ([`ChunkSums::parse`]).
+pub const SUM_ALGO_CRC32: u8 = 0;
 
 /// Cap on speculative pre-allocation from header-declared sizes. Actual
 /// data may exceed this (buffers grow on demand); a corrupt header cannot
@@ -891,7 +900,8 @@ impl ChunkSums {
 
     /// Serialize for the hidden member.
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(20 + self.crcs.len() * 4);
+        let mut out = Vec::with_capacity(21 + self.crcs.len() * 4);
+        out.push(SUM_ALGO_CRC32);
         out.extend_from_slice(&self.chunk.to_le_bytes());
         out.extend_from_slice(&self.data_end.to_le_bytes());
         out.extend_from_slice(&(self.crcs.len() as u32).to_le_bytes());
@@ -902,8 +912,17 @@ impl ChunkSums {
     }
 
     /// Parse a hidden-member payload (validating internal consistency).
+    /// An unknown algorithm id is a clean typed error, not a garbage
+    /// table: a newer writer's keyed-hash sums must fail verification
+    /// loudly rather than be misread as CRC32s.
     pub fn parse(data: &[u8]) -> Result<ChunkSums> {
         let mut cur = data;
+        let algo = read_u8(&mut cur)?;
+        ensure!(
+            algo == SUM_ALGO_CRC32,
+            "unsupported checksum algorithm id {algo} (this reader implements only \
+             {SUM_ALGO_CRC32} = CRC32)"
+        );
         let chunk = read_u64(&mut cur)?;
         let data_end = read_u64(&mut cur)?;
         let count = read_u32(&mut cur)? as usize;
@@ -1328,6 +1347,23 @@ mod tests {
         assert_eq!(sums.chunk, SUM_CHUNK);
         assert_eq!(sums.data_end, r.entry(SUMS_MEMBER).unwrap().offset);
         assert_eq!(sums.crcs.len() as u64, sums.data_end.div_ceil(SUM_CHUNK));
+    }
+
+    #[test]
+    fn sums_member_round_trips_and_rejects_unknown_algorithm() {
+        let sums = ChunkSums { chunk: SUM_CHUNK, data_end: 10_000, crcs: vec![1, 2, 3] };
+        let encoded = sums.encode();
+        assert_eq!(encoded[0], SUM_ALGO_CRC32, "algorithm id leads the table");
+        assert_eq!(ChunkSums::parse(&encoded).unwrap(), sums);
+
+        // A future algorithm's table is refused by id, not misread.
+        let mut keyed = encoded.clone();
+        keyed[0] = 7;
+        let err = ChunkSums::parse(&keyed).unwrap_err();
+        assert!(err.to_string().contains("unsupported checksum algorithm id 7"), "{err}");
+
+        // Truncation before the id byte is a parse error, not a panic.
+        assert!(ChunkSums::parse(&[]).is_err());
     }
 
     #[test]

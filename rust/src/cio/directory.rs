@@ -111,6 +111,13 @@ struct DirInner {
     expired: BTreeSet<u32>,
     /// Total lease expirations (a flapping peer re-counts).
     lease_expirations: u64,
+    /// Replica-loss events for the availability manager (PR 10). Only
+    /// populated while `track_orphans` is set, so a runner without a
+    /// repair daemon never accumulates an unbounded log.
+    orphans: Vec<(String, OrphanCause)>,
+    /// True once an [`crate::cio::repair::AvailabilityManager`] has
+    /// subscribed to replica-loss events.
+    track_orphans: bool,
 }
 
 impl DirInner {
@@ -175,22 +182,52 @@ impl DirInner {
 
     /// Withdraw every retention entry `group` advertises, counting each
     /// as a stale withdrawal (the lease sweep is `record_stale` batched
-    /// over a dead peer's whole advertisement).
+    /// over a dead peer's whole advertisement). Archives left with *no*
+    /// live source are logged as [`OrphanCause::PeerExpiry`] orphans for
+    /// the availability manager.
     fn withdraw_all(&mut self, group: u32) -> u64 {
         let mut pulled = 0;
-        self.sources.retain(|_, set| {
+        let mut orphaned: Vec<String> = Vec::new();
+        self.sources.retain(|name, set| {
             if set.remove(&group) {
                 pulled += 1;
+                if set.is_empty() {
+                    orphaned.push(name.clone());
+                }
             }
             !set.is_empty()
         });
         self.stale_withdrawals += pulled;
+        if self.track_orphans {
+            for name in orphaned {
+                self.orphans.push((name, OrphanCause::PeerExpiry));
+            }
+        }
         pulled
     }
 
     fn on_probation(&self, group: u32) -> bool {
         self.health.get(&group).is_some_and(|h| h.quarantined && h.probation)
     }
+}
+
+/// Why an archive lost retention coverage (PR 10) — the event tag the
+/// directory's replica-loss log carries so the
+/// [`crate::cio::repair::AvailabilityManager`] can prioritize and count
+/// repairs by cause.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OrphanCause {
+    /// The archive's last live source's liveness lease expired
+    /// ([`RetentionDirectory::expire_overdue`]): the bytes may still
+    /// exist on the dead peer's IFS, but nothing routable serves them.
+    PeerExpiry,
+    /// Eviction (or a stage re-run clear) withdrew the archive's last
+    /// listed replica.
+    Eviction,
+    /// A scrub pass found the copy rotted and dropped it
+    /// ([`RetentionDirectory::record_scrub_drop`]); other replicas may
+    /// survive, but the replica count just shrank and deserves an audit.
+    ScrubDrop,
 }
 
 /// One entry in the directory's append-only publish feed (PR 9). The
@@ -325,8 +362,31 @@ impl RetentionDirectory {
     }
 
     /// Record that `group` no longer retains `archive` (eviction or a
-    /// stage re-run clear). Removing an unlisted pair is a no-op.
+    /// stage re-run clear). Removing an unlisted pair is a no-op. When
+    /// this withdrawal removes the archive's *last* listed replica, the
+    /// loss is logged as an [`OrphanCause::Eviction`] orphan for the
+    /// availability manager (which re-replicates it only if the archive's
+    /// read history says it is still hot).
     pub fn withdraw(&self, archive: &str, group: u32) {
+        let mut inner = self.inner.lock().unwrap();
+        let mut emptied = false;
+        if let Some(set) = inner.sources.get_mut(archive) {
+            let removed = set.remove(&group);
+            if set.is_empty() {
+                inner.sources.remove(archive);
+                emptied = removed;
+            }
+        }
+        if emptied && inner.track_orphans {
+            inner.orphans.push((archive.to_string(), OrphanCause::Eviction));
+        }
+    }
+
+    /// Withdraw a copy a scrub pass found rotted and dropped, logging the
+    /// loss as an [`OrphanCause::ScrubDrop`] orphan (when tracking is on)
+    /// even while other replicas survive — the replica count shrank, so
+    /// the availability manager should re-audit the archive's deficit.
+    pub fn record_scrub_drop(&self, archive: &str, group: u32) {
         let mut inner = self.inner.lock().unwrap();
         if let Some(set) = inner.sources.get_mut(archive) {
             set.remove(&group);
@@ -334,6 +394,24 @@ impl RetentionDirectory {
                 inner.sources.remove(archive);
             }
         }
+        if inner.track_orphans {
+            inner.orphans.push((archive.to_string(), OrphanCause::ScrubDrop));
+        }
+    }
+
+    /// Start logging replica-loss events (idempotent). Called once by the
+    /// [`crate::cio::repair::AvailabilityManager`] when it attaches;
+    /// until then losses are not recorded, so a runner without a repair
+    /// daemon pays nothing.
+    pub fn enable_orphan_tracking(&self) {
+        self.inner.lock().unwrap().track_orphans = true;
+    }
+
+    /// Drain the replica-loss log accumulated since the previous drain,
+    /// oldest first. Empty unless
+    /// [`RetentionDirectory::enable_orphan_tracking`] was called.
+    pub fn drain_orphans(&self) -> Vec<(String, OrphanCause)> {
+        std::mem::take(&mut self.inner.lock().unwrap().orphans)
     }
 
     /// Withdraw a candidate that a pull found stale (the retention was
@@ -909,6 +987,48 @@ mod tests {
         assert!(d.probe_allowed(1));
         assert_eq!(d.route("a.cioar", 0), vec![1]);
         assert_eq!(d.expire_overdue(), Vec::<u32>::new(), "fresh lease does not expire");
+    }
+
+    #[test]
+    fn orphan_log_records_last_replica_losses_by_cause() {
+        let d = RetentionDirectory::new(4);
+        d.publish("solo.cioar", 1);
+        d.publish("dup.cioar", 1);
+        d.publish("dup.cioar", 2);
+        // Losses before tracking is enabled are not logged (no daemon,
+        // no unbounded log).
+        d.withdraw("solo.cioar", 1);
+        d.enable_orphan_tracking();
+        assert!(d.drain_orphans().is_empty());
+
+        // Eviction: only the *last* replica's loss logs an orphan.
+        d.publish("solo.cioar", 1);
+        d.withdraw("dup.cioar", 2);
+        d.withdraw("solo.cioar", 1);
+        d.withdraw("never-listed.cioar", 3);
+        assert_eq!(
+            d.drain_orphans(),
+            vec![("solo.cioar".to_string(), OrphanCause::Eviction)],
+            "dup still has a source; unlisted names never orphan"
+        );
+        assert!(d.drain_orphans().is_empty(), "drain consumes the log");
+
+        // Scrub drop logs even while a replica survives elsewhere.
+        d.publish("dup.cioar", 2);
+        d.record_scrub_drop("dup.cioar", 2);
+        assert_eq!(d.sources("dup.cioar"), vec![1]);
+        assert_eq!(d.drain_orphans(), vec![("dup.cioar".to_string(), OrphanCause::ScrubDrop)]);
+
+        // A lease expiry orphans exactly the archives the dead peer was
+        // the sole source of.
+        d.publish("solo.cioar", 1);
+        d.renew_lease(1, Duration::from_millis(0));
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(d.expire_overdue(), vec![1]);
+        let orphans = d.drain_orphans();
+        assert!(orphans.contains(&("solo.cioar".to_string(), OrphanCause::PeerExpiry)));
+        assert!(orphans.contains(&("dup.cioar".to_string(), OrphanCause::PeerExpiry)));
+        assert_eq!(orphans.len(), 2);
     }
 
     #[test]

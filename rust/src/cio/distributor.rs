@@ -673,6 +673,99 @@ pub fn estimate_hedged_read(
     }
 }
 
+/// The PR-10 repair economics model: what one proactive replica push by
+/// the [`crate::cio::repair::AvailabilityManager`] costs the torus, and
+/// what the central store gets back. When an archive's last live source
+/// disappears (a killed peer, a scrub drop, an eviction race), every one
+/// of its future readers falls through to a GFS re-pull; one repair push
+/// moves the archive across the torus once and restores the neighbor
+/// tier for all of them. The model is the serial planning bound on both
+/// sides (each read charged its tier's service time, like
+/// [`RoutedReadModel::mix_time_s`]) — crude, but it orders exactly what
+/// the maintenance daemon's budget knobs trade: push bandwidth now
+/// against central-store traffic later.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RepairModel {
+    /// The routed read geometry the repaired replica restores.
+    pub base: RoutedReadModel,
+    /// Seconds one peer-sourced repair push occupies the torus:
+    /// `push_hops` per-link setups plus the archive over the copy path.
+    pub push_s: f64,
+    /// Seconds an *orphan* repair push costs — no live replica left, so
+    /// the daemon re-seeds from the canonical GFS copy (one last central
+    /// pull instead of `readers` of them).
+    pub orphan_push_s: f64,
+    /// Aggregate reader seconds with no repair: every future reader pays
+    /// the GFS miss tier.
+    pub unrepaired_s: f64,
+    /// Aggregate seconds with the repair: one push, then every reader
+    /// served from the routed neighbor tier.
+    pub repaired_s: f64,
+    /// Central-store bytes the repair saves: `readers` avoided re-pulls,
+    /// minus the one GFS pull an orphan repair itself spends.
+    pub gfs_bytes_avoided: u64,
+}
+
+impl RepairModel {
+    /// Aggregate speedup the repair buys its future readers
+    /// (`unrepaired / repaired`, > 1 when the push pays for itself).
+    /// The convergence benchmark gates the measured counterpart: after
+    /// re-replication, warm readers must see `gfs_misses == 0`.
+    pub fn payoff(&self) -> f64 {
+        self.unrepaired_s / self.repaired_s
+    }
+
+    /// Smallest future-reader count at which the push pays for itself:
+    /// the push cost divided by what each reader saves by hitting the
+    /// neighbor tier instead of GFS. Below this, the daemon's
+    /// popularity threshold should leave the archive to re-pull lazily.
+    pub fn break_even_readers(&self) -> u32 {
+        let saved_per_read = self.base.base.gfs_miss_s - self.base.routed_neighbor_s;
+        (self.push_s / saved_per_read).ceil().max(1.0) as u32
+    }
+}
+
+/// Estimate the repair-push trade (see [`RepairModel`]). The read
+/// geometry comes from [`estimate_routed_read`] with the post-repair
+/// source count (≥ 1 — the repaired replica itself); `push_hops` is the
+/// torus distance the push crosses from its donor replica, and `readers`
+/// the expected future cross-group reads the popularity tracker
+/// ([`crate::cio::placement::LearnedPlacement`]) predicts.
+pub fn estimate_repair(
+    cfg: &ClusterConfig,
+    archive_bytes: u64,
+    read_bytes: u64,
+    nearest_hops: u32,
+    push_hops: u32,
+    sources: u32,
+    readers: u32,
+) -> RepairModel {
+    assert!(sources >= 1, "a repaired archive has at least the pushed replica");
+    let base = estimate_routed_read(
+        cfg,
+        archive_bytes,
+        read_bytes,
+        nearest_hops,
+        nearest_hops.max(push_hops),
+        sources,
+        readers,
+    );
+    let push_s =
+        push_hops as f64 * cfg.net.tree_copy_setup_s + archive_bytes as f64 / cfg.net.tree_copy_bw;
+    let orphan_push_s =
+        cfg.net.chirp_request_overhead_s + archive_bytes as f64 / cfg.gfs.per_client_bw;
+    let unrepaired_s = readers as f64 * base.base.gfs_miss_s;
+    let repaired_s = push_s + readers as f64 * base.routed_neighbor_s;
+    RepairModel {
+        base,
+        push_s,
+        orphan_push_s,
+        unrepaired_s,
+        repaired_s,
+        gfs_bytes_avoided: (readers as u64 * archive_bytes).saturating_sub(archive_bytes),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -980,6 +1073,34 @@ mod tests {
         let eager = RetryPolicy { hedge_delay_ms: 1, ..RetryPolicy::default() };
         let all_in = estimate_hedged_read(&cfg, mib(100), kib(64), 1, 2, 3, 9, 0.05, 10.0, &eager);
         assert!(all_in.hedge_rate > 0.99 && all_in.hedge_rate <= 1.0 + 1e-12, "{all_in:?}");
+    }
+
+    #[test]
+    fn repair_model_pays_for_popular_archives_only() {
+        let cfg = ClusterConfig::bgp(4096);
+        // A hot archive (many predicted readers): one push across two
+        // torus hops must beat letting every reader re-pull from GFS.
+        let hot = estimate_repair(&cfg, mib(100), kib(64), 1, 2, 1, 50);
+        assert!(hot.payoff() > 1.0, "repair must win for a hot archive: {hot:?}");
+        assert!(hot.repaired_s < hot.unrepaired_s);
+        assert_eq!(hot.gfs_bytes_avoided, 49 * mib(100));
+        // A cold archive (one predicted reader): the push is pure
+        // overhead — exactly why the daemon keys the replica target on
+        // the popularity threshold instead of repairing everything.
+        let cold = estimate_repair(&cfg, mib(100), kib(64), 1, 2, 1, 1);
+        assert!(cold.payoff() < hot.payoff(), "payoff grows with predicted readers: {cold:?}");
+        // At (or past) the break-even count the push pays for itself.
+        let be = hot.break_even_readers();
+        assert!(be >= 1);
+        let at = estimate_repair(&cfg, mib(100), kib(64), 1, 2, 1, be);
+        assert!(at.payoff() >= 1.0 - 1e-9, "at break-even the push pays: {at:?}");
+        // An orphan repair still pulls from GFS once — strictly more
+        // expensive than a peer-sourced push, and the avoided-bytes
+        // accounting nets that one pull out.
+        assert!(hot.orphan_push_s > hot.push_s);
+        // Serial planning bound is linear in the reader count.
+        let twice = estimate_repair(&cfg, mib(100), kib(64), 1, 2, 1, 100);
+        assert!((twice.unrepaired_s - 2.0 * hot.unrepaired_s).abs() < 1e-9);
     }
 
     #[test]

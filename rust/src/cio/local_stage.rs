@@ -246,6 +246,43 @@
 //!   costing per-fill deadline burns within one lease interval
 //!   ([`RetentionDirectory::lease_expirations`]).
 //!
+//! # Repair and scrub lifecycle (PR 10)
+//!
+//! With [`StageRunnerConfig::repair`] set, the runner owns a
+//! self-healing pair ([`crate::cio::repair`]): an
+//! [`AvailabilityManager`] holding per-archive replica targets derived
+//! from learned read counts (popular archives want
+//! [`RepairConfig::replica_target`] live sources, everything else one)
+//! and a [`MaintenanceDaemon`] thread started at construction and
+//! stopped — with one final drain tick — before the manifests persist
+//! on drop. Three event sources feed the repair queue through the
+//! directory's replica-loss log: a peer lease expiring with the dead
+//! peer as an archive's only source, [`GroupCache::scrub`] /
+//! [`GroupCache::scrub_pass`] dropping an unrepairable copy
+//! ([`RetentionDirectory::record_scrub_drop`]), and eviction of a hot
+//! archive's last replica ([`RetentionDirectory::withdraw`]); a
+//! periodic deficit audit catches everything else. Each daemon tick —
+//! gated on foreground idleness (no fill latch registered anywhere) and
+//! bounded by [`RepairConfig::byte_budget_per_tick`] /
+//! [`RepairConfig::max_inflight_per_tick`] — pushes replicas through
+//! [`GroupCache::open_archive_via`], the same verified routed-fill path
+//! foreground reads use, onto the torus-nearest group not already
+//! holding one ([`RunnerRepairExecutor`]); repaired copies are
+//! checksum-verified, directory-published, and evictable like any fill.
+//! A remote runner opts into *receiving* pushed replicas with
+//! [`StageRunner::serve_accepting_pushes`]. The daemon also owns the
+//! scrub cadence: every [`RepairConfig::scrub_period_ms`] it verifies a
+//! [`RepairConfig::scrub_batch`]-sized slice of retention,
+//! least-recently-verified first, persisting per-archive last-verified
+//! times as `#scrubbed` manifest lines so a restarted runner resumes
+//! the cycle instead of restarting it. Repair traffic is accounted
+//! separately from the foreground tier mix
+//! ([`CacheSnapshot::repair_pushes`] / [`CacheSnapshot::repair_bytes`] /
+//! [`CacheSnapshot::orphan_repairs`] /
+//! [`CacheSnapshot::repair_failures`] /
+//! [`CacheSnapshot::scrub_cycles`], surfaced per stage on
+//! [`StageStats`] and totaled on [`WorkflowReport`]).
+//!
 //! # Serving tier (PR-7)
 //!
 //! A runner is also a *server*: [`StageRunner::serve`] (or a bare
@@ -295,7 +332,8 @@ use crate::cio::local::{
     create_sparse_with, publish_copy_with, read_range_with, write_range_at_with, CollectorOptions,
     LocalCollector, LocalLayout, TMP_PREFIX,
 };
-use crate::cio::placement::{LearnedPlacement, PlacementPolicy};
+use crate::cio::placement::{group_torus_distance, LearnedPlacement, PlacementPolicy};
+use crate::cio::repair::{AvailabilityManager, MaintenanceDaemon, RepairConfig, RepairExecutor};
 use crate::cio::stage::{CacheOutcome, IfsCache, StageGraph};
 use crate::cio::transport::{
     LocalFsTransport, RecordSource, ServerHandle, Transport, TransportServer,
@@ -305,7 +343,7 @@ use std::collections::hash_map::DefaultHasher;
 use std::collections::{BTreeMap, HashMap};
 use std::hash::{Hash, Hasher};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::time::{Duration, Instant};
 
@@ -429,6 +467,22 @@ pub struct CacheSnapshot {
     /// The subset of `hedged_fills` that resolved the latch first (the
     /// hedge beat the primary fill).
     pub hedge_wins: u64,
+    /// Replicas the self-healing availability manager (PR 10) pushed
+    /// *into* this cache — background re-replication through the same
+    /// verified fill path foreground misses use.
+    pub repair_pushes: u64,
+    /// Bytes those repair pushes moved (bounded per maintenance tick by
+    /// [`crate::cio::repair::RepairConfig::byte_budget_per_tick`]).
+    pub repair_bytes: u64,
+    /// The subset of `repair_pushes` that revived an archive with *zero*
+    /// live sources (every read was a GFS miss until the push landed).
+    pub orphan_repairs: u64,
+    /// Repair pushes targeting this cache that failed permanently
+    /// (bounded attempts exhausted, or the archive was unrepairable).
+    pub repair_failures: u64,
+    /// Rate-limited scheduled scrub passes ([`GroupCache::scrub_pass`])
+    /// completed over this cache's retention.
+    pub scrub_cycles: u64,
 }
 
 /// What one [`GroupCache::scrub`] pass did (PR 8): background
@@ -824,6 +878,17 @@ pub struct GroupCache {
     scrub_repairs: AtomicU64,
     hedged_fills: AtomicU64,
     hedge_wins: AtomicU64,
+    repair_pushes: AtomicU64,
+    repair_bytes: AtomicU64,
+    orphan_repairs: AtomicU64,
+    repair_failures: AtomicU64,
+    scrub_cycles: AtomicU64,
+    /// Archive name → epoch seconds the scheduled scrubber last verified
+    /// it (persisted as `#scrubbed` manifest lines, so a restarted runner
+    /// resumes the cycle instead of re-verifying everything). Entries
+    /// without a stamp count as never verified and scrub first. Locked
+    /// after `inner` shards, never before.
+    scrub_times: Mutex<HashMap<String, u64>>,
 }
 
 /// Cumulative fault-path counters as persisted in the manifest `#stats`
@@ -839,6 +904,11 @@ struct FaultTotals {
     scrub_repairs: u64,
     hedged: u64,
     hedge_wins: u64,
+    repair_pushes: u64,
+    repair_bytes: u64,
+    orphan_repairs: u64,
+    repair_failures: u64,
+    scrub_cycles: u64,
 }
 
 impl GroupCache {
@@ -925,6 +995,12 @@ impl GroupCache {
             scrub_repairs: AtomicU64::new(0),
             hedged_fills: AtomicU64::new(0),
             hedge_wins: AtomicU64::new(0),
+            repair_pushes: AtomicU64::new(0),
+            repair_bytes: AtomicU64::new(0),
+            orphan_repairs: AtomicU64::new(0),
+            repair_failures: AtomicU64::new(0),
+            scrub_cycles: AtomicU64::new(0),
+            scrub_times: Mutex::new(warm.scrub_times),
         }
     }
 
@@ -2726,6 +2802,11 @@ impl GroupCache {
             scrub_repairs: self.scrub_repairs.load(Ordering::Relaxed),
             hedged_fills: self.hedged_fills.load(Ordering::Relaxed),
             hedge_wins: self.hedge_wins.load(Ordering::Relaxed),
+            repair_pushes: self.repair_pushes.load(Ordering::Relaxed),
+            repair_bytes: self.repair_bytes.load(Ordering::Relaxed),
+            orphan_repairs: self.orphan_repairs.load(Ordering::Relaxed),
+            repair_failures: self.repair_failures.load(Ordering::Relaxed),
+            scrub_cycles: self.scrub_cycles.load(Ordering::Relaxed),
         }
     }
 
@@ -2744,6 +2825,12 @@ impl GroupCache {
         }
         let path = self.data_dir.join(name);
         std::fs::metadata(&path).ok().map(|m| (path, m.len()))
+    }
+
+    /// True while any whole-archive fill latch is registered — the
+    /// repair daemon's idle gate (foreground data movement in flight).
+    fn fill_in_flight(&self) -> bool {
+        !self.fills.lock().unwrap().is_empty()
     }
 
     /// Forget (and unlink) every retained `<prefix>-g*.cioar` — stale
@@ -2852,9 +2939,12 @@ impl GroupCache {
                 summary.repaired += 1;
             } else {
                 // Unrepairable: keep accounting honest and route
-                // readers back to whatever canonical copy exists.
+                // readers back to whatever canonical copy exists. The
+                // scrub-drop withdrawal (unlike a plain eviction) logs a
+                // replica-loss event for the availability manager even
+                // while siblings still hold copies.
                 self.inner.lock(&name).remove(&name);
-                self.directory.withdraw(&name, self.group);
+                self.directory.record_scrub_drop(&name, self.group);
                 let _ = std::fs::remove_file(&path);
                 summary.dropped += 1;
             }
@@ -2862,12 +2952,96 @@ impl GroupCache {
         summary
     }
 
+    /// One rate-limited slice of the *scheduled* scrub (PR 10): verify up
+    /// to `max` retained archives, least-recently-verified first (a stamp
+    /// missing from the manifest counts as never verified), with exactly
+    /// [`GroupCache::scrub`]'s verify/repair/drop semantics per archive.
+    /// Each verified-or-repaired archive's last-verified time is stamped
+    /// (epoch seconds) and persisted via the manifest's `#scrubbed`
+    /// lines, so a restarted runner resumes the cycle where it left off
+    /// instead of re-verifying everything. Counts one
+    /// [`CacheSnapshot::scrub_cycles`] per pass that examined anything.
+    pub fn scrub_pass(&self, gfs_dir: &std::path::Path, max: usize) -> ScrubSummary {
+        let mut names: Vec<(String, u64)> = {
+            let shards = self.inner.lock_all();
+            let stamps = self.scrub_times.lock().unwrap();
+            shards
+                .iter()
+                .flat_map(|c| c.entries_lru().map(|(n, _)| n.to_string()))
+                .map(|n| {
+                    let at = stamps.get(&n).copied().unwrap_or(0);
+                    (n, at)
+                })
+                .collect()
+        };
+        names.sort_by(|a, b| a.1.cmp(&b.1).then_with(|| a.0.cmp(&b.0)));
+        names.truncate(max.max(1));
+        let mut summary = ScrubSummary::default();
+        let now = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        for (name, _) in names {
+            let path = self.data_dir.join(&name);
+            if !path.is_file() {
+                self.scrub_times.lock().unwrap().remove(&name);
+                continue;
+            }
+            summary.scanned += 1;
+            let ok = if verify_archive(&path).is_ok() {
+                summary.clean += 1;
+                true
+            } else {
+                self.corruption_detected.fetch_add(1, Ordering::Relaxed);
+                let repaired = self
+                    .gfs_transport(&gfs_dir.join(&name))
+                    .fetch_archive(&name, &path, self.retry.source_deadline())
+                    .is_ok()
+                    && verify_archive(&path).is_ok();
+                if repaired {
+                    self.scrub_repairs.fetch_add(1, Ordering::Relaxed);
+                    summary.repaired += 1;
+                } else {
+                    self.inner.lock(&name).remove(&name);
+                    self.directory.record_scrub_drop(&name, self.group);
+                    let _ = std::fs::remove_file(&path);
+                    summary.dropped += 1;
+                }
+                repaired
+            };
+            let mut stamps = self.scrub_times.lock().unwrap();
+            if ok {
+                stamps.insert(name, now);
+            } else {
+                stamps.remove(&name);
+            }
+        }
+        if summary.scanned > 0 {
+            self.scrub_cycles.fetch_add(1, Ordering::Relaxed);
+        }
+        summary
+    }
+
+    /// Count a repair push that landed in this cache (`bytes` moved), and
+    /// whether it revived a source-less orphan.
+    fn record_repair_push(&self, bytes: u64, was_orphan: bool) {
+        self.repair_pushes.fetch_add(1, Ordering::Relaxed);
+        self.repair_bytes.fetch_add(bytes, Ordering::Relaxed);
+        if was_orphan {
+            self.orphan_repairs.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Persist the retention accounting to `ifs/<group>/cache.manifest`
     /// (atomically): a `#stats` line with the cumulative hit/miss totals
     /// plus the cumulative fault-path counters (retries, re-routed
     /// fills, quarantine trips, degraded reads, deadline aborts,
-    /// corruption detections, scrub repairs, hedged fills/wins — prior
-    /// runs included), then `name\tbytes\treads` entries LRU-oldest
+    /// corruption detections, scrub repairs, hedged fills/wins, repair
+    /// pushes/bytes, orphan repairs, repair failures, scrub cycles —
+    /// prior runs included), `#scrubbed\t<name>\t<epoch-secs>` lines
+    /// recording each retained archive's last scrub-verified time (so a
+    /// restarted runner resumes the scrub cycle instead of restarting
+    /// it), then `name\tbytes\treads` entries LRU-oldest
     /// first so a warm-start replay reconstructs recency — and the
     /// per-archive read counts survive to seed
     /// [`GroupCache::seed_learned`]. Called by [`StageRunner`]'s drop;
@@ -2878,7 +3052,7 @@ impl GroupCache {
             let shards = self.inner.lock_all();
             let reads = self.reads.lock().unwrap();
             text.push_str(&format!(
-                "#stats\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
+                "#stats\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
                 self.prior_hits + shards.iter().map(|c| c.hits()).sum::<u64>(),
                 self.prior_misses + shards.iter().map(|c| c.misses()).sum::<u64>(),
                 self.prior_fault.retries + self.retries.load(Ordering::Relaxed),
@@ -2890,7 +3064,30 @@ impl GroupCache {
                 self.prior_fault.scrub_repairs + self.scrub_repairs.load(Ordering::Relaxed),
                 self.prior_fault.hedged + self.hedged_fills.load(Ordering::Relaxed),
                 self.prior_fault.hedge_wins + self.hedge_wins.load(Ordering::Relaxed),
+                self.prior_fault.repair_pushes + self.repair_pushes.load(Ordering::Relaxed),
+                self.prior_fault.repair_bytes + self.repair_bytes.load(Ordering::Relaxed),
+                self.prior_fault.orphan_repairs + self.orphan_repairs.load(Ordering::Relaxed),
+                self.prior_fault.repair_failures + self.repair_failures.load(Ordering::Relaxed),
+                self.prior_fault.scrub_cycles + self.scrub_cycles.load(Ordering::Relaxed),
             ));
+            // Last-verified scrub stamps, only for names still retained
+            // (a dropped or evicted archive's stamp is meaningless).
+            // Pre-PR-10 parsers skip these as unknown `#` lines.
+            {
+                let retained: std::collections::HashSet<&str> = shards
+                    .iter()
+                    .flat_map(|c| c.entries_lru().map(|(n, _)| n))
+                    .collect();
+                let stamps = self.scrub_times.lock().unwrap();
+                let mut lines: Vec<(&String, &u64)> = stamps
+                    .iter()
+                    .filter(|(n, _)| retained.contains(n.as_str()))
+                    .collect();
+                lines.sort();
+                for (name, at) in lines {
+                    text.push_str(&format!("#scrubbed\t{name}\t{at}\n"));
+                }
+            }
             // Shard-major order: within a shard the LRU order is exact;
             // across shards it is arbitrary (a single-shard cache — the
             // default — round-trips recency exactly as before).
@@ -2931,6 +3128,9 @@ struct WarmState {
     prior_misses: u64,
     prior_fault: FaultTotals,
     corrupt_lines: u64,
+    /// Last scrub-verified epoch seconds per archive (from `#scrubbed`
+    /// lines), kept only for entries that survived the disk reconcile.
+    scrub_times: HashMap<String, u64>,
 }
 
 /// A parsed retention manifest: the `#stats` aggregate line plus the
@@ -2945,6 +3145,9 @@ struct ManifestText {
     prior_fault: FaultTotals,
     entries: Vec<(String, u64, u64)>,
     corrupt_lines: u64,
+    /// `#scrubbed\t<name>\t<epoch-secs>` last-verified stamps (PR 10);
+    /// empty for manifests written before scheduled scrubbing.
+    scrubbed: Vec<(String, u64)>,
 }
 
 /// Parse a manifest's text (shared by the warm start and the cold-runner
@@ -2959,6 +3162,7 @@ fn parse_manifest(text: &str) -> ManifestText {
         prior_fault: FaultTotals::default(),
         entries: Vec::new(),
         corrupt_lines: 0,
+        scrubbed: Vec::new(),
     };
     for line in text.lines() {
         let line = line.trim();
@@ -2988,8 +3192,25 @@ fn parse_manifest(text: &str) -> ManifestText {
                         scrub_repairs: num().unwrap_or(0),
                         hedged: num().unwrap_or(0),
                         hedge_wins: num().unwrap_or(0),
+                        // Repair/scrub-cycle counters (fields 12–16) are
+                        // absent in pre-PR-10 manifests.
+                        repair_pushes: num().unwrap_or(0),
+                        repair_bytes: num().unwrap_or(0),
+                        orphan_repairs: num().unwrap_or(0),
+                        repair_failures: num().unwrap_or(0),
+                        scrub_cycles: num().unwrap_or(0),
                     };
                 }
+                _ => out.corrupt_lines += 1,
+            }
+            continue;
+        }
+        if let Some(stamp) = line.strip_prefix("#scrubbed\t") {
+            let mut fields = stamp.split('\t');
+            let name = fields.next();
+            let at = fields.next().and_then(|f| f.trim().parse::<u64>().ok());
+            match (name, at) {
+                (Some(n), Some(at)) if !n.is_empty() => out.scrubbed.push((n.to_string(), at)),
                 _ => out.corrupt_lines += 1,
             }
             continue;
@@ -3043,6 +3264,7 @@ fn warm_start(manifest: &std::path::Path, data_dir: &std::path::Path, capacity: 
         prior_misses: 0,
         prior_fault: FaultTotals::default(),
         corrupt_lines: 0,
+        scrub_times: HashMap::new(),
     };
     let Ok(text) = std::fs::read_to_string(manifest) else {
         return warm;
@@ -3052,6 +3274,7 @@ fn warm_start(manifest: &std::path::Path, data_dir: &std::path::Path, capacity: 
     warm.prior_misses = parsed.prior_misses;
     warm.prior_fault = parsed.prior_fault;
     warm.corrupt_lines = parsed.corrupt_lines;
+    let stamps: HashMap<String, u64> = parsed.scrubbed.into_iter().collect();
     for (name, bytes, reads) in parsed.entries {
         let on_disk = std::fs::metadata(data_dir.join(&name))
             .map(|m| m.is_file() && m.len() == bytes)
@@ -3066,10 +3289,17 @@ fn warm_start(manifest: &std::path::Path, data_dir: &std::path::Path, capacity: 
             for victim in &victims {
                 let _ = std::fs::remove_file(data_dir.join(victim));
                 warm.reads.remove(victim.as_str());
+                warm.scrub_times.remove(victim.as_str());
             }
         }
         if reads > 0 {
-            warm.reads.insert(name, reads);
+            warm.reads.insert(name.clone(), reads);
+        }
+        // Restore the scrub stamp only for entries that survived the
+        // disk reconcile — a replaced file must be re-verified from
+        // scratch.
+        if let Some(at) = stamps.get(&name) {
+            warm.scrub_times.insert(name, *at);
         }
     }
     warm
@@ -3204,6 +3434,13 @@ pub struct StageRunnerConfig {
     /// (fault-matrix tests drive the production path with it). `None` in
     /// production.
     pub faults: Option<Arc<FaultInjector>>,
+    /// PR-10 self-healing knobs: when `Some`, [`StageRunner::new`]
+    /// starts a [`MaintenanceDaemon`] that works the
+    /// [`AvailabilityManager`] repair queue and owns the scheduled scrub
+    /// cadence for the runner's lifetime (drained on drop, before the
+    /// manifests persist). `None` disables background repair entirely
+    /// (the PR-8 manual `scrub()` entry point still works).
+    pub repair: Option<RepairConfig>,
 }
 
 impl StageRunnerConfig {
@@ -3228,6 +3465,7 @@ impl StageRunnerConfig {
             threads,
             retry: placement.retry_policy(),
             faults: None,
+            repair: None,
         }
     }
 }
@@ -3678,6 +3916,21 @@ pub struct StageStats {
     /// Hedges that resolved their latch first
     /// ([`CacheSnapshot::hedge_wins`]).
     pub hedge_wins: u64,
+    /// Replicas pushed by the repair daemon during the stage
+    /// ([`CacheSnapshot::repair_pushes`]) — background movement, never
+    /// charged to the foreground tier mix above.
+    pub repair_pushes: u64,
+    /// Bytes those repair pushes moved ([`CacheSnapshot::repair_bytes`]).
+    pub repair_bytes: u64,
+    /// Repairs that revived an archive with *zero* live sources
+    /// ([`CacheSnapshot::orphan_repairs`]).
+    pub orphan_repairs: u64,
+    /// Repairs abandoned — out of attempts, out of targets, or
+    /// over-budget ([`CacheSnapshot::repair_failures`]).
+    pub repair_failures: u64,
+    /// Scheduled scrub passes that examined at least one archive
+    /// ([`CacheSnapshot::scrub_cycles`]).
+    pub scrub_cycles: u64,
     /// Peer liveness leases that expired during the stage — each
     /// withdrew the dead peer's whole advertised retention in one step
     /// ([`RetentionDirectory::lease_expirations`]).
@@ -3752,6 +4005,27 @@ impl WorkflowReport {
         self.stages.iter().map(|s| s.hedged_fills).sum()
     }
 
+    /// Total replicas pushed by the repair daemon across stages
+    /// (self-healing path, PR 10).
+    pub fn repair_pushes(&self) -> u64 {
+        self.stages.iter().map(|s| s.repair_pushes).sum()
+    }
+
+    /// Total bytes moved by repair pushes across stages.
+    pub fn repair_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.repair_bytes).sum()
+    }
+
+    /// Total repairs abandoned across stages.
+    pub fn repair_failures(&self) -> u64 {
+        self.stages.iter().map(|s| s.repair_failures).sum()
+    }
+
+    /// Total scheduled scrub passes across stages.
+    pub fn scrub_cycles(&self) -> u64 {
+        self.stages.iter().map(|s| s.scrub_cycles).sum()
+    }
+
     /// Total seconds stages spent running concurrently with their
     /// upstream dependencies (PR 9; 0 for a barriered run).
     pub fn overlap_s(&self) -> f64 {
@@ -3792,13 +4066,27 @@ impl WorkflowReport {
 /// failpoints fire against the retained path being served.
 pub struct ClusterRecordSource {
     caches: Arc<Vec<GroupCache>>,
+    /// Accept pushed archives (PUT) into local retention — the PR-10
+    /// remote-repair landing pad. Off by default: serving stays
+    /// read-mostly unless the runner opts in.
+    accept_pushes: bool,
 }
 
 impl ClusterRecordSource {
     /// Serve from every cache in `caches` (a runner's
     /// [`StageRunner::caches`] cluster, or a hand-built set).
     pub fn new(caches: Arc<Vec<GroupCache>>) -> ClusterRecordSource {
-        ClusterRecordSource { caches }
+        ClusterRecordSource { caches, accept_pushes: false }
+    }
+
+    /// Opt in to accepting pushed replicas: a `PUT` lands in the local
+    /// group nearest (torus hops) to the archive's producer, is verified
+    /// against its embedded chunk checksums **before** retention, then
+    /// retained and directory-published like any fill — evictable,
+    /// servable, manifest-persisted.
+    pub fn accepting_pushes(mut self) -> ClusterRecordSource {
+        self.accept_pushes = true;
+        self
     }
 }
 
@@ -3835,6 +4123,132 @@ impl RecordSource for ClusterRecordSource {
     fn faults(&self) -> Option<&FaultInjector> {
         self.caches.first().and_then(|c| c.faults())
     }
+
+    fn accept(&self, name: &str, data: &[u8]) -> Result<()> {
+        anyhow::ensure!(
+            self.accept_pushes,
+            "server does not accept pushed archives (refusing {name})"
+        );
+        let producer = archive_group(name).unwrap_or(0);
+        let n = self.caches.len() as u32;
+        let cache = self
+            .caches
+            .iter()
+            .min_by_key(|c| (group_torus_distance(producer, c.group(), n), c.group()))
+            .context("no caches behind this record source")?;
+        // Stage to a temp name in the target data dir and verify the
+        // pushed bytes against the embedded checksum table before any
+        // accounting sees them — a corrupt push is refused, never
+        // retained. The temp name uses the publish prefix, so a crashed
+        // acceptor's residue is swept on the next construction.
+        let tmp = cache.data_dir.join(format!(
+            "{TMP_PREFIX}push-{}-{name}",
+            PARTIAL_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, data).with_context(|| format!("staging pushed archive {name}"))?;
+        let verified = verify_archive(&tmp);
+        if let Err(e) = verified {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e.context(format!("pushed archive {name} failed verification")));
+        }
+        let retained = cache.retain(&tmp, name);
+        let _ = std::fs::remove_file(&tmp);
+        match retained {
+            Ok(true) => Ok(()),
+            Ok(false) => anyhow::bail!(
+                "group {} refused pushed archive {name} (degraded staging tree)",
+                cache.group()
+            ),
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// The [`RepairExecutor`] over a runner's cache cluster: repair targets
+/// are the runner's own groups ranked by torus distance from the
+/// archive's producer, `replicate` is exactly the verified routed fill
+/// ([`GroupCache::open_archive_via`] — cheapest live source → producer →
+/// GFS, checksum-verified on arrival, directory-published, evictable),
+/// the idle gate watches every cache's fill latches, and scrub slices
+/// round-robin the groups through [`GroupCache::scrub_pass`].
+pub struct RunnerRepairExecutor {
+    caches: Arc<Vec<GroupCache>>,
+    gfs: PathBuf,
+    scrub_cursor: AtomicUsize,
+}
+
+impl RunnerRepairExecutor {
+    /// Build an executor over `caches`, pulling canonical copies from
+    /// the `gfs` directory when no live retention can serve a repair.
+    pub fn new(caches: Arc<Vec<GroupCache>>, gfs: PathBuf) -> RunnerRepairExecutor {
+        RunnerRepairExecutor { caches, gfs, scrub_cursor: AtomicUsize::new(0) }
+    }
+}
+
+impl RepairExecutor for RunnerRepairExecutor {
+    fn candidate_groups(&self, archive: &str) -> Vec<u32> {
+        let n = self.caches.len() as u32;
+        let producer = archive_group(archive).unwrap_or(0);
+        let mut groups: Vec<u32> = self.caches.iter().map(|c| c.group()).collect();
+        groups.sort_by_key(|&g| (group_torus_distance(producer, g, n), g));
+        groups
+    }
+
+    fn archive_bytes(&self, archive: &str) -> Option<u64> {
+        for cache in self.caches.iter() {
+            if let Some((_, len)) = cache.retained_path(archive) {
+                return Some(len);
+            }
+        }
+        std::fs::metadata(self.gfs.join(archive)).ok().map(|m| m.len())
+    }
+
+    fn replicate(&self, archive: &str, target: u32) -> Result<u64> {
+        let cache = self
+            .caches
+            .iter()
+            .find(|c| c.group() == target)
+            .with_context(|| format!("no cache for repair target group {target}"))?;
+        let (_reader, _outcome) = cache.open_archive_via(&self.gfs, archive, &self.caches)?;
+        // The routed fill read-throughs into retention on success; an
+        // oversized or degraded-group resolve serves GFS-direct without
+        // retaining, which is not a repair — fail it so the manager
+        // retries elsewhere or gives up.
+        let (_, bytes) = cache.retained_path(archive).with_context(|| {
+            format!("group {target} served {archive} without retaining it (oversized or degraded)")
+        })?;
+        Ok(bytes)
+    }
+
+    fn foreground_busy(&self) -> bool {
+        self.caches.iter().any(|c| c.fill_in_flight())
+    }
+
+    fn scrub_slice(&self, max: usize) -> usize {
+        if self.caches.is_empty() {
+            return 0;
+        }
+        let i = self.scrub_cursor.fetch_add(1, Ordering::Relaxed) % self.caches.len();
+        self.caches[i].scrub_pass(&self.gfs, max).scanned as usize
+    }
+
+    fn note_repair(&self, _archive: &str, target: u32, bytes: u64, was_orphan: bool) {
+        if let Some(cache) = self.caches.iter().find(|c| c.group() == target) {
+            cache.record_repair_push(bytes, was_orphan);
+        }
+    }
+
+    fn note_failure(&self, archive: &str) {
+        let producer = archive_group(archive);
+        let cache = self
+            .caches
+            .iter()
+            .find(|c| Some(c.group()) == producer)
+            .or_else(|| self.caches.first());
+        if let Some(cache) = cache {
+            cache.repair_failures.fetch_add(1, Ordering::Relaxed);
+        }
+    }
 }
 
 /// Executes a [`StageGraph`] workflow over a [`LocalLayout`] with §5.3
@@ -3845,6 +4259,12 @@ pub struct StageRunner {
     caches: Arc<Vec<GroupCache>>,
     directory: Arc<RetentionDirectory>,
     config: StageRunnerConfig,
+    /// The PR-10 self-healing pair, present when
+    /// [`StageRunnerConfig::repair`] is set: the availability manager
+    /// (event absorption, replica targets, repair queue) and the
+    /// maintenance daemon thread working it. Stopped — with one final
+    /// drain tick — before the manifests persist on drop.
+    maintenance: Option<(Arc<AvailabilityManager>, MaintenanceDaemon)>,
 }
 
 /// What the runner remembers about a completed stage's outputs.
@@ -3877,7 +4297,34 @@ impl StageRunner {
         // previous (possibly differently-shaped) run from the first
         // fill, not just to this layout's own warm-started groups.
         bootstrap_directory(&layout, &directory);
-        StageRunner { layout, graph, caches, directory, config }
+        // PR 10: start the self-healing pair when configured. Popularity
+        // seeds from the warm-started read counts, so a restarted runner
+        // knows last run's hot set before its first read lands.
+        let maintenance = config.repair.map(|repair_cfg| {
+            let manager = Arc::new(AvailabilityManager::new(directory.clone(), repair_cfg));
+            let mut learned = LearnedPlacement::new();
+            for cache in caches.iter() {
+                cache.seed_learned(&mut learned);
+            }
+            manager.seed_popularity(&learned);
+            let exec: Arc<dyn RepairExecutor> =
+                Arc::new(RunnerRepairExecutor::new(caches.clone(), layout.gfs()));
+            let daemon = MaintenanceDaemon::start(manager.clone(), exec);
+            (manager, daemon)
+        });
+        StageRunner { layout, graph, caches, directory, config, maintenance }
+    }
+
+    /// The availability manager, when [`StageRunnerConfig::repair`] is
+    /// set (inspection: queue depth, repair counters, replica targets).
+    pub fn availability(&self) -> Option<&Arc<AvailabilityManager>> {
+        self.maintenance.as_ref().map(|(m, _)| m)
+    }
+
+    /// Scheduled scrub passes completed by the maintenance daemon (0
+    /// without one).
+    pub fn maintenance_scrub_cycles(&self) -> u64 {
+        self.maintenance.as_ref().map(|(_, d)| d.scrub_cycles()).unwrap_or(0)
     }
 
     /// The directory layout this runner executes over.
@@ -3905,6 +4352,18 @@ impl StageRunner {
     /// [`StageRunner::add_peer`] on their side.
     pub fn serve(&self, addr: &str) -> Result<ServerHandle> {
         TransportServer::serve(addr, Arc::new(ClusterRecordSource::new(self.caches.clone())))
+    }
+
+    /// Like [`StageRunner::serve`], but also accepting pushed replicas
+    /// (`PUT`) into local retention — the landing pad for a *remote*
+    /// repair daemon re-replicating onto this runner. Pushed bytes are
+    /// checksum-verified before retention and refused when the landing
+    /// group is degraded.
+    pub fn serve_accepting_pushes(&self, addr: &str) -> Result<ServerHandle> {
+        TransportServer::serve(
+            addr,
+            Arc::new(ClusterRecordSource::new(self.caches.clone()).accepting_pushes()),
+        )
     }
 
     /// Register a transport for reaching `group`'s retention in another
@@ -4118,6 +4577,11 @@ impl StageRunner {
             last.scrub_repairs = delta(|s| s.scrub_repairs);
             last.hedged_fills = delta(|s| s.hedged_fills);
             last.hedge_wins = delta(|s| s.hedge_wins);
+            last.repair_pushes = delta(|s| s.repair_pushes);
+            last.repair_bytes = delta(|s| s.repair_bytes);
+            last.orphan_repairs = delta(|s| s.orphan_repairs);
+            last.repair_failures = delta(|s| s.repair_failures);
+            last.scrub_cycles = delta(|s| s.scrub_cycles);
             last.peer_lease_expirations =
                 self.directory.lease_expirations() - leases_before;
         }
@@ -4346,6 +4810,11 @@ impl StageRunner {
             scrub_repairs: delta(|s| s.scrub_repairs),
             hedged_fills: delta(|s| s.hedged_fills),
             hedge_wins: delta(|s| s.hedge_wins),
+            repair_pushes: delta(|s| s.repair_pushes),
+            repair_bytes: delta(|s| s.repair_bytes),
+            orphan_repairs: delta(|s| s.orphan_repairs),
+            repair_failures: delta(|s| s.repair_failures),
+            scrub_cycles: delta(|s| s.scrub_cycles),
             // Leases expire directory-wide; only a barriered (static)
             // stage may claim the interval as its own.
             peer_lease_expirations: if per_stage_deltas {
@@ -4361,10 +4830,17 @@ impl StageRunner {
 }
 
 impl Drop for StageRunner {
-    /// Persist every group's retention manifest so the next run on this
-    /// layout warm-starts (§7 "learn from previous runs"). Best-effort:
-    /// a failed write just means the next run starts cold.
+    /// Stop the maintenance daemon first (it runs one final drain tick,
+    /// so an orphan observed moments before shutdown still gets its
+    /// replica), then persist every group's retention manifest so the
+    /// next run on this layout warm-starts (§7 "learn from previous
+    /// runs") — manifests written *after* the drain include the repaired
+    /// replicas and the final scrub stamps. Best-effort: a failed write
+    /// just means the next run starts cold.
     fn drop(&mut self) {
+        if let Some((_, mut daemon)) = self.maintenance.take() {
+            daemon.stop();
+        }
         for cache in self.caches.iter() {
             let _ = cache.save_manifest();
         }
@@ -4741,6 +5217,76 @@ mod tests {
     }
 
     #[test]
+    fn scrub_pass_repairs_drops_and_persists_stamps() {
+        let root = tmp("gc-scrubpass");
+        let layout = LocalLayout::create(&root, 1, 1).unwrap();
+        let names = ["s0-g0-00000.cioar", "s0-g0-00001.cioar", "s0-g0-00002.cioar"];
+        for (i, n) in names.iter().enumerate() {
+            write_archive(&layout.gfs(), n, &[("m", &vec![i as u8; 2048])]);
+        }
+        let cache = GroupCache::new(&layout, 0, mib(16));
+        for n in &names {
+            cache.retain(&layout.gfs().join(n), n).unwrap();
+        }
+
+        // First pass: everything verifies clean and gets stamped.
+        let s = cache.scrub_pass(&layout.gfs(), 10);
+        assert_eq!((s.scanned, s.clean, s.repaired, s.dropped), (3, 3, 0, 0), "{s:?}");
+        assert_eq!(cache.snapshot().scrub_cycles, 1);
+
+        // Bit-rot one retained copy in place (same size, bad checksum):
+        // the pass must catch it and repair from the canonical GFS copy.
+        let flip = |path: &std::path::Path| {
+            let mut bytes = std::fs::read(path).unwrap();
+            let mid = bytes.len() / 2;
+            bytes[mid] ^= 0xFF;
+            std::fs::write(path, &bytes).unwrap();
+        };
+        flip(&layout.ifs_data(0).join(names[1]));
+        // Rot another AND delete its canonical copy: unrepairable.
+        flip(&layout.ifs_data(0).join(names[2]));
+        std::fs::remove_file(layout.gfs().join(names[2])).unwrap();
+
+        let s = cache.scrub_pass(&layout.gfs(), 10);
+        assert_eq!((s.scanned, s.repaired, s.dropped), (3, 1, 1), "{s:?}");
+        assert!(!cache.contains(names[2]), "unrepairable archive must be dropped");
+        let (r, _) = cache.open_archive(&layout.gfs(), names[1]).unwrap();
+        assert_eq!(r.extract("m").unwrap(), vec![1u8; 2048], "repair restored exact bytes");
+        let snap = cache.snapshot();
+        assert_eq!(snap.corruption_detected, 2, "{snap:?}");
+        assert_eq!(snap.scrub_repairs, 1, "{snap:?}");
+        assert_eq!(snap.scrub_cycles, 2, "{snap:?}");
+
+        // Stamps persist via the manifest, and only for retained entries.
+        cache.save_manifest().unwrap();
+        let text = std::fs::read_to_string(layout.ifs_manifest(0)).unwrap();
+        let stamped: Vec<String> = text
+            .lines()
+            .filter(|l| l.starts_with("#scrubbed\t"))
+            .map(|l| l.to_string())
+            .collect();
+        assert_eq!(stamped.len(), 2, "dropped entries carry no stamp:\n{text}");
+        for line in &stamped {
+            let at: u64 = line.split('\t').nth(2).unwrap().parse().unwrap();
+            assert!(at > 0, "stamps are epoch seconds: {line}");
+        }
+
+        // A warm start restores the stamps untouched: re-saving without
+        // scrubbing must round-trip the exact same lines.
+        drop(cache);
+        let warm = GroupCache::new(&layout, 0, mib(16));
+        assert!(warm.contains(names[0]) && warm.contains(names[1]));
+        warm.save_manifest().unwrap();
+        let text2 = std::fs::read_to_string(layout.ifs_manifest(0)).unwrap();
+        let again: Vec<String> = text2
+            .lines()
+            .filter(|l| l.starts_with("#scrubbed\t"))
+            .map(|l| l.to_string())
+            .collect();
+        assert_eq!(stamped, again, "stamps must survive a warm start unchanged");
+    }
+
+    #[test]
     fn concurrent_same_archive_misses_dedupe_to_one_gfs_copy() {
         let root = tmp("gc-flight");
         let layout = LocalLayout::create(&root, 1, 1).unwrap();
@@ -4912,6 +5458,7 @@ mod tests {
             threads: 4,
             retry: RetryPolicy::default(),
             faults: None,
+            repair: None,
         };
         let mut runner = StageRunner::new(layout, graph, config);
         let tasks = 16u32;
@@ -4974,6 +5521,7 @@ mod tests {
             threads: 4,
             retry: RetryPolicy::default(),
             faults: None,
+            repair: None,
         };
         let mut runner = StageRunner::new(layout, graph, config);
         let tasks = 8u32;
@@ -5268,6 +5816,7 @@ mod tests {
             threads: 1,
             retry: RetryPolicy::default(),
             faults: None,
+            repair: None,
         };
         let mut runner = StageRunner::new(layout, graph, config);
         let body = |t: u32, _input: &StageInput<'_>| -> Result<Vec<u8>> {

@@ -104,6 +104,17 @@
 //!   re-verifies retained archives and repairs from GFS, and a waiter
 //!   stuck behind a slow fill hedges a bounded second fetch —
 //!   first-success-wins through the existing fill latch.
+//! * [`repair`] — the PR-10 tentpole: self-healing retention. An
+//!   [`repair::AvailabilityManager`] derives per-archive replica targets
+//!   from [`placement::LearnedPlacement`] read counts (popular archives
+//!   want two live sources, everything else one) and feeds a prioritized
+//!   repair queue from lease expirations, scrub drops, and last-replica
+//!   evictions; a background [`repair::MaintenanceDaemon`] (owned by the
+//!   stage runner, drained on shutdown) works the queue under a byte
+//!   budget and in-flight cap — idle-triggered so it never competes with
+//!   foreground fills — pushing replicas through the verified routed-fill
+//!   path, and owns the scrub cadence with per-archive last-verified
+//!   times persisted in the manifest.
 //! * [`directory`] — the PR-4 tentpole: a cluster-wide
 //!   [`directory::RetentionDirectory`] tracks which groups retain each
 //!   archive (updated on retains, fills, evictions, clears, and manifest
@@ -146,6 +157,7 @@ pub mod fault;
 pub mod local;
 pub mod local_stage;
 pub mod placement;
+pub mod repair;
 pub mod stage;
 pub mod swift;
 pub mod transport;

@@ -167,6 +167,37 @@ impl PlacementPolicy {
         let ttl_ms = self.retry_policy().source_deadline_ms.saturating_mul(2).clamp(500, 60_000);
         LeaseConfig { ttl_ms, heartbeat_ms: (ttl_ms / 3).max(1) }
     }
+
+    /// Self-healing retention knobs (PR 10) derived from the same scale,
+    /// feeding [`crate::cio::repair::AvailabilityManager`]:
+    ///
+    /// * popular archives (read by more than `read_many_threshold`
+    ///   distinct tasks — the §5.1 read-many line) want two live sources,
+    ///   everything else wants one;
+    /// * each maintenance tick may move at most one worst-case neighbor
+    ///   transfer ([`PlacementPolicy::neighbor_transfer_limit`]) across at
+    ///   most two in-flight pushes, so repair never outruns the bandwidth
+    ///   a single foreground fill is entitled to;
+    /// * the tick period is half the per-source probe deadline clamped to
+    ///   [50 ms, 5 s] — fast enough that an orphaned hot archive heals
+    ///   within a few probe windows, slow enough that an idle daemon is
+    ///   noise;
+    /// * scrub re-verifies each retained archive roughly every ten lease
+    ///   lifetimes (clamped to [5 s, 10 min]), a handful of archives per
+    ///   pass, oldest-verified first.
+    pub fn repair_config(&self) -> crate::cio::repair::RepairConfig {
+        let deadline_ms = self.retry_policy().source_deadline_ms;
+        let ttl_ms = self.lease_config().ttl_ms;
+        crate::cio::repair::RepairConfig {
+            replica_target: 2,
+            popularity_threshold: self.read_many_threshold,
+            byte_budget_per_tick: self.neighbor_transfer_limit().max(1),
+            max_inflight_per_tick: 2,
+            tick_ms: (deadline_ms / 2).clamp(50, 5_000),
+            scrub_period_ms: ttl_ms.saturating_mul(10).clamp(5_000, 600_000),
+            scrub_batch: 8,
+        }
+    }
 }
 
 /// Peer-liveness lease knobs derived from placement scale (see
@@ -311,6 +342,20 @@ impl LearnedPlacement {
         self.observed.len()
     }
 
+    /// Observed read count for `name` (0 when never seen) — the
+    /// popularity signal [`crate::cio::repair::AvailabilityManager`]
+    /// sizes replica targets with.
+    pub fn read_count(&self, name: &str) -> u32 {
+        self.observed.get(name).map(|d| d.readers).unwrap_or(0)
+    }
+
+    /// Iterate the observed datasets (name, size, reader count), in
+    /// arbitrary order — lets an availability audit walk every archive
+    /// with history instead of probing names one at a time.
+    pub fn iter(&self) -> impl Iterator<Item = &Dataset> {
+        self.observed.values()
+    }
+
     /// True when no history has been recorded.
     pub fn is_empty(&self) -> bool {
         self.observed.is_empty()
@@ -426,6 +471,55 @@ mod tests {
         let tr = tiny.retry_policy();
         assert_eq!(tr.hedge_delay_ms, 62, "250 ms deadline / 4");
         assert_eq!(tiny.lease_config().ttl_ms, 500);
+    }
+
+    #[test]
+    fn repair_knobs_track_the_source_deadline() {
+        let cfg = ClusterConfig::bgp(4096).with_stripe(32);
+        let p = PlacementPolicy::from_config(&cfg);
+        let r = p.repair_config();
+        assert_eq!(r.replica_target, 2, "popular archives want a second live source");
+        assert_eq!(r.popularity_threshold, p.read_many_threshold);
+        assert_eq!(
+            r.byte_budget_per_tick,
+            p.neighbor_transfer_limit(),
+            "one worst-case neighbor transfer per tick"
+        );
+        assert_eq!(r.max_inflight_per_tick, 2);
+        assert_eq!(r.tick_ms, (p.retry_policy().source_deadline_ms / 2).clamp(50, 5_000));
+        assert_eq!(
+            r.scrub_period_ms,
+            (p.lease_config().ttl_ms * 10).clamp(5_000, 600_000),
+            "scrub cycles every ~ten lease lifetimes"
+        );
+        assert!(r.scrub_batch >= 1);
+        assert_eq!(r.tick().as_millis() as u64, r.tick_ms);
+        assert_eq!(r.scrub_period().as_millis() as u64, r.scrub_period_ms);
+
+        // A tiny cluster clamps at the floors and never degenerates to a
+        // zero budget or a zero tick.
+        let tiny = PlacementPolicy {
+            lfs_limit: mib(1),
+            ifs_limit: mib(4),
+            read_many_threshold: 1,
+        };
+        let tr = tiny.repair_config();
+        assert!(tr.byte_budget_per_tick >= 1);
+        assert_eq!(tr.tick_ms, 125, "250 ms deadline / 2");
+        assert_eq!(tr.scrub_period_ms, 5_000, "floor at 5 s");
+    }
+
+    #[test]
+    fn read_count_reports_observed_popularity() {
+        let mut learned = LearnedPlacement::new();
+        assert_eq!(learned.read_count("never"), 0);
+        learned.record_reads("hot.db", gib(2), 7);
+        learned.record_read("hot.db", gib(2));
+        assert_eq!(learned.read_count("hot.db"), 8);
+        assert_eq!(learned.iter().count(), 1);
+        let seen = learned.iter().next().unwrap();
+        assert_eq!(seen.name, "hot.db");
+        assert_eq!(seen.readers, 8);
     }
 
     #[test]

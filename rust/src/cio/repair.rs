@@ -1,0 +1,825 @@
+//! Self-healing retention (PR 10): an availability manager that puts
+//! replicas *back* when the serving tier loses them.
+//!
+//! The paper's broadcast insight (§5.1) is that popular data should
+//! already be resident where readers will want it. Every earlier layer
+//! only *loses* replicas over time — lease expiry withdraws a dead
+//! peer's whole advertisement, scrub drops rotted copies, eviction
+//! claims the last copy of an archive nobody read recently — and readers
+//! then fall back to GFS until demand re-pulls the bytes: exactly the
+//! shared-filesystem burden the paper eliminates. The
+//! [`AvailabilityManager`] closes that loop.
+//!
+//! # Event sources
+//!
+//! The manager feeds one prioritized repair queue from three places:
+//!
+//! 1. **Peer-lease expirations.** [`PeerMonitor`] sweeps
+//!    [`RetentionDirectory::expire_overdue`]; archives whose *only* live
+//!    source died are logged as [`OrphanCause::PeerExpiry`] and queued
+//!    with top urgency — until repaired, every read of them is a GFS
+//!    round trip.
+//! 2. **Scrub drops.** A scrub pass that finds a rotted copy and cannot
+//!    re-fetch it drops the replica through
+//!    [`RetentionDirectory::record_scrub_drop`]; the
+//!    [`OrphanCause::ScrubDrop`] event triggers a deficit re-audit even
+//!    while other replicas survive.
+//! 3. **Last-replica eviction.** A directory withdrawal that empties an
+//!    archive's source set logs [`OrphanCause::Eviction`]. Cold archives
+//!    are *not* re-replicated on eviction (that would undo the LRU's
+//!    capacity management); only archives whose observed read count
+//!    clears the popularity threshold are.
+//!
+//! # Replica targets
+//!
+//! Targets derive from [`LearnedPlacement`] read counts — the §7
+//! "learn from the IO patterns of previous runs" signal finally gets a
+//! consumer: archives read by more than
+//! [`RepairConfig::popularity_threshold`] distinct tasks want
+//! [`RepairConfig::replica_target`] live sources; everything else wants
+//! one. [`AvailabilityManager::audit_deficits`] additionally walks every
+//! observed-popular archive each tick, so a deficit that never produced
+//! an orphan event (e.g. a replica lost before the manager attached) is
+//! still found.
+//!
+//! # Rate limits
+//!
+//! Repair must never starve foreground fills. Each
+//! [`AvailabilityManager::tick`]:
+//!
+//! * is **idle-triggered** — when [`RepairExecutor::foreground_busy`]
+//!   reports in-flight foreground fills the tick only absorbs events and
+//!   defers all movement;
+//! * launches at most [`RepairConfig::max_inflight_per_tick`] pushes;
+//! * moves at most [`RepairConfig::byte_budget_per_tick`] bytes — a hard
+//!   cap, checked *before* each push. An archive larger than the whole
+//!   per-tick budget is dropped as unrepairable (counted in
+//!   `repair_failures`), mirroring the neighbor-transfer size cap on the
+//!   foreground path.
+//!
+//! Failed pushes are retried with fresh routing up to three attempts,
+//! then dropped (and counted) — a persistently failing repair must not
+//! wedge the queue.
+//!
+//! # Scrub cadence
+//!
+//! The same [`MaintenanceDaemon`] thread owns scrub scheduling: every
+//! [`RepairConfig::scrub_period_ms`] it runs one
+//! [`RepairExecutor::scrub_slice`] of at most
+//! [`RepairConfig::scrub_batch`] archives, least-recently-verified
+//! first. Per-archive last-verified times persist in the retention
+//! manifest (`#scrubbed` lines), so a restarted runner resumes the cycle
+//! where it left off instead of re-verifying everything.
+//!
+//! # Shutdown semantics
+//!
+//! The daemon is owned by the [`StageRunner`] and stopped *before* the
+//! runner saves manifests: [`MaintenanceDaemon::stop`] sets the stop
+//! flag, lets the in-flight tick finish, runs one final non-idle-gated
+//! drain tick (so an event absorbed moments before shutdown still gets
+//! its bounded budget of repair), and joins the thread. Dropping the
+//! daemon stops it.
+//!
+//! [`PeerMonitor`]: crate::cio::local_stage::PeerMonitor
+//! [`StageRunner`]: crate::cio::local_stage::StageRunner
+//! [`RetentionDirectory::expire_overdue`]: crate::cio::directory::RetentionDirectory::expire_overdue
+//! [`RetentionDirectory::record_scrub_drop`]: crate::cio::directory::RetentionDirectory::record_scrub_drop
+
+use crate::cio::directory::{OrphanCause, RetentionDirectory};
+use crate::cio::placement::LearnedPlacement;
+use anyhow::Result;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Give up on a repair after this many failed pushes (each with fresh
+/// routing): a rotted GFS copy or a cluster with no accepting target
+/// must not wedge the queue.
+const MAX_ATTEMPTS: u32 = 3;
+
+/// Self-healing knobs, usually derived from placement scale by
+/// [`crate::cio::placement::PlacementPolicy::repair_config`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RepairConfig {
+    /// Live sources a *popular* archive wants; everything else wants 1.
+    pub replica_target: u32,
+    /// Observed read count strictly above this marks an archive popular
+    /// (the §5.1 read-many line).
+    pub popularity_threshold: u32,
+    /// Hard cap on bytes moved per maintenance tick.
+    pub byte_budget_per_tick: u64,
+    /// Maximum repair pushes launched per tick.
+    pub max_inflight_per_tick: usize,
+    /// Maintenance tick period in milliseconds.
+    pub tick_ms: u64,
+    /// Scrub-slice period in milliseconds.
+    pub scrub_period_ms: u64,
+    /// Archives verified per scrub slice, least-recently-verified first.
+    pub scrub_batch: usize,
+}
+
+impl RepairConfig {
+    /// The tick period as a [`Duration`].
+    pub fn tick(&self) -> Duration {
+        Duration::from_millis(self.tick_ms)
+    }
+
+    /// The scrub period as a [`Duration`].
+    pub fn scrub_period(&self) -> Duration {
+        Duration::from_millis(self.scrub_period_ms)
+    }
+}
+
+/// What one [`AvailabilityManager::tick`] did — returned so callers
+/// (daemon, benches, tests) can observe progress without re-deriving it
+/// from counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TickOutcome {
+    /// Replicas pushed this tick.
+    pub pushes: u64,
+    /// Bytes moved this tick (always ≤ the configured budget).
+    pub bytes: u64,
+    /// True when foreground fills deferred all movement.
+    pub deferred_busy: bool,
+}
+
+/// The cluster-side muscle the manager directs. Implemented over a
+/// runner's group caches in `local_stage` (replicate = the existing
+/// verified routed-fill/`Transport::publish` path, so repaired copies
+/// are checksum-verified, directory-published, and evictable), and by
+/// in-memory mocks in tests.
+pub trait RepairExecutor: Send + Sync {
+    /// Candidate target groups for a new replica of `archive`, best
+    /// first (the executor owns topology: torus distance to the existing
+    /// sources/producer, capacity, acceptance). Groups already listed as
+    /// sources must be excluded.
+    fn candidate_groups(&self, archive: &str) -> Vec<u32>;
+
+    /// Size of `archive` in bytes, or `None` when no copy (retained or
+    /// GFS) can be found to measure — such an archive is unrepairable.
+    fn archive_bytes(&self, archive: &str) -> Option<u64>;
+
+    /// Push one replica of `archive` onto `target` through the verified
+    /// fill path; returns bytes moved. Must publish the new replica to
+    /// the directory on success.
+    fn replicate(&self, archive: &str, target: u32) -> Result<u64>;
+
+    /// True while foreground fills are in flight — the idle gate.
+    fn foreground_busy(&self) -> bool;
+
+    /// Verify up to `max` least-recently-verified retained archives,
+    /// stamping their last-verified times; returns how many were
+    /// scanned.
+    fn scrub_slice(&self, max: usize) -> usize;
+
+    /// Outcome hook: a replica of `archive` landed on `target` (`bytes`
+    /// moved; `was_orphan` when it had zero live sources). The runner's
+    /// executor mirrors these into the target cache's counters so they
+    /// flow through the normal snapshot/manifest/report path; mocks may
+    /// ignore it.
+    fn note_repair(&self, _archive: &str, _target: u32, _bytes: u64, _was_orphan: bool) {}
+
+    /// Outcome hook: a repair of `archive` was abandoned (unknown size,
+    /// over-budget, out of targets, or out of attempts).
+    fn note_failure(&self, _archive: &str) {}
+}
+
+/// One queued repair. Ordered most-urgent-first: archives with zero
+/// live sources before mere deficits, higher observed read counts
+/// before lower, then FIFO for determinism.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct PendingRepair {
+    /// No live source at enqueue time: every read is a GFS miss.
+    orphaned: bool,
+    /// Observed read count at enqueue time.
+    reads: u32,
+    /// Enqueue sequence (FIFO tie-break).
+    seq: Reverse<u64>,
+    name: String,
+    attempts: u32,
+}
+
+impl Ord for PendingRepair {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.orphaned, self.reads, &self.seq)
+            .cmp(&(other.orphaned, other.reads, &other.seq))
+    }
+}
+
+impl PartialOrd for PendingRepair {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+#[derive(Default)]
+struct QueueInner {
+    heap: BinaryHeap<PendingRepair>,
+    /// Names currently queued (dedup guard).
+    queued: HashSet<String>,
+    /// Monotonic enqueue counter.
+    seq: u64,
+}
+
+/// Maintains per-archive replica targets and heals the cluster: see the
+/// module docs for event sources, targets, and rate limits. All methods
+/// are internally synchronized; the manager is shared between the
+/// [`MaintenanceDaemon`] thread and whoever seeds popularity.
+pub struct AvailabilityManager {
+    directory: Arc<RetentionDirectory>,
+    config: RepairConfig,
+    /// archive name → observed read count (the popularity signal).
+    popularity: Mutex<HashMap<String, u32>>,
+    queue: Mutex<QueueInner>,
+    repair_pushes: AtomicU64,
+    repair_bytes: AtomicU64,
+    orphan_repairs: AtomicU64,
+    repair_failures: AtomicU64,
+}
+
+impl AvailabilityManager {
+    /// Attach a manager to `directory` (enabling its replica-loss log)
+    /// with the given knobs.
+    pub fn new(directory: Arc<RetentionDirectory>, config: RepairConfig) -> AvailabilityManager {
+        directory.enable_orphan_tracking();
+        AvailabilityManager {
+            directory,
+            config,
+            popularity: Mutex::new(HashMap::new()),
+            queue: Mutex::new(QueueInner::default()),
+            repair_pushes: AtomicU64::new(0),
+            repair_bytes: AtomicU64::new(0),
+            orphan_repairs: AtomicU64::new(0),
+            repair_failures: AtomicU64::new(0),
+        }
+    }
+
+    /// The knobs this manager runs with.
+    pub fn config(&self) -> &RepairConfig {
+        &self.config
+    }
+
+    /// Seed (or refresh) the popularity map from a run's learned
+    /// placement — [`crate::cio::local_stage::StageRunner::seed_learned`]
+    /// merges persisted manifest read counts with live ones, so a
+    /// restarted runner knows last run's hot set before its first read.
+    pub fn seed_popularity(&self, learned: &LearnedPlacement) {
+        let mut pop = self.popularity.lock().unwrap();
+        for ds in learned.iter() {
+            let e = pop.entry(ds.name.clone()).or_insert(0);
+            *e = (*e).max(ds.readers);
+        }
+    }
+
+    /// Observed read count for `archive` (0 when never seen).
+    pub fn read_count(&self, archive: &str) -> u32 {
+        self.popularity.lock().unwrap().get(archive).copied().unwrap_or(0)
+    }
+
+    /// Live sources `archive` wants: [`RepairConfig::replica_target`]
+    /// when popular, 1 otherwise.
+    pub fn replica_target(&self, archive: &str) -> u32 {
+        if self.read_count(archive) > self.config.popularity_threshold {
+            self.config.replica_target.max(1)
+        } else {
+            1
+        }
+    }
+
+    /// Replicas pushed so far.
+    pub fn repair_pushes(&self) -> u64 {
+        self.repair_pushes.load(Ordering::Relaxed)
+    }
+
+    /// Bytes moved by repair so far.
+    pub fn repair_bytes(&self) -> u64 {
+        self.repair_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Repairs of archives that had *zero* live sources (every read was
+    /// a GFS miss until the push landed).
+    pub fn orphan_repairs(&self) -> u64 {
+        self.orphan_repairs.load(Ordering::Relaxed)
+    }
+
+    /// Pushes abandoned after [`MAX_ATTEMPTS`] failures, plus archives
+    /// found unrepairable (unknown size / larger than the tick budget).
+    pub fn repair_failures(&self) -> u64 {
+        self.repair_failures.load(Ordering::Relaxed)
+    }
+
+    /// Repairs currently queued.
+    pub fn queue_len(&self) -> usize {
+        self.queue.lock().unwrap().heap.len()
+    }
+
+    fn enqueue(&self, name: &str, attempts: u32) {
+        let orphaned = self.directory.sources(name).is_empty();
+        let reads = self.read_count(name);
+        let mut q = self.queue.lock().unwrap();
+        if !q.queued.insert(name.to_string()) {
+            return;
+        }
+        q.seq += 1;
+        let seq = Reverse(q.seq);
+        q.heap.push(PendingRepair { orphaned, reads, seq, name: name.to_string(), attempts });
+    }
+
+    /// Drain the directory's replica-loss log into the queue. Eviction
+    /// of a *cold* archive is deliberately skipped — re-replicating it
+    /// would undo the LRU; lease-expiry and scrub-drop losses always
+    /// queue (their replica count shrank through failure, not policy).
+    pub fn absorb_events(&self) {
+        for (name, cause) in self.directory.drain_orphans() {
+            if cause == OrphanCause::Eviction
+                && self.read_count(&name) <= self.config.popularity_threshold
+            {
+                continue;
+            }
+            self.enqueue(&name, 0);
+        }
+    }
+
+    /// Walk every observed-popular archive and queue those short of
+    /// their replica target — the catch-all for deficits that never
+    /// produced an orphan event.
+    pub fn audit_deficits(&self) {
+        let popular: Vec<String> = {
+            let pop = self.popularity.lock().unwrap();
+            pop.iter()
+                .filter(|(_, &reads)| reads > self.config.popularity_threshold)
+                .map(|(name, _)| name.clone())
+                .collect()
+        };
+        for name in popular {
+            let live = self.directory.sources(&name).len() as u32;
+            if live < self.replica_target(&name) {
+                self.enqueue(&name, 0);
+            }
+        }
+    }
+
+    /// One maintenance pass: absorb events, audit deficits, then — when
+    /// foreground is idle — work the queue under the byte budget and
+    /// in-flight cap. See the module docs for the full rate-limit
+    /// contract.
+    pub fn tick(&self, exec: &dyn RepairExecutor) -> TickOutcome {
+        self.tick_inner(exec, false)
+    }
+
+    /// A shutdown drain tick: same budget, but ignores the idle gate so
+    /// an event absorbed moments before shutdown still gets repaired.
+    pub fn drain_tick(&self, exec: &dyn RepairExecutor) -> TickOutcome {
+        self.tick_inner(exec, true)
+    }
+
+    fn tick_inner(&self, exec: &dyn RepairExecutor, ignore_busy: bool) -> TickOutcome {
+        self.absorb_events();
+        self.audit_deficits();
+        let mut out = TickOutcome::default();
+        if !ignore_busy && exec.foreground_busy() {
+            out.deferred_busy = true;
+            return out;
+        }
+        let mut launched = 0usize;
+        while launched < self.config.max_inflight_per_tick.max(1) {
+            let Some(pending) = self.pop() else { break };
+            // Re-check the deficit at launch time: a racing foreground
+            // fill may have re-published a source since enqueue.
+            let live = self.directory.sources(&pending.name);
+            if live.len() as u32 >= self.replica_target(&pending.name) {
+                continue;
+            }
+            let Some(bytes) = exec.archive_bytes(&pending.name) else {
+                // No copy anywhere to measure: unrepairable.
+                self.repair_failures.fetch_add(1, Ordering::Relaxed);
+                exec.note_failure(&pending.name);
+                continue;
+            };
+            if bytes > self.config.byte_budget_per_tick {
+                // Larger than a whole tick's budget: unrepairable under
+                // this policy (mirrors the neighbor-transfer size cap).
+                self.repair_failures.fetch_add(1, Ordering::Relaxed);
+                exec.note_failure(&pending.name);
+                continue;
+            }
+            if out.bytes + bytes > self.config.byte_budget_per_tick {
+                // Budget exhausted: put it back for the next tick.
+                self.enqueue(&pending.name, pending.attempts);
+                break;
+            }
+            let target = exec
+                .candidate_groups(&pending.name)
+                .into_iter()
+                .find(|g| !live.contains(g));
+            let Some(target) = target else {
+                self.fail_or_retry(exec, pending);
+                launched += 1;
+                continue;
+            };
+            match exec.replicate(&pending.name, target) {
+                Ok(moved) => {
+                    out.pushes += 1;
+                    out.bytes += moved;
+                    self.repair_pushes.fetch_add(1, Ordering::Relaxed);
+                    self.repair_bytes.fetch_add(moved, Ordering::Relaxed);
+                    if live.is_empty() {
+                        self.orphan_repairs.fetch_add(1, Ordering::Relaxed);
+                    }
+                    exec.note_repair(&pending.name, target, moved, live.is_empty());
+                }
+                Err(_) => self.fail_or_retry(exec, pending),
+            }
+            launched += 1;
+        }
+        out
+    }
+
+    fn pop(&self) -> Option<PendingRepair> {
+        let mut q = self.queue.lock().unwrap();
+        let pending = q.heap.pop()?;
+        q.queued.remove(&pending.name);
+        Some(pending)
+    }
+
+    fn fail_or_retry(&self, exec: &dyn RepairExecutor, mut pending: PendingRepair) {
+        pending.attempts += 1;
+        if pending.attempts >= MAX_ATTEMPTS {
+            self.repair_failures.fetch_add(1, Ordering::Relaxed);
+            exec.note_failure(&pending.name);
+        } else {
+            self.enqueue(&pending.name, pending.attempts);
+        }
+    }
+}
+
+/// The background maintenance thread: ticks the manager every
+/// [`RepairConfig::tick_ms`], runs a scrub slice every
+/// [`RepairConfig::scrub_period_ms`], and drains gracefully on stop (see
+/// the module docs). Owned by the
+/// [`crate::cio::local_stage::StageRunner`]; dropping it stops it.
+pub struct MaintenanceDaemon {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    scrub_cycles: Arc<AtomicU64>,
+}
+
+impl MaintenanceDaemon {
+    /// Start the daemon over `manager` and `exec`.
+    pub fn start(
+        manager: Arc<AvailabilityManager>,
+        exec: Arc<dyn RepairExecutor>,
+    ) -> MaintenanceDaemon {
+        let stop = Arc::new(AtomicBool::new(false));
+        let scrub_cycles = Arc::new(AtomicU64::new(0));
+        let (stop2, cycles2) = (Arc::clone(&stop), Arc::clone(&scrub_cycles));
+        let thread = std::thread::spawn(move || {
+            let cfg = *manager.config();
+            let mut last_scrub = Instant::now();
+            loop {
+                // Sliced sleep so stop() never waits a whole tick.
+                let mut slept = Duration::ZERO;
+                while slept < cfg.tick() {
+                    if stop2.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let slice = cfg.tick().saturating_sub(slept).min(Duration::from_millis(20));
+                    std::thread::sleep(slice);
+                    slept += slice;
+                }
+                if stop2.load(Ordering::Acquire) {
+                    break;
+                }
+                manager.tick(&*exec);
+                if last_scrub.elapsed() >= cfg.scrub_period() {
+                    exec.scrub_slice(cfg.scrub_batch.max(1));
+                    cycles2.fetch_add(1, Ordering::Relaxed);
+                    last_scrub = Instant::now();
+                }
+            }
+            // Graceful drain: one final non-idle-gated, still-budgeted
+            // tick, so a loss observed moments before shutdown is not
+            // silently forgotten.
+            manager.drain_tick(&*exec);
+        });
+        MaintenanceDaemon { stop, thread: Some(thread), scrub_cycles }
+    }
+
+    /// Scrub slices the daemon has run so far.
+    pub fn scrub_cycles(&self) -> u64 {
+        self.scrub_cycles.load(Ordering::Relaxed)
+    }
+
+    /// Stop the daemon: finish the in-flight tick, run the final drain
+    /// tick, and join. Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for MaintenanceDaemon {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn config() -> RepairConfig {
+        RepairConfig {
+            replica_target: 2,
+            popularity_threshold: 1,
+            byte_budget_per_tick: 100,
+            max_inflight_per_tick: 2,
+            tick_ms: 10,
+            scrub_period_ms: 40,
+            scrub_batch: 4,
+        }
+    }
+
+    /// In-memory executor: replicate publishes to the directory like the
+    /// real one, sizes come from a fixed table, failures are scripted.
+    struct MockExec {
+        directory: Arc<RetentionDirectory>,
+        sizes: HashMap<String, u64>,
+        candidates: Vec<u32>,
+        fail: Mutex<HashMap<String, u32>>,
+        busy: AtomicBool,
+        replicated: Mutex<Vec<(String, u32)>>,
+        scrubbed: AtomicUsize,
+    }
+
+    impl MockExec {
+        fn new(directory: Arc<RetentionDirectory>) -> MockExec {
+            MockExec {
+                directory,
+                sizes: HashMap::new(),
+                candidates: vec![0, 1, 2, 3],
+                fail: Mutex::new(HashMap::new()),
+                busy: AtomicBool::new(false),
+                replicated: Mutex::new(Vec::new()),
+                scrubbed: AtomicUsize::new(0),
+            }
+        }
+    }
+
+    impl RepairExecutor for MockExec {
+        fn candidate_groups(&self, archive: &str) -> Vec<u32> {
+            let live = self.directory.sources(archive);
+            self.candidates.iter().copied().filter(|g| !live.contains(g)).collect()
+        }
+
+        fn archive_bytes(&self, archive: &str) -> Option<u64> {
+            self.sizes.get(archive).copied()
+        }
+
+        fn replicate(&self, archive: &str, target: u32) -> Result<u64> {
+            let mut fail = self.fail.lock().unwrap();
+            if let Some(n) = fail.get_mut(archive) {
+                if *n > 0 {
+                    *n -= 1;
+                    anyhow::bail!("scripted failure");
+                }
+            }
+            drop(fail);
+            self.replicated.lock().unwrap().push((archive.to_string(), target));
+            self.directory.publish(archive, target);
+            Ok(self.sizes[archive])
+        }
+
+        fn foreground_busy(&self) -> bool {
+            self.busy.load(Ordering::Relaxed)
+        }
+
+        fn scrub_slice(&self, max: usize) -> usize {
+            self.scrubbed.fetch_add(max, Ordering::Relaxed);
+            max
+        }
+    }
+
+    fn hot(mgr: &AvailabilityManager, name: &str, reads: u32, bytes: u64) {
+        let mut learned = LearnedPlacement::new();
+        learned.record_reads(name, bytes, reads);
+        mgr.seed_popularity(&learned);
+    }
+
+    #[test]
+    fn orphan_events_repair_most_urgent_first() {
+        let d = Arc::new(RetentionDirectory::new(4));
+        // One in-flight slot per tick: priority order is observable.
+        let mut cfg = config();
+        cfg.max_inflight_per_tick = 1;
+        let mgr = AvailabilityManager::new(Arc::clone(&d), cfg);
+        let mut exec = MockExec::new(Arc::clone(&d));
+        exec.sizes.insert("hot.cioar".into(), 10);
+        exec.sizes.insert("warm.cioar".into(), 10);
+        hot(&mgr, "hot.cioar", 64, 10);
+        hot(&mgr, "warm.cioar", 8, 10);
+
+        // Sole source of both dies.
+        d.publish("hot.cioar", 1);
+        d.publish("warm.cioar", 1);
+        d.renew_lease(1, Duration::from_millis(0));
+        std::thread::sleep(Duration::from_millis(5));
+        d.expire_overdue();
+
+        let out = mgr.tick(&exec);
+        assert_eq!(out.pushes, 1);
+        assert_eq!(exec.replicated.lock().unwrap()[0].0, "hot.cioar", "hotter orphan first");
+        assert_eq!(mgr.orphan_repairs(), 1, "zero live sources at push time");
+        let out = mgr.tick(&exec);
+        assert_eq!(out.pushes, 1);
+        assert_eq!(exec.replicated.lock().unwrap()[1].0, "warm.cioar");
+        assert_eq!(mgr.repair_pushes(), 2);
+        assert_eq!(mgr.repair_bytes(), 20);
+        assert_eq!(mgr.repair_failures(), 0);
+    }
+
+    #[test]
+    fn audit_tops_popular_archives_up_to_target_and_stops() {
+        let d = Arc::new(RetentionDirectory::new(4));
+        let mgr = AvailabilityManager::new(Arc::clone(&d), config());
+        let mut exec = MockExec::new(Arc::clone(&d));
+        exec.sizes.insert("hot.cioar".into(), 10);
+        hot(&mgr, "hot.cioar", 64, 10);
+        d.publish("hot.cioar", 0);
+
+        // One live source, target 2: the audit finds the deficit with no
+        // orphan event at all.
+        let out = mgr.tick(&exec);
+        assert_eq!(out.pushes, 1);
+        assert_eq!(d.sources("hot.cioar").len(), 2);
+        // At target: steady state is quiet.
+        let out = mgr.tick(&exec);
+        assert_eq!(out.pushes, 0);
+        assert_eq!(mgr.queue_len(), 0);
+    }
+
+    #[test]
+    fn cold_eviction_is_not_repaired_but_lease_expiry_is() {
+        let d = Arc::new(RetentionDirectory::new(4));
+        let mgr = AvailabilityManager::new(Arc::clone(&d), config());
+        let mut exec = MockExec::new(Arc::clone(&d));
+        exec.sizes.insert("cold.cioar".into(), 10);
+
+        // Evicting the last replica of a cold archive is normal LRU
+        // churn: absorbed, not queued.
+        d.publish("cold.cioar", 0);
+        d.withdraw("cold.cioar", 0);
+        let out = mgr.tick(&exec);
+        assert_eq!(out.pushes, 0);
+        assert_eq!(mgr.queue_len(), 0);
+
+        // The same cold archive lost to lease expiry *is* repaired: its
+        // replica vanished through failure, not policy.
+        d.publish("cold.cioar", 1);
+        d.renew_lease(1, Duration::from_millis(0));
+        std::thread::sleep(Duration::from_millis(5));
+        d.expire_overdue();
+        let out = mgr.tick(&exec);
+        assert_eq!(out.pushes, 1);
+        assert_eq!(mgr.orphan_repairs(), 1);
+    }
+
+    #[test]
+    fn byte_budget_caps_each_tick_and_carries_the_rest() {
+        let d = Arc::new(RetentionDirectory::new(4));
+        let mut cfg = config();
+        cfg.byte_budget_per_tick = 100;
+        cfg.max_inflight_per_tick = 8;
+        let mgr = AvailabilityManager::new(Arc::clone(&d), cfg);
+        let mut exec = MockExec::new(Arc::clone(&d));
+        for name in ["a.cioar", "b.cioar", "c.cioar"] {
+            exec.sizes.insert(name.into(), 60);
+            hot(&mgr, name, 64, 60);
+        }
+        let out = mgr.tick(&exec);
+        assert_eq!(out.pushes, 1, "second 60-byte push would blow the 100-byte budget");
+        assert!(out.bytes <= 100);
+        let out = mgr.tick(&exec);
+        assert_eq!(out.pushes, 1);
+        let out = mgr.tick(&exec);
+        assert_eq!(out.pushes, 1, "the carried-over repairs land on later ticks");
+        assert_eq!(mgr.repair_pushes(), 3);
+        // Keep ticking until every archive reaches its 2-replica target.
+        for _ in 0..3 {
+            assert_eq!(mgr.tick(&exec).pushes, 1);
+        }
+        assert_eq!(mgr.tick(&exec).pushes, 0, "steady state");
+
+        // An archive bigger than the whole budget is unrepairable, not a
+        // queue wedge.
+        exec.sizes.insert("huge.cioar".into(), 1000);
+        hot(&mgr, "huge.cioar", 64, 1000);
+        let before = mgr.repair_failures();
+        let out = mgr.tick(&exec);
+        assert_eq!(out.pushes, 0);
+        assert_eq!(mgr.repair_failures(), before + 1);
+        assert_eq!(mgr.queue_len(), 0);
+    }
+
+    #[test]
+    fn busy_foreground_defers_movement_but_not_absorption() {
+        let d = Arc::new(RetentionDirectory::new(4));
+        let mgr = AvailabilityManager::new(Arc::clone(&d), config());
+        let mut exec = MockExec::new(Arc::clone(&d));
+        exec.sizes.insert("hot.cioar".into(), 10);
+        hot(&mgr, "hot.cioar", 64, 10);
+        d.publish("hot.cioar", 0);
+        d.withdraw("hot.cioar", 0);
+
+        exec.busy.store(true, Ordering::Relaxed);
+        let out = mgr.tick(&exec);
+        assert!(out.deferred_busy);
+        assert_eq!(out.pushes, 0);
+        assert_eq!(mgr.queue_len(), 1, "the event was still absorbed");
+
+        exec.busy.store(false, Ordering::Relaxed);
+        let out = mgr.tick(&exec);
+        assert_eq!(out.pushes, 1);
+
+        // drain_tick ignores the gate (shutdown path).
+        let target = exec.replicated.lock().unwrap()[0].1;
+        d.withdraw("hot.cioar", target);
+        exec.busy.store(true, Ordering::Relaxed);
+        let out = mgr.drain_tick(&exec);
+        assert!(out.pushes >= 1);
+    }
+
+    #[test]
+    fn failed_pushes_retry_with_bounded_attempts() {
+        let d = Arc::new(RetentionDirectory::new(4));
+        // One attempt per tick, one-replica targets: each tick is
+        // exactly one retry, and a landed push ends the story.
+        let mut cfg = config();
+        cfg.max_inflight_per_tick = 1;
+        cfg.replica_target = 1;
+        let mgr = AvailabilityManager::new(Arc::clone(&d), cfg);
+        let mut exec = MockExec::new(Arc::clone(&d));
+        exec.sizes.insert("flaky.cioar".into(), 10);
+        hot(&mgr, "flaky.cioar", 64, 10);
+        exec.fail.lock().unwrap().insert("flaky.cioar".into(), 2);
+
+        // Two scripted failures, then success on the third attempt.
+        assert_eq!(mgr.tick(&exec).pushes, 0);
+        assert_eq!(mgr.tick(&exec).pushes, 0);
+        assert_eq!(mgr.tick(&exec).pushes, 1);
+        assert_eq!(mgr.repair_failures(), 0, "retries that eventually land are not failures");
+
+        // A persistent failure is dropped after MAX_ATTEMPTS.
+        exec.sizes.insert("dead.cioar".into(), 10);
+        hot(&mgr, "dead.cioar", 64, 10);
+        exec.fail.lock().unwrap().insert("dead.cioar".into(), u32::MAX);
+        for _ in 0..MAX_ATTEMPTS {
+            mgr.tick(&exec);
+        }
+        assert_eq!(mgr.repair_failures(), 1);
+        assert_eq!(mgr.queue_len(), 0, "no wedged queue");
+    }
+
+    #[test]
+    fn daemon_ticks_scrubs_and_drains_on_stop() {
+        let d = Arc::new(RetentionDirectory::new(4));
+        let mgr = Arc::new(AvailabilityManager::new(Arc::clone(&d), config()));
+        let mut exec = MockExec::new(Arc::clone(&d));
+        exec.sizes.insert("hot.cioar".into(), 10);
+        hot(&mgr, "hot.cioar", 64, 10);
+        let exec: Arc<MockExec> = Arc::new(exec);
+
+        d.publish("hot.cioar", 1);
+        d.renew_lease(1, Duration::from_millis(0));
+        std::thread::sleep(Duration::from_millis(5));
+        d.expire_overdue();
+
+        let mut daemon = MaintenanceDaemon::start(Arc::clone(&mgr), exec.clone());
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while mgr.repair_pushes() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(mgr.repair_pushes() >= 1, "daemon repaired the orphan");
+        while daemon.scrub_cycles() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(daemon.scrub_cycles() >= 1, "daemon ran a scrub slice");
+        assert!(exec.scrubbed.load(Ordering::Relaxed) >= 1);
+
+        // A loss just before stop is healed by the drain tick.
+        let target = exec.replicated.lock().unwrap()[0].1;
+        d.withdraw("hot.cioar", target);
+        daemon.stop();
+        daemon.stop(); // idempotent
+        assert_eq!(
+            d.sources("hot.cioar").len(),
+            2,
+            "shutdown drain repaired the final loss back to target"
+        );
+    }
+}

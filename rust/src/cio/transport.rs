@@ -107,6 +107,10 @@ const OP_PING: u8 = 5;
 const ST_OK: u8 = 0;
 const ST_NOT_FOUND: u8 = 1;
 const ST_ERROR: u8 = 2;
+/// The server is at its live-connection cap: come back after a backoff.
+/// Clients surface this as a *retryable* [`FillError`], so the existing
+/// retry/backoff/re-route chain absorbs saturation without new logic.
+const ST_BUSY: u8 = 3;
 
 /// Bytes per read/write slice when streaming an archive over a socket or
 /// into a file — small enough that deadlines are checked promptly.
@@ -359,6 +363,7 @@ pub struct ServerHandle {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     served: Arc<AtomicU64>,
+    busy: Arc<AtomicU64>,
     thread: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -371,6 +376,12 @@ impl ServerHandle {
     /// Requests served so far (all opcodes, including errors).
     pub fn served(&self) -> u64 {
         self.served.load(Ordering::Relaxed)
+    }
+
+    /// Connections turned away with `BUSY` because the live-connection
+    /// cap was reached.
+    pub fn busy_rejections(&self) -> u64 {
+        self.busy.load(Ordering::Relaxed)
     }
 
     /// Stop the accept loop and join it. In-flight connections finish
@@ -401,27 +412,64 @@ pub struct TransportServer;
 
 impl TransportServer {
     /// Bind `addr` (use `127.0.0.1:0` for an ephemeral port) and serve
-    /// `source` until the returned handle is stopped or dropped.
+    /// `source` until the returned handle is stopped or dropped, with no
+    /// live-connection bound.
     pub fn serve(addr: &str, source: Arc<dyn RecordSource>) -> Result<ServerHandle> {
+        TransportServer::serve_capped(addr, source, usize::MAX)
+    }
+
+    /// [`TransportServer::serve`] with a cap on concurrent live
+    /// connections (the thread-per-connection bound): a connection
+    /// accepted at the cap is answered with one `BUSY` frame and closed
+    /// instead of getting a serving thread. Clients see a retryable
+    /// [`FillError`] and come back through the normal backoff, so
+    /// saturation degrades to added latency — never a wedged latch or an
+    /// unbounded thread pile.
+    pub fn serve_capped(
+        addr: &str,
+        source: Arc<dyn RecordSource>,
+        max_live: usize,
+    ) -> Result<ServerHandle> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let served = Arc::new(AtomicU64::new(0));
-        let (stop2, served2) = (Arc::clone(&stop), Arc::clone(&served));
+        let busy = Arc::new(AtomicU64::new(0));
+        let live = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let (stop2, served2, busy2) = (Arc::clone(&stop), Arc::clone(&served), Arc::clone(&busy));
         let thread = std::thread::spawn(move || {
             for conn in listener.incoming() {
                 if stop2.load(Ordering::Acquire) {
                     break;
                 }
                 let Ok(stream) = conn else { continue };
+                if live.fetch_add(1, Ordering::AcqRel) >= max_live {
+                    live.fetch_sub(1, Ordering::AcqRel);
+                    busy2.fetch_add(1, Ordering::Relaxed);
+                    // Answer the client's first (in-flight) request with
+                    // a BUSY frame off-thread so a slow reader cannot
+                    // stall the accept loop, then drop the connection.
+                    std::thread::spawn(move || {
+                        let mut stream = stream;
+                        let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+                        let _ = respond(
+                            &mut stream,
+                            ST_BUSY,
+                            b"server at live-connection capacity; retry",
+                        );
+                    });
+                    continue;
+                }
                 let src = Arc::clone(&source);
                 let served = Arc::clone(&served2);
+                let live = Arc::clone(&live);
                 std::thread::spawn(move || {
                     let _ = serve_connection(stream, &*src, &served);
+                    live.fetch_sub(1, Ordering::AcqRel);
                 });
             }
         });
-        Ok(ServerHandle { addr: local, stop, served, thread: Some(thread) })
+        Ok(ServerHandle { addr: local, stop, served, busy, thread: Some(thread) })
     }
 }
 
@@ -855,6 +903,10 @@ impl SocketTransport {
             ST_NOT_FOUND => {
                 self.err(false, format!("{name} not held by peer {}", self.addr))
             }
+            ST_BUSY => self.err(
+                true,
+                format!("peer {} busy (connection cap) serving {name}", self.addr),
+            ),
             _ => {
                 let msg = String::from_utf8_lossy(&payload).into_owned();
                 self.err(true, format!("peer {} failed serving {name}: {msg}", self.addr))

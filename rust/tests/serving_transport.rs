@@ -21,14 +21,24 @@
 //!   heartbeats expire its liveness lease — withdrawing the dead
 //!   peer's whole advertised retention in one step and gating even the
 //!   producer fallback until it comes back.
+//! * The PR-10 cells: a saturated server answers over-cap connections
+//!   with a typed retryable `BUSY` (clients back off and drain through —
+//!   no wedged latch, no unbounded thread pile), and the availability
+//!   manager heals a hard-killed peer — the lease expiry orphans its
+//!   popular archives, rate-limited repair pushes re-replicate them, and
+//!   a third runner's reads come back with **zero GFS misses** where the
+//!   repair-disabled control pays one per archive.
 
-use cio::cio::archive::{Compression, Writer};
+use cio::cio::archive::{Compression, Reader, Writer};
 use cio::cio::directory::RetentionDirectory;
 use cio::cio::fault::{FaultAction, FaultInjector, OpClass, RetryPolicy};
 use cio::cio::local::LocalLayout;
 use cio::cio::local_stage::{
     bootstrap_peer_directory, ClusterRecordSource, GroupCache, PeerMonitor,
+    RunnerRepairExecutor,
 };
+use cio::cio::placement::LearnedPlacement;
+use cio::cio::repair::{AvailabilityManager, RepairConfig};
 use cio::cio::stage::CacheOutcome;
 use cio::cio::transport::{ServerHandle, SocketTransport, Transport, TransportServer};
 use cio::util::units::{kib, mib};
@@ -391,4 +401,213 @@ fn hard_killed_peer_reroutes_and_lease_expiry_withdraws_its_retention() {
         reconnects_before,
         "the dead peer was never dialed again"
     );
+}
+
+#[test]
+fn saturated_server_sheds_busy_and_clients_retry_through() {
+    let root = workspace("busy");
+    let layout = LocalLayout::create(&root, 2, 1).unwrap();
+    let name = "s0-g0-00000.cioar";
+    let payload = seed_archive(&layout, name, 60_000);
+    let faults = Arc::new(FaultInjector::new());
+    // Every serve holds its connection long enough that concurrent
+    // clients genuinely overlap — the cap must actually bind.
+    faults.inject(OpClass::Serve, "ifs/0/data", FaultAction::Delay(Duration::from_millis(50)));
+    let warm = GroupCache::new(&layout, 0, mib(16)).with_faults(faults);
+    warm.retain(&layout.gfs().join(name), name).unwrap();
+    let source = Arc::new(ClusterRecordSource::new(Arc::new(vec![warm])));
+    // One live connection at a time: everyone else gets a BUSY frame.
+    let server = TransportServer::serve_capped("127.0.0.1:0", source, 1).unwrap();
+    let addr = server.addr().to_string();
+
+    let threads = 6;
+    let barrier = std::sync::Barrier::new(threads);
+    let busy_errors: u64 = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|i| {
+                let addr = &addr;
+                let root = &root;
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    let t = SocketTransport::new(addr, 0);
+                    let dst = root.join(format!("busy-fetch-{i}.cioar"));
+                    barrier.wait();
+                    let deadline = Instant::now() + Duration::from_secs(30);
+                    let mut busy = 0u64;
+                    loop {
+                        match t.fetch_archive(name, &dst, Some(Duration::from_secs(10))) {
+                            Ok(_) => break,
+                            Err(e) => {
+                                assert!(
+                                    e.retryable,
+                                    "saturation must surface as a retryable error: {e:?}"
+                                );
+                                busy += 1;
+                                assert!(
+                                    Instant::now() < deadline,
+                                    "a saturated server must shed load, not wedge \
+                                     ({busy} rejections and counting)"
+                                );
+                                std::thread::sleep(Duration::from_millis(5));
+                            }
+                        }
+                    }
+                    // Free the live-connection slot before verifying, so
+                    // the remaining clients drain promptly.
+                    drop(t);
+                    let r = Reader::open(&dst).unwrap();
+                    (busy, r.extract("m").unwrap())
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                let (busy, bytes) = h.join().unwrap();
+                assert_eq!(bytes, payload, "every client drains through byte-exact");
+                busy
+            })
+            .sum()
+    });
+    // With six clients racing one slot behind a 50 ms serve, some of
+    // them were necessarily turned away — and the server counted it.
+    assert!(busy_errors >= 1, "at least one client saw the typed retryable rejection");
+    assert!(
+        server.busy_rejections() >= 1,
+        "the cap actually bound: {} rejections",
+        server.busy_rejections()
+    );
+}
+
+#[test]
+fn killed_peer_lease_expiry_feeds_repair_until_reads_skip_gfs() {
+    let root = workspace("heal");
+    let layout = LocalLayout::create(&root, 4, 1).unwrap(); // groups 0..3
+    let names = ["s0-g0-00000.cioar", "s0-g0-00001.cioar", "s0-g0-00002.cioar"];
+    let payloads: Vec<Vec<u8>> =
+        names.iter().map(|n| seed_archive(&layout, n, 40_000)).collect();
+
+    // Process A: the *sole* live source of all three archives.
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_cio-serve"))
+        .arg(&root)
+        .args(["4", "1", "0"])
+        .args(names)
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawning cio-serve");
+    let mut ready = String::new();
+    std::io::BufReader::new(child.stdout.take().unwrap()).read_line(&mut ready).unwrap();
+    let addr = ready
+        .trim()
+        .strip_prefix("READY ")
+        .unwrap_or_else(|| panic!("unexpected cio-serve banner: {ready:?}"))
+        .to_string();
+
+    let directory = Arc::new(RetentionDirectory::new(layout.ifs_groups()));
+    assert_eq!(bootstrap_peer_directory(&layout, &directory, 0), 3, "peer advertises all 3");
+    for n in &names {
+        assert_eq!(directory.sources(n), vec![0], "the peer is the sole live source");
+    }
+
+    // The availability manager attaches *before* the failure so the
+    // lease expiry's replica-loss events land in its log; every archive
+    // is known-popular (read counts above the threshold), so each wants
+    // two live replicas.
+    let cfg = RepairConfig {
+        replica_target: 2,
+        popularity_threshold: 0,
+        byte_budget_per_tick: 100_000,
+        max_inflight_per_tick: 2,
+        tick_ms: 5,
+        scrub_period_ms: 60_000,
+        scrub_batch: 4,
+    };
+    let mgr = AvailabilityManager::new(directory.clone(), cfg);
+    let mut learned = LearnedPlacement::new();
+    for n in &names {
+        learned.record_reads(n, 41_000, 5);
+    }
+    mgr.seed_popularity(&learned);
+
+    // Heartbeats keep the lease current while the peer lives...
+    let transport = Arc::new(SocketTransport::new(&addr, 0));
+    transport.ping().expect("a live peer answers the heartbeat");
+    let monitor = PeerMonitor::start(
+        directory.clone(),
+        vec![(0, transport.clone() as Arc<dyn Transport>)],
+        Duration::from_millis(40),
+        Duration::from_millis(150),
+    );
+
+    // ...then the hard kill: no handshake, just sustained silence.
+    child.kill().expect("killing cio-serve");
+    child.wait().expect("reaping cio-serve");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while directory.lease_expirations() == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(directory.lease_expirations() >= 1, "the dead peer's lease must expire");
+    for n in &names {
+        assert!(directory.sources(n).is_empty(), "{n}: every replica died with the peer");
+    }
+    drop(monitor);
+
+    // Control arm (repair disabled): a runner reading now pays the GFS
+    // tier for every archive — the tiny capacity forces direct central
+    // reads with no retention side effects, and the private directory
+    // keeps the control run out of the healing arm's routing state.
+    let control = GroupCache::with_directory(
+        &layout,
+        1,
+        64,
+        64,
+        Arc::new(RetentionDirectory::new(layout.ifs_groups())),
+    );
+    for (n, p) in names.iter().zip(&payloads) {
+        let (r, outcome) = control.open_archive_via(&layout.gfs(), n, &[]).unwrap();
+        assert_eq!(outcome, CacheOutcome::GfsMiss, "no repair -> central store");
+        assert_eq!(&r.extract("m").unwrap(), p);
+    }
+    assert!(gfs_misses(&control) >= 3, "one GFS round trip per archive without repair");
+
+    // Healing arm: groups 1 and 2 host the re-replicated copies. Tick
+    // the manager the way the daemon does, asserting the per-tick byte
+    // budget is a hard cap, until every archive is back at target.
+    let caches = Arc::new(vec![
+        GroupCache::with_directory(&layout, 1, mib(16), mib(16), directory.clone()),
+        GroupCache::with_directory(&layout, 2, mib(16), mib(16), directory.clone()),
+    ]);
+    let exec = RunnerRepairExecutor::new(caches.clone(), layout.gfs());
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let out = mgr.tick(&exec);
+        assert!(
+            out.bytes <= cfg.byte_budget_per_tick,
+            "the byte budget is a hard per-tick cap: {out:?}"
+        );
+        if names.iter().all(|n| directory.sources(n).len() >= 2) {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "repair must converge (queue {} deep, pushes {})",
+            mgr.queue_len(),
+            mgr.repair_pushes()
+        );
+    }
+    assert_eq!(mgr.repair_pushes(), 6, "two replicas per archive, no spurious pushes");
+    assert_eq!(mgr.orphan_repairs(), 3, "the first push of each archive revived an orphan");
+    assert_eq!(mgr.repair_failures(), 0, "{:?}", cfg);
+
+    // Third runner (group 3, cold cache, shared routing): every read is
+    // now served by the repaired replicas — the central store is out of
+    // the steady state again, the §5.3 claim this PR defends.
+    let reader = GroupCache::with_directory(&layout, 3, mib(16), mib(16), directory.clone());
+    for (n, p) in names.iter().zip(&payloads) {
+        let (r, outcome) = reader.open_archive_via(&layout.gfs(), n, &caches).unwrap();
+        assert_eq!(outcome, CacheOutcome::NeighborTransfer, "{n}: served by a repaired copy");
+        assert_eq!(&r.extract("m").unwrap(), p, "{n}: byte-exact after healing");
+    }
+    assert_eq!(gfs_misses(&reader), 0, "repair pre-positioned every read: {:?}", reader.snapshot());
 }

@@ -157,6 +157,7 @@ fn multistage_chain_hits_ifs_retention() {
         threads: 4,
         retry: RetryPolicy::default(),
         faults: None,
+        repair: None,
     };
     let mut runner = StageRunner::new(layout, graph, config);
     let tasks = 24u32;
@@ -244,6 +245,7 @@ fn cross_group_reads_served_by_neighbor_transfers() {
         threads: 4,
         retry: RetryPolicy::default(),
         faults: None,
+        repair: None,
     };
     let mut runner = StageRunner::new(layout, graph, config);
     let tasks = 8u32;
@@ -301,6 +303,7 @@ fn routed_alltoall_spreads_load_off_producer() {
         threads: 1,
         retry: RetryPolicy::default(),
         faults: None,
+        repair: None,
     };
     let mut runner = StageRunner::new(layout, graph, config);
     let tasks = 8u32;
@@ -500,6 +503,7 @@ fn record_granular_reads_cut_read_volume() {
         threads: 2,
         retry: RetryPolicy::default(),
         faults: None,
+        repair: None,
     };
     let mut runner = StageRunner::new(layout, graph, config);
     let fmt = RecordFormat { record_bytes: kib(4) as usize };
@@ -763,6 +767,7 @@ fn cold_runner_bootstraps_directory_from_foreign_manifests() {
         threads: 4,
         retry: RetryPolicy::default(),
         faults: None,
+        repair: None,
     };
     let tasks = 8u32;
     let produce =
@@ -873,6 +878,7 @@ fn retention_warm_starts_across_runner_instances() {
         threads: 2,
         retry: RetryPolicy::default(),
         faults: None,
+        repair: None,
     };
     let produce =
         |t: u32, _in: &StageInput<'_>| -> anyhow::Result<Vec<u8>> { Ok(vec![t as u8; 512]) };
@@ -902,6 +908,92 @@ fn retention_warm_starts_across_runner_instances() {
         warm_hits > 0,
         "at least one retained archive must survive into the next run: {archives:?}"
     );
+}
+
+#[test]
+fn crash_restart_sweeps_residue_and_reconciles_manifest() {
+    // PR 10: a runner killed mid-flush leaves `.tmp-*` publish residue,
+    // `.partial-*` staging residue, and a torn manifest line behind. A
+    // restart on the same tree must sweep the residue, reconcile the
+    // manifest against the files actually on disk (counting the torn
+    // line, trusting nothing), and serve every surviving retained
+    // archive byte-exact.
+    let root = workspace("crash-restart");
+    let layout = LocalLayout::create(&root, 2, 2).unwrap();
+    let config = StageRunnerConfig {
+        policy: Policy {
+            max_delay: SimTime::from_secs(3600),
+            max_data: mib(1),
+            min_free_space: 0,
+        },
+        compression: Compression::None,
+        cache_capacity: mib(64),
+        neighbor_limit: mib(64),
+        fill_chunk_bytes: kib(64),
+        threads: 2,
+        retry: RetryPolicy::default(),
+        faults: None,
+        repair: None,
+    };
+    let produce =
+        |t: u32, _in: &StageInput<'_>| -> anyhow::Result<Vec<u8>> { Ok(vec![t as u8; 512]) };
+    let archives: Vec<String> = {
+        let graph = StageGraph::chain(&["produce"]);
+        let mut runner = StageRunner::new(layout.clone(), graph, config.clone());
+        let report = runner.run(&[StageExec { tasks: 6, run: &produce }]).unwrap();
+        assert!(report.stages[0].collector.retained > 0);
+        report.stages[0].archives.clone()
+        // runner drops here -> manifests persist (the "pre-crash" state)
+    };
+    // Simulate the crash's leftovers in group 0's data dir: an orphaned
+    // publish temp (died between write and rename), a dead partial
+    // staging file (its chunk bitmap died with the process), and a torn
+    // trailing line on the manifest (a non-atomic torn disk write).
+    let data0 = layout.ifs_data(0);
+    std::fs::write(data0.join(".tmp-crashed-flush"), b"half-published garbage").unwrap();
+    std::fs::write(data0.join(".partial-s0-gone.cioar"), vec![0u8; 4096]).unwrap();
+    {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(layout.ifs_manifest(0))
+            .unwrap();
+        // Name present, bytes column torn mid-number into garbage.
+        f.write_all(b"s0-torn-g0-99999.cioar\t12x4\n").unwrap();
+    }
+
+    let graph = StageGraph::chain(&["produce"]);
+    let warm = StageRunner::new(layout.clone(), graph, config);
+    // Residue swept on cache construction.
+    let leftovers: Vec<String> = std::fs::read_dir(&data0)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+        .filter(|n| n.starts_with(".tmp-") || n.starts_with(".partial-"))
+        .collect();
+    assert!(leftovers.is_empty(), "crash residue must be swept: {leftovers:?}");
+    // The torn line was counted, not trusted — and the phantom archive it
+    // named is neither accounted nor advertised.
+    let g0 = &warm.caches()[0];
+    assert_eq!(g0.manifest_corrupt_lines(), 1, "exactly the torn line counts");
+    assert!(!g0.contains("s0-torn-g0-99999.cioar"));
+    assert!(warm.directory().sources("s0-torn-g0-99999.cioar").is_empty());
+    // Every archive the reconciled manifest still claims reads byte-exact
+    // from retention.
+    let mut warm_hits = 0;
+    for name in &archives {
+        let group = archive_group(name).unwrap() as usize;
+        if warm.caches()[group].contains(name) {
+            let (r, outcome) = warm.caches()[group].open_archive(&layout.gfs(), name).unwrap();
+            assert_eq!(outcome, CacheOutcome::IfsHit);
+            for e in r.entries() {
+                let t: u32 = e.name.split('-').last().unwrap()
+                    .strip_suffix(".out").unwrap().parse().unwrap();
+                assert_eq!(r.extract(&e.name).unwrap(), vec![t as u8; 512], "{}", e.name);
+            }
+            warm_hits += 1;
+        }
+    }
+    assert!(warm_hits > 0, "surviving retention must warm-start: {archives:?}");
 }
 
 #[test]

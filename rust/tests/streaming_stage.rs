@@ -47,6 +47,7 @@ fn streaming_config(cache_capacity: u64, threads: usize) -> StageRunnerConfig {
         threads,
         retry: RetryPolicy::default(),
         faults: None,
+        repair: None,
     }
 }
 
